@@ -1,0 +1,117 @@
+//! Figure 4 — "Speed-up achieved for the CATopt and Parameter Sweep
+//! Problems using P2RAC": relative speed-up vs number of Amazon
+//! instances (m2.2xlarge), baseline = 1 instance.
+//!
+//! Expected shape (paper §4): near-100% parallel efficiency up to 4
+//! instances, then a drop caused by communication overheads between
+//! virtualised cloud instances; the independent-parallel sweep scales
+//! better than the co-operative CATopt at high node counts.
+//!
+//! Run: `cargo bench --bench fig4_speedup`
+
+use p2rac::bench_support::{bench_session, run_on_resource, Resource, Workload};
+use p2rac::util::humanfmt;
+
+fn main() {
+    println!("=== Figure 4: relative speed-up vs #instances (m2.2xlarge) ===\n");
+    let node_counts = [1usize, 2, 4, 8, 16];
+
+    for wl in [Workload::Catopt, Workload::Sweep] {
+        println!("--- {} ---", wl.label());
+        println!(
+            "{:>10} {:>6} {:>14} {:>9} {:>11}",
+            "instances", "cores", "virtual time", "speed-up", "efficiency"
+        );
+        let mut t1 = 0.0f64;
+        let mut speedups = Vec::new();
+        for &n in &node_counts {
+            let mut s = bench_session(1.0);
+            let r = if n == 1 {
+                Resource::Instance {
+                    label: "n1".into(),
+                    itype: "m2.2xlarge".into(),
+                }
+            } else {
+                Resource::Cluster {
+                    label: format!("n{n}"),
+                    itype: "m2.2xlarge".into(),
+                    nodes: n,
+                }
+            };
+            let b = run_on_resource(&mut s, &r, wl).expect("bench run");
+            if n == 1 {
+                t1 = b.compute_s;
+            }
+            let sp = t1 / b.compute_s;
+            speedups.push((n, sp));
+            println!(
+                "{:>10} {:>6} {:>14} {:>8.2}x {:>10.0}%",
+                n,
+                n * 4,
+                humanfmt::secs(b.compute_s),
+                sp,
+                100.0 * sp / n as f64
+            );
+        }
+        // Shape assertions (who wins / where the knee falls).
+        let eff = |i: usize| 100.0 * speedups[i].1 / speedups[i].0 as f64;
+        assert!(eff(1) > 85.0, "{}: eff(2)={:.0}%", wl.label(), eff(1));
+        assert!(
+            eff(2) > 70.0,
+            "{}: near-linear region must reach 4 instances (eff={:.0}%)",
+            wl.label(),
+            eff(2)
+        );
+        assert!(
+            eff(4) < eff(2),
+            "{}: efficiency must drop past 4 instances",
+            wl.label()
+        );
+        assert!(
+            speedups.windows(2).all(|w| w[1].1 >= w[0].1 * 0.99),
+            "{}: speed-up should not regress with more instances",
+            wl.label()
+        );
+        println!();
+    }
+
+    // Cross-workload comparison at 16 instances.
+    let sp16 = |wl: Workload| {
+        let t1 = {
+            let mut s = bench_session(1.0);
+            run_on_resource(
+                &mut s,
+                &Resource::Instance {
+                    label: "b".into(),
+                    itype: "m2.2xlarge".into(),
+                },
+                wl,
+            )
+            .unwrap()
+            .compute_s
+        };
+        let t16 = {
+            let mut s = bench_session(1.0);
+            run_on_resource(
+                &mut s,
+                &Resource::Cluster {
+                    label: "c".into(),
+                    itype: "m2.2xlarge".into(),
+                    nodes: 16,
+                },
+                wl,
+            )
+            .unwrap()
+            .compute_s
+        };
+        t1 / t16
+    };
+    let cat = sp16(Workload::Catopt);
+    let swp = sp16(Workload::Sweep);
+    println!("at 16 instances: CATopt {cat:.1}x vs sweep {swp:.1}x");
+    assert!(
+        swp > cat,
+        "independent parallelism must out-scale co-operative parallelism"
+    );
+    println!("\nFigure 4 shape checks passed.");
+}

@@ -1,0 +1,62 @@
+//! Figure 5 — "Best-case timing results of the CATopt and Parameter
+//! Sweep Problems using P2RAC": total workload time on Desktop A/B,
+//! Instance A/B and Clusters A–D.
+//!
+//! Expected shape: the cloud instances are comparable to (or slightly
+//! slower than) the desktops per core; clusters win through scale; the
+//! best performance is achieved on Cluster D.
+//!
+//! Run: `cargo bench --bench fig5_best_timing`
+
+use p2rac::bench_support::{bench_session, run_on_resource, table1_resources, Workload};
+use p2rac::util::humanfmt;
+
+fn main() {
+    println!("=== Figure 5: best-case timing per resource ===\n");
+    let mut results: Vec<(String, f64, f64)> = Vec::new();
+    println!(
+        "{:<11} {:>16} {:>16}",
+        "resource", "CATopt", "param sweep"
+    );
+    for r in table1_resources() {
+        let mut tc = 0.0;
+        let mut ts = 0.0;
+        for wl in [Workload::Catopt, Workload::Sweep] {
+            let mut s = bench_session(1.0);
+            let b = run_on_resource(&mut s, &r, wl).expect("bench run");
+            match wl {
+                Workload::Catopt => tc = b.compute_s,
+                Workload::Sweep => ts = b.compute_s,
+            }
+        }
+        println!(
+            "{:<11} {:>16} {:>16}",
+            r.label(),
+            humanfmt::secs(tc),
+            humanfmt::secs(ts)
+        );
+        results.push((r.label(), tc, ts));
+    }
+
+    // Paper shape: best performance on Cluster D for both problems.
+    for (idx, wl) in [(1usize, "CATopt"), (2, "sweep")] {
+        let best = results
+            .iter()
+            .min_by(|a, b| {
+                let av = if idx == 1 { a.1 } else { a.2 };
+                let bv = if idx == 1 { b.1 } else { b.2 };
+                av.partial_cmp(&bv).unwrap()
+            })
+            .unwrap();
+        assert_eq!(best.0, "Cluster D", "{wl}: fastest resource was {}", best.0);
+    }
+    // Desktop A beats Desktop B (more, faster cores).
+    let da = results.iter().find(|r| r.0 == "Desktop A").unwrap();
+    let db = results.iter().find(|r| r.0 == "Desktop B").unwrap();
+    assert!(da.1 < db.1 && da.2 < db.2, "Desktop A must beat Desktop B");
+    // Instance B (8 cores) beats Instance A (4 cores).
+    let ia = results.iter().find(|r| r.0 == "Instance A").unwrap();
+    let ib = results.iter().find(|r| r.0 == "Instance B").unwrap();
+    assert!(ib.1 < ia.1, "Instance B must beat Instance A on CATopt");
+    println!("\nFigure 5 shape checks passed (Cluster D fastest overall).");
+}

@@ -1,0 +1,85 @@
+//! Figure 6 — management times for the CATopt problem (~300 MB
+//! project): time to (a) create the resource, (b) submit the project to
+//! an instance / the master, (c) submit to all nodes, (d) fetch results
+//! from an instance / the master, (e) fetch from all nodes, (f)
+//! terminate, on Instance A/B and Clusters A–D.
+//!
+//! Expected shape: creation grows with cluster size (~7 min @ 8 nodes,
+//! ~8 min @ 16); termination flat; submit/fetch to master flat across
+//! resources; submit/fetch to ALL nodes grows with the cluster size.
+//!
+//! Run: `cargo bench --bench fig6_catopt_mgmt`
+
+use p2rac::bench_support::{
+    bench_session, run_on_resource_profile, table1_resources, BenchProfile, Resource, Workload,
+};
+use p2rac::util::humanfmt::secs;
+
+fn main() {
+    run_mgmt_bench(
+        "Figure 6: CATopt (~300 MB project)",
+        Workload::Catopt,
+        // The bench dataset is ~1/64 of the paper's 300 MB table; the
+        // network model scales wire time back up.
+        64.0,
+    );
+}
+
+pub fn run_mgmt_bench(title: &str, wl: Workload, data_scale: f64) {
+    println!("=== {title} ===\n");
+    println!(
+        "{:<11} {:>9} {:>13} {:>12} {:>12} {:>11} {:>10}",
+        "resource", "create", "submit(mstr)", "submit(all)", "fetch(mstr)", "fetch(all)", "terminate"
+    );
+    let mut rows = Vec::new();
+    for r in table1_resources() {
+        if matches!(r, Resource::Desktop(_)) {
+            continue; // Figs 6–7 cover cloud resources only
+        }
+        let mut s = bench_session(data_scale);
+        let b = run_on_resource_profile(&mut s, &r, wl, BenchProfile::Management)
+            .expect("bench run");
+        println!(
+            "{:<11} {:>9} {:>13} {:>12} {:>12} {:>11} {:>10}",
+            r.label(),
+            secs(b.create_s),
+            secs(b.submit_master_s),
+            if b.submit_all_s > 0.0 { secs(b.submit_all_s) } else { "-".into() },
+            secs(b.fetch_master_s),
+            if b.fetch_all_s > 0.0 { secs(b.fetch_all_s) } else { "-".into() },
+            secs(b.terminate_s),
+        );
+        rows.push((r.label(), b));
+    }
+
+    // ---- paper-shape assertions ----
+    let by = |l: &str| rows.iter().find(|(x, _)| x == l).map(|(_, b)| b).unwrap();
+    let (ca, cb, cc, cd) = (by("Cluster A"), by("Cluster B"), by("Cluster C"), by("Cluster D"));
+    // Creation grows with cluster size; ~7 min at 8 nodes, ~8 min at 16.
+    assert!(ca.create_s < cb.create_s && cb.create_s < cc.create_s && cc.create_s < cd.create_s);
+    assert!(
+        (300.0..600.0).contains(&cc.create_s),
+        "8-node create {}s should be ≈7 min",
+        cc.create_s
+    );
+    assert!(
+        (420.0..720.0).contains(&cd.create_s),
+        "16-node create {}s should be ≈8 min",
+        cd.create_s
+    );
+    // Termination flat ("remains the same").
+    let terms: Vec<f64> = rows.iter().map(|(_, b)| b.terminate_s).collect();
+    let tmax = terms.iter().cloned().fold(0.0, f64::max);
+    let tmin = terms.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(tmax - tmin < 1.0, "terminate must be size-independent");
+    // Submit-to-master roughly flat; submit-to-all grows with n.
+    assert!(
+        (ca.submit_master_s - cd.submit_master_s).abs() < 0.3 * ca.submit_master_s.max(1.0),
+        "submit-to-master should not depend on cluster size"
+    );
+    assert!(
+        cd.submit_all_s > ca.submit_all_s,
+        "submit-to-all must grow with cluster size"
+    );
+    println!("\n{} shape checks passed.", title.split(':').next().unwrap());
+}

@@ -1,0 +1,43 @@
+//! Figure 7 — management times for the parameter-sweep problem (~3 MB
+//! project): the same six bars as Figure 6, showing that for a small
+//! project the data-movement bars shrink to seconds while resource
+//! creation still dominates ("it may not be worthwhile to spend a lot
+//! of time for creating and moving data around resources for small
+//! jobs").
+//!
+//! Run: `cargo bench --bench fig7_sweep_mgmt`
+
+use p2rac::bench_support::{
+    bench_session, run_on_resource_profile, table1_resources, BenchProfile, Resource, Workload,
+};
+use p2rac::util::humanfmt::secs;
+
+#[path = "fig6_catopt_mgmt.rs"]
+mod fig6;
+
+fn main() {
+    fig6::run_mgmt_bench("Figure 7: parameter sweep (~3 MB project)", Workload::Sweep, 1.0);
+
+    // Extra Fig-7 observation: for the small project, creation dominates
+    // every data-movement bar by an order of magnitude.
+    let mut s = bench_session(1.0);
+    let cluster_c = table1_resources()
+        .into_iter()
+        .find(|r| r.label() == "Cluster C")
+        .unwrap();
+    let b = run_on_resource_profile(&mut s, &cluster_c, Workload::Sweep, BenchProfile::Management)
+        .expect("bench");
+    assert!(
+        b.create_s > 10.0 * (b.submit_master_s + b.submit_all_s),
+        "small project: creation ({}) must dominate data movement ({} + {})",
+        secs(b.create_s),
+        secs(b.submit_master_s),
+        secs(b.submit_all_s)
+    );
+    assert!(matches!(cluster_c, Resource::Cluster { .. }));
+    println!(
+        "small-job observation: create {} vs total data movement {} — paper's conclusion holds.",
+        secs(b.create_s),
+        secs(b.submit_master_s + b.submit_all_s + b.fetch_master_s + b.fetch_all_s)
+    );
+}

@@ -1,0 +1,251 @@
+//! Micro/ablation benches (real wall-clock, no criterion offline):
+//!
+//! * `datasync`  — rsync vs SCP on first copy and re-sync after a small
+//!   edit (the §3.2.1 design choice), wire bytes + throughput.
+//! * `scheduler` — bynode/byslot placement throughput.
+//! * `runtime`   — PJRT artifact execution latency (the L3 hot path),
+//!   per-entry, when `artifacts/` is built.
+//! * `ga_ops`    — genetic-operator and generation throughput.
+//! * `virt_ablation` — Fig-4 knee with the virtualisation overhead
+//!   removed (validates the paper's explanation of the efficiency drop).
+//!
+//! Run: `cargo bench --bench micro`
+
+use p2rac::analytics::catbond::CatBondData;
+use p2rac::analytics::cost::{catopt_generation_s, CatoptCost};
+use p2rac::coordinator::engine::ResourceView;
+use p2rac::coordinator::scheduler::{schedule, NodeSpec, Placement};
+use p2rac::datasync::{sync_dir, Protocol};
+use p2rac::simcloud::{FaultPlan, Link, NetworkModel, SimParams, Vfs};
+use p2rac::util::humanfmt;
+use p2rac::util::prng::Xoshiro256;
+use std::time::Instant;
+
+fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_datasync() {
+    println!("--- datasync: rsync vs SCP (1 MiB project file) ---");
+    let net = NetworkModel::new(SimParams::default());
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let mut src = Vfs::new();
+    let data: Vec<u8> = (0..1 << 20).map(|_| rng.next_u32() as u8).collect();
+    src.write("p/data.bin", data.clone());
+
+    for proto in [Protocol::Rsync, Protocol::Scp] {
+        let mut dst = Vfs::new();
+        let mut f = FaultPlan::none();
+        // First copy.
+        let first = sync_dir(&src, "p", &mut dst, "d", proto, 2048, &net, Link::Wan, &mut f).unwrap();
+        // Small edit + re-sync (the case rsync was chosen for).
+        let mut edited = data.clone();
+        edited[500_000] ^= 0xFF;
+        src.write("p/data.bin", edited);
+        let t = Instant::now();
+        let re = sync_dir(&src, "p", &mut dst, "d", proto, 2048, &net, Link::Wan, &mut f).unwrap();
+        let wall = t.elapsed();
+        println!(
+            "  {:?}: first={} wire, resync={} wire in {} real ({} virtual)",
+            proto,
+            humanfmt::bytes(first.wire_bytes()),
+            humanfmt::bytes(re.wire_bytes()),
+            humanfmt::duration(wall),
+            humanfmt::secs(re.elapsed_s),
+        );
+        src.write("p/data.bin", data.clone()); // restore for next proto
+    }
+}
+
+fn bench_scheduler() {
+    println!("--- scheduler: placement throughput (64 procs, 16 nodes) ---");
+    let nodes: Vec<NodeSpec> = (0..16)
+        .map(|i| NodeSpec {
+            name: format!("n{i}"),
+            cores: 4,
+            mem_gb: 34.2,
+            core_speed: 0.88,
+        })
+        .collect();
+    for p in [Placement::ByNode, Placement::BySlot] {
+        let t = time(10_000, || {
+            let a = schedule(64, &nodes, p);
+            std::hint::black_box(a);
+        });
+        println!("  {:?}: {:.2} µs/placement", p, t * 1e6);
+    }
+}
+
+fn bench_runtime() {
+    println!("--- runtime: PJRT execute latency (L3 hot path) ---");
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("  (skipped: run `make artifacts` first)");
+        return;
+    }
+    let rt = p2rac::runtime::Runtime::load(dir).expect("runtime");
+    use p2rac::runtime::TensorF32;
+    let (s, k, j) = (
+        rt.constant("S").unwrap(),
+        rt.constant("K").unwrap(),
+        rt.constant("J").unwrap(),
+    );
+    let mut rng = Xoshiro256::seed_from_u64(2);
+    let u: Vec<f32> = (0..s * k).map(|_| rng.next_f32() * 0.999).collect();
+    let params: Vec<f32> = (0..j * 2).map(|i| 0.5 + (i % 7) as f32).collect();
+    let args = [
+        TensorF32::new(vec![s, k], u),
+        TensorF32::new(vec![j, 2], params),
+    ];
+    rt.execute("mc_sweep", &args).unwrap(); // warmup
+    let t = time(20, || {
+        rt.execute("mc_sweep", &args).unwrap();
+    });
+    println!(
+        "  mc_sweep ({s}x{k} draws, {j} jobs): {:.2} ms/exec = {:.0} job-evals/s",
+        t * 1e3,
+        j as f64 / t
+    );
+
+    let (pop, m, e) = (
+        rt.constant("POP").unwrap(),
+        rt.constant("M").unwrap(),
+        rt.constant("E").unwrap(),
+    );
+    let w: Vec<f32> = (0..pop * m).map(|_| rng.next_f32() / m as f32).collect();
+    let ilt: Vec<f32> = (0..m * e).map(|_| rng.next_f32() * 0.01).collect();
+    let cl: Vec<f32> = (0..e).map(|_| rng.next_f32()).collect();
+    let args = [
+        TensorF32::new(vec![pop, m], w),
+        TensorF32::new(vec![m, e], ilt),
+        TensorF32::new(vec![e], cl),
+        TensorF32::scalar11(0.1),
+        TensorF32::scalar11(1.0),
+    ];
+    rt.execute("catopt_fitness", &args).unwrap(); // warmup
+    let t = time(10, || {
+        rt.execute("catopt_fitness", &args).unwrap();
+    });
+    let flops = 2.0 * pop as f64 * m as f64 * e as f64;
+    println!(
+        "  catopt_fitness ({pop}x{m} @ {m}x{e}): {:.1} ms/exec = {:.2} GFLOP/s effective",
+        t * 1e3,
+        flops / t / 1e9
+    );
+}
+
+fn bench_backend() {
+    println!("--- backend: PjrtBackend.eval_population (per GA generation) ---");
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("  (skipped: run `make artifacts` first)");
+        return;
+    }
+    use p2rac::analytics::backend::FitnessBackend;
+    let rt = std::rc::Rc::new(p2rac::runtime::Runtime::load(dir).expect("runtime"));
+    let m = rt.constant("M").unwrap();
+    let e = rt.constant("E").unwrap();
+    let data = CatBondData::generate(3, m, e);
+    let mut b = p2rac::analytics::PjrtBackend::new(rt, data).unwrap();
+    let mut rng = Xoshiro256::seed_from_u64(4);
+    let pop: Vec<Vec<f32>> = (0..200)
+        .map(|_| (0..m).map(|_| rng.next_f32() * 2.0 / m as f32).collect())
+        .collect();
+    b.eval_population(&pop).unwrap(); // warmup
+    let t = time(10, || {
+        b.eval_population(&pop).unwrap();
+    });
+    println!(
+        "  pop=200 (m={m}, e={e}): {:.1} ms/generation = {:.0} candidate-evals/s",
+        t * 1e3,
+        200.0 / t
+    );
+}
+
+fn bench_ga_ops() {
+    println!("--- GA: generation throughput (pure-Rust backend) ---");
+    let data = CatBondData::generate(3, 64, 256);
+    let mut backend = p2rac::analytics::RustBackend::new(data);
+    let cfg = p2rac::analytics::ga::GaConfig {
+        pop_size: 64,
+        max_generations: 10,
+        wait_generations: 10,
+        bfgs_every: 0,
+        seed: 1,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = p2rac::analytics::ga::optimizer::run(&mut backend, &cfg).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "  {} evaluations in {:.2}s = {:.0} eval/s (m=64, e=256)",
+        r.total_evaluations,
+        wall,
+        r.total_evaluations as f64 / wall
+    );
+}
+
+fn bench_virt_ablation() {
+    println!("--- ablation: Fig-4 knee vs virtualisation overhead ---");
+    let mk_view = |n: usize, virt: f64| {
+        let mut p = SimParams::default();
+        p.virt_overhead = virt;
+        let nodes: Vec<NodeSpec> = (0..n)
+            .map(|i| NodeSpec {
+                name: format!("n{i}"),
+                cores: 4,
+                mem_gb: 34.2,
+                core_speed: 0.88,
+            })
+            .collect();
+        ResourceView {
+            assignment: (0..n * 4).map(|x| x % n).collect(),
+            nodes,
+            net: NetworkModel::new(p),
+            resource_name: "ablation".into(),
+        }
+    };
+    // Two candidate causes for the paper's efficiency drop: the serial
+    // master-side dispatch (SNOW sends one message per slave) and the
+    // virtualised-network factor on the scatter/gather collective.
+    println!("  {:>12} {:>6} {:>22}", "dispatch", "virt", "16-node efficiency");
+    let mut effs = Vec::new();
+    for per_msg in [0.0, 0.025, 0.1] {
+        for virt in [1.0, 1.6, 8.0] {
+            let cost = CatoptCost {
+                per_message_s: per_msg,
+                ..CatoptCost::default()
+            };
+            let t1 = catopt_generation_s(200, &cost, &mk_view(1, virt));
+            let t16 = catopt_generation_s(200, &cost, &mk_view(16, virt));
+            let eff = t1 / (16.0 * t16) * 100.0;
+            println!("  {:>10}ms {:>6.1} {:>21.0}%", per_msg * 1e3, virt, eff);
+            effs.push((per_msg, virt, eff));
+        }
+    }
+    let base = effs.iter().find(|e| e.0 == 0.025 && e.1 == 1.6).unwrap().2;
+    let no_dispatch = effs.iter().find(|e| e.0 == 0.0 && e.1 == 1.6).unwrap().2;
+    assert!(
+        no_dispatch > base + 10.0,
+        "serial dispatch must be the dominant knee cause ({no_dispatch:.0}% vs {base:.0}%)"
+    );
+    println!(
+        "  → the knee is dominated by serial per-slave dispatch (SNOW master),\n    \
+         with the virtualised collective as a second-order term at this payload size."
+    );
+}
+
+fn main() {
+    println!("=== micro/ablation benches ===\n");
+    bench_datasync();
+    bench_scheduler();
+    bench_runtime();
+    bench_backend();
+    bench_ga_ops();
+    bench_virt_ablation();
+    println!("\nmicro benches complete.");
+}

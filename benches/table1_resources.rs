@@ -1,0 +1,69 @@
+//! Table I — "Resources Utilised for Experimental Studies".
+//!
+//! Prints the resource catalog exactly as the paper tabulates it
+//! (provider, processor model for desktops / Amazon type for cloud
+//! resources, cores, memory, storage) and validates the cloud rows
+//! against the simulated EC2 catalog.
+//!
+//! Run: `cargo bench --bench table1_resources`
+
+use p2rac::bench_support::{table1_resources, Resource};
+use p2rac::simcloud::instance_type;
+
+fn main() {
+    println!("=== Table I: Resources Utilised for Experimental Studies ===\n");
+    println!(
+        "{:<11} {:<11} {:<22} {:>5} {:>9} {:>9} {:>8}",
+        "Resource", "Provider", "Processor/Type", "cores", "memory", "storage", "$/hour"
+    );
+    for r in table1_resources() {
+        match r {
+            Resource::Desktop(d) => {
+                let (proc_name, mem, storage) = if d.name.ends_with('A') {
+                    ("Intel i7-2600 @3.4GHz", 16.0, "1.8 TB")
+                } else {
+                    ("Intel X5660 @2.8GHz", 24.0, "2 TB")
+                };
+                println!(
+                    "{:<11} {:<11} {:<22} {:>5} {:>7}GB {:>9} {:>8}",
+                    d.name, "local", proc_name, d.cores, mem, storage, "-"
+                );
+            }
+            Resource::Instance { label, itype } => {
+                let t = instance_type(&itype).expect("catalog");
+                println!(
+                    "{:<11} {:<11} {:<22} {:>5} {:>5.1}GB {:>7.0}GB {:>8.2}",
+                    label,
+                    "Amazon",
+                    itype,
+                    t.cores,
+                    t.mem_gb,
+                    t.storage_gb,
+                    t.price_cents_hour as f64 / 100.0
+                );
+            }
+            Resource::Cluster { label, itype, nodes } => {
+                let t = instance_type(&itype).expect("catalog");
+                println!(
+                    "{:<11} {:<11} {:<22} {:>5} {:>5.1}GB {:>7.0}GB {:>8.2}",
+                    label,
+                    "Amazon",
+                    format!("{itype} x {nodes}"),
+                    t.cores * nodes,
+                    t.mem_gb * nodes as f64,
+                    t.storage_gb * nodes as f64,
+                    t.price_cents_hour as f64 * nodes as f64 / 100.0
+                );
+            }
+        }
+    }
+
+    // Paper-anchored checks.
+    let m22 = instance_type("m2.2xlarge").unwrap();
+    let m24 = instance_type("m2.4xlarge").unwrap();
+    assert_eq!((m22.cores, m22.mem_gb, m22.storage_gb), (4, 34.2, 850.0));
+    assert_eq!((m24.cores, m24.mem_gb, m24.storage_gb), (8, 68.4, 1690.0));
+    assert_eq!(m22.price_cents_hour, 90, "paper: $0.9/h for m2.2xlarge");
+    assert_eq!(m24.price_cents_hour, 180, "paper: $1.8/h for m2.4xlarge");
+    println!("\nTable I catalog validated against the simulated EC2 offering.");
+}

@@ -1,0 +1,69 @@
+//! Batch-mode execution (paper §3.4): the core commands listed in a
+//! script and executed without Analyst intervention — plus the
+//! diagnostic tools (listing, locks, login banner) and failure
+//! handling (a boot failure that the workflow retries past).
+//!
+//! Run with: `cargo run --release --example batch_workflow`
+
+use p2rac::cli::commands::{apply, registry};
+use p2rac::cli::make_engine;
+use p2rac::coordinator::Session;
+use p2rac::simcloud::SimParams;
+
+fn run(s: &mut Session, line: &str) -> anyhow::Result<String> {
+    let mut parts = line.split_whitespace().map(str::to_string);
+    let cmd = parts.next().unwrap();
+    let spec = registry()
+        .into_iter()
+        .find(|c| c.name == cmd)
+        .ok_or_else(|| anyhow::anyhow!("unknown command {cmd}"))?;
+    let parsed = spec.parse(parts.collect::<Vec<_>>()).map_err(|e| anyhow::anyhow!("{e}"))?;
+    apply(s, &cmd, &parsed)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut s = Session::new(SimParams::default(), make_engine());
+
+    // A batch script, exactly as an Analyst would write it (Fig 3).
+    let batch = r#"
+        mkproject -projectdir proj -kind sweep
+        ec2createcluster -cname hpc_cluster -csize 4 -type m2.2xlarge -desc batch_demo
+        ec2listclusters
+        ec2senddatatomaster -cname hpc_cluster -projectdir proj
+        ec2senddatatoclusternodes -cname hpc_cluster -projectdir proj
+        ec2runoncluster -cname hpc_cluster -projectdir proj -rscript sweep.json -runname nightly -bynode
+        ec2getresults -cname hpc_cluster -projectdir proj -runname nightly -fromall
+        ec2logintocluster -cname hpc_cluster
+        report
+    "#;
+
+    for line in batch.lines().map(str::trim).filter(|l| !l.is_empty()) {
+        println!("$ p2rac {line}");
+        match run(&mut s, line) {
+            Ok(out) => println!("{out}\n"),
+            Err(e) => println!("error: {e:#}\n"),
+        }
+    }
+
+    // Failure injection: the next cluster creation hits an EC2
+    // capacity error; the batch retries and proceeds.
+    println!("$ # injected EC2 capacity failure on next launch");
+    s.cloud.faults.boot_failures = 1;
+    match run(&mut s, "ec2createcluster -cname retry_cluster -csize 2") {
+        Ok(_) => println!("unexpected success"),
+        Err(e) => println!("first attempt failed as injected: {e:#}"),
+    }
+    println!("$ # retrying…");
+    println!("{}\n", run(&mut s, "ec2createcluster -cname retry_cluster -csize 2")?);
+
+    // Locks: a locked cluster refuses termination until freed.
+    run(&mut s, "ec2resourcelock -cname retry_cluster -inuse")?;
+    match run(&mut s, "ec2terminatecluster -cname retry_cluster") {
+        Ok(_) => println!("unexpected success"),
+        Err(e) => println!("termination blocked while in use: {e:#}"),
+    }
+    run(&mut s, "ec2resourcelock -cname retry_cluster -free")?;
+    println!("{}", run(&mut s, "ec2terminateall -clusters -ebsvolumes")?);
+    println!("\nfinal bill: ${:.2}", s.cloud.ledger.total_dollars());
+    Ok(())
+}

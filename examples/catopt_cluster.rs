@@ -1,0 +1,121 @@
+//! END-TO-END DRIVER: the paper's headline experiment.
+//!
+//! Runs the full CATopt workload (distributed rgenoud-style GA over the
+//! catastrophe-bond basis-risk objective) on the paper's resource set —
+//! Instance A and Clusters A–D (2/4/8/16 × m2.2xlarge) — through every
+//! layer of the stack:
+//!
+//!   L3 Rust coordinator (this binary, resource/data/exec management)
+//!   → PJRT runtime → L2 JAX graph → L1 Pallas kernel numerics,
+//!
+//! logging the GA convergence curve (the workload's real output) and
+//! the virtual-time speed-up curve (paper Fig 4's CATopt series).
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! Run with: `make artifacts && cargo run --release --example catopt_cluster`
+//! (set CATOPT_GENS to shorten the run).
+
+use p2rac::cli::make_engine;
+use p2rac::coordinator::{CreateClusterOpts, CreateInstanceOpts, Placement, ResultScope, Session};
+use p2rac::simcloud::SimParams;
+use p2rac::util::humanfmt;
+use p2rac::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let gens: usize = std::env::var("CATOPT_GENS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50);
+    let pop: usize = std::env::var("CATOPT_POP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+
+    let mut params = SimParams::default();
+    // The bench project is the AOT-scale dataset (m=512, e=2048, ~4.5 MiB);
+    // the paper's table is ~300 MB — scale wire time accordingly.
+    params.data_scale = 64.0;
+    let mut s = Session::new(params, make_engine());
+
+    p2rac::cli::commands::mkproject(&mut s, "catopt_proj", "catopt", 7)?;
+    s.analyst.write(
+        "catopt_proj/catopt.json",
+        format!(
+            r#"{{"type":"catopt","pop_size":{pop},"max_generations":{gens},"seed":42,"bfgs_every":25}}"#
+        )
+        .into_bytes(),
+    );
+    println!(
+        "CATopt project: {} of loss data (paper-scale ≈ {})",
+        humanfmt::bytes(s.analyst.dir_size("catopt_proj")),
+        humanfmt::bytes(s.analyst.dir_size("catopt_proj") * 64),
+    );
+
+    // --- baseline: single m2.2xlarge instance -------------------------
+    println!("\n=== Instance A (1 x m2.2xlarge) — baseline");
+    s.create_instance(&CreateInstanceOpts {
+        iname: Some("baseline".into()),
+        itype: Some("m2.2xlarge".into()),
+        ..Default::default()
+    })?;
+    s.send_data_to_instance(Some("baseline"), "catopt_proj")?;
+    let wall = std::time::Instant::now();
+    let base = s.run_on_instance(Some("baseline"), "catopt_proj", "catopt.json", "base")?;
+    let real_s = wall.elapsed().as_secs_f64();
+    let t1 = base.compute_s;
+    println!(
+        "  virtual {} | real numerics wall {:.1}s | best basis risk {}",
+        humanfmt::secs(t1),
+        real_s,
+        base.summary.get("best_value").unwrap_or(&Json::Null)
+    );
+    s.get_results_from_instance(Some("baseline"), "catopt_proj", "base")?;
+    let conv = s
+        .analyst
+        .read("catopt_proj_results/base/convergence.csv")
+        .expect("convergence curve fetched");
+    let lines: Vec<&str> = std::str::from_utf8(conv)?.lines().collect();
+    println!("  convergence (gen,best,mean,evals):");
+    for l in lines.iter().skip(1).step_by((lines.len() / 6).max(1)) {
+        println!("    {l}");
+    }
+    s.terminate_instance(Some("baseline"), true)?;
+
+    // --- clusters A–D ---------------------------------------------------
+    println!("\n=== Clusters A–D (paper Fig 4, CATopt series)");
+    println!(
+        "  {:<10} {:>6} {:>6} {:>12} {:>9} {:>11}",
+        "cluster", "nodes", "cores", "virtual time", "speed-up", "efficiency"
+    );
+    for (label, nodes) in [("Cluster A", 2usize), ("Cluster B", 4), ("Cluster C", 8), ("Cluster D", 16)]
+    {
+        let cname = format!("c{nodes}");
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some(cname.clone()),
+            csize: Some(nodes),
+            itype: Some("m2.2xlarge".into()),
+            ..Default::default()
+        })?;
+        s.send_data_to_cluster_nodes(Some(&cname), "catopt_proj")?;
+        let out = s.run_on_cluster(Some(&cname), "catopt_proj", "catopt.json", "trial", Placement::ByNode)?;
+        s.get_results(Some(&cname), "catopt_proj", "trial", ResultScope::FromMaster)?;
+        let speedup = t1 / out.compute_s;
+        println!(
+            "  {:<10} {:>6} {:>6} {:>12} {:>8.2}x {:>10.0}%",
+            label,
+            nodes,
+            nodes * 4,
+            humanfmt::secs(out.compute_s),
+            speedup,
+            100.0 * speedup / nodes as f64
+        );
+        s.terminate_cluster(Some(&cname), true)?;
+    }
+
+    println!(
+        "\ntotal virtual time {} | total bill ${:.2} | PJRT executions (real numerics) ran throughout",
+        humanfmt::secs(s.cloud.clock.now_s()),
+        s.cloud.ledger.total_dollars()
+    );
+    Ok(())
+}

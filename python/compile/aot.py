@@ -1,0 +1,87 @@
+"""AOT lowering: JAX entry points -> HLO text artifacts + manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Outputs one `<name>.hlo.txt` per entry point plus `manifest.json`
+recording argument shapes/dtypes and the model constants the Rust
+coordinator needs (POP, M, E, S, K, J).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with to_tuple1/to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "constants": {
+            "POP": model.POP,
+            "M": model.M,
+            "E": model.E,
+            "S": model.S,
+            "K": model.K,
+            "J": model.J,
+        },
+        "entries": {},
+    }
+
+    for name, (fn, example_args) in model.entry_points().items():
+        lowered = lower_entry(fn, example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.tree_util.tree_leaves(
+                jax.eval_shape(fn, *example_args)
+            )
+        ]
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(a.shape), "dtype": str(a.dtype)}
+                for a in example_args
+            ],
+            "outputs": out_shapes,
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(out_shapes)} outputs)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: fused basis-risk evaluation of a candidate
+population.
+
+This is the hot spot of the paper's CATopt workload: every GA generation
+evaluates POP candidate weight vectors against the event-loss table. In
+R the work is chunked across SNOW workers; here the same insight maps to
+the MXU (DESIGN.md §3):
+
+  * `(POP_BLK x M) @ (M x E_BLK)` matmul tiles feed the systolic array,
+  * the attachment/limit clamp and the squared-error against the target
+    recovery are fused elementwise epilogues on the tile in VMEM,
+  * the per-candidate reduction accumulates across the event-grid axis,
+    one pass over the event table per population tile.
+
+Hardware adaptation note: the contraction dim M and the event tile E_BLK
+are multiples of 128 (MXU-shaped); VMEM per grid step is
+POP_BLK*M + E_BLK*M + POP_BLK*E_BLK floats (see DESIGN.md §8 for the
+footprint analysis). `interpret=True` everywhere — this host has no TPU,
+so the kernel lowers to plain HLO the CPU PJRT client can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shapes (overridable at AOT time through the manifest).
+POP_BLK = 256
+E_BLK = 2048
+
+
+def _kernel(w_ref, ilt_ref, tgt_ref, att_ref, lim_ref, acc_ref, *, n_e_blocks):
+    """One (pop-tile, event-tile) grid step.
+
+    w_ref:   (POP_BLK, M)   candidate weights tile
+    ilt_ref: (M, E_BLK)     transposed industry-loss tile
+    tgt_ref: (1, E_BLK)     target recovery tile (precomputed in L2)
+    att/lim: (1, 1)         trigger scalars
+    acc_ref: (POP_BLK, 1)   running sum of squared errors
+    """
+    e_idx = pl.program_id(1)
+
+    @pl.when(e_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    att = att_ref[0, 0]
+    lim = lim_ref[0, 0]
+    # MXU matmul tile: index loss for this (pop, event) block.
+    index_loss = w_ref[...] @ ilt_ref[...]                     # (POP_BLK, E_BLK)
+    rec = jnp.minimum(jnp.maximum(index_loss - att, 0.0), lim)
+    err = rec - tgt_ref[...]                                   # broadcast row
+    acc_ref[...] += jnp.sum(err * err, axis=1, keepdims=True)
+    # The sqrt(mean) finalisation happens in L2 once all event tiles
+    # have accumulated (cheap, and keeps the kernel a pure reduction).
+    del n_e_blocks
+
+
+@functools.partial(jax.jit, static_argnames=("pop_blk", "e_blk"))
+def catopt_sse(W, ILT, target, att, limit, *, pop_blk=POP_BLK, e_blk=E_BLK):
+    """Sum of squared recovery errors per candidate, via Pallas.
+
+    Args:
+      W:      (POP, M) float32, POP divisible by pop_blk.
+      ILT:    (M, E) float32 transposed industry-loss table, E divisible
+              by e_blk.
+      target: (1, E) float32 precomputed target recovery.
+      att, limit: (1, 1) float32.
+
+    Returns:
+      (POP, 1) float32 sums of squared errors.
+    """
+    pop, m = W.shape
+    m2, e = ILT.shape
+    assert m == m2, (m, m2)
+    assert pop % pop_blk == 0, (pop, pop_blk)
+    assert e % e_blk == 0, (e, e_blk)
+    n_e_blocks = e // e_blk
+
+    grid = (pop // pop_blk, n_e_blocks)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_e_blocks=n_e_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pop_blk, m), lambda p, ei: (p, 0)),
+            pl.BlockSpec((m, e_blk), lambda p, ei: (0, ei)),
+            pl.BlockSpec((1, e_blk), lambda p, ei: (0, ei)),
+            pl.BlockSpec((1, 1), lambda p, ei: (0, 0)),
+            pl.BlockSpec((1, 1), lambda p, ei: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pop_blk, 1), lambda p, ei: (p, 0)),
+        out_shape=jax.ShapeDtypeStruct((pop, 1), jnp.float32),
+        interpret=True,  # no TPU on this host; Mosaic custom-calls would not run
+    )(W, ILT, target, att, limit)

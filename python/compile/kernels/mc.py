@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: Monte-Carlo cat-bond pricing sweep.
+
+The paper's second workload is a parameter sweep of independent
+Monte-Carlo simulations. Per parameter point (attachment, limit) the
+kernel transforms uniform draws into Pareto event severities, aggregates
+them into year losses, applies the trigger clamp and reduces to the
+recovery mean / m2 across simulated years.
+
+Tiling: the sample axis S is the grid axis; each step holds a
+(S_BLK, K) block of draws and the full (J, 2) parameter table in VMEM,
+accumulating (J, 2) running sums. Mean/std finalisation happens in L2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+S_BLK = 1024
+
+
+def _kernel(u_ref, par_ref, acc_ref, *, scale, shape, cap):
+    s_idx = pl.program_id(0)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    u = u_ref[...]                                        # (S_BLK, K)
+    sev = jnp.minimum(scale / jnp.power(1.0 - u, 1.0 / shape), cap)
+    year_loss = jnp.sum(sev, axis=1)                      # (S_BLK,)
+    att = par_ref[:, 0][:, None]                          # (J, 1)
+    lim = par_ref[:, 1][:, None]
+    rec = jnp.minimum(jnp.maximum(year_loss[None, :] - att, 0.0), lim)  # (J, S_BLK)
+    sums = jnp.sum(rec, axis=1)                           # (J,)
+    sq = jnp.sum(rec * rec, axis=1)                       # (J,)
+    acc_ref[...] += jnp.stack([sums, sq], axis=1)         # (J, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("s_blk", "scale", "shape", "cap"))
+def mc_sums(U, params, *, s_blk=S_BLK, scale=1.0, shape=2.5, cap=50.0):
+    """Accumulate sum(recovery) and sum(recovery^2) per parameter point.
+
+    Args:
+      U:      (S, K) float32 uniform draws, S divisible by s_blk.
+      params: (J, 2) float32 (attachment, limit) rows.
+
+    Returns:
+      (J, 2) float32: [sum, sum of squares] over all S samples.
+    """
+    s, _k = U.shape
+    assert s % s_blk == 0, (s, s_blk)
+    j = params.shape[0]
+    grid = (s // s_blk,)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, shape=shape, cap=cap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s_blk, U.shape[1]), lambda si: (si, 0)),
+            pl.BlockSpec((j, 2), lambda si: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((j, 2), lambda si: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((j, 2), jnp.float32),
+        interpret=True,  # CPU PJRT target (no TPU on this host)
+    )(U, params)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis) and the implementation used for gradients: `pallas_call` has
+no automatic VJP, so the quasi-Newton refinement step differentiates
+this reference path instead (the maths is identical).
+"""
+
+import jax.numpy as jnp
+
+
+def recovery(index_loss, att, limit):
+    """Cat-bond payout for an index loss under a parametric trigger.
+
+    Recovery = min(max(index_loss - Att, 0), Limit)   (paper §4)
+    """
+    return jnp.minimum(jnp.maximum(index_loss - att, 0.0), limit)
+
+
+def catopt_fitness_ref(W, IL, CL, att, limit):
+    """Basis risk of each candidate weight vector.
+
+    Args:
+      W:  (POP, M) candidate market-share weights.
+      IL: (E, M)   industry loss per event x region-peril.
+      CL: (E,)     sponsor's actual loss per event.
+      att, limit: scalars (or (1,) arrays) of the bond's attachment and
+        exhaustion limit.
+
+    Returns:
+      (POP,) root-mean-square basis risk between the index-triggered
+      recovery and the recovery the sponsor actually needed.
+    """
+    att = jnp.asarray(att).reshape(())
+    limit = jnp.asarray(limit).reshape(())
+    index_loss = W @ IL.T                      # (POP, E)
+    rec = recovery(index_loss, att, limit)     # (POP, E)
+    target = recovery(CL, att, limit)          # (E,)
+    err = rec - target[None, :]
+    return jnp.sqrt(jnp.mean(err * err, axis=1))
+
+
+def catopt_penalty_ref(W, budget=1.0, herfindahl_cap=0.02,
+                       lam_bounds=1e4, lam_budget=1e3, lam_conc=1e3):
+    """Constraint penalties for the CATopt problem (quadratic penalty
+    method standing in for the paper's 'number of non-linear
+    constraints'):
+
+      * bounds: 0 <= w_j <= 1 (market shares),
+      * budget: sum_j w_j == budget (shares sold sum to the issue size),
+      * concentration (non-linear): sum_j w_j^2 <= herfindahl_cap.
+    """
+    lower = jnp.minimum(W, 0.0)
+    upper = jnp.maximum(W - 1.0, 0.0)
+    bounds_pen = jnp.sum(lower * lower + upper * upper, axis=-1)
+    budget_err = jnp.sum(W, axis=-1) - budget
+    conc = jnp.maximum(jnp.sum(W * W, axis=-1) - herfindahl_cap, 0.0)
+    return lam_bounds * bounds_pen + lam_budget * budget_err ** 2 + lam_conc * conc ** 2
+
+
+def catopt_objective_ref(W, IL, CL, att, limit):
+    """Penalised objective = basis risk + constraint penalties."""
+    return catopt_fitness_ref(W, IL, CL, att, limit) + catopt_penalty_ref(W)
+
+
+def pareto_quantile(u, scale, shape):
+    """Inverse CDF of a Pareto(scale, shape), u in [0, 1)."""
+    return scale / jnp.power(1.0 - u, 1.0 / shape)
+
+
+def mc_sweep_ref(U, params, scale=1.0, shape=2.5, cap=50.0):
+    """Monte-Carlo cat-bond pricing sweep (the paper's second workload).
+
+    Args:
+      U:      (S, K) uniform draws; each row is one simulated year of K
+              potential events.
+      params: (J, 2) rows of (attachment, limit) to sweep.
+
+    Returns:
+      (J, 2): expected recovery and recovery standard deviation per
+      parameter point.
+    """
+    sev = jnp.minimum(pareto_quantile(U, scale, shape), cap)   # (S, K)
+    year_loss = jnp.sum(sev, axis=1)                           # (S,)
+    att = params[:, 0][:, None]                                # (J, 1)
+    lim = params[:, 1][:, None]
+    rec = jnp.minimum(jnp.maximum(year_loss[None, :] - att, 0.0), lim)  # (J, S)
+    mean = jnp.mean(rec, axis=1)
+    var = jnp.mean((rec - mean[:, None]) ** 2, axis=1)
+    return jnp.stack([mean, jnp.sqrt(var)], axis=1)

@@ -1,0 +1,121 @@
+"""L2: the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Three entry points, each lowered to one HLO-text artifact by `aot.py`:
+
+  * ``catopt_fitness``  — penalised basis-risk of a whole GA population
+    (calls the L1 Pallas kernel for the matmul+clamp+reduce hot loop).
+  * ``catopt_grad``     — value and gradient of the penalised objective
+    for one weight vector (drives the rgenoud-style BFGS refinement;
+    differentiates the pure-jnp reference path since `pallas_call` has
+    no automatic VJP — same maths, see kernels/ref.py).
+  * ``mc_sweep``        — Monte-Carlo parameter sweep (calls the L1 MC
+    kernel).
+
+Python only ever runs at build time; the Rust hot path executes these
+artifacts through PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import catopt as catopt_kernel
+from compile.kernels import mc as mc_kernel
+from compile.kernels import ref
+
+# ---------------------------------------------------------------- shapes
+# Fixed AOT shapes (recorded in the manifest; the Rust side pads to fit).
+POP = 256     # GA population tile (the paper's pop=200, padded)
+M = 512       # region-peril dimensionality (paper: 2000-4000, scaled)
+E = 2048      # events in the loss table
+S = 4096      # Monte-Carlo years per sweep call
+K = 16        # potential events per simulated year
+J = 64        # parameter points per sweep call
+
+
+def catopt_fitness(W, ILT, CL, att, limit):
+    """Penalised fitness of each candidate in a population tile.
+
+    Args:
+      W:   (POP, M) candidate weights.
+      ILT: (M, E) transposed industry-loss table.
+      CL:  (E,) sponsor loss per event.
+      att, limit: (1, 1) trigger parameters.
+
+    Returns:
+      (POP,) basis risk + constraint penalties (lower is better).
+    """
+    target = ref.recovery(CL, att[0, 0], limit[0, 0])[None, :]   # (1, E)
+    sse = catopt_kernel.catopt_sse(W, ILT, target, att, limit)   # (POP, 1)
+    basis = jnp.sqrt(sse[:, 0] / E)
+    return basis + ref.catopt_penalty_ref(W)
+
+
+def catopt_grad(w, ILT, CL, att, limit):
+    """Value and gradient of the penalised objective at one point.
+
+    Args:
+      w: (M,) a single weight vector.
+
+    Returns:
+      (value: (), grad: (M,)).
+    """
+
+    def obj(wv):
+        out = ref.catopt_objective_ref(
+            wv[None, :], ILT.T, CL, att[0, 0], limit[0, 0]
+        )
+        return out[0]
+
+    return jax.value_and_grad(obj)(w)
+
+
+def mc_sweep(U, params):
+    """Recovery mean and std per (attachment, limit) parameter point.
+
+    Args:
+      U:      (S, K) uniform draws.
+      params: (J, 2) parameter rows.
+
+    Returns:
+      (J, 2): [mean, std] of recovery over the S simulated years.
+    """
+    sums = mc_kernel.mc_sums(U, params)          # (J, 2) = [sum, sumsq]
+    mean = sums[:, 0] / S
+    var = jnp.maximum(sums[:, 1] / S - mean * mean, 0.0)
+    return jnp.stack([mean, jnp.sqrt(var)], axis=1)
+
+
+# ------------------------------------------------------------ entry table
+def entry_points():
+    """name -> (fn, example argument ShapeDtypeStructs)."""
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    return {
+        "catopt_fitness": (
+            catopt_fitness,
+            (
+                sds((POP, M), f32),
+                sds((M, E), f32),
+                sds((E,), f32),
+                sds((1, 1), f32),
+                sds((1, 1), f32),
+            ),
+        ),
+        "catopt_grad": (
+            catopt_grad,
+            (
+                sds((M,), f32),
+                sds((M, E), f32),
+                sds((E,), f32),
+                sds((1, 1), f32),
+                sds((1, 1), f32),
+            ),
+        ),
+        "mc_sweep": (
+            mc_sweep,
+            (
+                sds((S, K), f32),
+                sds((J, 2), f32),
+            ),
+        ),
+    }

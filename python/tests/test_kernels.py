@@ -1,0 +1,174 @@
+"""Kernel-vs-reference correctness: the CORE numerics signal.
+
+The Pallas kernels (interpret mode) must agree with the pure-jnp oracles
+to float32 tolerance across shapes and parameter ranges; hypothesis
+drives the sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import catopt as catopt_kernel
+from compile.kernels import mc as mc_kernel
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_catopt(seed, pop, m, e):
+    r = rng(seed)
+    W = r.uniform(0.0, 2.0 / m, size=(pop, m)).astype(np.float32)
+    IL = (r.pareto(2.5, size=(e, m)) * 0.01).astype(np.float32)
+    CL = (IL.sum(axis=1) * r.uniform(0.5, 1.5, size=e)).astype(np.float32)
+    att = np.float32(r.uniform(0.01, 0.2))
+    lim = np.float32(r.uniform(0.2, 2.0))
+    return W, IL, CL, att, lim
+
+
+class TestCatoptKernel:
+    def test_matches_reference_default_tiles(self):
+        W, IL, CL, att, lim = make_catopt(0, 256, 512, 2048)
+        target = ref.recovery(jnp.asarray(CL), att, lim)[None, :]
+        sse = catopt_kernel.catopt_sse(
+            jnp.asarray(W), jnp.asarray(IL.T), target,
+            jnp.full((1, 1), att), jnp.full((1, 1), lim),
+        )
+        got = np.sqrt(np.asarray(sse)[:, 0] / IL.shape[0])
+        want = np.asarray(ref.catopt_fitness_ref(W, IL, CL, att, lim))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        pop_tiles=st.integers(1, 3),
+        e_tiles=st.integers(1, 4),
+        m=st.sampled_from([128, 256, 384]),
+    )
+    def test_hypothesis_shape_sweep(self, seed, pop_tiles, e_tiles, m):
+        pop_blk, e_blk = 32, 128
+        pop, e = pop_blk * pop_tiles, e_blk * e_tiles
+        W, IL, CL, att, lim = make_catopt(seed, pop, m, e)
+        target = ref.recovery(jnp.asarray(CL), att, lim)[None, :]
+        sse = catopt_kernel.catopt_sse(
+            jnp.asarray(W), jnp.asarray(IL.T), target,
+            jnp.full((1, 1), att), jnp.full((1, 1), lim),
+            pop_blk=pop_blk, e_blk=e_blk,
+        )
+        got = np.sqrt(np.asarray(sse)[:, 0] / e)
+        want = np.asarray(ref.catopt_fitness_ref(W, IL, CL, att, lim))
+        np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-5)
+
+    def test_rejects_misaligned_shapes(self):
+        W, IL, CL, att, lim = make_catopt(1, 100, 128, 256)  # 100 % 32 != 0
+        target = ref.recovery(jnp.asarray(CL), att, lim)[None, :]
+        with pytest.raises(AssertionError):
+            catopt_kernel.catopt_sse(
+                jnp.asarray(W), jnp.asarray(IL.T), target,
+                jnp.full((1, 1), att), jnp.full((1, 1), lim),
+                pop_blk=32, e_blk=128,
+            )
+
+    def test_zero_weights_give_target_norm(self):
+        # With w = 0 the index recovery is 0 everywhere, so the basis
+        # risk equals the RMS of the target recovery — an analytic check.
+        _, IL, CL, att, lim = make_catopt(2, 32, 128, 256)
+        W = np.zeros((32, 128), dtype=np.float32)
+        target = ref.recovery(jnp.asarray(CL), att, lim)[None, :]
+        sse = catopt_kernel.catopt_sse(
+            jnp.asarray(W), jnp.asarray(IL.T), target,
+            jnp.full((1, 1), att), jnp.full((1, 1), lim),
+            pop_blk=32, e_blk=128,
+        )
+        got = np.sqrt(np.asarray(sse)[:, 0] / 256)
+        want = np.sqrt(np.mean(np.asarray(target) ** 2))
+        np.testing.assert_allclose(got, np.full(32, want), rtol=1e-5)
+
+
+class TestMcKernel:
+    def test_matches_reference(self):
+        r = rng(3)
+        U = r.uniform(0.0, 0.999, size=(4096, 16)).astype(np.float32)
+        params = np.stack(
+            [r.uniform(0.5, 5.0, 64), r.uniform(1.0, 10.0, 64)], axis=1
+        ).astype(np.float32)
+        sums = mc_kernel.mc_sums(jnp.asarray(U), jnp.asarray(params))
+        s = U.shape[0]
+        mean = np.asarray(sums)[:, 0] / s
+        var = np.maximum(np.asarray(sums)[:, 1] / s - mean**2, 0.0)
+        got = np.stack([mean, np.sqrt(var)], axis=1)
+        want = np.asarray(ref.mc_sweep_ref(U, params))
+        # Mean is exact to f32 accumulation error.
+        np.testing.assert_allclose(got[:, 0], want[:, 0], rtol=2e-4, atol=2e-4)
+        # Std uses the one-pass E[x^2]-E[x]^2 form in f32: cancellation
+        # bounds the absolute error by ~sqrt(S * eps) * mean (see
+        # DESIGN.md); 0.02 covers S=4096 with recovery means of O(10).
+        np.testing.assert_allclose(got[:, 1], want[:, 1], atol=0.02)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        s_tiles=st.integers(1, 4),
+        k=st.integers(2, 24),
+        j=st.sampled_from([8, 16, 64]),
+    )
+    def test_hypothesis_sweep(self, seed, s_tiles, k, j):
+        s_blk = 256
+        s = s_blk * s_tiles
+        r = rng(seed)
+        U = r.uniform(0.0, 0.999, size=(s, k)).astype(np.float32)
+        params = np.stack(
+            [r.uniform(0.1, 5.0, j), r.uniform(0.5, 10.0, j)], axis=1
+        ).astype(np.float32)
+        sums = mc_kernel.mc_sums(jnp.asarray(U), jnp.asarray(params), s_blk=s_blk)
+        mean = np.asarray(sums)[:, 0] / s
+        var = np.maximum(np.asarray(sums)[:, 1] / s - mean**2, 0.0)
+        got = np.stack([mean, np.sqrt(var)], axis=1)
+        want = np.asarray(ref.mc_sweep_ref(U, params))
+        np.testing.assert_allclose(got[:, 0], want[:, 0], rtol=5e-4, atol=5e-4)
+        np.testing.assert_allclose(got[:, 1], want[:, 1], atol=0.03)
+
+    def test_monotone_in_limit(self):
+        # Analytic sanity: expected recovery grows with the limit.
+        r = rng(4)
+        U = r.uniform(0.0, 0.999, size=(1024, 8)).astype(np.float32)
+        params = np.array([[1.0, 1.0], [1.0, 2.0], [1.0, 4.0]], dtype=np.float32)
+        sums = np.asarray(mc_kernel.mc_sums(jnp.asarray(U), jnp.asarray(params), s_blk=256))
+        means = sums[:, 0] / 1024
+        assert means[0] <= means[1] <= means[2]
+
+
+class TestReferenceProperties:
+    def test_recovery_clamps(self):
+        x = jnp.asarray([-1.0, 0.0, 0.5, 1.5, 10.0])
+        r = np.asarray(ref.recovery(x, 0.5, 2.0))
+        assert (r >= 0).all() and (r <= 2.0).all()
+        np.testing.assert_allclose(r, [0.0, 0.0, 0.0, 1.0, 2.0])
+
+    def test_penalty_zero_inside_feasible_region(self):
+        m = 200
+        w = np.full((1, m), 1.0 / m, dtype=np.float32)  # sums to 1, tiny H-index
+        p = np.asarray(ref.catopt_penalty_ref(jnp.asarray(w)))
+        np.testing.assert_allclose(p, 0.0, atol=1e-4)
+
+    def test_penalty_positive_outside(self):
+        w = np.full((1, 4), 1.0, dtype=np.float32)  # sums to 4, concentrated
+        p = np.asarray(ref.catopt_penalty_ref(jnp.asarray(w)))
+        assert p[0] > 1.0
+
+    def test_grad_descends(self):
+        # One gradient step on the penalised objective must not increase it.
+        W, IL, CL, att, lim = make_catopt(5, 1, 128, 256)
+        w = jnp.asarray(W[0])
+        ILj, CLj = jnp.asarray(IL), jnp.asarray(CL)
+
+        def obj(wv):
+            return ref.catopt_objective_ref(wv[None, :], ILj, CLj, att, lim)[0]
+
+        v, g = jax.value_and_grad(obj)(w)
+        v2 = obj(w - 1e-6 * g)
+        assert float(v2) <= float(v) + 1e-6

@@ -1,0 +1,107 @@
+"""L2 model tests: entry-point shapes, AOT lowering round-trip, and
+agreement between the artifact graphs and the reference maths."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_entry_points_shapes_lower():
+    for name, (fn, args) in model.entry_points().items():
+        out = jax.eval_shape(fn, *args)
+        leaves = jax.tree_util.tree_leaves(out)
+        assert leaves, f"{name} produces no outputs"
+        for leaf in leaves:
+            assert all(d > 0 for d in leaf.shape), f"{name}: bad shape {leaf.shape}"
+
+
+def test_catopt_fitness_matches_reference_objective():
+    r = np.random.default_rng(0)
+    W = r.uniform(0, 2.0 / model.M, size=(model.POP, model.M)).astype(np.float32)
+    IL = (r.pareto(2.5, size=(model.E, model.M)) * 0.01).astype(np.float32)
+    CL = IL.sum(axis=1).astype(np.float32)
+    att = np.full((1, 1), 0.1, np.float32)
+    lim = np.full((1, 1), 1.0, np.float32)
+    got = np.asarray(
+        model.catopt_fitness(
+            jnp.asarray(W), jnp.asarray(IL.T), jnp.asarray(CL),
+            jnp.asarray(att), jnp.asarray(lim),
+        )
+    )
+    want = np.asarray(
+        ref.catopt_objective_ref(W, IL, CL, float(att[0, 0]), float(lim[0, 0]))
+    )
+    np.testing.assert_allclose(got, want, rtol=5e-5, atol=1e-5)
+
+
+def test_catopt_grad_is_finite_and_correct_direction():
+    r = np.random.default_rng(1)
+    w = r.uniform(0, 2.0 / model.M, size=(model.M,)).astype(np.float32)
+    IL = (r.pareto(2.5, size=(model.E, model.M)) * 0.01).astype(np.float32)
+    CL = IL.sum(axis=1).astype(np.float32)
+    att = np.full((1, 1), 0.1, np.float32)
+    lim = np.full((1, 1), 1.0, np.float32)
+    v, g = model.catopt_grad(
+        jnp.asarray(w), jnp.asarray(IL.T), jnp.asarray(CL),
+        jnp.asarray(att), jnp.asarray(lim),
+    )
+    v, g = float(v), np.asarray(g)
+    assert np.isfinite(v) and np.isfinite(g).all()
+    # Finite-difference check along the gradient direction.
+    eps = 1e-4
+    d = g / (np.linalg.norm(g) + 1e-12)
+    v_plus, _ = model.catopt_grad(
+        jnp.asarray(w + eps * d.astype(np.float32)), jnp.asarray(IL.T),
+        jnp.asarray(CL), jnp.asarray(att), jnp.asarray(lim),
+    )
+    fd = (float(v_plus) - v) / eps
+    analytic = float(np.dot(g, d))
+    np.testing.assert_allclose(fd, analytic, rtol=0.05, atol=1e-2)
+
+
+def test_mc_sweep_matches_reference():
+    r = np.random.default_rng(2)
+    U = r.uniform(0, 0.999, size=(model.S, model.K)).astype(np.float32)
+    params = np.stack(
+        [r.uniform(0.5, 5.0, model.J), r.uniform(1.0, 10.0, model.J)], axis=1
+    ).astype(np.float32)
+    got = np.asarray(model.mc_sweep(jnp.asarray(U), jnp.asarray(params)))
+    want = np.asarray(ref.mc_sweep_ref(U, params))
+    np.testing.assert_allclose(got[:, 0], want[:, 0], rtol=5e-4, atol=5e-4)
+    # One-pass f32 variance: absolute tolerance per DESIGN.md cancellation bound.
+    np.testing.assert_allclose(got[:, 1], want[:, 1], atol=0.02)
+
+
+def test_aot_hlo_text_is_parseable_hlo(tmp_path):
+    # Lower one entry and sanity-check the HLO text structure.
+    fn, args = model.entry_points()["mc_sweep"]
+    text = aot.to_hlo_text(aot.lower_entry(fn, args))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # return_tuple=True => tuple-shaped root.
+    assert "tuple(" in text or "(f32[" in text
+
+
+def test_manifest_written_and_consistent(tmp_path):
+    out = tmp_path / "artifacts"
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(out)]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["format"] == "hlo-text"
+    assert set(manifest["entries"]) == {"catopt_fitness", "catopt_grad", "mc_sweep"}
+    for name, e in manifest["entries"].items():
+        assert os.path.exists(out / e["file"]), name
+        assert e["args"], name
+        cf = manifest["constants"]
+        assert cf["POP"] % 2 == 0 and cf["E"] % 2 == 0

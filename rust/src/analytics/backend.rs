@@ -1,0 +1,264 @@
+//! Fitness-evaluation backends for the optimiser.
+//!
+//! * [`RustBackend`] — pure-Rust objective (tests, CPU fallback, and the
+//!   oracle the PJRT path is verified against).
+//! * [`PjrtBackend`] — the production path: population fitness through
+//!   the AOT-compiled `catopt_fitness` artifact and gradients through
+//!   `catopt_grad`, both executed by the PJRT CPU client.
+
+use super::catbond::{self, CatBondData};
+use crate::runtime::{Runtime, TensorF32};
+use anyhow::Result;
+use std::rc::Rc;
+
+/// What the GA and BFGS need from an objective.
+pub trait FitnessBackend {
+    /// Penalised objective for each candidate (lower is better).
+    fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>>;
+    /// Value and gradient at one point (for quasi-Newton refinement).
+    fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)>;
+    /// Problem dimensionality.
+    fn dims(&self) -> usize;
+    /// Number of artifact executions so far (perf accounting).
+    fn exec_count(&self) -> u64 {
+        0
+    }
+}
+
+// ------------------------------------------------------------------ rust
+
+/// Pure-Rust backend over a [`CatBondData`].
+pub struct RustBackend {
+    pub data: CatBondData,
+    evals: u64,
+}
+
+impl RustBackend {
+    pub fn new(data: CatBondData) -> Self {
+        Self { data, evals: 0 }
+    }
+}
+
+impl FitnessBackend for RustBackend {
+    fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.evals += pop.len() as u64;
+        Ok(pop.iter().map(|w| catbond::objective(w, &self.data)).collect())
+    }
+
+    fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+        self.evals += 1;
+        Ok(analytic_value_and_grad(w, &self.data))
+    }
+
+    fn dims(&self) -> usize {
+        self.data.m
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.evals
+    }
+}
+
+/// Analytic gradient of the penalised objective (matches the JAX
+/// autodiff of `catopt_objective_ref` up to f32 noise).
+pub fn analytic_value_and_grad(w: &[f32], data: &CatBondData) -> (f32, Vec<f32>) {
+    let (m, e) = (data.m, data.e);
+    let mut grad = vec![0.0f32; m];
+
+    // Basis-risk part: br = sqrt(mean(err^2));
+    // d br / d w_j = (1 / (br * E)) * sum_i err_i * 1{0 < idx-att < lim} * IL_ij
+    let mut sse = 0.0f64;
+    let mut gacc = vec![0.0f64; m];
+    for ev in 0..e {
+        let row = &data.il[ev * m..(ev + 1) * m];
+        let mut idx = 0.0f32;
+        for j in 0..m {
+            idx += w[j] * row[j];
+        }
+        let x = idx - data.att;
+        let rec = x.max(0.0).min(data.limit);
+        let target = catbond::recovery(data.cl[ev], data.att, data.limit);
+        let err = rec - target;
+        sse += (err as f64) * (err as f64);
+        let active = x > 0.0 && x < data.limit;
+        if active && err != 0.0 {
+            for j in 0..m {
+                gacc[j] += err as f64 * row[j] as f64;
+            }
+        }
+    }
+    let br = ((sse / e as f64).max(0.0)).sqrt();
+    let val_br = br as f32;
+    if br > 1e-12 {
+        let scale = 1.0 / (br * e as f64);
+        for j in 0..m {
+            grad[j] += (gacc[j] * scale) as f32;
+        }
+    }
+
+    // Penalty part.
+    let mut sum = 0.0f32;
+    let mut sumsq = 0.0f32;
+    for &x in w {
+        sum += x;
+        sumsq += x * x;
+    }
+    let budget_err = sum - catbond::BUDGET;
+    let conc = (sumsq - catbond::HERFINDAHL_CAP).max(0.0);
+    for j in 0..m {
+        let x = w[j];
+        let lo = x.min(0.0);
+        let hi = (x - 1.0).max(0.0);
+        grad[j] += catbond::LAM_BOUNDS * 2.0 * (lo + hi);
+        grad[j] += catbond::LAM_BUDGET * 2.0 * budget_err;
+        if conc > 0.0 {
+            grad[j] += catbond::LAM_CONC * 2.0 * conc * 2.0 * x;
+        }
+    }
+    (val_br + catbond::penalty(w), grad)
+}
+
+// ------------------------------------------------------------------ pjrt
+
+/// Production backend: fitness/gradients via the PJRT artifacts.
+///
+/// The loop-invariant arguments (transposed loss table, sponsor losses,
+/// trigger scalars) are prepared as PJRT literals **once** — rebuilding
+/// the 4 MiB table literal every generation cost ~20% of the hot path
+/// (EXPERIMENTS.md §Perf L3).
+pub struct PjrtBackend {
+    rt: Rc<Runtime>,
+    data: CatBondData,
+    lit_ilt: crate::runtime::pjrt::PreparedArg,
+    lit_cl: crate::runtime::pjrt::PreparedArg,
+    lit_att: crate::runtime::pjrt::PreparedArg,
+    lit_lim: crate::runtime::pjrt::PreparedArg,
+    pop_tile: usize,
+    /// Reused host buffer for the padded population tile.
+    w_buf: Vec<f32>,
+}
+
+impl PjrtBackend {
+    /// `data.m`/`data.e` must match the artifact constants `M`/`E`.
+    pub fn new(rt: Rc<Runtime>, data: CatBondData) -> Result<Self> {
+        let m = rt.constant("M")?;
+        let e = rt.constant("E")?;
+        anyhow::ensure!(
+            data.m == m && data.e == e,
+            "dataset ({}, {}) does not match artifact shapes ({m}, {e})",
+            data.m,
+            data.e
+        );
+        let mut ilt = vec![0.0f32; m * e];
+        for ev in 0..e {
+            for j in 0..m {
+                ilt[j * e + ev] = data.il[ev * m + j];
+            }
+        }
+        let pop_tile = rt.constant("POP")?;
+        let lit_ilt = rt.prepare(&TensorF32::new(vec![m, e], ilt))?;
+        let lit_cl = rt.prepare(&TensorF32::new(vec![e], data.cl.clone()))?;
+        let lit_att = rt.prepare(&TensorF32::scalar11(data.att))?;
+        let lit_lim = rt.prepare(&TensorF32::scalar11(data.limit))?;
+        Ok(Self {
+            rt,
+            data,
+            lit_ilt,
+            lit_cl,
+            lit_att,
+            lit_lim,
+            pop_tile,
+            w_buf: Vec::new(),
+        })
+    }
+
+    pub fn data(&self) -> &CatBondData {
+        &self.data
+    }
+}
+
+impl FitnessBackend for PjrtBackend {
+    fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let m = self.data.m;
+        let mut out = Vec::with_capacity(pop.len());
+        for chunk in pop.chunks(self.pop_tile) {
+            // Pad the tile with copies of the first candidate, reusing
+            // the host buffer (no per-generation allocation).
+            self.w_buf.clear();
+            self.w_buf.reserve(self.pop_tile * m);
+            for cand in chunk {
+                anyhow::ensure!(cand.len() == m, "candidate dim {} != {m}", cand.len());
+                self.w_buf.extend_from_slice(cand);
+            }
+            for _ in chunk.len()..self.pop_tile {
+                self.w_buf.extend_from_slice(&chunk[0]);
+            }
+            let lit_w = self
+                .rt
+                .prepare(&TensorF32::new(vec![self.pop_tile, m], self.w_buf.clone()))?;
+            let res = self.rt.execute_prepared(
+                "catopt_fitness",
+                &[&lit_w, &self.lit_ilt, &self.lit_cl, &self.lit_att, &self.lit_lim],
+            )?;
+            out.extend_from_slice(&res[0].data[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let m = self.data.m;
+        let lit_w = self.rt.prepare(&TensorF32::new(vec![m], w.to_vec()))?;
+        let res = self.rt.execute_prepared(
+            "catopt_grad",
+            &[&lit_w, &self.lit_ilt, &self.lit_cl, &self.lit_att, &self.lit_lim],
+        )?;
+        Ok((res[0].data[0], res[1].data.clone()))
+    }
+
+    fn dims(&self) -> usize {
+        self.data.m
+    }
+
+    fn exec_count(&self) -> u64 {
+        self.rt.exec_count.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_grad_matches_finite_difference() {
+        let data = CatBondData::generate(3, 48, 128);
+        let m = data.m;
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(1);
+        let w: Vec<f32> = (0..m).map(|_| rng.next_f32() * 2.0 / m as f32).collect();
+        let (v0, g) = analytic_value_and_grad(&w, &data);
+        assert!(v0.is_finite());
+        for probe in [0usize, 7, 23, m - 1] {
+            let eps = 1e-3f32;
+            let mut wp = w.clone();
+            wp[probe] += eps;
+            let vp = catbond::objective(&wp, &data);
+            let fd = (vp - v0) / eps;
+            let tol = 0.05 * g[probe].abs().max(1.0);
+            assert!(
+                (fd - g[probe]).abs() <= tol,
+                "coord {probe}: fd {fd} vs analytic {}",
+                g[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn rust_backend_counts_evals() {
+        let data = CatBondData::generate(5, 16, 32);
+        let mut b = RustBackend::new(data);
+        let pop: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.01; 16]).collect();
+        let f = b.eval_population(&pop).unwrap();
+        assert_eq!(f.len(), 4);
+        assert_eq!(b.exec_count(), 4);
+        assert_eq!(b.dims(), 16);
+    }
+}

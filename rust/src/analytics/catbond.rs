@@ -1,0 +1,306 @@
+//! The CATopt problem (paper §4): catastrophe-bond basis-risk data and
+//! objective.
+//!
+//! The paper's event-loss table is proprietary (Flagstone Re), so this
+//! module generates a synthetic multi-peril table with the same
+//! structure: m region-peril combinations (e.g. `Alabama_Residential`),
+//! heavy-tailed (Pareto) event severities with spatial correlation
+//! across neighbouring region-perils, and a sponsor loss that is a
+//! noisy share of the industry loss — exactly the setting in which
+//! minimising basis risk over the weights is non-trivial.
+//!
+//! The Rust-side objective here mirrors `python/compile/kernels/ref.py`;
+//! it is used for unit tests, for verifying the PJRT artifacts, and as
+//! the CPU fallback backend.
+
+use crate::util::prng::Xoshiro256;
+
+/// Constraint-penalty coefficients — must match ref.py.
+pub const LAM_BOUNDS: f32 = 1e4;
+pub const LAM_BUDGET: f32 = 1e3;
+pub const LAM_CONC: f32 = 1e3;
+pub const BUDGET: f32 = 1.0;
+pub const HERFINDAHL_CAP: f32 = 0.02;
+
+/// A synthetic cat-bond calibration dataset.
+#[derive(Clone, Debug)]
+pub struct CatBondData {
+    /// Region-peril count (the optimisation dimensionality).
+    pub m: usize,
+    /// Event count.
+    pub e: usize,
+    /// Industry losses, row-major `(E, M)`.
+    pub il: Vec<f32>,
+    /// Sponsor's actual loss per event `(E,)`.
+    pub cl: Vec<f32>,
+    /// Trigger attachment point.
+    pub att: f32,
+    /// Contractual limit.
+    pub limit: f32,
+    /// Region-peril labels ("R012_Residential", …).
+    pub labels: Vec<String>,
+}
+
+impl CatBondData {
+    /// Generate a dataset. `seed` fixes everything; `m`/`e` control the
+    /// scale (paper: m = 2000–4000, table ≈ 300 MB; the AOT default is
+    /// m = 512, e = 2048 — DESIGN.md §2 records the scaling).
+    pub fn generate(seed: u64, m: usize, e: usize) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let perils = ["Residential", "Commercial", "Industrial", "Auto"];
+        let labels: Vec<String> = (0..m)
+            .map(|j| format!("R{:03}_{}", j / perils.len(), perils[j % perils.len()]))
+            .collect();
+
+        // Per-region-peril exposure scale (some markets are much bigger).
+        let exposure: Vec<f32> = (0..m)
+            .map(|_| rng.next_pareto(0.2, 1.8).min(50.0) as f32)
+            .collect();
+
+        let mut il = vec![0.0f32; e * m];
+        let mut cl = vec![0.0f32; e];
+        // The sponsor's true (hidden) market shares: sparse-ish, what the
+        // optimiser should roughly recover.
+        let true_w: Vec<f32> = (0..m)
+            .map(|_| {
+                if rng.next_f64() < 0.3 {
+                    rng.next_f32() * 4.0 / m as f32
+                } else {
+                    0.2 / m as f32
+                }
+            })
+            .collect();
+
+        for ev in 0..e {
+            // Each event strikes a contiguous window of region-perils
+            // (spatial correlation), with Pareto severity.
+            let center = rng.below_usize(m);
+            let radius = 1 + rng.below_usize((m / 16).max(2));
+            let severity = rng.next_pareto(0.05, 1.6).min(500.0) as f32;
+            let row = &mut il[ev * m..(ev + 1) * m];
+            for d in 0..=radius {
+                let fall = (-(d as f32) / radius as f32 * 2.0).exp();
+                for idx in [center.saturating_sub(d), (center + d).min(m - 1)] {
+                    row[idx] += severity * fall * exposure[idx] * (0.5 + rng.next_f32());
+                }
+            }
+            // Sponsor loss: their share of the industry loss plus
+            // idiosyncratic noise — the source of basis risk.
+            let share: f32 = row.iter().zip(&true_w).map(|(x, w)| x * w).sum();
+            let noise = 1.0 + 0.3 * rng.next_gaussian() as f32;
+            cl[ev] = (share * noise).max(0.0);
+        }
+
+        // Attachment ≈ 70th percentile of sponsor loss, limit ≈ spread
+        // to the 99th — the usual cat-bond layering.
+        let mut sorted = cl.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let att = sorted[(0.70 * (e - 1) as f32) as usize];
+        let limit = (sorted[(0.99 * (e - 1) as f32) as usize] - att).max(att * 0.5);
+
+        Self {
+            m,
+            e,
+            il,
+            cl,
+            att,
+            limit,
+            labels,
+        }
+    }
+
+    /// Serialized size in bytes (for data-management timing; the paper's
+    /// table is ~300 MB at m=3000, e≈12k).
+    pub fn nbytes(&self) -> u64 {
+        (self.il.len() * 4 + self.cl.len() * 4) as u64
+    }
+
+    /// Serialize to little-endian f32 project files.
+    pub fn to_files(&self) -> Vec<(String, Vec<u8>)> {
+        let f32s = |v: &[f32]| -> Vec<u8> { v.iter().flat_map(|x| x.to_le_bytes()).collect() };
+        let meta = crate::util::json::Json::from_pairs(vec![
+            ("m", crate::util::json::Json::num(self.m as f64)),
+            ("e", crate::util::json::Json::num(self.e as f64)),
+            ("att", crate::util::json::Json::num(self.att as f64)),
+            ("limit", crate::util::json::Json::num(self.limit as f64)),
+        ]);
+        vec![
+            ("data/industry_losses.bin".to_string(), f32s(&self.il)),
+            ("data/company_losses.bin".to_string(), f32s(&self.cl)),
+            ("data/meta.json".to_string(), meta.to_string_pretty().into_bytes()),
+        ]
+    }
+
+    /// Parse back from project files (the engine reads these on the
+    /// "instance" — the project dir is what got rsynced).
+    pub fn from_files(read: impl Fn(&str) -> Option<Vec<u8>>) -> anyhow::Result<Self> {
+        let meta_raw = read("data/meta.json")
+            .ok_or_else(|| anyhow::anyhow!("project missing data/meta.json"))?;
+        let meta = crate::util::json::Json::parse(std::str::from_utf8(&meta_raw)?)
+            .map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let m = meta.req_u64("m")? as usize;
+        let e = meta.req_u64("e")? as usize;
+        let att = meta.req_f64("att")? as f32;
+        let limit = meta.req_f64("limit")? as f32;
+        let parse = |name: &str, n: usize| -> anyhow::Result<Vec<f32>> {
+            let raw = read(name).ok_or_else(|| anyhow::anyhow!("project missing {name}"))?;
+            if raw.len() != n * 4 {
+                anyhow::bail!("{name}: expected {} bytes, got {}", n * 4, raw.len());
+            }
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        Ok(Self {
+            il: parse("data/industry_losses.bin", e * m)?,
+            cl: parse("data/company_losses.bin", e)?,
+            labels: (0..m).map(|j| format!("rp{j}")).collect(),
+            m,
+            e,
+            att,
+            limit,
+        })
+    }
+}
+
+/// `min(max(x - att, 0), limit)` — the parametric payout.
+#[inline]
+pub fn recovery(x: f32, att: f32, limit: f32) -> f32 {
+    (x - att).max(0.0).min(limit)
+}
+
+/// Basis risk (RMS recovery error) of one candidate — Rust reference of
+/// the L1 kernel's maths.
+pub fn basis_risk(w: &[f32], data: &CatBondData) -> f32 {
+    let (m, e) = (data.m, data.e);
+    assert_eq!(w.len(), m);
+    let mut sse = 0.0f64;
+    for ev in 0..e {
+        let row = &data.il[ev * m..(ev + 1) * m];
+        let mut idx_loss = 0.0f32;
+        for j in 0..m {
+            idx_loss += w[j] * row[j];
+        }
+        let rec = recovery(idx_loss, data.att, data.limit);
+        let target = recovery(data.cl[ev], data.att, data.limit);
+        let d = (rec - target) as f64;
+        sse += d * d;
+    }
+    ((sse / e as f64) as f32).sqrt()
+}
+
+/// Constraint penalties — must track `catopt_penalty_ref` in ref.py.
+pub fn penalty(w: &[f32]) -> f32 {
+    let mut bounds = 0.0f32;
+    let mut sum = 0.0f32;
+    let mut sumsq = 0.0f32;
+    for &x in w {
+        let lo = x.min(0.0);
+        let hi = (x - 1.0).max(0.0);
+        bounds += lo * lo + hi * hi;
+        sum += x;
+        sumsq += x * x;
+    }
+    let budget_err = sum - BUDGET;
+    let conc = (sumsq - HERFINDAHL_CAP).max(0.0);
+    LAM_BOUNDS * bounds + LAM_BUDGET * budget_err * budget_err + LAM_CONC * conc * conc
+}
+
+/// Penalised objective (matches `catopt_objective_ref`).
+pub fn objective(w: &[f32], data: &CatBondData) -> f32 {
+    basis_risk(w, data) + penalty(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CatBondData {
+        CatBondData::generate(7, 64, 256)
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = CatBondData::generate(1, 32, 64);
+        let b = CatBondData::generate(1, 32, 64);
+        assert_eq!(a.il, b.il);
+        assert_eq!(a.cl, b.cl);
+        let c = CatBondData::generate(2, 32, 64);
+        assert_ne!(a.il, c.il);
+    }
+
+    #[test]
+    fn losses_are_nonnegative_and_heavy_tailed() {
+        let d = small();
+        assert!(d.il.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        assert!(d.cl.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        let max = d.cl.iter().cloned().fold(0.0f32, f32::max);
+        let mean = d.cl.iter().sum::<f32>() / d.cl.len() as f32;
+        assert!(max > 5.0 * mean, "tail max {max} vs mean {mean}");
+        assert!(d.att > 0.0 && d.limit > 0.0);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let d = small();
+        let files = d.to_files();
+        let lookup = |name: &str| {
+            files
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, b)| b.clone())
+        };
+        let back = CatBondData::from_files(lookup).unwrap();
+        assert_eq!(back.il, d.il);
+        assert_eq!(back.cl, d.cl);
+        assert_eq!(back.att, d.att);
+        assert_eq!(d.nbytes(), (d.il.len() * 4 + d.cl.len() * 4) as u64);
+    }
+
+    #[test]
+    fn recovery_clamps() {
+        assert_eq!(recovery(-1.0, 0.5, 2.0), 0.0);
+        assert_eq!(recovery(0.4, 0.5, 2.0), 0.0);
+        assert_eq!(recovery(1.5, 0.5, 2.0), 1.0);
+        assert_eq!(recovery(10.0, 0.5, 2.0), 2.0);
+    }
+
+    #[test]
+    fn zero_weights_risk_equals_target_rms() {
+        let d = small();
+        let w = vec![0.0f32; d.m];
+        let br = basis_risk(&w, &d);
+        let mut sse = 0.0f64;
+        for &c in &d.cl {
+            let t = recovery(c, d.att, d.limit) as f64;
+            sse += t * t;
+        }
+        let want = ((sse / d.e as f64) as f32).sqrt();
+        assert!((br - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn true_shares_beat_zero_and_random() {
+        // The generator hides true shares; a uniform-budget candidate
+        // should do better than garbage weights.
+        let d = small();
+        let uniform = vec![BUDGET / d.m as f32; d.m];
+        let zero = vec![0.0f32; d.m];
+        let big = vec![1.0f32; d.m];
+        assert!(basis_risk(&uniform, &d).is_finite());
+        assert!(penalty(&uniform) < 1.0, "uniform is feasible");
+        assert!(penalty(&zero) > 100.0, "zero violates the budget");
+        assert!(penalty(&big) > penalty(&uniform));
+    }
+
+    #[test]
+    fn penalty_zero_iff_feasible() {
+        let m = 100;
+        let w = vec![1.0 / m as f32; m];
+        assert!(penalty(&w) < 1e-3);
+        let mut w2 = w.clone();
+        w2[0] = -0.5;
+        assert!(penalty(&w2) > 100.0);
+    }
+}

@@ -1,0 +1,262 @@
+//! BFGS quasi-Newton refinement — the derivative half of rgenoud's
+//! "evolutionary search + derivative-based (Newton or quasi-Newton)
+//! methods" hybrid (paper §4). Dense inverse-Hessian update with an
+//! Armijo backtracking line search; gradients come from whichever
+//! [`FitnessBackend`](crate::analytics::backend::FitnessBackend) is
+//! plugged in (PJRT `catopt_grad` artifact in production).
+
+use crate::analytics::backend::FitnessBackend;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct BfgsOptions {
+    pub max_iters: usize,
+    pub grad_tol: f32,
+    /// Armijo slope fraction.
+    pub c1: f32,
+    /// Line-search backtracking factor and cap.
+    pub backtrack: f32,
+    pub max_line_steps: usize,
+}
+
+impl Default for BfgsOptions {
+    fn default() -> Self {
+        Self {
+            max_iters: 20,
+            grad_tol: 1e-5,
+            c1: 1e-4,
+            backtrack: 0.5,
+            max_line_steps: 25,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BfgsResult {
+    pub x: Vec<f32>,
+    pub value: f32,
+    pub iters: usize,
+    pub grad_evals: usize,
+    pub converged: bool,
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Minimise `backend`'s objective from `x0`.
+pub fn minimize(
+    backend: &mut dyn FitnessBackend,
+    x0: &[f32],
+    opts: &BfgsOptions,
+) -> Result<BfgsResult> {
+    let n = x0.len();
+    let mut x = x0.to_vec();
+    let (mut f, mut g) = backend.value_and_grad(&x)?;
+    let mut grad_evals = 1usize;
+
+    // Dense inverse Hessian estimate, H = I initially.
+    let mut h = vec![0.0f32; n * n];
+    for i in 0..n {
+        h[i * n + i] = 1.0;
+    }
+
+    let mut iters = 0;
+    let mut converged = false;
+    for _ in 0..opts.max_iters {
+        iters += 1;
+        let gnorm = dot(&g, &g).sqrt();
+        if gnorm < opts.grad_tol as f64 {
+            converged = true;
+            break;
+        }
+        // Direction d = -H g.
+        let mut d = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &h[i * n..(i + 1) * n];
+            d[i] = -(dot(row, &g) as f32);
+        }
+        let mut slope = dot(&d, &g);
+        if slope >= 0.0 {
+            // H lost positive-definiteness (f32 noise) — reset to steepest descent.
+            for i in 0..n {
+                d[i] = -g[i];
+            }
+            slope = -dot(&g, &g);
+            for i in 0..n {
+                for j in 0..n {
+                    h[i * n + j] = if i == j { 1.0 } else { 0.0 };
+                }
+            }
+        }
+
+        // Armijo backtracking.
+        let mut alpha = 1.0f32;
+        let mut accepted = None;
+        for _ in 0..opts.max_line_steps {
+            let xt: Vec<f32> = x.iter().zip(&d).map(|(&xi, &di)| xi + alpha * di).collect();
+            let (ft, gt) = backend.value_and_grad(&xt)?;
+            grad_evals += 1;
+            if (ft as f64) <= f as f64 + opts.c1 as f64 * alpha as f64 * slope {
+                accepted = Some((xt, ft, gt, alpha));
+                break;
+            }
+            alpha *= opts.backtrack;
+        }
+        let Some((xt, ft, gt, alpha)) = accepted else {
+            break; // no progress possible at f32 resolution
+        };
+
+        // BFGS update: s = alpha d, y = gt - g.
+        let s: Vec<f32> = d.iter().map(|&di| alpha * di).collect();
+        let y: Vec<f32> = gt.iter().zip(&g).map(|(&a, &b)| a - b).collect();
+        let sy = dot(&s, &y);
+        if sy > 1e-10 {
+            let rho = 1.0 / sy;
+            // H <- (I - rho s y^T) H (I - rho y s^T) + rho s s^T
+            let mut hy = vec![0.0f64; n];
+            for i in 0..n {
+                let row = &h[i * n..(i + 1) * n];
+                hy[i] = dot(row, &y);
+            }
+            let yhy = y.iter().zip(&hy).map(|(&yi, &hyi)| yi as f64 * hyi).sum::<f64>();
+            for i in 0..n {
+                for j in 0..n {
+                    let hij = h[i * n + j] as f64;
+                    let term = -rho * (s[i] as f64 * hy[j] + hy[i] * s[j] as f64)
+                        + rho * rho * yhy * s[i] as f64 * s[j] as f64
+                        + rho * s[i] as f64 * s[j] as f64;
+                    h[i * n + j] = (hij + term) as f32;
+                }
+            }
+        }
+        x = xt;
+        f = ft;
+        g = gt;
+    }
+
+    Ok(BfgsResult {
+        x,
+        value: f,
+        iters,
+        grad_evals,
+        converged,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Result;
+
+    /// Quadratic bowl backend: f = 0.5 (x-c)^T A (x-c), diagonal A.
+    struct Quad {
+        c: Vec<f32>,
+        a: Vec<f32>,
+    }
+
+    impl FitnessBackend for Quad {
+        fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+            Ok(pop
+                .iter()
+                .map(|x| {
+                    x.iter()
+                        .zip(&self.c)
+                        .zip(&self.a)
+                        .map(|((&xi, &ci), &ai)| 0.5 * ai * (xi - ci) * (xi - ci))
+                        .sum()
+                })
+                .collect())
+        }
+        fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+            let v = self.eval_population(&[w.to_vec()])?[0];
+            let g = w
+                .iter()
+                .zip(&self.c)
+                .zip(&self.a)
+                .map(|((&xi, &ci), &ai)| ai * (xi - ci))
+                .collect();
+            Ok((v, g))
+        }
+        fn dims(&self) -> usize {
+            self.c.len()
+        }
+    }
+
+    #[test]
+    fn minimizes_ill_conditioned_quadratic() {
+        let n = 12;
+        let mut b = Quad {
+            c: (0..n).map(|i| i as f32 * 0.1).collect(),
+            a: (0..n).map(|i| 1.0 + 9.0 * (i as f32 / n as f32)).collect(),
+        };
+        let x0 = vec![5.0f32; n];
+        let r = minimize(&mut b, &x0, &BfgsOptions::default()).unwrap();
+        assert!(r.value < 1e-6, "value {}", r.value);
+        for (xi, ci) in r.x.iter().zip(&b.c) {
+            assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
+        }
+    }
+
+    #[test]
+    fn rosenbrock_2d_progress() {
+        struct Rosen;
+        impl FitnessBackend for Rosen {
+            fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+                Ok(pop
+                    .iter()
+                    .map(|x| {
+                        let (a, b) = (x[0], x[1]);
+                        (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2)
+                    })
+                    .collect())
+            }
+            fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+                let (a, b) = (w[0], w[1]);
+                let v = self.eval_population(&[w.to_vec()])?[0];
+                Ok((
+                    v,
+                    vec![
+                        -2.0 * (1.0 - a) - 400.0 * a * (b - a * a),
+                        200.0 * (b - a * a),
+                    ],
+                ))
+            }
+            fn dims(&self) -> usize {
+                2
+            }
+        }
+        let r = minimize(
+            &mut Rosen,
+            &[-1.2, 1.0],
+            &BfgsOptions {
+                max_iters: 200,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.value < 1e-3, "rosenbrock value {}", r.value);
+    }
+
+    #[test]
+    fn improves_catbond_objective() {
+        use crate::analytics::backend::RustBackend;
+        use crate::analytics::catbond::CatBondData;
+        let data = CatBondData::generate(9, 32, 96);
+        let m = data.m;
+        let mut b = RustBackend::new(data);
+        let x0 = vec![1.0 / m as f32; m];
+        let f0 = b.eval_population(&[x0.clone()]).unwrap()[0];
+        let r = minimize(
+            &mut b,
+            &x0,
+            &BfgsOptions {
+                max_iters: 15,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(r.value <= f0, "BFGS must not worsen: {} vs {f0}", r.value);
+        assert!(r.grad_evals >= r.iters);
+    }
+}

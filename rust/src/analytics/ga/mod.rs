@@ -1,0 +1,11 @@
+//! rgenoud-style genetic optimisation: the nine operators, BFGS
+//! refinement, and the generational loop with distributed fitness
+//! fan-out.
+
+pub mod bfgs;
+pub mod operators;
+pub mod optimizer;
+
+pub use bfgs::{minimize, BfgsOptions, BfgsResult};
+pub use operators::Domain;
+pub use optimizer::{run, GaConfig, GaResult, GenerationStat, OperatorWeights};

@@ -1,0 +1,222 @@
+//! The nine genetic operators of `rgenoud` (Mebane & Sekhon 2011), the
+//! R package the paper's CATopt script is built on. Operator numbering
+//! follows the package documentation:
+//!
+//! 1. cloning, 2. uniform mutation, 3. boundary mutation,
+//! 4. non-uniform mutation, 5. polytope crossover, 6. simple crossover,
+//! 7. whole non-uniform mutation, 8. heuristic crossover,
+//! 9. local-minimum crossover (gradient blend).
+
+use crate::util::prng::Xoshiro256;
+
+/// Coordinate domain (same bounds for every dimension here: market
+/// shares live in [lo, hi]).
+#[derive(Clone, Copy, Debug)]
+pub struct Domain {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl Domain {
+    pub fn clamp(&self, x: f32) -> f32 {
+        x.max(self.lo).min(self.hi)
+    }
+    pub fn sample(&self, rng: &mut Xoshiro256) -> f32 {
+        self.lo + (self.hi - self.lo) * rng.next_f32()
+    }
+}
+
+/// Degree of non-uniformity decay for operators 4/7 (rgenoud's B).
+const NONUNIF_B: f32 = 3.0;
+
+/// 2. Uniform mutation: one random coordinate resampled uniformly.
+pub fn uniform_mutation(x: &mut [f32], dom: Domain, rng: &mut Xoshiro256) {
+    let j = rng.below_usize(x.len());
+    x[j] = dom.sample(rng);
+}
+
+/// 3. Boundary mutation: one random coordinate snapped to a bound.
+pub fn boundary_mutation(x: &mut [f32], dom: Domain, rng: &mut Xoshiro256) {
+    let j = rng.below_usize(x.len());
+    x[j] = if rng.next_f64() < 0.5 { dom.lo } else { dom.hi };
+}
+
+/// Shared decay shape for non-uniform mutations: perturbation shrinks
+/// as `gen/max_gen` approaches 1.
+fn nonuniform_step(x: f32, dom: Domain, progress: f32, rng: &mut Xoshiro256) -> f32 {
+    let r = rng.next_f32();
+    let scale = (1.0 - progress).max(0.0).powf(NONUNIF_B);
+    let delta = if rng.next_f64() < 0.5 {
+        (dom.hi - x) * r * scale
+    } else {
+        -(x - dom.lo) * r * scale
+    };
+    dom.clamp(x + delta)
+}
+
+/// 4. Non-uniform mutation: one coordinate, decaying perturbation.
+pub fn nonuniform_mutation(
+    x: &mut [f32],
+    dom: Domain,
+    progress: f32,
+    rng: &mut Xoshiro256,
+) {
+    let j = rng.below_usize(x.len());
+    x[j] = nonuniform_step(x[j], dom, progress, rng);
+}
+
+/// 7. Whole non-uniform mutation: every coordinate.
+pub fn whole_nonuniform_mutation(
+    x: &mut [f32],
+    dom: Domain,
+    progress: f32,
+    rng: &mut Xoshiro256,
+) {
+    for j in 0..x.len() {
+        x[j] = nonuniform_step(x[j], dom, progress, rng);
+    }
+}
+
+/// 5. Polytope crossover: convex combination of `parents` (rgenoud uses
+/// max(2, ...) parents with random simplex weights).
+pub fn polytope_crossover(parents: &[&[f32]], rng: &mut Xoshiro256) -> Vec<f32> {
+    assert!(parents.len() >= 2);
+    let n = parents[0].len();
+    // Random simplex weights.
+    let mut lam: Vec<f32> = (0..parents.len()).map(|_| rng.next_f32().max(1e-6)).collect();
+    let s: f32 = lam.iter().sum();
+    lam.iter_mut().for_each(|l| *l /= s);
+    let mut child = vec![0.0f32; n];
+    for (p, &l) in parents.iter().zip(&lam) {
+        for j in 0..n {
+            child[j] += l * p[j];
+        }
+    }
+    child
+}
+
+/// 6. Simple (one-point) crossover.
+pub fn simple_crossover(a: &[f32], b: &[f32], rng: &mut Xoshiro256) -> (Vec<f32>, Vec<f32>) {
+    let n = a.len();
+    let cut = 1 + rng.below_usize(n.max(2) - 1);
+    let mut c1 = a.to_vec();
+    let mut c2 = b.to_vec();
+    for j in cut..n {
+        c1[j] = b[j];
+        c2[j] = a[j];
+    }
+    (c1, c2)
+}
+
+/// 8. Heuristic crossover: step from the worse parent past the better
+/// one — `child = better + r * (better - worse)`.
+pub fn heuristic_crossover(
+    better: &[f32],
+    worse: &[f32],
+    dom: Domain,
+    rng: &mut Xoshiro256,
+) -> Vec<f32> {
+    let r = rng.next_f32();
+    better
+        .iter()
+        .zip(worse)
+        .map(|(&b, &w)| dom.clamp(b + r * (b - w)))
+        .collect()
+}
+
+/// 9. Local-minimum crossover: blend a candidate with one
+/// gradient-refined step from it (rgenoud's BFGS hybrid; the caller
+/// supplies the refined point from the grad artifact / BFGS module).
+pub fn local_minimum_crossover(x: &[f32], refined: &[f32], rng: &mut Xoshiro256) -> Vec<f32> {
+    let t = rng.next_f32();
+    x.iter()
+        .zip(refined)
+        .map(|(&a, &b)| (1.0 - t) * a + t * b)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOM: Domain = Domain { lo: 0.0, hi: 1.0 };
+
+    fn rng() -> Xoshiro256 {
+        Xoshiro256::seed_from_u64(11)
+    }
+
+    fn genome(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 / n as f32) * 0.5 + 0.1).collect()
+    }
+
+    #[test]
+    fn mutations_stay_in_domain_and_change_one_coord() {
+        let mut r = rng();
+        for op in [uniform_mutation, boundary_mutation] {
+            let orig = genome(20);
+            let mut x = orig.clone();
+            op(&mut x, DOM, &mut r);
+            let changed = x.iter().zip(&orig).filter(|(a, b)| a != b).count();
+            assert!(changed <= 1);
+            assert!(x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn nonuniform_decays_with_progress() {
+        let mut r = rng();
+        let orig = genome(50);
+        // Near the end of the run perturbations become tiny.
+        let mut late = orig.clone();
+        whole_nonuniform_mutation(&mut late, DOM, 0.99, &mut r);
+        let late_delta: f32 = late.iter().zip(&orig).map(|(a, b)| (a - b).abs()).sum();
+        let mut early = orig.clone();
+        whole_nonuniform_mutation(&mut early, DOM, 0.0, &mut r);
+        let early_delta: f32 = early.iter().zip(&orig).map(|(a, b)| (a - b).abs()).sum();
+        assert!(late_delta < early_delta / 10.0, "{late_delta} vs {early_delta}");
+    }
+
+    #[test]
+    fn polytope_stays_in_convex_hull() {
+        let mut r = rng();
+        let p1 = vec![0.0f32; 8];
+        let p2 = vec![1.0f32; 8];
+        let p3 = vec![0.5f32; 8];
+        let child = polytope_crossover(&[&p1, &p2, &p3], &mut r);
+        assert!(child.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn simple_crossover_swaps_suffix() {
+        let mut r = rng();
+        let a = vec![0.0f32; 10];
+        let b = vec![1.0f32; 10];
+        let (c1, c2) = simple_crossover(&a, &b, &mut r);
+        // Each child is a prefix of one parent + suffix of the other.
+        let cut = c1.iter().position(|&v| v == 1.0).unwrap();
+        assert!(c1[..cut].iter().all(|&v| v == 0.0));
+        assert!(c1[cut..].iter().all(|&v| v == 1.0));
+        assert!(c2[..cut].iter().all(|&v| v == 1.0));
+        assert!(c2[cut..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn heuristic_moves_past_better_parent() {
+        let mut r = rng();
+        let better = vec![0.6f32; 4];
+        let worse = vec![0.4f32; 4];
+        let c = heuristic_crossover(&better, &worse, DOM, &mut r);
+        assert!(c.iter().all(|&v| v >= 0.6 - 1e-6), "child {c:?} should extrapolate");
+    }
+
+    #[test]
+    fn local_minimum_crossover_interpolates() {
+        let mut r = rng();
+        let x = vec![0.0f32; 4];
+        let refined = vec![1.0f32; 4];
+        let c = local_minimum_crossover(&x, &refined, &mut r);
+        let t = c[0];
+        assert!(c.iter().all(|&v| (v - t).abs() < 1e-6));
+        assert!((0.0..=1.0).contains(&t));
+    }
+}

@@ -1,0 +1,18 @@
+//! The analytics engine — the workloads the paper's Analysts bring to
+//! P2RAC, rebuilt on the three-layer stack: the CATopt cat-bond
+//! basis-risk optimisation (rgenoud-style GA + BFGS over the PJRT
+//! `catopt_fitness`/`catopt_grad` artifacts) and the Monte-Carlo
+//! parameter sweep (`mc_sweep` artifact), plus the virtual-time cost
+//! model that maps their work onto Table-I resources.
+
+pub mod backend;
+pub mod catbond;
+pub mod cost;
+pub mod ga;
+pub mod mc;
+pub mod script;
+
+pub use backend::{FitnessBackend, PjrtBackend, RustBackend};
+pub use catbond::CatBondData;
+pub use cost::{CatoptCost, SweepCost};
+pub use script::P2racEngine;

@@ -1,0 +1,345 @@
+//! The production [`ScriptEngine`]: interprets the JSON task
+//! descriptors that play the role of the Analyst's R scripts and runs
+//! the two paper workloads against the PJRT artifacts (or the pure-Rust
+//! fallback when no artifacts are available, e.g. unit tests).
+//!
+//! Descriptor formats:
+//!
+//! ```json
+//! {"type": "catopt", "pop_size": 200, "max_generations": 50,
+//!  "seed": 42, "bfgs_every": 10, "backend": "pjrt"}
+//! {"type": "mc_sweep", "n_jobs": 512, "att_min": 0.5, "att_max": 8.0,
+//!  "lim_min": 1.0, "lim_max": 12.0, "seed": 7, "backend": "pjrt"}
+//! ```
+
+use super::backend::{PjrtBackend, RustBackend};
+use super::catbond::CatBondData;
+use super::cost::{self, CatoptCost, SweepCost};
+use super::ga::optimizer::{self, GaConfig};
+use super::mc::{self, PjrtSweep, RustSweep, SweepConfig};
+use crate::coordinator::engine::{ResourceView, ScriptEngine, TaskOutput};
+use crate::runtime::Runtime;
+use crate::simcloud::vfs::Vfs;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+/// The engine behind `ec2runoninstance` / `ec2runoncluster`.
+pub struct P2racEngine {
+    runtime: Option<Rc<Runtime>>,
+    pub catopt_cost: CatoptCost,
+    pub sweep_cost: SweepCost,
+}
+
+impl P2racEngine {
+    /// Engine with the PJRT runtime (production path).
+    pub fn with_runtime(rt: Rc<Runtime>) -> Self {
+        Self {
+            runtime: Some(rt),
+            catopt_cost: CatoptCost::default(),
+            sweep_cost: SweepCost::default(),
+        }
+    }
+
+    /// Pure-Rust engine (tests / no artifacts built).
+    pub fn rust_only() -> Self {
+        Self {
+            runtime: None,
+            catopt_cost: CatoptCost::default(),
+            sweep_cost: SweepCost::default(),
+        }
+    }
+
+    fn run_catopt(
+        &mut self,
+        script: &Json,
+        project: &Vfs,
+        project_dir: &str,
+        view: &ResourceView,
+    ) -> Result<TaskOutput> {
+        let data = CatBondData::from_files(|name| {
+            project.read(&format!("{project_dir}/{name}")).map(<[u8]>::to_vec)
+        })?;
+
+        let cfg = GaConfig {
+            pop_size: script.get("pop_size").and_then(Json::as_usize).unwrap_or(200),
+            max_generations: script
+                .get("max_generations")
+                .and_then(Json::as_usize)
+                .unwrap_or(50),
+            wait_generations: script
+                .get("wait_generations")
+                .and_then(Json::as_usize)
+                .unwrap_or(50),
+            bfgs_every: script.get("bfgs_every").and_then(Json::as_usize).unwrap_or(25),
+            seed: script.get("seed").and_then(Json::as_u64).unwrap_or(42),
+            ..GaConfig::default()
+        };
+        if let Some(c) = script.get("candidate_cost_s").and_then(Json::as_f64) {
+            self.catopt_cost.candidate_cost_s = c;
+        }
+
+        let want_pjrt = script.opt_str("backend").as_deref() != Some("rust");
+        let result = match (&self.runtime, want_pjrt) {
+            (Some(rt), true) => {
+                let mut b = PjrtBackend::new(Rc::clone(rt), data)?;
+                optimizer::run(&mut b, &cfg)?
+            }
+            _ => {
+                let mut b = RustBackend::new(data);
+                optimizer::run(&mut b, &cfg)?
+            }
+        };
+
+        // Virtual compute time from the per-generation history.
+        let mut compute_s = 0.0;
+        for h in &result.history {
+            compute_s += cost::catopt_generation_s(h.evaluations, &self.catopt_cost, view);
+            compute_s += cost::catopt_polish_s(h.grad_evaluations, &self.catopt_cost, view);
+        }
+
+        // Result files (paper scenario 1: aggregated on the master).
+        let mut conv = String::from("generation,best_value,mean_value,evaluations\n");
+        for h in &result.history {
+            conv.push_str(&format!(
+                "{},{},{},{}\n",
+                h.generation, h.best_value, h.mean_value, h.evaluations
+            ));
+        }
+        let weights_bin: Vec<u8> = result.best.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let solution = Json::from_pairs(vec![
+            ("best_value", Json::num(result.best_value as f64)),
+            ("generations", Json::num(result.generations_run as f64)),
+            ("total_evaluations", Json::num(result.total_evaluations as f64)),
+            ("weight_sum", Json::num(result.best.iter().sum::<f32>() as f64)),
+            ("compute_s", Json::num(compute_s)),
+        ]);
+        let summary = solution.clone();
+        Ok(TaskOutput {
+            master_files: vec![
+                ("solution.json".into(), solution.to_string_pretty().into_bytes()),
+                ("convergence.csv".into(), conv.into_bytes()),
+                ("weights.bin".into(), weights_bin),
+            ],
+            worker_files: vec![],
+            compute_s,
+            summary,
+        })
+    }
+
+    fn run_sweep(
+        &mut self,
+        script: &Json,
+        view: &ResourceView,
+    ) -> Result<TaskOutput> {
+        let cfg = SweepConfig {
+            n_jobs: script.get("n_jobs").and_then(Json::as_usize).unwrap_or(512),
+            att_range: (
+                script.get("att_min").and_then(Json::as_f64).unwrap_or(0.5) as f32,
+                script.get("att_max").and_then(Json::as_f64).unwrap_or(8.0) as f32,
+            ),
+            lim_range: (
+                script.get("lim_min").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+                script.get("lim_max").and_then(Json::as_f64).unwrap_or(12.0) as f32,
+            ),
+            seed: script.get("seed").and_then(Json::as_u64).unwrap_or(2012),
+        };
+        if let Some(c) = script.get("job_cost_s").and_then(Json::as_f64) {
+            self.sweep_cost.job_cost_s = c;
+        }
+
+        let want_pjrt = script.opt_str("backend").as_deref() != Some("rust");
+        let (results, s, k) = match (&self.runtime, want_pjrt) {
+            (Some(rt), true) => {
+                let s = rt.constant("S")?;
+                let k = rt.constant("K")?;
+                let j = rt.constant("J")?;
+                let mut b = PjrtSweep::new(Rc::clone(rt));
+                (mc::run_sweep(&mut b, &cfg, s, k, j)?, s, k)
+            }
+            _ => (mc::run_sweep(&mut RustSweep, &cfg, 1024, 8, 64)?, 1024, 8),
+        };
+
+        let compute_s = cost::sweep_total_s(cfg.n_jobs, &self.sweep_cost, view);
+
+        // Paper scenario 2/3: per-worker partial results on the workers,
+        // aggregate on the master. On a single node everything lands on
+        // the "master" (the instance itself).
+        let n_workers = view.nodes.len().saturating_sub(1);
+        let mut worker_files = Vec::new();
+        let mut master_csv = String::from("att,limit,mean_recovery,std_recovery\n");
+        for r in &results {
+            master_csv.push_str(&format!(
+                "{},{},{},{}\n",
+                r.att, r.limit, r.mean_recovery, r.std_recovery
+            ));
+        }
+        if n_workers > 0 {
+            for w in 0..n_workers {
+                let mut part = String::from("att,limit,mean_recovery,std_recovery\n");
+                for r in results.iter().skip(w).step_by(n_workers) {
+                    part.push_str(&format!(
+                        "{},{},{},{}\n",
+                        r.att, r.limit, r.mean_recovery, r.std_recovery
+                    ));
+                }
+                worker_files.push((w, format!("part_worker{w}.csv"), part.into_bytes()));
+            }
+        }
+
+        let best = results
+            .iter()
+            .max_by(|a, b| a.mean_recovery.partial_cmp(&b.mean_recovery).unwrap())
+            .ok_or_else(|| anyhow!("empty sweep"))?;
+        let summary = Json::from_pairs(vec![
+            ("n_jobs", Json::num(cfg.n_jobs as f64)),
+            ("samples_per_job", Json::num(s as f64)),
+            ("events_per_year", Json::num(k as f64)),
+            ("best_mean_recovery", Json::num(best.mean_recovery as f64)),
+            ("best_att", Json::num(best.att as f64)),
+            ("best_limit", Json::num(best.limit as f64)),
+            ("compute_s", Json::num(compute_s)),
+        ]);
+        Ok(TaskOutput {
+            master_files: vec![
+                ("sweep.csv".into(), master_csv.into_bytes()),
+                ("summary.json".into(), summary.to_string_pretty().into_bytes()),
+            ],
+            worker_files,
+            compute_s,
+            summary,
+        })
+    }
+}
+
+impl ScriptEngine for P2racEngine {
+    fn run(
+        &mut self,
+        script_name: &str,
+        script: &Json,
+        project: &Vfs,
+        project_dir: &str,
+        resources: &ResourceView,
+    ) -> Result<TaskOutput> {
+        let ty = script
+            .opt_str("type")
+            .ok_or_else(|| anyhow!("script '{script_name}' has no \"type\" field"))?;
+        match ty.as_str() {
+            "catopt" => self.run_catopt(script, project, project_dir, resources),
+            "mc_sweep" => self.run_sweep(script, resources),
+            other => bail!("script '{script_name}': unknown task type '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::NodeSpec;
+    use crate::simcloud::{NetworkModel, SimParams};
+
+    fn view(nodes: usize, cores: usize) -> ResourceView {
+        let ns: Vec<NodeSpec> = (0..nodes)
+            .map(|i| NodeSpec {
+                name: format!("n{i}"),
+                cores,
+                mem_gb: 34.2,
+                core_speed: 0.88,
+            })
+            .collect();
+        ResourceView {
+            assignment: (0..nodes * cores).map(|p| p % nodes).collect(),
+            nodes: ns,
+            net: NetworkModel::new(SimParams::default()),
+            resource_name: "test".into(),
+        }
+    }
+
+    fn catopt_project() -> (Vfs, String) {
+        let mut v = Vfs::new();
+        let data = CatBondData::generate(5, 24, 96);
+        for (name, bytes) in data.to_files() {
+            v.write(&format!("proj/{name}"), bytes);
+        }
+        v.write(
+            "proj/catopt.json",
+            br#"{"type":"catopt","pop_size":16,"max_generations":6,"seed":3,"backend":"rust","bfgs_every":3}"#
+                .to_vec(),
+        );
+        (v, "proj".to_string())
+    }
+
+    #[test]
+    fn catopt_script_runs_and_reports() {
+        let (v, dir) = catopt_project();
+        let mut e = P2racEngine::rust_only();
+        let script = Json::parse(std::str::from_utf8(v.read("proj/catopt.json").unwrap()).unwrap())
+            .unwrap();
+        let out = e.run("catopt.json", &script, &v, &dir, &view(4, 4)).unwrap();
+        assert!(out.compute_s > 0.0);
+        let names: Vec<&str> = out.master_files.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"solution.json"));
+        assert!(names.contains(&"convergence.csv"));
+        assert!(names.contains(&"weights.bin"));
+        assert!(out.summary.get("best_value").is_some());
+    }
+
+    #[test]
+    fn sweep_script_distributes_worker_files() {
+        let mut v = Vfs::new();
+        v.write(
+            "p/sweep.json",
+            br#"{"type":"mc_sweep","n_jobs":32,"seed":1,"backend":"rust"}"#.to_vec(),
+        );
+        let mut e = P2racEngine::rust_only();
+        let script =
+            Json::parse(std::str::from_utf8(v.read("p/sweep.json").unwrap()).unwrap()).unwrap();
+        let out = e.run("sweep.json", &script, &v, "p", &view(5, 4)).unwrap();
+        // 4 workers (5 nodes - master) each get a partial file.
+        assert_eq!(out.worker_files.len(), 4);
+        assert!(out.master_files.iter().any(|(n, _)| n == "sweep.csv"));
+        // Partition covers all jobs exactly once.
+        let total_lines: usize = out
+            .worker_files
+            .iter()
+            .map(|(_, _, b)| std::str::from_utf8(b).unwrap().lines().count() - 1)
+            .sum();
+        assert_eq!(total_lines, 32);
+    }
+
+    #[test]
+    fn cluster_is_faster_than_instance_in_virtual_time() {
+        let (mut v, dir) = catopt_project();
+        // Compute-bound config: bigger population, no master-side BFGS
+        // (which costs the same everywhere and would mask the scaling).
+        v.write(
+            "proj/catopt.json",
+            br#"{"type":"catopt","pop_size":64,"max_generations":6,"seed":3,"backend":"rust","bfgs_every":0}"#
+                .to_vec(),
+        );
+        let script = Json::parse(std::str::from_utf8(v.read("proj/catopt.json").unwrap()).unwrap())
+            .unwrap();
+        let mut e = P2racEngine::rust_only();
+        let t1 = e.run("s", &script, &v, &dir, &view(1, 4)).unwrap().compute_s;
+        let t8 = e.run("s", &script, &v, &dir, &view(8, 4)).unwrap().compute_s;
+        assert!(t8 < t1 / 3.0, "8-node {t8}s vs 1-node {t1}s");
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let mut e = P2racEngine::rust_only();
+        let script = Json::parse(r#"{"type":"quantum"}"#).unwrap();
+        assert!(e.run("x", &script, &Vfs::new(), "p", &view(1, 1)).is_err());
+    }
+
+    #[test]
+    fn missing_data_files_reported() {
+        let mut v = Vfs::new();
+        v.write("p/catopt.json", br#"{"type":"catopt","backend":"rust"}"#.to_vec());
+        let mut e = P2racEngine::rust_only();
+        let script =
+            Json::parse(std::str::from_utf8(v.read("p/catopt.json").unwrap()).unwrap()).unwrap();
+        let err = e.run("catopt.json", &script, &v, "p", &view(1, 1)).unwrap_err();
+        assert!(err.to_string().contains("meta.json"));
+    }
+}

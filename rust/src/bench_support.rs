@@ -1,0 +1,272 @@
+//! Shared harness for the paper-figure benches (`benches/*.rs`).
+//!
+//! No `criterion` exists in the offline vendored set, so the benches are
+//! `harness = false` binaries built on this module: it enumerates the
+//! Table-I resource set, runs the two workloads on each through the full
+//! coordinator, and returns the virtual-time measurements the figures
+//! plot.
+
+use crate::analytics::{CatBondData, P2racEngine};
+use crate::coordinator::{
+    table1_desktops, CreateClusterOpts, CreateInstanceOpts, DesktopSpec, Placement, ResultScope,
+    Session,
+};
+use crate::simcloud::{SimParams, SpanCategory};
+use anyhow::Result;
+
+/// One Table-I resource.
+#[derive(Clone, Debug)]
+pub enum Resource {
+    Desktop(DesktopSpec),
+    Instance { label: String, itype: String },
+    Cluster { label: String, itype: String, nodes: usize },
+}
+
+impl Resource {
+    pub fn label(&self) -> String {
+        match self {
+            Resource::Desktop(d) => d.name.clone(),
+            Resource::Instance { label, .. } | Resource::Cluster { label, .. } => label.clone(),
+        }
+    }
+}
+
+/// The paper's full resource set (Table I rows).
+pub fn table1_resources() -> Vec<Resource> {
+    let mut out: Vec<Resource> = table1_desktops().into_iter().map(Resource::Desktop).collect();
+    out.push(Resource::Instance {
+        label: "Instance A".into(),
+        itype: "m2.2xlarge".into(),
+    });
+    out.push(Resource::Instance {
+        label: "Instance B".into(),
+        itype: "m2.4xlarge".into(),
+    });
+    for (label, nodes) in [("Cluster A", 2), ("Cluster B", 4), ("Cluster C", 8), ("Cluster D", 16)] {
+        out.push(Resource::Cluster {
+            label: label.into(),
+            itype: "m2.2xlarge".into(),
+            nodes,
+        });
+    }
+    out
+}
+
+/// Which workload to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    Catopt,
+    Sweep,
+}
+
+impl Workload {
+    pub fn label(self) -> &'static str {
+        match self {
+            Workload::Catopt => "CATopt",
+            Workload::Sweep => "Parameter sweep",
+        }
+    }
+}
+
+/// A fresh session with the pure-Rust engine (fast, deterministic) and
+/// the given paper-data scale factor for wire-time modelling.
+pub fn bench_session(data_scale: f64) -> Session {
+    let mut params = SimParams::default();
+    params.data_scale = data_scale;
+    Session::new(params, Box::new(P2racEngine::rust_only()))
+}
+
+/// What a bench run is measuring, which changes what the project must
+/// be faithful to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BenchProfile {
+    /// Figs 4–5: the virtual *compute* time matters (paper GA params:
+    /// pop 200 × 50 generations / 512 jobs); the dataset is tiny so the
+    /// real numerics finish quickly.
+    Compute,
+    /// Figs 6–7: the *data volume* on the wire matters (artifact-scale
+    /// ~4.5 MiB table, scaled ×64 to the paper's ~300 MB by
+    /// `SimParams::data_scale`); the GA itself is shortened.
+    Management,
+}
+
+/// Write a bench project for the given workload and profile.
+pub fn write_project(s: &mut Session, dir: &str, wl: Workload, profile: BenchProfile) {
+    match wl {
+        Workload::Catopt => {
+            let (m, e) = match profile {
+                BenchProfile::Compute => (48, 160),
+                BenchProfile::Management => (512, 2048),
+            };
+            let data = CatBondData::generate(7, m, e);
+            for (name, bytes) in data.to_files() {
+                s.analyst.write(&format!("{dir}/{name}"), bytes);
+            }
+            let script = match profile {
+                BenchProfile::Compute => {
+                    r#"{"type":"catopt","pop_size":200,"max_generations":50,"wait_generations":50,"seed":42,"bfgs_every":10,"backend":"rust"}"#
+                }
+                BenchProfile::Management => {
+                    r#"{"type":"catopt","pop_size":16,"max_generations":2,"seed":42,"bfgs_every":0,"backend":"rust"}"#
+                }
+            };
+            s.analyst
+                .write(&format!("{dir}/catopt.json"), script.as_bytes().to_vec());
+        }
+        Workload::Sweep => {
+            s.analyst.write(
+                &format!("{dir}/sweep.json"),
+                br#"{"type":"mc_sweep","n_jobs":512,"seed":2012,"backend":"rust"}"#.to_vec(),
+            );
+            // The paper's sweep project input is ~3 MB.
+            let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(99);
+            let blob: Vec<u8> = (0..3 * 1024 * 1024).map(|_| rng.next_u32() as u8).collect();
+            s.analyst.write(&format!("{dir}/data/params.bin"), blob);
+        }
+    }
+}
+
+fn script_name(wl: Workload) -> &'static str {
+    match wl {
+        Workload::Catopt => "catopt.json",
+        Workload::Sweep => "sweep.json",
+    }
+}
+
+/// Management-time breakdown for one resource (the six bars of
+/// Figs 6–7) plus the compute time (Fig 5).
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    pub create_s: f64,
+    pub submit_master_s: f64,
+    pub submit_all_s: f64,
+    pub compute_s: f64,
+    pub fetch_master_s: f64,
+    pub fetch_all_s: f64,
+    pub terminate_s: f64,
+}
+
+/// Run a workload on a resource end-to-end and collect the breakdown
+/// (compute-profile project).
+pub fn run_on_resource(s: &mut Session, r: &Resource, wl: Workload) -> Result<Breakdown> {
+    run_on_resource_profile(s, r, wl, BenchProfile::Compute)
+}
+
+/// Run with an explicit bench profile.
+pub fn run_on_resource_profile(
+    s: &mut Session,
+    r: &Resource,
+    wl: Workload,
+    profile: BenchProfile,
+) -> Result<Breakdown> {
+    let dir = "bench_proj";
+    if !s.analyst.dir_exists(dir) {
+        write_project(s, dir, wl, profile);
+    }
+    s.cloud.clock.clear_timeline();
+    let script = script_name(wl);
+    match r {
+        Resource::Desktop(d) => {
+            let out = s.run_local(d, dir, script, "bench")?;
+            Ok(Breakdown {
+                compute_s: out.compute_s,
+                ..Breakdown::default()
+            })
+        }
+        Resource::Instance { label, itype } => {
+            s.create_instance(&CreateInstanceOpts {
+                iname: Some(label.clone()),
+                itype: Some(itype.clone()),
+                ..Default::default()
+            })?;
+            s.send_data_to_instance(Some(label), dir)?;
+            let out = s.run_on_instance(Some(label), dir, script, "bench")?;
+            s.get_results_from_instance(Some(label), dir, "bench")?;
+            s.terminate_instance(Some(label), true)?;
+            Ok(read_breakdown(s, out.compute_s))
+        }
+        Resource::Cluster { label, itype, nodes } => {
+            s.create_cluster(&CreateClusterOpts {
+                cname: Some(label.clone()),
+                csize: Some(*nodes),
+                itype: Some(itype.clone()),
+                ..Default::default()
+            })?;
+            s.send_data_to_master(Some(label), dir)?;
+            s.send_data_to_cluster_nodes(Some(label), dir)?;
+            let out = s.run_on_cluster(Some(label), dir, script, "bench", Placement::ByNode)?;
+            s.get_results(Some(label), dir, "bench", ResultScope::FromMaster)?;
+            // fetch-from-all series (scenario 3).
+            s.get_results(Some(label), dir, "bench", ResultScope::FromAll)
+                .ok();
+            s.terminate_cluster(Some(label), true)?;
+            Ok(read_breakdown(s, out.compute_s))
+        }
+    }
+}
+
+fn read_breakdown(s: &Session, compute_s: f64) -> Breakdown {
+    let c = &s.cloud.clock;
+    Breakdown {
+        create_s: c.category_total_s(SpanCategory::CreateResource),
+        submit_master_s: c.category_total_s(SpanCategory::SubmitToMaster),
+        submit_all_s: c.category_total_s(SpanCategory::SubmitToAllNodes),
+        compute_s,
+        fetch_master_s: c.category_total_s(SpanCategory::FetchFromMaster),
+        fetch_all_s: c.category_total_s(SpanCategory::FetchFromAllNodes),
+        terminate_s: c.category_total_s(SpanCategory::TerminateResource),
+    }
+}
+
+/// Pretty row printer shared by the bench binaries.
+pub fn print_row(cols: &[String], widths: &[usize]) {
+    let line: Vec<String> = cols
+        .iter()
+        .zip(widths)
+        .map(|(c, w)| format!("{c:>w$}", w = w))
+        .collect();
+    println!("{}", line.join("  "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resource_set_matches_table1() {
+        let rs = table1_resources();
+        assert_eq!(rs.len(), 8);
+        assert_eq!(rs[0].label(), "Desktop A");
+        assert_eq!(rs[7].label(), "Cluster D");
+    }
+
+    #[test]
+    fn sweep_runs_on_every_resource() {
+        for r in table1_resources() {
+            let mut s = bench_session(1.0);
+            let b = run_on_resource(&mut s, &r, Workload::Sweep).unwrap();
+            assert!(b.compute_s > 0.0, "{}: no compute time", r.label());
+            if matches!(r, Resource::Cluster { .. }) {
+                assert!(b.create_s > 0.0 && b.terminate_s > 0.0);
+                assert!(b.submit_all_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_d_is_fastest_compute() {
+        // Paper Fig 5: the best performance is achieved on Cluster D.
+        let rs = table1_resources();
+        let mut times = Vec::new();
+        for r in &rs {
+            let mut s = bench_session(1.0);
+            let b = run_on_resource(&mut s, r, Workload::Sweep).unwrap();
+            times.push((r.label(), b.compute_s));
+        }
+        let best = times
+            .iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        assert_eq!(best.0, "Cluster D", "fastest was {best:?}");
+    }
+}

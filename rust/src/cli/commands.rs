@@ -1,0 +1,655 @@
+//! Implementations of the 19 paper commands plus three quality-of-life
+//! extras (`mkproject`, `batch`, `report`) needed because the Analyst
+//! "workstation" is itself part of the simulation.
+
+use super::{load_session, make_engine, save_session};
+use crate::analytics::CatBondData;
+use crate::coordinator::{
+    table1_desktops, CreateClusterOpts, CreateInstanceOpts, Placement, ResultScope, Session,
+};
+use crate::simcloud::SpanCategory;
+use crate::util::argparse::{CommandSpec, ParsedArgs};
+use crate::util::humanfmt;
+use anyhow::{anyhow, bail, Result};
+
+/// All commands with their specs, paper-accurate syntax.
+pub fn registry() -> Vec<CommandSpec> {
+    vec![
+        CommandSpec::new("ec2configurep2rac", "initialise a fresh P2RAC session and configuration files"),
+        CommandSpec::new("ec2createinstance", "configure an instance on the cloud")
+            .value_arg("iname", "name of the instance")
+            .value_arg("ebsvol", "EBS volume ID to attach")
+            .value_arg("snap", "EBS snapshot ID to materialise a volume from")
+            .value_arg("type", "EC2 instance type (e.g. m2.4xlarge)")
+            .value_arg("desc", "description of the instance")
+            .exclusive(&["ebsvol", "snap"]),
+        CommandSpec::new("ec2terminateinstance", "safely release an instance")
+            .value_arg("iname", "name of the instance to terminate")
+            .switch_arg("deletevol", "also delete the attached EBS volume"),
+        CommandSpec::new("ec2senddatatoinstance", "synchronise a project directory onto an instance")
+            .value_arg("iname", "target instance")
+            .value_arg("projectdir", "source project directory at the Analyst site"),
+        CommandSpec::new("ec2getresultsfrominstance", "fetch results of a run from an instance")
+            .value_arg("iname", "source instance")
+            .value_arg("projectdir", "project directory at the Analyst site")
+            .required_arg("runname", "name of the run whose results to gather"),
+        CommandSpec::new("ec2runoninstance", "execute a script on an instance (locks it)")
+            .value_arg("iname", "target instance")
+            .value_arg("projectdir", "project directory")
+            .value_arg("rscript", "script to execute from the project directory")
+            .required_arg("runname", "name for this run"),
+        CommandSpec::new("ec2createcluster", "gather and configure a pool of instances as a cluster")
+            .value_arg("cname", "name of the cluster")
+            .value_arg("csize", "cluster size (1 master + workers)")
+            .value_arg("ebsvol", "EBS volume ID to attach to the master")
+            .value_arg("snap", "EBS snapshot ID to materialise a volume from")
+            .value_arg("type", "EC2 instance type")
+            .value_arg("desc", "description of the cluster")
+            .exclusive(&["ebsvol", "snap"]),
+        CommandSpec::new("ec2terminatecluster", "safely release a cluster")
+            .value_arg("cname", "name of the cluster")
+            .switch_arg("deletevol", "also delete the shared EBS volume"),
+        CommandSpec::new("ec2terminateall", "terminate everything on the cloud")
+            .switch_arg("instances", "terminate all instances")
+            .switch_arg("clusters", "terminate all clusters")
+            .switch_arg("ebsvolumes", "delete all EBS volumes")
+            .switch_arg("snapshots", "delete all snapshots"),
+        CommandSpec::new("ec2senddatatoclusternodes", "synchronise a project onto every node of a cluster")
+            .value_arg("cname", "target cluster")
+            .value_arg("projectdir", "source project directory"),
+        CommandSpec::new("ec2senddatatomaster", "synchronise a project onto the master instance only")
+            .value_arg("cname", "target cluster")
+            .value_arg("projectdir", "source project directory"),
+        CommandSpec::new("ec2getresults", "gather results from a cluster")
+            .value_arg("cname", "source cluster")
+            .value_arg("projectdir", "project directory")
+            .required_arg("runname", "run whose results to gather")
+            .switch_arg("frommaster", "scenario 1: results aggregated on the master")
+            .switch_arg("fromworkers", "scenario 2: results on the workers")
+            .switch_arg("fromall", "scenario 3: results on master and workers")
+            .exclusive(&["frommaster", "fromworkers", "fromall"]),
+        CommandSpec::new("ec2runoncluster", "execute a script on a cluster (locks it)")
+            .value_arg("cname", "target cluster")
+            .value_arg("projectdir", "project directory")
+            .value_arg("rscript", "script to execute")
+            .required_arg("runname", "name for this run")
+            .switch_arg("bynode", "round-robin slave placement (default)")
+            .switch_arg("byslot", "fill each node's cores before the next")
+            .exclusive(&["bynode", "byslot"]),
+        CommandSpec::new("ec2listinstances", "list instances created by the Analyst")
+            .switch_arg("names", "names only"),
+        CommandSpec::new("ec2listclusters", "list clusters created by the Analyst")
+            .switch_arg("names", "names only"),
+        CommandSpec::new("ec2listallresources", "list raw cloud resources")
+            .switch_arg("instances", "list instances")
+            .switch_arg("ebsvols", "list EBS volumes")
+            .switch_arg("snapshots", "list snapshots")
+            .switch_arg("amis", "list machine images"),
+        CommandSpec::new("ec2logintoinstance", "open a (simulated) SSH session to an instance")
+            .value_arg("iname", "instance to log in to"),
+        CommandSpec::new("ec2logintocluster", "open a (simulated) SSH session to a cluster master")
+            .value_arg("cname", "cluster whose master to log in to"),
+        CommandSpec::new("ec2resourcelock", "lock or unlock an instance or cluster")
+            .value_arg("iname", "instance name")
+            .value_arg("cname", "cluster name")
+            .switch_arg("free", "unlock the resource")
+            .switch_arg("inuse", "lock the resource")
+            .exclusive(&["iname", "cname"])
+            .exclusive(&["free", "inuse"]),
+        CommandSpec::new("ec2resizecluster", "grow or shrink a running cluster (dynamic scaling)")
+            .value_arg("cname", "cluster to resize")
+            .required_arg("csize", "new cluster size (1 master + workers)"),
+        CommandSpec::new("mkproject", "create an example analytics project at the Analyst site")
+            .value_arg("projectdir", "project directory to create")
+            .value_arg("kind", "catopt | sweep")
+            .value_arg("seed", "dataset seed (default 7)"),
+        CommandSpec::new("batch", "run a file of p2rac commands (batch-mode execution)")
+            .value_arg("file", "command file, one command per line"),
+        CommandSpec::new("report", "show virtual-time, billing and workflow-span report"),
+        CommandSpec::new("desktoprun", "run a script locally on a Table-I desktop (comparison)")
+            .value_arg("desktop", "A | B")
+            .value_arg("projectdir", "project directory")
+            .value_arg("rscript", "script to execute")
+            .required_arg("runname", "name for this run"),
+    ]
+}
+
+pub fn global_help() -> String {
+    let mut s = String::from(
+        "P2RAC — Platform for Parallel R-based Analytics on the Cloud\n\
+         usage: p2rac <command> [args]   (every command supports -h and -v)\n\ncommands:\n",
+    );
+    for c in registry() {
+        s.push_str(&format!("  {:<28} {}\n", c.name, c.about));
+    }
+    s
+}
+
+fn find_spec(name: &str) -> Result<CommandSpec> {
+    registry()
+        .into_iter()
+        .find(|c| c.name == name)
+        .ok_or_else(|| anyhow!("unknown command '{name}'\n\n{}", global_help()))
+}
+
+/// Parse and run one command; returns its stdout text.
+pub fn dispatch(cmd: &str, args: Vec<String>) -> Result<String> {
+    let spec = find_spec(cmd)?;
+    let parsed = spec.parse(args).map_err(|e| anyhow!("{e}\n\n{}", spec.usage()))?;
+    if parsed.help {
+        return Ok(spec.usage());
+    }
+    if parsed.version {
+        return Ok(crate::VERSION.to_string());
+    }
+    run_command(cmd, &parsed)
+}
+
+fn run_command(cmd: &str, p: &ParsedArgs) -> Result<String> {
+    // ec2configurep2rac starts from scratch; everything else loads.
+    if cmd == "ec2configurep2rac" {
+        let s = Session::new(crate::simcloud::SimParams::default(), make_engine());
+        save_session(&s)?;
+        return Ok(format!(
+            "P2RAC configured. Session state: {}\nDefault type: {}, default snapshot: {}",
+            super::session_dir().display(),
+            s.platform.default_type,
+            s.platform.default_snapshot
+        ));
+    }
+    if cmd == "batch" {
+        return run_batch(p.value("file").ok_or_else(|| anyhow!("-file required"))?);
+    }
+
+    let mut s = load_session(make_engine())?;
+    let out = apply(&mut s, cmd, p)?;
+    save_session(&s)?;
+    Ok(out)
+}
+
+/// Batch-mode execution (paper §3.4): commands listed in a script file,
+/// executed without Analyst intervention.
+fn run_batch(file: &str) -> Result<String> {
+    let text = std::fs::read_to_string(file)?;
+    let mut out = String::new();
+    let mut s = load_session(make_engine())?;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace().map(str::to_string);
+        let cmd = parts.next().unwrap();
+        let cmd = cmd.strip_prefix("p2rac").map(str::trim).filter(|c| !c.is_empty())
+            .map(str::to_string)
+            .unwrap_or(cmd);
+        let spec = find_spec(&cmd)?;
+        let parsed = spec
+            .parse(parts.collect::<Vec<_>>())
+            .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+        out.push_str(&format!("$ {line}\n"));
+        out.push_str(&apply(&mut s, &cmd, &parsed)?);
+        out.push('\n');
+    }
+    save_session(&s)?;
+    Ok(out)
+}
+
+/// Execute one already-parsed command against a session.
+pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
+    match cmd {
+        "ec2createinstance" => {
+            let name = s.create_instance(&CreateInstanceOpts {
+                iname: p.value("iname").map(str::to_string),
+                ebsvol: p.value("ebsvol").map(str::to_string),
+                snap: p.value("snap").map(str::to_string),
+                itype: p.value("type").map(str::to_string),
+                desc: p.value("desc").map(str::to_string),
+            })?;
+            let e = s.instances_cfg.get(&name).unwrap();
+            Ok(format!(
+                "created instance '{name}' ({}) dns={} volume={}",
+                e.instance_type,
+                e.public_dns,
+                e.volume_id.as_deref().unwrap_or("-")
+            ))
+        }
+        "ec2terminateinstance" => {
+            s.terminate_instance(p.value("iname"), p.switch("deletevol"))?;
+            Ok("instance terminated".into())
+        }
+        "ec2senddatatoinstance" => {
+            let rep = s.send_data_to_instance(p.value("iname"), project_dir(p))?;
+            Ok(format!(
+                "synchronised {} files ({} on the wire) in {}",
+                rep.files_examined,
+                humanfmt::bytes(rep.wire_bytes()),
+                humanfmt::secs(rep.elapsed_s)
+            ))
+        }
+        "ec2getresultsfrominstance" => {
+            let rep = s.get_results_from_instance(
+                p.value("iname"),
+                project_dir(p),
+                p.value("runname").unwrap(),
+            )?;
+            Ok(format!(
+                "fetched {} result files ({}) in {}",
+                rep.files_sent + rep.files_unchanged,
+                humanfmt::bytes(rep.wire_bytes()),
+                humanfmt::secs(rep.elapsed_s)
+            ))
+        }
+        "ec2runoninstance" => {
+            let rscript = pick_script(s, p)?;
+            let out = s.run_on_instance(
+                p.value("iname"),
+                project_dir(p),
+                &rscript,
+                p.value("runname").unwrap(),
+            )?;
+            Ok(format!(
+                "run complete in {} (virtual)\nsummary: {}",
+                humanfmt::secs(out.compute_s),
+                out.summary
+            ))
+        }
+        "ec2createcluster" => {
+            let name = s.create_cluster(&CreateClusterOpts {
+                cname: p.value("cname").map(str::to_string),
+                csize: p.usize_value("csize")?,
+                ebsvol: p.value("ebsvol").map(str::to_string),
+                snap: p.value("snap").map(str::to_string),
+                itype: p.value("type").map(str::to_string),
+                desc: p.value("desc").map(str::to_string),
+            })?;
+            let e = s.clusters_cfg.get(&name).unwrap();
+            Ok(format!(
+                "created cluster '{name}': {} x {} (1 master + {} workers), volume={}",
+                e.size,
+                e.instance_type,
+                e.worker_ids.len(),
+                e.volume_id.as_deref().unwrap_or("-")
+            ))
+        }
+        "ec2terminatecluster" => {
+            s.terminate_cluster(p.value("cname"), p.switch("deletevol"))?;
+            Ok("cluster terminated".into())
+        }
+        "ec2terminateall" => {
+            let none = !(p.switch("instances")
+                || p.switch("clusters")
+                || p.switch("ebsvolumes")
+                || p.switch("snapshots"));
+            let log = s.terminate_all(
+                p.switch("instances") || none,
+                p.switch("clusters") || none,
+                p.switch("ebsvolumes") || none,
+                p.switch("snapshots") || none,
+            )?;
+            Ok(log.join("\n"))
+        }
+        "ec2senddatatoclusternodes" => {
+            let reps = s.send_data_to_cluster_nodes(p.value("cname"), project_dir(p))?;
+            Ok(format!(
+                "synchronised project to {} nodes ({} each)",
+                reps.len(),
+                humanfmt::bytes(reps[0].wire_bytes())
+            ))
+        }
+        "ec2senddatatomaster" => {
+            let rep = s.send_data_to_master(p.value("cname"), project_dir(p))?;
+            Ok(format!(
+                "synchronised {} files to master ({}) in {}",
+                rep.files_examined,
+                humanfmt::bytes(rep.wire_bytes()),
+                humanfmt::secs(rep.elapsed_s)
+            ))
+        }
+        "ec2getresults" => {
+            let scope = if p.switch("fromworkers") {
+                ResultScope::FromWorkers
+            } else if p.switch("fromall") {
+                ResultScope::FromAll
+            } else {
+                ResultScope::FromMaster // default: scenario 1
+            };
+            let rep = s.get_results(
+                p.value("cname"),
+                project_dir(p),
+                p.value("runname").unwrap(),
+                scope,
+            )?;
+            Ok(format!(
+                "gathered {} result files ({}) in {}",
+                rep.files_sent + rep.files_unchanged,
+                humanfmt::bytes(rep.wire_bytes()),
+                humanfmt::secs(rep.elapsed_s)
+            ))
+        }
+        "ec2runoncluster" => {
+            let rscript = pick_script(s, p)?;
+            let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"));
+            let out = s.run_on_cluster(
+                p.value("cname"),
+                project_dir(p),
+                &rscript,
+                p.value("runname").unwrap(),
+                placement,
+            )?;
+            Ok(format!(
+                "run complete in {} (virtual, {placement:?})\nsummary: {}",
+                humanfmt::secs(out.compute_s),
+                out.summary
+            ))
+        }
+        "ec2resizecluster" => {
+            let size = p
+                .usize_value("csize")?
+                .ok_or_else(|| anyhow!("-csize is required"))?;
+            s.resize_cluster(p.value("cname"), size)?;
+            Ok(format!("cluster resized to {size} nodes"))
+        }
+        "ec2listinstances" => Ok(s.list_instances(p.switch("names")).join("\n")),
+        "ec2listclusters" => Ok(s.list_clusters(p.switch("names")).join("\n")),
+        "ec2listallresources" => {
+            let none = !(p.switch("instances")
+                || p.switch("ebsvols")
+                || p.switch("snapshots")
+                || p.switch("amis"));
+            Ok(s
+                .list_all_resources(
+                    p.switch("instances") || none,
+                    p.switch("ebsvols") || none,
+                    p.switch("snapshots") || none,
+                    p.switch("amis") || none,
+                )
+                .join("\n"))
+        }
+        "ec2logintoinstance" => s.login_banner(p.value("iname"), None),
+        "ec2logintocluster" => {
+            let cname = p
+                .value("cname")
+                .map(str::to_string)
+                .or(s.platform.default_cluster.clone())
+                .ok_or_else(|| anyhow!("no -cname and no default cluster"))?;
+            s.login_banner(None, Some(&cname))
+        }
+        "ec2resourcelock" => {
+            let in_use = if p.switch("inuse") {
+                true
+            } else if p.switch("free") {
+                false
+            } else {
+                bail!("specify -free or -inuse");
+            };
+            if let Some(c) = p.value("cname") {
+                s.set_cluster_lock(c, in_use)?;
+            } else if let Some(i) = p.value("iname") {
+                s.set_instance_lock(i, in_use)?;
+            } else {
+                bail!("specify -iname or -cname");
+            }
+            Ok(format!("resource marked {}", if in_use { "inuse" } else { "free" }))
+        }
+        "mkproject" => {
+            let dir = project_dir(p).to_string();
+            let kind = p.value_or("kind", "sweep");
+            let seed = p
+                .value("seed")
+                .map(|v| v.parse::<u64>())
+                .transpose()
+                .map_err(|_| anyhow!("-seed must be an integer"))?
+                .unwrap_or(7);
+            mkproject(s, &dir, kind, seed)
+        }
+        "desktoprun" => {
+            let which = p.value_or("desktop", "A");
+            let desktops = table1_desktops();
+            let d = desktops
+                .iter()
+                .find(|d| d.name.ends_with(which))
+                .ok_or_else(|| anyhow!("desktop must be A or B"))?;
+            let rscript = pick_script(s, p)?;
+            let out = s.run_local(d, project_dir(p), &rscript, p.value("runname").unwrap())?;
+            Ok(format!(
+                "run complete on {} in {} (virtual)\nsummary: {}",
+                d.name,
+                humanfmt::secs(out.compute_s),
+                out.summary
+            ))
+        }
+        "report" => Ok(report(s)),
+        other => bail!("unhandled command '{other}'"),
+    }
+}
+
+fn project_dir<'a>(p: &'a ParsedArgs) -> &'a str {
+    // Paper: "should the project directory not be specified then the
+    // current working directory at the Analyst site is used".
+    p.value_or("projectdir", "current_project")
+}
+
+/// When `-rscript` is omitted the Analyst is shown the candidates
+/// (paper: "the user is prompted to select from a list").
+fn pick_script(s: &Session, p: &ParsedArgs) -> Result<String> {
+    if let Some(r) = p.value("rscript") {
+        return Ok(r.to_string());
+    }
+    let scripts = s.list_scripts(project_dir(p));
+    match scripts.len() {
+        0 => bail!("no scripts in project directory"),
+        1 => Ok(scripts[0].clone()),
+        _ => bail!(
+            "multiple scripts available, pass -rscript one of: {}",
+            scripts.join(", ")
+        ),
+    }
+}
+
+/// Create an example project on the Analyst site.
+pub fn mkproject(s: &mut Session, dir: &str, kind: &str, seed: u64) -> Result<String> {
+    match kind {
+        "catopt" => {
+            // Scaled dataset matching the AOT artifact shapes.
+            let (m, e) = (512, 2048);
+            let data = CatBondData::generate(seed, m, e);
+            for (name, bytes) in data.to_files() {
+                s.analyst.write(&format!("{dir}/{name}"), bytes);
+            }
+            s.analyst.write(
+                &format!("{dir}/catopt.json"),
+                br#"{"type":"catopt","pop_size":200,"max_generations":50,"seed":42,"bfgs_every":25}"#
+                    .to_vec(),
+            );
+            Ok(format!(
+                "created CATopt project '{dir}' (m={m}, e={e}, {} of loss data)",
+                humanfmt::bytes(data.nbytes())
+            ))
+        }
+        "sweep" => {
+            s.analyst.write(
+                &format!("{dir}/sweep.json"),
+                br#"{"type":"mc_sweep","n_jobs":512,"att_min":0.5,"att_max":8.0,"lim_min":1.0,"lim_max":12.0,"seed":2012}"#
+                    .to_vec(),
+            );
+            s.analyst
+                .write(&format!("{dir}/data/params_note.txt"), b"parameter sweep project".to_vec());
+            Ok(format!("created parameter-sweep project '{dir}'"))
+        }
+        other => bail!("unknown project kind '{other}' (catopt | sweep)"),
+    }
+}
+
+/// Virtual-time + billing report.
+pub fn report(s: &Session) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "virtual time elapsed: {}\n",
+        humanfmt::secs(s.cloud.clock.now_s())
+    ));
+    out.push_str(&format!(
+        "billed so far: ${:.2} ({} line items)\n",
+        s.cloud.ledger.total_dollars(),
+        s.cloud.ledger.items().len()
+    ));
+    let cats = [
+        (SpanCategory::CreateResource, "create resources"),
+        (SpanCategory::SubmitToMaster, "submit to instance/master"),
+        (SpanCategory::SubmitToAllNodes, "submit to all nodes"),
+        (SpanCategory::Compute, "compute"),
+        (SpanCategory::FetchFromMaster, "fetch from instance/master"),
+        (SpanCategory::FetchFromAllNodes, "fetch from all nodes"),
+        (SpanCategory::TerminateResource, "terminate resources"),
+    ];
+    out.push_str("time by category (this invocation):\n");
+    for (c, label) in cats {
+        let t = s.cloud.clock.category_total_s(c);
+        if t > 0.0 {
+            out.push_str(&format!("  {:<28} {}\n", label, humanfmt::secs(t)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockEngine;
+    use crate::simcloud::SimParams;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(100.0)))
+    }
+
+    fn run(s: &mut Session, cmd: &str, args: &[&str]) -> Result<String> {
+        let spec = registry().into_iter().find(|c| c.name == cmd).unwrap();
+        let p = spec.parse(args.iter().map(|a| a.to_string())).unwrap();
+        apply(s, cmd, &p)
+    }
+
+    #[test]
+    fn full_cli_cluster_workflow() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let out = run(
+            &mut s,
+            "ec2createcluster",
+            &["-cname", "hpc_cluster", "-csize", "4", "-type", "m2.2xlarge"],
+        )
+        .unwrap();
+        assert!(out.contains("hpc_cluster"));
+        run(&mut s, "ec2senddatatoclusternodes", &["-cname", "hpc_cluster", "-projectdir", "proj"])
+            .unwrap();
+        let out = run(
+            &mut s,
+            "ec2runoncluster",
+            &["-cname", "hpc_cluster", "-projectdir", "proj", "-rscript", "sweep.json", "-runname", "r1", "-bynode"],
+        )
+        .unwrap();
+        assert!(out.contains("run complete"));
+        run(
+            &mut s,
+            "ec2getresults",
+            &["-cname", "hpc_cluster", "-projectdir", "proj", "-runname", "r1", "-frommaster"],
+        )
+        .unwrap();
+        let listing = run(&mut s, "ec2listclusters", &[]).unwrap();
+        assert!(listing.contains("hpc_cluster"));
+        let rep = report(&s);
+        assert!(rep.contains("virtual time"));
+        run(&mut s, "ec2terminatecluster", &["-cname", "hpc_cluster"]).unwrap();
+        assert!(s.clusters_cfg.names().is_empty());
+    }
+
+    #[test]
+    fn mkproject_catopt_writes_dataset() {
+        let mut s = session();
+        let out = run(&mut s, "mkproject", &["-projectdir", "cp", "-kind", "catopt"]).unwrap();
+        assert!(out.contains("CATopt"));
+        assert!(s.analyst.exists("cp/catopt.json"));
+        assert!(s.analyst.exists("cp/data/industry_losses.bin"));
+        assert!(s.analyst.dir_size("cp") > 1_000_000);
+    }
+
+    #[test]
+    fn pick_script_prompts_on_ambiguity() {
+        let mut s = session();
+        s.analyst.write("p/a.json", b"{}".to_vec());
+        s.analyst.write("p/b.json", b"{}".to_vec());
+        let spec = registry().into_iter().find(|c| c.name == "ec2runoninstance").unwrap();
+        let p = spec
+            .parse(["-projectdir", "p", "-runname", "r"].map(String::from))
+            .unwrap();
+        let err = pick_script(&s, &p).unwrap_err();
+        assert!(err.to_string().contains("a.json"));
+    }
+
+    #[test]
+    fn resourcelock_requires_target_and_mode() {
+        let mut s = session();
+        run(&mut s, "ec2createinstance", &["-iname", "i1"]).unwrap();
+        assert!(run(&mut s, "ec2resourcelock", &["-iname", "i1"]).is_err());
+        run(&mut s, "ec2resourcelock", &["-iname", "i1", "-inuse"]).unwrap();
+        assert!(s.instances_cfg.get("i1").unwrap().in_use);
+        run(&mut s, "ec2resourcelock", &["-iname", "i1", "-free"]).unwrap();
+        assert!(!s.instances_cfg.get("i1").unwrap().in_use);
+    }
+
+    #[test]
+    fn global_help_lists_all_paper_commands() {
+        let h = global_help();
+        for c in [
+            "ec2createinstance",
+            "ec2terminateinstance",
+            "ec2senddatatoinstance",
+            "ec2getresultsfrominstance",
+            "ec2runoninstance",
+            "ec2createcluster",
+            "ec2terminatecluster",
+            "ec2terminateall",
+            "ec2senddatatoclusternodes",
+            "ec2senddatatomaster",
+            "ec2getresults",
+            "ec2runoncluster",
+            "ec2listinstances",
+            "ec2listclusters",
+            "ec2listallresources",
+            "ec2logintoinstance",
+            "ec2logintocluster",
+            "ec2resourcelock",
+            "ec2configurep2rac",
+        ] {
+            assert!(h.contains(c), "help missing {c}");
+        }
+    }
+
+    #[test]
+    fn session_json_roundtrip_preserves_state() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        run(&mut s, "ec2createinstance", &["-iname", "i1", "-type", "m2.4xlarge"]).unwrap();
+        run(&mut s, "ec2senddatatoinstance", &["-iname", "i1", "-projectdir", "proj"]).unwrap();
+        let j = s.to_json();
+        let s2 = Session::from_json(
+            SimParams::default(),
+            Box::new(MockEngine::new(100.0)),
+            &j,
+        )
+        .unwrap();
+        assert!(s2.instances_cfg.contains("i1"));
+        assert_eq!(s2.cloud.clock.now_s(), s.cloud.clock.now_s());
+        let id = s2.instances_cfg.get("i1").unwrap().instance_id.clone();
+        let inst = s2.cloud.instance(&id).unwrap();
+        assert!(inst.fs.exists("root/proj/sweep.json"));
+        assert_eq!(
+            inst.attached_volume,
+            s.cloud.instance(&id).unwrap().attached_volume
+        );
+        // New resources after restore get fresh ids.
+        let mut s3 = s2;
+        run(&mut s3, "ec2createinstance", &["-iname", "i2"]).unwrap();
+        let id2 = s3.instances_cfg.get("i2").unwrap().instance_id.clone();
+        assert_ne!(id, id2);
+    }
+}

@@ -1,0 +1,98 @@
+//! The P2RAC command-line interface — every tool from the paper's §3 as
+//! a subcommand of the `p2rac` binary, with the session (simulated
+//! cloud + Analyst site) persisted between invocations under
+//! `$P2RAC_HOME` (default `./.p2rac_session`), so the workflows of
+//! Figs 2–3 replay exactly as printed in the paper:
+//!
+//! ```text
+//! p2rac ec2configurep2rac
+//! p2rac mkproject -projectdir catopt_proj -kind catopt
+//! p2rac ec2createcluster -cname hpc_cluster -csize 4 -type m2.2xlarge
+//! p2rac ec2senddatatoclusternodes -cname hpc_cluster -projectdir catopt_proj
+//! p2rac ec2runoncluster -cname hpc_cluster -projectdir catopt_proj \
+//!       -rscript catopt.json -runname trial1 -bynode
+//! p2rac ec2getresults -cname hpc_cluster -projectdir catopt_proj \
+//!       -runname trial1 -frommaster
+//! p2rac ec2terminatecluster -cname hpc_cluster
+//! ```
+
+pub mod commands;
+
+use crate::analytics::P2racEngine;
+use crate::coordinator::{ScriptEngine, Session};
+use crate::runtime::Runtime;
+use crate::simcloud::SimParams;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// Where the persisted session lives.
+pub fn session_dir() -> PathBuf {
+    std::env::var("P2RAC_HOME")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(".p2rac_session"))
+}
+
+fn session_path() -> PathBuf {
+    session_dir().join("session.json")
+}
+
+/// Build the production engine: PJRT artifacts when present, otherwise
+/// the pure-Rust fallback (still a complete implementation).
+pub fn make_engine() -> Box<dyn ScriptEngine> {
+    let dir = std::env::var("P2RAC_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    if dir.join("manifest.json").exists() {
+        match Runtime::load(&dir) {
+            Ok(rt) => return Box::new(P2racEngine::with_runtime(Rc::new(rt))),
+            Err(e) => {
+                crate::log_warn!("artifacts unusable ({e:#}); falling back to rust backend");
+            }
+        }
+    }
+    Box::new(P2racEngine::rust_only())
+}
+
+/// Load the persisted session, or create a fresh one.
+pub fn load_session(engine: Box<dyn ScriptEngine>) -> Result<Session> {
+    let path = session_path();
+    if path.exists() {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt session: {e}"))?;
+        Session::from_json(SimParams::default(), engine, &j)
+    } else {
+        Ok(Session::new(SimParams::default(), engine))
+    }
+}
+
+/// Persist the session.
+pub fn save_session(session: &Session) -> Result<()> {
+    let dir = session_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(session_path(), session.to_json().to_string_compact())
+        .with_context(|| format!("writing {}", session_path().display()))
+}
+
+/// Entry point used by `main.rs`; returns the process exit code.
+pub fn main_entry(args: Vec<String>) -> i32 {
+    crate::util::logger::init();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", commands::global_help());
+        return 2;
+    };
+    match commands::dispatch(cmd, rest.to_vec()) {
+        Ok(output) => {
+            if !output.is_empty() {
+                println!("{output}");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("p2rac: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Cluster registry config file (paper §3.4, file 3): per-cluster name,
+//! size, public DNS of master and workers, shared EBS volume id,
+//! description, and the in-use flag that guards `ec2terminatecluster`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterEntry {
+    /// Total node count (1 master + n-1 workers).
+    pub size: usize,
+    pub master_id: String,
+    pub master_dns: String,
+    pub worker_ids: Vec<String>,
+    pub worker_dns: Vec<String>,
+    /// EBS volume attached to the master and NFS-shared to workers.
+    pub volume_id: Option<String>,
+    pub instance_type: String,
+    pub description: String,
+    pub in_use: bool,
+}
+
+impl ClusterEntry {
+    pub fn all_ids(&self) -> Vec<String> {
+        let mut v = vec![self.master_id.clone()];
+        v.extend(self.worker_ids.iter().cloned());
+        v
+    }
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClustersConfig {
+    pub entries: BTreeMap<String, ClusterEntry>,
+}
+
+impl ClustersConfig {
+    pub fn insert(&mut self, name: &str, e: ClusterEntry) {
+        self.entries.insert(name.to_string(), e);
+    }
+    pub fn remove(&mut self, name: &str) -> Option<ClusterEntry> {
+        self.entries.remove(name)
+    }
+    pub fn get(&self, name: &str) -> Option<&ClusterEntry> {
+        self.entries.get(name)
+    }
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut ClusterEntry> {
+        self.entries.get_mut(name)
+    }
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        for (name, e) in &self.entries {
+            let mut j = Json::obj();
+            j.set("size", Json::num(e.size as f64));
+            j.set("master_id", Json::str(&e.master_id));
+            j.set("master_dns", Json::str(&e.master_dns));
+            j.set("worker_ids", Json::arr_str(e.worker_ids.clone()));
+            j.set("worker_dns", Json::arr_str(e.worker_dns.clone()));
+            j.set(
+                "volume_id",
+                e.volume_id.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            j.set("instance_type", Json::str(&e.instance_type));
+            j.set("description", Json::str(&e.description));
+            j.set("in_use", Json::Bool(e.in_use));
+            root.set(name, j);
+        }
+        root
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut cfg = Self::default();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("clusters config must be an object"))?;
+        for (name, e) in obj {
+            let strs = |key: &str| -> anyhow::Result<Vec<String>> {
+                e.get(key)
+                    .and_then(|v| v.as_arr())
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|x| x.as_str().map(str::to_string))
+                            .collect()
+                    })
+                    .ok_or_else(|| anyhow::anyhow!("missing array field '{key}'"))
+            };
+            cfg.entries.insert(
+                name.clone(),
+                ClusterEntry {
+                    size: e.req_u64("size")? as usize,
+                    master_id: e.req_str("master_id")?,
+                    master_dns: e.req_str("master_dns")?,
+                    worker_ids: strs("worker_ids")?,
+                    worker_dns: strs("worker_dns")?,
+                    volume_id: e.opt_str("volume_id"),
+                    instance_type: e.req_str("instance_type")?,
+                    description: e.req_str("description")?,
+                    in_use: e.opt_bool("in_use", false),
+                },
+            );
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(n: usize) -> ClusterEntry {
+        ClusterEntry {
+            size: n,
+            master_id: "i-m".into(),
+            master_dns: "master.dns".into(),
+            worker_ids: (1..n).map(|i| format!("i-w{i}")).collect(),
+            worker_dns: (1..n).map(|i| format!("w{i}.dns")).collect(),
+            volume_id: Some("vol-1".into()),
+            instance_type: "m2.2xlarge".into(),
+            description: "hpc".into(),
+            in_use: true,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = ClustersConfig::default();
+        c.insert("hpc_cluster", entry(4));
+        let back =
+            ClustersConfig::from_json(&Json::parse(&c.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.get("hpc_cluster").unwrap().worker_ids.len(), 3);
+    }
+
+    #[test]
+    fn all_ids_master_first() {
+        let e = entry(3);
+        assert_eq!(e.all_ids(), vec!["i-m", "i-w1", "i-w2"]);
+    }
+}

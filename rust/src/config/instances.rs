@@ -1,0 +1,122 @@
+//! Instance registry config file (paper §3.4, file 2): one section per
+//! created instance with its public DNS, volume, description and in-use
+//! flag. `ec2createinstance` appends a section; `ec2terminateinstance`
+//! removes it.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstanceEntry {
+    /// Cloud-side instance id.
+    pub instance_id: String,
+    pub public_dns: String,
+    /// Attached EBS volume, if any.
+    pub volume_id: Option<String>,
+    pub instance_type: String,
+    pub description: String,
+    pub in_use: bool,
+}
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct InstancesConfig {
+    /// Analyst-facing name → entry.
+    pub entries: BTreeMap<String, InstanceEntry>,
+}
+
+impl InstancesConfig {
+    pub fn insert(&mut self, name: &str, e: InstanceEntry) {
+        self.entries.insert(name.to_string(), e);
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<InstanceEntry> {
+        self.entries.remove(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&InstanceEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        for (name, e) in &self.entries {
+            let mut j = Json::obj();
+            j.set("instance_id", Json::str(&e.instance_id));
+            j.set("public_dns", Json::str(&e.public_dns));
+            j.set(
+                "volume_id",
+                e.volume_id.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            j.set("instance_type", Json::str(&e.instance_type));
+            j.set("description", Json::str(&e.description));
+            j.set("in_use", Json::Bool(e.in_use));
+            root.set(name, j);
+        }
+        root
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut cfg = Self::default();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("instances config must be an object"))?;
+        for (name, e) in obj {
+            cfg.entries.insert(
+                name.clone(),
+                InstanceEntry {
+                    instance_id: e.req_str("instance_id")?,
+                    public_dns: e.req_str("public_dns")?,
+                    volume_id: e.opt_str("volume_id"),
+                    instance_type: e.req_str("instance_type")?,
+                    description: e.req_str("description")?,
+                    in_use: e.opt_bool("in_use", false),
+                },
+            );
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry() -> InstanceEntry {
+        InstanceEntry {
+            instance_id: "i-0abc".into(),
+            public_dns: "ec2-1-2-3-4.us-east-1.compute.amazonaws.com".into(),
+            volume_id: Some("vol-0def".into()),
+            instance_type: "m2.4xlarge".into(),
+            description: "For Trial Simulation Run".into(),
+            in_use: false,
+        }
+    }
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut c = InstancesConfig::default();
+        c.insert("hpc_instance", entry());
+        assert!(c.contains("hpc_instance"));
+        let j = c.to_json();
+        let back = InstancesConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert!(back.get("hpc_instance").unwrap().volume_id.is_some());
+    }
+
+    #[test]
+    fn remove_deletes_section() {
+        let mut c = InstancesConfig::default();
+        c.insert("a", entry());
+        assert!(c.remove("a").is_some());
+        assert!(c.remove("a").is_none());
+        assert!(c.names().is_empty());
+    }
+}

@@ -1,0 +1,28 @@
+//! The four Analyst-site configuration files (paper §3.4):
+//!
+//! 1. [`PlatformConfig`] — variables required by the command-line tools:
+//!    defaults (AMI, snapshot, instance type, cluster size), region and
+//!    access-key references.
+//! 2. [`InstancesConfig`] — registry of created instances (name, public
+//!    DNS, volume id, description, in-use flag).
+//! 3. [`ClustersConfig`] — registry of created clusters (name, size,
+//!    DNS of master and workers, shared volume id, description, in-use).
+//! 4. [`RLibsConfig`] — R library packages installed on instances at
+//!    creation, on top of the base AMI.
+//!
+//! All four serialise to stable pretty JSON via `util::json` and are
+//! kept on the Analyst-site [`Vfs`](crate::simcloud::Vfs) under
+//! `.p2rac/`, exactly where the paper's tools keep them.
+
+pub mod clusters;
+pub mod instances;
+pub mod platform;
+pub mod rlibs;
+
+pub use clusters::{ClusterEntry, ClustersConfig};
+pub use instances::{InstanceEntry, InstancesConfig};
+pub use platform::PlatformConfig;
+pub use rlibs::RLibsConfig;
+
+/// Where the config files live on the Analyst site.
+pub const CONFIG_DIR: &str = ".p2rac";

@@ -1,0 +1,102 @@
+//! Platform configuration file: tool-wide defaults and account
+//! references (paper §3.4, file 1).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlatformConfig {
+    /// Default AMI id used when `ec2createinstance` gets no override.
+    pub default_ami: String,
+    /// Default EBS snapshot materialised when neither `-ebsvol` nor
+    /// `-snap` is given.
+    pub default_snapshot: String,
+    /// Default EC2 instance type.
+    pub default_type: String,
+    /// Default cluster size for `ec2createcluster`.
+    pub default_cluster_size: usize,
+    /// Region (informational in the simulation).
+    pub region: String,
+    /// Reference to the AWS access-key pair (never the secret itself).
+    pub access_key_ref: String,
+    /// Default instance / cluster to use when `-iname`/`-cname` is
+    /// omitted (updated by the create commands).
+    pub default_instance: Option<String>,
+    pub default_cluster: Option<String>,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self {
+            default_ami: String::new(),
+            default_snapshot: String::new(),
+            default_type: "m2.2xlarge".to_string(),
+            default_cluster_size: 4,
+            region: "us-east-1".to_string(),
+            access_key_ref: "~/.aws/p2rac-keypair".to_string(),
+            default_instance: None,
+            default_cluster: None,
+        }
+    }
+}
+
+impl PlatformConfig {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("default_ami", Json::str(&self.default_ami));
+        j.set("default_snapshot", Json::str(&self.default_snapshot));
+        j.set("default_type", Json::str(&self.default_type));
+        j.set("default_cluster_size", Json::num(self.default_cluster_size as f64));
+        j.set("region", Json::str(&self.region));
+        j.set("access_key_ref", Json::str(&self.access_key_ref));
+        j.set(
+            "default_instance",
+            self.default_instance
+                .as_ref()
+                .map(Json::str)
+                .unwrap_or(Json::Null),
+        );
+        j.set(
+            "default_cluster",
+            self.default_cluster
+                .as_ref()
+                .map(Json::str)
+                .unwrap_or(Json::Null),
+        );
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            default_ami: j.req_str("default_ami")?,
+            default_snapshot: j.req_str("default_snapshot")?,
+            default_type: j.req_str("default_type")?,
+            default_cluster_size: j.req_u64("default_cluster_size")? as usize,
+            region: j.req_str("region")?,
+            access_key_ref: j.req_str("access_key_ref")?,
+            default_instance: j.opt_str("default_instance"),
+            default_cluster: j.opt_str("default_cluster"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut c = PlatformConfig::default();
+        c.default_ami = "ami-abc".into();
+        c.default_instance = Some("hpc_instance".into());
+        let j = c.to_json();
+        let back = PlatformConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn null_defaults_roundtrip() {
+        let c = PlatformConfig::default();
+        let back = PlatformConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.default_instance, None);
+    }
+}

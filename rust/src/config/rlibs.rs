@@ -1,0 +1,51 @@
+//! R-library manifest config file (paper §3.4, file 4): packages an
+//! Analyst's project needs beyond the base AMI. Installed on every
+//! instance of a cluster at creation time.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RLibsConfig {
+    pub libraries: Vec<String>,
+}
+
+impl RLibsConfig {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("libraries", Json::arr_str(self.libraries.clone()));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let libs = j
+            .get("libraries")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("rlibs config needs a 'libraries' array"))?;
+        Ok(Self {
+            libraries: libs
+                .iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let c = RLibsConfig {
+            libraries: vec!["rgenoud".into(), "snow".into(), "quantmod".into()],
+        };
+        let back = RLibsConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn empty_list_ok() {
+        let c = RLibsConfig::default();
+        assert_eq!(RLibsConfig::from_json(&c.to_json()).unwrap(), c);
+    }
+}

@@ -1,0 +1,142 @@
+//! The execution-manager ↔ analytics boundary.
+//!
+//! The paper's platform runs opaque "R scripts"; here a script is a JSON
+//! task descriptor in the project directory (e.g. `catopt.json`,
+//! `sweep.json`) and a [`ScriptEngine`] is the interpreter that executes
+//! it. The `analytics` module provides the production engine (rgenoud
+//! GA + Monte-Carlo sweep over the PJRT artifacts); tests plug in mocks.
+
+use super::scheduler::NodeSpec;
+use crate::simcloud::network::NetworkModel;
+use crate::simcloud::vfs::Vfs;
+use crate::util::json::Json;
+
+/// Everything the engine may use about the resource it runs on.
+#[derive(Clone, Debug)]
+pub struct ResourceView {
+    /// Nodes of the cluster (or the single instance / desktop).
+    pub nodes: Vec<NodeSpec>,
+    /// Node index of each slave process (from the scheduler).
+    pub assignment: Vec<usize>,
+    /// Network model for pricing collective communication.
+    pub net: NetworkModel,
+    /// Human-readable resource name ("hpc_cluster", "Desktop A", …).
+    pub resource_name: String,
+}
+
+impl ResourceView {
+    /// Total compute power in Desktop-A-core-equivalents.
+    pub fn total_power(&self) -> f64 {
+        self.nodes.iter().map(NodeSpec::power).sum()
+    }
+
+    /// Number of slave processes.
+    pub fn nproc(&self) -> usize {
+        self.assignment.len()
+    }
+}
+
+/// Files produced by a run plus the virtual compute time it took.
+#[derive(Clone, Debug, Default)]
+pub struct TaskOutput {
+    /// Files for the master's `results/<runname>/` directory
+    /// (path-relative, bytes).
+    pub master_files: Vec<(String, Vec<u8>)>,
+    /// Files produced on individual workers
+    /// `(worker_index, rel_path, bytes)` — the paper's scenario 2/3.
+    pub worker_files: Vec<(usize, String, Vec<u8>)>,
+    /// Modelled compute duration (virtual seconds) of the whole run.
+    pub compute_s: f64,
+    /// Machine-readable run summary (logged and used by benches).
+    pub summary: Json,
+}
+
+/// A script interpreter. `project` is the project directory *as it
+/// exists on the resource* (post-sync), `project_dir` its path within
+/// that vfs.
+pub trait ScriptEngine {
+    fn run(
+        &mut self,
+        script_name: &str,
+        script: &Json,
+        project: &Vfs,
+        project_dir: &str,
+        resources: &ResourceView,
+    ) -> anyhow::Result<TaskOutput>;
+}
+
+/// Test/bench engine: records invocations, emits a fixed result file
+/// and a compute time inversely proportional to total power (perfect
+/// scaling), so coordinator behaviour can be tested in isolation.
+pub struct MockEngine {
+    /// Serial work the mock pretends the script costs, in
+    /// Desktop-A-core-seconds.
+    pub work_units: f64,
+    pub calls: Vec<String>,
+}
+
+impl MockEngine {
+    pub fn new(work_units: f64) -> Self {
+        Self {
+            work_units,
+            calls: Vec::new(),
+        }
+    }
+}
+
+impl ScriptEngine for MockEngine {
+    fn run(
+        &mut self,
+        script_name: &str,
+        _script: &Json,
+        _project: &Vfs,
+        _project_dir: &str,
+        resources: &ResourceView,
+    ) -> anyhow::Result<TaskOutput> {
+        self.calls.push(format!(
+            "{script_name}@{}x{}",
+            resources.resource_name,
+            resources.nproc()
+        ));
+        let compute_s = self.work_units / resources.total_power().max(1e-9);
+        Ok(TaskOutput {
+            master_files: vec![(
+                "summary.json".to_string(),
+                Json::from_pairs(vec![("ok", Json::Bool(true))])
+                    .to_string_pretty()
+                    .into_bytes(),
+            )],
+            worker_files: vec![],
+            compute_s,
+            summary: Json::from_pairs(vec![("compute_s", Json::num(compute_s))]),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcloud::SimParams;
+
+    #[test]
+    fn mock_engine_scales_with_power() {
+        let mk = |n: usize| ResourceView {
+            nodes: (0..n)
+                .map(|i| NodeSpec {
+                    name: format!("n{i}"),
+                    cores: 4,
+                    mem_gb: 34.2,
+                    core_speed: 1.0,
+                })
+                .collect(),
+            assignment: (0..n * 4).map(|p| p % n).collect(),
+            net: NetworkModel::new(SimParams::default()),
+            resource_name: format!("cluster{n}"),
+        };
+        let mut e = MockEngine::new(1000.0);
+        let t1 = e.run("s", &Json::Null, &Vfs::new(), "p", &mk(1)).unwrap();
+        let t4 = e.run("s", &Json::Null, &Vfs::new(), "p", &mk(4)).unwrap();
+        assert!((t1.compute_s / t4.compute_s - 4.0).abs() < 1e-9);
+        assert_eq!(e.calls.len(), 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! The P2RAC coordinator — the paper's platform contribution (§2–§3):
+//! resource management, data management and execution management between
+//! the Analyst site and the cloud, plus the bynode/byslot scheduler and
+//! the script-engine boundary the analytics layer plugs into.
+
+pub mod engine;
+pub mod scheduler;
+pub mod session;
+
+pub use engine::{MockEngine, ResourceView, ScriptEngine, TaskOutput};
+pub use scheduler::{feasible, min_mem_per_process_gb, schedule, NodeSpec, Placement};
+pub use session::{
+    table1_desktops, CreateClusterOpts, CreateInstanceOpts, DesktopSpec, ResultScope, Session,
+};

@@ -1,0 +1,230 @@
+//! Slave-process placement (paper §3.2.2, `ec2runoncluster -bynode |
+//! -byslot`).
+//!
+//! `byslot` is MPI's default: fill every core of node 0, then node 1, …
+//! `bynode` (P2RAC's default) round-robins processes across nodes so
+//! each process sees the largest memory share — "required to meet the
+//! memory constraints of large processes".
+
+/// Compute capability of one node as seen by the scheduler.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    pub cores: usize,
+    pub mem_gb: f64,
+    /// Per-core speed relative to Desktop A = 1.0.
+    pub core_speed: f64,
+}
+
+impl NodeSpec {
+    pub fn power(&self) -> f64 {
+        self.cores as f64 * self.core_speed
+    }
+}
+
+/// Placement policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Placement {
+    /// Round-robin across nodes (P2RAC default).
+    ByNode,
+    /// Fill a node's cores before moving on (MPI default).
+    BySlot,
+}
+
+impl Placement {
+    pub fn parse(bynode: bool, byslot: bool) -> Placement {
+        // bynode is the default when neither switch is given (§3.2.2).
+        if byslot && !bynode {
+            Placement::BySlot
+        } else {
+            Placement::ByNode
+        }
+    }
+}
+
+/// Assign `nproc` slave processes to nodes; returns the node index of
+/// each process. Processes beyond the total core count wrap around
+/// (oversubscription), matching MPI slot semantics.
+pub fn schedule(nproc: usize, nodes: &[NodeSpec], placement: Placement) -> Vec<usize> {
+    assert!(!nodes.is_empty(), "schedule over zero nodes");
+    let total_slots: usize = nodes.iter().map(|n| n.cores).sum();
+    let mut out = Vec::with_capacity(nproc);
+    match placement {
+        Placement::ByNode => {
+            // Round-robin, skipping nodes whose cores are all taken in
+            // the current pass; wraps when all slots are used.
+            let mut used = vec![0usize; nodes.len()];
+            let mut node = 0usize;
+            for p in 0..nproc {
+                if p % total_slots == 0 && p > 0 {
+                    used.iter_mut().for_each(|u| *u = 0);
+                }
+                // Advance to next node with free cores this pass.
+                let mut hops = 0;
+                while used[node] >= nodes[node].cores && hops <= nodes.len() {
+                    node = (node + 1) % nodes.len();
+                    hops += 1;
+                }
+                out.push(node);
+                used[node] += 1;
+                node = (node + 1) % nodes.len();
+            }
+        }
+        Placement::BySlot => {
+            for p in 0..nproc {
+                let mut slot = p % total_slots;
+                let mut node = 0;
+                while slot >= nodes[node].cores {
+                    slot -= nodes[node].cores;
+                    node += 1;
+                }
+                out.push(node);
+            }
+        }
+    }
+    out
+}
+
+/// Per-process memory share under an assignment: the binding constraint
+/// is the node hosting the most processes relative to its memory.
+pub fn min_mem_per_process_gb(assignment: &[usize], nodes: &[NodeSpec]) -> f64 {
+    let mut counts = vec![0usize; nodes.len()];
+    for &n in assignment {
+        counts[n] += 1;
+    }
+    nodes
+        .iter()
+        .zip(&counts)
+        .filter(|(_, &c)| c > 0)
+        .map(|(node, &c)| node.mem_gb / c as f64)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Can `nproc` processes each needing `mem_gb_per_proc` run under this
+/// placement?
+pub fn feasible(
+    nproc: usize,
+    mem_gb_per_proc: f64,
+    nodes: &[NodeSpec],
+    placement: Placement,
+) -> bool {
+    if nproc == 0 {
+        return true;
+    }
+    let a = schedule(nproc, nodes, placement);
+    min_mem_per_process_gb(&a, nodes) >= mem_gb_per_proc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn nodes(n: usize, cores: usize, mem: f64) -> Vec<NodeSpec> {
+        (0..n)
+            .map(|i| NodeSpec {
+                name: format!("node{i}"),
+                cores,
+                mem_gb: mem,
+                core_speed: 0.88,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bynode_round_robins() {
+        let ns = nodes(4, 4, 34.2);
+        let a = schedule(8, &ns, Placement::ByNode);
+        assert_eq!(a, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn byslot_fills_first_node() {
+        let ns = nodes(4, 4, 34.2);
+        let a = schedule(8, &ns, Placement::BySlot);
+        assert_eq!(a, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn default_is_bynode() {
+        assert_eq!(Placement::parse(false, false), Placement::ByNode);
+        assert_eq!(Placement::parse(true, false), Placement::ByNode);
+        assert_eq!(Placement::parse(false, true), Placement::BySlot);
+    }
+
+    #[test]
+    fn bynode_gives_more_memory_headroom() {
+        // 4 big processes on a 4-node cluster: bynode spreads them
+        // (34.2 GB each), byslot stacks them on one node (8.55 GB each).
+        let ns = nodes(4, 4, 34.2);
+        let by_node = schedule(4, &ns, Placement::ByNode);
+        let by_slot = schedule(4, &ns, Placement::BySlot);
+        let m_node = min_mem_per_process_gb(&by_node, &ns);
+        let m_slot = min_mem_per_process_gb(&by_slot, &ns);
+        assert!(m_node > 3.0 * m_slot, "bynode {m_node} vs byslot {m_slot}");
+        assert!(feasible(4, 30.0, &ns, Placement::ByNode));
+        assert!(!feasible(4, 30.0, &ns, Placement::BySlot));
+    }
+
+    #[test]
+    fn oversubscription_wraps() {
+        let ns = nodes(2, 2, 8.0);
+        let a = schedule(6, &ns, Placement::BySlot);
+        assert_eq!(a.len(), 6);
+        assert_eq!(a, vec![0, 0, 1, 1, 0, 0]);
+        let b = schedule(6, &ns, Placement::ByNode);
+        assert_eq!(b.len(), 6);
+        // Every node is used.
+        assert!(b.contains(&0) && b.contains(&1));
+    }
+
+    #[test]
+    fn property_schedule_covers_all_processes_and_valid_nodes() {
+        crate::util::quickprop::check("scheduler validity", 100, |g| {
+            let nn = g.usize(1..9);
+            let ns: Vec<NodeSpec> = (0..nn)
+                .map(|i| NodeSpec {
+                    name: format!("n{i}"),
+                    cores: g.usize(1..9),
+                    mem_gb: g.f64(4.0, 128.0),
+                    core_speed: g.f64(0.5, 1.2),
+                })
+                .collect();
+            let nproc = g.usize(1..65);
+            for placement in [Placement::ByNode, Placement::BySlot] {
+                let a = schedule(nproc, &ns, placement);
+                assert_eq!(a.len(), nproc);
+                assert!(a.iter().all(|&i| i < nn));
+                // Within a full pass no node exceeds its cores.
+                let total: usize = ns.iter().map(|n| n.cores).sum();
+                let mut counts = vec![0usize; nn];
+                for &n in a.iter().take(total.min(nproc)) {
+                    counts[n] += 1;
+                }
+                for (i, &c) in counts.iter().enumerate() {
+                    assert!(
+                        c <= ns[i].cores,
+                        "{placement:?}: node {i} got {c} > {} cores in first pass",
+                        ns[i].cores
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn property_bynode_never_worse_memory_than_byslot() {
+        crate::util::quickprop::check("bynode memory dominance", 60, |g| {
+            let nn = g.usize(2..7);
+            let ns = nodes(nn, g.usize(1..9), g.f64(8.0, 64.0));
+            let nproc = g.usize(1..(nn * 2 + 1));
+            let m_node =
+                min_mem_per_process_gb(&schedule(nproc, &ns, Placement::ByNode), &ns);
+            let m_slot =
+                min_mem_per_process_gb(&schedule(nproc, &ns, Placement::BySlot), &ns);
+            assert!(
+                m_node >= m_slot - 1e-9,
+                "nproc={nproc} nodes={nn}: bynode {m_node} < byslot {m_slot}"
+            );
+        });
+    }
+}

@@ -1,0 +1,1539 @@
+//! The P2RAC session: the Analyst-side object every command-line tool
+//! operates on. One `Session` owns the simulated cloud, the Analyst
+//! workstation filesystem, the four configuration files (paper §3.4)
+//! and the script engine, and exposes one method per paper command.
+
+use super::engine::{ResourceView, ScriptEngine, TaskOutput};
+use super::scheduler::{self, NodeSpec, Placement};
+use crate::config::{
+    ClusterEntry, ClustersConfig, InstanceEntry, InstancesConfig, PlatformConfig, RLibsConfig,
+    CONFIG_DIR,
+};
+use crate::datasync::{sync_dir, Protocol, SyncReport, DEFAULT_BLOCK_LEN};
+use crate::simcloud::{
+    instance_type, CloudError, Link, SimCloud, SimParams, SpanCategory, Vfs,
+};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Result-gathering scope (paper §3.2.2: the three scenarios).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResultScope {
+    FromMaster,
+    FromWorkers,
+    FromAll,
+}
+
+/// A non-cloud resource (paper Table I: Desktop A / Desktop B) on which
+/// the same scripts can run for the timing comparison of Fig 5.
+#[derive(Clone, Debug)]
+pub struct DesktopSpec {
+    pub name: String,
+    pub cores: usize,
+    pub mem_gb: f64,
+    pub core_speed: f64,
+}
+
+/// The two desktops of Table I.
+pub fn table1_desktops() -> Vec<DesktopSpec> {
+    vec![
+        DesktopSpec {
+            name: "Desktop A".into(),
+            cores: 8,
+            mem_gb: 16.0,
+            core_speed: 1.00,
+        },
+        DesktopSpec {
+            name: "Desktop B".into(),
+            cores: 6,
+            mem_gb: 24.0,
+            core_speed: 0.82,
+        },
+    ]
+}
+
+/// Options for `ec2createinstance`.
+#[derive(Clone, Debug, Default)]
+pub struct CreateInstanceOpts {
+    pub iname: Option<String>,
+    pub ebsvol: Option<String>,
+    pub snap: Option<String>,
+    pub itype: Option<String>,
+    pub desc: Option<String>,
+}
+
+/// Options for `ec2createcluster`.
+#[derive(Clone, Debug, Default)]
+pub struct CreateClusterOpts {
+    pub cname: Option<String>,
+    pub csize: Option<usize>,
+    pub ebsvol: Option<String>,
+    pub snap: Option<String>,
+    pub itype: Option<String>,
+    pub desc: Option<String>,
+}
+
+/// One P2RAC session.
+pub struct Session {
+    pub cloud: SimCloud,
+    /// The Analyst's workstation filesystem (projects + configs).
+    pub analyst: Vfs,
+    pub platform: PlatformConfig,
+    pub instances_cfg: InstancesConfig,
+    pub clusters_cfg: ClustersConfig,
+    pub rlibs: RLibsConfig,
+    engine: Box<dyn ScriptEngine>,
+}
+
+fn project_name(projectdir: &str) -> String {
+    projectdir
+        .trim_end_matches('/')
+        .rsplit('/')
+        .next()
+        .unwrap_or(projectdir)
+        .to_string()
+}
+
+/// Where a project lands on an instance: "synchronised at the home
+/// directory of the root user" (§3.2.1).
+fn remote_project_dir(projectdir: &str) -> String {
+    format!("root/{}", project_name(projectdir))
+}
+
+/// Results directory at the Analyst site: "stored in a directory at the
+/// same hierarchical level of the project directory" (§3.2.2).
+fn local_results_dir(projectdir: &str) -> String {
+    let base = projectdir.trim_end_matches('/');
+    match base.rsplit_once('/') {
+        Some((parent, name)) => format!("{parent}/{name}_results"),
+        None => format!("{base}_results"),
+    }
+}
+
+impl Session {
+    /// Create a session against a fresh simulated cloud. `ec2configurep2rac`
+    /// equivalent: seeds the platform config with the cloud's default AMI
+    /// and a default snapshot.
+    pub fn new(params: SimParams, engine: Box<dyn ScriptEngine>) -> Self {
+        let mut cloud = SimCloud::new(params);
+        let default_snapshot = cloud.create_snapshot(8.0, Vfs::new(), "p2rac default snapshot");
+        let platform = PlatformConfig {
+            default_ami: cloud.default_ami(false).id.clone(),
+            default_snapshot,
+            ..PlatformConfig::default()
+        };
+        let mut s = Self {
+            cloud,
+            analyst: Vfs::new(),
+            platform,
+            instances_cfg: InstancesConfig::default(),
+            clusters_cfg: ClustersConfig::default(),
+            rlibs: RLibsConfig::default(),
+            engine,
+        };
+        s.save_configs();
+        s
+    }
+
+    /// Swap the script engine (used by benches to insert mocks).
+    pub fn set_engine(&mut self, engine: Box<dyn ScriptEngine>) {
+        self.engine = engine;
+    }
+
+    /// Persist the four config files onto the Analyst-site vfs.
+    pub fn save_configs(&mut self) {
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/p2rac.json"),
+            self.platform.to_json().to_string_pretty().into_bytes(),
+        );
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/instances.json"),
+            self.instances_cfg.to_json().to_string_pretty().into_bytes(),
+        );
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/clusters.json"),
+            self.clusters_cfg.to_json().to_string_pretty().into_bytes(),
+        );
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/rlibs.json"),
+            self.rlibs.to_json().to_string_pretty().into_bytes(),
+        );
+    }
+
+    /// Serialize the whole session (cloud + analyst site + configs) for
+    /// cross-invocation CLI use.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cloud", self.cloud.to_json());
+        j.set("analyst", self.analyst.to_json());
+        j.set("platform", self.platform.to_json());
+        j.set("instances", self.instances_cfg.to_json());
+        j.set("clusters", self.clusters_cfg.to_json());
+        j.set("rlibs", self.rlibs.to_json());
+        j
+    }
+
+    /// Restore a persisted session with a fresh engine.
+    pub fn from_json(
+        params: SimParams,
+        engine: Box<dyn ScriptEngine>,
+        j: &Json,
+    ) -> Result<Self> {
+        Ok(Self {
+            cloud: SimCloud::from_json(
+                params,
+                j.get("cloud").ok_or_else(|| anyhow!("missing cloud state"))?,
+            )?,
+            analyst: Vfs::from_json(
+                j.get("analyst").ok_or_else(|| anyhow!("missing analyst state"))?,
+            )?,
+            platform: PlatformConfig::from_json(
+                j.get("platform").ok_or_else(|| anyhow!("missing platform"))?,
+            )?,
+            instances_cfg: InstancesConfig::from_json(
+                j.get("instances").ok_or_else(|| anyhow!("missing instances"))?,
+            )?,
+            clusters_cfg: ClustersConfig::from_json(
+                j.get("clusters").ok_or_else(|| anyhow!("missing clusters"))?,
+            )?,
+            rlibs: RLibsConfig::from_json(
+                j.get("rlibs").ok_or_else(|| anyhow!("missing rlibs"))?,
+            )?,
+            engine,
+        })
+    }
+
+    // ===================================================== name resolution
+
+    fn resolve_iname(&self, iname: Option<&str>) -> Result<String> {
+        match iname {
+            Some(n) => Ok(n.to_string()),
+            None => self
+                .platform
+                .default_instance
+                .clone()
+                .ok_or_else(|| anyhow!("no -iname given and no default instance configured")),
+        }
+    }
+
+    fn resolve_cname(&self, cname: Option<&str>) -> Result<String> {
+        match cname {
+            Some(n) => Ok(n.to_string()),
+            None => self
+                .platform
+                .default_cluster
+                .clone()
+                .ok_or_else(|| anyhow!("no -cname given and no default cluster configured")),
+        }
+    }
+
+    fn instance_entry(&self, name: &str) -> Result<&InstanceEntry> {
+        self.instances_cfg
+            .get(name)
+            .ok_or_else(|| anyhow!("no instance named '{name}' in the configuration file"))
+    }
+
+    fn cluster_entry(&self, name: &str) -> Result<&ClusterEntry> {
+        self.clusters_cfg
+            .get(name)
+            .ok_or_else(|| anyhow!("no cluster named '{name}' in the configuration file"))
+    }
+
+    // ================================================== resource management
+
+    /// `ec2createinstance`.
+    pub fn create_instance(&mut self, opts: &CreateInstanceOpts) -> Result<String> {
+        let name = opts
+            .iname
+            .clone()
+            .unwrap_or_else(|| format!("instance{}", self.instances_cfg.entries.len() + 1));
+        if self.instances_cfg.contains(&name) {
+            bail!("an instance named '{name}' already exists (names must be unique)");
+        }
+        let itype = opts
+            .itype
+            .clone()
+            .unwrap_or_else(|| self.platform.default_type.clone());
+        let spec = instance_type(&itype)
+            .ok_or_else(|| anyhow!("instance type '{itype}' is not offered"))?;
+        let ami = if spec.hvm {
+            self.cloud.default_ami(true).id.clone()
+        } else {
+            self.platform.default_ami.clone()
+        };
+
+        let start = self.cloud.clock.now_s();
+        let ids = self
+            .cloud
+            .run_instances(1, &itype, &ami, &self.rlibs.libraries)
+            .context("launching instance")?;
+        let id = ids[0].clone();
+        self.cloud.set_name(&id, &name)?;
+        self.cloud.set_tag(&id, "p2rac:name", &name)?;
+
+        // Volume resolution: -ebsvol | -snap | default snapshot.
+        let vol_id = match (&opts.ebsvol, &opts.snap) {
+            (Some(_), Some(_)) => bail!("-ebsvol and -snap cannot be specified at the same time"),
+            (Some(v), None) => {
+                self.cloud.volume(v).map_err(|e| anyhow!(e.to_string()))?;
+                v.clone()
+            }
+            (None, Some(s)) => self.cloud.create_volume_from_snapshot(s)?,
+            (None, None) => self
+                .cloud
+                .create_volume_from_snapshot(&self.platform.default_snapshot)?,
+        };
+        self.cloud.attach_volume(&vol_id, &id)?;
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("create instance {name}"),
+            start,
+        );
+
+        let inst = self.cloud.instance(&id)?;
+        self.instances_cfg.insert(
+            &name,
+            InstanceEntry {
+                instance_id: id.clone(),
+                public_dns: inst.public_dns.clone(),
+                volume_id: Some(vol_id),
+                instance_type: itype,
+                description: opts.desc.clone().unwrap_or_default(),
+                in_use: false,
+            },
+        );
+        self.platform.default_instance = Some(name.clone());
+        self.save_configs();
+        Ok(name)
+    }
+
+    /// `ec2terminateinstance`.
+    pub fn terminate_instance(&mut self, iname: Option<&str>, deletevol: bool) -> Result<()> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("instance '{name}' is in use; unlock it with ec2resourcelock -free first");
+        }
+        let start = self.cloud.clock.now_s();
+        if let Some(vol) = &entry.volume_id {
+            self.cloud.detach_volume(vol).ok();
+        }
+        self.cloud
+            .terminate_instances(std::slice::from_ref(&entry.instance_id))?;
+        if deletevol {
+            if let Some(vol) = &entry.volume_id {
+                self.cloud.delete_volume(vol)?;
+            }
+        }
+        self.cloud.clock.push_span(
+            SpanCategory::TerminateResource,
+            &format!("terminate instance {name}"),
+            start,
+        );
+        self.instances_cfg.remove(&name);
+        if self.platform.default_instance.as_deref() == Some(name.as_str()) {
+            self.platform.default_instance = self.instances_cfg.names().first().cloned();
+        }
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2createcluster`.
+    pub fn create_cluster(&mut self, opts: &CreateClusterOpts) -> Result<String> {
+        let name = opts
+            .cname
+            .clone()
+            .unwrap_or_else(|| format!("cluster{}", self.clusters_cfg.entries.len() + 1));
+        if self.clusters_cfg.contains(&name) {
+            bail!("a cluster named '{name}' already exists (names must be unique)");
+        }
+        let csize = opts.csize.unwrap_or(self.platform.default_cluster_size);
+        if csize < 2 {
+            bail!("cluster size must be at least 2 (1 master + workers), got {csize}");
+        }
+        let itype = opts
+            .itype
+            .clone()
+            .unwrap_or_else(|| self.platform.default_type.clone());
+        let spec = instance_type(&itype)
+            .ok_or_else(|| anyhow!("instance type '{itype}' is not offered"))?;
+        let ami = if spec.hvm {
+            self.cloud.default_ami(true).id.clone()
+        } else {
+            self.platform.default_ami.clone()
+        };
+
+        let start = self.cloud.clock.now_s();
+        let ids = self
+            .cloud
+            .run_instances(csize, &itype, &ami, &self.rlibs.libraries)
+            .context("launching cluster instances")?;
+        let master = ids[0].clone();
+        let workers: Vec<String> = ids[1..].to_vec();
+        self.cloud.set_tag(&master, "p2rac:role", &format!("{name}_Master"))?;
+        for w in &workers {
+            self.cloud.set_tag(w, "p2rac:role", &format!("{name}_Workers"))?;
+        }
+
+        let vol_id = match (&opts.ebsvol, &opts.snap) {
+            (Some(_), Some(_)) => bail!("-ebsvol and -snap cannot be specified at the same time"),
+            (Some(v), None) => {
+                self.cloud.volume(v).map_err(|e| anyhow!(e.to_string()))?;
+                v.clone()
+            }
+            (None, Some(s)) => self.cloud.create_volume_from_snapshot(s)?,
+            (None, None) => self
+                .cloud
+                .create_volume_from_snapshot(&self.platform.default_snapshot)?,
+        };
+        self.cloud.attach_volume(&vol_id, &master)?;
+        self.cloud.nfs_export(&master, &vol_id, &workers)?;
+        // Master/worker configuration (hosts files, SNOW socket setup).
+        let cfg_s = self.cloud.params().cluster_config_base_s;
+        self.cloud.clock.advance(cfg_s);
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("create cluster {name} ({csize} nodes)"),
+            start,
+        );
+
+        let master_dns = self.cloud.instance(&master)?.public_dns.clone();
+        let worker_dns: Vec<String> = workers
+            .iter()
+            .map(|w| self.cloud.instance(w).map(|i| i.public_dns.clone()))
+            .collect::<std::result::Result<_, CloudError>>()?;
+        self.clusters_cfg.insert(
+            &name,
+            ClusterEntry {
+                size: csize,
+                master_id: master,
+                master_dns,
+                worker_ids: workers,
+                worker_dns,
+                volume_id: Some(vol_id),
+                instance_type: itype,
+                description: opts.desc.clone().unwrap_or_default(),
+                in_use: false,
+            },
+        );
+        self.platform.default_cluster = Some(name.clone());
+        self.save_configs();
+        Ok(name)
+    }
+
+    /// `ec2terminatecluster`.
+    pub fn terminate_cluster(&mut self, cname: Option<&str>, deletevol: bool) -> Result<()> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        // "whether a cluster is in use is firstly checked" (§3.2.2).
+        if entry.in_use {
+            bail!("cluster '{name}' is in use and cannot be terminated");
+        }
+        let start = self.cloud.clock.now_s();
+        self.cloud.nfs_unexport(&entry.worker_ids)?;
+        if let Some(vol) = &entry.volume_id {
+            self.cloud.detach_volume(vol).ok();
+        }
+        self.cloud.terminate_instances(&entry.all_ids())?;
+        if deletevol {
+            if let Some(vol) = &entry.volume_id {
+                self.cloud.delete_volume(vol)?;
+            }
+        }
+        self.cloud.clock.push_span(
+            SpanCategory::TerminateResource,
+            &format!("terminate cluster {name}"),
+            start,
+        );
+        self.clusters_cfg.remove(&name);
+        if self.platform.default_cluster.as_deref() == Some(name.as_str()) {
+            self.platform.default_cluster = self.clusters_cfg.names().first().cloned();
+        }
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2resizecluster` — the dynamic scaling the paper lists as
+    /// future work (§5): grow or shrink a running cluster. New workers
+    /// boot, NFS-mount the master's volume and join the worker pool;
+    /// removed workers are drained (refused while the cluster is
+    /// locked) and terminated.
+    pub fn resize_cluster(&mut self, cname: Option<&str>, new_size: usize) -> Result<()> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("cluster '{name}' is in use; cannot resize mid-run");
+        }
+        if new_size < 2 {
+            bail!("cluster size must be at least 2, got {new_size}");
+        }
+        if new_size == entry.size {
+            return Ok(());
+        }
+        let start = self.cloud.clock.now_s();
+        let mut worker_ids = entry.worker_ids.clone();
+        let mut worker_dns = entry.worker_dns.clone();
+        if new_size > entry.size {
+            // Grow: boot the delta as one batch, mount the shared volume.
+            let add = new_size - entry.size;
+            let ami = {
+                let inst = self.cloud.instance(&entry.master_id)?;
+                inst.ami_id.clone()
+            };
+            let ids = self
+                .cloud
+                .run_instances(add, &entry.instance_type, &ami, &self.rlibs.libraries)
+                .context("scaling cluster up")?;
+            if let Some(vol) = &entry.volume_id {
+                self.cloud.nfs_export(&entry.master_id, vol, &ids)?;
+            }
+            for id in &ids {
+                self.cloud
+                    .set_tag(id, "p2rac:role", &format!("{name}_Workers"))?;
+                worker_dns.push(self.cloud.instance(id)?.public_dns.clone());
+            }
+            worker_ids.extend(ids);
+        } else {
+            // Shrink: drain and terminate the tail workers.
+            let drop_n = entry.size - new_size;
+            let dropped: Vec<String> = worker_ids.split_off(worker_ids.len() - drop_n);
+            worker_dns.truncate(worker_dns.len() - drop_n);
+            self.cloud.nfs_unexport(&dropped)?;
+            self.cloud.terminate_instances(&dropped)?;
+        }
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("resize cluster {name} {} -> {new_size}", entry.size),
+            start,
+        );
+        let e = self.clusters_cfg.get_mut(&name).expect("checked above");
+        e.size = new_size;
+        e.worker_ids = worker_ids;
+        e.worker_dns = worker_dns;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2terminateall`.
+    pub fn terminate_all(
+        &mut self,
+        instances: bool,
+        clusters: bool,
+        ebsvolumes: bool,
+        snapshots: bool,
+    ) -> Result<Vec<String>> {
+        let mut log = Vec::new();
+        if clusters {
+            for name in self.clusters_cfg.names() {
+                // Force-unlock: ec2terminateall is the big red switch.
+                if let Some(e) = self.clusters_cfg.get_mut(&name) {
+                    e.in_use = false;
+                }
+                self.terminate_cluster(Some(&name), false)?;
+                log.push(format!("terminated cluster {name}"));
+            }
+        }
+        if instances {
+            for name in self.instances_cfg.names() {
+                if let Some(e) = self.instances_cfg.entries.get_mut(&name) {
+                    e.in_use = false;
+                }
+                let id = self.instance_entry(&name)?.instance_id.clone();
+                self.cloud.set_lock(&id, false).ok();
+                self.terminate_instance(Some(&name), false)?;
+                log.push(format!("terminated instance {name}"));
+            }
+        }
+        if ebsvolumes {
+            for v in self
+                .cloud
+                .live_volumes()
+                .iter()
+                .map(|v| v.id.clone())
+                .collect::<Vec<_>>()
+            {
+                match self.cloud.delete_volume(&v) {
+                    Ok(()) => log.push(format!("deleted volume {v}")),
+                    Err(CloudError::VolumeInUse(..)) => {
+                        log.push(format!("skipped attached volume {v}"))
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        if snapshots {
+            for s in self
+                .cloud
+                .live_snapshots()
+                .iter()
+                .map(|s| s.id.clone())
+                .collect::<Vec<_>>()
+            {
+                self.cloud.delete_snapshot(&s)?;
+                log.push(format!("deleted snapshot {s}"));
+            }
+        }
+        self.save_configs();
+        Ok(log)
+    }
+
+    // ====================================================== data management
+
+    /// `ec2senddatatoinstance`.
+    pub fn send_data_to_instance(
+        &mut self,
+        iname: Option<&str>,
+        projectdir: &str,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        let dest = remote_project_dir(projectdir);
+        let start = self.cloud.clock.now_s();
+        let analyst = &self.analyst;
+        let rep = self
+            .cloud
+            .with_instance_fs(&entry.instance_id, |fs, net, faults| {
+                sync_dir(
+                    analyst,
+                    projectdir,
+                    fs,
+                    &dest,
+                    Protocol::Rsync,
+                    DEFAULT_BLOCK_LEN,
+                    net,
+                    Link::Wan,
+                    faults,
+                )
+            })?
+            .map_err(|e| anyhow!("sync to instance '{name}': {e}"))?;
+        self.cloud.clock.advance(rep.elapsed_s);
+        self.cloud.clock.push_span(
+            SpanCategory::SubmitToMaster,
+            &format!("send {projectdir} to instance {name}"),
+            start,
+        );
+        Ok(rep)
+    }
+
+    /// `ec2senddatatomaster`.
+    pub fn send_data_to_master(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        let dest = remote_project_dir(projectdir);
+        let start = self.cloud.clock.now_s();
+        let analyst = &self.analyst;
+        let rep = self
+            .cloud
+            .with_instance_fs(&entry.master_id, |fs, net, faults| {
+                sync_dir(
+                    analyst,
+                    projectdir,
+                    fs,
+                    &dest,
+                    Protocol::Rsync,
+                    DEFAULT_BLOCK_LEN,
+                    net,
+                    Link::Wan,
+                    faults,
+                )
+            })?
+            .map_err(|e| anyhow!("sync to master of '{name}': {e}"))?;
+        self.cloud.clock.advance(rep.elapsed_s);
+        self.cloud.clock.push_span(
+            SpanCategory::SubmitToMaster,
+            &format!("send {projectdir} to master of {name}"),
+            start,
+        );
+        Ok(rep)
+    }
+
+    /// `ec2senddatatoclusternodes`.
+    pub fn send_data_to_cluster_nodes(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+    ) -> Result<Vec<SyncReport>> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        let dest = remote_project_dir(projectdir);
+        let start = self.cloud.clock.now_s();
+        let mut reports = Vec::new();
+        let ids = entry.all_ids();
+        for id in &ids {
+            let analyst = &self.analyst;
+            let rep = self
+                .cloud
+                .with_instance_fs(id, |fs, net, faults| {
+                    sync_dir(
+                        analyst,
+                        projectdir,
+                        fs,
+                        &dest,
+                        Protocol::Rsync,
+                        DEFAULT_BLOCK_LEN,
+                        net,
+                        Link::Wan,
+                        faults,
+                    )
+                })?
+                .map_err(|e| anyhow!("sync to node of '{name}': {e}"))?;
+            reports.push(rep);
+        }
+        // Fan-out wire time: n copies over the shared Analyst uplink.
+        let bytes_each = reports.iter().map(SyncReport::wire_bytes).max().unwrap_or(0);
+        let files_each = reports[0].files_sent.max(1);
+        let t = self
+            .cloud
+            .net
+            .fanout_s(bytes_each, files_each, ids.len(), Link::Wan);
+        self.cloud.clock.advance(t);
+        self.cloud.clock.push_span(
+            SpanCategory::SubmitToAllNodes,
+            &format!("send {projectdir} to all {} nodes of {name}", ids.len()),
+            start,
+        );
+        Ok(reports)
+    }
+
+    /// `ec2getresultsfrominstance`.
+    pub fn get_results_from_instance(
+        &mut self,
+        iname: Option<&str>,
+        projectdir: &str,
+        runname: &str,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        let remote_results = format!("{}/results/{runname}", remote_project_dir(projectdir));
+        let local = format!("{}/{runname}", local_results_dir(projectdir));
+        let start = self.cloud.clock.now_s();
+        let inst = self.cloud.instance(&entry.instance_id)?;
+        if !inst.fs.dir_exists(&remote_results) {
+            bail!("no results for run '{runname}' on instance '{name}'");
+        }
+        let src = inst.fs.clone();
+        let mut faults = std::mem::take(&mut self.cloud.faults);
+        let rep = sync_dir(
+            &src,
+            &remote_results,
+            &mut self.analyst,
+            &local,
+            Protocol::Rsync,
+            DEFAULT_BLOCK_LEN,
+            &self.cloud.net,
+            Link::Wan,
+            &mut faults,
+        )
+        .map_err(|e| anyhow!("fetch results from '{name}': {e}"))?;
+        self.cloud.faults = faults;
+        self.cloud.clock.advance(rep.elapsed_s);
+        self.cloud.clock.push_span(
+            SpanCategory::FetchFromMaster,
+            &format!("fetch run {runname} from instance {name}"),
+            start,
+        );
+        Ok(rep)
+    }
+
+    /// `ec2getresults` with the three scenarios.
+    pub fn get_results(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+        runname: &str,
+        scope: ResultScope,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        let remote_results = format!("{}/results/{runname}", remote_project_dir(projectdir));
+        let local = format!("{}/{runname}", local_results_dir(projectdir));
+        let start = self.cloud.clock.now_s();
+
+        let mut sources: Vec<(String, String)> = Vec::new(); // (instance id, label)
+        match scope {
+            ResultScope::FromMaster => sources.push((entry.master_id.clone(), "master".into())),
+            ResultScope::FromWorkers => {
+                for (i, w) in entry.worker_ids.iter().enumerate() {
+                    sources.push((w.clone(), format!("worker{i}")));
+                }
+            }
+            ResultScope::FromAll => {
+                sources.push((entry.master_id.clone(), "master".into()));
+                for (i, w) in entry.worker_ids.iter().enumerate() {
+                    sources.push((w.clone(), format!("worker{i}")));
+                }
+            }
+        }
+
+        let mut total = SyncReport::default();
+        let mut found_any = false;
+        let n_src = sources.len();
+        let mut faults = std::mem::take(&mut self.cloud.faults);
+        for (id, label) in sources {
+            let inst = self.cloud.instance(&id)?;
+            if !inst.fs.dir_exists(&remote_results) {
+                continue;
+            }
+            found_any = true;
+            let src = inst.fs.clone();
+            // Multi-source gathers are disambiguated per node.
+            let dst_dir = if scope == ResultScope::FromMaster {
+                local.clone()
+            } else {
+                format!("{local}/{label}")
+            };
+            let rep = sync_dir(
+                &src,
+                &remote_results,
+                &mut self.analyst,
+                &dst_dir,
+                Protocol::Rsync,
+                DEFAULT_BLOCK_LEN,
+                &self.cloud.net,
+                Link::Wan,
+                &mut faults,
+            )
+            .map_err(|e| anyhow!("fetch results from {label} of '{name}': {e}"))?;
+            total.files_examined += rep.files_examined;
+            total.files_sent += rep.files_sent;
+            total.files_unchanged += rep.files_unchanged;
+            total.literal_bytes += rep.literal_bytes;
+            total.matched_bytes += rep.matched_bytes;
+            total.protocol_bytes += rep.protocol_bytes;
+        }
+        self.cloud.faults = faults;
+        if !found_any {
+            bail!("no results for run '{runname}' on cluster '{name}'");
+        }
+        let cat = match scope {
+            ResultScope::FromMaster => SpanCategory::FetchFromMaster,
+            _ => SpanCategory::FetchFromAllNodes,
+        };
+        let t = match scope {
+            ResultScope::FromMaster => self
+                .cloud
+                .net
+                .transfer_s(total.wire_bytes(), total.files_sent.max(1), Link::Wan),
+            _ => self.cloud.net.gather_s(
+                total.wire_bytes() / n_src.max(1) as u64,
+                (total.files_sent / n_src.max(1)).max(1),
+                n_src,
+                Link::Wan,
+            ),
+        };
+        total.elapsed_s = t;
+        self.cloud.clock.advance(t);
+        self.cloud
+            .clock
+            .push_span(cat, &format!("fetch run {runname} from {name}"), start);
+        Ok(total)
+    }
+
+    // ================================================= execution management
+
+    fn load_script(fs: &Vfs, project_dir: &str, rscript: &str) -> Result<Json> {
+        let path = format!("{project_dir}/{rscript}");
+        let bytes = fs
+            .read(&path)
+            .ok_or_else(|| anyhow!("script '{rscript}' not found in project directory"))?;
+        let text = std::str::from_utf8(bytes).context("script is not UTF-8")?;
+        Json::parse(text).map_err(|e| anyhow!("script '{rscript}' is not valid JSON: {e}"))
+    }
+
+    /// List candidate scripts in a project dir (used when `-rscript` is
+    /// omitted and the CLI prompts the Analyst).
+    pub fn list_scripts(&self, projectdir: &str) -> Vec<String> {
+        self.analyst
+            .list_dir(projectdir)
+            .into_iter()
+            .filter(|f| f.ends_with(".json") && !f.starts_with("results/"))
+            .collect()
+    }
+
+    /// `ec2runoninstance`.
+    pub fn run_on_instance(
+        &mut self,
+        iname: Option<&str>,
+        projectdir: &str,
+        rscript: &str,
+        runname: &str,
+    ) -> Result<TaskOutput> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("instance '{name}' is locked by another run");
+        }
+        let inst = self.cloud.instance(&entry.instance_id)?;
+        let spec = inst.itype;
+        let pdir = remote_project_dir(projectdir);
+        let project = inst.fs.clone();
+        let script = Self::load_script(&project, &pdir, rscript)?;
+
+        // Lock for the duration of the run (§3.2.1).
+        self.set_instance_lock(&name, true)?;
+        let nodes = vec![NodeSpec {
+            name: name.clone(),
+            cores: spec.cores,
+            mem_gb: spec.mem_gb,
+            core_speed: spec.core_speed,
+        }];
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(spec.cores);
+        let assignment = vec![0usize; nproc];
+        let view = ResourceView {
+            nodes,
+            assignment,
+            net: self.cloud.net.clone(),
+            resource_name: name.clone(),
+        };
+        let out = self.engine.run(rscript, &script, &project, &pdir, &view);
+        // Always unlock, even on engine failure.
+        self.set_instance_lock(&name, false)?;
+        let out = out?;
+
+        let start = self.cloud.clock.now_s();
+        self.cloud.clock.advance(out.compute_s);
+        self.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("run {rscript} ({runname}) on instance {name}"),
+            start,
+        );
+        // Results land in results/<runname>/ inside the project dir.
+        let fs = self.cloud.instance_fs_mut(&entry.instance_id)?;
+        for (rel, bytes) in &out.master_files {
+            fs.write(&format!("{pdir}/results/{runname}/{rel}"), bytes.clone());
+        }
+        Ok(out)
+    }
+
+    /// `ec2runoncluster`.
+    pub fn run_on_cluster(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+        rscript: &str,
+        runname: &str,
+        placement: Placement,
+    ) -> Result<TaskOutput> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("cluster '{name}' is locked by another run");
+        }
+        let spec = instance_type(&entry.instance_type)
+            .ok_or_else(|| anyhow!("unknown type in config: {}", entry.instance_type))?;
+        let pdir = remote_project_dir(projectdir);
+        let master = self.cloud.instance(&entry.master_id)?;
+        let project = master.fs.clone();
+        let script = Self::load_script(&project, &pdir, rscript)?;
+
+        self.set_cluster_lock(&name, true)?;
+        let nodes: Vec<NodeSpec> = entry
+            .all_ids()
+            .iter()
+            .enumerate()
+            .map(|(i, _)| NodeSpec {
+                name: if i == 0 {
+                    format!("{name}_Master")
+                } else {
+                    format!("{name}_Worker{i}")
+                },
+                cores: spec.cores,
+                mem_gb: spec.mem_gb,
+                core_speed: spec.core_speed,
+            })
+            .collect();
+        let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(total_cores);
+        // Memory feasibility check — the reason bynode exists (§3.2.2).
+        if let Some(mem) = script.get("mem_gb_per_proc").and_then(Json::as_f64) {
+            if !scheduler::feasible(nproc, mem, &nodes, placement) {
+                self.set_cluster_lock(&name, false)?;
+                bail!(
+                    "{nproc} processes needing {mem} GB each do not fit under {placement:?}; \
+                     try -bynode or fewer slaves"
+                );
+            }
+        }
+        let assignment = scheduler::schedule(nproc, &nodes, placement);
+        let view = ResourceView {
+            nodes,
+            assignment,
+            net: self.cloud.net.clone(),
+            resource_name: name.clone(),
+        };
+        let out = self.engine.run(rscript, &script, &project, &pdir, &view);
+        self.set_cluster_lock(&name, false)?;
+        let out = out?;
+
+        let start = self.cloud.clock.now_s();
+        self.cloud.clock.advance(out.compute_s);
+        self.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("run {rscript} ({runname}) on cluster {name}"),
+            start,
+        );
+        // Scenario 1/3 files on the master…
+        let master_fs = self.cloud.instance_fs_mut(&entry.master_id)?;
+        for (rel, bytes) in &out.master_files {
+            master_fs.write(&format!("{pdir}/results/{runname}/{rel}"), bytes.clone());
+        }
+        // …scenario 2/3 files on the workers.
+        for (widx, rel, bytes) in &out.worker_files {
+            let Some(wid) = entry.worker_ids.get(*widx) else {
+                bail!("engine wrote to nonexistent worker {widx}");
+            };
+            let fs = self.cloud.instance_fs_mut(wid)?;
+            fs.write(&format!("{pdir}/results/{runname}/{rel}"), bytes.clone());
+        }
+        Ok(out)
+    }
+
+    /// Run a script locally on a Table-I desktop (Fig 5 comparison).
+    pub fn run_local(
+        &mut self,
+        desktop: &DesktopSpec,
+        projectdir: &str,
+        rscript: &str,
+        runname: &str,
+    ) -> Result<TaskOutput> {
+        let script = Self::load_script(&self.analyst, projectdir, rscript)?;
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(desktop.cores);
+        let view = ResourceView {
+            nodes: vec![NodeSpec {
+                name: desktop.name.clone(),
+                cores: desktop.cores,
+                mem_gb: desktop.mem_gb,
+                core_speed: desktop.core_speed,
+            }],
+            assignment: vec![0; nproc],
+            net: self.cloud.net.clone(),
+            resource_name: desktop.name.clone(),
+        };
+        let project = self.analyst.clone();
+        let out = self.engine.run(rscript, &script, &project, projectdir, &view)?;
+        let start = self.cloud.clock.now_s();
+        self.cloud.clock.advance(out.compute_s);
+        self.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("run {rscript} ({runname}) on {}", desktop.name),
+            start,
+        );
+        let local = format!("{}/{runname}", local_results_dir(projectdir));
+        for (rel, bytes) in &out.master_files {
+            self.analyst.write(&format!("{local}/{rel}"), bytes.clone());
+        }
+        Ok(out)
+    }
+
+    // ========================================================== diagnostics
+
+    /// `ec2resourcelock` on an instance.
+    pub fn set_instance_lock(&mut self, iname: &str, in_use: bool) -> Result<()> {
+        let entry = self.instance_entry(iname)?.clone();
+        self.cloud.set_lock(&entry.instance_id, in_use)?;
+        self.instances_cfg
+            .entries
+            .get_mut(iname)
+            .expect("checked above")
+            .in_use = in_use;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2resourcelock` on a cluster.
+    pub fn set_cluster_lock(&mut self, cname: &str, in_use: bool) -> Result<()> {
+        let entry = self.cluster_entry(cname)?.clone();
+        for id in entry.all_ids() {
+            self.cloud.set_lock(&id, in_use)?;
+        }
+        self.clusters_cfg
+            .get_mut(cname)
+            .expect("checked above")
+            .in_use = in_use;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2listinstances`.
+    pub fn list_instances(&self, names_only: bool) -> Vec<String> {
+        self.instances_cfg
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                if names_only {
+                    name.clone()
+                } else {
+                    format!(
+                        "{name}  dns={}  vol={}  type={}  inuse={}  desc={:?}",
+                        e.public_dns,
+                        e.volume_id.as_deref().unwrap_or("-"),
+                        e.instance_type,
+                        e.in_use,
+                        e.description
+                    )
+                }
+            })
+            .collect()
+    }
+
+    /// `ec2listclusters`.
+    pub fn list_clusters(&self, names_only: bool) -> Vec<String> {
+        self.clusters_cfg
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                if names_only {
+                    name.clone()
+                } else {
+                    format!(
+                        "{name}  size={}  master={}  workers=[{}]  vol={}  inuse={}  desc={:?}",
+                        e.size,
+                        e.master_dns,
+                        e.worker_dns.join(", "),
+                        e.volume_id.as_deref().unwrap_or("-"),
+                        e.in_use,
+                        e.description
+                    )
+                }
+            })
+            .collect()
+    }
+
+    /// `ec2listallresources`.
+    pub fn list_all_resources(
+        &self,
+        instances: bool,
+        ebsvols: bool,
+        snapshots: bool,
+        amis: bool,
+    ) -> Vec<String> {
+        let mut out = Vec::new();
+        if instances {
+            for i in self.cloud.live_instances() {
+                out.push(format!(
+                    "instance {}  type={}  name={}",
+                    i.id,
+                    i.itype.api_name,
+                    i.name.as_deref().unwrap_or("-")
+                ));
+            }
+        }
+        if ebsvols {
+            for v in self.cloud.live_volumes() {
+                out.push(format!(
+                    "volume {}  {:.0}GiB  attached_to={}",
+                    v.id,
+                    v.size_gb,
+                    v.attached_to.as_deref().unwrap_or("-")
+                ));
+            }
+        }
+        if snapshots {
+            for s in self.cloud.live_snapshots() {
+                out.push(format!("snapshot {}  {:.0}GiB  {:?}", s.id, s.size_gb, s.description));
+            }
+        }
+        if amis {
+            for a in self.cloud.amis() {
+                out.push(format!("ami {}  {}  hvm={}", a.id, a.name, a.hvm));
+            }
+        }
+        out
+    }
+
+    /// `ec2logintoinstance` / `ec2logintocluster` (simulated SSH): returns
+    /// the login banner for the target machine.
+    pub fn login_banner(&self, iname: Option<&str>, cname: Option<&str>) -> Result<String> {
+        let (dns, what) = if let Some(c) = cname {
+            let e = self.cluster_entry(c)?;
+            (e.master_dns.clone(), format!("master of cluster {c}"))
+        } else {
+            let name = self.resolve_iname(iname)?;
+            let e = self.instance_entry(&name)?;
+            (e.public_dns.clone(), format!("instance {name}"))
+        };
+        Ok(format!(
+            "ssh root@{dns}\nWelcome to Ubuntu ({what})\nLast login: simulated\nroot@ip:~#"
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(1000.0)))
+    }
+
+    fn write_project(s: &mut Session, dir: &str, data_bytes: usize) {
+        s.analyst.write(
+            &format!("{dir}/sweep.json"),
+            br#"{"type":"mock","slaves":4}"#.to_vec(),
+        );
+        s.analyst
+            .write(&format!("{dir}/data/input.bin"), vec![7u8; data_bytes]);
+    }
+
+    #[test]
+    fn instance_workflow_figure2() {
+        // The full Fig-2 workflow: create → send → run → fetch → terminate.
+        let mut s = session();
+        write_project(&mut s, "home/analyst/sweep", 50_000);
+        let name = s
+            .create_instance(&CreateInstanceOpts {
+                iname: Some("hpc_instance".into()),
+                itype: Some("m2.4xlarge".into()),
+                desc: Some("For Trial Simulation Run".into()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(name, "hpc_instance");
+        assert!(s.instances_cfg.contains("hpc_instance"));
+
+        let rep = s
+            .send_data_to_instance(Some("hpc_instance"), "home/analyst/sweep")
+            .unwrap();
+        assert_eq!(rep.files_sent, 2);
+
+        let out = s
+            .run_on_instance(Some("hpc_instance"), "home/analyst/sweep", "sweep.json", "run1")
+            .unwrap();
+        assert!(out.compute_s > 0.0);
+
+        let fetched = s
+            .get_results_from_instance(Some("hpc_instance"), "home/analyst/sweep", "run1")
+            .unwrap();
+        assert!(fetched.files_sent >= 1);
+        assert!(s
+            .analyst
+            .exists("home/analyst/sweep_results/run1/summary.json"));
+
+        s.terminate_instance(Some("hpc_instance"), true).unwrap();
+        assert!(!s.instances_cfg.contains("hpc_instance"));
+        assert!(s.cloud.live_instances().is_empty());
+    }
+
+    #[test]
+    fn cluster_workflow_figure3() {
+        let mut s = session();
+        write_project(&mut s, "home/analyst/catopt", 80_000);
+        let name = s
+            .create_cluster(&CreateClusterOpts {
+                cname: Some("hpc_cluster".into()),
+                csize: Some(4),
+                itype: Some("m2.2xlarge".into()),
+                ..Default::default()
+            })
+            .unwrap();
+        let entry = s.clusters_cfg.get(&name).unwrap().clone();
+        assert_eq!(entry.size, 4);
+        assert_eq!(entry.worker_ids.len(), 3);
+        // Master holds the volume; workers NFS-mount it.
+        let master = s.cloud.instance(&entry.master_id).unwrap();
+        assert!(master.attached_volume.is_some());
+        for w in &entry.worker_ids {
+            assert_eq!(
+                s.cloud.instance(w).unwrap().nfs_mount_from,
+                master.attached_volume
+            );
+        }
+
+        let reps = s
+            .send_data_to_cluster_nodes(Some("hpc_cluster"), "home/analyst/catopt")
+            .unwrap();
+        assert_eq!(reps.len(), 4);
+        for id in entry.all_ids() {
+            assert!(s
+                .cloud
+                .instance(&id)
+                .unwrap()
+                .fs
+                .exists("root/catopt/sweep.json"));
+        }
+
+        let out = s
+            .run_on_cluster(
+                Some("hpc_cluster"),
+                "home/analyst/catopt",
+                "sweep.json",
+                "trial1",
+                Placement::ByNode,
+            )
+            .unwrap();
+        assert!(out.compute_s > 0.0);
+
+        let rep = s
+            .get_results(
+                Some("hpc_cluster"),
+                "home/analyst/catopt",
+                "trial1",
+                ResultScope::FromMaster,
+            )
+            .unwrap();
+        assert!(rep.files_sent >= 1);
+        assert!(s
+            .analyst
+            .exists("home/analyst/catopt_results/trial1/summary.json"));
+
+        s.terminate_cluster(Some("hpc_cluster"), false).unwrap();
+        assert!(s.cloud.live_instances().is_empty());
+        // Volume persisted (no -deletevol).
+        assert_eq!(s.cloud.live_volumes().len(), 1);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("a".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(s
+            .create_instance(&CreateInstanceOpts {
+                iname: Some("a".into()),
+                ..Default::default()
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn ebsvol_and_snap_conflict() {
+        let mut s = session();
+        let e = s.create_instance(&CreateInstanceOpts {
+            iname: Some("x".into()),
+            ebsvol: Some("vol-1".into()),
+            snap: Some("snap-1".into()),
+            ..Default::default()
+        });
+        assert!(e.unwrap_err().to_string().contains("cannot be specified"));
+    }
+
+    #[test]
+    fn in_use_cluster_refuses_termination() {
+        let mut s = session();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+        s.set_cluster_lock("c", true).unwrap();
+        assert!(s.terminate_cluster(Some("c"), false).is_err());
+        s.set_cluster_lock("c", false).unwrap();
+        s.terminate_cluster(Some("c"), false).unwrap();
+    }
+
+    #[test]
+    fn run_locks_and_unlocks() {
+        let mut s = session();
+        write_project(&mut s, "p", 1000);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_instance(Some("i"), "p").unwrap();
+        s.run_on_instance(Some("i"), "p", "sweep.json", "r1").unwrap();
+        // Unlocked afterwards.
+        assert!(!s.instances_cfg.get("i").unwrap().in_use);
+        // Manual lock blocks a run.
+        s.set_instance_lock("i", true).unwrap();
+        assert!(s.run_on_instance(Some("i"), "p", "sweep.json", "r2").is_err());
+    }
+
+    #[test]
+    fn missing_script_is_an_error() {
+        let mut s = session();
+        write_project(&mut s, "p", 100);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_instance(Some("i"), "p").unwrap();
+        let e = s.run_on_instance(Some("i"), "p", "nope.json", "r");
+        assert!(e.unwrap_err().to_string().contains("not found"));
+    }
+
+    #[test]
+    fn default_names_from_platform_config() {
+        let mut s = session();
+        write_project(&mut s, "p", 100);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("only".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        // iname omitted → default instance from config.
+        s.send_data_to_instance(None, "p").unwrap();
+        assert!(s
+            .cloud
+            .find_by_name("only")
+            .unwrap()
+            .fs
+            .exists("root/p/sweep.json"));
+    }
+
+    #[test]
+    fn terminate_all_clears_everything() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i1".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c1".into()),
+            csize: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+        let log = s.terminate_all(true, true, true, true).unwrap();
+        assert!(log.len() >= 4);
+        assert!(s.cloud.live_instances().is_empty());
+        assert!(s.cloud.live_volumes().is_empty());
+        assert!(s.cloud.live_snapshots().is_empty());
+        assert!(s.instances_cfg.names().is_empty());
+        assert!(s.clusters_cfg.names().is_empty());
+    }
+
+    #[test]
+    fn management_spans_recorded_for_figures() {
+        let mut s = session();
+        write_project(&mut s, "p", 10_000);
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_master(Some("c"), "p").unwrap();
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        s.run_on_cluster(Some("c"), "p", "sweep.json", "r", Placement::ByNode)
+            .unwrap();
+        s.get_results(Some("c"), "p", "r", ResultScope::FromMaster).unwrap();
+        s.terminate_cluster(Some("c"), false).unwrap();
+        let cl = &s.cloud.clock;
+        assert!(cl.category_total_s(SpanCategory::CreateResource) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::SubmitToMaster) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::SubmitToAllNodes) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::FetchFromMaster) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::TerminateResource) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::Compute) > 0.0);
+        // Creation dominates for small data (paper Figs 6–7 shape).
+        assert!(
+            cl.category_total_s(SpanCategory::CreateResource)
+                > cl.category_total_s(SpanCategory::SubmitToMaster)
+        );
+    }
+
+    #[test]
+    fn worker_results_gathered_fromall() {
+        // Engine that writes files on workers (paper's scenario 3).
+        struct WorkerEngine;
+        impl ScriptEngine for WorkerEngine {
+            fn run(
+                &mut self,
+                _s: &str,
+                _j: &Json,
+                _p: &Vfs,
+                _d: &str,
+                r: &ResourceView,
+            ) -> anyhow::Result<TaskOutput> {
+                Ok(TaskOutput {
+                    master_files: vec![("agg.json".into(), b"{}".to_vec())],
+                    worker_files: (0..r.nodes.len() - 1)
+                        .map(|w| (w, format!("part{w}.bin"), vec![w as u8; 64]))
+                        .collect(),
+                    compute_s: 10.0,
+                    summary: Json::Null,
+                })
+            }
+        }
+        let mut s = Session::new(SimParams::default(), Box::new(WorkerEngine));
+        write_project(&mut s, "p", 1000);
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(3),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        s.run_on_cluster(Some("c"), "p", "sweep.json", "r", Placement::ByNode)
+            .unwrap();
+        let rep = s
+            .get_results(Some("c"), "p", "r", ResultScope::FromAll)
+            .unwrap();
+        assert!(rep.files_sent >= 3);
+        assert!(s.analyst.exists("p_results/r/master/agg.json"));
+        assert!(s.analyst.exists("p_results/r/worker0/part0.bin"));
+        assert!(s.analyst.exists("p_results/r/worker1/part1.bin"));
+        // fromworkers only:
+        let rep2 = s
+            .get_results(Some("c"), "p", "r", ResultScope::FromWorkers)
+            .unwrap();
+        assert!(rep2.files_unchanged + rep2.files_sent >= 2);
+    }
+
+    #[test]
+    fn memory_infeasible_byslot_rejected() {
+        let mut s = session();
+        s.analyst.write(
+            "p/big.json",
+            br#"{"type":"mock","slaves":4,"mem_gb_per_proc":30.0}"#.to_vec(),
+        );
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(4),
+            itype: Some("m2.2xlarge".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        // 4 × 30 GB on one 34.2 GB node → infeasible byslot…
+        let e = s.run_on_cluster(Some("c"), "p", "big.json", "r", Placement::BySlot);
+        assert!(e.is_err());
+        // …but bynode spreads them, one per node.
+        assert!(!s.clusters_cfg.get("c").unwrap().in_use, "must unlock after failure");
+        s.run_on_cluster(Some("c"), "p", "big.json", "r", Placement::ByNode)
+            .unwrap();
+    }
+
+    #[test]
+    fn login_banner_mentions_dns() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        let b = s.login_banner(Some("i"), None).unwrap();
+        assert!(b.contains("ssh root@ec2-"));
+    }
+
+    #[test]
+    fn desktop_local_run_writes_results() {
+        let mut s = session();
+        write_project(&mut s, "p", 500);
+        let d = table1_desktops();
+        let out = s.run_local(&d[0], "p", "sweep.json", "r1").unwrap();
+        assert!(out.compute_s > 0.0);
+        assert!(s.analyst.exists("p_results/r1/summary.json"));
+    }
+}

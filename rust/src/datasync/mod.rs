@@ -1,0 +1,15 @@
+//! rsync-algorithm data synchronisation (paper §3.2: data management).
+//!
+//! P2RAC moves Analyst project directories to cloud resources with a
+//! block-delta protocol: rolling weak checksum + strong hash block
+//! matching ([`rolling`], [`delta`]) and a directory-level sync driver
+//! with an SCP full-copy baseline ([`sync`]). All of it operates on real
+//! bytes in the simulated filesystems; only the *wire time* comes from
+//! the network model.
+
+pub mod delta;
+pub mod rolling;
+pub mod sync;
+
+pub use delta::{apply_delta, compute_delta, signature, Delta, Signature, Token};
+pub use sync::{sync_dir, Protocol, SyncError, SyncReport, DEFAULT_BLOCK_LEN};

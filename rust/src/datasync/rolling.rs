@@ -1,0 +1,99 @@
+//! Rolling (weak) and strong checksums for the rsync algorithm.
+//!
+//! The weak checksum is Adler-32-style (rsync's original), cheap to
+//! slide one byte at a time across the receiver's view of a file. The
+//! strong checksum is FNV-1a-128 folded — not cryptographic, but with a
+//! 64-bit output the collision probability across the block counts seen
+//! here is negligible, and it keeps the build dependency-free.
+
+/// rsync's weak rolling checksum over a window of bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rolling {
+    a: u32,
+    b: u32,
+    len: usize,
+}
+
+const MOD: u32 = 1 << 16;
+
+impl Rolling {
+    /// Checksum of a full block.
+    pub fn of(block: &[u8]) -> Self {
+        let mut a: u32 = 0;
+        let mut b: u32 = 0;
+        let n = block.len() as u32;
+        for (i, &x) in block.iter().enumerate() {
+            a = (a + x as u32) % MOD;
+            b = (b + (n - i as u32) * x as u32) % MOD;
+        }
+        Self {
+            a,
+            b,
+            len: block.len(),
+        }
+    }
+
+    /// Slide the window one byte: drop `out`, append `inn`.
+    pub fn roll(&mut self, out: u8, inn: u8) {
+        let n = self.len as u32;
+        self.a = (self.a + MOD - out as u32 + inn as u32) % MOD;
+        self.b = (self.b + MOD - (n * out as u32) % MOD + self.a) % MOD;
+        // NOTE: the classic formulation updates b using the *new* a.
+    }
+
+    pub fn digest(&self) -> u32 {
+        self.a | (self.b << 16)
+    }
+}
+
+/// 64-bit strong hash (FNV-1a with avalanche finisher).
+pub fn strong_hash(block: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in block {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    // splitmix finisher to decorrelate short inputs.
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D049BB133111EB);
+    h ^ (h >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rolling_matches_recompute() {
+        // Sliding across a buffer must equal recomputing from scratch.
+        let data: Vec<u8> = (0..200u32).map(|i| (i * 37 % 251) as u8).collect();
+        let w = 16;
+        let mut r = Rolling::of(&data[0..w]);
+        for start in 1..(data.len() - w) {
+            r.roll(data[start - 1], data[start + w - 1]);
+            let fresh = Rolling::of(&data[start..start + w]);
+            assert_eq!(r.digest(), fresh.digest(), "mismatch at offset {start}");
+        }
+    }
+
+    #[test]
+    fn different_blocks_differ_mostly() {
+        let a = Rolling::of(b"hello world blok").digest();
+        let b = Rolling::of(b"hello world blov").digest();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn strong_hash_sensitivity() {
+        let h1 = strong_hash(b"block contents A");
+        let h2 = strong_hash(b"block contents B");
+        assert_ne!(h1, h2);
+        assert_eq!(strong_hash(b""), strong_hash(b""));
+    }
+
+    #[test]
+    fn empty_block() {
+        let r = Rolling::of(b"");
+        assert_eq!(r.digest(), 0);
+    }
+}

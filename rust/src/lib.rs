@@ -1,0 +1,34 @@
+//! # P2RAC — Platform for Parallel R-based Analytics on the Cloud
+//!
+//! A Rust + JAX + Pallas reproduction of Patel, Rau-Chaplin & Varghese,
+//! *"Accelerating R-based Analytics on the Cloud"* (Concurrency and
+//! Computation: Practice and Experience, 2013).
+//!
+//! The platform sits between an Analyst and a (simulated) IaaS cloud and
+//! provides resource / data / execution management for analytical
+//! workloads, exactly mirroring the paper's command set
+//! (`ec2createinstance`, `ec2createcluster`, `ec2senddata*`,
+//! `ec2runon*`, `ec2getresults*`, diagnostics and locks).
+//!
+//! Architecture (see DESIGN.md):
+//! * **L3 (this crate)** — coordinator: resource/data/execution managers,
+//!   bynode/byslot scheduler, rsync-algorithm data sync, the simulated
+//!   EC2/EBS/S3 substrate, and the analytics engine (rgenoud-style GA +
+//!   Monte-Carlo sweep) that plays the role of the Analyst's R scripts.
+//! * **L2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
+//!   to HLO text at build time.
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), fused into the
+//!   same HLO; executed from Rust via the PJRT CPU client.
+
+pub mod analytics;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasync;
+pub mod runtime;
+pub mod simcloud;
+pub mod util;
+
+/// Version string reported by every command's `-v` switch.
+pub const VERSION: &str = concat!("P2RAC ", env!("CARGO_PKG_VERSION"));

@@ -1,0 +1,9 @@
+//! `p2rac` — the Analyst-facing command-line binary.
+//!
+//! Usage: `p2rac <ec2command> [args...]`. Every tool from the paper's §3
+//! is available as a subcommand; `p2rac help` lists them.
+
+fn main() {
+    let code = p2rac::cli::main_entry(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

@@ -1,0 +1,154 @@
+//! The AOT artifact manifest: shapes/dtypes of every compiled entry
+//! point plus the model constants (POP, M, E, S, K, J) the coordinator
+//! needs to size its buffers. Written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing 'shape'"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            shape,
+            dtype: j.req_str("dtype")?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub constants: BTreeMap<String, usize>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json — run `make artifacts`", dir.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        if j.opt_str("format").as_deref() != Some("hlo-text") {
+            return Err(anyhow!("manifest format must be 'hlo-text'"));
+        }
+        let mut constants = BTreeMap::new();
+        for (k, v) in j
+            .get("constants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'constants'"))?
+        {
+            constants.insert(
+                k.clone(),
+                v.as_usize().ok_or_else(|| anyhow!("constant {k} not usize"))?,
+            );
+        }
+        let mut entries = BTreeMap::new();
+        for (name, e) in j
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'entries'"))?
+        {
+            let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {name} missing '{key}'"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    file: e.req_str("file")?,
+                    args: specs("args")?,
+                    outputs: specs("outputs")?,
+                },
+            );
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            constants,
+            entries,
+        })
+    }
+
+    pub fn constant(&self, name: &str) -> Result<usize> {
+        self.constants
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("manifest has no constant '{name}'"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no entry '{name}'"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "constants": {"POP": 256, "M": 512},
+      "entries": {
+        "f": {
+          "file": "f.hlo.txt",
+          "args": [{"shape": [256, 512], "dtype": "float32"}],
+          "outputs": [{"shape": [256], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.constant("POP").unwrap(), 256);
+        let e = m.entry("f").unwrap();
+        assert_eq!(e.args[0].shape, vec![256, 512]);
+        assert_eq!(e.args[0].elements(), 256 * 512);
+        assert_eq!(m.hlo_path("f").unwrap(), PathBuf::from("/tmp/a/f.hlo.txt"));
+        assert!(m.entry("missing").is_err());
+        assert!(m.constant("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client,
+//! and executes them from the coordinator's hot path. Python is never
+//! on the request path.
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{EntrySpec, Manifest, TensorSpec};
+pub use pjrt::{Runtime, TensorF32};

@@ -1,0 +1,181 @@
+//! Virtual time for the simulated cloud.
+//!
+//! This host has a single CPU core and no AWS account, so wall-clock
+//! measurement of an elastic cluster is impossible (reproduction band
+//! 0/5 — see DESIGN.md §2). Instead every simulated operation advances a
+//! virtual clock by a modelled duration; parallel activities advance it
+//! by the *maximum* of their member durations (span-parallel discrete
+//! event accounting). All management-time figures (paper Figs 6–7) and
+//! speed-up curves (Fig 4) are read off this clock, while workload
+//! numerics are computed for real through the PJRT runtime.
+
+/// A labelled interval on the virtual timeline, used to regenerate the
+/// paper's management-time bar charts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub label: String,
+    pub category: SpanCategory,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+impl Span {
+    pub fn duration_s(&self) -> f64 {
+        self.end_s - self.start_s
+    }
+}
+
+/// The six bar groups of Figs 6–7, plus compute/other.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanCategory {
+    CreateResource,
+    SubmitToMaster,
+    SubmitToAllNodes,
+    FetchFromMaster,
+    FetchFromAllNodes,
+    TerminateResource,
+    Compute,
+    Other,
+}
+
+/// Virtual clock + recorded timeline.
+#[derive(Debug, Default)]
+pub struct Clock {
+    now_s: f64,
+    timeline: Vec<Span>,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time in seconds since simulation start.
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Advance by `dt` seconds (sequential activity).
+    pub fn advance(&mut self, dt_s: f64) {
+        assert!(dt_s >= 0.0, "negative time advance: {dt_s}");
+        self.now_s += dt_s;
+    }
+
+    /// Advance by the longest of a set of concurrent activities
+    /// (e.g. booting n instances in parallel).
+    pub fn advance_parallel(&mut self, durations_s: &[f64]) {
+        let max = durations_s.iter().cloned().fold(0.0, f64::max);
+        self.advance(max);
+    }
+
+    /// Run `f`, record the elapsed virtual interval under `label`.
+    pub fn span<T>(
+        &mut self,
+        category: SpanCategory,
+        label: &str,
+        f: impl FnOnce(&mut Clock) -> T,
+    ) -> T {
+        let start = self.now_s;
+        let out = f(self);
+        let end = self.now_s;
+        self.timeline.push(Span {
+            label: label.to_string(),
+            category,
+            start_s: start,
+            end_s: end,
+        });
+        out
+    }
+
+    /// Record an already-computed duration as a span and advance.
+    pub fn record(&mut self, category: SpanCategory, label: &str, dt_s: f64) {
+        let start = self.now_s;
+        self.advance(dt_s);
+        self.timeline.push(Span {
+            label: label.to_string(),
+            category,
+            start_s: start,
+            end_s: self.now_s,
+        });
+    }
+
+    /// Record a span from an explicit earlier start time to now (used
+    /// by the coordinator, which interleaves operations on several
+    /// sub-objects before closing the span).
+    pub fn push_span(&mut self, category: SpanCategory, label: &str, start_s: f64) {
+        assert!(start_s <= self.now_s, "span starts in the future");
+        self.timeline.push(Span {
+            label: label.to_string(),
+            category,
+            start_s,
+            end_s: self.now_s,
+        });
+    }
+
+    pub fn timeline(&self) -> &[Span] {
+        &self.timeline
+    }
+
+    /// Total recorded time in one category (for the bar charts).
+    pub fn category_total_s(&self, cat: SpanCategory) -> f64 {
+        self.timeline
+            .iter()
+            .filter(|s| s.category == cat)
+            .map(Span::duration_s)
+            .sum()
+    }
+
+    /// Restore a persisted clock position (timeline is not persisted —
+    /// the bar-chart spans belong to the run that produced them).
+    pub fn restore(&mut self, now_s: f64) {
+        self.now_s = now_s;
+    }
+
+    /// Drop recorded spans (keep the clock) — used between bench phases.
+    pub fn clear_timeline(&mut self) {
+        self.timeline.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = Clock::new();
+        c.advance(5.0);
+        c.advance(2.5);
+        assert_eq!(c.now_s(), 7.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn rejects_negative_advance() {
+        Clock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn parallel_takes_max() {
+        let mut c = Clock::new();
+        c.advance_parallel(&[3.0, 9.0, 1.0]);
+        assert_eq!(c.now_s(), 9.0);
+        c.advance_parallel(&[]);
+        assert_eq!(c.now_s(), 9.0);
+    }
+
+    #[test]
+    fn spans_record_intervals() {
+        let mut c = Clock::new();
+        c.span(SpanCategory::CreateResource, "create hpc_cluster", |c| {
+            c.advance(420.0);
+        });
+        c.record(SpanCategory::TerminateResource, "terminate", 35.0);
+        assert_eq!(c.timeline().len(), 2);
+        assert_eq!(c.timeline()[0].duration_s(), 420.0);
+        assert_eq!(c.category_total_s(SpanCategory::CreateResource), 420.0);
+        assert_eq!(c.category_total_s(SpanCategory::TerminateResource), 35.0);
+        assert_eq!(c.category_total_s(SpanCategory::Compute), 0.0);
+        assert_eq!(c.now_s(), 455.0);
+    }
+}

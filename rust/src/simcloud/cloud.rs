@@ -1,0 +1,866 @@
+//! The simulated-cloud facade: one `SimCloud` owns every EC2/EBS/S3
+//! entity, the virtual clock, the network model and the billing ledger.
+//! P2RAC's coordinator drives this exactly as it would drive AWS through
+//! BOTO — the lifecycle rules (unique live names, one attachment per
+//! volume, in-use resources refuse termination) are enforced here and
+//! exercised by the test suite.
+
+use super::clock::Clock;
+use super::ebs::{Snapshot, Volume, VolumeState};
+use super::ec2::{instance_type, Ami, Instance, InstanceState};
+use super::faults::FaultPlan;
+use super::network::NetworkModel;
+use super::pricing::Ledger;
+use super::s3::S3;
+use super::timing::SimParams;
+use super::vfs::Vfs;
+use crate::util::ids::IdFactory;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Errors surfaced to the coordinator / CLI.
+#[derive(Debug, thiserror::Error)]
+pub enum CloudError {
+    #[error("instance type '{0}' is not offered")]
+    UnknownInstanceType(String),
+    #[error("no such instance '{0}'")]
+    NoSuchInstance(String),
+    #[error("no such volume '{0}'")]
+    NoSuchVolume(String),
+    #[error("no such snapshot '{0}'")]
+    NoSuchSnapshot(String),
+    #[error("no such AMI '{0}'")]
+    NoSuchAmi(String),
+    #[error("volume '{0}' is attached to instance '{1}'")]
+    VolumeInUse(String, String),
+    #[error("volume '{0}' is not attached")]
+    VolumeNotAttached(String),
+    #[error("volume '{0}' has been deleted")]
+    VolumeDeleted(String),
+    #[error("instance '{0}' is not running")]
+    NotRunning(String),
+    #[error("resource '{0}' is locked (in use)")]
+    Locked(String),
+    #[error("insufficient capacity: instance launch failed")]
+    BootFailure,
+    #[error("volume attachment failed")]
+    AttachFailure,
+    #[error("instance type '{0}' requires an HVM AMI")]
+    HvmRequired(String),
+}
+
+/// The simulated IaaS account.
+pub struct SimCloud {
+    pub clock: Clock,
+    pub net: NetworkModel,
+    pub s3: S3,
+    pub ledger: Ledger,
+    pub faults: FaultPlan,
+    params: SimParams,
+    ids: IdFactory,
+    region: String,
+    amis: Vec<Ami>,
+    instances: BTreeMap<String, Instance>,
+    volumes: BTreeMap<String, Volume>,
+    snapshots: BTreeMap<String, Snapshot>,
+    volume_created_at: BTreeMap<String, f64>,
+}
+
+impl SimCloud {
+    pub fn new(params: SimParams) -> Self {
+        let mut ids = IdFactory::new(0x9A2C);
+        // The two Ubuntu AMIs from the paper (§3.1).
+        let amis = vec![
+            Ami {
+                id: ids.ami(),
+                name: "ubuntu-11.10-r-paravirtual".to_string(),
+                hvm: false,
+                preinstalled: vec!["r-base".into(), "snow".into(), "rgenoud".into()],
+            },
+            Ami {
+                id: ids.ami(),
+                name: "ubuntu-11.10-r-hvm-cluster-compute".to_string(),
+                hvm: true,
+                preinstalled: vec!["r-base".into(), "snow".into(), "rgenoud".into()],
+            },
+        ];
+        Self {
+            clock: Clock::new(),
+            net: NetworkModel::new(params.clone()),
+            s3: S3::new(),
+            ledger: Ledger::new(),
+            faults: FaultPlan::none(),
+            params,
+            ids,
+            region: "us-east-1".to_string(),
+            amis,
+            instances: BTreeMap::new(),
+            volumes: BTreeMap::new(),
+            snapshots: BTreeMap::new(),
+            volume_created_at: BTreeMap::new(),
+        }
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    // ---------------------------------------------------------------- AMIs
+
+    pub fn default_ami(&self, hvm: bool) -> &Ami {
+        self.amis
+            .iter()
+            .find(|a| a.hvm == hvm)
+            .expect("default AMIs registered in new()")
+    }
+
+    pub fn ami(&self, id: &str) -> Result<&Ami, CloudError> {
+        self.amis
+            .iter()
+            .find(|a| a.id == id)
+            .ok_or_else(|| CloudError::NoSuchAmi(id.to_string()))
+    }
+
+    pub fn amis(&self) -> &[Ami] {
+        &self.amis
+    }
+
+    // ----------------------------------------------------------- snapshots
+
+    /// Register a snapshot whose contents come from an S3-sourced vfs
+    /// (the paper's "snapshot from the same source located on S3").
+    pub fn create_snapshot(&mut self, size_gb: f64, fs: Vfs, description: &str) -> String {
+        let id = self.ids.snapshot();
+        self.snapshots.insert(
+            id.clone(),
+            Snapshot {
+                id: id.clone(),
+                size_gb,
+                fs,
+                description: description.to_string(),
+                deleted: false,
+            },
+        );
+        id
+    }
+
+    pub fn snapshot(&self, id: &str) -> Result<&Snapshot, CloudError> {
+        self.snapshots
+            .get(id)
+            .filter(|s| !s.deleted)
+            .ok_or_else(|| CloudError::NoSuchSnapshot(id.to_string()))
+    }
+
+    pub fn delete_snapshot(&mut self, id: &str) -> Result<(), CloudError> {
+        let s = self
+            .snapshots
+            .get_mut(id)
+            .ok_or_else(|| CloudError::NoSuchSnapshot(id.to_string()))?;
+        s.deleted = true;
+        Ok(())
+    }
+
+    pub fn live_snapshots(&self) -> Vec<&Snapshot> {
+        self.snapshots.values().filter(|s| !s.deleted).collect()
+    }
+
+    // ------------------------------------------------------------- volumes
+
+    /// Create an empty volume (no time cost beyond the API call).
+    pub fn create_volume(&mut self, size_gb: f64) -> String {
+        let id = self.ids.volume();
+        self.volumes.insert(
+            id.clone(),
+            Volume {
+                id: id.clone(),
+                size_gb,
+                state: VolumeState::Available,
+                attached_to: None,
+                source_snapshot: None,
+                fs: Vfs::new(),
+            },
+        );
+        self.volume_created_at.insert(id.clone(), self.clock.now_s());
+        id
+    }
+
+    /// Materialise a new volume from a snapshot (advances virtual time —
+    /// EBS lazily hydrates, modelled as base + per-GiB).
+    pub fn create_volume_from_snapshot(&mut self, snap_id: &str) -> Result<String, CloudError> {
+        let snap = self.snapshot(snap_id)?.clone();
+        let dt = self.params.volume_from_snap_base_s
+            + self.params.volume_from_snap_s_per_gb * snap.size_gb;
+        self.clock.advance(dt);
+        let id = self.ids.volume();
+        self.volumes.insert(
+            id.clone(),
+            Volume {
+                id: id.clone(),
+                size_gb: snap.size_gb,
+                state: VolumeState::Available,
+                attached_to: None,
+                source_snapshot: Some(snap_id.to_string()),
+                fs: snap.fs,
+            },
+        );
+        self.volume_created_at.insert(id.clone(), self.clock.now_s());
+        Ok(id)
+    }
+
+    pub fn volume(&self, id: &str) -> Result<&Volume, CloudError> {
+        self.volumes
+            .get(id)
+            .filter(|v| v.is_live())
+            .ok_or_else(|| CloudError::NoSuchVolume(id.to_string()))
+    }
+
+    pub fn volume_fs_mut(&mut self, id: &str) -> Result<&mut Vfs, CloudError> {
+        let v = self
+            .volumes
+            .get_mut(id)
+            .filter(|v| v.is_live())
+            .ok_or_else(|| CloudError::NoSuchVolume(id.to_string()))?;
+        Ok(&mut v.fs)
+    }
+
+    pub fn live_volumes(&self) -> Vec<&Volume> {
+        self.volumes.values().filter(|v| v.is_live()).collect()
+    }
+
+    pub fn attach_volume(&mut self, vol_id: &str, inst_id: &str) -> Result<(), CloudError> {
+        if self.faults.take_attach_failure() {
+            return Err(CloudError::AttachFailure);
+        }
+        let inst_exists = self
+            .instances
+            .get(inst_id)
+            .map(|i| i.is_live())
+            .unwrap_or(false);
+        if !inst_exists {
+            return Err(CloudError::NoSuchInstance(inst_id.to_string()));
+        }
+        let v = self
+            .volumes
+            .get_mut(vol_id)
+            .ok_or_else(|| CloudError::NoSuchVolume(vol_id.to_string()))?;
+        match v.state {
+            VolumeState::Deleted => return Err(CloudError::VolumeDeleted(vol_id.to_string())),
+            VolumeState::Attached => {
+                return Err(CloudError::VolumeInUse(
+                    vol_id.to_string(),
+                    v.attached_to.clone().unwrap_or_default(),
+                ))
+            }
+            VolumeState::Available => {}
+        }
+        v.state = VolumeState::Attached;
+        v.attached_to = Some(inst_id.to_string());
+        self.instances.get_mut(inst_id).unwrap().attached_volume = Some(vol_id.to_string());
+        self.clock.advance(self.params.volume_attach_s);
+        Ok(())
+    }
+
+    pub fn detach_volume(&mut self, vol_id: &str) -> Result<(), CloudError> {
+        let v = self
+            .volumes
+            .get_mut(vol_id)
+            .ok_or_else(|| CloudError::NoSuchVolume(vol_id.to_string()))?;
+        let Some(inst) = v.attached_to.take() else {
+            return Err(CloudError::VolumeNotAttached(vol_id.to_string()));
+        };
+        v.state = VolumeState::Available;
+        if let Some(i) = self.instances.get_mut(&inst) {
+            i.attached_volume = None;
+        }
+        self.clock.advance(self.params.volume_attach_s);
+        Ok(())
+    }
+
+    pub fn delete_volume(&mut self, vol_id: &str) -> Result<(), CloudError> {
+        let created = self.volume_created_at.get(vol_id).copied().unwrap_or(0.0);
+        let now = self.clock.now_s();
+        let v = self
+            .volumes
+            .get_mut(vol_id)
+            .ok_or_else(|| CloudError::NoSuchVolume(vol_id.to_string()))?;
+        if let Some(inst) = &v.attached_to {
+            return Err(CloudError::VolumeInUse(vol_id.to_string(), inst.clone()));
+        }
+        if v.state == VolumeState::Deleted {
+            return Err(CloudError::VolumeDeleted(vol_id.to_string()));
+        }
+        v.state = VolumeState::Deleted;
+        let size = v.size_gb;
+        let id = v.id.clone();
+        self.ledger.bill_volume(&id, size, created, now);
+        Ok(())
+    }
+
+    // ----------------------------------------------------------- instances
+
+    /// Launch a batch of `n` instances (one AWS RunInstances call).
+    /// Advances the clock by the batch boot time; installs `extra_libs`
+    /// (the rlibs config file) on every instance.
+    pub fn run_instances(
+        &mut self,
+        n: usize,
+        type_name: &str,
+        ami_id: &str,
+        extra_libs: &[String],
+    ) -> Result<Vec<String>, CloudError> {
+        let itype = instance_type(type_name)
+            .ok_or_else(|| CloudError::UnknownInstanceType(type_name.to_string()))?;
+        let ami = self.ami(ami_id)?.clone();
+        if itype.hvm && !ami.hvm {
+            return Err(CloudError::HvmRequired(type_name.to_string()));
+        }
+        if self.faults.take_boot_failure() {
+            // The failed API call still costs a round trip.
+            self.clock.advance(self.params.per_instance_extra_s);
+            return Err(CloudError::BootFailure);
+        }
+        self.clock.advance(self.params.batch_boot_s(n));
+        if !extra_libs.is_empty() {
+            // Installs run in parallel across the batch; pay once.
+            self.clock
+                .advance(self.params.rlib_install_s * extra_libs.len() as f64);
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let id = self.ids.instance();
+            let dns = self.ids.public_dns(&self.region);
+            let mut libs = ami.preinstalled.clone();
+            libs.extend(extra_libs.iter().cloned());
+            self.instances.insert(
+                id.clone(),
+                Instance {
+                    id: id.clone(),
+                    name: None,
+                    itype,
+                    ami_id: ami.id.clone(),
+                    state: InstanceState::Running,
+                    public_dns: dns,
+                    tags: BTreeMap::new(),
+                    attached_volume: None,
+                    nfs_mount_from: None,
+                    fs: Vfs::new(),
+                    installed_libs: libs,
+                    locked: false,
+                    launched_at_s: self.clock.now_s(),
+                    terminated_at_s: None,
+                    description: String::new(),
+                },
+            );
+            out.push(id);
+        }
+        Ok(out)
+    }
+
+    pub fn instance(&self, id: &str) -> Result<&Instance, CloudError> {
+        self.instances
+            .get(id)
+            .ok_or_else(|| CloudError::NoSuchInstance(id.to_string()))
+    }
+
+    pub fn instance_mut(&mut self, id: &str) -> Result<&mut Instance, CloudError> {
+        self.instances
+            .get_mut(id)
+            .ok_or_else(|| CloudError::NoSuchInstance(id.to_string()))
+    }
+
+    pub fn instance_fs_mut(&mut self, id: &str) -> Result<&mut Vfs, CloudError> {
+        let i = self.instance_mut(id)?;
+        if i.state != InstanceState::Running {
+            return Err(CloudError::NotRunning(id.to_string()));
+        }
+        Ok(&mut i.fs)
+    }
+
+    /// Split-borrow helper: hand out the instance's filesystem together
+    /// with the network model and fault plan (needed by the data-sync
+    /// layer, which reads `net`, mutates the fs and may consume faults).
+    pub fn with_instance_fs<T>(
+        &mut self,
+        id: &str,
+        f: impl FnOnce(&mut Vfs, &NetworkModel, &mut FaultPlan) -> T,
+    ) -> Result<T, CloudError> {
+        let i = self
+            .instances
+            .get_mut(id)
+            .ok_or_else(|| CloudError::NoSuchInstance(id.to_string()))?;
+        if i.state != InstanceState::Running {
+            return Err(CloudError::NotRunning(id.to_string()));
+        }
+        Ok(f(&mut i.fs, &self.net, &mut self.faults))
+    }
+
+    /// Same split-borrow helper for a volume's persistent filesystem.
+    pub fn with_volume_fs<T>(
+        &mut self,
+        id: &str,
+        f: impl FnOnce(&mut Vfs, &NetworkModel, &mut FaultPlan) -> T,
+    ) -> Result<T, CloudError> {
+        let v = self
+            .volumes
+            .get_mut(id)
+            .filter(|v| v.is_live())
+            .ok_or_else(|| CloudError::NoSuchVolume(id.to_string()))?;
+        Ok(f(&mut v.fs, &self.net, &mut self.faults))
+    }
+
+    pub fn live_instances(&self) -> Vec<&Instance> {
+        self.instances.values().filter(|i| i.is_live()).collect()
+    }
+
+    /// Find a live instance by its Analyst-facing name tag.
+    pub fn find_by_name(&self, name: &str) -> Option<&Instance> {
+        self.instances
+            .values()
+            .find(|i| i.is_live() && i.name.as_deref() == Some(name))
+    }
+
+    pub fn set_name(&mut self, id: &str, name: &str) -> Result<(), CloudError> {
+        self.instance_mut(id)?.name = Some(name.to_string());
+        Ok(())
+    }
+
+    pub fn set_tag(&mut self, id: &str, key: &str, value: &str) -> Result<(), CloudError> {
+        self.instance_mut(id)?
+            .tags
+            .insert(key.to_string(), value.to_string());
+        Ok(())
+    }
+
+    pub fn set_lock(&mut self, id: &str, locked: bool) -> Result<(), CloudError> {
+        self.instance_mut(id)?.locked = locked;
+        Ok(())
+    }
+
+    /// Export `vol_id` (attached to `master`) over NFS to `workers`.
+    pub fn nfs_export(
+        &mut self,
+        master: &str,
+        vol_id: &str,
+        workers: &[String],
+    ) -> Result<(), CloudError> {
+        let m = self.instance(master)?;
+        if m.attached_volume.as_deref() != Some(vol_id) {
+            return Err(CloudError::VolumeNotAttached(vol_id.to_string()));
+        }
+        for w in workers {
+            self.instance_mut(w)?.nfs_mount_from = Some(vol_id.to_string());
+        }
+        // Mounting happens in parallel; single config cost.
+        self.clock
+            .advance(self.params.per_worker_config_s * workers.len() as f64);
+        Ok(())
+    }
+
+    pub fn nfs_unexport(&mut self, workers: &[String]) -> Result<(), CloudError> {
+        for w in workers {
+            self.instance_mut(w)?.nfs_mount_from = None;
+        }
+        Ok(())
+    }
+
+    /// Terminate a batch of instances in parallel (one API call): detach
+    /// volumes, bill usage, advance by the flat termination time.
+    pub fn terminate_instances(&mut self, ids: &[String]) -> Result<(), CloudError> {
+        // Validate first: refuse if any is locked.
+        for id in ids {
+            let i = self.instance(id)?;
+            if i.locked {
+                return Err(CloudError::Locked(id.clone()));
+            }
+        }
+        let now_before = self.clock.now_s();
+        self.clock.advance(self.params.terminate_s);
+        let end = self.clock.now_s();
+        let _ = now_before;
+        for id in ids {
+            // Detach any volume (without extra per-instance time).
+            let vol = self.instances.get(id).and_then(|i| i.attached_volume.clone());
+            if let Some(v) = vol {
+                if let Some(volume) = self.volumes.get_mut(&v) {
+                    volume.state = VolumeState::Available;
+                    volume.attached_to = None;
+                }
+            }
+            let i = self.instances.get_mut(id).unwrap();
+            i.attached_volume = None;
+            i.nfs_mount_from = None;
+            i.state = InstanceState::Terminated;
+            i.terminated_at_s = Some(end);
+            let (iid, api, price, start) = (
+                i.id.clone(),
+                i.itype.api_name,
+                i.itype.price_cents_hour,
+                i.launched_at_s,
+            );
+            self.ledger.bill_instance(&iid, api, price, start, end);
+        }
+        Ok(())
+    }
+}
+
+// -------------------------------------------------------- persistence
+
+impl SimCloud {
+    /// Serialize the account state (live resources, billing, clock
+    /// position) for cross-invocation CLI sessions. Terminated
+    /// instances and deleted volumes/snapshots are dropped — their
+    /// billing is already in the ledger items.
+    pub fn to_json(&self) -> Json {
+        let mut root = Json::obj();
+        root.set("now_s", Json::num(self.clock.now_s()));
+        root.set("id_counter", Json::num(self.ids.counter() as f64));
+        let mut insts = Json::obj();
+        for i in self.instances.values().filter(|i| i.is_live()) {
+            let mut o = Json::obj();
+            o.set("name", i.name.as_ref().map(Json::str).unwrap_or(Json::Null));
+            o.set("type", Json::str(i.itype.api_name));
+            o.set("ami", Json::str(&i.ami_id));
+            o.set("dns", Json::str(&i.public_dns));
+            let mut tags = Json::obj();
+            for (k, v) in &i.tags {
+                tags.set(k, Json::str(v));
+            }
+            o.set("tags", tags);
+            o.set(
+                "volume",
+                i.attached_volume.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            o.set(
+                "nfs_from",
+                i.nfs_mount_from.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            o.set("fs", i.fs.to_json());
+            o.set("libs", Json::arr_str(i.installed_libs.clone()));
+            o.set("locked", Json::Bool(i.locked));
+            o.set("launched_at_s", Json::num(i.launched_at_s));
+            o.set("description", Json::str(&i.description));
+            insts.set(&i.id, o);
+        }
+        root.set("instances", insts);
+        let mut vols = Json::obj();
+        for v in self.volumes.values().filter(|v| v.is_live()) {
+            let mut o = Json::obj();
+            o.set("size_gb", Json::num(v.size_gb));
+            o.set(
+                "attached_to",
+                v.attached_to.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            o.set(
+                "snapshot",
+                v.source_snapshot.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            o.set("fs", v.fs.to_json());
+            o.set(
+                "created_at_s",
+                Json::num(self.volume_created_at.get(&v.id).copied().unwrap_or(0.0)),
+            );
+            vols.set(&v.id, o);
+        }
+        root.set("volumes", vols);
+        let mut snaps = Json::obj();
+        for s in self.snapshots.values().filter(|s| !s.deleted) {
+            let mut o = Json::obj();
+            o.set("size_gb", Json::num(s.size_gb));
+            o.set("description", Json::str(&s.description));
+            o.set("fs", s.fs.to_json());
+            snaps.set(&s.id, o);
+        }
+        root.set("snapshots", snaps);
+        root.set("s3", self.s3.to_json());
+        let mut ledger = Vec::new();
+        for item in self.ledger.items() {
+            ledger.push(Json::from_pairs(vec![
+                ("id", Json::str(&item.resource_id)),
+                ("detail", Json::str(&item.detail)),
+                ("cents", Json::num(item.cents as f64)),
+            ]));
+        }
+        root.set("ledger", Json::Arr(ledger));
+        root
+    }
+
+    /// Restore a persisted account into a fresh `SimCloud` with the
+    /// given params.
+    pub fn from_json(params: SimParams, j: &Json) -> anyhow::Result<Self> {
+        let mut c = SimCloud::new(params);
+        c.clock.restore(j.req_f64("now_s")?);
+        c.ids.set_counter(j.req_u64("id_counter")?);
+        for (id, o) in j
+            .get("snapshots")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("missing snapshots"))?
+        {
+            c.snapshots.insert(
+                id.clone(),
+                Snapshot {
+                    id: id.clone(),
+                    size_gb: o.req_f64("size_gb")?,
+                    fs: Vfs::from_json(o.get("fs").unwrap_or(&Json::obj()))?,
+                    description: o.req_str("description")?,
+                    deleted: false,
+                },
+            );
+        }
+        for (id, o) in j
+            .get("volumes")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("missing volumes"))?
+        {
+            let attached = o.opt_str("attached_to");
+            c.volumes.insert(
+                id.clone(),
+                Volume {
+                    id: id.clone(),
+                    size_gb: o.req_f64("size_gb")?,
+                    state: if attached.is_some() {
+                        VolumeState::Attached
+                    } else {
+                        VolumeState::Available
+                    },
+                    attached_to: attached,
+                    source_snapshot: o.opt_str("snapshot"),
+                    fs: Vfs::from_json(o.get("fs").unwrap_or(&Json::obj()))?,
+                },
+            );
+            c.volume_created_at
+                .insert(id.clone(), o.req_f64("created_at_s").unwrap_or(0.0));
+        }
+        for (id, o) in j
+            .get("instances")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("missing instances"))?
+        {
+            let tname = o.req_str("type")?;
+            let itype = instance_type(&tname)
+                .ok_or_else(|| anyhow::anyhow!("unknown persisted type {tname}"))?;
+            let mut tags = BTreeMap::new();
+            if let Some(t) = o.get("tags").and_then(Json::as_obj) {
+                for (k, v) in t {
+                    if let Some(s) = v.as_str() {
+                        tags.insert(k.clone(), s.to_string());
+                    }
+                }
+            }
+            let libs = o
+                .get("libs")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+                .unwrap_or_default();
+            c.instances.insert(
+                id.clone(),
+                Instance {
+                    id: id.clone(),
+                    name: o.opt_str("name"),
+                    itype,
+                    ami_id: o.req_str("ami")?,
+                    state: InstanceState::Running,
+                    public_dns: o.req_str("dns")?,
+                    tags,
+                    attached_volume: o.opt_str("volume"),
+                    nfs_mount_from: o.opt_str("nfs_from"),
+                    fs: Vfs::from_json(o.get("fs").unwrap_or(&Json::obj()))?,
+                    installed_libs: libs,
+                    locked: o.opt_bool("locked", false),
+                    launched_at_s: o.req_f64("launched_at_s")?,
+                    terminated_at_s: None,
+                    description: o.opt_str("description").unwrap_or_default(),
+                },
+            );
+        }
+        if let Some(s3) = j.get("s3") {
+            c.s3 = S3::from_json(s3)?;
+        }
+        if let Some(items) = j.get("ledger").and_then(Json::as_arr) {
+            for item in items {
+                // Re-book as flat items (already-computed cents).
+                c.ledger.push_raw(
+                    &item.req_str("id")?,
+                    &item.req_str("detail")?,
+                    item.req_u64("cents")?,
+                );
+            }
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cloud() -> SimCloud {
+        SimCloud::new(SimParams::default())
+    }
+
+    #[test]
+    fn launch_and_terminate_lifecycle() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c.run_instances(2, "m2.2xlarge", &ami, &[]).unwrap();
+        assert_eq!(ids.len(), 2);
+        assert!(c.clock.now_s() > 0.0);
+        for id in &ids {
+            assert_eq!(c.instance(id).unwrap().state, InstanceState::Running);
+        }
+        c.terminate_instances(&ids).unwrap();
+        for id in &ids {
+            assert_eq!(c.instance(id).unwrap().state, InstanceState::Terminated);
+        }
+        assert!(c.ledger.total_cents() >= 180, "two m2.2xlarge hours");
+        assert_eq!(c.live_instances().len(), 0);
+    }
+
+    #[test]
+    fn unknown_type_and_ami_fail() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        assert!(matches!(
+            c.run_instances(1, "z9.mega", &ami, &[]),
+            Err(CloudError::UnknownInstanceType(_))
+        ));
+        assert!(matches!(
+            c.run_instances(1, "m2.2xlarge", "ami-nope", &[]),
+            Err(CloudError::NoSuchAmi(_))
+        ));
+    }
+
+    #[test]
+    fn hvm_type_needs_hvm_ami() {
+        let mut c = cloud();
+        let pv = c.default_ami(false).id.clone();
+        assert!(matches!(
+            c.run_instances(1, "cc1.4xlarge", &pv, &[]),
+            Err(CloudError::HvmRequired(_))
+        ));
+        let hvm = c.default_ami(true).id.clone();
+        assert!(c.run_instances(1, "cc1.4xlarge", &hvm, &[]).is_ok());
+    }
+
+    #[test]
+    fn volume_attach_rules() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c.run_instances(2, "m2.2xlarge", &ami, &[]).unwrap();
+        let vol = c.create_volume(100.0);
+        c.attach_volume(&vol, &ids[0]).unwrap();
+        // One volume attaches to at most one instance (paper §3.2.1).
+        assert!(matches!(
+            c.attach_volume(&vol, &ids[1]),
+            Err(CloudError::VolumeInUse(_, _))
+        ));
+        // Attached volumes refuse deletion.
+        assert!(matches!(
+            c.delete_volume(&vol),
+            Err(CloudError::VolumeInUse(_, _))
+        ));
+        c.detach_volume(&vol).unwrap();
+        c.delete_volume(&vol).unwrap();
+        assert!(matches!(c.volume(&vol), Err(CloudError::NoSuchVolume(_))));
+    }
+
+    #[test]
+    fn snapshot_materialises_contents() {
+        let mut c = cloud();
+        let mut fs = Vfs::new();
+        fs.write("losses/industry.bin", vec![9u8; 1024]);
+        let snap = c.create_snapshot(10.0, fs, "event-loss table");
+        let vol = c.create_volume_from_snapshot(&snap).unwrap();
+        assert_eq!(
+            c.volume(&vol).unwrap().fs.read("losses/industry.bin"),
+            Some(vec![9u8; 1024].as_slice())
+        );
+        assert_eq!(c.volume(&vol).unwrap().source_snapshot.as_deref(), Some(snap.as_str()));
+    }
+
+    #[test]
+    fn volume_survives_instance_termination() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c.run_instances(1, "m2.4xlarge", &ami, &[]).unwrap();
+        let vol = c.create_volume(50.0);
+        c.attach_volume(&vol, &ids[0]).unwrap();
+        c.instance_fs_mut(&ids[0]).unwrap().write("tmp", vec![1]);
+        c.volume_fs_mut(&vol).unwrap().write("persist.bin", vec![2]);
+        c.terminate_instances(&ids).unwrap();
+        // EBS persistence: volume and its data outlive the instance.
+        let v = c.volume(&vol).unwrap();
+        assert_eq!(v.state, VolumeState::Available);
+        assert_eq!(v.fs.read("persist.bin"), Some([2u8].as_slice()));
+    }
+
+    #[test]
+    fn locked_instance_refuses_termination() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c.run_instances(1, "m2.2xlarge", &ami, &[]).unwrap();
+        c.set_lock(&ids[0], true).unwrap();
+        assert!(matches!(
+            c.terminate_instances(&ids),
+            Err(CloudError::Locked(_))
+        ));
+        c.set_lock(&ids[0], false).unwrap();
+        c.terminate_instances(&ids).unwrap();
+    }
+
+    #[test]
+    fn boot_fault_injection() {
+        let mut c = cloud();
+        c.faults.boot_failures = 1;
+        let ami = c.default_ami(false).id.clone();
+        assert!(matches!(
+            c.run_instances(4, "m2.2xlarge", &ami, &[]),
+            Err(CloudError::BootFailure)
+        ));
+        // Retry succeeds.
+        assert!(c.run_instances(4, "m2.2xlarge", &ami, &[]).is_ok());
+    }
+
+    #[test]
+    fn nfs_export_to_workers() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c.run_instances(3, "m2.2xlarge", &ami, &[]).unwrap();
+        let vol = c.create_volume(10.0);
+        c.attach_volume(&vol, &ids[0]).unwrap();
+        c.nfs_export(&ids[0], &vol, &ids[1..].to_vec()).unwrap();
+        assert_eq!(
+            c.instance(&ids[1]).unwrap().nfs_mount_from.as_deref(),
+            Some(vol.as_str())
+        );
+        // Export requires the volume to actually be on the master.
+        let vol2 = c.create_volume(10.0);
+        assert!(matches!(
+            c.nfs_export(&ids[0], &vol2, &ids[1..].to_vec()),
+            Err(CloudError::VolumeNotAttached(_))
+        ));
+    }
+
+    #[test]
+    fn names_resolve_to_live_instances_only() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c.run_instances(1, "m2.2xlarge", &ami, &[]).unwrap();
+        c.set_name(&ids[0], "hpc_instance").unwrap();
+        assert!(c.find_by_name("hpc_instance").is_some());
+        c.terminate_instances(&ids).unwrap();
+        assert!(c.find_by_name("hpc_instance").is_none());
+    }
+
+    #[test]
+    fn boot_time_grows_with_batch_size() {
+        let mut a = cloud();
+        let ami_a = a.default_ami(false).id.clone();
+        a.run_instances(2, "m2.2xlarge", &ami_a, &[]).unwrap();
+        let t2 = a.clock.now_s();
+        let mut b = cloud();
+        let ami_b = b.default_ami(false).id.clone();
+        b.run_instances(16, "m2.2xlarge", &ami_b, &[]).unwrap();
+        let t16 = b.clock.now_s();
+        assert!(t16 > t2);
+    }
+}

@@ -1,0 +1,64 @@
+//! Simulated Elastic Block Storage: persistent volumes, snapshots, and
+//! the attachment rules the paper's tools rely on (one volume attaches
+//! to at most one instance; snapshots materialise new volumes; volumes
+//! outlive instances unless `-deletevol` is passed).
+
+use super::vfs::Vfs;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VolumeState {
+    Available,
+    Attached,
+    Deleted,
+}
+
+/// A persistent EBS volume; its `fs` survives instance termination.
+#[derive(Clone, Debug)]
+pub struct Volume {
+    pub id: String,
+    pub size_gb: f64,
+    pub state: VolumeState,
+    /// Instance id the volume is attached to, if any.
+    pub attached_to: Option<String>,
+    /// Snapshot this volume was created from, if any.
+    pub source_snapshot: Option<String>,
+    /// Persistent contents (the Analyst's large, rarely-changing data).
+    pub fs: Vfs,
+}
+
+impl Volume {
+    pub fn is_live(&self) -> bool {
+        self.state != VolumeState::Deleted
+    }
+}
+
+/// A point-in-time snapshot of a volume, stored (conceptually) in S3.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub id: String,
+    pub size_gb: f64,
+    /// Frozen copy of the source volume's contents.
+    pub fs: Vfs,
+    pub description: String,
+    pub deleted: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_liveness() {
+        let mut v = Volume {
+            id: "vol-1".into(),
+            size_gb: 100.0,
+            state: VolumeState::Available,
+            attached_to: None,
+            source_snapshot: None,
+            fs: Vfs::new(),
+        };
+        assert!(v.is_live());
+        v.state = VolumeState::Deleted;
+        assert!(!v.is_live());
+    }
+}

@@ -1,0 +1,184 @@
+//! Simulated EC2: the instance-type catalog (paper Table I, 2012
+//! pricing), Amazon Machine Images, and instance records with the
+//! Pending → Running → Terminated lifecycle.
+
+use super::vfs::Vfs;
+use std::collections::BTreeMap;
+
+/// An EC2 instance type. Speeds are relative per-core factors against
+/// Desktop A (i7-2600 @ 3.4 GHz) = 1.0, per DESIGN.md §7.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InstanceTypeSpec {
+    pub api_name: &'static str,
+    pub cores: usize,
+    /// EC2 compute units (Amazon's 2012 marketing unit, informational).
+    pub ecu: f64,
+    pub mem_gb: f64,
+    pub storage_gb: f64,
+    /// USD cents per instance-hour (paper: m2.2xlarge $0.90/h,
+    /// m2.4xlarge $1.80/h).
+    pub price_cents_hour: u64,
+    /// Per-core relative speed vs Desktop A.
+    pub core_speed: f64,
+    /// Hardware-virtual-machine (cluster-compute style) image required?
+    pub hvm: bool,
+}
+
+/// The catalog used in the paper's experiments plus the two types its
+/// examples mention.
+pub const INSTANCE_TYPES: &[InstanceTypeSpec] = &[
+    InstanceTypeSpec {
+        api_name: "m1.large",
+        cores: 2,
+        ecu: 4.0,
+        mem_gb: 7.5,
+        storage_gb: 850.0,
+        price_cents_hour: 32,
+        core_speed: 0.70,
+        hvm: false,
+    },
+    InstanceTypeSpec {
+        api_name: "m2.2xlarge",
+        cores: 4,
+        ecu: 13.0,
+        mem_gb: 34.2,
+        storage_gb: 850.0,
+        price_cents_hour: 90,
+        core_speed: 0.88,
+        hvm: false,
+    },
+    InstanceTypeSpec {
+        api_name: "m2.4xlarge",
+        cores: 8,
+        ecu: 26.0,
+        mem_gb: 68.4,
+        storage_gb: 1690.0,
+        price_cents_hour: 180,
+        core_speed: 0.88,
+        hvm: false,
+    },
+    InstanceTypeSpec {
+        api_name: "cc1.4xlarge",
+        cores: 8,
+        ecu: 33.5,
+        mem_gb: 23.0,
+        storage_gb: 1690.0,
+        price_cents_hour: 130,
+        core_speed: 0.95,
+        hvm: true,
+    },
+];
+
+pub fn instance_type(api_name: &str) -> Option<&'static InstanceTypeSpec> {
+    INSTANCE_TYPES.iter().find(|t| t.api_name == api_name)
+}
+
+/// An Amazon Machine Image. The paper uses two Ubuntu AMIs: one HVM
+/// (cluster-compute) and one paravirtual.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ami {
+    pub id: String,
+    pub name: String,
+    pub hvm: bool,
+    /// Pre-installed libraries (the base image the paper describes ships
+    /// R + SNOW; extra libs come from the rlibs config file at boot).
+    pub preinstalled: Vec<String>,
+}
+
+/// Instance lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstanceState {
+    Pending,
+    Running,
+    ShuttingDown,
+    Terminated,
+}
+
+/// One simulated EC2 instance.
+#[derive(Clone, Debug)]
+pub struct Instance {
+    pub id: String,
+    /// Analyst-facing name tag (unique among live instances).
+    pub name: Option<String>,
+    pub itype: &'static InstanceTypeSpec,
+    pub ami_id: String,
+    pub state: InstanceState,
+    pub public_dns: String,
+    pub tags: BTreeMap<String, String>,
+    /// Attached EBS volume, if any.
+    pub attached_volume: Option<String>,
+    /// NFS mount of a volume exported by another instance (cluster
+    /// workers mount the master's volume).
+    pub nfs_mount_from: Option<String>,
+    /// Local instance storage: project dirs, results, installed libs.
+    pub fs: Vfs,
+    /// Installed library packages (base AMI + rlibs config).
+    pub installed_libs: Vec<String>,
+    /// Locked for a run (`ec2resourcelock -inuse`).
+    pub locked: bool,
+    /// Virtual time the instance entered Running (for billing).
+    pub launched_at_s: f64,
+    /// Virtual time it terminated, if it did.
+    pub terminated_at_s: Option<f64>,
+    pub description: String,
+}
+
+impl Instance {
+    pub fn is_live(&self) -> bool {
+        matches!(self.state, InstanceState::Pending | InstanceState::Running)
+    }
+
+    /// Effective compute throughput in Desktop-A-core-equivalents.
+    pub fn compute_power(&self) -> f64 {
+        self.itype.cores as f64 * self.itype.core_speed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table1() {
+        let m22 = instance_type("m2.2xlarge").unwrap();
+        assert_eq!(m22.cores, 4);
+        assert_eq!(m22.mem_gb, 34.2);
+        assert_eq!(m22.storage_gb, 850.0);
+        assert_eq!(m22.price_cents_hour, 90);
+
+        let m24 = instance_type("m2.4xlarge").unwrap();
+        assert_eq!(m24.cores, 8);
+        assert_eq!(m24.mem_gb, 68.4);
+        assert_eq!(m24.storage_gb, 1690.0);
+        assert_eq!(m24.price_cents_hour, 180);
+    }
+
+    #[test]
+    fn unknown_type_is_none() {
+        assert!(instance_type("z9.mega").is_none());
+    }
+
+    #[test]
+    fn compute_power_scales_with_cores() {
+        let mk = |t: &'static InstanceTypeSpec| Instance {
+            id: "i-x".into(),
+            name: None,
+            itype: t,
+            ami_id: "ami-x".into(),
+            state: InstanceState::Running,
+            public_dns: "d".into(),
+            tags: BTreeMap::new(),
+            attached_volume: None,
+            nfs_mount_from: None,
+            fs: Vfs::new(),
+            installed_libs: vec![],
+            locked: false,
+            launched_at_s: 0.0,
+            terminated_at_s: None,
+            description: String::new(),
+        };
+        let a = mk(instance_type("m2.2xlarge").unwrap());
+        let b = mk(instance_type("m2.4xlarge").unwrap());
+        assert!((b.compute_power() / a.compute_power() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,65 @@
+//! Deterministic failure injection for tests and benches.
+//!
+//! Real EC2 launches fail, volumes wedge, and transfers drop. Tests arm
+//! specific faults; the simulated cloud consumes them at the next
+//! matching operation, so failure handling in the coordinator is
+//! exercised without nondeterminism.
+
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Fail the next `n` instance launches (insufficient capacity).
+    pub boot_failures: usize,
+    /// Fail the next `n` volume attachments.
+    pub attach_failures: usize,
+    /// Interrupt the next `n` data transfers mid-flight (the transfer
+    /// must be retried; rsync then only re-sends missing blocks).
+    pub transfer_interrupts: usize,
+    /// Fail the next `n` script executions on a worker.
+    pub exec_failures: usize,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Consume one armed boot failure, if any.
+    pub fn take_boot_failure(&mut self) -> bool {
+        take(&mut self.boot_failures)
+    }
+    pub fn take_attach_failure(&mut self) -> bool {
+        take(&mut self.attach_failures)
+    }
+    pub fn take_transfer_interrupt(&mut self) -> bool {
+        take(&mut self.transfer_interrupts)
+    }
+    pub fn take_exec_failure(&mut self) -> bool {
+        take(&mut self.exec_failures)
+    }
+}
+
+fn take(n: &mut usize) -> bool {
+    if *n > 0 {
+        *n -= 1;
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faults_consume_once() {
+        let mut f = FaultPlan {
+            boot_failures: 2,
+            ..FaultPlan::none()
+        };
+        assert!(f.take_boot_failure());
+        assert!(f.take_boot_failure());
+        assert!(!f.take_boot_failure());
+        assert!(!f.take_attach_failure());
+    }
+}

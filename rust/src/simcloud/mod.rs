@@ -1,0 +1,29 @@
+//! Simulated IaaS substrate (the paper's Amazon EC2/EBS/S3).
+//!
+//! No AWS account exists in this environment (reproduction band 0/5), so
+//! P2RAC drives a deterministic simulated cloud instead: the Table-I
+//! instance catalog, AMIs, volumes/snapshots, a WAN/LAN network model
+//! with a virtualisation penalty, per-instance virtual filesystems with
+//! *real bytes* (so the rsync data sync is genuine), usage billing, and
+//! a virtual clock that every operation advances by a calibrated
+//! duration (DESIGN.md §2, §7).
+
+pub mod clock;
+pub mod cloud;
+pub mod ebs;
+pub mod ec2;
+pub mod faults;
+pub mod network;
+pub mod pricing;
+pub mod s3;
+pub mod timing;
+pub mod vfs;
+
+pub use clock::{Clock, Span, SpanCategory};
+pub use cloud::{CloudError, SimCloud};
+pub use ebs::{Snapshot, Volume, VolumeState};
+pub use ec2::{instance_type, Ami, Instance, InstanceState, InstanceTypeSpec, INSTANCE_TYPES};
+pub use faults::FaultPlan;
+pub use network::{Link, NetworkModel};
+pub use timing::SimParams;
+pub use vfs::Vfs;

@@ -1,0 +1,159 @@
+//! Network time model for the simulated cloud.
+//!
+//! Two link classes: WAN (Analyst site ↔ cloud, the rsync path) and LAN
+//! (instance ↔ instance inside a cluster placement group). Collective
+//! operations pay the virtualisation overhead the paper identifies as
+//! the cause of the parallel-efficiency drop beyond 4 instances.
+
+use super::timing::SimParams;
+
+/// Which link a transfer crosses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Link {
+    /// Analyst workstation ↔ cloud front door.
+    Wan,
+    /// Between instances inside the cloud (NFS, MPI-style traffic).
+    Lan,
+}
+
+/// Pure-function network model (all state lives in `SimParams`).
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    params: SimParams,
+}
+
+impl NetworkModel {
+    pub fn new(params: SimParams) -> Self {
+        Self { params }
+    }
+
+    pub fn params(&self) -> &SimParams {
+        &self.params
+    }
+
+    fn bw(&self, link: Link) -> f64 {
+        match link {
+            Link::Wan => self.params.wan_bw_bytes_s,
+            Link::Lan => self.params.lan_bw_bytes_s,
+        }
+    }
+
+    fn rtt(&self, link: Link) -> f64 {
+        match link {
+            Link::Wan => self.params.wan_rtt_s,
+            Link::Lan => self.params.lan_rtt_s,
+        }
+    }
+
+    /// Point-to-point transfer of `bytes` (+ per-file protocol chatter).
+    pub fn transfer_s(&self, bytes: u64, n_files: usize, link: Link) -> f64 {
+        let payload = bytes as f64 * self.params.data_scale;
+        self.rtt(link) + payload / self.bw(link) + self.params.per_file_overhead_s * n_files as f64
+    }
+
+    /// Fan-out of the same `bytes` payload to `n_dest` destinations over
+    /// a shared uplink with `fanout_streams` concurrent streams: the
+    /// paper observes submit-to-all-nodes time growing with cluster
+    /// size even though transfers are "parallel in nature".
+    pub fn fanout_s(&self, bytes: u64, n_files: usize, n_dest: usize, link: Link) -> f64 {
+        if n_dest == 0 {
+            return 0.0;
+        }
+        let streams = self.params.fanout_streams.max(1).min(n_dest);
+        let waves = n_dest.div_ceil(streams);
+        // Each wave moves `streams` copies concurrently over the shared
+        // uplink, so each copy gets bw/streams.
+        let payload = bytes as f64 * self.params.data_scale;
+        let wave_s = self.rtt(link)
+            + payload / (self.bw(link) / streams as f64)
+            + self.params.per_file_overhead_s * n_files as f64;
+        wave_s * waves as f64
+    }
+
+    /// Gather of per-node payloads back to one sink (results fetch):
+    /// same contention structure as fan-out.
+    pub fn gather_s(&self, bytes_each: u64, n_files_each: usize, n_src: usize, link: Link) -> f64 {
+        self.fanout_s(bytes_each, n_files_each, n_src, link)
+    }
+
+    /// One scatter+gather round of a co-operative parallel job across
+    /// `n` workers (per-generation GA sync): tree latency + payload,
+    /// times the virtualisation overhead factor.
+    pub fn collective_s(&self, bytes_total: u64, n: usize) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let hops = (n as f64).log2().ceil();
+        let payload = bytes_total as f64 * self.params.data_scale;
+        let one_way = self.rtt(Link::Lan) * hops + payload / self.bw(Link::Lan);
+        2.0 * one_way * self.params.virt_overhead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> NetworkModel {
+        NetworkModel::new(SimParams::default())
+    }
+
+    #[test]
+    fn wan_slower_than_lan() {
+        let n = net();
+        let b = 100 * 1024 * 1024;
+        assert!(n.transfer_s(b, 1, Link::Wan) > n.transfer_s(b, 1, Link::Lan));
+    }
+
+    #[test]
+    fn transfer_scales_with_bytes() {
+        let n = net();
+        let t1 = n.transfer_s(10 * 1024 * 1024, 1, Link::Wan);
+        let t2 = n.transfer_s(100 * 1024 * 1024, 1, Link::Wan);
+        assert!(t2 > 5.0 * t1);
+    }
+
+    #[test]
+    fn paper_anchor_300mb_sync_takes_tens_of_seconds() {
+        // The CATopt project (~300 MB) syncs over the WAN in well under
+        // the creation time (~minutes) per Fig 6.
+        let n = net();
+        let t = n.transfer_s(300 * 1024 * 1024, 40, Link::Wan);
+        assert!((15.0..120.0).contains(&t), "300MB WAN sync = {t}s");
+    }
+
+    #[test]
+    fn fanout_grows_with_destinations() {
+        let n = net();
+        let b = 3 * 1024 * 1024;
+        let t4 = n.fanout_s(b, 5, 4, Link::Wan);
+        let t16 = n.fanout_s(b, 5, 16, Link::Wan);
+        assert!(t16 > t4, "fanout must grow with cluster size");
+        assert_eq!(n.fanout_s(b, 5, 0, Link::Wan), 0.0);
+    }
+
+    #[test]
+    fn collective_grows_with_n_and_overhead() {
+        let n = net();
+        let b = 2 * 1024 * 1024;
+        let t2 = n.collective_s(b, 2);
+        let t16 = n.collective_s(b, 16);
+        assert!(t16 > t2);
+        assert_eq!(n.collective_s(b, 1), 0.0);
+
+        let mut cheap = SimParams::default();
+        cheap.virt_overhead = 1.0;
+        let bare = NetworkModel::new(cheap);
+        assert!(bare.collective_s(b, 16) < t16);
+    }
+
+    #[test]
+    fn data_scale_multiplies_payload() {
+        let mut p = SimParams::default();
+        p.data_scale = 64.0;
+        let scaled = NetworkModel::new(p);
+        let base = net();
+        let b = 1024 * 1024;
+        assert!(scaled.transfer_s(b, 1, Link::Wan) > 30.0 * base.transfer_s(b, 1, Link::Wan));
+    }
+}

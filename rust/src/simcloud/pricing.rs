@@ -1,0 +1,112 @@
+//! Usage-based billing, EC2-2012 style: instance-hours are billed in
+//! whole-hour increments from launch to termination; EBS is billed per
+//! GiB-month (pro-rated here per virtual hour).
+
+/// One billed line item.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LineItem {
+    pub resource_id: String,
+    pub detail: String,
+    pub cents: u64,
+}
+
+/// Account ledger accumulating charges over the simulation.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    items: Vec<LineItem>,
+}
+
+/// EBS price per GiB-hour in hundredths of a cent (≈ $0.10/GiB-month).
+const EBS_CENTI_CENTS_PER_GB_HOUR: u64 = 1;
+
+impl Ledger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bill an instance that ran from `start_s` to `end_s` virtual time.
+    pub fn bill_instance(
+        &mut self,
+        id: &str,
+        api_name: &str,
+        price_cents_hour: u64,
+        start_s: f64,
+        end_s: f64,
+    ) {
+        let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
+        self.items.push(LineItem {
+            resource_id: id.to_string(),
+            detail: format!("{api_name} x {hours} instance-hour(s)"),
+            cents: hours * price_cents_hour,
+        });
+    }
+
+    /// Bill a volume's storage for its lifetime.
+    pub fn bill_volume(&mut self, id: &str, size_gb: f64, start_s: f64, end_s: f64) {
+        let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
+        let centi_cents = (size_gb.ceil() as u64) * hours * EBS_CENTI_CENTS_PER_GB_HOUR;
+        self.items.push(LineItem {
+            resource_id: id.to_string(),
+            detail: format!("EBS {size_gb:.0} GiB x {hours} hour(s)"),
+            cents: centi_cents / 100,
+        });
+    }
+
+    /// Re-book a persisted line item verbatim (session restore).
+    pub fn push_raw(&mut self, resource_id: &str, detail: &str, cents: u64) {
+        self.items.push(LineItem {
+            resource_id: resource_id.to_string(),
+            detail: detail.to_string(),
+            cents,
+        });
+    }
+
+    pub fn total_cents(&self) -> u64 {
+        self.items.iter().map(|i| i.cents).sum()
+    }
+
+    pub fn items(&self) -> &[LineItem] {
+        &self.items
+    }
+
+    pub fn total_dollars(&self) -> f64 {
+        self.total_cents() as f64 / 100.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partial_hours_round_up() {
+        let mut l = Ledger::new();
+        // 90 virtual minutes of an m2.2xlarge ($0.90/h) → 2 hours → $1.80.
+        l.bill_instance("i-1", "m2.2xlarge", 90, 0.0, 5400.0);
+        assert_eq!(l.total_cents(), 180);
+    }
+
+    #[test]
+    fn minimum_one_hour() {
+        let mut l = Ledger::new();
+        l.bill_instance("i-1", "m2.4xlarge", 180, 100.0, 160.0);
+        assert_eq!(l.total_cents(), 180);
+    }
+
+    #[test]
+    fn paper_cluster_d_cost_shape() {
+        // Cluster D = 16 x m2.2xlarge for one hour ≈ $14.40.
+        let mut l = Ledger::new();
+        for i in 0..16 {
+            l.bill_instance(&format!("i-{i}"), "m2.2xlarge", 90, 0.0, 3000.0);
+        }
+        assert_eq!(l.total_dollars(), 14.40);
+    }
+
+    #[test]
+    fn volume_billing_is_cheap() {
+        let mut l = Ledger::new();
+        l.bill_volume("vol-1", 100.0, 0.0, 3600.0);
+        assert!(l.total_cents() <= 1);
+    }
+}

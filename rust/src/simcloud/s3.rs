@@ -1,0 +1,121 @@
+//! Simulated Simple Storage Service. The paper uses S3 as the common
+//! source that multiple EBS snapshots materialise from when several
+//! instances/clusters need the same dataset.
+
+use std::collections::BTreeMap;
+
+/// Bucket → key → object bytes.
+#[derive(Clone, Debug, Default)]
+pub struct S3 {
+    buckets: BTreeMap<String, BTreeMap<String, Vec<u8>>>,
+}
+
+impl S3 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, bucket: &str, key: &str, data: Vec<u8>) {
+        self.buckets
+            .entry(bucket.to_string())
+            .or_default()
+            .insert(key.to_string(), data);
+    }
+
+    pub fn get(&self, bucket: &str, key: &str) -> Option<&[u8]> {
+        self.buckets
+            .get(bucket)
+            .and_then(|b| b.get(key))
+            .map(|v| v.as_slice())
+    }
+
+    pub fn delete(&mut self, bucket: &str, key: &str) -> bool {
+        self.buckets
+            .get_mut(bucket)
+            .map(|b| b.remove(key).is_some())
+            .unwrap_or(false)
+    }
+
+    pub fn list(&self, bucket: &str, prefix: &str) -> Vec<String> {
+        self.buckets
+            .get(bucket)
+            .map(|b| {
+                b.keys()
+                    .filter(|k| k.starts_with(prefix))
+                    .cloned()
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Serialize (session persistence).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut root = Json::obj();
+        for (bucket, objs) in &self.buckets {
+            let mut b = Json::obj();
+            for (key, data) in objs {
+                b.set(key, Json::str(crate::util::hex::encode(data)));
+            }
+            root.set(bucket, b);
+        }
+        root
+    }
+
+    /// Restore from [`S3::to_json`].
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let mut s = S3::new();
+        let root = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("s3 state must be an object"))?;
+        for (bucket, objs) in root {
+            let o = objs
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("bucket '{bucket}' must be an object"))?;
+            for (key, val) in o {
+                let hexs = val
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("object '{key}' not hex"))?;
+                s.put(
+                    bucket,
+                    key,
+                    crate::util::hex::decode(hexs).map_err(|e| anyhow::anyhow!(e))?,
+                );
+            }
+        }
+        Ok(s)
+    }
+
+    pub fn bucket_size(&self, bucket: &str) -> u64 {
+        self.buckets
+            .get(bucket)
+            .map(|b| b.values().map(|v| v.len() as u64).sum())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_delete() {
+        let mut s = S3::new();
+        s.put("risk-data", "losses/2012.bin", vec![1, 2, 3]);
+        assert_eq!(s.get("risk-data", "losses/2012.bin"), Some([1u8, 2, 3].as_slice()));
+        assert_eq!(s.bucket_size("risk-data"), 3);
+        assert!(s.delete("risk-data", "losses/2012.bin"));
+        assert!(!s.delete("risk-data", "losses/2012.bin"));
+        assert_eq!(s.get("risk-data", "losses/2012.bin"), None);
+    }
+
+    #[test]
+    fn list_by_prefix() {
+        let mut s = S3::new();
+        s.put("b", "a/1", vec![]);
+        s.put("b", "a/2", vec![]);
+        s.put("b", "c/3", vec![]);
+        assert_eq!(s.list("b", "a/").len(), 2);
+        assert_eq!(s.list("nope", "").len(), 0);
+    }
+}

@@ -1,0 +1,231 @@
+//! In-memory virtual filesystem.
+//!
+//! Every simulated site — the Analyst workstation, each EC2 instance,
+//! each EBS volume — carries a `Vfs`. Project directories, script files,
+//! datasets and results are *real bytes* here, so the rsync-algorithm
+//! data sync computes genuine checksums and deltas rather than
+//! stopwatch stubs.
+
+use std::collections::BTreeMap;
+
+/// One file: content + a logical modification counter (virtual mtime).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FileNode {
+    pub data: Vec<u8>,
+    pub mtime: u64,
+}
+
+/// Flat path→file map with directory semantics derived from `/`
+/// separators (like an object store with list-by-prefix).
+#[derive(Clone, Debug, Default)]
+pub struct Vfs {
+    files: BTreeMap<String, FileNode>,
+    mtime_counter: u64,
+}
+
+fn normalize(path: &str) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    for p in path.split('/') {
+        match p {
+            "" | "." => {}
+            ".." => {
+                parts.pop();
+            }
+            p => parts.push(p),
+        }
+    }
+    parts.join("/")
+}
+
+impl Vfs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write (create or replace) a file.
+    pub fn write(&mut self, path: &str, data: impl Into<Vec<u8>>) {
+        let p = normalize(path);
+        assert!(!p.is_empty(), "empty path");
+        self.mtime_counter += 1;
+        self.files.insert(
+            p,
+            FileNode {
+                data: data.into(),
+                mtime: self.mtime_counter,
+            },
+        );
+    }
+
+    pub fn read(&self, path: &str) -> Option<&[u8]> {
+        self.files.get(&normalize(path)).map(|f| f.data.as_slice())
+    }
+
+    pub fn node(&self, path: &str) -> Option<&FileNode> {
+        self.files.get(&normalize(path))
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.files.contains_key(&normalize(path))
+    }
+
+    pub fn remove(&mut self, path: &str) -> bool {
+        self.files.remove(&normalize(path)).is_some()
+    }
+
+    /// Remove a whole subtree; returns number of files removed.
+    pub fn remove_dir(&mut self, dir: &str) -> usize {
+        let prefix = format!("{}/", normalize(dir));
+        let keys: Vec<String> = self
+            .files
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .cloned()
+            .collect();
+        for k in &keys {
+            self.files.remove(k);
+        }
+        keys.len()
+    }
+
+    /// All file paths under `dir` (recursive), relative to `dir`.
+    pub fn list_dir(&self, dir: &str) -> Vec<String> {
+        let d = normalize(dir);
+        if d.is_empty() {
+            return self.files.keys().cloned().collect();
+        }
+        let prefix = format!("{d}/");
+        self.files
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k[prefix.len()..].to_string())
+            .collect()
+    }
+
+    /// Does any file live under `dir`?
+    pub fn dir_exists(&self, dir: &str) -> bool {
+        !self.list_dir(dir).is_empty()
+    }
+
+    /// Total bytes under `dir` (recursive); whole vfs if `dir` is empty.
+    pub fn dir_size(&self, dir: &str) -> u64 {
+        let d = normalize(dir);
+        let prefix = if d.is_empty() { String::new() } else { format!("{d}/") };
+        self.files
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, f)| f.data.len() as u64)
+            .sum()
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Iterate over every (path, node) — session persistence.
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &FileNode)> {
+        self.files.iter()
+    }
+
+    /// Serialize to JSON (paths → hex contents).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = Json::obj();
+        for (path, node) in &self.files {
+            o.set(path, Json::str(crate::util::hex::encode(&node.data)));
+        }
+        o
+    }
+
+    /// Restore from [`Vfs::to_json`] output.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        let mut v = Vfs::new();
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("vfs state must be an object"))?;
+        for (path, val) in obj {
+            let hexs = val
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("vfs file '{path}' not hex"))?;
+            let data = crate::util::hex::decode(hexs).map_err(|e| anyhow::anyhow!(e))?;
+            v.write(path, data);
+        }
+        Ok(v)
+    }
+
+    /// Copy a subtree into another vfs (used by NFS share / snapshot).
+    pub fn copy_dir_to(&self, dir: &str, dest: &mut Vfs, dest_dir: &str) -> usize {
+        let mut n = 0;
+        for rel in self.list_dir(dir) {
+            let src_path = format!("{}/{rel}", normalize(dir));
+            let data = self.read(&src_path).unwrap().to_vec();
+            dest.write(&format!("{}/{rel}", normalize(dest_dir)), data);
+            n += 1;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut v = Vfs::new();
+        v.write("project/script.json", b"{}".to_vec());
+        assert_eq!(v.read("project/script.json"), Some(b"{}".as_slice()));
+        assert_eq!(v.read("./project//script.json"), Some(b"{}".as_slice()));
+        assert!(v.exists("project/script.json"));
+        assert!(!v.exists("project/other"));
+    }
+
+    #[test]
+    fn mtime_increases_on_rewrite() {
+        let mut v = Vfs::new();
+        v.write("a", b"1".to_vec());
+        let m1 = v.node("a").unwrap().mtime;
+        v.write("a", b"2".to_vec());
+        assert!(v.node("a").unwrap().mtime > m1);
+    }
+
+    #[test]
+    fn list_dir_is_relative_and_recursive() {
+        let mut v = Vfs::new();
+        v.write("proj/data/events.bin", vec![0; 10]);
+        v.write("proj/script.json", vec![1; 5]);
+        v.write("other/x", vec![2; 1]);
+        let mut ls = v.list_dir("proj");
+        ls.sort();
+        assert_eq!(ls, vec!["data/events.bin", "script.json"]);
+        assert_eq!(v.dir_size("proj"), 15);
+        assert_eq!(v.dir_size(""), 16);
+    }
+
+    #[test]
+    fn remove_dir_prunes_subtree() {
+        let mut v = Vfs::new();
+        v.write("p/a", vec![0]);
+        v.write("p/b/c", vec![0]);
+        v.write("q/z", vec![0]);
+        assert_eq!(v.remove_dir("p"), 2);
+        assert!(!v.dir_exists("p"));
+        assert!(v.exists("q/z"));
+    }
+
+    #[test]
+    fn copy_dir_between_sites() {
+        let mut src = Vfs::new();
+        src.write("proj/a.bin", vec![7; 32]);
+        src.write("proj/results/r1.json", b"{}".to_vec());
+        let mut dst = Vfs::new();
+        let n = src.copy_dir_to("proj", &mut dst, "home/proj");
+        assert_eq!(n, 2);
+        assert_eq!(dst.read("home/proj/a.bin"), Some(vec![7; 32].as_slice()));
+    }
+
+    #[test]
+    fn normalize_handles_dotdot() {
+        assert_eq!(normalize("a/b/../c"), "a/c");
+        assert_eq!(normalize("/a//b/./"), "a/b");
+    }
+}

@@ -1,0 +1,285 @@
+//! Command-line argument parser (no `clap` in the offline build).
+//!
+//! Models the paper's tool syntax exactly: every P2RAC command accepts
+//! `-h` (help) and `-v` (version), plus single-dash long options that
+//! either take a value (`-iname NAME`) or act as switches
+//! (`-deletevol`), and mutually-exclusive groups
+//! (`-ebsvol VOL | -snap SNAP`, `-frommaster | -fromworkers | -fromall`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ArgError {
+    #[error("unknown argument '{0}'")]
+    Unknown(String),
+    #[error("argument '{0}' requires a value")]
+    MissingValue(String),
+    #[error("arguments {0} are mutually exclusive")]
+    Exclusive(String),
+    #[error("missing required argument '{0}'")]
+    MissingRequired(String),
+    #[error("unexpected positional argument '{0}'")]
+    UnexpectedPositional(String),
+}
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Value { required: bool },
+    Switch,
+}
+
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: String,
+    kind: Kind,
+    help: String,
+}
+
+/// Declarative spec for one command.
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+    exclusive: Vec<Vec<String>>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub help: bool,
+    pub version: bool,
+}
+
+impl ParsedArgs {
+    pub fn value(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn value_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.value(name).unwrap_or(default)
+    }
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+    pub fn usize_value(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        match self.value(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("argument -{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+impl CommandSpec {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            exclusive: Vec::new(),
+        }
+    }
+
+    /// Option taking a value, e.g. `-iname INSTANCE_NAME`.
+    pub fn value_arg(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            kind: Kind::Value { required: false },
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Mandatory value option (the paper's `runname`).
+    pub fn required_arg(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            kind: Kind::Value { required: true },
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Boolean switch, e.g. `-deletevol`.
+    pub fn switch_arg(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            kind: Kind::Switch,
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// Declare a mutually-exclusive group by option names.
+    pub fn exclusive(mut self, names: &[&str]) -> Self {
+        self.exclusive
+            .push(names.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&OptSpec> {
+        self.opts.iter().find(|o| o.name == name)
+    }
+
+    /// Parse raw args (after the command name).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<ParsedArgs, ArgError> {
+        let mut out = ParsedArgs::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "-h" || a == "--help" {
+                out.help = true;
+                continue;
+            }
+            if a == "-v" || a == "--version" {
+                out.version = true;
+                continue;
+            }
+            let Some(name) = a.strip_prefix('-') else {
+                return Err(ArgError::UnexpectedPositional(a));
+            };
+            let name = name.trim_start_matches('-');
+            let Some(spec) = self.find(name) else {
+                return Err(ArgError::Unknown(a));
+            };
+            match spec.kind {
+                Kind::Switch => out.switches.push(name.to_string()),
+                Kind::Value { .. } => {
+                    let val = it.next().ok_or_else(|| ArgError::MissingValue(a.clone()))?;
+                    out.values.insert(name.to_string(), val);
+                }
+            }
+        }
+        if out.help || out.version {
+            return Ok(out);
+        }
+        // Exclusivity.
+        for group in &self.exclusive {
+            let present: Vec<&str> = group
+                .iter()
+                .filter(|n| out.values.contains_key(*n) || out.switch(n))
+                .map(|s| s.as_str())
+                .collect();
+            if present.len() > 1 {
+                return Err(ArgError::Exclusive(present.join(", ")));
+            }
+        }
+        // Required.
+        for o in &self.opts {
+            if let Kind::Value { required: true } = o.kind {
+                if !out.values.contains_key(&o.name) {
+                    return Err(ArgError::MissingRequired(o.name.clone()));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// `-h` output, in the paper's usage style.
+    pub fn usage(&self) -> String {
+        let mut s = format!("usage: {} [-h] [-v]", self.name);
+        for o in &self.opts {
+            match o.kind {
+                Kind::Switch => s.push_str(&format!(" [-{}]", o.name)),
+                Kind::Value { required: true } => {
+                    s.push_str(&format!(" -{} {}", o.name, o.name.to_uppercase()))
+                }
+                Kind::Value { required: false } => {
+                    s.push_str(&format!(" [-{} {}]", o.name, o.name.to_uppercase()))
+                }
+            }
+        }
+        s.push_str(&format!("\n\n{}\n\noptions:\n", self.about));
+        s.push_str("  -h             show this help message\n");
+        s.push_str("  -v             show the version of P2RAC\n");
+        for o in &self.opts {
+            s.push_str(&format!("  -{:<13} {}\n", o.name, o.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CommandSpec {
+        CommandSpec::new("ec2createinstance", "configure an instance on the cloud")
+            .value_arg("iname", "name of the instance")
+            .value_arg("ebsvol", "EBS volume id")
+            .value_arg("snap", "EBS snapshot id")
+            .value_arg("type", "EC2 instance type")
+            .switch_arg("deletevol", "delete attached volume")
+            .exclusive(&["ebsvol", "snap"])
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let p = spec()
+            .parse(
+                ["-iname", "hpc_instance", "-type", "m2.4xlarge", "-deletevol"]
+                    .map(String::from),
+            )
+            .unwrap();
+        assert_eq!(p.value("iname"), Some("hpc_instance"));
+        assert_eq!(p.value("type"), Some("m2.4xlarge"));
+        assert!(p.switch("deletevol"));
+        assert!(!p.switch("nonexistent"));
+    }
+
+    #[test]
+    fn help_and_version() {
+        let p = spec().parse(["-h".to_string()]).unwrap();
+        assert!(p.help);
+        let p = spec().parse(["-v".to_string()]).unwrap();
+        assert!(p.version);
+    }
+
+    #[test]
+    fn mutual_exclusion_enforced() {
+        let e = spec()
+            .parse(["-ebsvol", "vol-1", "-snap", "snap-1"].map(String::from))
+            .unwrap_err();
+        assert!(matches!(e, ArgError::Exclusive(_)));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let e = spec().parse(["-iname".to_string()]).unwrap_err();
+        assert_eq!(e, ArgError::MissingValue("-iname".into()));
+    }
+
+    #[test]
+    fn unknown_arg_is_error() {
+        let e = spec().parse(["-bogus".to_string()]).unwrap_err();
+        assert_eq!(e, ArgError::Unknown("-bogus".into()));
+    }
+
+    #[test]
+    fn required_arg_enforced() {
+        let s = CommandSpec::new("ec2runoninstance", "run").required_arg("runname", "run name");
+        assert!(matches!(
+            s.parse(Vec::<String>::new()).unwrap_err(),
+            ArgError::MissingRequired(_)
+        ));
+        let p = s.parse(["-runname", "r1"].map(String::from)).unwrap();
+        assert_eq!(p.value("runname"), Some("r1"));
+    }
+
+    #[test]
+    fn help_skips_required_check() {
+        let s = CommandSpec::new("x", "y").required_arg("runname", "run name");
+        assert!(s.parse(["-h".to_string()]).unwrap().help);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = spec().usage();
+        assert!(u.contains("-iname"));
+        assert!(u.contains("ec2createinstance"));
+        assert!(u.contains("[-deletevol]"));
+    }
+}

@@ -1,0 +1,50 @@
+//! Hex encoding for binary file contents in persisted session state.
+
+/// Bytes → lowercase hex.
+pub fn encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Hex → bytes (case-insensitive); errors on odd length / bad digits.
+pub fn decode(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err("odd-length hex string".to_string());
+    }
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in b.chunks_exact(2) {
+        let hi = (pair[0] as char)
+            .to_digit(16)
+            .ok_or_else(|| format!("bad hex digit '{}'", pair[0] as char))?;
+        let lo = (pair[1] as char)
+            .to_digit(16)
+            .ok_or_else(|| format!("bad hex digit '{}'", pair[1] as char))?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let data: Vec<u8> = (0..=255).collect();
+        assert_eq!(decode(&encode(&data)).unwrap(), data);
+        assert_eq!(encode(&[0xde, 0xad]), "dead");
+        assert_eq!(decode("DEAD").unwrap(), vec![0xde, 0xad]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode("abc").is_err());
+        assert!(decode("zz").is_err());
+        assert_eq!(decode("").unwrap(), Vec::<u8>::new());
+    }
+}

@@ -1,0 +1,93 @@
+//! Human-readable formatting of bytes, durations and rates for CLI
+//! output, bench tables and EXPERIMENTS.md reporting.
+
+use std::time::Duration;
+
+/// `1536` → `"1.5 KiB"`.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.1} {}", UNITS[u])
+}
+
+/// `Duration` → `"2m 35s"` / `"820ms"` / `"1h 03m"`.
+pub fn duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s < 1.0 {
+        format!("{:.0}ms", s * 1e3)
+    } else if s < 60.0 {
+        format!("{s:.1}s")
+    } else if s < 3600.0 {
+        format!("{}m {:02}s", (s as u64) / 60, (s as u64) % 60)
+    } else {
+        format!("{}h {:02}m", (s as u64) / 3600, ((s as u64) % 3600) / 60)
+    }
+}
+
+/// Seconds (f64, e.g. from the virtual clock) → human duration.
+pub fn secs(s: f64) -> String {
+    duration(Duration::from_secs_f64(s.max(0.0)))
+}
+
+/// `12_582_912, 1.0s` → `"12.0 MiB/s"`.
+pub fn rate(bytes_n: u64, elapsed: Duration) -> String {
+    let s = elapsed.as_secs_f64();
+    if s <= 0.0 {
+        return "inf".to_string();
+    }
+    format!("{}/s", bytes((bytes_n as f64 / s) as u64))
+}
+
+/// Right-pad to width (simple table helper).
+pub fn pad(s: &str, w: usize) -> String {
+    if s.len() >= w {
+        s.to_string()
+    } else {
+        format!("{s}{}", " ".repeat(w - s.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.5 KiB");
+        assert_eq!(bytes(300 * 1024 * 1024), "300.0 MiB");
+        assert_eq!(bytes(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(duration(Duration::from_millis(820)), "820ms");
+        assert_eq!(duration(Duration::from_secs_f64(2.35)), "2.4s");
+        assert_eq!(duration(Duration::from_secs(155)), "2m 35s");
+        assert_eq!(duration(Duration::from_secs(3780)), "1h 03m");
+    }
+
+    #[test]
+    fn secs_clamps_negative() {
+        assert_eq!(secs(-5.0), "0ms");
+    }
+
+    #[test]
+    fn rate_format() {
+        assert_eq!(rate(12 * 1024 * 1024, Duration::from_secs(1)), "12.0 MiB/s");
+    }
+
+    #[test]
+    fn pad_widths() {
+        assert_eq!(pad("ab", 4), "ab  ");
+        assert_eq!(pad("abcdef", 4), "abcdef");
+    }
+}

@@ -1,0 +1,103 @@
+//! AWS-style resource identifier generation (`i-0a1b...`, `vol-...`,
+//! `snap-...`, `ami-...`) backed by a deterministic per-provider counter
+//! + hash so simulation runs are reproducible.
+
+/// Deterministic id factory for one simulated cloud account.
+#[derive(Clone, Debug)]
+pub struct IdFactory {
+    counter: u64,
+    salt: u64,
+}
+
+impl IdFactory {
+    pub fn new(salt: u64) -> Self {
+        Self { counter: 0, salt }
+    }
+
+    /// Current counter (session persistence).
+    pub fn counter(&self) -> u64 {
+        self.counter
+    }
+
+    /// Restore a persisted counter.
+    pub fn set_counter(&mut self, counter: u64) {
+        self.counter = counter;
+    }
+
+    fn next_raw(&mut self) -> u64 {
+        self.counter += 1;
+        // SplitMix-style scramble so ids look AWS-opaque but stay stable.
+        let mut z = self.counter.wrapping_add(self.salt).wrapping_mul(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z ^ (z >> 31)
+    }
+
+    fn hex17(&mut self) -> String {
+        let a = self.next_raw();
+        format!("{:017x}", (a as u128) & 0x1ffff_ffff_ffff_ffff)
+    }
+
+    pub fn instance(&mut self) -> String {
+        format!("i-{}", self.hex17())
+    }
+    pub fn volume(&mut self) -> String {
+        format!("vol-{}", self.hex17())
+    }
+    pub fn snapshot(&mut self) -> String {
+        format!("snap-{}", self.hex17())
+    }
+    pub fn ami(&mut self) -> String {
+        format!("ami-{}", self.hex17())
+    }
+    pub fn reservation(&mut self) -> String {
+        format!("r-{}", self.hex17())
+    }
+
+    /// Public DNS name in the EC2 style for a fresh instance.
+    pub fn public_dns(&mut self, region: &str) -> String {
+        let a = self.next_raw();
+        format!(
+            "ec2-{}-{}-{}-{}.{}.compute.amazonaws.com",
+            (a >> 24) & 0xff,
+            (a >> 16) & 0xff,
+            (a >> 8) & 0xff,
+            a & 0xff,
+            region
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_have_aws_prefixes() {
+        let mut f = IdFactory::new(1);
+        assert!(f.instance().starts_with("i-"));
+        assert!(f.volume().starts_with("vol-"));
+        assert!(f.snapshot().starts_with("snap-"));
+        assert!(f.ami().starts_with("ami-"));
+    }
+
+    #[test]
+    fn ids_are_unique_and_deterministic() {
+        let mut f1 = IdFactory::new(7);
+        let mut f2 = IdFactory::new(7);
+        let a: Vec<String> = (0..100).map(|_| f1.instance()).collect();
+        let b: Vec<String> = (0..100).map(|_| f2.instance()).collect();
+        assert_eq!(a, b);
+        let mut dedup = a.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 100);
+    }
+
+    #[test]
+    fn dns_shape() {
+        let mut f = IdFactory::new(3);
+        let d = f.public_dns("us-east-1");
+        assert!(d.starts_with("ec2-"));
+        assert!(d.ends_with(".us-east-1.compute.amazonaws.com"));
+    }
+}

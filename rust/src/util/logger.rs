@@ -1,0 +1,104 @@
+//! Tiny leveled logger (no `log`-crate facade needed: the whole stack is
+//! in-tree). Controlled by `P2RAC_LOG` = `error|warn|info|debug|trace`;
+//! default `info`. Thread-safe, writes to stderr so CLI stdout stays
+//! machine-parseable.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(2); // info
+static INIT: std::sync::Once = std::sync::Once::new();
+
+/// Initialise from the environment (idempotent; called lazily).
+pub fn init() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("P2RAC_LOG") {
+            if let Some(l) = Level::from_str(&v) {
+                MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Override the level programmatically (tests, `-quiet` flags).
+pub fn set_level(l: Level) {
+    INIT.call_once(|| {});
+    MAX_LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    init();
+    (l as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{} {module}] {msg}", l.tag());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Error, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, module_path!(), format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Trace, module_path!(), format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::from_str("debug"), Some(Level::Debug));
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("nope"), None);
+    }
+
+    #[test]
+    fn level_ordering_gates() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info);
+    }
+}

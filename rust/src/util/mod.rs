@@ -1,0 +1,15 @@
+//! Foundation substrates for the offline build: deterministic PRNG,
+//! JSON, CLI parsing, logging, formatting, statistics and a miniature
+//! property-testing harness. These replace `rand`, `serde`, `clap`,
+//! `log` and `proptest`, none of which are available in the vendored
+//! crate set.
+
+pub mod argparse;
+pub mod hex;
+pub mod humanfmt;
+pub mod ids;
+pub mod json;
+pub mod logger;
+pub mod prng;
+pub mod quickprop;
+pub mod stats;

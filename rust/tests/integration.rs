@@ -1,0 +1,314 @@
+//! Full-stack integration tests: coordinator + datasync + simcloud +
+//! analytics engine, and (when `artifacts/` is built) the PJRT runtime,
+//! exercised through the same `Session` API the CLI uses.
+
+use p2rac::analytics::{CatBondData, P2racEngine, PjrtBackend, RustBackend};
+use p2rac::analytics::backend::FitnessBackend;
+use p2rac::coordinator::{
+    CreateClusterOpts, CreateInstanceOpts, Placement, ResultScope, Session,
+};
+use p2rac::runtime::Runtime;
+use p2rac::simcloud::{SimParams, SpanCategory};
+use p2rac::util::json::Json;
+use std::path::Path;
+use std::rc::Rc;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Box<P2racEngine> {
+    if artifacts_dir().join("manifest.json").exists() {
+        let rt = Runtime::load(&artifacts_dir()).expect("runtime loads");
+        Box::new(P2racEngine::with_runtime(Rc::new(rt)))
+    } else {
+        Box::new(P2racEngine::rust_only())
+    }
+}
+
+fn catopt_project(s: &mut Session, dir: &str, m: usize, e: usize, script: &str) {
+    let data = CatBondData::generate(7, m, e);
+    for (name, bytes) in data.to_files() {
+        s.analyst.write(&format!("{dir}/{name}"), bytes);
+    }
+    s.analyst
+        .write(&format!("{dir}/catopt.json"), script.as_bytes().to_vec());
+}
+
+#[test]
+fn catopt_full_stack_on_cluster() {
+    // The complete Fig-3 workflow with the production engine. If the
+    // artifacts are built, fitness evaluation goes through PJRT (L1
+    // Pallas numerics); otherwise through the Rust oracle.
+    let mut s = Session::new(SimParams::default(), engine());
+    let with_pjrt = artifacts_dir().join("manifest.json").exists();
+    let (m, e) = if with_pjrt { (512, 2048) } else { (48, 160) };
+    catopt_project(
+        &mut s,
+        "proj",
+        m,
+        e,
+        r#"{"type":"catopt","pop_size":24,"max_generations":4,"seed":5,"bfgs_every":0}"#,
+    );
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(4),
+        itype: Some("m2.2xlarge".into()),
+        ..Default::default()
+    })
+    .unwrap();
+    s.send_data_to_cluster_nodes(Some("c"), "proj").unwrap();
+    let out = s
+        .run_on_cluster(Some("c"), "proj", "catopt.json", "t1", Placement::ByNode)
+        .unwrap();
+    let best = out.summary.get("best_value").and_then(Json::as_f64).unwrap();
+    assert!(best.is_finite() && best >= 0.0);
+    s.get_results(Some("c"), "proj", "t1", ResultScope::FromMaster)
+        .unwrap();
+    assert!(s.analyst.exists("proj_results/t1/solution.json"));
+    assert!(s.analyst.exists("proj_results/t1/convergence.csv"));
+    assert!(s.analyst.exists("proj_results/t1/weights.bin"));
+    s.terminate_cluster(Some("c"), true).unwrap();
+    assert!(s.cloud.live_instances().is_empty());
+    assert!(s.cloud.ledger.total_cents() > 0, "usage must be billed");
+}
+
+#[test]
+fn pjrt_fitness_agrees_with_rust_oracle() {
+    // The PJRT artifact and the Rust reference implement the same
+    // objective — cross-check them on the same population.
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipped: artifacts not built");
+        return;
+    }
+    let rt = Rc::new(Runtime::load(&artifacts_dir()).unwrap());
+    let m = rt.constant("M").unwrap();
+    let e = rt.constant("E").unwrap();
+    let data = CatBondData::generate(3, m, e);
+    let mut pjrt = PjrtBackend::new(Rc::clone(&rt), data.clone()).unwrap();
+    let mut rust = RustBackend::new(data);
+    let mut rng = p2rac::util::prng::Xoshiro256::seed_from_u64(1);
+    let pop: Vec<Vec<f32>> = (0..8)
+        .map(|_| (0..m).map(|_| rng.next_f32() * 2.0 / m as f32).collect())
+        .collect();
+    let fa = pjrt.eval_population(&pop).unwrap();
+    let fb = rust.eval_population(&pop).unwrap();
+    for (i, (a, b)) in fa.iter().zip(&fb).enumerate() {
+        let tol = 1e-3 * b.abs().max(1.0);
+        assert!(
+            (a - b).abs() < tol,
+            "candidate {i}: pjrt {a} vs rust {b}"
+        );
+    }
+    // Gradient path too.
+    let (va, ga) = pjrt.value_and_grad(&pop[0]).unwrap();
+    let (vb, gb) = rust.value_and_grad(&pop[0]).unwrap();
+    assert!((va - vb).abs() < 1e-3 * vb.abs().max(1.0), "{va} vs {vb}");
+    let dot: f64 = ga.iter().zip(&gb).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = ga.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = gb.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(dot / (na * nb) > 0.999, "gradients must align");
+}
+
+#[test]
+fn sweep_full_stack_with_worker_gather() {
+    let mut s = Session::new(SimParams::default(), engine());
+    s.analyst.write(
+        "sp/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":48,"seed":2}"#.to_vec(),
+    );
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(3),
+        ..Default::default()
+    })
+    .unwrap();
+    s.send_data_to_cluster_nodes(Some("c"), "sp").unwrap();
+    s.run_on_cluster(Some("c"), "sp", "sweep.json", "r", Placement::BySlot)
+        .unwrap();
+    let rep = s.get_results(Some("c"), "sp", "r", ResultScope::FromAll).unwrap();
+    assert!(rep.files_sent >= 3, "master csv + 2 worker parts");
+    assert!(s.analyst.exists("sp_results/r/master/sweep.csv"));
+    assert!(s.analyst.exists("sp_results/r/worker0/part_worker0.csv"));
+    s.terminate_cluster(Some("c"), false).unwrap();
+}
+
+#[test]
+fn boot_failure_is_surfaced_and_recoverable() {
+    let mut s = Session::new(SimParams::default(), engine());
+    s.cloud.faults.boot_failures = 1;
+    let err = s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(2),
+        ..Default::default()
+    });
+    assert!(err.is_err(), "injected capacity failure must surface");
+    // Config stays clean; retry succeeds.
+    assert!(s.clusters_cfg.names().is_empty());
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(2),
+        ..Default::default()
+    })
+    .unwrap();
+}
+
+#[test]
+fn interrupted_sync_retries_with_delta_reuse() {
+    let mut s = Session::new(SimParams::default(), engine());
+    // Multi-file project so the interruption lands mid-list.
+    for i in 0..6 {
+        s.analyst
+            .write(&format!("p/data/part{i}.bin"), vec![i as u8; 50_000]);
+    }
+    s.analyst
+        .write("p/sweep.json", br#"{"type":"mc_sweep","n_jobs":8}"#.to_vec());
+    s.create_instance(&CreateInstanceOpts {
+        iname: Some("i".into()),
+        ..Default::default()
+    })
+    .unwrap();
+    s.cloud.faults.transfer_interrupts = 1;
+    assert!(s.send_data_to_instance(Some("i"), "p").is_err());
+    // Retry: already-delivered files are skipped as unchanged.
+    let rep = s.send_data_to_instance(Some("i"), "p").unwrap();
+    assert!(rep.files_unchanged > 0, "retry must reuse delivered files");
+    let id = s.instances_cfg.get("i").unwrap().instance_id.clone();
+    assert!(s.cloud.instance(&id).unwrap().fs.exists("root/p/data/part5.bin"));
+}
+
+#[test]
+fn byslot_and_bynode_agree_on_results_but_not_memory() {
+    let mut s = Session::new(SimParams::default(), engine());
+    s.analyst.write(
+        "p/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":32,"seed":9}"#.to_vec(),
+    );
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(4),
+        ..Default::default()
+    })
+    .unwrap();
+    s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+    let a = s
+        .run_on_cluster(Some("c"), "p", "sweep.json", "rn", Placement::ByNode)
+        .unwrap();
+    let b = s
+        .run_on_cluster(Some("c"), "p", "sweep.json", "rs", Placement::BySlot)
+        .unwrap();
+    // Same numerics either way (placement affects time, not results).
+    assert_eq!(
+        a.summary.get("best_att").and_then(Json::as_f64),
+        b.summary.get("best_att").and_then(Json::as_f64)
+    );
+    s.terminate_cluster(Some("c"), false).unwrap();
+}
+
+#[test]
+fn multi_resource_sessions_share_one_cloud() {
+    // Two instances + one cluster coexist; ec2terminateall clears all.
+    let mut s = Session::new(SimParams::default(), engine());
+    s.create_instance(&CreateInstanceOpts {
+        iname: Some("i1".into()),
+        ..Default::default()
+    })
+    .unwrap();
+    s.create_instance(&CreateInstanceOpts {
+        iname: Some("i2".into()),
+        itype: Some("m2.4xlarge".into()),
+        ..Default::default()
+    })
+    .unwrap();
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c1".into()),
+        csize: Some(2),
+        ..Default::default()
+    })
+    .unwrap();
+    assert_eq!(s.cloud.live_instances().len(), 4);
+    let log = s.terminate_all(true, true, true, true).unwrap();
+    assert!(log.len() >= 5);
+    assert!(s.cloud.live_instances().is_empty());
+    assert!(s.cloud.live_volumes().is_empty());
+}
+
+#[test]
+fn dynamic_cluster_scaling_future_work() {
+    // The paper's §5 future work: grow/shrink a cluster mid-session.
+    let mut s = Session::new(SimParams::default(), engine());
+    s.analyst.write(
+        "p/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":64,"seed":4}"#.to_vec(),
+    );
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(2),
+        ..Default::default()
+    })
+    .unwrap();
+    let t_small = {
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        s.run_on_cluster(Some("c"), "p", "sweep.json", "r1", Placement::ByNode)
+            .unwrap()
+            .compute_s
+    };
+    // Grow 2 -> 8: new workers must NFS-mount the master's volume.
+    s.resize_cluster(Some("c"), 8).unwrap();
+    let e = s.clusters_cfg.get("c").unwrap().clone();
+    assert_eq!(e.size, 8);
+    assert_eq!(e.worker_ids.len(), 7);
+    for w in &e.worker_ids {
+        assert_eq!(
+            s.cloud.instance(w).unwrap().nfs_mount_from,
+            e.volume_id,
+            "grown worker must share the master volume"
+        );
+    }
+    // Newly-added nodes need the project before the next run.
+    s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+    let t_big = s
+        .run_on_cluster(Some("c"), "p", "sweep.json", "r2", Placement::ByNode)
+        .unwrap()
+        .compute_s;
+    assert!(t_big < t_small / 2.0, "8 nodes {t_big}s vs 2 nodes {t_small}s");
+    // Shrink back 8 -> 3 and verify the dropped workers are gone.
+    s.resize_cluster(Some("c"), 3).unwrap();
+    assert_eq!(s.clusters_cfg.get("c").unwrap().worker_ids.len(), 2);
+    assert_eq!(s.cloud.live_instances().len(), 3);
+    // Locked clusters refuse resizing.
+    s.set_cluster_lock("c", true).unwrap();
+    assert!(s.resize_cluster(Some("c"), 4).is_err());
+    s.set_cluster_lock("c", false).unwrap();
+    s.terminate_cluster(Some("c"), false).unwrap();
+}
+
+#[test]
+fn timeline_reproduces_paper_ordering() {
+    // Creation must dominate data movement for the small project, and
+    // all six Fig-6 categories must be recorded.
+    let mut s = Session::new(SimParams::default(), engine());
+    s.analyst.write(
+        "p/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":16,"seed":1}"#.to_vec(),
+    );
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("c".into()),
+        csize: Some(8),
+        ..Default::default()
+    })
+    .unwrap();
+    s.send_data_to_master(Some("c"), "p").unwrap();
+    s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+    s.run_on_cluster(Some("c"), "p", "sweep.json", "r", Placement::ByNode)
+        .unwrap();
+    s.get_results(Some("c"), "p", "r", ResultScope::FromAll).unwrap();
+    s.terminate_cluster(Some("c"), false).unwrap();
+    let c = &s.cloud.clock;
+    let create = c.category_total_s(SpanCategory::CreateResource);
+    let moves = c.category_total_s(SpanCategory::SubmitToMaster)
+        + c.category_total_s(SpanCategory::SubmitToAllNodes)
+        + c.category_total_s(SpanCategory::FetchFromAllNodes);
+    assert!(create > 5.0 * moves, "create {create} vs moves {moves}");
+    assert!(c.category_total_s(SpanCategory::TerminateResource) > 0.0);
+}
