@@ -6,6 +6,8 @@
 //! * `runtime`   — PJRT artifact execution latency (the L3 hot path),
 //!   per-entry, when `artifacts/` is built.
 //! * `ga_ops`    — genetic-operator and generation throughput.
+//! * `ga_parallel` — real-vs-virtual speedup of the scoped-thread
+//!   worker pool on the catopt workload (bit-identical numerics).
 //! * `virt_ablation` — Fig-4 knee with the virtualisation overhead
 //!   removed (validates the paper's explanation of the efficiency drop).
 //!
@@ -87,7 +89,13 @@ fn bench_runtime() {
         println!("  (skipped: run `make artifacts` first)");
         return;
     }
-    let rt = p2rac::runtime::Runtime::load(dir).expect("runtime");
+    let rt = match p2rac::runtime::Runtime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("  (skipped: runtime unavailable: {e:#})");
+            return;
+        }
+    };
     use p2rac::runtime::TensorF32;
     let (s, k, j) = (
         rt.constant("S").unwrap(),
@@ -146,11 +154,17 @@ fn bench_backend() {
         return;
     }
     use p2rac::analytics::backend::FitnessBackend;
-    let rt = std::rc::Rc::new(p2rac::runtime::Runtime::load(dir).expect("runtime"));
+    let rt = match p2rac::runtime::Runtime::load(dir) {
+        Ok(rt) => std::sync::Arc::new(rt),
+        Err(e) => {
+            println!("  (skipped: runtime unavailable: {e:#})");
+            return;
+        }
+    };
     let m = rt.constant("M").unwrap();
     let e = rt.constant("E").unwrap();
     let data = CatBondData::generate(3, m, e);
-    let mut b = p2rac::analytics::PjrtBackend::new(rt, data).unwrap();
+    let b = p2rac::analytics::PjrtBackend::new(rt, data).unwrap();
     let mut rng = Xoshiro256::seed_from_u64(4);
     let pop: Vec<Vec<f32>> = (0..200)
         .map(|_| (0..m).map(|_| rng.next_f32() * 2.0 / m as f32).collect())
@@ -169,7 +183,7 @@ fn bench_backend() {
 fn bench_ga_ops() {
     println!("--- GA: generation throughput (pure-Rust backend) ---");
     let data = CatBondData::generate(3, 64, 256);
-    let mut backend = p2rac::analytics::RustBackend::new(data);
+    let backend = p2rac::analytics::RustBackend::new(data);
     let cfg = p2rac::analytics::ga::GaConfig {
         pop_size: 64,
         max_generations: 10,
@@ -179,7 +193,7 @@ fn bench_ga_ops() {
         ..Default::default()
     };
     let t0 = Instant::now();
-    let r = p2rac::analytics::ga::optimizer::run(&mut backend, &cfg).unwrap();
+    let r = p2rac::analytics::ga::optimizer::run(&backend, &cfg).unwrap();
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "  {} evaluations in {:.2}s = {:.0} eval/s (m=64, e=256)",
@@ -187,6 +201,40 @@ fn bench_ga_ops() {
         wall,
         r.total_evaluations as f64 / wall
     );
+}
+
+fn bench_ga_parallel() {
+    println!("--- GA: worker-pool real speedup vs virtual (catopt workload) ---");
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // One serial baseline, reused for every thread count.
+    let base = p2rac::bench_support::speedup_baseline().unwrap();
+    for threads in [1usize, 2, 4, 8] {
+        if threads > avail && threads != 1 {
+            println!("  threads={threads}: skipped (host has {avail} cores)");
+            continue;
+        }
+        let r = base.measure(threads).unwrap();
+        println!("  {}", r.row());
+        // Numerics are deterministic — this must hold on any host.
+        assert!(r.bit_identical, "threaded GA must match serial bit-for-bit");
+        if threads == 4 && avail >= 4 {
+            let target_met = r.real_speedup() > 1.5;
+            println!(
+                "  acceptance (>1.5x wall-clock at 4 threads): {}",
+                if target_met { "PASS" } else { "WARN — not met on this host" }
+            );
+            // Wall-clock scaling depends on physical cores and load
+            // (4 logical hyperthreads often scale <1.5x on FP-bound
+            // work), so only strict mode turns the warning into a
+            // failure.
+            if !target_met && std::env::var("P2RAC_BENCH_STRICT").is_ok() {
+                panic!(
+                    "P2RAC_BENCH_STRICT: >1.5x at 4 threads required, got {:.2}x",
+                    r.real_speedup()
+                );
+            }
+        }
+    }
 }
 
 fn bench_virt_ablation() {
@@ -207,6 +255,7 @@ fn bench_virt_ablation() {
             nodes,
             net: NetworkModel::new(p),
             resource_name: "ablation".into(),
+            real_threads: None,
         }
     };
     // Two candidate causes for the paper's efficiency drop: the serial
@@ -246,6 +295,7 @@ fn main() {
     bench_runtime();
     bench_backend();
     bench_ga_ops();
+    bench_ga_parallel();
     bench_virt_ablation();
     println!("\nmicro benches complete.");
 }

@@ -5,23 +5,47 @@
 //! * [`PjrtBackend`] — the production path: population fitness through
 //!   the AOT-compiled `catopt_fitness` artifact and gradients through
 //!   `catopt_grad`, both executed by the PJRT CPU client.
+//!
+//! Both backends are `Send + Sync` and evaluate through `&self`, so the
+//! worker pool ([`crate::analytics::pool`]) can fan shards of a
+//! population out across scoped threads sharing one backend reference.
 
 use super::catbond::{self, CatBondData};
 use crate::runtime::{Runtime, TensorF32};
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// What the GA and BFGS need from an objective.
-pub trait FitnessBackend {
-    /// Penalised objective for each candidate (lower is better).
-    fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>>;
+///
+/// `Send + Sync` with `&self` evaluation is the contract that makes the
+/// engine parallel: shard threads call [`eval_population`] concurrently
+/// on the same backend, so implementations keep their counters atomic
+/// and their state otherwise immutable during a run.
+///
+/// [`eval_population`]: FitnessBackend::eval_population
+pub trait FitnessBackend: Send + Sync {
+    /// Penalised objective for each candidate (lower is better). Must
+    /// be safe to call concurrently from several threads, and the
+    /// result for a candidate must not depend on the other candidates
+    /// in the slice (the pool relies on this for bit-identical
+    /// sharding).
+    fn eval_population(&self, pop: &[Vec<f32>]) -> Result<Vec<f32>>;
     /// Value and gradient at one point (for quasi-Newton refinement).
-    fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)>;
+    fn value_and_grad(&self, w: &[f32]) -> Result<(f32, Vec<f32>)>;
     /// Problem dimensionality.
     fn dims(&self) -> usize;
     /// Number of artifact executions so far (perf accounting).
     fn exec_count(&self) -> u64 {
         0
+    }
+    /// Smallest population slice this backend evaluates efficiently.
+    /// The worker pool will not split the population into shards
+    /// smaller than this: a tiled backend (PJRT pads every chunk to
+    /// its fixed `POP` tile) would otherwise burn a full tile per
+    /// tiny shard and lose the speedup to padding.
+    fn preferred_batch(&self) -> usize {
+        1
     }
 }
 
@@ -30,23 +54,26 @@ pub trait FitnessBackend {
 /// Pure-Rust backend over a [`CatBondData`].
 pub struct RustBackend {
     pub data: CatBondData,
-    evals: u64,
+    evals: AtomicU64,
 }
 
 impl RustBackend {
     pub fn new(data: CatBondData) -> Self {
-        Self { data, evals: 0 }
+        Self {
+            data,
+            evals: AtomicU64::new(0),
+        }
     }
 }
 
 impl FitnessBackend for RustBackend {
-    fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
-        self.evals += pop.len() as u64;
+    fn eval_population(&self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.evals.fetch_add(pop.len() as u64, Ordering::Relaxed);
         Ok(pop.iter().map(|w| catbond::objective(w, &self.data)).collect())
     }
 
-    fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
-        self.evals += 1;
+    fn value_and_grad(&self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+        self.evals.fetch_add(1, Ordering::Relaxed);
         Ok(analytic_value_and_grad(w, &self.data))
     }
 
@@ -55,7 +82,7 @@ impl FitnessBackend for RustBackend {
     }
 
     fn exec_count(&self) -> u64 {
-        self.evals
+        self.evals.load(Ordering::Relaxed)
     }
 }
 
@@ -125,22 +152,21 @@ pub fn analytic_value_and_grad(w: &[f32], data: &CatBondData) -> (f32, Vec<f32>)
 /// The loop-invariant arguments (transposed loss table, sponsor losses,
 /// trigger scalars) are prepared as PJRT literals **once** — rebuilding
 /// the 4 MiB table literal every generation cost ~20% of the hot path
-/// (EXPERIMENTS.md §Perf L3).
+/// (EXPERIMENTS.md §Perf L3). The per-tile population buffer is built
+/// on the calling thread's stack so shard threads never contend.
 pub struct PjrtBackend {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
     data: CatBondData,
     lit_ilt: crate::runtime::pjrt::PreparedArg,
     lit_cl: crate::runtime::pjrt::PreparedArg,
     lit_att: crate::runtime::pjrt::PreparedArg,
     lit_lim: crate::runtime::pjrt::PreparedArg,
     pop_tile: usize,
-    /// Reused host buffer for the padded population tile.
-    w_buf: Vec<f32>,
 }
 
 impl PjrtBackend {
     /// `data.m`/`data.e` must match the artifact constants `M`/`E`.
-    pub fn new(rt: Rc<Runtime>, data: CatBondData) -> Result<Self> {
+    pub fn new(rt: Arc<Runtime>, data: CatBondData) -> Result<Self> {
         let m = rt.constant("M")?;
         let e = rt.constant("E")?;
         anyhow::ensure!(
@@ -168,7 +194,6 @@ impl PjrtBackend {
             lit_att,
             lit_lim,
             pop_tile,
-            w_buf: Vec::new(),
         })
     }
 
@@ -178,24 +203,25 @@ impl PjrtBackend {
 }
 
 impl FitnessBackend for PjrtBackend {
-    fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+    fn eval_population(&self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
         let m = self.data.m;
         let mut out = Vec::with_capacity(pop.len());
+        let mut w_buf: Vec<f32> = Vec::with_capacity(self.pop_tile * m);
         for chunk in pop.chunks(self.pop_tile) {
-            // Pad the tile with copies of the first candidate, reusing
-            // the host buffer (no per-generation allocation).
-            self.w_buf.clear();
-            self.w_buf.reserve(self.pop_tile * m);
+            // Pad the tile with copies of the first candidate. The
+            // artifact computes rows independently, so padding (and the
+            // shard a candidate lands in) cannot change its fitness.
+            w_buf.clear();
             for cand in chunk {
                 anyhow::ensure!(cand.len() == m, "candidate dim {} != {m}", cand.len());
-                self.w_buf.extend_from_slice(cand);
+                w_buf.extend_from_slice(cand);
             }
             for _ in chunk.len()..self.pop_tile {
-                self.w_buf.extend_from_slice(&chunk[0]);
+                w_buf.extend_from_slice(&chunk[0]);
             }
             let lit_w = self
                 .rt
-                .prepare(&TensorF32::new(vec![self.pop_tile, m], self.w_buf.clone()))?;
+                .prepare(&TensorF32::new(vec![self.pop_tile, m], w_buf.clone()))?;
             let res = self.rt.execute_prepared(
                 "catopt_fitness",
                 &[&lit_w, &self.lit_ilt, &self.lit_cl, &self.lit_att, &self.lit_lim],
@@ -205,7 +231,7 @@ impl FitnessBackend for PjrtBackend {
         Ok(out)
     }
 
-    fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+    fn value_and_grad(&self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
         let m = self.data.m;
         let lit_w = self.rt.prepare(&TensorF32::new(vec![m], w.to_vec()))?;
         let res = self.rt.execute_prepared(
@@ -220,7 +246,13 @@ impl FitnessBackend for PjrtBackend {
     }
 
     fn exec_count(&self) -> u64 {
-        self.rt.exec_count.get()
+        self.rt.exec_count.load(Ordering::Relaxed)
+    }
+
+    /// One artifact tile: shards smaller than this execute the same
+    /// padded `POP x M` computation for fewer useful rows.
+    fn preferred_batch(&self) -> usize {
+        self.pop_tile
     }
 }
 
@@ -254,11 +286,30 @@ mod tests {
     #[test]
     fn rust_backend_counts_evals() {
         let data = CatBondData::generate(5, 16, 32);
-        let mut b = RustBackend::new(data);
+        let b = RustBackend::new(data);
         let pop: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32 * 0.01; 16]).collect();
         let f = b.eval_population(&pop).unwrap();
         assert_eq!(f.len(), 4);
         assert_eq!(b.exec_count(), 4);
         assert_eq!(b.dims(), 16);
+    }
+
+    #[test]
+    fn backends_are_shareable_across_threads() {
+        // The worker pool relies on `&RustBackend` crossing scoped
+        // threads and on concurrent eval calls agreeing with serial.
+        let data = CatBondData::generate(5, 16, 32);
+        let b = RustBackend::new(data);
+        let pop: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32 * 0.01; 16]).collect();
+        let serial = b.eval_population(&pop).unwrap();
+        let (lo, hi) = pop.split_at(4);
+        let (a, z) = std::thread::scope(|s| {
+            let h1 = s.spawn(|| b.eval_population(lo).unwrap());
+            let h2 = s.spawn(|| b.eval_population(hi).unwrap());
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        let stitched: Vec<f32> = a.into_iter().chain(z).collect();
+        assert_eq!(serial, stitched);
+        assert_eq!(b.exec_count(), 16);
     }
 }

@@ -133,6 +133,7 @@ mod tests {
             nodes: ns,
             net: NetworkModel::new(SimParams::default()),
             resource_name: format!("cluster{nodes}"),
+            real_threads: None,
         }
     }
 

@@ -44,9 +44,12 @@ fn dot(a: &[f32], b: &[f32]) -> f64 {
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
 }
 
-/// Minimise `backend`'s objective from `x0`.
+/// Minimise `backend`'s objective from `x0`. BFGS is inherently
+/// sequential (each step depends on the last gradient), so it runs on
+/// the calling thread — the paper's SNOW master — while the population
+/// fan-out is what the worker pool parallelises.
 pub fn minimize(
-    backend: &mut dyn FitnessBackend,
+    backend: &dyn FitnessBackend,
     x0: &[f32],
     opts: &BfgsOptions,
 ) -> Result<BfgsResult> {
@@ -156,7 +159,7 @@ mod tests {
     }
 
     impl FitnessBackend for Quad {
-        fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+        fn eval_population(&self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
             Ok(pop
                 .iter()
                 .map(|x| {
@@ -168,7 +171,7 @@ mod tests {
                 })
                 .collect())
         }
-        fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+        fn value_and_grad(&self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
             let v = self.eval_population(&[w.to_vec()])?[0];
             let g = w
                 .iter()
@@ -186,12 +189,12 @@ mod tests {
     #[test]
     fn minimizes_ill_conditioned_quadratic() {
         let n = 12;
-        let mut b = Quad {
+        let b = Quad {
             c: (0..n).map(|i| i as f32 * 0.1).collect(),
             a: (0..n).map(|i| 1.0 + 9.0 * (i as f32 / n as f32)).collect(),
         };
         let x0 = vec![5.0f32; n];
-        let r = minimize(&mut b, &x0, &BfgsOptions::default()).unwrap();
+        let r = minimize(&b, &x0, &BfgsOptions::default()).unwrap();
         assert!(r.value < 1e-6, "value {}", r.value);
         for (xi, ci) in r.x.iter().zip(&b.c) {
             assert!((xi - ci).abs() < 1e-2, "{xi} vs {ci}");
@@ -202,7 +205,7 @@ mod tests {
     fn rosenbrock_2d_progress() {
         struct Rosen;
         impl FitnessBackend for Rosen {
-            fn eval_population(&mut self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
+            fn eval_population(&self, pop: &[Vec<f32>]) -> Result<Vec<f32>> {
                 Ok(pop
                     .iter()
                     .map(|x| {
@@ -211,7 +214,7 @@ mod tests {
                     })
                     .collect())
             }
-            fn value_and_grad(&mut self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
+            fn value_and_grad(&self, w: &[f32]) -> Result<(f32, Vec<f32>)> {
                 let (a, b) = (w[0], w[1]);
                 let v = self.eval_population(&[w.to_vec()])?[0];
                 Ok((
@@ -227,7 +230,7 @@ mod tests {
             }
         }
         let r = minimize(
-            &mut Rosen,
+            &Rosen,
             &[-1.2, 1.0],
             &BfgsOptions {
                 max_iters: 200,
@@ -244,11 +247,11 @@ mod tests {
         use crate::analytics::catbond::CatBondData;
         let data = CatBondData::generate(9, 32, 96);
         let m = data.m;
-        let mut b = RustBackend::new(data);
+        let b = RustBackend::new(data);
         let x0 = vec![1.0 / m as f32; m];
         let f0 = b.eval_population(&[x0.clone()]).unwrap()[0];
         let r = minimize(
-            &mut b,
+            &b,
             &x0,
             &BfgsOptions {
                 max_iters: 15,

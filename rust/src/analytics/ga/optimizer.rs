@@ -12,6 +12,7 @@
 use super::bfgs::{self, BfgsOptions};
 use super::operators::{self, Domain};
 use crate::analytics::backend::FitnessBackend;
+use crate::analytics::pool::WorkerPool;
 use crate::util::prng::Xoshiro256;
 use anyhow::Result;
 
@@ -124,8 +125,23 @@ fn tournament_pick<'a>(
     &pop[best]
 }
 
-/// Run the optimiser against a backend.
-pub fn run(backend: &mut dyn FitnessBackend, cfg: &GaConfig) -> Result<GaResult> {
+/// Run the optimiser against a backend on the calling thread (serial
+/// reference path).
+pub fn run(backend: &dyn FitnessBackend, cfg: &GaConfig) -> Result<GaResult> {
+    run_with_pool(backend, cfg, &WorkerPool::serial())
+}
+
+/// Run the optimiser with population fitness sharded across a
+/// [`WorkerPool`] — the paper's SNOW fan-out made real. All evolution
+/// (selection, operators, BFGS polish) stays on the calling thread with
+/// a single RNG stream, and shard fitness values are stitched back by
+/// candidate index, so the result is bit-identical to [`run`] for the
+/// same seed regardless of thread count.
+pub fn run_with_pool(
+    backend: &dyn FitnessBackend,
+    cfg: &GaConfig,
+    pool: &WorkerPool,
+) -> Result<GaResult> {
     let n = backend.dims();
     let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
     let dom = cfg.domain;
@@ -142,7 +158,7 @@ pub fn run(backend: &mut dyn FitnessBackend, cfg: &GaConfig) -> Result<GaResult>
             }
         })
         .collect();
-    let mut fit = backend.eval_population(&pop)?;
+    let mut fit = pool.eval(backend, &pop)?;
     let mut total_evals = pop.len();
 
     let mut history = Vec::with_capacity(cfg.max_generations);
@@ -271,9 +287,10 @@ pub fn run(backend: &mut dyn FitnessBackend, cfg: &GaConfig) -> Result<GaResult>
         }
 
         // Fan-out: evaluate the whole offspring pool (the distributed
-        // step — the coordinator bills scatter/gather per generation).
+        // step — the coordinator bills scatter/gather per generation,
+        // and the pool shards it over real threads).
         pop = next;
-        fit = backend.eval_population(&pop)?;
+        fit = pool.eval(backend, &pop)?;
         total_evals += pop.len();
 
         let mean = fit.iter().sum::<f32>() / fit.len() as f32;
@@ -332,12 +349,12 @@ mod tests {
     #[test]
     fn optimiser_improves_over_initial_population() {
         let data = CatBondData::generate(11, 24, 96);
-        let mut b = RustBackend::new(data);
+        let b = RustBackend::new(data);
         let m = b.dims();
         let init = b
             .eval_population(&[vec![crate::analytics::catbond::BUDGET / m as f32; m]])
             .unwrap()[0];
-        let r = run(&mut b, &small_cfg()).unwrap();
+        let r = run(&b, &small_cfg()).unwrap();
         assert!(
             r.best_value < init,
             "GA best {} must beat uniform start {init}",
@@ -350,8 +367,8 @@ mod tests {
     #[test]
     fn best_value_is_monotone_nonincreasing() {
         let data = CatBondData::generate(13, 16, 64);
-        let mut b = RustBackend::new(data);
-        let r = run(&mut b, &small_cfg()).unwrap();
+        let b = RustBackend::new(data);
+        let r = run(&b, &small_cfg()).unwrap();
         for w in r.history.windows(2) {
             assert!(
                 w[1].best_value <= w[0].best_value + 1e-6,
@@ -365,18 +382,38 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let data = CatBondData::generate(17, 16, 48);
-        let mut b1 = RustBackend::new(data.clone());
-        let mut b2 = RustBackend::new(data);
-        let r1 = run(&mut b1, &small_cfg()).unwrap();
-        let r2 = run(&mut b2, &small_cfg()).unwrap();
+        let b1 = RustBackend::new(data.clone());
+        let b2 = RustBackend::new(data);
+        let r1 = run(&b1, &small_cfg()).unwrap();
+        let r2 = run(&b2, &small_cfg()).unwrap();
         assert_eq!(r1.best, r2.best);
         assert_eq!(r1.best_value, r2.best_value);
     }
 
     #[test]
+    fn pooled_run_is_bit_identical_to_serial() {
+        let data = CatBondData::generate(29, 16, 48);
+        let b = RustBackend::new(data);
+        let serial = run(&b, &small_cfg()).unwrap();
+        for pool in [
+            crate::analytics::pool::WorkerPool::new(2, 3),
+            crate::analytics::pool::WorkerPool::new(4, 8),
+        ] {
+            let pooled = run_with_pool(&b, &small_cfg(), &pool).unwrap();
+            assert_eq!(serial.best, pooled.best);
+            assert_eq!(serial.best_value, pooled.best_value);
+            assert_eq!(serial.generations_run, pooled.generations_run);
+            for (a, z) in serial.history.iter().zip(&pooled.history) {
+                assert_eq!(a.best_value, z.best_value);
+                assert_eq!(a.mean_value, z.mean_value);
+            }
+        }
+    }
+
+    #[test]
     fn early_stop_on_stagnation() {
         let data = CatBondData::generate(19, 8, 32);
-        let mut b = RustBackend::new(data);
+        let b = RustBackend::new(data);
         let cfg = GaConfig {
             pop_size: 10,
             max_generations: 200,
@@ -385,7 +422,7 @@ mod tests {
             seed: 1,
             ..Default::default()
         };
-        let r = run(&mut b, &cfg).unwrap();
+        let r = run(&b, &cfg).unwrap();
         assert!(
             r.generations_run < 200,
             "should stop early, ran {}",
@@ -396,8 +433,8 @@ mod tests {
     #[test]
     fn final_best_is_feasible_enough() {
         let data = CatBondData::generate(23, 24, 96);
-        let mut b = RustBackend::new(data.clone());
-        let r = run(&mut b, &small_cfg()).unwrap();
+        let b = RustBackend::new(data.clone());
+        let r = run(&b, &small_cfg()).unwrap();
         let pen = crate::analytics::catbond::penalty(&r.best);
         // The penalty terms should have pushed the solution near the
         // feasible region (budget ≈ 1, weights in bounds).

@@ -1,10 +1,17 @@
 //! The parameter-sweep workload (paper §4, second problem): independent
 //! Monte-Carlo pricing jobs with no data dependency between runs.
+//!
+//! Batches draw from **forked per-batch PRNG streams** (see
+//! [`Xoshiro256::fork`]): the master RNG forks one child stream per
+//! batch in batch order, so the threaded path — which evaluates batches
+//! concurrently on the worker pool — produces bit-identical results to
+//! the serial path for the same seed.
 
+use crate::analytics::pool::WorkerPool;
 use crate::runtime::{Runtime, TensorF32};
 use crate::util::prng::Xoshiro256;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Severity-model constants — must match kernels/mc.py defaults.
 pub const PARETO_SCALE: f32 = 1.0;
@@ -42,9 +49,10 @@ pub struct JobResult {
 }
 
 /// Batch evaluator: takes `(S*K)` uniforms and `(J*2)` params, returns
-/// `(J*2)` `[mean, std]` rows.
-pub trait SweepBackend {
-    fn run_batch(&mut self, u: &[f32], params: &[f32], s: usize, k: usize, j: usize)
+/// `(J*2)` `[mean, std]` rows. `Send + Sync` with `&self` so the
+/// worker pool can evaluate independent batches concurrently.
+pub trait SweepBackend: Send + Sync {
+    fn run_batch(&self, u: &[f32], params: &[f32], s: usize, k: usize, j: usize)
         -> Result<Vec<f32>>;
 }
 
@@ -53,7 +61,7 @@ pub struct RustSweep;
 
 impl SweepBackend for RustSweep {
     fn run_batch(
-        &mut self,
+        &self,
         u: &[f32],
         params: &[f32],
         s: usize,
@@ -93,18 +101,18 @@ impl SweepBackend for RustSweep {
 
 /// Production backend: the `mc_sweep` PJRT artifact.
 pub struct PjrtSweep {
-    rt: Rc<Runtime>,
+    rt: Arc<Runtime>,
 }
 
 impl PjrtSweep {
-    pub fn new(rt: Rc<Runtime>) -> Self {
+    pub fn new(rt: Arc<Runtime>) -> Self {
         Self { rt }
     }
 }
 
 impl SweepBackend for PjrtSweep {
     fn run_batch(
-        &mut self,
+        &self,
         u: &[f32],
         params: &[f32],
         s: usize,
@@ -122,17 +130,38 @@ impl SweepBackend for PjrtSweep {
     }
 }
 
-/// Run a full sweep: generates the parameter grid and per-batch draws,
-/// batches jobs `j_tile` at a time (the artifact's J), returns one
-/// result per job.
+/// One batch of jobs ready to evaluate: its parameter tile and its own
+/// decorrelated PRNG stream (common random numbers within the batch).
+struct Batch {
+    jobs: Vec<(f32, f32)>,
+    rng: Xoshiro256,
+}
+
+/// Run a full sweep on the calling thread (serial reference path).
 pub fn run_sweep(
-    backend: &mut dyn SweepBackend,
+    backend: &dyn SweepBackend,
     cfg: &SweepConfig,
     s: usize,
     k: usize,
     j_tile: usize,
 ) -> Result<Vec<JobResult>> {
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    run_sweep_with_pool(backend, cfg, s, k, j_tile, &WorkerPool::serial())
+}
+
+/// Run a full sweep with batches fanned out across a [`WorkerPool`]:
+/// generates the parameter grid, forks one PRNG stream per batch (in
+/// batch order, on the calling thread — this is what keeps the result
+/// bit-identical to the serial path), evaluates batches `j_tile` jobs
+/// at a time, and returns one result per job in job order.
+pub fn run_sweep_with_pool(
+    backend: &dyn SweepBackend,
+    cfg: &SweepConfig,
+    s: usize,
+    k: usize,
+    j_tile: usize,
+    pool: &WorkerPool,
+) -> Result<Vec<JobResult>> {
+    let mut master = Xoshiro256::seed_from_u64(cfg.seed);
     // Parameter grid: jobs vary attachment fastest, limit slowest.
     let params: Vec<(f32, f32)> = (0..cfg.n_jobs)
         .map(|i| {
@@ -145,31 +174,48 @@ pub fn run_sweep(
         })
         .collect();
 
-    let mut results = Vec::with_capacity(cfg.n_jobs);
-    for chunk in params.chunks(j_tile) {
+    // Fork the per-batch streams deterministically before any
+    // evaluation happens, so the batch order of evaluation (serial or
+    // threaded) cannot influence the draws.
+    let batches: Vec<Batch> = params
+        .chunks(j_tile)
+        .enumerate()
+        .map(|(bi, chunk)| Batch {
+            jobs: chunk.to_vec(),
+            rng: master.fork(bi as u64),
+        })
+        .collect();
+
+    let per_batch = pool.map(&batches, |_, batch| {
         // Fresh draws per batch (common random numbers within a batch).
+        let mut rng = batch.rng.clone();
         let u: Vec<f32> = (0..s * k).map(|_| rng.next_f32() * 0.999).collect();
         let mut p = Vec::with_capacity(j_tile * 2);
-        for &(a, l) in chunk {
+        for &(a, l) in &batch.jobs {
             p.push(a);
             p.push(l);
         }
         // Pad the tile.
-        for _ in chunk.len()..j_tile {
-            p.push(chunk[0].0);
-            p.push(chunk[0].1);
+        for _ in batch.jobs.len()..j_tile {
+            p.push(batch.jobs[0].0);
+            p.push(batch.jobs[0].1);
         }
         let out = backend.run_batch(&u, &p, s, k, j_tile)?;
-        for (i, &(att, limit)) in chunk.iter().enumerate() {
-            results.push(JobResult {
+        let results: Vec<JobResult> = batch
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(i, &(att, limit))| JobResult {
                 att,
                 limit,
                 mean_recovery: out[i * 2],
                 std_recovery: out[i * 2 + 1],
-            });
-        }
-    }
-    Ok(results)
+            })
+            .collect();
+        Ok(results)
+    })?;
+
+    Ok(per_batch.into_iter().flatten().collect())
 }
 
 #[cfg(test)]
@@ -184,7 +230,7 @@ mod tests {
             lim_range: (4.0, 4.0), // fixed limit
             seed: 3,
         };
-        let res = run_sweep(&mut RustSweep, &cfg, 512, 8, 16).unwrap();
+        let res = run_sweep(&RustSweep, &cfg, 512, 8, 16).unwrap();
         assert_eq!(res.len(), 16);
         for w in res.windows(2) {
             assert!(
@@ -205,9 +251,24 @@ mod tests {
             seed: 9,
             ..Default::default()
         };
-        let a = run_sweep(&mut RustSweep, &cfg, 256, 8, 8).unwrap();
-        let b = run_sweep(&mut RustSweep, &cfg, 256, 8, 8).unwrap();
+        let a = run_sweep(&RustSweep, &cfg, 256, 8, 8).unwrap();
+        let b = run_sweep(&RustSweep, &cfg, 256, 8, 8).unwrap();
         assert_eq!(a, b, "same seed, same batching => identical results");
+    }
+
+    #[test]
+    fn pooled_sweep_is_bit_identical_to_serial() {
+        let cfg = SweepConfig {
+            n_jobs: 40,
+            seed: 21,
+            ..Default::default()
+        };
+        let serial = run_sweep(&RustSweep, &cfg, 128, 8, 8).unwrap();
+        for pool in [WorkerPool::new(2, 4), WorkerPool::new(4, 16)] {
+            let pooled =
+                run_sweep_with_pool(&RustSweep, &cfg, 128, 8, 8, &pool).unwrap();
+            assert_eq!(serial, pooled, "pool {pool:?} must not change numerics");
+        }
     }
 
     #[test]

@@ -10,9 +10,11 @@ pub mod catbond;
 pub mod cost;
 pub mod ga;
 pub mod mc;
+pub mod pool;
 pub mod script;
 
 pub use backend::{FitnessBackend, PjrtBackend, RustBackend};
 pub use catbond::CatBondData;
 pub use cost::{CatoptCost, SweepCost};
+pub use pool::WorkerPool;
 pub use script::P2racEngine;

@@ -1,0 +1,326 @@
+//! Scoped-thread worker pool for the analytics engine (paper §3.2.2:
+//! parallel slave processes across cluster cores).
+//!
+//! The simulation schedules `nproc` virtual slave processes over the
+//! cluster's nodes and *accounts* their work in virtual time
+//! ([`crate::analytics::cost::parallel_eval_s`] gives task `i` to
+//! process `i % nproc`). This pool makes the same fan-out **real**: it
+//! shards work round-robin over exactly those `nproc` virtual shards —
+//! so wall-clock sharding and virtual-time accounting describe the same
+//! partition — and executes the shards on
+//! `min(nproc, available_parallelism)` OS threads (overridable with the
+//! CLI `-threads` knob via [`ResourceView::real_threads`]).
+//!
+//! Determinism: a candidate's fitness depends only on the candidate
+//! (see [`FitnessBackend::eval_population`]), and results are stitched
+//! back by index, so the threaded path is bit-identical to the serial
+//! path for the same seed. `std::thread::scope` keeps everything on
+//! borrowed data — no new dependencies, no channels.
+
+use crate::analytics::backend::FitnessBackend;
+use crate::coordinator::engine::ResourceView;
+use anyhow::Result;
+
+/// Number of real threads to run: the CLI/`ResourceView` override if
+/// given, otherwise this host's parallelism, clamped to the number of
+/// virtual shards (more threads than shards would idle).
+pub fn resolve_threads(requested: Option<usize>, shards: usize) -> usize {
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    requested.unwrap_or(avail).clamp(1, shards.max(1))
+}
+
+/// A sharded execution plan: `shards` virtual slave processes served by
+/// `threads` OS threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerPool {
+    threads: usize,
+    shards: usize,
+}
+
+impl WorkerPool {
+    /// Single-threaded pool (the serial reference path).
+    pub fn serial() -> Self {
+        Self {
+            threads: 1,
+            shards: 1,
+        }
+    }
+
+    /// Explicit pool: `threads` OS threads over `shards` virtual
+    /// shards. Both are clamped to at least 1.
+    pub fn new(threads: usize, shards: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            shards: shards.max(1),
+        }
+    }
+
+    /// Pool matching a resource view: one virtual shard per scheduled
+    /// slave process (`view.assignment`), real threads from
+    /// [`resolve_threads`] with the view's `-threads` override.
+    pub fn from_view(view: &ResourceView) -> Self {
+        let shards = view.nproc().max(1);
+        Self {
+            threads: resolve_threads(view.real_threads, shards),
+            shards,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Task indices per shard: shard `p` gets tasks `p, p + shards,
+    /// p + 2*shards, …` — the same round-robin the virtual-time cost
+    /// model bills, so no shard is ever starved: every shard receives
+    /// at least `n_tasks / shards` (floor) tasks, and every task
+    /// appears in exactly one shard.
+    pub fn shard_indices(&self, n_tasks: usize) -> Vec<Vec<usize>> {
+        shard_indices_n(n_tasks, self.shards)
+    }
+
+    /// Evaluate a population through a backend, sharded across the
+    /// pool. Bit-identical to `backend.eval_population(pop)`.
+    ///
+    /// The shard count is clamped so no shard drops below the
+    /// backend's [`preferred_batch`](FitnessBackend::preferred_batch):
+    /// a tiled backend (PJRT) pads every call to a fixed `POP` tile,
+    /// and splitting 200 candidates over 16 virtual shards would
+    /// execute 16 padded tiles where the serial path needs 4 —
+    /// more total work than it parallelises away. Stitching is by
+    /// candidate index, so the clamp cannot change the numbers.
+    pub fn eval<B: FitnessBackend + ?Sized>(
+        &self,
+        backend: &B,
+        pop: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        if self.threads <= 1 || pop.len() <= 1 {
+            return backend.eval_population(pop);
+        }
+        let batch = backend.preferred_batch().max(1);
+        let max_useful = (pop.len() + batch - 1) / batch;
+        let shard_count = self.shards.min(max_useful).max(1);
+        if shard_count <= 1 {
+            return backend.eval_population(pop);
+        }
+        let shards: Vec<Vec<usize>> = shard_indices_n(pop.len(), shard_count)
+            .into_iter()
+            .filter(|s| !s.is_empty())
+            .collect();
+        // Each shard owns a contiguous copy of its candidates so the
+        // backend sees an ordinary slice.
+        let inputs: Vec<Vec<Vec<f32>>> = shards
+            .iter()
+            .map(|idxs| idxs.iter().map(|&i| pop[i].clone()).collect())
+            .collect();
+        let results = run_indexed(self.threads, inputs.len(), |si| {
+            backend.eval_population(&inputs[si])
+        });
+        let mut out = vec![0.0f32; pop.len()];
+        for (idxs, res) in shards.iter().zip(results) {
+            let vals = res?;
+            anyhow::ensure!(
+                vals.len() == idxs.len(),
+                "backend returned {} fitness values for a {}-candidate shard",
+                vals.len(),
+                idxs.len()
+            );
+            for (&i, v) in idxs.iter().zip(vals) {
+                out[i] = v;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parallel indexed map preserving input order (used for the
+    /// Monte-Carlo sweep's independent batches). The first error wins.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> Result<R> + Sync,
+    {
+        run_indexed(self.threads, items.len(), |i| f(i, &items[i]))
+            .into_iter()
+            .collect()
+    }
+}
+
+/// Round-robin task indices over `shards` buckets.
+fn shard_indices_n(n_tasks: usize, shards: usize) -> Vec<Vec<usize>> {
+    let shards = shards.max(1);
+    let mut out = vec![Vec::new(); shards];
+    for i in 0..n_tasks {
+        out[i % shards].push(i);
+    }
+    out
+}
+
+/// Run `f(0..n)` on up to `threads` scoped threads (thread `t` takes
+/// items `t, t + threads, …`), returning results in index order.
+fn run_indexed<R, F>(threads: usize, n: usize, f: F) -> Vec<Result<R>>
+where
+    R: Send,
+    F: Fn(usize) -> Result<R> + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let fref = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads.min(n))
+            .map(|t| {
+                s.spawn(move || {
+                    (t..n)
+                        .step_by(threads)
+                        .map(|i| (i, fref(i)))
+                        .collect::<Vec<(usize, Result<R>)>>()
+                })
+            })
+            .collect();
+        let mut slots: Vec<Option<Result<R>>> = (0..n).map(|_| None).collect();
+        for h in handles {
+            for (i, r) in h.join().expect("pool worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|o| o.expect("pool covered every index"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::backend::RustBackend;
+    use crate::analytics::catbond::CatBondData;
+
+    fn pop(n: usize, m: usize) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::prng::Xoshiro256::seed_from_u64(11);
+        (0..n)
+            .map(|_| (0..m).map(|_| rng.next_f32() / m as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn shard_indices_cover_all_tasks_exactly_once() {
+        let p = WorkerPool::new(3, 5);
+        let shards = p.shard_indices(17);
+        assert_eq!(shards.len(), 5);
+        let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..17).collect::<Vec<_>>());
+        // Round-robin: no shard starves while another hoards.
+        for s in &shards {
+            assert!(s.len() >= 17 / 5 && s.len() <= 17 / 5 + 1, "{shards:?}");
+        }
+    }
+
+    #[test]
+    fn threaded_eval_is_bit_identical_to_serial() {
+        let data = CatBondData::generate(5, 24, 96);
+        let b = RustBackend::new(data);
+        let candidates = pop(37, 24);
+        let serial = b.eval_population(&candidates).unwrap();
+        for (threads, shards) in [(2, 2), (4, 7), (3, 16), (8, 37)] {
+            let pooled = WorkerPool::new(threads, shards).eval(&b, &candidates).unwrap();
+            assert_eq!(serial, pooled, "threads={threads} shards={shards}");
+        }
+    }
+
+    #[test]
+    fn map_preserves_order_and_propagates_errors() {
+        let p = WorkerPool::new(4, 4);
+        let items: Vec<u64> = (0..50).collect();
+        let out = p.map(&items, |i, &x| Ok(x * 2 + i as u64)).unwrap();
+        assert_eq!(out.len(), 50);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64 * 3);
+        }
+        let err = p.map(&items, |_, &x| {
+            if x == 31 {
+                Err(anyhow::anyhow!("boom at {x}"))
+            } else {
+                Ok(x)
+            }
+        });
+        assert!(err.unwrap_err().to_string().contains("boom at 31"));
+    }
+
+    #[test]
+    fn eval_respects_backend_preferred_batch() {
+        // A tiled backend must not be fragmented into sub-tile shards:
+        // with preferred_batch = 16 and 37 candidates, at most
+        // ceil(37/16) = 3 shards may be evaluated, whatever the pool's
+        // virtual shard count — and the numbers must not change.
+        struct Tiled {
+            inner: RustBackend,
+            tile: usize,
+            calls: std::sync::atomic::AtomicU64,
+        }
+        impl crate::analytics::backend::FitnessBackend for Tiled {
+            fn eval_population(&self, pop: &[Vec<f32>]) -> anyhow::Result<Vec<f32>> {
+                self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.inner.eval_population(pop)
+            }
+            fn value_and_grad(&self, w: &[f32]) -> anyhow::Result<(f32, Vec<f32>)> {
+                self.inner.value_and_grad(w)
+            }
+            fn dims(&self) -> usize {
+                self.inner.dims()
+            }
+            fn preferred_batch(&self) -> usize {
+                self.tile
+            }
+        }
+        let data = CatBondData::generate(5, 24, 96);
+        let b = Tiled {
+            inner: RustBackend::new(data),
+            tile: 16,
+            calls: std::sync::atomic::AtomicU64::new(0),
+        };
+        let candidates = pop(37, 24);
+        let serial = b.inner.eval_population(&candidates).unwrap();
+        let pooled = WorkerPool::new(8, 16).eval(&b, &candidates).unwrap();
+        assert_eq!(serial, pooled);
+        let calls = b.calls.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(calls <= 3, "tiled backend fragmented into {calls} shard calls");
+    }
+
+    #[test]
+    fn resolve_threads_clamps_to_shards() {
+        assert_eq!(resolve_threads(Some(16), 4), 4);
+        assert_eq!(resolve_threads(Some(0), 4), 1);
+        assert_eq!(resolve_threads(Some(3), 64), 3);
+        assert!(resolve_threads(None, 64) >= 1);
+    }
+
+    #[test]
+    fn pool_from_view_uses_assignment_length() {
+        use crate::coordinator::scheduler::NodeSpec;
+        use crate::simcloud::{NetworkModel, SimParams};
+        let view = ResourceView {
+            nodes: vec![NodeSpec {
+                name: "n0".into(),
+                cores: 4,
+                mem_gb: 34.2,
+                core_speed: 0.88,
+            }],
+            assignment: vec![0; 6],
+            net: NetworkModel::new(SimParams::default()),
+            resource_name: "t".into(),
+            real_threads: Some(2),
+        };
+        let p = WorkerPool::from_view(&view);
+        assert_eq!(p.shards(), 6);
+        assert_eq!(p.threads(), 2);
+    }
+}

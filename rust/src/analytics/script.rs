@@ -17,23 +17,31 @@ use super::catbond::CatBondData;
 use super::cost::{self, CatoptCost, SweepCost};
 use super::ga::optimizer::{self, GaConfig};
 use super::mc::{self, PjrtSweep, RustSweep, SweepConfig};
+use super::pool::WorkerPool;
 use crate::coordinator::engine::{ResourceView, ScriptEngine, TaskOutput};
 use crate::runtime::Runtime;
 use crate::simcloud::vfs::Vfs;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// The engine behind `ec2runoninstance` / `ec2runoncluster`.
+///
+/// Work is fanned out over a [`WorkerPool`] built from the resource
+/// view: one virtual shard per scheduled slave process, executed on
+/// real threads. Virtual time is still billed from the scheduler's
+/// assignment (the cost model and the pool shard identically), so
+/// `compute_s` is independent of how many real threads happen to run —
+/// and the numerics are bit-identical to the serial path.
 pub struct P2racEngine {
-    runtime: Option<Rc<Runtime>>,
+    runtime: Option<Arc<Runtime>>,
     pub catopt_cost: CatoptCost,
     pub sweep_cost: SweepCost,
 }
 
 impl P2racEngine {
     /// Engine with the PJRT runtime (production path).
-    pub fn with_runtime(rt: Rc<Runtime>) -> Self {
+    pub fn with_runtime(rt: Arc<Runtime>) -> Self {
         Self {
             runtime: Some(rt),
             catopt_cost: CatoptCost::default(),
@@ -79,15 +87,16 @@ impl P2racEngine {
             self.catopt_cost.candidate_cost_s = c;
         }
 
+        let pool = WorkerPool::from_view(view);
         let want_pjrt = script.opt_str("backend").as_deref() != Some("rust");
         let result = match (&self.runtime, want_pjrt) {
             (Some(rt), true) => {
-                let mut b = PjrtBackend::new(Rc::clone(rt), data)?;
-                optimizer::run(&mut b, &cfg)?
+                let b = PjrtBackend::new(Arc::clone(rt), data)?;
+                optimizer::run_with_pool(&b, &cfg, &pool)?
             }
             _ => {
-                let mut b = RustBackend::new(data);
-                optimizer::run(&mut b, &cfg)?
+                let b = RustBackend::new(data);
+                optimizer::run_with_pool(&b, &cfg, &pool)?
             }
         };
 
@@ -148,16 +157,21 @@ impl P2racEngine {
             self.sweep_cost.job_cost_s = c;
         }
 
+        let pool = WorkerPool::from_view(view);
         let want_pjrt = script.opt_str("backend").as_deref() != Some("rust");
         let (results, s, k) = match (&self.runtime, want_pjrt) {
             (Some(rt), true) => {
                 let s = rt.constant("S")?;
                 let k = rt.constant("K")?;
                 let j = rt.constant("J")?;
-                let mut b = PjrtSweep::new(Rc::clone(rt));
-                (mc::run_sweep(&mut b, &cfg, s, k, j)?, s, k)
+                let b = PjrtSweep::new(Arc::clone(rt));
+                (mc::run_sweep_with_pool(&b, &cfg, s, k, j, &pool)?, s, k)
             }
-            _ => (mc::run_sweep(&mut RustSweep, &cfg, 1024, 8, 64)?, 1024, 8),
+            _ => (
+                mc::run_sweep_with_pool(&RustSweep, &cfg, 1024, 8, 64, &pool)?,
+                1024,
+                8,
+            ),
         };
 
         let compute_s = cost::sweep_total_s(cfg.n_jobs, &self.sweep_cost, view);
@@ -252,6 +266,7 @@ mod tests {
             nodes: ns,
             net: NetworkModel::new(SimParams::default()),
             resource_name: "test".into(),
+            real_threads: None,
         }
     }
 
@@ -323,6 +338,25 @@ mod tests {
         let t1 = e.run("s", &script, &v, &dir, &view(1, 4)).unwrap().compute_s;
         let t8 = e.run("s", &script, &v, &dir, &view(8, 4)).unwrap().compute_s;
         assert!(t8 < t1 / 3.0, "8-node {t8}s vs 1-node {t1}s");
+    }
+
+    #[test]
+    fn thread_count_changes_neither_numerics_nor_virtual_time() {
+        // The `-threads` knob controls real parallelism only: summary
+        // values and billed virtual compute time must be identical.
+        let (v, dir) = catopt_project();
+        let script = Json::parse(std::str::from_utf8(v.read("proj/catopt.json").unwrap()).unwrap())
+            .unwrap();
+        let mut e = P2racEngine::rust_only();
+        let mut serial_view = view(4, 4);
+        serial_view.real_threads = Some(1);
+        let mut threaded_view = view(4, 4);
+        threaded_view.real_threads = Some(4);
+        let a = e.run("catopt.json", &script, &v, &dir, &serial_view).unwrap();
+        let b = e.run("catopt.json", &script, &v, &dir, &threaded_view).unwrap();
+        assert_eq!(a.compute_s, b.compute_s);
+        assert_eq!(a.summary.to_string_compact(), b.summary.to_string_compact());
+        assert_eq!(a.master_files, b.master_files);
     }
 
     #[test]

@@ -6,12 +6,15 @@
 //! coordinator, and returns the virtual-time measurements the figures
 //! plot.
 
-use crate::analytics::{CatBondData, P2racEngine};
+use crate::analytics::cost::{catopt_generation_s, CatoptCost};
+use crate::analytics::ga::optimizer::{self, GaConfig, GaResult};
+use crate::analytics::pool::WorkerPool;
+use crate::analytics::{CatBondData, P2racEngine, RustBackend};
 use crate::coordinator::{
-    table1_desktops, CreateClusterOpts, CreateInstanceOpts, DesktopSpec, Placement, ResultScope,
-    Session,
+    table1_desktops, CreateClusterOpts, CreateInstanceOpts, DesktopSpec, NodeSpec, Placement,
+    ResourceView, ResultScope, Session,
 };
-use crate::simcloud::{SimParams, SpanCategory};
+use crate::simcloud::{NetworkModel, SimParams, SpanCategory};
 use anyhow::Result;
 
 /// One Table-I resource.
@@ -218,6 +221,137 @@ fn read_breakdown(s: &Session, compute_s: f64) -> Breakdown {
     }
 }
 
+// ===================================================== real vs virtual
+
+/// Wall-clock measurement of the worker pool against the serial path
+/// on the same workload — the "real" column next to the simulator's
+/// virtual-time speedups (Fig 4).
+#[derive(Clone, Debug)]
+pub struct SpeedupReport {
+    /// Real threads used by the threaded run.
+    pub threads: usize,
+    /// Wall-clock of the serial reference run.
+    pub wall_serial_s: f64,
+    /// Wall-clock of the pool run.
+    pub wall_threaded_s: f64,
+    /// Virtual-time speedup the simulator bills for the same fan-out
+    /// (the cost model's round-robin over `threads` slave processes on
+    /// one node, including the serial master-side dispatch — so it is
+    /// sub-linear, like the paper's Fig 4).
+    pub virtual_speedup: f64,
+    /// Whether the threaded run reproduced the serial result bit for
+    /// bit (it must — sharding is numerics-neutral).
+    pub bit_identical: bool,
+}
+
+impl SpeedupReport {
+    pub fn real_speedup(&self) -> f64 {
+        self.wall_serial_s / self.wall_threaded_s.max(1e-12)
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "threads={:<2} wall {:>7.3}s -> {:>7.3}s  real {:>5.2}x  virtual {:>5.2}x  bit-identical={}",
+            self.threads,
+            self.wall_serial_s,
+            self.wall_threaded_s,
+            self.real_speedup(),
+            self.virtual_speedup,
+            self.bit_identical
+        )
+    }
+}
+
+/// The catopt workload used for real-speedup measurement: heavy enough
+/// per candidate (objective is `O(m*e)`) that sharding dominates the
+/// pool's thread-spawn overhead.
+fn speedup_workload() -> (CatBondData, GaConfig) {
+    let data = CatBondData::generate(7, 96, 4096);
+    let cfg = GaConfig {
+        pop_size: 128,
+        max_generations: 4,
+        wait_generations: 4,
+        bfgs_every: 0,
+        seed: 42,
+        ..Default::default()
+    };
+    (data, cfg)
+}
+
+/// The simulator's billed speedup for fanning one GA generation of
+/// `evals` candidates over `nproc` slave processes on a single node
+/// (no collective over the wire, but the serial master dispatch of
+/// `CatoptCost::per_message_s` still applies — the same model behind
+/// Fig 4's knee).
+pub fn virtual_speedup(evals: usize, nproc: usize) -> f64 {
+    let mk = |nproc: usize| ResourceView {
+        nodes: vec![NodeSpec {
+            name: "speedup-host".into(),
+            cores: nproc,
+            mem_gb: 34.2,
+            core_speed: 1.0,
+        }],
+        assignment: vec![0; nproc],
+        net: NetworkModel::new(SimParams::default()),
+        resource_name: "speedup-host".into(),
+        real_threads: None,
+    };
+    let cost = CatoptCost::default();
+    let t1 = catopt_generation_s(evals, &cost, &mk(1));
+    let tn = catopt_generation_s(evals, &cost, &mk(nproc.max(1)));
+    t1 / tn.max(1e-12)
+}
+
+/// The serial reference run, measured once and reused for every
+/// thread count (`bench_ga_parallel` sweeps 1/2/4/8 threads — re-
+/// running the multi-second serial GA per sweep point would double
+/// the bench and flatter the threaded runs with freshly warmed
+/// caches).
+pub struct SpeedupBaseline {
+    data: CatBondData,
+    cfg: GaConfig,
+    pub wall_serial_s: f64,
+    serial: GaResult,
+}
+
+/// Run the serial catopt reference once.
+pub fn speedup_baseline() -> Result<SpeedupBaseline> {
+    let (data, cfg) = speedup_workload();
+    let backend = RustBackend::new(data.clone());
+    let t0 = std::time::Instant::now();
+    let serial = optimizer::run(&backend, &cfg)?;
+    Ok(SpeedupBaseline {
+        data,
+        cfg,
+        wall_serial_s: t0.elapsed().as_secs_f64(),
+        serial,
+    })
+}
+
+impl SpeedupBaseline {
+    /// Measure a `threads`-wide pool run against this baseline.
+    pub fn measure(&self, threads: usize) -> Result<SpeedupReport> {
+        let backend = RustBackend::new(self.data.clone());
+        let pool = WorkerPool::new(threads, threads.max(1));
+        let t1 = std::time::Instant::now();
+        let threaded = optimizer::run_with_pool(&backend, &self.cfg, &pool)?;
+        let wall_threaded_s = t1.elapsed().as_secs_f64();
+        Ok(SpeedupReport {
+            threads: pool.threads(),
+            wall_serial_s: self.wall_serial_s,
+            wall_threaded_s,
+            virtual_speedup: virtual_speedup(self.cfg.pop_size, pool.threads()),
+            bit_identical: self.serial.best == threaded.best
+                && self.serial.best_value == threaded.best_value,
+        })
+    }
+}
+
+/// One-shot convenience: serial baseline + one threaded measurement.
+pub fn measure_real_speedup(threads: usize) -> Result<SpeedupReport> {
+    speedup_baseline()?.measure(threads)
+}
+
 /// Pretty row printer shared by the bench binaries.
 pub fn print_row(cols: &[String], widths: &[usize]) {
     let line: Vec<String> = cols
@@ -251,6 +385,27 @@ mod tests {
                 assert!(b.submit_all_s > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn real_speedup_report_is_sound() {
+        // No wall-clock assertion here (CI machines may be single-core);
+        // the >1.5x-at-4-threads check lives in `cargo bench --bench
+        // micro`. Here we pin the invariants: bit-identical numerics
+        // and sane timings.
+        let r = measure_real_speedup(2).unwrap();
+        assert!(r.bit_identical, "threaded GA must reproduce serial bits");
+        assert!(r.wall_serial_s > 0.0 && r.wall_threaded_s > 0.0);
+        assert!(r.threads >= 1 && r.threads <= 2);
+        assert!(r.row().contains("bit-identical=true"));
+        // The billed (virtual) speedup follows the cost model: sub-
+        // linear because of the serial master dispatch, but close to
+        // the process count for a compute-bound generation.
+        assert!(
+            r.virtual_speedup > 1.5 && r.virtual_speedup < 2.0,
+            "virtual speedup {} out of model range",
+            r.virtual_speedup
+        );
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("iname", "target instance")
             .value_arg("projectdir", "project directory")
             .value_arg("rscript", "script to execute from the project directory")
+            .value_arg("threads", "real worker threads for the engine (default: all cores)")
             .required_arg("runname", "name for this run"),
         CommandSpec::new("ec2createcluster", "gather and configure a pool of instances as a cluster")
             .value_arg("cname", "name of the cluster")
@@ -72,6 +73,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("cname", "target cluster")
             .value_arg("projectdir", "project directory")
             .value_arg("rscript", "script to execute")
+            .value_arg("threads", "real worker threads for the engine (default: all cores)")
             .required_arg("runname", "name for this run")
             .switch_arg("bynode", "round-robin slave placement (default)")
             .switch_arg("byslot", "fill each node's cores before the next")
@@ -110,6 +112,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("desktop", "A | B")
             .value_arg("projectdir", "project directory")
             .value_arg("rscript", "script to execute")
+            .value_arg("threads", "real worker threads for the engine (default: all cores)")
             .required_arg("runname", "name for this run"),
     ]
 }
@@ -242,6 +245,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
         }
         "ec2runoninstance" => {
             let rscript = pick_script(s, p)?;
+            s.threads = p.usize_value("threads")?;
             let out = s.run_on_instance(
                 p.value("iname"),
                 project_dir(p),
@@ -330,6 +334,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
         "ec2runoncluster" => {
             let rscript = pick_script(s, p)?;
             let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"));
+            s.threads = p.usize_value("threads")?;
             let out = s.run_on_cluster(
                 p.value("cname"),
                 project_dir(p),
@@ -411,6 +416,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 .find(|d| d.name.ends_with(which))
                 .ok_or_else(|| anyhow!("desktop must be A or B"))?;
             let rscript = pick_script(s, p)?;
+            s.threads = p.usize_value("threads")?;
             let out = s.run_local(d, project_dir(p), &rscript, p.value("runname").unwrap())?;
             Ok(format!(
                 "run complete on {} in {} (virtual)\nsummary: {}",

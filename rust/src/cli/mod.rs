@@ -25,7 +25,7 @@ use crate::simcloud::SimParams;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Where the persisted session lives.
 pub fn session_dir() -> PathBuf {
@@ -46,7 +46,7 @@ pub fn make_engine() -> Box<dyn ScriptEngine> {
         .unwrap_or_else(|_| PathBuf::from("artifacts"));
     if dir.join("manifest.json").exists() {
         match Runtime::load(&dir) {
-            Ok(rt) => return Box::new(P2racEngine::with_runtime(Rc::new(rt))),
+            Ok(rt) => return Box::new(P2racEngine::with_runtime(Arc::new(rt))),
             Err(e) => {
                 crate::log_warn!("artifacts unusable ({e:#}); falling back to rust backend");
             }

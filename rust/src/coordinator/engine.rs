@@ -22,6 +22,11 @@ pub struct ResourceView {
     pub net: NetworkModel,
     /// Human-readable resource name ("hpc_cluster", "Desktop A", …).
     pub resource_name: String,
+    /// Real OS threads the engine's worker pool may use (`-threads`
+    /// knob). `None` = use this host's available parallelism. Affects
+    /// wall-clock only — virtual-time accounting always follows
+    /// `assignment`.
+    pub real_threads: Option<usize>,
 }
 
 impl ResourceView {
@@ -132,6 +137,7 @@ mod tests {
             assignment: (0..n * 4).map(|p| p % n).collect(),
             net: NetworkModel::new(SimParams::default()),
             resource_name: format!("cluster{n}"),
+            real_threads: None,
         };
         let mut e = MockEngine::new(1000.0);
         let t1 = e.run("s", &Json::Null, &Vfs::new(), "p", &mk(1)).unwrap();

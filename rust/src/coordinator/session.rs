@@ -82,6 +82,10 @@ pub struct Session {
     pub instances_cfg: InstancesConfig,
     pub clusters_cfg: ClustersConfig,
     pub rlibs: RLibsConfig,
+    /// Real OS threads the analytics engine may use for this
+    /// invocation (CLI `-threads`); `None` = host parallelism. A
+    /// runtime knob, deliberately not persisted with the session.
+    pub threads: Option<usize>,
     engine: Box<dyn ScriptEngine>,
 }
 
@@ -129,6 +133,7 @@ impl Session {
             instances_cfg: InstancesConfig::default(),
             clusters_cfg: ClustersConfig::default(),
             rlibs: RLibsConfig::default(),
+            threads: None,
             engine,
         };
         s.save_configs();
@@ -199,6 +204,7 @@ impl Session {
             rlibs: RLibsConfig::from_json(
                 j.get("rlibs").ok_or_else(|| anyhow!("missing rlibs"))?,
             )?,
+            threads: None,
             engine,
         })
     }
@@ -891,6 +897,7 @@ impl Session {
             assignment,
             net: self.cloud.net.clone(),
             resource_name: name.clone(),
+            real_threads: self.threads,
         };
         let out = self.engine.run(rscript, &script, &project, &pdir, &view);
         // Always unlock, even on engine failure.
@@ -970,6 +977,7 @@ impl Session {
             assignment,
             net: self.cloud.net.clone(),
             resource_name: name.clone(),
+            real_threads: self.threads,
         };
         let out = self.engine.run(rscript, &script, &project, &pdir, &view);
         self.set_cluster_lock(&name, false)?;
@@ -1021,6 +1029,7 @@ impl Session {
             assignment: vec![0; nproc],
             net: self.cloud.net.clone(),
             resource_name: desktop.name.clone(),
+            real_threads: self.threads,
         };
         let project = self.analyst.clone();
         let out = self.engine.run(rscript, &script, &project, projectdir, &view)?;

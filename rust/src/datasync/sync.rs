@@ -50,17 +50,30 @@ impl SyncReport {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SyncError {
-    #[error("transfer interrupted after {synced} of {total} files")]
     Interrupted {
         synced: usize,
         total: usize,
         partial: SyncReport,
     },
-    #[error("source directory '{0}' does not exist or is empty")]
     EmptySource(String),
 }
+
+impl std::fmt::Display for SyncError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SyncError::Interrupted { synced, total, .. } => {
+                write!(f, "transfer interrupted after {synced} of {total} files")
+            }
+            SyncError::EmptySource(d) => {
+                write!(f, "source directory '{d}' does not exist or is empty")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SyncError {}
 
 /// Synchronise `src_dir` (in `src`) into `dst_dir` (in `dst`).
 ///

@@ -19,35 +19,46 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Errors surfaced to the coordinator / CLI.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CloudError {
-    #[error("instance type '{0}' is not offered")]
     UnknownInstanceType(String),
-    #[error("no such instance '{0}'")]
     NoSuchInstance(String),
-    #[error("no such volume '{0}'")]
     NoSuchVolume(String),
-    #[error("no such snapshot '{0}'")]
     NoSuchSnapshot(String),
-    #[error("no such AMI '{0}'")]
     NoSuchAmi(String),
-    #[error("volume '{0}' is attached to instance '{1}'")]
     VolumeInUse(String, String),
-    #[error("volume '{0}' is not attached")]
     VolumeNotAttached(String),
-    #[error("volume '{0}' has been deleted")]
     VolumeDeleted(String),
-    #[error("instance '{0}' is not running")]
     NotRunning(String),
-    #[error("resource '{0}' is locked (in use)")]
     Locked(String),
-    #[error("insufficient capacity: instance launch failed")]
     BootFailure,
-    #[error("volume attachment failed")]
     AttachFailure,
-    #[error("instance type '{0}' requires an HVM AMI")]
     HvmRequired(String),
 }
+
+impl std::fmt::Display for CloudError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CloudError::UnknownInstanceType(t) => write!(f, "instance type '{t}' is not offered"),
+            CloudError::NoSuchInstance(i) => write!(f, "no such instance '{i}'"),
+            CloudError::NoSuchVolume(v) => write!(f, "no such volume '{v}'"),
+            CloudError::NoSuchSnapshot(s) => write!(f, "no such snapshot '{s}'"),
+            CloudError::NoSuchAmi(a) => write!(f, "no such AMI '{a}'"),
+            CloudError::VolumeInUse(v, i) => {
+                write!(f, "volume '{v}' is attached to instance '{i}'")
+            }
+            CloudError::VolumeNotAttached(v) => write!(f, "volume '{v}' is not attached"),
+            CloudError::VolumeDeleted(v) => write!(f, "volume '{v}' has been deleted"),
+            CloudError::NotRunning(i) => write!(f, "instance '{i}' is not running"),
+            CloudError::Locked(r) => write!(f, "resource '{r}' is locked (in use)"),
+            CloudError::BootFailure => write!(f, "insufficient capacity: instance launch failed"),
+            CloudError::AttachFailure => write!(f, "volume attachment failed"),
+            CloudError::HvmRequired(t) => write!(f, "instance type '{t}' requires an HVM AMI"),
+        }
+    }
+}
+
+impl std::error::Error for CloudError {}
 
 /// The simulated IaaS account.
 pub struct SimCloud {
@@ -577,7 +588,8 @@ impl SimCloud {
             ledger.push(Json::from_pairs(vec![
                 ("id", Json::str(&item.resource_id)),
                 ("detail", Json::str(&item.detail)),
-                ("cents", Json::num(item.cents as f64)),
+                // Centi-cents: sub-cent EBS charges survive a restore.
+                ("centi_cents", Json::num(item.centi_cents as f64)),
             ]));
         }
         root.set("ledger", Json::Arr(ledger));
@@ -677,12 +689,13 @@ impl SimCloud {
         }
         if let Some(items) = j.get("ledger").and_then(Json::as_arr) {
             for item in items {
-                // Re-book as flat items (already-computed cents).
-                c.ledger.push_raw(
-                    &item.req_str("id")?,
-                    &item.req_str("detail")?,
-                    item.req_u64("cents")?,
-                );
+                // Re-book as flat items (already-computed amounts).
+                // Pre-centi-cent sessions persisted whole "cents".
+                let centi = match item.get("centi_cents").and_then(Json::as_u64) {
+                    Some(cc) => cc,
+                    None => item.req_u64("cents")? * 100,
+                };
+                c.ledger.push_raw(&item.req_str("id")?, &item.req_str("detail")?, centi);
             }
         }
         Ok(c)

@@ -1,13 +1,28 @@
 //! Usage-based billing, EC2-2012 style: instance-hours are billed in
 //! whole-hour increments from launch to termination; EBS is billed per
 //! GiB-month (pro-rated here per virtual hour).
+//!
+//! Sub-cent amounts are carried in **centi-cents** per line item and
+//! rounded exactly once, in [`Ledger::total_cents`]. The earlier
+//! per-item `/ 100` truncation meant any volume-hour total under 100
+//! centi-cents billed 0¢ — a fleet of small volumes never cost
+//! anything, no matter how many accumulated.
 
-/// One billed line item.
+/// One billed line item. Amounts are stored in hundredths of a cent so
+/// small EBS charges are not truncated away item by item.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LineItem {
     pub resource_id: String,
     pub detail: String,
-    pub cents: u64,
+    pub centi_cents: u64,
+}
+
+impl LineItem {
+    /// Whole cents of this item alone (display only — totals must sum
+    /// centi-cents first, see [`Ledger::total_cents`]).
+    pub fn cents(&self) -> u64 {
+        self.centi_cents / 100
+    }
 }
 
 /// Account ledger accumulating charges over the simulation.
@@ -37,32 +52,40 @@ impl Ledger {
         self.items.push(LineItem {
             resource_id: id.to_string(),
             detail: format!("{api_name} x {hours} instance-hour(s)"),
-            cents: hours * price_cents_hour,
+            centi_cents: hours * price_cents_hour * 100,
         });
     }
 
-    /// Bill a volume's storage for its lifetime.
+    /// Bill a volume's storage for its lifetime. The centi-cent amount
+    /// is kept exact; rounding happens once at the total.
     pub fn bill_volume(&mut self, id: &str, size_gb: f64, start_s: f64, end_s: f64) {
         let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
         let centi_cents = (size_gb.ceil() as u64) * hours * EBS_CENTI_CENTS_PER_GB_HOUR;
         self.items.push(LineItem {
             resource_id: id.to_string(),
             detail: format!("EBS {size_gb:.0} GiB x {hours} hour(s)"),
-            cents: centi_cents / 100,
+            centi_cents,
         });
     }
 
     /// Re-book a persisted line item verbatim (session restore).
-    pub fn push_raw(&mut self, resource_id: &str, detail: &str, cents: u64) {
+    pub fn push_raw(&mut self, resource_id: &str, detail: &str, centi_cents: u64) {
         self.items.push(LineItem {
             resource_id: resource_id.to_string(),
             detail: detail.to_string(),
-            cents,
+            centi_cents,
         });
     }
 
+    /// Total in whole cents: centi-cents are summed exactly and rounded
+    /// once here, so many sub-cent items still add up to real money.
     pub fn total_cents(&self) -> u64 {
-        self.items.iter().map(|i| i.cents).sum()
+        self.total_centi_cents() / 100
+    }
+
+    /// Exact total in hundredths of a cent.
+    pub fn total_centi_cents(&self) -> u64 {
+        self.items.iter().map(|i| i.centi_cents).sum()
     }
 
     pub fn items(&self) -> &[LineItem] {
@@ -70,7 +93,7 @@ impl Ledger {
     }
 
     pub fn total_dollars(&self) -> f64 {
-        self.total_cents() as f64 / 100.0
+        self.total_centi_cents() as f64 / 10_000.0
     }
 }
 
@@ -108,5 +131,33 @@ mod tests {
         let mut l = Ledger::new();
         l.bill_volume("vol-1", 100.0, 0.0, 3600.0);
         assert!(l.total_cents() <= 1);
+    }
+
+    #[test]
+    fn small_volumes_accumulate_instead_of_truncating_to_zero() {
+        // 250 one-GiB volume-hours = 250 centi-cents. The old per-item
+        // `/ 100` truncation billed each as 0¢ and the fleet rode free;
+        // the ledger must now see 2 whole cents.
+        let mut l = Ledger::new();
+        for i in 0..250 {
+            l.bill_volume(&format!("vol-{i}"), 1.0, 0.0, 3600.0);
+        }
+        assert_eq!(l.total_centi_cents(), 250);
+        assert_eq!(l.total_cents(), 2);
+        // Per-item display still shows sub-cent items as 0¢.
+        assert_eq!(l.items()[0].cents(), 0);
+    }
+
+    #[test]
+    fn restore_preserves_exact_centi_cents() {
+        let mut a = Ledger::new();
+        a.bill_volume("vol-1", 3.0, 0.0, 7200.0); // 6 centi-cents
+        a.bill_instance("i-1", "m1.large", 32, 0.0, 100.0);
+        let mut b = Ledger::new();
+        for item in a.items() {
+            b.push_raw(&item.resource_id, &item.detail, item.centi_cents);
+        }
+        assert_eq!(a.total_centi_cents(), b.total_centi_cents());
+        assert_eq!(a.items(), b.items());
     }
 }

@@ -8,19 +8,30 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum ArgError {
-    #[error("unknown argument '{0}'")]
     Unknown(String),
-    #[error("argument '{0}' requires a value")]
     MissingValue(String),
-    #[error("arguments {0} are mutually exclusive")]
     Exclusive(String),
-    #[error("missing required argument '{0}'")]
     MissingRequired(String),
-    #[error("unexpected positional argument '{0}'")]
     UnexpectedPositional(String),
 }
+
+impl std::fmt::Display for ArgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ArgError::Unknown(a) => write!(f, "unknown argument '{a}'"),
+            ArgError::MissingValue(a) => write!(f, "argument '{a}' requires a value"),
+            ArgError::Exclusive(a) => write!(f, "arguments {a} are mutually exclusive"),
+            ArgError::MissingRequired(a) => write!(f, "missing required argument '{a}'"),
+            ArgError::UnexpectedPositional(a) => {
+                write!(f, "unexpected positional argument '{a}'")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ArgError {}
 
 #[derive(Clone, Debug)]
 enum Kind {

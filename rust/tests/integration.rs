@@ -11,18 +11,32 @@ use p2rac::runtime::Runtime;
 use p2rac::simcloud::{SimParams, SpanCategory};
 use p2rac::util::json::Json;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn artifacts_dir() -> std::path::PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// The PJRT runtime when artifacts are built AND the real xla binding
+/// is linked; `None` otherwise (offline stub or no artifacts), matching
+/// the graceful fallback in `cli::make_engine`.
+fn pjrt_runtime() -> Option<Arc<Runtime>> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        return None;
+    }
+    match Runtime::load(&artifacts_dir()) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("artifacts present but runtime unavailable ({e:#}); using rust backend");
+            None
+        }
+    }
+}
+
 fn engine() -> Box<P2racEngine> {
-    if artifacts_dir().join("manifest.json").exists() {
-        let rt = Runtime::load(&artifacts_dir()).expect("runtime loads");
-        Box::new(P2racEngine::with_runtime(Rc::new(rt)))
-    } else {
-        Box::new(P2racEngine::rust_only())
+    match pjrt_runtime() {
+        Some(rt) => Box::new(P2racEngine::with_runtime(rt)),
+        None => Box::new(P2racEngine::rust_only()),
     }
 }
 
@@ -40,8 +54,14 @@ fn catopt_full_stack_on_cluster() {
     // The complete Fig-3 workflow with the production engine. If the
     // artifacts are built, fitness evaluation goes through PJRT (L1
     // Pallas numerics); otherwise through the Rust oracle.
-    let mut s = Session::new(SimParams::default(), engine());
-    let with_pjrt = artifacts_dir().join("manifest.json").exists();
+    // One runtime load serves both the scale decision and the engine.
+    let rt = pjrt_runtime();
+    let with_pjrt = rt.is_some();
+    let eng: Box<P2racEngine> = match rt {
+        Some(rt) => Box::new(P2racEngine::with_runtime(rt)),
+        None => Box::new(P2racEngine::rust_only()),
+    };
+    let mut s = Session::new(SimParams::default(), eng);
     let (m, e) = if with_pjrt { (512, 2048) } else { (48, 160) };
     catopt_project(
         &mut s,
@@ -77,16 +97,15 @@ fn catopt_full_stack_on_cluster() {
 fn pjrt_fitness_agrees_with_rust_oracle() {
     // The PJRT artifact and the Rust reference implement the same
     // objective — cross-check them on the same population.
-    if !artifacts_dir().join("manifest.json").exists() {
-        eprintln!("skipped: artifacts not built");
+    let Some(rt) = pjrt_runtime() else {
+        eprintln!("skipped: artifacts not built or runtime unavailable");
         return;
-    }
-    let rt = Rc::new(Runtime::load(&artifacts_dir()).unwrap());
+    };
     let m = rt.constant("M").unwrap();
     let e = rt.constant("E").unwrap();
     let data = CatBondData::generate(3, m, e);
-    let mut pjrt = PjrtBackend::new(Rc::clone(&rt), data.clone()).unwrap();
-    let mut rust = RustBackend::new(data);
+    let pjrt = PjrtBackend::new(Arc::clone(&rt), data.clone()).unwrap();
+    let rust = RustBackend::new(data);
     let mut rng = p2rac::util::prng::Xoshiro256::seed_from_u64(1);
     let pop: Vec<Vec<f32>> = (0..8)
         .map(|_| (0..m).map(|_| rng.next_f32() * 2.0 / m as f32).collect())

@@ -1,0 +1,174 @@
+//! Integration tests for the threaded analytics path: the worker pool
+//! must be numerics-neutral (bit-identical to serial for a fixed seed)
+//! at every layer, and the shard plan derived from the scheduler's
+//! assignment must never starve a shard — even oversubscribed.
+
+use p2rac::analytics::ga::optimizer::{self, GaConfig};
+use p2rac::analytics::mc::{self, RustSweep, SweepConfig};
+use p2rac::analytics::pool::WorkerPool;
+use p2rac::analytics::{CatBondData, P2racEngine, RustBackend};
+use p2rac::coordinator::engine::{ResourceView, ScriptEngine};
+use p2rac::coordinator::scheduler::{schedule, NodeSpec, Placement};
+use p2rac::simcloud::{NetworkModel, SimParams, Vfs};
+use p2rac::util::json::Json;
+use p2rac::util::quickprop;
+
+fn view(nodes: usize, cores: usize, real_threads: Option<usize>) -> ResourceView {
+    let ns: Vec<NodeSpec> = (0..nodes)
+        .map(|i| NodeSpec {
+            name: format!("n{i}"),
+            cores,
+            mem_gb: 34.2,
+            core_speed: 0.88,
+        })
+        .collect();
+    ResourceView {
+        assignment: (0..nodes * cores).map(|p| p % nodes).collect(),
+        nodes: ns,
+        net: NetworkModel::new(SimParams::default()),
+        resource_name: "par-test".into(),
+        real_threads,
+    }
+}
+
+#[test]
+fn threaded_ga_is_bit_identical_to_serial_for_fixed_seed() {
+    let data = CatBondData::generate(31, 32, 128);
+    let backend = RustBackend::new(data);
+    let cfg = GaConfig {
+        pop_size: 30,
+        max_generations: 12,
+        wait_generations: 12,
+        bfgs_every: 4,
+        seed: 2024,
+        ..Default::default()
+    };
+    let serial = optimizer::run(&backend, &cfg).unwrap();
+    for (threads, shards) in [(2, 4), (4, 16), (3, 30), (8, 5)] {
+        let pool = WorkerPool::new(threads, shards);
+        let threaded = optimizer::run_with_pool(&backend, &cfg, &pool).unwrap();
+        assert_eq!(serial.best, threaded.best, "{threads}t/{shards}s");
+        assert_eq!(serial.best_value, threaded.best_value);
+        assert_eq!(serial.total_evaluations, threaded.total_evaluations);
+        for (a, b) in serial.history.iter().zip(&threaded.history) {
+            assert_eq!(a.best_value, b.best_value);
+            assert_eq!(a.mean_value, b.mean_value);
+            assert_eq!(a.evaluations, b.evaluations);
+        }
+    }
+}
+
+#[test]
+fn threaded_mc_sweep_is_bit_identical_to_serial_for_fixed_seed() {
+    let cfg = SweepConfig {
+        n_jobs: 96,
+        seed: 77,
+        ..Default::default()
+    };
+    let serial = mc::run_sweep(&RustSweep, &cfg, 256, 8, 16).unwrap();
+    for (threads, shards) in [(2, 2), (4, 6), (6, 32)] {
+        let pool = WorkerPool::new(threads, shards);
+        let threaded =
+            mc::run_sweep_with_pool(&RustSweep, &cfg, 256, 8, 16, &pool).unwrap();
+        assert_eq!(serial, threaded, "{threads}t/{shards}s");
+    }
+}
+
+#[test]
+fn engine_reports_same_virtual_time_and_results_for_any_thread_count() {
+    // Full engine layer: the `-threads` knob must change wall-clock
+    // only — summaries, result files, and billed virtual compute time
+    // are invariant.
+    let mut project = Vfs::new();
+    let data = CatBondData::generate(7, 24, 96);
+    for (name, bytes) in data.to_files() {
+        project.write(&format!("proj/{name}"), bytes);
+    }
+    project.write(
+        "proj/catopt.json",
+        br#"{"type":"catopt","pop_size":20,"max_generations":5,"seed":13,"backend":"rust","bfgs_every":2}"#
+            .to_vec(),
+    );
+    project.write(
+        "proj/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":40,"seed":5,"backend":"rust"}"#.to_vec(),
+    );
+
+    for script_name in ["catopt.json", "sweep.json"] {
+        let script = Json::parse(
+            std::str::from_utf8(project.read(&format!("proj/{script_name}")).unwrap()).unwrap(),
+        )
+        .unwrap();
+        let mut outputs = Vec::new();
+        for threads in [Some(1), Some(2), Some(4), None] {
+            let mut engine = P2racEngine::rust_only();
+            let out = engine
+                .run(script_name, &script, &project, "proj", &view(4, 4, threads))
+                .unwrap();
+            outputs.push(out);
+        }
+        let first = &outputs[0];
+        for out in &outputs[1..] {
+            assert_eq!(first.compute_s, out.compute_s, "{script_name}");
+            assert_eq!(
+                first.summary.to_string_compact(),
+                out.summary.to_string_compact(),
+                "{script_name}"
+            );
+            assert_eq!(first.master_files, out.master_files, "{script_name}");
+        }
+    }
+}
+
+#[test]
+fn property_oversubscribed_assignments_never_starve_a_shard() {
+    // For any node set and any nproc — including heavy oversubscription
+    // (more processes than total cores) — the pool built from the
+    // schedule's assignment gives every shard its fair round-robin
+    // share of any workload at least as large as the shard count.
+    quickprop::check("no shard starvation under oversubscription", 120, |g| {
+        let nn = g.usize(1..7);
+        let nodes: Vec<NodeSpec> = (0..nn)
+            .map(|i| NodeSpec {
+                name: format!("n{i}"),
+                cores: g.usize(1..9),
+                mem_gb: g.f64(4.0, 64.0),
+                core_speed: g.f64(0.5, 1.2),
+            })
+            .collect();
+        let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
+        // Oversubscribe up to 3x the core count.
+        let nproc = g.usize(1..(3 * total_cores + 2));
+        let placement = *g.pick(&[Placement::ByNode, Placement::BySlot]);
+        let assignment = schedule(nproc, &nodes, placement);
+        assert_eq!(assignment.len(), nproc);
+
+        let rv = ResourceView {
+            nodes,
+            assignment,
+            net: NetworkModel::new(SimParams::default()),
+            resource_name: "prop".into(),
+            real_threads: Some(g.usize(1..9)),
+        };
+        let pool = WorkerPool::from_view(&rv);
+        assert_eq!(pool.shards(), nproc, "one shard per slave process");
+
+        let n_tasks = nproc + g.usize(0..65);
+        let shards = pool.shard_indices(n_tasks);
+        assert_eq!(shards.len(), nproc);
+        let floor = n_tasks / nproc;
+        let mut seen = vec![false; n_tasks];
+        for shard in &shards {
+            assert!(
+                shard.len() >= floor && shard.len() <= floor + 1,
+                "starved/overloaded shard: {} tasks, fair share {floor}",
+                shard.len()
+            );
+            for &t in shard {
+                assert!(!seen[t], "task {t} assigned twice");
+                seen[t] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every task must be assigned");
+    });
+}
