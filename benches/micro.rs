@@ -15,11 +15,13 @@
 
 use p2rac::analytics::catbond::CatBondData;
 use p2rac::analytics::cost::{catopt_generation_s, CatoptCost};
+use p2rac::bench_support::emit_bench_json;
 use p2rac::coordinator::engine::ResourceView;
 use p2rac::coordinator::scheduler::{schedule, NodeSpec, Placement};
 use p2rac::datasync::{sync_dir, Protocol};
 use p2rac::simcloud::{FaultPlan, Link, NetworkModel, SimParams, Vfs};
 use p2rac::util::humanfmt;
+use p2rac::util::json::Json;
 use p2rac::util::prng::Xoshiro256;
 use std::time::Instant;
 
@@ -31,7 +33,7 @@ fn time<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
-fn bench_datasync() {
+fn bench_datasync() -> Json {
     println!("--- datasync: rsync vs SCP (1 MiB project file) ---");
     let net = NetworkModel::new(SimParams::default());
     let mut rng = Xoshiro256::seed_from_u64(1);
@@ -39,6 +41,7 @@ fn bench_datasync() {
     let data: Vec<u8> = (0..1 << 20).map(|_| rng.next_u32() as u8).collect();
     src.write("p/data.bin", data.clone());
 
+    let mut report = Json::obj();
     for proto in [Protocol::Rsync, Protocol::Scp] {
         let mut dst = Vfs::new();
         let mut f = FaultPlan::none();
@@ -59,11 +62,20 @@ fn bench_datasync() {
             humanfmt::duration(wall),
             humanfmt::secs(re.elapsed_s),
         );
+        report.set(
+            &format!("{proto:?}").to_lowercase(),
+            Json::from_pairs(vec![
+                ("first_wire_bytes", Json::num(first.wire_bytes() as f64)),
+                ("resync_wire_bytes", Json::num(re.wire_bytes() as f64)),
+                ("resync_wall_s", Json::num(wall.as_secs_f64())),
+            ]),
+        );
         src.write("p/data.bin", data.clone()); // restore for next proto
     }
+    report
 }
 
-fn bench_scheduler() {
+fn bench_scheduler() -> Json {
     println!("--- scheduler: placement throughput (64 procs, 16 nodes) ---");
     let nodes: Vec<NodeSpec> = (0..16)
         .map(|i| NodeSpec {
@@ -73,27 +85,31 @@ fn bench_scheduler() {
             core_speed: 0.88,
         })
         .collect();
+    let mut report = Json::obj();
     for p in [Placement::ByNode, Placement::BySlot] {
         let t = time(10_000, || {
             let a = schedule(64, &nodes, p);
             std::hint::black_box(a);
         });
         println!("  {:?}: {:.2} µs/placement", p, t * 1e6);
+        report.set(&format!("{p:?}").to_lowercase(), Json::num(t * 1e6));
     }
+    report
 }
 
-fn bench_runtime() {
+fn bench_runtime() -> Json {
     println!("--- runtime: PJRT execute latency (L3 hot path) ---");
+    let skipped = Json::from_pairs(vec![("skipped", Json::Bool(true))]);
     let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("  (skipped: run `make artifacts` first)");
-        return;
+        return skipped;
     }
     let rt = match p2rac::runtime::Runtime::load(dir) {
         Ok(rt) => rt,
         Err(e) => {
             println!("  (skipped: runtime unavailable: {e:#})");
-            return;
+            return skipped;
         }
     };
     use p2rac::runtime::TensorF32;
@@ -144,21 +160,27 @@ fn bench_runtime() {
         t * 1e3,
         flops / t / 1e9
     );
+    Json::from_pairs(vec![
+        ("skipped", Json::Bool(false)),
+        ("catopt_fitness_ms", Json::num(t * 1e3)),
+        ("catopt_fitness_gflops", Json::num(flops / t / 1e9)),
+    ])
 }
 
-fn bench_backend() {
+fn bench_backend() -> Json {
     println!("--- backend: PjrtBackend.eval_population (per GA generation) ---");
+    let skipped = Json::from_pairs(vec![("skipped", Json::Bool(true))]);
     let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("  (skipped: run `make artifacts` first)");
-        return;
+        return skipped;
     }
     use p2rac::analytics::backend::FitnessBackend;
     let rt = match p2rac::runtime::Runtime::load(dir) {
         Ok(rt) => std::sync::Arc::new(rt),
         Err(e) => {
             println!("  (skipped: runtime unavailable: {e:#})");
-            return;
+            return skipped;
         }
     };
     let m = rt.constant("M").unwrap();
@@ -178,9 +200,14 @@ fn bench_backend() {
         t * 1e3,
         200.0 / t
     );
+    Json::from_pairs(vec![
+        ("skipped", Json::Bool(false)),
+        ("generation_ms", Json::num(t * 1e3)),
+        ("candidate_evals_per_s", Json::num(200.0 / t)),
+    ])
 }
 
-fn bench_ga_ops() {
+fn bench_ga_ops() -> Json {
     println!("--- GA: generation throughput (pure-Rust backend) ---");
     let data = CatBondData::generate(3, 64, 256);
     let backend = p2rac::analytics::RustBackend::new(data);
@@ -201,13 +228,19 @@ fn bench_ga_ops() {
         wall,
         r.total_evaluations as f64 / wall
     );
+    Json::from_pairs(vec![
+        ("evaluations", Json::num(r.total_evaluations as f64)),
+        ("wall_s", Json::num(wall)),
+        ("evals_per_s", Json::num(r.total_evaluations as f64 / wall)),
+    ])
 }
 
-fn bench_ga_parallel() {
+fn bench_ga_parallel() -> Json {
     println!("--- GA: worker-pool real speedup vs virtual (catopt workload) ---");
     let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     // One serial baseline, reused for every thread count.
     let base = p2rac::bench_support::speedup_baseline().unwrap();
+    let mut rows = Vec::new();
     for threads in [1usize, 2, 4, 8] {
         if threads > avail && threads != 1 {
             println!("  threads={threads}: skipped (host has {avail} cores)");
@@ -215,6 +248,12 @@ fn bench_ga_parallel() {
         }
         let r = base.measure(threads).unwrap();
         println!("  {}", r.row());
+        rows.push(Json::from_pairs(vec![
+            ("threads", Json::num(r.threads as f64)),
+            ("real_speedup", Json::num(r.real_speedup())),
+            ("virtual_speedup", Json::num(r.virtual_speedup)),
+            ("bit_identical", Json::Bool(r.bit_identical)),
+        ]));
         // Numerics are deterministic — this must hold on any host.
         assert!(r.bit_identical, "threaded GA must match serial bit-for-bit");
         if threads == 4 && avail >= 4 {
@@ -235,13 +274,16 @@ fn bench_ga_parallel() {
             }
         }
     }
+    Json::Arr(rows)
 }
 
-fn bench_virt_ablation() {
+fn bench_virt_ablation() -> Json {
     println!("--- ablation: Fig-4 knee vs virtualisation overhead ---");
     let mk_view = |n: usize, virt: f64| {
-        let mut p = SimParams::default();
-        p.virt_overhead = virt;
+        let p = SimParams {
+            virt_overhead: virt,
+            ..SimParams::default()
+        };
         let nodes: Vec<NodeSpec> = (0..n)
             .map(|i| NodeSpec {
                 name: format!("n{i}"),
@@ -286,16 +328,32 @@ fn bench_virt_ablation() {
         "  → the knee is dominated by serial per-slave dispatch (SNOW master),\n    \
          with the virtualised collective as a second-order term at this payload size."
     );
+    Json::Arr(
+        effs.iter()
+            .map(|(per_msg, virt, eff)| {
+                Json::from_pairs(vec![
+                    ("dispatch_ms", Json::num(per_msg * 1e3)),
+                    ("virt_overhead", Json::num(*virt)),
+                    ("efficiency_16_nodes_pct", Json::num(*eff)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 fn main() {
     println!("=== micro/ablation benches ===\n");
-    bench_datasync();
-    bench_scheduler();
-    bench_runtime();
-    bench_backend();
-    bench_ga_ops();
-    bench_ga_parallel();
-    bench_virt_ablation();
+    let mut report = Json::obj();
+    report.set("datasync", bench_datasync());
+    report.set("scheduler_us", bench_scheduler());
+    report.set("runtime", bench_runtime());
+    report.set("backend", bench_backend());
+    report.set("ga_ops", bench_ga_ops());
+    report.set("ga_parallel", bench_ga_parallel());
+    report.set("virt_ablation", bench_virt_ablation());
+    match emit_bench_json("micro", &report) {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("\ncould not write BENCH_micro.json: {e}"),
+    }
     println!("\nmicro benches complete.");
 }

@@ -1,0 +1,57 @@
+//! Queue-throughput / cost scenario: the same mixed GA/MC workload
+//! pushed through the job queue on three fleets —
+//!
+//! * a static on-demand fleet (the paper's world, made multi-tenant),
+//! * an autoscaled on-demand fleet (elasticity without the market),
+//! * an autoscaled spot fleet with injected interruptions (the full
+//!   stack: queue + autoscaler + spot market + checkpoints).
+//!
+//! Asserts the headline property: every job survives the
+//! interruptions, and the spot fleet bill undercuts the static
+//! on-demand bill. Emits `BENCH_queue.json` at the repository root.
+//!
+//! Run: `cargo bench --bench queue`
+
+use p2rac::bench_support::{emit_bench_json, run_queue_scenario};
+use p2rac::util::json::Json;
+
+fn main() {
+    println!("=== job queue: static on-demand vs autoscaled spot ===\n");
+    let scenarios = [
+        ("static on-demand", false, false, 8, 0usize),
+        ("autoscaled on-demand", false, true, 8, 0),
+        ("autoscaled spot", true, true, 8, 2),
+    ];
+    let mut reports = Vec::new();
+    for (label, spot, autoscale, jobs, interruptions) in scenarios {
+        let r = run_queue_scenario(label, spot, autoscale, jobs, interruptions).unwrap();
+        println!("  {}", r.row());
+        reports.push(r);
+    }
+    let od = &reports[0];
+    let spot = &reports[2];
+    assert_eq!(
+        spot.completed, spot.jobs,
+        "every job must survive the injected spot interruptions"
+    );
+    assert!(spot.interruptions >= 2, "both armed interruptions must land");
+    assert!(
+        spot.total_cost_cents < od.total_cost_cents,
+        "autoscaled spot ({}c) must undercut static on-demand ({}c)",
+        spot.total_cost_cents,
+        od.total_cost_cents
+    );
+    println!(
+        "\n  -> autoscaled spot fleet runs the workload for {:.0}% of the static \
+         on-demand bill, surviving {} interruption(s)",
+        100.0 * spot.total_cost_cents as f64 / od.total_cost_cents.max(1) as f64,
+        spot.interruptions
+    );
+
+    let report = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+    match emit_bench_json("queue", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_queue.json: {e}"),
+    }
+    println!("\nqueue bench complete.");
+}

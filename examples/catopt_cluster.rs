@@ -31,10 +31,12 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(200);
 
-    let mut params = SimParams::default();
     // The bench project is the AOT-scale dataset (m=512, e=2048, ~4.5 MiB);
     // the paper's table is ~300 MB — scale wire time accordingly.
-    params.data_scale = 64.0;
+    let params = SimParams {
+        data_scale: 64.0,
+        ..SimParams::default()
+    };
     let mut s = Session::new(params, make_engine());
 
     p2rac::cli::commands::mkproject(&mut s, "catopt_proj", "catopt", 7)?;

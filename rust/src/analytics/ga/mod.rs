@@ -8,4 +8,6 @@ pub mod optimizer;
 
 pub use bfgs::{minimize, BfgsOptions, BfgsResult};
 pub use operators::Domain;
-pub use optimizer::{run, run_with_pool, GaConfig, GaResult, GenerationStat, OperatorWeights};
+pub use optimizer::{
+    run, run_with_pool, GaConfig, GaResult, GaRunner, GenerationStat, OperatorWeights,
+};

@@ -13,8 +13,9 @@ use super::bfgs::{self, BfgsOptions};
 use super::operators::{self, Domain};
 use crate::analytics::backend::FitnessBackend;
 use crate::analytics::pool::WorkerPool;
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 /// Operator mix (counts are normalised into proportions of the
 /// offspring pool); defaults follow rgenoud's defaults in spirit.
@@ -142,48 +143,113 @@ pub fn run_with_pool(
     cfg: &GaConfig,
     pool: &WorkerPool,
 ) -> Result<GaResult> {
-    let n = backend.dims();
-    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
-    let dom = cfg.domain;
+    let mut runner = GaRunner::new(backend, cfg.clone(), pool)?;
+    while !runner.step(backend, pool)? {}
+    Ok(runner.result())
+}
 
-    // Initial population: feasible-ish around budget/m plus exploration.
-    let mut pop: Vec<Vec<f32>> = (0..cfg.pop_size)
-        .map(|i| {
-            if i == 0 {
-                vec![crate::analytics::catbond::BUDGET / n as f32; n]
-            } else {
-                (0..n)
-                    .map(|_| (rng.next_f32() * 2.0 / n as f32).min(dom.hi))
-                    .collect()
-            }
+/// The optimiser's loop state as an explicit, checkpointable machine:
+/// [`run_with_pool`] is `new` + `step` until done, and the jobs
+/// subsystem drives the same machine one slice at a time, snapshotting
+/// between slices. Because [`GaRunner::snapshot`] captures every
+/// loop-carried value exactly — including the raw RNG state — a runner
+/// restored on replacement capacity continues the identical stream: an
+/// interrupted-and-resumed run is bit-identical to an uninterrupted
+/// one.
+pub struct GaRunner {
+    cfg: GaConfig,
+    rng: Xoshiro256,
+    pop: Vec<Vec<f32>>,
+    fit: Vec<f32>,
+    history: Vec<GenerationStat>,
+    stagnant: usize,
+    best_ever_value: f32,
+    best_ever: Vec<f32>,
+    /// Next generation index to execute.
+    generation: usize,
+    generations_run: usize,
+    total_evaluations: usize,
+    finished: bool,
+}
+
+impl GaRunner {
+    /// Seed the initial population and evaluate it (the one eval that
+    /// happens before the first generation).
+    pub fn new(backend: &dyn FitnessBackend, cfg: GaConfig, pool: &WorkerPool) -> Result<Self> {
+        let n = backend.dims();
+        let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+        let dom = cfg.domain;
+        // Initial population: feasible-ish around budget/m + exploration.
+        let pop: Vec<Vec<f32>> = (0..cfg.pop_size)
+            .map(|i| {
+                if i == 0 {
+                    vec![crate::analytics::catbond::BUDGET / n as f32; n]
+                } else {
+                    (0..n)
+                        .map(|_| (rng.next_f32() * 2.0 / n as f32).min(dom.hi))
+                        .collect()
+                }
+            })
+            .collect();
+        let fit = pool.eval(backend, &pop)?;
+        let total_evaluations = pop.len();
+        let best_ever = pop[0].clone();
+        Ok(Self {
+            cfg,
+            rng,
+            pop,
+            fit,
+            history: Vec::new(),
+            stagnant: 0,
+            best_ever_value: f32::INFINITY,
+            best_ever,
+            generation: 0,
+            generations_run: 0,
+            total_evaluations,
+            finished: false,
         })
-        .collect();
-    let mut fit = pool.eval(backend, &pop)?;
-    let mut total_evals = pop.len();
+    }
 
-    let mut history = Vec::with_capacity(cfg.max_generations);
-    let mut stagnant = 0usize;
-    let mut best_ever_value = f32::INFINITY;
-    let mut best_ever: Vec<f32> = pop[0].clone();
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
 
-    let w = &cfg.operators;
-    let weights = [
-        w.cloning,
-        w.uniform_mutation,
-        w.boundary_mutation,
-        w.nonuniform_mutation,
-        w.polytope_crossover,
-        w.simple_crossover,
-        w.whole_nonuniform_mutation,
-        w.heuristic_crossover,
-        w.local_minimum_crossover,
-    ];
-    let wsum: f32 = weights.iter().sum();
+    /// Generations executed so far.
+    pub fn generations_run(&self) -> usize {
+        self.generations_run
+    }
 
-    let mut generations_run = 0;
-    for generation in 0..cfg.max_generations {
-        generations_run = generation + 1;
+    /// Upper bound on the number of generations (progress denominator).
+    pub fn max_generations(&self) -> usize {
+        self.cfg.max_generations
+    }
+
+    pub fn history(&self) -> &[GenerationStat] {
+        &self.history
+    }
+
+    /// Candidate dimensionality of the (restored) population — callers
+    /// cross-check this against their backend before stepping.
+    pub fn dims(&self) -> usize {
+        self.pop.first().map(Vec::len).unwrap_or(0)
+    }
+
+    /// Execute one generation; returns `true` once the run is complete
+    /// (generation budget exhausted or stagnation stop).
+    pub fn step(&mut self, backend: &dyn FitnessBackend, pool: &WorkerPool) -> Result<bool> {
+        if self.finished || self.generation >= self.cfg.max_generations {
+            self.finished = true;
+            return Ok(true);
+        }
+        let generation = self.generation;
+        self.generation += 1;
+        self.generations_run = generation + 1;
+        let cfg = &self.cfg;
+        let dom = cfg.domain;
         let progress = generation as f32 / cfg.max_generations.max(1) as f32;
+        let rng = &mut self.rng;
+        let pop = &mut self.pop;
+        let fit = &mut self.fit;
 
         // Track incumbent.
         let (bi, bv) = fit
@@ -192,33 +258,47 @@ pub fn run_with_pool(
             .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, &v)| (i, v))
             .unwrap();
-        if bv < best_ever_value - 1e-9 {
-            best_ever_value = bv;
-            best_ever = pop[bi].clone();
-            stagnant = 0;
+        if bv < self.best_ever_value - 1e-9 {
+            self.best_ever_value = bv;
+            self.best_ever = pop[bi].clone();
+            self.stagnant = 0;
         } else {
-            stagnant += 1;
+            self.stagnant += 1;
         }
 
         let mut grad_evals = 0usize;
         // Periodic BFGS polish of the incumbent (rgenoud hybrid).
         let refined: Option<Vec<f32>> =
             if cfg.bfgs_every > 0 && (generation + 1) % cfg.bfgs_every == 0 {
-                let r = bfgs::minimize(backend, &best_ever, &cfg.bfgs)?;
+                let r = bfgs::minimize(backend, &self.best_ever, &cfg.bfgs)?;
                 grad_evals += r.grad_evals;
-                if r.value < best_ever_value {
-                    best_ever_value = r.value;
-                    best_ever = r.x.clone();
-                    stagnant = 0;
+                if r.value < self.best_ever_value {
+                    self.best_ever_value = r.value;
+                    self.best_ever = r.x.clone();
+                    self.stagnant = 0;
                 }
                 Some(r.x)
             } else {
                 None
             };
 
+        let w = &cfg.operators;
+        let weights = [
+            w.cloning,
+            w.uniform_mutation,
+            w.boundary_mutation,
+            w.nonuniform_mutation,
+            w.polytope_crossover,
+            w.simple_crossover,
+            w.whole_nonuniform_mutation,
+            w.heuristic_crossover,
+            w.local_minimum_crossover,
+        ];
+        let wsum: f32 = weights.iter().sum();
+
         // Offspring pool (elitism: slot 0 is the incumbent clone).
         let mut next: Vec<Vec<f32>> = Vec::with_capacity(cfg.pop_size);
-        next.push(best_ever.clone());
+        next.push(self.best_ever.clone());
         while next.len() < cfg.pop_size {
             let pick = rng.next_f32() * wsum;
             let mut acc = 0.0;
@@ -231,57 +311,52 @@ pub fn run_with_pool(
                 }
             }
             match op {
-                0 => next.push(tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone()),
+                0 => next.push(tournament_pick(pop, fit, cfg.tournament, rng).clone()),
                 1 => {
-                    let mut c = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    operators::uniform_mutation(&mut c, dom, &mut rng);
+                    let mut c = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    operators::uniform_mutation(&mut c, dom, rng);
                     next.push(c);
                 }
                 2 => {
-                    let mut c = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    operators::boundary_mutation(&mut c, dom, &mut rng);
+                    let mut c = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    operators::boundary_mutation(&mut c, dom, rng);
                     next.push(c);
                 }
                 3 => {
-                    let mut c = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    operators::nonuniform_mutation(&mut c, dom, progress, &mut rng);
+                    let mut c = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    operators::nonuniform_mutation(&mut c, dom, progress, rng);
                     next.push(c);
                 }
                 4 => {
-                    let p1 = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    let p2 = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    let p3 = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    next.push(operators::polytope_crossover(
-                        &[&p1, &p2, &p3],
-                        &mut rng,
-                    ));
+                    let p1 = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    let p2 = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    let p3 = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    next.push(operators::polytope_crossover(&[&p1, &p2, &p3], rng));
                 }
                 5 => {
-                    let p1 = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    let p2 = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    let (c1, c2) = operators::simple_crossover(&p1, &p2, &mut rng);
+                    let p1 = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    let p2 = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    let (c1, c2) = operators::simple_crossover(&p1, &p2, rng);
                     next.push(c1);
                     if next.len() < cfg.pop_size {
                         next.push(c2);
                     }
                 }
                 6 => {
-                    let mut c = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    operators::whole_nonuniform_mutation(&mut c, dom, progress, &mut rng);
+                    let mut c = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    operators::whole_nonuniform_mutation(&mut c, dom, progress, rng);
                     next.push(c);
                 }
                 7 => {
                     let i1 = rng.below_usize(pop.len());
                     let i2 = rng.below_usize(pop.len());
                     let (b, wse) = if fit[i1] <= fit[i2] { (i1, i2) } else { (i2, i1) };
-                    next.push(operators::heuristic_crossover(
-                        &pop[b], &pop[wse], dom, &mut rng,
-                    ));
+                    next.push(operators::heuristic_crossover(&pop[b], &pop[wse], dom, rng));
                 }
                 _ => {
-                    let base = tournament_pick(&pop, &fit, cfg.tournament, &mut rng).clone();
-                    let target = refined.as_ref().unwrap_or(&best_ever);
-                    next.push(operators::local_minimum_crossover(&base, target, &mut rng));
+                    let base = tournament_pick(pop, fit, cfg.tournament, rng).clone();
+                    let target = refined.as_ref().unwrap_or(&self.best_ever);
+                    next.push(operators::local_minimum_crossover(&base, target, rng));
                 }
             }
         }
@@ -289,44 +364,205 @@ pub fn run_with_pool(
         // Fan-out: evaluate the whole offspring pool (the distributed
         // step — the coordinator bills scatter/gather per generation,
         // and the pool shards it over real threads).
-        pop = next;
-        fit = pool.eval(backend, &pop)?;
-        total_evals += pop.len();
+        *pop = next;
+        *fit = pool.eval(backend, pop)?;
+        self.total_evaluations += pop.len();
 
         let mean = fit.iter().sum::<f32>() / fit.len() as f32;
         let gen_best = fit.iter().cloned().fold(f32::INFINITY, f32::min);
-        history.push(GenerationStat {
+        self.history.push(GenerationStat {
             generation,
-            best_value: gen_best.min(best_ever_value),
+            best_value: gen_best.min(self.best_ever_value),
             mean_value: mean,
             evaluations: pop.len(),
             grad_evaluations: grad_evals,
         });
 
-        if stagnant >= cfg.wait_generations {
-            break;
+        if self.stagnant >= self.cfg.wait_generations
+            || self.generation >= self.cfg.max_generations
+        {
+            self.finished = true;
+        }
+        Ok(self.finished)
+    }
+
+    /// Finalise into a [`GaResult`] (final incumbent check against the
+    /// last evaluated population — identical to the one-shot path).
+    pub fn result(&self) -> GaResult {
+        let mut best_ever_value = self.best_ever_value;
+        let mut best_ever = self.best_ever.clone();
+        let (bi, bv) = self
+            .fit
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, &v)| (i, v))
+            .unwrap();
+        if bv < best_ever_value {
+            best_ever_value = bv;
+            best_ever = self.pop[bi].clone();
+        }
+        GaResult {
+            best: best_ever,
+            best_value: best_ever_value,
+            history: self.history.clone(),
+            generations_run: self.generations_run,
+            total_evaluations: self.total_evaluations,
         }
     }
 
-    // Final incumbent check.
-    let (bi, bv) = fit
-        .iter()
-        .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, &v)| (i, v))
-        .unwrap();
-    if bv < best_ever_value {
-        best_ever_value = bv;
-        best_ever = pop[bi].clone();
+    // ------------------------------------------------- checkpointing
+
+    /// Serialize every loop-carried value exactly. RNG words are hex
+    /// strings (JSON numbers are f64 and would corrupt high bits);
+    /// f32 values pass through f64 losslessly.
+    pub fn snapshot(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "rng",
+            Json::Arr(
+                self.rng
+                    .state()
+                    .iter()
+                    .map(|w| Json::str(format!("{w:016x}")))
+                    .collect(),
+            ),
+        );
+        j.set("pop", Json::Arr(self.pop.iter().map(|c| f32s_to_json(c)).collect()));
+        j.set("fit", f32s_to_json(&self.fit));
+        j.set(
+            "history",
+            Json::Arr(
+                self.history
+                    .iter()
+                    .map(|h| {
+                        Json::from_pairs(vec![
+                            ("generation", Json::num(h.generation as f64)),
+                            ("best_value", Json::num(h.best_value as f64)),
+                            ("mean_value", Json::num(h.mean_value as f64)),
+                            ("evaluations", Json::num(h.evaluations as f64)),
+                            ("grad_evaluations", Json::num(h.grad_evaluations as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        j.set("stagnant", Json::num(self.stagnant as f64));
+        j.set(
+            "best_ever_value",
+            if self.best_ever_value.is_finite() {
+                Json::num(self.best_ever_value as f64)
+            } else {
+                Json::Null
+            },
+        );
+        j.set("best_ever", f32s_to_json(&self.best_ever));
+        j.set("generation", Json::num(self.generation as f64));
+        j.set("generations_run", Json::num(self.generations_run as f64));
+        j.set("total_evaluations", Json::num(self.total_evaluations as f64));
+        j.set("finished", Json::Bool(self.finished));
+        j
     }
 
-    Ok(GaResult {
-        best: best_ever,
-        best_value: best_ever_value,
-        history,
-        generations_run,
-        total_evaluations: total_evals,
-    })
+    /// Rebuild a runner from a snapshot. The config is re-derived from
+    /// the job's script by the caller (it is deterministic), so the
+    /// checkpoint only carries state.
+    pub fn restore(cfg: GaConfig, j: &Json) -> Result<Self> {
+        let rng_words = j
+            .get("rng")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint missing rng state"))?;
+        if rng_words.len() != 4 {
+            anyhow::bail!("checkpoint rng state must have 4 words");
+        }
+        let mut state = [0u64; 4];
+        for (i, w) in rng_words.iter().enumerate() {
+            let s = w.as_str().ok_or_else(|| anyhow!("rng word not a string"))?;
+            state[i] = u64::from_str_radix(s, 16)
+                .map_err(|e| anyhow!("bad rng word '{s}': {e}"))?;
+        }
+        let pop = j
+            .get("pop")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint missing population"))?
+            .iter()
+            .map(json_to_f32s)
+            .collect::<Result<Vec<_>>>()?;
+        let fit = json_to_f32s(
+            j.get("fit").ok_or_else(|| anyhow!("checkpoint missing fitness"))?,
+        )?;
+        // Structural validation: a truncated or hand-edited checkpoint
+        // must surface as an error here, not as a panic mid-step.
+        if pop.is_empty() {
+            anyhow::bail!("checkpoint population is empty");
+        }
+        if fit.len() != pop.len() {
+            anyhow::bail!(
+                "checkpoint fitness/population mismatch ({} vs {})",
+                fit.len(),
+                pop.len()
+            );
+        }
+        let dims = pop[0].len();
+        if dims == 0 || pop.iter().any(|c| c.len() != dims) {
+            anyhow::bail!("checkpoint population has inconsistent dimensions");
+        }
+        let mut history = Vec::new();
+        if let Some(hs) = j.get("history").and_then(Json::as_arr) {
+            for h in hs {
+                history.push(GenerationStat {
+                    generation: h.req_u64("generation")? as usize,
+                    best_value: h.req_f64("best_value")? as f32,
+                    mean_value: h.req_f64("mean_value")? as f32,
+                    evaluations: h.req_u64("evaluations")? as usize,
+                    grad_evaluations: h.req_u64("grad_evaluations")? as usize,
+                });
+            }
+        }
+        let best_ever_value = match j.get("best_ever_value") {
+            Some(Json::Null) | None => f32::INFINITY,
+            Some(v) => v.as_f64().ok_or_else(|| anyhow!("bad best_ever_value"))? as f32,
+        };
+        let best_ever = json_to_f32s(
+            j.get("best_ever").ok_or_else(|| anyhow!("checkpoint missing best"))?,
+        )?;
+        if best_ever.len() != dims {
+            anyhow::bail!(
+                "checkpoint incumbent has {} dims, population has {dims}",
+                best_ever.len()
+            );
+        }
+        Ok(Self {
+            cfg,
+            rng: Xoshiro256::from_state(state),
+            pop,
+            fit,
+            history,
+            stagnant: j.req_u64("stagnant")? as usize,
+            best_ever_value,
+            best_ever,
+            generation: j.req_u64("generation")? as usize,
+            generations_run: j.req_u64("generations_run")? as usize,
+            total_evaluations: j.req_u64("total_evaluations")? as usize,
+            finished: j.opt_bool("finished", false),
+        })
+    }
+}
+
+fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn json_to_f32s(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected an array of numbers"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("expected a number"))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -408,6 +644,78 @@ mod tests {
                 assert_eq!(a.mean_value, z.mean_value);
             }
         }
+    }
+
+    #[test]
+    fn stepwise_runner_matches_one_shot() {
+        let data = CatBondData::generate(31, 16, 48);
+        let b = RustBackend::new(data);
+        let one_shot = run(&b, &small_cfg()).unwrap();
+        let pool = WorkerPool::serial();
+        let mut r = GaRunner::new(&b, small_cfg(), &pool).unwrap();
+        while !r.step(&b, &pool).unwrap() {}
+        let stepped = r.result();
+        assert_eq!(one_shot.best, stepped.best);
+        assert_eq!(one_shot.best_value, stepped.best_value);
+        assert_eq!(one_shot.generations_run, stepped.generations_run);
+        assert_eq!(one_shot.total_evaluations, stepped.total_evaluations);
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_identical() {
+        // Interrupt after k generations, serialize through JSON text
+        // (the same path a job checkpoint takes), resume, and compare
+        // against the uninterrupted run — bit for bit.
+        let data = CatBondData::generate(37, 16, 48);
+        let b = RustBackend::new(data);
+        let reference = run(&b, &small_cfg()).unwrap();
+        let pool = WorkerPool::serial();
+        for cut in [0usize, 1, 3, 7] {
+            let mut r = GaRunner::new(&b, small_cfg(), &pool).unwrap();
+            let mut done = false;
+            for _ in 0..cut {
+                if r.step(&b, &pool).unwrap() {
+                    done = true;
+                    break;
+                }
+            }
+            let wire = r.snapshot().to_string_compact();
+            let parsed = Json::parse(&wire).unwrap();
+            let mut resumed = GaRunner::restore(small_cfg(), &parsed).unwrap();
+            if !done {
+                while !resumed.step(&b, &pool).unwrap() {}
+            }
+            let out = resumed.result();
+            assert_eq!(reference.best, out.best, "cut at {cut}");
+            assert_eq!(reference.best_value, out.best_value, "cut at {cut}");
+            assert_eq!(reference.generations_run, out.generations_run);
+            for (a, z) in reference.history.iter().zip(&out.history) {
+                assert_eq!(a.best_value, z.best_value);
+                assert_eq!(a.mean_value, z.mean_value);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_an_error_not_a_panic() {
+        // Truncated population: restore must fail cleanly, never panic
+        // later in step()/result().
+        let j = Json::parse(
+            r#"{"rng":["0","1","2","3"],"pop":[],"fit":[],"stagnant":0,
+                "best_ever":[],"best_ever_value":null,"generation":0,
+                "generations_run":0,"total_evaluations":0,"finished":false}"#,
+        )
+        .unwrap();
+        assert!(GaRunner::restore(GaConfig::default(), &j).is_err());
+        // Fitness/population length mismatch.
+        let j = Json::parse(
+            r#"{"rng":["0","1","2","3"],"pop":[[0.5,0.5]],"fit":[1.0,2.0],
+                "stagnant":0,"best_ever":[0.5,0.5],"best_ever_value":null,
+                "generation":0,"generations_run":0,"total_evaluations":0,
+                "finished":false}"#,
+        )
+        .unwrap();
+        assert!(GaRunner::restore(GaConfig::default(), &j).is_err());
     }
 
     #[test]

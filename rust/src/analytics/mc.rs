@@ -137,30 +137,18 @@ struct Batch {
     rng: Xoshiro256,
 }
 
-/// Run a full sweep on the calling thread (serial reference path).
-pub fn run_sweep(
-    backend: &dyn SweepBackend,
-    cfg: &SweepConfig,
-    s: usize,
-    k: usize,
+/// The full sweep pre-planned into independent batches. Because every
+/// batch's PRNG stream is forked up front (in batch order, before any
+/// evaluation), any contiguous range of batches can be evaluated at
+/// any time — on any capacity — and produce the same numbers: this is
+/// what makes a sweep job checkpointable at batch granularity.
+pub struct SweepPlan {
+    batches: Vec<Batch>,
     j_tile: usize,
-) -> Result<Vec<JobResult>> {
-    run_sweep_with_pool(backend, cfg, s, k, j_tile, &WorkerPool::serial())
 }
 
-/// Run a full sweep with batches fanned out across a [`WorkerPool`]:
-/// generates the parameter grid, forks one PRNG stream per batch (in
-/// batch order, on the calling thread — this is what keeps the result
-/// bit-identical to the serial path), evaluates batches `j_tile` jobs
-/// at a time, and returns one result per job in job order.
-pub fn run_sweep_with_pool(
-    backend: &dyn SweepBackend,
-    cfg: &SweepConfig,
-    s: usize,
-    k: usize,
-    j_tile: usize,
-    pool: &WorkerPool,
-) -> Result<Vec<JobResult>> {
+/// Plan a sweep: parameter grid + per-batch forked streams.
+pub fn plan_sweep(cfg: &SweepConfig, j_tile: usize) -> SweepPlan {
     let mut master = Xoshiro256::seed_from_u64(cfg.seed);
     // Parameter grid: jobs vary attachment fastest, limit slowest.
     let params: Vec<(f32, f32)> = (0..cfg.n_jobs)
@@ -185,37 +173,97 @@ pub fn run_sweep_with_pool(
             rng: master.fork(bi as u64),
         })
         .collect();
+    SweepPlan { batches, j_tile }
+}
 
-    let per_batch = pool.map(&batches, |_, batch| {
-        // Fresh draws per batch (common random numbers within a batch).
-        let mut rng = batch.rng.clone();
-        let u: Vec<f32> = (0..s * k).map(|_| rng.next_f32() * 0.999).collect();
-        let mut p = Vec::with_capacity(j_tile * 2);
-        for &(a, l) in &batch.jobs {
-            p.push(a);
-            p.push(l);
-        }
-        // Pad the tile.
-        for _ in batch.jobs.len()..j_tile {
-            p.push(batch.jobs[0].0);
-            p.push(batch.jobs[0].1);
-        }
-        let out = backend.run_batch(&u, &p, s, k, j_tile)?;
-        let results: Vec<JobResult> = batch
-            .jobs
+impl SweepPlan {
+    /// Number of batches in the plan.
+    pub fn len(&self) -> usize {
+        self.batches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.batches.is_empty()
+    }
+
+    /// Jobs in batches `[from, to)`.
+    pub fn jobs_in_range(&self, from: usize, to: usize) -> usize {
+        self.batches[from.min(self.batches.len())..to.min(self.batches.len())]
             .iter()
-            .enumerate()
-            .map(|(i, &(att, limit))| JobResult {
-                att,
-                limit,
-                mean_recovery: out[i * 2],
-                std_recovery: out[i * 2 + 1],
-            })
-            .collect();
-        Ok(results)
-    })?;
+            .map(|b| b.jobs.len())
+            .sum()
+    }
 
-    Ok(per_batch.into_iter().flatten().collect())
+    /// Evaluate batches `[from, to)` across the pool, returning one
+    /// result per job in job order. Identical numbers whatever the
+    /// range partition or thread count.
+    pub fn run_range(
+        &self,
+        backend: &dyn SweepBackend,
+        s: usize,
+        k: usize,
+        from: usize,
+        to: usize,
+        pool: &WorkerPool,
+    ) -> Result<Vec<JobResult>> {
+        let j_tile = self.j_tile;
+        let slice = &self.batches[from.min(self.batches.len())..to.min(self.batches.len())];
+        let per_batch = pool.map(slice, |_, batch| {
+            // Fresh draws per batch (common random numbers within a batch).
+            let mut rng = batch.rng.clone();
+            let u: Vec<f32> = (0..s * k).map(|_| rng.next_f32() * 0.999).collect();
+            let mut p = Vec::with_capacity(j_tile * 2);
+            for &(a, l) in &batch.jobs {
+                p.push(a);
+                p.push(l);
+            }
+            // Pad the tile.
+            for _ in batch.jobs.len()..j_tile {
+                p.push(batch.jobs[0].0);
+                p.push(batch.jobs[0].1);
+            }
+            let out = backend.run_batch(&u, &p, s, k, j_tile)?;
+            let results: Vec<JobResult> = batch
+                .jobs
+                .iter()
+                .enumerate()
+                .map(|(i, &(att, limit))| JobResult {
+                    att,
+                    limit,
+                    mean_recovery: out[i * 2],
+                    std_recovery: out[i * 2 + 1],
+                })
+                .collect();
+            Ok(results)
+        })?;
+        Ok(per_batch.into_iter().flatten().collect())
+    }
+}
+
+/// Run a full sweep on the calling thread (serial reference path).
+pub fn run_sweep(
+    backend: &dyn SweepBackend,
+    cfg: &SweepConfig,
+    s: usize,
+    k: usize,
+    j_tile: usize,
+) -> Result<Vec<JobResult>> {
+    run_sweep_with_pool(backend, cfg, s, k, j_tile, &WorkerPool::serial())
+}
+
+/// Run a full sweep with batches fanned out across a [`WorkerPool`]:
+/// plan the batches, evaluate them all. One result per job, job order.
+pub fn run_sweep_with_pool(
+    backend: &dyn SweepBackend,
+    cfg: &SweepConfig,
+    s: usize,
+    k: usize,
+    j_tile: usize,
+    pool: &WorkerPool,
+) -> Result<Vec<JobResult>> {
+    let plan = plan_sweep(cfg, j_tile);
+    let n = plan.len();
+    plan.run_range(backend, s, k, 0, n, pool)
 }
 
 #[cfg(test)]
@@ -269,6 +317,26 @@ mod tests {
                 run_sweep_with_pool(&RustSweep, &cfg, 128, 8, 8, &pool).unwrap();
             assert_eq!(serial, pooled, "pool {pool:?} must not change numerics");
         }
+    }
+
+    #[test]
+    fn range_partition_is_bit_identical_to_full_run() {
+        // A sweep interrupted between any two batches and resumed on
+        // other capacity concatenates the same results.
+        let cfg = SweepConfig {
+            n_jobs: 40,
+            seed: 33,
+            ..Default::default()
+        };
+        let full = run_sweep(&RustSweep, &cfg, 128, 8, 8).unwrap();
+        let plan = plan_sweep(&cfg, 8);
+        let pool = WorkerPool::new(3, 5);
+        for cut in 0..=plan.len() {
+            let mut parts = plan.run_range(&RustSweep, 128, 8, 0, cut, &pool).unwrap();
+            parts.extend(plan.run_range(&RustSweep, 128, 8, cut, plan.len(), &pool).unwrap());
+            assert_eq!(full, parts, "cut between batches {cut}");
+        }
+        assert_eq!(plan.jobs_in_range(0, plan.len()), 40);
     }
 
     #[test]

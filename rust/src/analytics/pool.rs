@@ -104,7 +104,7 @@ impl WorkerPool {
             return backend.eval_population(pop);
         }
         let batch = backend.preferred_batch().max(1);
-        let max_useful = (pop.len() + batch - 1) / batch;
+        let max_useful = pop.len().div_ceil(batch);
         let shard_count = self.shards.min(max_useful).max(1);
         if shard_count <= 1 {
             return backend.eval_population(pop);

@@ -25,6 +25,115 @@ use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::sync::Arc;
 
+/// Sweep dimensions for the pure-Rust oracle backend. The jobs
+/// subsystem uses the same constants, so a queued sweep and
+/// `ec2runoncluster -rscript sweep.json` agree on the same seed.
+pub const RUST_SWEEP_S: usize = 1024;
+pub const RUST_SWEEP_K: usize = 8;
+pub const RUST_SWEEP_TILE: usize = 64;
+
+/// GA config from a catopt script descriptor — the single source of
+/// the defaults, shared by the engine and the jobs subsystem.
+pub fn ga_config_from(script: &Json) -> GaConfig {
+    GaConfig {
+        pop_size: script.get("pop_size").and_then(Json::as_usize).unwrap_or(200),
+        max_generations: script
+            .get("max_generations")
+            .and_then(Json::as_usize)
+            .unwrap_or(50),
+        wait_generations: script
+            .get("wait_generations")
+            .and_then(Json::as_usize)
+            .unwrap_or(50),
+        bfgs_every: script.get("bfgs_every").and_then(Json::as_usize).unwrap_or(25),
+        seed: script.get("seed").and_then(Json::as_u64).unwrap_or(42),
+        ..GaConfig::default()
+    }
+}
+
+/// Sweep config from an mc_sweep script descriptor (shared defaults).
+pub fn sweep_config_from(script: &Json) -> SweepConfig {
+    SweepConfig {
+        n_jobs: script.get("n_jobs").and_then(Json::as_usize).unwrap_or(512),
+        att_range: (
+            script.get("att_min").and_then(Json::as_f64).unwrap_or(0.5) as f32,
+            script.get("att_max").and_then(Json::as_f64).unwrap_or(8.0) as f32,
+        ),
+        lim_range: (
+            script.get("lim_min").and_then(Json::as_f64).unwrap_or(1.0) as f32,
+            script.get("lim_max").and_then(Json::as_f64).unwrap_or(12.0) as f32,
+        ),
+        seed: script.get("seed").and_then(Json::as_u64).unwrap_or(2012),
+    }
+}
+
+/// Scenario-1 result files for a finished CATopt run (solution.json,
+/// convergence.csv, weights.bin) plus the run summary.
+pub fn catopt_result_files(
+    result: &crate::analytics::ga::GaResult,
+    compute_s: f64,
+) -> (Vec<(String, Vec<u8>)>, Json) {
+    let mut conv = String::from("generation,best_value,mean_value,evaluations\n");
+    for h in &result.history {
+        conv.push_str(&format!(
+            "{},{},{},{}\n",
+            h.generation, h.best_value, h.mean_value, h.evaluations
+        ));
+    }
+    let weights_bin: Vec<u8> = result.best.iter().flat_map(|x| x.to_le_bytes()).collect();
+    let solution = Json::from_pairs(vec![
+        ("best_value", Json::num(result.best_value as f64)),
+        ("generations", Json::num(result.generations_run as f64)),
+        ("total_evaluations", Json::num(result.total_evaluations as f64)),
+        ("weight_sum", Json::num(result.best.iter().sum::<f32>() as f64)),
+        ("compute_s", Json::num(compute_s)),
+    ]);
+    let summary = solution.clone();
+    (
+        vec![
+            ("solution.json".into(), solution.to_string_pretty().into_bytes()),
+            ("convergence.csv".into(), conv.into_bytes()),
+            ("weights.bin".into(), weights_bin),
+        ],
+        summary,
+    )
+}
+
+/// The aggregated sweep CSV (scenario 1, master-side).
+pub fn sweep_csv(results: &[mc::JobResult]) -> String {
+    let mut csv = String::from("att,limit,mean_recovery,std_recovery\n");
+    for r in results {
+        csv.push_str(&format!(
+            "{},{},{},{}\n",
+            r.att, r.limit, r.mean_recovery, r.std_recovery
+        ));
+    }
+    csv
+}
+
+/// Sweep run summary (best job + dimensions + billed compute time).
+pub fn sweep_summary(
+    cfg: &SweepConfig,
+    results: &[mc::JobResult],
+    s: usize,
+    k: usize,
+    compute_s: f64,
+) -> Result<Json> {
+    let best = results
+        .iter()
+        .max_by(|a, b| a.mean_recovery.partial_cmp(&b.mean_recovery).unwrap())
+        .ok_or_else(|| anyhow!("empty sweep"))?;
+    Ok(Json::from_pairs(vec![
+        ("n_jobs", Json::num(cfg.n_jobs as f64)),
+        ("samples_per_job", Json::num(s as f64)),
+        ("events_per_year", Json::num(k as f64)),
+        ("best_mean_recovery", Json::num(best.mean_recovery as f64)),
+        ("best_att", Json::num(best.att as f64)),
+        ("best_limit", Json::num(best.limit as f64)),
+        ("compute_s", Json::num(compute_s)),
+    ]))
+}
+
 /// The engine behind `ec2runoninstance` / `ec2runoncluster`.
 ///
 /// Work is fanned out over a [`WorkerPool`] built from the resource
@@ -69,20 +178,7 @@ impl P2racEngine {
             project.read(&format!("{project_dir}/{name}")).map(<[u8]>::to_vec)
         })?;
 
-        let cfg = GaConfig {
-            pop_size: script.get("pop_size").and_then(Json::as_usize).unwrap_or(200),
-            max_generations: script
-                .get("max_generations")
-                .and_then(Json::as_usize)
-                .unwrap_or(50),
-            wait_generations: script
-                .get("wait_generations")
-                .and_then(Json::as_usize)
-                .unwrap_or(50),
-            bfgs_every: script.get("bfgs_every").and_then(Json::as_usize).unwrap_or(25),
-            seed: script.get("seed").and_then(Json::as_u64).unwrap_or(42),
-            ..GaConfig::default()
-        };
+        let cfg = ga_config_from(script);
         if let Some(c) = script.get("candidate_cost_s").and_then(Json::as_f64) {
             self.catopt_cost.candidate_cost_s = c;
         }
@@ -108,28 +204,9 @@ impl P2racEngine {
         }
 
         // Result files (paper scenario 1: aggregated on the master).
-        let mut conv = String::from("generation,best_value,mean_value,evaluations\n");
-        for h in &result.history {
-            conv.push_str(&format!(
-                "{},{},{},{}\n",
-                h.generation, h.best_value, h.mean_value, h.evaluations
-            ));
-        }
-        let weights_bin: Vec<u8> = result.best.iter().flat_map(|x| x.to_le_bytes()).collect();
-        let solution = Json::from_pairs(vec![
-            ("best_value", Json::num(result.best_value as f64)),
-            ("generations", Json::num(result.generations_run as f64)),
-            ("total_evaluations", Json::num(result.total_evaluations as f64)),
-            ("weight_sum", Json::num(result.best.iter().sum::<f32>() as f64)),
-            ("compute_s", Json::num(compute_s)),
-        ]);
-        let summary = solution.clone();
+        let (master_files, summary) = catopt_result_files(&result, compute_s);
         Ok(TaskOutput {
-            master_files: vec![
-                ("solution.json".into(), solution.to_string_pretty().into_bytes()),
-                ("convergence.csv".into(), conv.into_bytes()),
-                ("weights.bin".into(), weights_bin),
-            ],
+            master_files,
             worker_files: vec![],
             compute_s,
             summary,
@@ -141,18 +218,7 @@ impl P2racEngine {
         script: &Json,
         view: &ResourceView,
     ) -> Result<TaskOutput> {
-        let cfg = SweepConfig {
-            n_jobs: script.get("n_jobs").and_then(Json::as_usize).unwrap_or(512),
-            att_range: (
-                script.get("att_min").and_then(Json::as_f64).unwrap_or(0.5) as f32,
-                script.get("att_max").and_then(Json::as_f64).unwrap_or(8.0) as f32,
-            ),
-            lim_range: (
-                script.get("lim_min").and_then(Json::as_f64).unwrap_or(1.0) as f32,
-                script.get("lim_max").and_then(Json::as_f64).unwrap_or(12.0) as f32,
-            ),
-            seed: script.get("seed").and_then(Json::as_u64).unwrap_or(2012),
-        };
+        let cfg = sweep_config_from(script);
         if let Some(c) = script.get("job_cost_s").and_then(Json::as_f64) {
             self.sweep_cost.job_cost_s = c;
         }
@@ -168,9 +234,16 @@ impl P2racEngine {
                 (mc::run_sweep_with_pool(&b, &cfg, s, k, j, &pool)?, s, k)
             }
             _ => (
-                mc::run_sweep_with_pool(&RustSweep, &cfg, 1024, 8, 64, &pool)?,
-                1024,
-                8,
+                mc::run_sweep_with_pool(
+                    &RustSweep,
+                    &cfg,
+                    RUST_SWEEP_S,
+                    RUST_SWEEP_K,
+                    RUST_SWEEP_TILE,
+                    &pool,
+                )?,
+                RUST_SWEEP_S,
+                RUST_SWEEP_K,
             ),
         };
 
@@ -181,13 +254,7 @@ impl P2racEngine {
         // the "master" (the instance itself).
         let n_workers = view.nodes.len().saturating_sub(1);
         let mut worker_files = Vec::new();
-        let mut master_csv = String::from("att,limit,mean_recovery,std_recovery\n");
-        for r in &results {
-            master_csv.push_str(&format!(
-                "{},{},{},{}\n",
-                r.att, r.limit, r.mean_recovery, r.std_recovery
-            ));
-        }
+        let master_csv = sweep_csv(&results);
         if n_workers > 0 {
             for w in 0..n_workers {
                 let mut part = String::from("att,limit,mean_recovery,std_recovery\n");
@@ -201,19 +268,7 @@ impl P2racEngine {
             }
         }
 
-        let best = results
-            .iter()
-            .max_by(|a, b| a.mean_recovery.partial_cmp(&b.mean_recovery).unwrap())
-            .ok_or_else(|| anyhow!("empty sweep"))?;
-        let summary = Json::from_pairs(vec![
-            ("n_jobs", Json::num(cfg.n_jobs as f64)),
-            ("samples_per_job", Json::num(s as f64)),
-            ("events_per_year", Json::num(k as f64)),
-            ("best_mean_recovery", Json::num(best.mean_recovery as f64)),
-            ("best_att", Json::num(best.att as f64)),
-            ("best_limit", Json::num(best.limit as f64)),
-            ("compute_s", Json::num(compute_s)),
-        ]);
+        let summary = sweep_summary(&cfg, &results, s, k, compute_s)?;
         Ok(TaskOutput {
             master_files: vec![
                 ("sweep.csv".into(), master_csv.into_bytes()),

@@ -14,7 +14,9 @@ use crate::coordinator::{
     table1_desktops, CreateClusterOpts, CreateInstanceOpts, DesktopSpec, NodeSpec, Placement,
     ResourceView, ResultScope, Session,
 };
+use crate::jobs::{AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority, ScalePolicy};
 use crate::simcloud::{NetworkModel, SimParams, SpanCategory};
+use crate::util::json::Json;
 use anyhow::Result;
 
 /// One Table-I resource.
@@ -74,8 +76,10 @@ impl Workload {
 /// A fresh session with the pure-Rust engine (fast, deterministic) and
 /// the given paper-data scale factor for wire-time modelling.
 pub fn bench_session(data_scale: f64) -> Session {
-    let mut params = SimParams::default();
-    params.data_scale = data_scale;
+    let params = SimParams {
+        data_scale,
+        ..SimParams::default()
+    };
     Session::new(params, Box::new(P2racEngine::rust_only()))
 }
 
@@ -352,6 +356,137 @@ pub fn measure_real_speedup(threads: usize) -> Result<SpeedupReport> {
     speedup_baseline()?.measure(threads)
 }
 
+// ================================================== queue/cost scenario
+
+/// Outcome of one queue-throughput/cost scenario run.
+#[derive(Clone, Debug)]
+pub struct QueueScenarioReport {
+    pub label: String,
+    pub jobs: usize,
+    pub completed: usize,
+    /// Virtual time from first submission to queue drained + fleet
+    /// released.
+    pub makespan_s: f64,
+    pub total_cost_cents: u64,
+    pub interruptions: usize,
+    pub scale_events: usize,
+}
+
+impl QueueScenarioReport {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<22} jobs {:>2}/{:<2}  makespan {:>9.0}s  cost {:>7}c  interruptions {}  scale events {}",
+            self.label,
+            self.completed,
+            self.jobs,
+            self.makespan_s,
+            self.total_cost_cents,
+            self.interruptions,
+            self.scale_events
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("label", Json::str(&self.label)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("total_cost_cents", Json::num(self.total_cost_cents as f64)),
+            ("interruptions", Json::num(self.interruptions as f64)),
+            ("scale_events", Json::num(self.scale_events as f64)),
+        ])
+    }
+}
+
+/// Run a mixed GA/MC workload through the job queue on a fleet:
+/// static on-demand (`autoscale = false`: a fixed two-cluster fleet)
+/// vs autoscaled spot (`spot = true, autoscale = true`), optionally
+/// with `armed_interruptions` spot reclaims injected via `FaultPlan`.
+pub fn run_queue_scenario(
+    label: &str,
+    spot: bool,
+    autoscale: bool,
+    n_jobs: usize,
+    armed_interruptions: usize,
+) -> Result<QueueScenarioReport> {
+    let mut s = bench_session(1.0);
+    // Pin a spike-free price path: interruptions are injected
+    // explicitly through `FaultPlan`, so the cost comparison across
+    // PRs measures scheduling and billing, not price-path luck.
+    s.cloud.spot.spike_prob = 0.0;
+    // Two small projects: a CATopt optimisation and an MC sweep.
+    let data = CatBondData::generate(7, 24, 96);
+    for (name, bytes) in data.to_files() {
+        s.analyst.write(&format!("qcat/{name}"), bytes);
+    }
+    s.analyst.write(
+        "qcat/catopt.json",
+        br#"{"type":"catopt","pop_size":12,"max_generations":4,"seed":42,"bfgs_every":0}"#
+            .to_vec(),
+    );
+    s.analyst.write(
+        "qsweep/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":64,"seed":2012}"#.to_vec(),
+    );
+
+    let cfg = AutoscalerConfig {
+        min_clusters: if autoscale { 1 } else { 2 },
+        max_clusters: if autoscale { 3 } else { 2 },
+        nodes_per_cluster: 2,
+        spot,
+        policy: ScalePolicy::QueueDepth,
+        ..Default::default()
+    };
+    let mut js = JobScheduler::new(cfg);
+    s.cloud.faults.spot_interruptions = armed_interruptions;
+    let t0 = s.cloud.clock.now_s();
+    let prios = [Priority::Low, Priority::Normal, Priority::High];
+    for i in 0..n_jobs {
+        let (dir, script) = if i % 2 == 0 {
+            ("qsweep", "sweep.json")
+        } else {
+            ("qcat", "catopt.json")
+        };
+        js.submit(
+            &s,
+            JobSpec {
+                name: format!("run{i}"),
+                projectdir: dir.into(),
+                rscript: script.into(),
+                priority: prios[i % prios.len()],
+                placement: Placement::ByNode,
+            },
+        );
+    }
+    js.run_until_idle(&mut s)?;
+    js.shutdown_fleet(&mut s)?;
+    Ok(QueueScenarioReport {
+        label: label.to_string(),
+        jobs: n_jobs,
+        completed: js
+            .queue
+            .jobs()
+            .filter(|j| j.state == JobState::Completed)
+            .count(),
+        makespan_s: s.cloud.clock.now_s() - t0,
+        total_cost_cents: s.cloud.ledger.total_cents(),
+        interruptions: js.interruptions_delivered,
+        scale_events: js.autoscaler.events.len(),
+    })
+}
+
+/// Write `BENCH_<name>.json` at the repository root so the perf
+/// trajectory is tracked across PRs (machine-readable counterpart of
+/// the bench stdout).
+pub fn emit_bench_json(name: &str, report: &Json) -> std::io::Result<std::path::PathBuf> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, report.to_string_pretty())?;
+    Ok(path)
+}
+
 /// Pretty row printer shared by the bench binaries.
 pub fn print_row(cols: &[String], widths: &[usize]) {
     let line: Vec<String> = cols
@@ -406,6 +541,22 @@ mod tests {
             "virtual speedup {} out of model range",
             r.virtual_speedup
         );
+    }
+
+    #[test]
+    fn queue_scenario_autoscaled_spot_undercuts_static_on_demand() {
+        let od = run_queue_scenario("static on-demand", false, false, 4, 0).unwrap();
+        let spot = run_queue_scenario("autoscaled spot", true, true, 4, 1).unwrap();
+        assert_eq!(od.completed, 4, "on-demand scenario must finish all jobs");
+        assert_eq!(spot.completed, 4, "spot scenario must finish all jobs");
+        assert!(spot.interruptions >= 1, "the armed interruption must land");
+        assert!(
+            spot.total_cost_cents < od.total_cost_cents,
+            "spot fleet ({}c) must undercut on-demand ({}c)",
+            spot.total_cost_cents,
+            od.total_cost_cents
+        );
+        assert!(spot.scale_events > 0);
     }
 
     #[test]

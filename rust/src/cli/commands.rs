@@ -2,11 +2,12 @@
 //! extras (`mkproject`, `batch`, `report`) needed because the Analyst
 //! "workstation" is itself part of the simulation.
 
-use super::{load_session, make_engine, save_session};
+use super::{load_jobs, load_session, make_engine, save_jobs, save_session};
 use crate::analytics::CatBondData;
 use crate::coordinator::{
     table1_desktops, CreateClusterOpts, CreateInstanceOpts, Placement, ResultScope, Session,
 };
+use crate::jobs::{JobId, JobScheduler, JobSpec, Priority, ScalePolicy};
 use crate::simcloud::SpanCategory;
 use crate::util::argparse::{CommandSpec, ParsedArgs};
 use crate::util::humanfmt;
@@ -22,6 +23,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("snap", "EBS snapshot ID to materialise a volume from")
             .value_arg("type", "EC2 instance type (e.g. m2.4xlarge)")
             .value_arg("desc", "description of the instance")
+            .switch_arg("spot", "request spot-market capacity (bid = on-demand rate)")
             .exclusive(&["ebsvol", "snap"]),
         CommandSpec::new("ec2terminateinstance", "safely release an instance")
             .value_arg("iname", "name of the instance to terminate")
@@ -46,6 +48,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("snap", "EBS snapshot ID to materialise a volume from")
             .value_arg("type", "EC2 instance type")
             .value_arg("desc", "description of the cluster")
+            .switch_arg("spot", "request spot-market capacity for every node")
             .exclusive(&["ebsvol", "snap"]),
         CommandSpec::new("ec2terminatecluster", "safely release a cluster")
             .value_arg("cname", "name of the cluster")
@@ -101,6 +104,29 @@ pub fn registry() -> Vec<CommandSpec> {
         CommandSpec::new("ec2resizecluster", "grow or shrink a running cluster (dynamic scaling)")
             .value_arg("cname", "cluster to resize")
             .required_arg("csize", "new cluster size (1 master + workers)"),
+        CommandSpec::new("ec2submitjob", "queue an analytics job for the elastic fleet")
+            .value_arg("projectdir", "project directory at the Analyst site")
+            .value_arg("rscript", "script to execute from the project directory")
+            .value_arg("priority", "low | normal | high (default normal)")
+            .required_arg("runname", "name for this job's results")
+            .switch_arg("bynode", "round-robin slave placement (default)")
+            .switch_arg("byslot", "fill each node's cores before the next")
+            .exclusive(&["bynode", "byslot"]),
+        CommandSpec::new("ec2jobstatus", "show one job (or every job) in the queue")
+            .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)"),
+        CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
+            .switch_arg("drain", "run the scheduler until every job completes")
+            .switch_arg("shutdown", "terminate the fleet and bill its usage"),
+        CommandSpec::new("ec2autoscale", "configure the elastic fleet autoscaler")
+            .value_arg("min", "minimum fleet clusters")
+            .value_arg("max", "maximum fleet clusters")
+            .value_arg("csize", "nodes per fleet cluster")
+            .value_arg("maxcsize", "node cap for the elastic policy")
+            .value_arg("type", "EC2 instance type for fleet clusters")
+            .value_arg("policy", "depth | elastic")
+            .switch_arg("spot", "buy fleet capacity on the spot market")
+            .switch_arg("ondemand", "buy fleet capacity on demand")
+            .exclusive(&["spot", "ondemand"]),
         CommandSpec::new("mkproject", "create an example analytics project at the Analyst site")
             .value_arg("projectdir", "project directory to create")
             .value_arg("kind", "catopt | sweep")
@@ -165,9 +191,25 @@ fn run_command(cmd: &str, p: &ParsedArgs) -> Result<String> {
     }
 
     let mut s = load_session(make_engine())?;
+    if is_jobs_command(cmd) {
+        let mut js = load_jobs()?;
+        js.prune_fleet(&s);
+        let out = apply_with_jobs(&mut s, &mut js, cmd, p)?;
+        save_jobs(&js)?;
+        save_session(&s)?;
+        return Ok(out);
+    }
     let out = apply(&mut s, cmd, p)?;
     save_session(&s)?;
     Ok(out)
+}
+
+/// Commands that operate on the persisted job-queue state.
+fn is_jobs_command(cmd: &str) -> bool {
+    matches!(
+        cmd,
+        "ec2submitjob" | "ec2jobstatus" | "ec2jobqueue" | "ec2autoscale"
+    )
 }
 
 /// Batch-mode execution (paper §3.4): commands listed in a script file,
@@ -176,6 +218,8 @@ fn run_batch(file: &str) -> Result<String> {
     let text = std::fs::read_to_string(file)?;
     let mut out = String::new();
     let mut s = load_session(make_engine())?;
+    let mut js = load_jobs()?;
+    js.prune_fleet(&s);
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -191,9 +235,10 @@ fn run_batch(file: &str) -> Result<String> {
             .parse(parts.collect::<Vec<_>>())
             .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
         out.push_str(&format!("$ {line}\n"));
-        out.push_str(&apply(&mut s, &cmd, &parsed)?);
+        out.push_str(&apply_with_jobs(&mut s, &mut js, &cmd, &parsed)?);
         out.push('\n');
     }
+    save_jobs(&js)?;
     save_session(&s)?;
     Ok(out)
 }
@@ -208,11 +253,13 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 snap: p.value("snap").map(str::to_string),
                 itype: p.value("type").map(str::to_string),
                 desc: p.value("desc").map(str::to_string),
+                spot: p.switch("spot"),
             })?;
             let e = s.instances_cfg.get(&name).unwrap();
             Ok(format!(
-                "created instance '{name}' ({}) dns={} volume={}",
+                "created instance '{name}' ({}{}) dns={} volume={}",
                 e.instance_type,
+                if p.switch("spot") { ", spot" } else { "" },
                 e.public_dns,
                 e.volume_id.as_deref().unwrap_or("-")
             ))
@@ -266,12 +313,14 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 snap: p.value("snap").map(str::to_string),
                 itype: p.value("type").map(str::to_string),
                 desc: p.value("desc").map(str::to_string),
+                spot: p.switch("spot"),
             })?;
             let e = s.clusters_cfg.get(&name).unwrap();
             Ok(format!(
-                "created cluster '{name}': {} x {} (1 master + {} workers), volume={}",
+                "created cluster '{name}': {} x {}{} (1 master + {} workers), volume={}",
                 e.size,
                 e.instance_type,
+                if p.switch("spot") { " spot" } else { "" },
                 e.worker_ids.len(),
                 e.volume_id.as_deref().unwrap_or("-")
             ))
@@ -333,7 +382,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
         }
         "ec2runoncluster" => {
             let rscript = pick_script(s, p)?;
-            let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"));
+            let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
             s.threads = p.usize_value("threads")?;
             let out = s.run_on_cluster(
                 p.value("cname"),
@@ -427,6 +476,113 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
         }
         "report" => Ok(report(s)),
         other => bail!("unhandled command '{other}'"),
+    }
+}
+
+/// Execute one command against a session and the persisted job
+/// scheduler: the four queue/autoscaler commands live here; everything
+/// else falls through to [`apply`].
+pub fn apply_with_jobs(
+    s: &mut Session,
+    js: &mut JobScheduler,
+    cmd: &str,
+    p: &ParsedArgs,
+) -> Result<String> {
+    match cmd {
+        "ec2submitjob" => {
+            let rscript = pick_script(s, p)?;
+            let priority = Priority::parse(p.value_or("priority", "normal"))?;
+            let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
+            let id = js.submit(
+                s,
+                JobSpec {
+                    name: p.value("runname").unwrap().to_string(),
+                    projectdir: project_dir(p).to_string(),
+                    rscript,
+                    priority,
+                    placement,
+                },
+            );
+            Ok(format!(
+                "submitted {id} (priority {}, {} pending)",
+                priority.label(),
+                js.queue.pending()
+            ))
+        }
+        "ec2jobstatus" => match p.value("jobid") {
+            Some(v) => {
+                let n: u64 = v
+                    .trim_start_matches("job-")
+                    .parse()
+                    .map_err(|_| anyhow!("-jobid expects a number or job-N, got '{v}'"))?;
+                let j = js
+                    .queue
+                    .get(JobId(n))
+                    .ok_or_else(|| anyhow!("no such job 'job-{n}'"))?;
+                Ok(format!(
+                    "{} {}  progress={:.0}%  interruptions={}  retries={}  compute={}\nsummary: {}",
+                    j.id,
+                    j.state.label(),
+                    j.progress * 100.0,
+                    j.interruptions,
+                    j.retries,
+                    humanfmt::secs(j.compute_s),
+                    j.summary
+                ))
+            }
+            None => Ok(js.status().join("\n")),
+        },
+        "ec2jobqueue" => {
+            let mut out = Vec::new();
+            if p.switch("drain") {
+                js.run_until_idle(s)?;
+                out.push("queue drained".to_string());
+            }
+            if p.switch("shutdown") {
+                let released = js.shutdown_fleet(s)?;
+                out.push(format!("fleet released: [{}]", released.join(", ")));
+            }
+            out.extend(js.status());
+            Ok(out.join("\n"))
+        }
+        "ec2autoscale" => {
+            let cfg = &mut js.autoscaler.cfg;
+            if let Some(v) = p.usize_value("min")? {
+                cfg.min_clusters = v;
+            }
+            if let Some(v) = p.usize_value("max")? {
+                cfg.max_clusters = v;
+            }
+            if let Some(v) = p.usize_value("csize")? {
+                cfg.nodes_per_cluster = v.max(2);
+            }
+            if let Some(v) = p.usize_value("maxcsize")? {
+                cfg.max_nodes_per_cluster = v.max(2);
+            }
+            if let Some(t) = p.value("type") {
+                cfg.itype = t.to_string();
+            }
+            if let Some(pol) = p.value("policy") {
+                cfg.policy = ScalePolicy::parse(pol)?;
+            }
+            if p.switch("spot") {
+                cfg.spot = true;
+            }
+            if p.switch("ondemand") {
+                cfg.spot = false;
+            }
+            Ok(format!(
+                "autoscaler: clusters [{}..{}] x {} nodes (elastic cap {}), type {}, {}, policy {}",
+                cfg.min_clusters,
+                cfg.max_clusters,
+                cfg.nodes_per_cluster,
+                cfg.max_nodes_per_cluster,
+                cfg.itype,
+                if cfg.spot { "spot" } else { "on-demand" },
+                cfg.policy.label()
+            ))
+        }
+        other => apply(s, other, p),
     }
 }
 
@@ -625,8 +781,81 @@ mod tests {
             "ec2logintocluster",
             "ec2resourcelock",
             "ec2configurep2rac",
+            "ec2submitjob",
+            "ec2jobstatus",
+            "ec2jobqueue",
+            "ec2autoscale",
         ] {
             assert!(h.contains(c), "help missing {c}");
+        }
+    }
+
+    fn run_jobs(
+        s: &mut Session,
+        js: &mut JobScheduler,
+        cmd: &str,
+        args: &[&str],
+    ) -> Result<String> {
+        let spec = registry().into_iter().find(|c| c.name == cmd).unwrap();
+        let p = spec.parse(args.iter().map(|a| a.to_string())).unwrap();
+        apply_with_jobs(s, js, cmd, &p)
+    }
+
+    #[test]
+    fn job_queue_cli_workflow() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        let out = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2autoscale",
+            &["-min", "1", "-max", "2", "-policy", "elastic", "-spot"],
+        )
+        .unwrap();
+        assert!(out.contains("spot") && out.contains("elastic"));
+        let out = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &["-projectdir", "proj", "-rscript", "sweep.json", "-runname", "r1", "-priority", "high"],
+        )
+        .unwrap();
+        assert!(out.contains("submitted job-1"), "{out}");
+        let out = run_jobs(&mut s, &mut js, "ec2jobqueue", &["-drain"]).unwrap();
+        assert!(out.contains("queue drained"), "{out}");
+        let out = run_jobs(&mut s, &mut js, "ec2jobstatus", &["-jobid", "1"]).unwrap();
+        assert!(out.contains("completed"), "{out}");
+        assert!(s.analyst.exists("proj_results/r1/summary.json"));
+        let out = run_jobs(&mut s, &mut js, "ec2jobqueue", &["-shutdown"]).unwrap();
+        assert!(out.contains("fleet released"), "{out}");
+        assert!(s.cloud.live_instances().is_empty());
+    }
+
+    #[test]
+    fn conflicting_placement_flags_rejected_by_parser() {
+        let spec = registry()
+            .into_iter()
+            .find(|c| c.name == "ec2runoncluster")
+            .unwrap();
+        let err = spec
+            .parse(["-runname", "r", "-bynode", "-byslot"].map(String::from))
+            .unwrap_err();
+        assert!(matches!(err, crate::util::argparse::ArgError::Exclusive(_)));
+    }
+
+    #[test]
+    fn spot_switch_creates_spot_capacity() {
+        let mut s = session();
+        let out = run(&mut s, "ec2createcluster", &["-cname", "sc", "-csize", "2", "-spot"]).unwrap();
+        assert!(out.contains("spot"), "{out}");
+        let e = s.clusters_cfg.get("sc").unwrap().clone();
+        for id in e.all_ids() {
+            assert!(s.cloud.instance(&id).unwrap().is_spot());
         }
     }
 

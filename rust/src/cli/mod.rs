@@ -20,6 +20,7 @@ pub mod commands;
 
 use crate::analytics::P2racEngine;
 use crate::coordinator::{ScriptEngine, Session};
+use crate::jobs::{AutoscalerConfig, JobScheduler};
 use crate::runtime::Runtime;
 use crate::simcloud::SimParams;
 use crate::util::json::Json;
@@ -74,6 +75,31 @@ pub fn save_session(session: &Session) -> Result<()> {
     std::fs::create_dir_all(&dir)?;
     std::fs::write(session_path(), session.to_json().to_string_compact())
         .with_context(|| format!("writing {}", session_path().display()))
+}
+
+fn jobs_path() -> PathBuf {
+    session_dir().join("jobs.json")
+}
+
+/// Load the persisted job-queue/autoscaler state, or a fresh default.
+pub fn load_jobs() -> Result<JobScheduler> {
+    let path = jobs_path();
+    if path.exists() {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt jobs state: {e}"))?;
+        JobScheduler::from_json(&j)
+    } else {
+        Ok(JobScheduler::new(AutoscalerConfig::default()))
+    }
+}
+
+/// Persist the job-queue/autoscaler state.
+pub fn save_jobs(js: &JobScheduler) -> Result<()> {
+    let dir = session_dir();
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(jobs_path(), js.to_json().to_string_compact())
+        .with_context(|| format!("writing {}", jobs_path().display()))
 }
 
 /// Entry point used by `main.rs`; returns the process exit code.

@@ -85,9 +85,11 @@ mod tests {
 
     #[test]
     fn roundtrip() {
-        let mut c = PlatformConfig::default();
-        c.default_ami = "ami-abc".into();
-        c.default_instance = Some("hpc_instance".into());
+        let c = PlatformConfig {
+            default_ami: "ami-abc".into(),
+            default_instance: Some("hpc_instance".into()),
+            ..PlatformConfig::default()
+        };
         let j = c.to_json();
         let back = PlatformConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
         assert_eq!(back, c);

@@ -32,12 +32,18 @@ pub enum Placement {
 }
 
 impl Placement {
-    pub fn parse(bynode: bool, byslot: bool) -> Placement {
-        // bynode is the default when neither switch is given (§3.2.2).
-        if byslot && !bynode {
-            Placement::BySlot
-        } else {
-            Placement::ByNode
+    /// Resolve the `-bynode`/`-byslot` switches. bynode is the default
+    /// when neither is given (§3.2.2); passing both is a contradiction
+    /// and is rejected rather than silently resolved — the old
+    /// behaviour picked ByNode, which could mask a memory-infeasible
+    /// byslot placement the Analyst explicitly asked to test.
+    pub fn parse(bynode: bool, byslot: bool) -> anyhow::Result<Placement> {
+        match (bynode, byslot) {
+            (true, true) => anyhow::bail!(
+                "-bynode and -byslot are mutually exclusive; pick one placement"
+            ),
+            (false, true) => Ok(Placement::BySlot),
+            _ => Ok(Placement::ByNode),
         }
     }
 }
@@ -146,9 +152,15 @@ mod tests {
 
     #[test]
     fn default_is_bynode() {
-        assert_eq!(Placement::parse(false, false), Placement::ByNode);
-        assert_eq!(Placement::parse(true, false), Placement::ByNode);
-        assert_eq!(Placement::parse(false, true), Placement::BySlot);
+        assert_eq!(Placement::parse(false, false).unwrap(), Placement::ByNode);
+        assert_eq!(Placement::parse(true, false).unwrap(), Placement::ByNode);
+        assert_eq!(Placement::parse(false, true).unwrap(), Placement::BySlot);
+    }
+
+    #[test]
+    fn conflicting_placement_flags_rejected() {
+        let err = Placement::parse(true, true).unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::config::{
 };
 use crate::datasync::{sync_dir, Protocol, SyncReport, DEFAULT_BLOCK_LEN};
 use crate::simcloud::{
-    instance_type, CloudError, Link, SimCloud, SimParams, SpanCategory, Vfs,
+    instance_type, CloudError, Lifecycle, Link, SimCloud, SimParams, SpanCategory, Vfs,
 };
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -60,6 +60,9 @@ pub struct CreateInstanceOpts {
     pub snap: Option<String>,
     pub itype: Option<String>,
     pub desc: Option<String>,
+    /// Request spot capacity (bid = the on-demand rate, the classic
+    /// "never outbid, just ride the discount" strategy).
+    pub spot: bool,
 }
 
 /// Options for `ec2createcluster`.
@@ -71,6 +74,15 @@ pub struct CreateClusterOpts {
     pub snap: Option<String>,
     pub itype: Option<String>,
     pub desc: Option<String>,
+    /// Request spot capacity for every node of the cluster.
+    pub spot: bool,
+}
+
+/// Bid used for `-spot` requests: the on-demand rate in centi-cents.
+fn spot_bid(spec: &crate::simcloud::InstanceTypeSpec) -> Lifecycle {
+    Lifecycle::Spot {
+        bid_centi_cents_hour: spec.price_cents_hour * 100,
+    }
 }
 
 /// One P2RAC session.
@@ -268,10 +280,15 @@ impl Session {
             self.platform.default_ami.clone()
         };
 
+        let lifecycle = if opts.spot {
+            spot_bid(spec)
+        } else {
+            Lifecycle::OnDemand
+        };
         let start = self.cloud.clock.now_s();
         let ids = self
             .cloud
-            .run_instances(1, &itype, &ami, &self.rlibs.libraries)
+            .run_instances_as(1, &itype, &ami, &self.rlibs.libraries, lifecycle)
             .context("launching instance")?;
         let id = ids[0].clone();
         self.cloud.set_name(&id, &name)?;
@@ -369,10 +386,15 @@ impl Session {
             self.platform.default_ami.clone()
         };
 
+        let lifecycle = if opts.spot {
+            spot_bid(spec)
+        } else {
+            Lifecycle::OnDemand
+        };
         let start = self.cloud.clock.now_s();
         let ids = self
             .cloud
-            .run_instances(csize, &itype, &ami, &self.rlibs.libraries)
+            .run_instances_as(csize, &itype, &ami, &self.rlibs.libraries, lifecycle)
             .context("launching cluster instances")?;
         let master = ids[0].clone();
         let workers: Vec<String> = ids[1..].to_vec();
@@ -480,15 +502,17 @@ impl Session {
         let mut worker_ids = entry.worker_ids.clone();
         let mut worker_dns = entry.worker_dns.clone();
         if new_size > entry.size {
-            // Grow: boot the delta as one batch, mount the shared volume.
+            // Grow: boot the delta as one batch, mount the shared
+            // volume. New workers inherit the master's purchase model
+            // (a spot cluster grows with spot capacity).
             let add = new_size - entry.size;
-            let ami = {
+            let (ami, lifecycle) = {
                 let inst = self.cloud.instance(&entry.master_id)?;
-                inst.ami_id.clone()
+                (inst.ami_id.clone(), inst.lifecycle)
             };
             let ids = self
                 .cloud
-                .run_instances(add, &entry.instance_type, &ami, &self.rlibs.libraries)
+                .run_instances_as(add, &entry.instance_type, &ami, &self.rlibs.libraries, lifecycle)
                 .context("scaling cluster up")?;
             if let Some(vol) = &entry.volume_id {
                 self.cloud.nfs_export(&entry.master_id, vol, &ids)?;
@@ -516,6 +540,34 @@ impl Session {
         e.size = new_size;
         e.worker_ids = worker_ids;
         e.worker_dns = worker_dns;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// The provider reclaims a spot cluster (price exceeded the bid).
+    /// Unlike [`Session::terminate_cluster`] this ignores the in-use
+    /// lock — interruptions do not wait for runs to finish — and bills
+    /// every node with the interrupted-partial-hour-free rule. The
+    /// shared EBS volume survives, exactly like a real interruption:
+    /// anything checkpointed to it is recoverable by replacement
+    /// capacity.
+    pub fn spot_interrupt_cluster(&mut self, cname: &str) -> Result<()> {
+        let entry = self.cluster_entry(cname)?.clone();
+        let start = self.cloud.clock.now_s();
+        self.cloud.nfs_unexport(&entry.worker_ids)?;
+        if let Some(vol) = &entry.volume_id {
+            self.cloud.detach_volume(vol).ok();
+        }
+        self.cloud.spot_interrupt_instances(&entry.all_ids())?;
+        self.cloud.clock.push_span(
+            SpanCategory::TerminateResource,
+            &format!("spot interruption reclaims cluster {cname}"),
+            start,
+        );
+        self.clusters_cfg.remove(cname);
+        if self.platform.default_cluster.as_deref() == Some(cname) {
+            self.platform.default_cluster = self.clusters_cfg.names().first().cloned();
+        }
         self.save_configs();
         Ok(())
     }
@@ -1534,6 +1586,32 @@ mod tests {
         .unwrap();
         let b = s.login_banner(Some("i"), None).unwrap();
         assert!(b.contains("ssh root@ec2-"));
+    }
+
+    #[test]
+    fn spot_cluster_interruption_reclaims_but_keeps_volume() {
+        let mut s = session();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("sc".into()),
+            csize: Some(3),
+            spot: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let e = s.clusters_cfg.get("sc").unwrap().clone();
+        let vol = e.volume_id.clone().unwrap();
+        for id in e.all_ids() {
+            assert!(s.cloud.instance(&id).unwrap().is_spot());
+        }
+        // A run is in flight — interruptions do not care.
+        s.set_cluster_lock("sc", true).unwrap();
+        s.spot_interrupt_cluster("sc").unwrap();
+        assert!(s.clusters_cfg.get("sc").is_none());
+        assert!(s.cloud.live_instances().is_empty());
+        assert!(
+            s.cloud.volume(&vol).is_ok(),
+            "EBS volume must survive the interruption"
+        );
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! The elastic autoscaler: watches queue depth (and, under the
+//! `elastic` policy, per-job backlog) on the virtual clock and drives
+//! `Session::create_cluster` / `terminate_cluster` / `resize_cluster`
+//! to keep the fleet matched to demand. Every scale event is ordinary
+//! resource management, so it is billed through the centi-cent ledger
+//! like anything else an Analyst does — elasticity has a visible price.
+
+use super::FleetCluster;
+use crate::coordinator::{CreateClusterOpts, Session};
+use anyhow::{bail, Result};
+
+/// Scaling policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalePolicy {
+    /// One cluster per pending-or-running job, clamped to
+    /// `[min_clusters, max_clusters]`.
+    QueueDepth,
+    /// QueueDepth, plus: when the fleet is saturated and a backlog
+    /// remains, grow idle clusters to `max_nodes_per_cluster` (and
+    /// shrink them back once the backlog clears) via
+    /// `Session::resize_cluster`.
+    Elastic,
+}
+
+impl ScalePolicy {
+    pub fn parse(s: &str) -> Result<ScalePolicy> {
+        match s {
+            "depth" => Ok(ScalePolicy::QueueDepth),
+            "elastic" => Ok(ScalePolicy::Elastic),
+            other => bail!("unknown autoscale policy '{other}' (depth | elastic)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ScalePolicy::QueueDepth => "depth",
+            ScalePolicy::Elastic => "elastic",
+        }
+    }
+}
+
+/// Fleet-shape configuration (`ec2autoscale`).
+#[derive(Clone, Debug)]
+pub struct AutoscalerConfig {
+    pub min_clusters: usize,
+    pub max_clusters: usize,
+    /// Nodes per fleet cluster (>= 2: one master + workers).
+    pub nodes_per_cluster: usize,
+    /// Upper bound the `elastic` policy may resize a cluster to.
+    pub max_nodes_per_cluster: usize,
+    pub itype: String,
+    /// Buy fleet capacity on the spot market.
+    pub spot: bool,
+    pub policy: ScalePolicy,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        Self {
+            min_clusters: 1,
+            max_clusters: 4,
+            nodes_per_cluster: 2,
+            max_nodes_per_cluster: 8,
+            itype: "m2.2xlarge".into(),
+            spot: false,
+            policy: ScalePolicy::QueueDepth,
+        }
+    }
+}
+
+/// One recorded scaling decision (for reports and benches).
+#[derive(Clone, Debug)]
+pub struct ScaleEvent {
+    pub at_s: f64,
+    pub action: String,
+}
+
+/// The autoscaler itself.
+pub struct Autoscaler {
+    pub cfg: AutoscalerConfig,
+    /// Monotonic suffix for fleet cluster names (reclaimed clusters
+    /// never reuse a name).
+    counter: u64,
+    pub events: Vec<ScaleEvent>,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        Self {
+            cfg,
+            counter: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Target fleet size for the current demand. (Not `clamp`: a
+    /// min > max misconfiguration should saturate at max, not panic.)
+    pub fn desired_clusters(&self, pending: usize, running: usize) -> usize {
+        (pending + running)
+            .max(self.cfg.min_clusters)
+            .min(self.cfg.max_clusters)
+    }
+
+    fn note(&mut self, at_s: f64, action: String) {
+        self.events.push(ScaleEvent { at_s, action });
+    }
+
+    /// Names used by fleet clusters (`fleet<N>`): the counter persists
+    /// with the session so restarts keep names unique.
+    pub fn counter(&self) -> u64 {
+        self.counter
+    }
+
+    pub fn set_counter(&mut self, c: u64) {
+        self.counter = c;
+    }
+
+    /// Drive the fleet toward the desired size. Busy clusters are
+    /// never torn down; scale-downs drain idle capacity only.
+    pub fn reconcile(
+        &mut self,
+        s: &mut Session,
+        fleet: &mut Vec<FleetCluster>,
+        pending: usize,
+        running: usize,
+    ) -> Result<()> {
+        let desired = self.desired_clusters(pending, running);
+
+        while fleet.len() < desired {
+            self.counter += 1;
+            let name = format!("fleet{}", self.counter);
+            let csize = self.cfg.nodes_per_cluster.max(2);
+            s.create_cluster(&CreateClusterOpts {
+                cname: Some(name.clone()),
+                csize: Some(csize),
+                itype: Some(self.cfg.itype.clone()),
+                desc: Some("autoscaler fleet".into()),
+                spot: self.cfg.spot,
+                ..Default::default()
+            })?;
+            let now = s.cloud.clock.now_s();
+            self.note(
+                now,
+                format!(
+                    "scale-up: created {name} ({csize} x {}, {})",
+                    self.cfg.itype,
+                    if self.cfg.spot { "spot" } else { "on-demand" }
+                ),
+            );
+            fleet.push(FleetCluster {
+                name,
+                running: None,
+            });
+        }
+
+        while fleet.len() > desired {
+            let Some(pos) = fleet.iter().position(|c| c.running.is_none()) else {
+                break; // everything is busy; drain later
+            };
+            let name = fleet.remove(pos).name;
+            s.terminate_cluster(Some(&name), true)?;
+            let now = s.cloud.clock.now_s();
+            self.note(now, format!("scale-down: terminated {name}"));
+        }
+
+        if self.cfg.policy == ScalePolicy::Elastic {
+            // Saturated with a backlog -> widen idle clusters; backlog
+            // cleared -> shrink them back to the baseline.
+            let target = if fleet.len() >= self.cfg.max_clusters && pending > fleet.len() {
+                self.cfg.max_nodes_per_cluster.max(2)
+            } else {
+                self.cfg.nodes_per_cluster.max(2)
+            };
+            let idle: Vec<String> = fleet
+                .iter()
+                .filter(|c| c.running.is_none())
+                .map(|c| c.name.clone())
+                .collect();
+            for name in idle {
+                let cur = s.clusters_cfg.get(&name).map(|e| e.size).unwrap_or(target);
+                if cur != target {
+                    s.resize_cluster(Some(&name), target)?;
+                    let now = s.cloud.clock.now_s();
+                    self.note(now, format!("resize: {name} {cur} -> {target}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockEngine;
+    use crate::simcloud::SimParams;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(100.0)))
+    }
+
+    #[test]
+    fn desired_size_tracks_demand_within_bounds() {
+        let a = Autoscaler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 4,
+            ..Default::default()
+        });
+        assert_eq!(a.desired_clusters(0, 0), 1);
+        assert_eq!(a.desired_clusters(2, 1), 3);
+        assert_eq!(a.desired_clusters(9, 3), 4);
+    }
+
+    #[test]
+    fn reconcile_grows_and_shrinks_the_fleet() {
+        let mut s = session();
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 3,
+            nodes_per_cluster: 2,
+            ..Default::default()
+        });
+        let mut fleet = Vec::new();
+        a.reconcile(&mut s, &mut fleet, 5, 0).unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(s.clusters_cfg.names().len(), 3);
+        assert_eq!(s.cloud.live_instances().len(), 6);
+
+        // Demand drains; idle clusters are released down to the floor,
+        // and their usage lands in the ledger.
+        a.reconcile(&mut s, &mut fleet, 0, 0).unwrap();
+        assert_eq!(fleet.len(), 1);
+        assert_eq!(s.cloud.live_instances().len(), 2);
+        assert!(s.cloud.ledger.total_cents() > 0);
+        assert!(a.events.iter().any(|e| e.action.contains("scale-up")));
+        assert!(a.events.iter().any(|e| e.action.contains("scale-down")));
+    }
+
+    #[test]
+    fn busy_clusters_survive_scale_down() {
+        let mut s = session();
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            min_clusters: 0,
+            max_clusters: 2,
+            ..Default::default()
+        });
+        let mut fleet = Vec::new();
+        a.reconcile(&mut s, &mut fleet, 2, 0).unwrap();
+        fleet[0].running = Some(super::super::JobId(1));
+        a.reconcile(&mut s, &mut fleet, 0, 1).unwrap();
+        // The busy cluster stays; only the idle one went away.
+        assert_eq!(fleet.len(), 1);
+        assert!(fleet[0].running.is_some());
+    }
+
+    #[test]
+    fn elastic_policy_widens_and_narrows_idle_clusters() {
+        let mut s = session();
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            nodes_per_cluster: 2,
+            max_nodes_per_cluster: 6,
+            policy: ScalePolicy::Elastic,
+            ..Default::default()
+        });
+        let mut fleet = Vec::new();
+        // Saturated (max 1 cluster) with a deep backlog -> widen.
+        a.reconcile(&mut s, &mut fleet, 5, 0).unwrap();
+        let name = fleet[0].name.clone();
+        assert_eq!(s.clusters_cfg.get(&name).unwrap().size, 6);
+        // Backlog cleared -> back to the baseline.
+        a.reconcile(&mut s, &mut fleet, 0, 0).unwrap();
+        assert_eq!(s.clusters_cfg.get(&name).unwrap().size, 2);
+        assert!(a.events.iter().any(|e| e.action.contains("resize")));
+    }
+}

@@ -1,0 +1,497 @@
+//! Checkpointable execution of the two workloads, and the checkpoint
+//! format itself.
+//!
+//! A job executes as a sequence of **slices** (a few GA generations or
+//! MC batches). After every slice the scheduler commits a checkpoint —
+//! a small JSON document conceptually shipped back to the Analyst
+//! site/S3 — so that when spot capacity is reclaimed mid-slice, the
+//! job resumes from the last committed slice on replacement capacity
+//! and produces **bit-identical** results to an uninterrupted run:
+//!
+//! * `{"kind":"catopt","ga":{...}}` — the GA's full loop state
+//!   ([`GaRunner::snapshot`]): population, fitness, incumbent, history
+//!   and the raw 256-bit RNG state (hex words — JSON numbers are f64
+//!   and would corrupt high bits).
+//! * `{"kind":"mc_sweep","done":n,"results":[...]}` — results of the
+//!   first `n` batches. Batch PRNG streams are forked up front from
+//!   the seed ([`plan_sweep`]), so the remaining batches draw the same
+//!   numbers wherever and whenever they run.
+//!
+//! Jobs run on the pure-Rust oracle backend: the queue is a
+//! multi-tenant control-plane feature, and the oracle is the backend
+//! every other path is verified against. (`ec2runoncluster` still
+//! dispatches to PJRT when artifacts are built.)
+
+use crate::analytics::backend::{FitnessBackend, RustBackend};
+use crate::analytics::catbond::CatBondData;
+use crate::analytics::cost::{self, CatoptCost, SweepCost};
+use crate::analytics::ga::optimizer::GaRunner;
+use crate::analytics::mc::{plan_sweep, JobResult, RustSweep, SweepConfig, SweepPlan};
+use crate::analytics::pool::WorkerPool;
+use crate::analytics::script::{
+    catopt_result_files, ga_config_from, sweep_config_from, sweep_csv, sweep_summary,
+    RUST_SWEEP_K, RUST_SWEEP_S, RUST_SWEEP_TILE,
+};
+use crate::coordinator::engine::ResourceView;
+use crate::simcloud::Vfs;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Result of one slice.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOutcome {
+    /// Billed virtual compute time of the slice on the given resource.
+    pub virtual_s: f64,
+    pub finished: bool,
+}
+
+/// One job's executable state, reconstructed from the project files
+/// (and a checkpoint, if any) each time the job lands on capacity.
+pub enum JobWork {
+    Catopt {
+        backend: RustBackend,
+        runner: GaRunner,
+        cost: CatoptCost,
+    },
+    Sweep {
+        cfg: SweepConfig,
+        plan: SweepPlan,
+        done: usize,
+        results: Vec<JobResult>,
+        cost: SweepCost,
+    },
+}
+
+pub(crate) fn load_script(project: &Vfs, project_dir: &str, rscript: &str) -> Result<Json> {
+    let path = format!("{project_dir}/{rscript}");
+    let bytes = project
+        .read(&path)
+        .ok_or_else(|| anyhow!("script '{rscript}' not found in project directory"))?;
+    let text = std::str::from_utf8(bytes).context("script is not UTF-8")?;
+    Json::parse(text).map_err(|e| anyhow!("script '{rscript}' is not valid JSON: {e}"))
+}
+
+/// Fingerprint of a sweep config, stored in the checkpoint so a
+/// mid-job script edit (seed or ranges — not just job count) is caught
+/// on resume instead of emitting mixed-grid output. f32 ranges pass
+/// through f64 exactly, so the comparison is bit-exact.
+fn sweep_fingerprint(cfg: &SweepConfig) -> Json {
+    Json::from_pairs(vec![
+        ("n_jobs", Json::num(cfg.n_jobs as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("att_min", Json::num(cfg.att_range.0 as f64)),
+        ("att_max", Json::num(cfg.att_range.1 as f64)),
+        ("lim_min", Json::num(cfg.lim_range.0 as f64)),
+        ("lim_max", Json::num(cfg.lim_range.1 as f64)),
+    ])
+}
+
+impl JobWork {
+    /// Build the work from the project directory as it exists on the
+    /// target resource, resuming from `checkpoint` when given.
+    pub fn from_project(
+        project: &Vfs,
+        project_dir: &str,
+        rscript: &str,
+        checkpoint: Option<&Json>,
+        pool: &WorkerPool,
+    ) -> Result<JobWork> {
+        let script = load_script(project, project_dir, rscript)?;
+        Self::from_script(project, project_dir, rscript, &script, checkpoint, pool)
+    }
+
+    /// Same, with the script already parsed (the scheduler parses it
+    /// once per slice for the slave count and passes it through).
+    pub fn from_script(
+        project: &Vfs,
+        project_dir: &str,
+        rscript: &str,
+        script: &Json,
+        checkpoint: Option<&Json>,
+        pool: &WorkerPool,
+    ) -> Result<JobWork> {
+        let ty = script
+            .opt_str("type")
+            .ok_or_else(|| anyhow!("script '{rscript}' has no \"type\" field"))?;
+        match ty.as_str() {
+            "catopt" => {
+                let data = CatBondData::from_files(|name| {
+                    project
+                        .read(&format!("{project_dir}/{name}"))
+                        .map(<[u8]>::to_vec)
+                })?;
+                let cfg = ga_config_from(script);
+                let mut cost = CatoptCost::default();
+                if let Some(c) = script.get("candidate_cost_s").and_then(Json::as_f64) {
+                    cost.candidate_cost_s = c;
+                }
+                let backend = RustBackend::new(data);
+                let runner = match checkpoint {
+                    Some(ck) => {
+                        let ga = ck
+                            .get("ga")
+                            .ok_or_else(|| anyhow!("catopt checkpoint missing 'ga'"))?;
+                        let runner = GaRunner::restore(cfg, ga)?;
+                        // The checkpoint must match THIS project's data:
+                        // if data files changed between slices the
+                        // candidate width no longer fits the objective.
+                        if runner.dims() != backend.dims() {
+                            bail!(
+                                "catopt checkpoint has {}-dim candidates but the project \
+                                 data is {}-dim — were the data files edited mid-job?",
+                                runner.dims(),
+                                backend.dims()
+                            );
+                        }
+                        runner
+                    }
+                    None => GaRunner::new(&backend, cfg, pool)?,
+                };
+                Ok(JobWork::Catopt {
+                    backend,
+                    runner,
+                    cost,
+                })
+            }
+            "mc_sweep" => {
+                let cfg = sweep_config_from(script);
+                let mut cost = SweepCost::default();
+                if let Some(c) = script.get("job_cost_s").and_then(Json::as_f64) {
+                    cost.job_cost_s = c;
+                }
+                let plan = plan_sweep(&cfg, RUST_SWEEP_TILE);
+                let (done, results) = match checkpoint {
+                    Some(ck) => {
+                        // The checkpoint must describe THIS plan: a
+                        // mid-job edit of seed/ranges/n_jobs re-derives
+                        // a different grid than the saved rows.
+                        let expect = sweep_fingerprint(&cfg);
+                        if ck.get("config") != Some(&expect) {
+                            bail!(
+                                "sweep checkpoint was taken against a different sweep \
+                                 configuration — was the script edited mid-job?"
+                            );
+                        }
+                        let done = ck.req_u64("done")? as usize;
+                        let mut results = Vec::new();
+                        for r in ck
+                            .get("results")
+                            .and_then(Json::as_arr)
+                            .ok_or_else(|| anyhow!("sweep checkpoint missing results"))?
+                        {
+                            results.push(JobResult {
+                                att: r.req_f64("att")? as f32,
+                                limit: r.req_f64("limit")? as f32,
+                                mean_recovery: r.req_f64("mean")? as f32,
+                                std_recovery: r.req_f64("std")? as f32,
+                            });
+                        }
+                        // The checkpoint must describe THIS plan: if the
+                        // script changed between slices the re-derived
+                        // grid no longer matches the saved rows — fail
+                        // the job instead of emitting mixed-grid output.
+                        if done > plan.len() || results.len() != plan.jobs_in_range(0, done) {
+                            bail!(
+                                "sweep checkpoint ({} batches, {} rows) does not match the \
+                                 project's sweep plan ({} batches) — was the script edited \
+                                 mid-job?",
+                                done,
+                                results.len(),
+                                plan.len()
+                            );
+                        }
+                        (done, results)
+                    }
+                    None => (0, Vec::new()),
+                };
+                Ok(JobWork::Sweep {
+                    cfg,
+                    plan,
+                    done,
+                    results,
+                    cost,
+                })
+            }
+            other => bail!("script '{rscript}': unknown task type '{other}'"),
+        }
+    }
+
+    /// Total work units (GA generations / MC batches).
+    pub fn total_units(&self) -> usize {
+        match self {
+            JobWork::Catopt { runner, .. } => runner.max_generations().max(1),
+            JobWork::Sweep { plan, .. } => plan.len().max(1),
+        }
+    }
+
+    /// Units committed so far.
+    pub fn units_done(&self) -> usize {
+        match self {
+            JobWork::Catopt { runner, .. } => runner.generations_run(),
+            JobWork::Sweep { done, .. } => *done,
+        }
+    }
+
+    /// Completion fraction for the autoscaler / status output.
+    pub fn progress(&self) -> f64 {
+        (self.units_done() as f64 / self.total_units() as f64).min(1.0)
+    }
+
+    /// Execute up to `units` work units on the pool, billing virtual
+    /// time against `view` through the workload cost models.
+    pub fn step(&mut self, units: usize, view: &ResourceView, pool: &WorkerPool) -> Result<StepOutcome> {
+        match self {
+            JobWork::Catopt {
+                backend,
+                runner,
+                cost,
+            } => {
+                let backend: &RustBackend = backend;
+                let before = runner.history().len();
+                let mut finished = runner.is_finished();
+                for _ in 0..units {
+                    if finished {
+                        break;
+                    }
+                    finished = runner.step(backend, pool)?;
+                }
+                let mut virtual_s = 0.0;
+                for h in &runner.history()[before..] {
+                    virtual_s += cost::catopt_generation_s(h.evaluations, cost, view);
+                    virtual_s += cost::catopt_polish_s(h.grad_evaluations, cost, view);
+                }
+                Ok(StepOutcome {
+                    virtual_s,
+                    finished,
+                })
+            }
+            JobWork::Sweep {
+                plan,
+                done,
+                results,
+                cost,
+                ..
+            } => {
+                let to = done.saturating_add(units).min(plan.len());
+                let jobs_run = plan.jobs_in_range(*done, to);
+                let out = plan.run_range(&RustSweep, RUST_SWEEP_S, RUST_SWEEP_K, *done, to, pool)?;
+                results.extend(out);
+                *done = to;
+                Ok(StepOutcome {
+                    virtual_s: cost::sweep_total_s(jobs_run, cost, view),
+                    finished: *done >= plan.len(),
+                })
+            }
+        }
+    }
+
+    /// Serialize the committed state (the checkpoint document).
+    pub fn snapshot(&self) -> Json {
+        match self {
+            JobWork::Catopt { runner, .. } => {
+                let mut j = Json::obj();
+                j.set("kind", Json::str("catopt"));
+                j.set("ga", runner.snapshot());
+                j
+            }
+            JobWork::Sweep {
+                cfg, done, results, ..
+            } => {
+                let mut j = Json::obj();
+                j.set("kind", Json::str("mc_sweep"));
+                j.set("config", sweep_fingerprint(cfg));
+                j.set("done", Json::num(*done as f64));
+                j.set(
+                    "results",
+                    Json::Arr(
+                        results
+                            .iter()
+                            .map(|r| {
+                                Json::from_pairs(vec![
+                                    ("att", Json::num(r.att as f64)),
+                                    ("limit", Json::num(r.limit as f64)),
+                                    ("mean", Json::num(r.mean_recovery as f64)),
+                                    ("std", Json::num(r.std_recovery as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                );
+                j
+            }
+        }
+    }
+
+    /// Result files for `results/<runname>/` (paper scenario 1:
+    /// aggregated on the master) plus the run summary — built by the
+    /// same `analytics::script` helpers the engine uses, so a queued
+    /// job's files match an `ec2runoncluster` of the same script.
+    pub fn finish(&self, compute_s: f64) -> Result<(Vec<(String, Vec<u8>)>, Json)> {
+        match self {
+            JobWork::Catopt { runner, .. } => {
+                Ok(catopt_result_files(&runner.result(), compute_s))
+            }
+            JobWork::Sweep { cfg, results, .. } => {
+                let csv = sweep_csv(results);
+                let summary =
+                    sweep_summary(cfg, results, RUST_SWEEP_S, RUST_SWEEP_K, compute_s)?;
+                Ok((
+                    vec![
+                        ("sweep.csv".into(), csv.into_bytes()),
+                        (
+                            "summary.json".into(),
+                            summary.to_string_pretty().into_bytes(),
+                        ),
+                    ],
+                    summary,
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::NodeSpec;
+    use crate::simcloud::{NetworkModel, SimParams};
+
+    fn view(nodes: usize, cores: usize) -> ResourceView {
+        let ns: Vec<NodeSpec> = (0..nodes)
+            .map(|i| NodeSpec {
+                name: format!("n{i}"),
+                cores,
+                mem_gb: 34.2,
+                core_speed: 0.88,
+            })
+            .collect();
+        ResourceView {
+            assignment: (0..nodes * cores).map(|p| p % nodes).collect(),
+            nodes: ns,
+            net: NetworkModel::new(SimParams::default()),
+            resource_name: "test".into(),
+            real_threads: Some(1),
+        }
+    }
+
+    fn catopt_project() -> Vfs {
+        let mut v = Vfs::new();
+        let data = CatBondData::generate(5, 24, 96);
+        for (name, bytes) in data.to_files() {
+            v.write(&format!("proj/{name}"), bytes);
+        }
+        v.write(
+            "proj/catopt.json",
+            br#"{"type":"catopt","pop_size":16,"max_generations":6,"seed":3,"bfgs_every":3}"#
+                .to_vec(),
+        );
+        v
+    }
+
+    fn sweep_project() -> Vfs {
+        let mut v = Vfs::new();
+        v.write(
+            "proj/sweep.json",
+            br#"{"type":"mc_sweep","n_jobs":40,"seed":21}"#.to_vec(),
+        );
+        v
+    }
+
+    fn run_to_completion(project: &Vfs, rscript: &str, cut_every: Option<usize>) -> Json {
+        // Execute with (optionally) a checkpoint round-trip between
+        // every slice — the worst-case interruption pattern.
+        let pool = WorkerPool::serial();
+        let view = view(2, 4);
+        let mut checkpoint: Option<Json> = None;
+        let mut compute_s = 0.0;
+        loop {
+            let mut work =
+                JobWork::from_project(project, "proj", rscript, checkpoint.as_ref(), &pool)
+                    .unwrap();
+            let out = work.step(cut_every.unwrap_or(usize::MAX), &view, &pool).unwrap();
+            compute_s += out.virtual_s;
+            if out.finished {
+                let (files, summary) = work.finish(compute_s).unwrap();
+                assert!(!files.is_empty());
+                return summary;
+            }
+            // Serialize through text, like a real checkpoint shipment.
+            let wire = work.snapshot().to_string_compact();
+            checkpoint = Some(Json::parse(&wire).unwrap());
+        }
+    }
+
+    #[test]
+    fn catopt_interrupted_every_slice_is_bit_identical() {
+        let v = catopt_project();
+        let clean = run_to_completion(&v, "catopt.json", None);
+        let cut = run_to_completion(&v, "catopt.json", Some(1));
+        assert_eq!(
+            clean.to_string_compact(),
+            cut.to_string_compact(),
+            "resume-from-checkpoint must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn sweep_interrupted_every_slice_is_bit_identical() {
+        let v = sweep_project();
+        let clean = run_to_completion(&v, "sweep.json", None);
+        let cut = run_to_completion(&v, "sweep.json", Some(1));
+        assert_eq!(clean.to_string_compact(), cut.to_string_compact());
+    }
+
+    #[test]
+    fn progress_advances_and_saturates() {
+        let v = sweep_project();
+        let pool = WorkerPool::serial();
+        let mut work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+        assert_eq!(work.progress(), 0.0);
+        let out = work.step(usize::MAX, &view(1, 4), &pool).unwrap();
+        assert!(out.finished);
+        assert_eq!(work.progress(), 1.0);
+        assert!(out.virtual_s > 0.0);
+    }
+
+    #[test]
+    fn mid_job_script_or_data_edit_is_rejected_on_resume() {
+        let pool = WorkerPool::serial();
+        // Sweep: a seed edit between slices re-derives a different
+        // grid — the fingerprint check must refuse the checkpoint.
+        let mut v = sweep_project();
+        let work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+        let ck = work.snapshot();
+        v.write(
+            "proj/sweep.json",
+            br#"{"type":"mc_sweep","n_jobs":40,"seed":99}"#.to_vec(),
+        );
+        let err = JobWork::from_project(&v, "proj", "sweep.json", Some(&ck), &pool);
+        assert!(
+            err.unwrap_err().to_string().contains("edited mid-job"),
+            "seed edit must be rejected"
+        );
+
+        // Catopt: data files replaced with a different dimensionality —
+        // the dims check must refuse the checkpoint, not panic later.
+        let mut v = catopt_project();
+        let work = JobWork::from_project(&v, "proj", "catopt.json", None, &pool).unwrap();
+        let ck = work.snapshot();
+        let smaller = CatBondData::generate(5, 16, 64);
+        for (name, bytes) in smaller.to_files() {
+            v.write(&format!("proj/{name}"), bytes);
+        }
+        let err = JobWork::from_project(&v, "proj", "catopt.json", Some(&ck), &pool);
+        assert!(
+            err.unwrap_err().to_string().contains("dim"),
+            "dimension change must be rejected"
+        );
+    }
+
+    #[test]
+    fn unknown_script_type_is_rejected() {
+        let mut v = Vfs::new();
+        v.write("proj/x.json", br#"{"type":"quantum"}"#.to_vec());
+        let pool = WorkerPool::serial();
+        assert!(JobWork::from_project(&v, "proj", "x.json", None, &pool).is_err());
+    }
+}

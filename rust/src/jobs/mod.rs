@@ -1,0 +1,735 @@
+//! The multi-tenant job platform: priority queue + elastic autoscaled
+//! fleet + spot capacity + checkpointed execution.
+//!
+//! The paper's P2RAC runs one Analyst's script at a time on a
+//! statically sized cluster (`ec2runoncluster` blocks until results
+//! land). This subsystem turns the same coordinator into a platform:
+//! many Analysts submit GA/MC jobs (`ec2submitjob`), a priority queue
+//! orders them, an autoscaler keeps a fleet of clusters matched to
+//! queue depth (billed through the centi-cent ledger), and jobs
+//! execute as **checkpointed slices** so that spot interruptions cost
+//! a slice of work, never a job — a resumed job is bit-identical to an
+//! uninterrupted one (see `jobs::checkpoint`).
+//!
+//! Execution is discrete-event on the virtual clock: numerics run
+//! eagerly when a slice is dispatched (results cannot depend on
+//! virtual time), while the slice's *duration* — project sync, compute
+//! on the cluster's scheduled slave processes, checkpoint shipment,
+//! result gather — is an event on the timeline. The scheduler advances
+//! the clock event to event, scanning each gap for spot interruptions
+//! (`jobs::spot`); an interruption discards the in-flight slice,
+//! reclaims the cluster mid-window, and requeues the job from its last
+//! committed checkpoint. Between slices the highest-priority pending
+//! job wins the freed cluster, so priorities preempt at checkpoint
+//! granularity.
+
+pub mod autoscaler;
+pub mod checkpoint;
+pub mod queue;
+pub mod spot;
+
+pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleEvent, ScalePolicy};
+pub use checkpoint::{JobWork, StepOutcome};
+pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority};
+
+use crate::analytics::pool::WorkerPool;
+use crate::coordinator::engine::ResourceView;
+use crate::coordinator::scheduler::{self, NodeSpec};
+use crate::coordinator::Session;
+use crate::datasync::{sync_dir, Protocol, DEFAULT_BLOCK_LEN};
+use crate::simcloud::{instance_type, Link, SpanCategory};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// One cluster of the elastic fleet.
+#[derive(Clone, Debug)]
+pub struct FleetCluster {
+    pub name: String,
+    /// Job whose slice is executing on this cluster, if any.
+    pub running: Option<JobId>,
+}
+
+/// An in-flight slice: the numerics already ran; this is its
+/// completion event on the virtual timeline. If a spot interruption
+/// lands before `at_s`, the event is discarded — the slice's work is
+/// lost and the job resumes from its last committed checkpoint, which
+/// reproduces the same numbers.
+struct SliceEnd {
+    at_s: f64,
+    from_s: f64,
+    job: JobId,
+    cluster: String,
+    /// State to commit if the slice survives.
+    snapshot: Json,
+    progress: f64,
+    virtual_s: f64,
+    finished: bool,
+    /// A `FaultPlan` exec failure hit this slice: commit nothing.
+    failed: bool,
+    files: Vec<(String, Vec<u8>)>,
+    summary: Json,
+}
+
+/// FNV-1a digest of a result file set — the bit-identity fingerprint
+/// used to compare a job's output across capacity/interruption
+/// histories.
+pub fn files_digest(files: &[(String, Vec<u8>)]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for (name, bytes) in files {
+        eat(name.as_bytes());
+        eat(&[0]);
+        eat(bytes);
+        eat(&[0xFF]);
+    }
+    h
+}
+
+fn project_name(projectdir: &str) -> String {
+    projectdir
+        .trim_end_matches('/')
+        .rsplit('/')
+        .next()
+        .unwrap_or(projectdir)
+        .to_string()
+}
+
+fn remote_project_dir(projectdir: &str) -> String {
+    format!("root/{}", project_name(projectdir))
+}
+
+fn local_results_dir(projectdir: &str) -> String {
+    let base = projectdir.trim_end_matches('/');
+    match base.rsplit_once('/') {
+        Some((parent, name)) => format!("{parent}/{name}_results"),
+        None => format!("{base}_results"),
+    }
+}
+
+/// The platform scheduler.
+pub struct JobScheduler {
+    pub queue: JobQueue,
+    pub autoscaler: Autoscaler,
+    pub fleet: Vec<FleetCluster>,
+    /// Work units (GA generations / MC batches) per slice — the
+    /// checkpoint cadence. Smaller = less work lost per interruption,
+    /// more checkpoint shipping.
+    pub slice_units: usize,
+    slices: Vec<SliceEnd>,
+    scanned_to: f64,
+    /// Spot interruptions delivered to running slices.
+    pub interruptions_delivered: usize,
+    pub log: Vec<String>,
+}
+
+impl JobScheduler {
+    pub fn new(cfg: AutoscalerConfig) -> Self {
+        Self {
+            queue: JobQueue::new(),
+            autoscaler: Autoscaler::new(cfg),
+            fleet: Vec::new(),
+            slice_units: 2,
+            slices: Vec::new(),
+            scanned_to: 0.0,
+            interruptions_delivered: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// Submit a job at the current virtual time.
+    pub fn submit(&mut self, s: &Session, spec: JobSpec) -> JobId {
+        self.queue.submit(spec, s.cloud.clock.now_s())
+    }
+
+    /// Drop fleet entries whose cluster no longer exists in the
+    /// session (e.g. terminated out-of-band between CLI invocations).
+    pub fn prune_fleet(&mut self, s: &Session) {
+        self.fleet.retain(|c| s.clusters_cfg.contains(&c.name));
+    }
+
+    /// Drain the queue: autoscale, dispatch, and process slice events
+    /// until every job is Completed or Failed. Returns when idle; the
+    /// fleet is left at the autoscaler's floor (use
+    /// [`JobScheduler::shutdown_fleet`] to release and bill it).
+    pub fn run_until_idle(&mut self, s: &mut Session) -> Result<()> {
+        self.scanned_to = self.scanned_to.max(s.cloud.clock.now_s());
+        loop {
+            let pending = self.queue.pending();
+            if pending == 0 && self.slices.is_empty() {
+                break;
+            }
+            self.autoscaler
+                .reconcile(s, &mut self.fleet, pending, self.queue.running())?;
+            self.dispatch_ready(s)?;
+
+            if self.slices.is_empty() {
+                if self.queue.pending() > 0 {
+                    bail!(
+                        "{} job(s) pending but the autoscaler provides no capacity \
+                         (max_clusters = {})",
+                        self.queue.pending(),
+                        self.autoscaler.cfg.max_clusters
+                    );
+                }
+                continue; // dispatch failed the remaining jobs
+            }
+
+            // Earliest slice-completion event.
+            let (idx, at) = self
+                .slices
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.at_s.partial_cmp(&b.1.at_s).unwrap())
+                .map(|(i, e)| (i, e.at_s))
+                .unwrap();
+            let now = s.cloud.clock.now_s();
+            let horizon = at.max(now);
+
+            // Any spot interruption in the gap outranks the event.
+            let busy: Vec<String> = self.slices.iter().map(|e| e.cluster.clone()).collect();
+            if let Some((cname, t_int)) =
+                spot::next_interruption(s, &busy, self.scanned_to, horizon)
+            {
+                let now = s.cloud.clock.now_s();
+                if t_int > now {
+                    s.cloud.clock.advance(t_int - now);
+                }
+                self.scanned_to = t_int;
+                self.handle_interruption(s, &cname)?;
+                continue;
+            }
+            self.scanned_to = horizon;
+            if at > now {
+                s.cloud.clock.advance(at - now);
+            }
+            let ev = self.slices.swap_remove(idx);
+            self.complete_slice(s, ev)?;
+        }
+        Ok(())
+    }
+
+    /// Terminate every fleet cluster (bills their usage). Refuses with
+    /// slices in flight.
+    pub fn shutdown_fleet(&mut self, s: &mut Session) -> Result<Vec<String>> {
+        if !self.slices.is_empty() {
+            bail!("cannot shut down the fleet with slices in flight");
+        }
+        let mut released = Vec::new();
+        for c in std::mem::take(&mut self.fleet) {
+            s.terminate_cluster(Some(&c.name), true)?;
+            released.push(c.name);
+        }
+        Ok(released)
+    }
+
+    /// Status lines for `ec2jobqueue`.
+    pub fn status(&self) -> Vec<String> {
+        let mut out = self.queue.status_lines();
+        out.push(format!(
+            "fleet: {} cluster(s) [{}], {} interruption(s) delivered, {} scale event(s)",
+            self.fleet.len(),
+            self.fleet
+                .iter()
+                .map(|c| c.name.as_str())
+                .collect::<Vec<_>>()
+                .join(", "),
+            self.interruptions_delivered,
+            self.autoscaler.events.len(),
+        ));
+        out
+    }
+
+    // ------------------------------------------------------- internals
+
+    fn dispatch_ready(&mut self, s: &mut Session) -> Result<()> {
+        loop {
+            let Some(slot) = self.fleet.iter().position(|c| c.running.is_none()) else {
+                break;
+            };
+            let Some(jid) = self.queue.next_ready() else {
+                break;
+            };
+            if let Err(e) = self.start_slice(s, jid, slot) {
+                // The job cannot start (bad script, sync error): fail
+                // it and let the loop try the next one.
+                let job = self.queue.get_mut(jid).expect("job exists");
+                job.state = JobState::Failed;
+                job.assigned = None;
+                job.summary = Json::str(format!("failed: {e:#}"));
+                self.log.push(format!("{jid} failed to start: {e:#}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch one slice of `jid` onto fleet slot `slot`: sync the
+    /// project, run `slice_units` work units eagerly, and schedule the
+    /// completion event (sync + compute + checkpoint shipment + — for
+    /// a finishing slice — result gather).
+    fn start_slice(&mut self, s: &mut Session, jid: JobId, slot: usize) -> Result<()> {
+        let cname = self.fleet[slot].name.clone();
+        let now0 = s.cloud.clock.now_s();
+        let entry = s
+            .clusters_cfg
+            .get(&cname)
+            .ok_or_else(|| anyhow!("fleet cluster '{cname}' not in the configuration"))?
+            .clone();
+        let (spec, job_checkpoint, compute_so_far) = {
+            let j = self.queue.get(jid).ok_or_else(|| anyhow!("unknown job {jid}"))?;
+            (j.spec.clone(), j.checkpoint.clone(), j.compute_s)
+        };
+        let mut duration = 0.0;
+
+        // Project sync onto the cluster master (rsync: nearly free when
+        // the project is already there from a previous slice).
+        let dest = remote_project_dir(&spec.projectdir);
+        {
+            let analyst = &s.analyst;
+            let rep = s
+                .cloud
+                .with_instance_fs(&entry.master_id, |fs, net, faults| {
+                    sync_dir(
+                        analyst,
+                        &spec.projectdir,
+                        fs,
+                        &dest,
+                        Protocol::Rsync,
+                        DEFAULT_BLOCK_LEN,
+                        net,
+                        Link::Wan,
+                        faults,
+                    )
+                })?
+                .map_err(|e| anyhow!("project sync to '{cname}': {e}"))?;
+            duration += rep.elapsed_s;
+        }
+
+        // Resource view: the same bynode/byslot construction as
+        // `ec2runoncluster`.
+        let ispec = instance_type(&entry.instance_type)
+            .ok_or_else(|| anyhow!("unknown type in config: {}", entry.instance_type))?;
+        let nodes: Vec<NodeSpec> = entry
+            .all_ids()
+            .iter()
+            .enumerate()
+            .map(|(i, _)| NodeSpec {
+                name: if i == 0 {
+                    format!("{cname}_Master")
+                } else {
+                    format!("{cname}_Worker{i}")
+                },
+                cores: ispec.cores,
+                mem_gb: ispec.mem_gb,
+                core_speed: ispec.core_speed,
+            })
+            .collect();
+        // Numerics, eagerly (they cannot depend on virtual time). The
+        // master's filesystem is borrowed, not cloned — the work owns
+        // everything it needs once constructed.
+        let (work, outcome) = {
+            let project = &s.cloud.instance(&entry.master_id)?.fs;
+            let script = checkpoint::load_script(project, &dest, &spec.rscript)?;
+            let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
+            let nproc = script
+                .get("slaves")
+                .and_then(Json::as_usize)
+                .unwrap_or(total_cores);
+            let assignment = scheduler::schedule(nproc, &nodes, spec.placement);
+            let view = ResourceView {
+                nodes,
+                assignment,
+                net: s.cloud.net.clone(),
+                resource_name: cname.clone(),
+                real_threads: s.threads,
+            };
+            let pool = WorkerPool::from_view(&view);
+            let mut work = JobWork::from_script(
+                project,
+                &dest,
+                &spec.rscript,
+                &script,
+                job_checkpoint.as_ref(),
+                &pool,
+            )?;
+            let outcome = work.step(self.slice_units, &view, &pool)?;
+            (work, outcome)
+        };
+        duration += outcome.virtual_s;
+
+        // An armed worker exec failure kills this slice at its end:
+        // the time is spent, nothing commits.
+        let failed = s.cloud.faults.take_exec_failure();
+
+        let (files, summary) = if outcome.finished && !failed {
+            let (files, summary) = work.finish(compute_so_far + outcome.virtual_s)?;
+            let bytes: u64 = files.iter().map(|(_, b)| b.len() as u64).sum();
+            duration += s.cloud.net.transfer_s(bytes, files.len().max(1), Link::Wan);
+            (files, summary)
+        } else {
+            (Vec::new(), Json::Null)
+        };
+
+        // Checkpoint shipment back to the Analyst site (small, WAN).
+        let snapshot = work.snapshot();
+        duration += s
+            .cloud
+            .net
+            .transfer_s(snapshot.to_string_compact().len() as u64, 1, Link::Wan);
+
+        s.set_cluster_lock(&cname, true)?;
+        {
+            let job = self.queue.get_mut(jid).expect("job exists");
+            job.state = JobState::Running;
+            job.assigned = Some(cname.clone());
+            if job.started_at_s.is_none() {
+                job.started_at_s = Some(now0);
+            }
+        }
+        self.fleet[slot].running = Some(jid);
+        self.slices.push(SliceEnd {
+            at_s: now0 + duration,
+            from_s: now0,
+            job: jid,
+            cluster: cname,
+            snapshot,
+            progress: work.progress(),
+            virtual_s: outcome.virtual_s,
+            finished: outcome.finished,
+            failed,
+            files,
+            summary,
+        });
+        Ok(())
+    }
+
+    /// A slice survived to its completion event: commit the checkpoint
+    /// (or requeue on exec failure), free the cluster, and on a
+    /// finishing slice land the result files.
+    fn complete_slice(&mut self, s: &mut Session, ev: SliceEnd) -> Result<()> {
+        let now = s.cloud.clock.now_s();
+        s.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("{} slice on {}", ev.job, ev.cluster),
+            ev.from_s.min(now),
+        );
+        s.set_cluster_lock(&ev.cluster, false)?;
+        if let Some(c) = self.fleet.iter_mut().find(|c| c.name == ev.cluster) {
+            c.running = None;
+        }
+        let spec = {
+            let job = self
+                .queue
+                .get_mut(ev.job)
+                .ok_or_else(|| anyhow!("unknown job {}", ev.job))?;
+            job.assigned = None;
+            if ev.failed {
+                job.retries += 1;
+                job.state = JobState::Queued;
+                None
+            } else {
+                job.compute_s += ev.virtual_s;
+                job.progress = ev.progress;
+                if ev.finished {
+                    job.state = JobState::Completed;
+                    job.completed_at_s = Some(now);
+                    job.summary = ev.summary;
+                    // The result files + summary carry everything a
+                    // finished job needs; dropping the checkpoint keeps
+                    // the persisted queue small.
+                    job.checkpoint = None;
+                    Some(job.spec.clone())
+                } else {
+                    job.checkpoint = Some(ev.snapshot);
+                    job.state = JobState::Queued;
+                    None
+                }
+            }
+        };
+        if ev.failed {
+            self.log.push(format!(
+                "{} slice failed on {} (worker exec failure); rescheduling from checkpoint",
+                ev.job, ev.cluster
+            ));
+            return Ok(());
+        }
+        if let Some(spec) = spec {
+            // Scenario-1 result placement: aggregated on the master,
+            // fetched to `<projectdir>_results/<runname>/`.
+            let pdir = remote_project_dir(&spec.projectdir);
+            if let Some(entry) = s.clusters_cfg.get(&ev.cluster) {
+                let mid = entry.master_id.clone();
+                if let Ok(fs) = s.cloud.instance_fs_mut(&mid) {
+                    for (rel, bytes) in &ev.files {
+                        fs.write(&format!("{pdir}/results/{}/{rel}", spec.name), bytes.clone());
+                    }
+                }
+            }
+            let local = format!("{}/{}", local_results_dir(&spec.projectdir), spec.name);
+            for (rel, bytes) in &ev.files {
+                s.analyst.write(&format!("{local}/{rel}"), bytes.clone());
+            }
+            self.log
+                .push(format!("{} completed on {}", ev.job, ev.cluster));
+        }
+        Ok(())
+    }
+
+    /// Spot capacity under `cname` was reclaimed: discard the in-flight
+    /// slice, requeue its job from the last committed checkpoint, and
+    /// tear the cluster down (billed with the partial-hour-free rule).
+    fn handle_interruption(&mut self, s: &mut Session, cname: &str) -> Result<()> {
+        if let Some(pos) = self.slices.iter().position(|e| e.cluster == cname) {
+            let ev = self.slices.swap_remove(pos);
+            let job = self
+                .queue
+                .get_mut(ev.job)
+                .ok_or_else(|| anyhow!("unknown job {}", ev.job))?;
+            job.state = JobState::Interrupted;
+            job.interruptions += 1;
+            job.assigned = None;
+            self.log.push(format!(
+                "spot interruption reclaimed {} mid-slice of {}; will resume from checkpoint",
+                cname, ev.job
+            ));
+        }
+        self.fleet.retain(|c| c.name != cname);
+        s.spot_interrupt_cluster(cname)?;
+        self.interruptions_delivered += 1;
+        Ok(())
+    }
+
+    // ----------------------------------------------------- persistence
+
+    /// Persist queue + autoscaler config + fleet membership (in-flight
+    /// slices never persist: `run_until_idle` drains before saving).
+    pub fn to_json(&self) -> Json {
+        let cfg = &self.autoscaler.cfg;
+        let mut c = Json::obj();
+        c.set("min_clusters", Json::num(cfg.min_clusters as f64));
+        c.set("max_clusters", Json::num(cfg.max_clusters as f64));
+        c.set("nodes_per_cluster", Json::num(cfg.nodes_per_cluster as f64));
+        c.set(
+            "max_nodes_per_cluster",
+            Json::num(cfg.max_nodes_per_cluster as f64),
+        );
+        c.set("itype", Json::str(&cfg.itype));
+        c.set("spot", Json::Bool(cfg.spot));
+        c.set("policy", Json::str(cfg.policy.label()));
+        let mut root = Json::obj();
+        root.set("queue", self.queue.to_json());
+        root.set("autoscaler", c);
+        root.set("counter", Json::num(self.autoscaler.counter() as f64));
+        root.set("slice_units", Json::num(self.slice_units as f64));
+        root.set(
+            "fleet",
+            Json::arr_str(self.fleet.iter().map(|c| c.name.clone())),
+        );
+        root.set("scanned_to", Json::num(self.scanned_to));
+        root.set(
+            "interruptions_delivered",
+            Json::num(self.interruptions_delivered as f64),
+        );
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let c = j
+            .get("autoscaler")
+            .ok_or_else(|| anyhow!("jobs state missing autoscaler config"))?;
+        let cfg = AutoscalerConfig {
+            min_clusters: c.req_u64("min_clusters")? as usize,
+            max_clusters: c.req_u64("max_clusters")? as usize,
+            nodes_per_cluster: c.req_u64("nodes_per_cluster")? as usize,
+            max_nodes_per_cluster: c.req_u64("max_nodes_per_cluster")? as usize,
+            itype: c.req_str("itype")?,
+            spot: c.opt_bool("spot", false),
+            policy: ScalePolicy::parse(&c.req_str("policy")?)?,
+        };
+        let mut sched = JobScheduler::new(cfg);
+        sched.queue = JobQueue::from_json(
+            j.get("queue").ok_or_else(|| anyhow!("jobs state missing queue"))?,
+        )?;
+        sched.autoscaler.set_counter(j.req_u64("counter")?);
+        sched.slice_units = (j.req_u64("slice_units")? as usize).max(1);
+        sched.scanned_to = j.req_f64("scanned_to").unwrap_or(0.0);
+        sched.interruptions_delivered =
+            j.get("interruptions_delivered").and_then(Json::as_usize).unwrap_or(0);
+        if let Some(names) = j.get("fleet").and_then(Json::as_arr) {
+            for n in names {
+                if let Some(name) = n.as_str() {
+                    sched.fleet.push(FleetCluster {
+                        name: name.to_string(),
+                        running: None,
+                    });
+                }
+            }
+        }
+        Ok(sched)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytics::CatBondData;
+    use crate::coordinator::{MockEngine, Placement};
+    use crate::simcloud::SimParams;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
+    }
+
+    fn write_sweep_project(s: &mut Session, dir: &str, seed: u64) {
+        s.analyst.write(
+            &format!("{dir}/sweep.json"),
+            format!(r#"{{"type":"mc_sweep","n_jobs":24,"seed":{seed}}}"#).into_bytes(),
+        );
+    }
+
+    fn write_catopt_project(s: &mut Session, dir: &str, seed: u64) {
+        let data = CatBondData::generate(5, 24, 96);
+        for (name, bytes) in data.to_files() {
+            s.analyst.write(&format!("{dir}/{name}"), bytes);
+        }
+        s.analyst.write(
+            &format!("{dir}/catopt.json"),
+            format!(
+                r#"{{"type":"catopt","pop_size":12,"max_generations":4,"seed":{seed},"bfgs_every":2}}"#
+            )
+            .into_bytes(),
+        );
+    }
+
+    fn spec(name: &str, dir: &str, script: &str, prio: Priority) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            projectdir: dir.into(),
+            rscript: script.into(),
+            priority: prio,
+            placement: Placement::ByNode,
+        }
+    }
+
+    #[test]
+    fn single_job_completes_and_lands_results() {
+        let mut s = session();
+        write_sweep_project(&mut s, "proj", 7);
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        let id = js.submit(&s, spec("r1", "proj", "sweep.json", Priority::Normal));
+        js.run_until_idle(&mut s).unwrap();
+        let j = js.queue.get(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert!(j.compute_s > 0.0);
+        assert!((j.progress - 1.0).abs() < 1e-12);
+        assert!(s.analyst.exists("proj_results/r1/sweep.csv"));
+        assert!(s.analyst.exists("proj_results/r1/summary.json"));
+        // Shutdown bills the fleet.
+        let released = js.shutdown_fleet(&mut s).unwrap();
+        assert_eq!(released.len(), 1);
+        assert!(s.cloud.ledger.total_cents() > 0);
+        assert!(s.cloud.live_instances().is_empty());
+    }
+
+    #[test]
+    fn high_priority_job_finishes_before_low_priority_backlog() {
+        let mut s = session();
+        write_sweep_project(&mut s, "proj", 7);
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1, // one cluster: strict serialisation
+            ..Default::default()
+        });
+        let lows: Vec<JobId> = (0..3)
+            .map(|i| js.submit(&s, spec(&format!("low{i}"), "proj", "sweep.json", Priority::Low)))
+            .collect();
+        let hi = js.submit(&s, spec("hi", "proj", "sweep.json", Priority::High));
+        js.run_until_idle(&mut s).unwrap();
+        let hi_done = js.queue.get(hi).unwrap().completed_at_s.unwrap();
+        for l in lows {
+            let l_done = js.queue.get(l).unwrap().completed_at_s.unwrap();
+            assert!(
+                hi_done <= l_done,
+                "high priority ({hi_done}) must not wait for low backlog ({l_done})"
+            );
+        }
+    }
+
+    #[test]
+    fn exec_failure_reschedules_without_corrupting_results() {
+        let mut s = session();
+        write_catopt_project(&mut s, "proj", 3);
+        // Clean reference digest.
+        let clean_digest = {
+            let mut s2 = session();
+            write_catopt_project(&mut s2, "proj", 3);
+            let mut js = JobScheduler::new(AutoscalerConfig {
+                min_clusters: 1,
+                max_clusters: 1,
+                ..Default::default()
+            });
+            js.submit(&s2, spec("r", "proj", "catopt.json", Priority::Normal));
+            js.run_until_idle(&mut s2).unwrap();
+            files_digest(&results_of(&s2, "proj_results/r"))
+        };
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        let id = js.submit(&s, spec("r", "proj", "catopt.json", Priority::Normal));
+        s.cloud.faults.exec_failures = 1;
+        js.run_until_idle(&mut s).unwrap();
+        let j = js.queue.get(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.retries, 1, "the failed slice must have been retried");
+        assert_eq!(
+            files_digest(&results_of(&s, "proj_results/r")),
+            clean_digest,
+            "a rescheduled slice must not change the numbers"
+        );
+    }
+
+    #[test]
+    fn scheduler_state_roundtrips_through_json() {
+        let mut s = session();
+        write_sweep_project(&mut s, "proj", 9);
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 0,
+            max_clusters: 2,
+            spot: true,
+            policy: ScalePolicy::Elastic,
+            ..Default::default()
+        });
+        js.submit(&s, spec("r1", "proj", "sweep.json", Priority::High));
+        let wire = js.to_json().to_string_compact();
+        let back = JobScheduler::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.queue.pending(), 1);
+        assert!(back.autoscaler.cfg.spot);
+        assert_eq!(back.autoscaler.cfg.policy, ScalePolicy::Elastic);
+        assert_eq!(back.autoscaler.cfg.max_clusters, 2);
+    }
+
+    /// Collect the files under an analyst-side results dir, sorted.
+    fn results_of(s: &Session, dir: &str) -> Vec<(String, Vec<u8>)> {
+        let mut files: Vec<(String, Vec<u8>)> = s
+            .analyst
+            .list_dir(dir)
+            .into_iter()
+            .map(|rel| {
+                let bytes = s.analyst.read(&format!("{dir}/{rel}")).unwrap().to_vec();
+                (rel, bytes)
+            })
+            .collect();
+        files.sort();
+        files
+    }
+}

@@ -1,0 +1,397 @@
+//! The multi-tenant priority job queue.
+//!
+//! Many simulated Analysts submit work (`ec2submitjob`); the scheduler
+//! in [`crate::jobs`] drains it onto the elastic fleet. Ordering is
+//! strict priority, FIFO within a priority class; an interrupted job
+//! keeps its original submission order, so a spot interruption never
+//! costs a job its place in line.
+
+use crate::coordinator::Placement;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Job priority class. `Ord`: `Low < Normal < High`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority '{other}' (low | normal | high)"),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+}
+
+/// Queue-wide unique job handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Job lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Waiting for capacity (also: between checkpointed slices).
+    Queued,
+    /// A slice is executing on a cluster right now.
+    Running,
+    /// Spot capacity was reclaimed mid-slice; will resume from the
+    /// last checkpoint on replacement capacity.
+    Interrupted,
+    Completed,
+    Failed,
+}
+
+impl JobState {
+    pub fn label(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Interrupted => "interrupted",
+            JobState::Completed => "completed",
+            JobState::Failed => "failed",
+        }
+    }
+
+    fn parse(s: &str) -> Result<JobState> {
+        Ok(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "interrupted" => JobState::Interrupted,
+            "completed" => JobState::Completed,
+            "failed" => JobState::Failed,
+            other => bail!("unknown job state '{other}'"),
+        })
+    }
+}
+
+/// What an Analyst submits.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Run name — results land in `<projectdir>_results/<name>/`.
+    pub name: String,
+    /// Project directory at the Analyst site.
+    pub projectdir: String,
+    /// Task descriptor inside the project directory.
+    pub rscript: String,
+    pub priority: Priority,
+    /// Slave placement for the job's slices (§3.2.2).
+    pub placement: Placement,
+}
+
+/// One tracked job.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Fraction of work units (GA generations / MC batches) committed
+    /// to a checkpoint so far.
+    pub progress: f64,
+    /// Last committed checkpoint (see `jobs::checkpoint` for the
+    /// format). Conceptually shipped to the Analyst site / S3 after
+    /// every slice; survives any loss of cloud capacity.
+    pub checkpoint: Option<Json>,
+    pub submitted_at_s: f64,
+    pub started_at_s: Option<f64>,
+    pub completed_at_s: Option<f64>,
+    /// Spot interruptions survived.
+    pub interruptions: usize,
+    /// Slice retries after worker exec failures.
+    pub retries: usize,
+    /// Cluster currently executing a slice, if any.
+    pub assigned: Option<String>,
+    /// Billed virtual compute time so far.
+    pub compute_s: f64,
+    /// Machine-readable result summary once completed.
+    pub summary: Json,
+}
+
+/// The queue itself.
+#[derive(Default)]
+pub struct JobQueue {
+    next_id: u64,
+    jobs: BTreeMap<JobId, Job>,
+}
+
+impl JobQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit a job; returns its handle.
+    pub fn submit(&mut self, spec: JobSpec, now_s: f64) -> JobId {
+        self.next_id += 1;
+        let id = JobId(self.next_id);
+        self.jobs.insert(
+            id,
+            Job {
+                id,
+                spec,
+                state: JobState::Queued,
+                progress: 0.0,
+                checkpoint: None,
+                submitted_at_s: now_s,
+                started_at_s: None,
+                completed_at_s: None,
+                interruptions: 0,
+                retries: 0,
+                assigned: None,
+                compute_s: 0.0,
+                summary: Json::Null,
+            },
+        );
+        id
+    }
+
+    /// The next job to dispatch: highest priority first, FIFO (by id)
+    /// within a class. Queued and Interrupted jobs are both ready —
+    /// every dispatch boundary is a checkpoint boundary, so capacity
+    /// always goes to the most important pending work.
+    pub fn next_ready(&self) -> Option<JobId> {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
+            .min_by_key(|j| (std::cmp::Reverse(j.spec.priority), j.id))
+            .map(|j| j.id)
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        self.jobs.get_mut(&id)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    /// Jobs waiting for capacity.
+    pub fn pending(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
+            .count()
+    }
+
+    /// Jobs with a slice in flight.
+    pub fn running(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .count()
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.jobs
+            .values()
+            .all(|j| matches!(j.state, JobState::Completed | JobState::Failed))
+    }
+
+    /// Human-readable status lines (`ec2jobqueue`).
+    pub fn status_lines(&self) -> Vec<String> {
+        self.jobs
+            .values()
+            .map(|j| {
+                format!(
+                    "{}  {:<11} prio={:<6} progress={:>3.0}%  interruptions={} retries={}  {} ({})",
+                    j.id,
+                    j.state.label(),
+                    j.spec.priority.label(),
+                    j.progress * 100.0,
+                    j.interruptions,
+                    j.retries,
+                    j.spec.name,
+                    j.spec.rscript,
+                )
+            })
+            .collect()
+    }
+
+    // ------------------------------------------------------ persistence
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for j in self.jobs.values() {
+            let mut o = Json::obj();
+            o.set("id", Json::num(j.id.0 as f64));
+            o.set("name", Json::str(&j.spec.name));
+            o.set("projectdir", Json::str(&j.spec.projectdir));
+            o.set("rscript", Json::str(&j.spec.rscript));
+            o.set("priority", Json::str(j.spec.priority.label()));
+            o.set(
+                "placement",
+                Json::str(match j.spec.placement {
+                    Placement::ByNode => "bynode",
+                    Placement::BySlot => "byslot",
+                }),
+            );
+            o.set("state", Json::str(j.state.label()));
+            o.set("progress", Json::num(j.progress));
+            o.set(
+                "checkpoint",
+                j.checkpoint.clone().unwrap_or(Json::Null),
+            );
+            o.set("submitted_at_s", Json::num(j.submitted_at_s));
+            o.set(
+                "started_at_s",
+                j.started_at_s.map(Json::num).unwrap_or(Json::Null),
+            );
+            o.set(
+                "completed_at_s",
+                j.completed_at_s.map(Json::num).unwrap_or(Json::Null),
+            );
+            o.set("interruptions", Json::num(j.interruptions as f64));
+            o.set("retries", Json::num(j.retries as f64));
+            o.set("compute_s", Json::num(j.compute_s));
+            o.set("summary", j.summary.clone());
+            arr.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("next_id", Json::num(self.next_id as f64));
+        root.set("jobs", Json::Arr(arr));
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut q = JobQueue {
+            next_id: j.req_u64("next_id")?,
+            jobs: BTreeMap::new(),
+        };
+        for o in j
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("job queue missing jobs array"))?
+        {
+            let id = JobId(o.req_u64("id")?);
+            // A job that was mid-slice when the session ended resumes
+            // from its checkpoint: Running collapses back to Queued.
+            let state = match JobState::parse(&o.req_str("state")?)? {
+                JobState::Running => JobState::Queued,
+                s => s,
+            };
+            q.jobs.insert(
+                id,
+                Job {
+                    id,
+                    spec: JobSpec {
+                        name: o.req_str("name")?,
+                        projectdir: o.req_str("projectdir")?,
+                        rscript: o.req_str("rscript")?,
+                        priority: Priority::parse(&o.req_str("priority")?)?,
+                        placement: match o.req_str("placement")?.as_str() {
+                            "byslot" => Placement::BySlot,
+                            _ => Placement::ByNode,
+                        },
+                    },
+                    state,
+                    progress: o.req_f64("progress")?,
+                    checkpoint: match o.get("checkpoint") {
+                        Some(Json::Null) | None => None,
+                        Some(c) => Some(c.clone()),
+                    },
+                    submitted_at_s: o.req_f64("submitted_at_s")?,
+                    started_at_s: o.get("started_at_s").and_then(Json::as_f64),
+                    completed_at_s: o.get("completed_at_s").and_then(Json::as_f64),
+                    interruptions: o.req_u64("interruptions")? as usize,
+                    retries: o.req_u64("retries")? as usize,
+                    assigned: None,
+                    compute_s: o.req_f64("compute_s")?,
+                    summary: o.get("summary").cloned().unwrap_or(Json::Null),
+                },
+            );
+        }
+        Ok(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, prio: Priority) -> JobSpec {
+        JobSpec {
+            name: name.into(),
+            projectdir: "p".into(),
+            rscript: "sweep.json".into(),
+            priority: prio,
+            placement: Placement::ByNode,
+        }
+    }
+
+    #[test]
+    fn priority_then_fifo_ordering() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let b = q.submit(spec("b", Priority::High), 1.0);
+        let c = q.submit(spec("c", Priority::High), 2.0);
+        let d = q.submit(spec("d", Priority::Low), 3.0);
+        assert_eq!(q.next_ready(), Some(b));
+        q.get_mut(b).unwrap().state = JobState::Running;
+        assert_eq!(q.next_ready(), Some(c));
+        q.get_mut(c).unwrap().state = JobState::Completed;
+        assert_eq!(q.next_ready(), Some(a));
+        q.get_mut(a).unwrap().state = JobState::Failed;
+        assert_eq!(q.next_ready(), Some(d));
+        assert_eq!(q.pending(), 1);
+        assert_eq!(q.running(), 1);
+        assert!(!q.all_done());
+    }
+
+    #[test]
+    fn interrupted_jobs_keep_their_place() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let b = q.submit(spec("b", Priority::Normal), 1.0);
+        q.get_mut(a).unwrap().state = JobState::Interrupted;
+        // FIFO by id: the interrupted older job still goes first.
+        assert_eq!(q.next_ready(), Some(a));
+        let _ = b;
+    }
+
+    #[test]
+    fn queue_roundtrips_through_json() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::High), 5.0);
+        q.get_mut(a).unwrap().checkpoint = Some(Json::from_pairs(vec![(
+            "kind",
+            Json::str("mc_sweep"),
+        )]));
+        q.get_mut(a).unwrap().state = JobState::Running; // mid-slice
+        let b = q.submit(spec("b", Priority::Low), 6.0);
+        q.get_mut(b).unwrap().state = JobState::Completed;
+        let wire = q.to_json().to_string_compact();
+        let back = JobQueue::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        // Running collapses to Queued (resume from checkpoint).
+        assert_eq!(back.get(a).unwrap().state, JobState::Queued);
+        assert!(back.get(a).unwrap().checkpoint.is_some());
+        assert_eq!(back.get(b).unwrap().state, JobState::Completed);
+        // Fresh submissions continue the id sequence.
+        let mut back = back;
+        let c = back.submit(spec("c", Priority::Normal), 7.0);
+        assert!(c > b);
+    }
+}

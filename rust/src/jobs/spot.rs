@@ -1,0 +1,138 @@
+//! Glue between the spot market and the job scheduler: decide *when*
+//! running spot capacity is reclaimed, and hand the teardown to
+//! `Session::spot_interrupt_cluster`.
+//!
+//! Two interruption sources, both deterministic:
+//! * the market's price path (`SpotMarket::first_interruption`) — a
+//!   cluster whose hourly price exceeds its bid at an hour boundary
+//!   inside the scan window is reclaimed at that boundary;
+//! * `FaultPlan::spot_interruptions` — tests and benches arm a count
+//!   and each armed interruption fires at the midpoint of the next
+//!   scan window that has spot capacity in flight, independent of the
+//!   price path.
+
+use crate::coordinator::Session;
+use crate::simcloud::Lifecycle;
+
+/// Spot clusters among `clusters`, with their type, bid and the
+/// master's launch time (a cluster cannot be reclaimed by a price
+/// spike from an hour that elapsed before it existed).
+fn spot_clusters(s: &Session, clusters: &[String]) -> Vec<(String, String, u64, f64)> {
+    let mut out = Vec::new();
+    for name in clusters {
+        let Some(entry) = s.clusters_cfg.get(name) else {
+            continue;
+        };
+        let Ok(inst) = s.cloud.instance(&entry.master_id) else {
+            continue;
+        };
+        if let Lifecycle::Spot {
+            bid_centi_cents_hour,
+        } = inst.lifecycle
+        {
+            out.push((
+                name.clone(),
+                inst.itype.api_name.to_string(),
+                bid_centi_cents_hour,
+                inst.launched_at_s,
+            ));
+        }
+    }
+    out
+}
+
+/// Earliest spot interruption hitting any of `clusters` in `(t0, t1]`,
+/// or `None`. Per cluster the window is clamped to its launch time.
+/// Consumes at most one armed `FaultPlan` interruption.
+pub fn next_interruption(
+    s: &mut Session,
+    clusters: &[String],
+    t0: f64,
+    t1: f64,
+) -> Option<(String, f64)> {
+    if t1 <= t0 {
+        return None;
+    }
+    let spot = spot_clusters(s, clusters);
+    if spot.is_empty() {
+        return None;
+    }
+    // Armed interruptions outrank the market (they exist so tests can
+    // force a reclaim regardless of the price path).
+    if s.cloud.faults.take_spot_interruption() {
+        let (name, _, _, launched) = &spot[0];
+        let at = (t0 + (t1 - t0) * 0.5).max(*launched);
+        return Some((name.clone(), at));
+    }
+    let mut best: Option<(String, f64)> = None;
+    for (name, itype, bid, launched) in spot {
+        if let Some(at) = s.cloud.spot.first_interruption(&itype, bid, t0.max(launched), t1) {
+            let earlier = match &best {
+                Some((_, t)) => at < *t,
+                None => true,
+            };
+            if earlier {
+                best = Some((name, at));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CreateClusterOpts, MockEngine, Session};
+    use crate::simcloud::SimParams;
+
+    fn session_with_cluster(spot: bool) -> (Session, String) {
+        let mut s = Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)));
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(2),
+            spot,
+            ..Default::default()
+        })
+        .unwrap();
+        (s, "c".to_string())
+    }
+
+    #[test]
+    fn on_demand_clusters_are_never_interrupted() {
+        let (mut s, c) = session_with_cluster(false);
+        s.cloud.faults.spot_interruptions = 1;
+        s.cloud.spot.spike_prob = 1.0;
+        assert_eq!(
+            next_interruption(&mut s, &[c], 0.0, 3600.0 * 100.0),
+            None
+        );
+        // The armed interruption was NOT consumed (no spot capacity).
+        assert_eq!(s.cloud.faults.spot_interruptions, 1);
+    }
+
+    #[test]
+    fn armed_interruption_fires_mid_window() {
+        let (mut s, c) = session_with_cluster(true);
+        s.cloud.faults.spot_interruptions = 1;
+        let hit = next_interruption(&mut s, &[c.clone()], 100.0, 300.0).unwrap();
+        assert_eq!(hit.0, c);
+        assert_eq!(hit.1, 200.0);
+        assert_eq!(s.cloud.faults.spot_interruptions, 0);
+    }
+
+    #[test]
+    fn market_spike_reclaims_at_hour_boundary() {
+        let (mut s, c) = session_with_cluster(true);
+        s.cloud.spot.spike_prob = 1.0; // every hour spikes above any od bid
+        let now = s.cloud.clock.now_s();
+        let hit = next_interruption(&mut s, &[c.clone()], now, now + 2.0 * 3600.0).unwrap();
+        assert_eq!(hit.0, c);
+        assert!(hit.1 > now && hit.1 % 3600.0 == 0.0);
+        // A price path that never spikes leaves the fleet alone.
+        s.cloud.spot.spike_prob = 0.0;
+        assert_eq!(
+            next_interruption(&mut s, &[c], now, now + 100.0 * 3600.0),
+            None
+        );
+    }
+}

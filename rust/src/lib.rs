@@ -13,8 +13,13 @@
 //! Architecture (see DESIGN.md):
 //! * **L3 (this crate)** — coordinator: resource/data/execution managers,
 //!   bynode/byslot scheduler, rsync-algorithm data sync, the simulated
-//!   EC2/EBS/S3 substrate, and the analytics engine (rgenoud-style GA +
-//!   Monte-Carlo sweep) that plays the role of the Analyst's R scripts.
+//!   EC2/EBS/S3 substrate (with a deterministic spot-instance market),
+//!   and the analytics engine (rgenoud-style GA + Monte-Carlo sweep)
+//!   that plays the role of the Analyst's R scripts. On top of the
+//!   coordinator, the `jobs` subsystem turns the one-shot session into
+//!   a multi-tenant platform: a priority job queue, an elastic
+//!   autoscaled fleet, and checkpointed execution that survives spot
+//!   interruptions bit-identically.
 //! * **L2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text at build time.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`), fused into the
@@ -26,6 +31,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod datasync;
+pub mod jobs;
 pub mod runtime;
 pub mod simcloud;
 pub mod util;

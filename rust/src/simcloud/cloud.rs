@@ -7,11 +7,12 @@
 
 use super::clock::Clock;
 use super::ebs::{Snapshot, Volume, VolumeState};
-use super::ec2::{instance_type, Ami, Instance, InstanceState};
+use super::ec2::{instance_type, Ami, Instance, InstanceState, Lifecycle};
 use super::faults::FaultPlan;
 use super::network::NetworkModel;
 use super::pricing::Ledger;
 use super::s3::S3;
+use super::spot::SpotMarket;
 use super::timing::SimParams;
 use super::vfs::Vfs;
 use crate::util::ids::IdFactory;
@@ -67,6 +68,8 @@ pub struct SimCloud {
     pub s3: S3,
     pub ledger: Ledger,
     pub faults: FaultPlan,
+    /// Deterministic spot price path + interruption source.
+    pub spot: SpotMarket,
     params: SimParams,
     ids: IdFactory,
     region: String,
@@ -101,6 +104,7 @@ impl SimCloud {
             s3: S3::new(),
             ledger: Ledger::new(),
             faults: FaultPlan::none(),
+            spot: SpotMarket::default(),
             params,
             ids,
             region: "us-east-1".to_string(),
@@ -309,15 +313,29 @@ impl SimCloud {
 
     // ----------------------------------------------------------- instances
 
-    /// Launch a batch of `n` instances (one AWS RunInstances call).
-    /// Advances the clock by the batch boot time; installs `extra_libs`
-    /// (the rlibs config file) on every instance.
+    /// Launch a batch of `n` on-demand instances (one AWS RunInstances
+    /// call). Advances the clock by the batch boot time; installs
+    /// `extra_libs` (the rlibs config file) on every instance.
     pub fn run_instances(
         &mut self,
         n: usize,
         type_name: &str,
         ami_id: &str,
         extra_libs: &[String],
+    ) -> Result<Vec<String>, CloudError> {
+        self.run_instances_as(n, type_name, ami_id, extra_libs, Lifecycle::OnDemand)
+    }
+
+    /// Launch a batch with an explicit purchase model (spot requests
+    /// carry the Analyst's bid; interruptions and billing then follow
+    /// the market's price path).
+    pub fn run_instances_as(
+        &mut self,
+        n: usize,
+        type_name: &str,
+        ami_id: &str,
+        extra_libs: &[String],
+        lifecycle: Lifecycle,
     ) -> Result<Vec<String>, CloudError> {
         let itype = instance_type(type_name)
             .ok_or_else(|| CloudError::UnknownInstanceType(type_name.to_string()))?;
@@ -356,6 +374,7 @@ impl SimCloud {
                     nfs_mount_from: None,
                     fs: Vfs::new(),
                     installed_libs: libs,
+                    lifecycle,
                     locked: false,
                     launched_at_s: self.clock.now_s(),
                     terminated_at_s: None,
@@ -484,33 +503,70 @@ impl SimCloud {
                 return Err(CloudError::Locked(id.clone()));
             }
         }
-        let now_before = self.clock.now_s();
         self.clock.advance(self.params.terminate_s);
         let end = self.clock.now_s();
-        let _ = now_before;
         for id in ids {
-            // Detach any volume (without extra per-instance time).
-            let vol = self.instances.get(id).and_then(|i| i.attached_volume.clone());
-            if let Some(v) = vol {
-                if let Some(volume) = self.volumes.get_mut(&v) {
-                    volume.state = VolumeState::Available;
-                    volume.attached_to = None;
-                }
-            }
-            let i = self.instances.get_mut(id).unwrap();
-            i.attached_volume = None;
-            i.nfs_mount_from = None;
-            i.state = InstanceState::Terminated;
-            i.terminated_at_s = Some(end);
-            let (iid, api, price, start) = (
-                i.id.clone(),
-                i.itype.api_name,
-                i.itype.price_cents_hour,
-                i.launched_at_s,
-            );
-            self.ledger.bill_instance(&iid, api, price, start, end);
+            self.release_instance(id, end, false);
         }
         Ok(())
+    }
+
+    /// The provider reclaims a batch of spot instances (market price
+    /// exceeded the bid, or a `FaultPlan`-armed interruption). Unlike
+    /// [`terminate_instances`] this ignores locks — AWS does not ask —
+    /// and bills with the interrupted-partial-hour-free rule. The
+    /// caller (jobs scheduler) decides when on the timeline this
+    /// happens; no clock advance here.
+    pub fn spot_interrupt_instances(&mut self, ids: &[String]) -> Result<(), CloudError> {
+        for id in ids {
+            let i = self.instance(id)?;
+            if !i.is_live() {
+                return Err(CloudError::NotRunning(id.clone()));
+            }
+        }
+        let end = self.clock.now_s();
+        for id in ids {
+            self.release_instance(id, end, true);
+        }
+        Ok(())
+    }
+
+    /// Shared teardown: detach volume, flip state, bill by lifecycle.
+    fn release_instance(&mut self, id: &str, end: f64, interrupted: bool) {
+        // Detach any volume (without extra per-instance time).
+        let vol = self.instances.get(id).and_then(|i| i.attached_volume.clone());
+        if let Some(v) = vol {
+            if let Some(volume) = self.volumes.get_mut(&v) {
+                volume.state = VolumeState::Available;
+                volume.attached_to = None;
+            }
+        }
+        let i = self.instances.get_mut(id).unwrap();
+        i.attached_volume = None;
+        i.nfs_mount_from = None;
+        i.state = InstanceState::Terminated;
+        i.terminated_at_s = Some(end);
+        i.locked = false;
+        let (iid, api, price, start, lifecycle) = (
+            i.id.clone(),
+            i.itype.api_name,
+            i.itype.price_cents_hour,
+            i.launched_at_s,
+            i.lifecycle,
+        );
+        match lifecycle {
+            Lifecycle::OnDemand => {
+                self.ledger.bill_instance(&iid, api, price, start, end);
+            }
+            Lifecycle::Spot {
+                bid_centi_cents_hour,
+            } => {
+                let cc =
+                    self.spot
+                        .cost_centi_cents(api, start, end, interrupted, bid_centi_cents_hour);
+                self.ledger.bill_spot_instance(&iid, api, cc, interrupted);
+            }
+        }
     }
 }
 
@@ -547,6 +603,15 @@ impl SimCloud {
             );
             o.set("fs", i.fs.to_json());
             o.set("libs", Json::arr_str(i.installed_libs.clone()));
+            o.set(
+                "spot_bid",
+                match i.lifecycle {
+                    Lifecycle::OnDemand => Json::Null,
+                    Lifecycle::Spot { bid_centi_cents_hour } => {
+                        Json::num(bid_centi_cents_hour as f64)
+                    }
+                },
+            );
             o.set("locked", Json::Bool(i.locked));
             o.set("launched_at_s", Json::num(i.launched_at_s));
             o.set("description", Json::str(&i.description));
@@ -677,6 +742,12 @@ impl SimCloud {
                     nfs_mount_from: o.opt_str("nfs_from"),
                     fs: Vfs::from_json(o.get("fs").unwrap_or(&Json::obj()))?,
                     installed_libs: libs,
+                    lifecycle: match o.get("spot_bid").and_then(Json::as_u64) {
+                        Some(bid) => Lifecycle::Spot {
+                            bid_centi_cents_hour: bid,
+                        },
+                        None => Lifecycle::OnDemand,
+                    },
                     locked: o.opt_bool("locked", false),
                     launched_at_s: o.req_f64("launched_at_s")?,
                     terminated_at_s: None,
@@ -862,6 +933,101 @@ mod tests {
         assert!(c.find_by_name("hpc_instance").is_some());
         c.terminate_instances(&ids).unwrap();
         assert!(c.find_by_name("hpc_instance").is_none());
+    }
+
+    #[test]
+    fn spot_instances_bill_at_market_rates() {
+        let mut c = cloud();
+        c.spot.spike_prob = 0.0; // spike-free path: every hour is ~30% of on-demand
+        let ami = c.default_ami(false).id.clone();
+        let bid = 90 * 100; // on-demand price of m2.2xlarge
+        let ids = c
+            .run_instances_as(
+                2,
+                "m2.2xlarge",
+                &ami,
+                &[],
+                Lifecycle::Spot {
+                    bid_centi_cents_hour: bid,
+                },
+            )
+            .unwrap();
+        assert!(c.instance(&ids[0]).unwrap().is_spot());
+        c.clock.advance(2.0 * 3600.0);
+        c.terminate_instances(&ids).unwrap();
+        let spot_total = c.ledger.total_centi_cents();
+        // The same usage on demand: 2 instances x >=3 started hours x 90c.
+        let mut od = cloud();
+        let ami2 = od.default_ami(false).id.clone();
+        let ids2 = od.run_instances(2, "m2.2xlarge", &ami2, &[]).unwrap();
+        od.clock.advance(2.0 * 3600.0);
+        od.terminate_instances(&ids2).unwrap();
+        assert!(
+            spot_total < od.ledger.total_centi_cents(),
+            "spot {spot_total} must undercut on-demand {}",
+            od.ledger.total_centi_cents()
+        );
+    }
+
+    #[test]
+    fn spot_interruption_ignores_locks_and_frees_partial_hour() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        let ids = c
+            .run_instances_as(
+                1,
+                "m2.2xlarge",
+                &ami,
+                &[],
+                Lifecycle::Spot {
+                    bid_centi_cents_hour: 1,
+                },
+            )
+            .unwrap();
+        c.set_lock(&ids[0], true).unwrap();
+        let launch = c.instance(&ids[0]).unwrap().launched_at_s;
+        c.clock.advance(1800.0); // interrupted mid-first-hour
+        c.spot_interrupt_instances(&ids).unwrap();
+        let i = c.instance(&ids[0]).unwrap();
+        assert_eq!(i.state, InstanceState::Terminated);
+        // Provider interruption within the first hour bills nothing.
+        let billed: u64 = c
+            .ledger
+            .items()
+            .iter()
+            .filter(|it| it.resource_id == ids[0])
+            .map(|it| it.centi_cents)
+            .sum();
+        assert_eq!(
+            billed,
+            c.spot
+                .cost_centi_cents("m2.2xlarge", launch, launch + 1800.0, true, 1)
+        );
+    }
+
+    #[test]
+    fn spot_lifecycle_survives_persistence() {
+        let mut c = cloud();
+        let ami = c.default_ami(false).id.clone();
+        c.run_instances_as(
+            1,
+            "m2.2xlarge",
+            &ami,
+            &[],
+            Lifecycle::Spot {
+                bid_centi_cents_hour: 4321,
+            },
+        )
+        .unwrap();
+        let j = c.to_json();
+        let back = SimCloud::from_json(SimParams::default(), &j).unwrap();
+        let inst = back.live_instances()[0];
+        assert_eq!(
+            inst.lifecycle,
+            Lifecycle::Spot {
+                bid_centi_cents_hour: 4321
+            }
+        );
     }
 
     #[test]

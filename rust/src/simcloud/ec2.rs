@@ -94,6 +94,20 @@ pub enum InstanceState {
     Terminated,
 }
 
+/// How an instance is purchased and billed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    /// Fixed hourly rate, never reclaimed.
+    OnDemand,
+    /// Market-priced capacity: billed per started hour at the spot
+    /// market's hourly price, reclaimed whenever the price exceeds the
+    /// bid (see `simcloud::spot`).
+    Spot {
+        /// The Analyst's bid in centi-cents per instance-hour.
+        bid_centi_cents_hour: u64,
+    },
+}
+
 /// One simulated EC2 instance.
 #[derive(Clone, Debug)]
 pub struct Instance {
@@ -114,6 +128,8 @@ pub struct Instance {
     pub fs: Vfs,
     /// Installed library packages (base AMI + rlibs config).
     pub installed_libs: Vec<String>,
+    /// Purchase model (on-demand or spot with a bid).
+    pub lifecycle: Lifecycle,
     /// Locked for a run (`ec2resourcelock -inuse`).
     pub locked: bool,
     /// Virtual time the instance entered Running (for billing).
@@ -126,6 +142,10 @@ pub struct Instance {
 impl Instance {
     pub fn is_live(&self) -> bool {
         matches!(self.state, InstanceState::Pending | InstanceState::Running)
+    }
+
+    pub fn is_spot(&self) -> bool {
+        matches!(self.lifecycle, Lifecycle::Spot { .. })
     }
 
     /// Effective compute throughput in Desktop-A-core-equivalents.
@@ -172,6 +192,7 @@ mod tests {
             nfs_mount_from: None,
             fs: Vfs::new(),
             installed_libs: vec![],
+            lifecycle: Lifecycle::OnDemand,
             locked: false,
             launched_at_s: 0.0,
             terminated_at_s: None,

@@ -16,6 +16,10 @@ pub struct FaultPlan {
     pub transfer_interrupts: usize,
     /// Fail the next `n` script executions on a worker.
     pub exec_failures: usize,
+    /// Reclaim the spot capacity under the next `n` job slices: the
+    /// jobs scheduler delivers each as a spot interruption on the
+    /// virtual timeline (independent of the market's own price path).
+    pub spot_interruptions: usize,
 }
 
 impl FaultPlan {
@@ -35,6 +39,9 @@ impl FaultPlan {
     }
     pub fn take_exec_failure(&mut self) -> bool {
         take(&mut self.exec_failures)
+    }
+    pub fn take_spot_interruption(&mut self) -> bool {
+        take(&mut self.spot_interruptions)
     }
 }
 

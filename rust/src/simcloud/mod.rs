@@ -16,14 +16,18 @@ pub mod faults;
 pub mod network;
 pub mod pricing;
 pub mod s3;
+pub mod spot;
 pub mod timing;
 pub mod vfs;
 
 pub use clock::{Clock, Span, SpanCategory};
 pub use cloud::{CloudError, SimCloud};
 pub use ebs::{Snapshot, Volume, VolumeState};
-pub use ec2::{instance_type, Ami, Instance, InstanceState, InstanceTypeSpec, INSTANCE_TYPES};
+pub use ec2::{
+    instance_type, Ami, Instance, InstanceState, InstanceTypeSpec, Lifecycle, INSTANCE_TYPES,
+};
 pub use faults::FaultPlan;
 pub use network::{Link, NetworkModel};
+pub use spot::SpotMarket;
 pub use timing::SimParams;
 pub use vfs::Vfs;

@@ -141,16 +141,20 @@ mod tests {
         assert!(t16 > t2);
         assert_eq!(n.collective_s(b, 1), 0.0);
 
-        let mut cheap = SimParams::default();
-        cheap.virt_overhead = 1.0;
+        let cheap = SimParams {
+            virt_overhead: 1.0,
+            ..SimParams::default()
+        };
         let bare = NetworkModel::new(cheap);
         assert!(bare.collective_s(b, 16) < t16);
     }
 
     #[test]
     fn data_scale_multiplies_payload() {
-        let mut p = SimParams::default();
-        p.data_scale = 64.0;
+        let p = SimParams {
+            data_scale: 64.0,
+            ..SimParams::default()
+        };
         let scaled = NetworkModel::new(p);
         let base = net();
         let b = 1024 * 1024;

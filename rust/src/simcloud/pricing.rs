@@ -68,6 +68,29 @@ impl Ledger {
         });
     }
 
+    /// Bill a spot instance's usage. The amount is pre-computed by the
+    /// market (`SpotMarket::cost_centi_cents` sums each started hour at
+    /// that hour's price); this records it with a detail line that
+    /// distinguishes provider interruptions from clean terminations.
+    pub fn bill_spot_instance(
+        &mut self,
+        id: &str,
+        api_name: &str,
+        centi_cents: u64,
+        interrupted: bool,
+    ) {
+        let detail = if interrupted {
+            format!("{api_name} spot (interrupted, partial hour free)")
+        } else {
+            format!("{api_name} spot")
+        };
+        self.items.push(LineItem {
+            resource_id: id.to_string(),
+            detail,
+            centi_cents,
+        });
+    }
+
     /// Re-book a persisted line item verbatim (session restore).
     pub fn push_raw(&mut self, resource_id: &str, detail: &str, centi_cents: u64) {
         self.items.push(LineItem {

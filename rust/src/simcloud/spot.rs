@@ -1,0 +1,247 @@
+//! Deterministic spot-instance market (EC2-2012 style).
+//!
+//! Each instance type has an hourly spot price drawn from a seeded,
+//! query-order-independent PRNG: the price of hour `h` for type `t` is
+//! a pure function of `(seed, t, h)`, so every observer — billing,
+//! interruption scanning, benches — sees the same path. Most hours the
+//! price sits around `base_fraction` of the on-demand rate with a small
+//! jitter; with probability `spike_prob` an hour spikes *above* the
+//! on-demand rate, which interrupts every instance whose bid is at or
+//! below the spike.
+//!
+//! Billing follows the classic spot rules: each **started** hour is
+//! charged at that hour's market price; when the *provider* interrupts
+//! an instance the final partial hour is free, while a self-initiated
+//! termination pays for it (minimum one hour, like on-demand).
+
+use super::ec2::instance_type;
+use crate::util::prng::SplitMix64;
+
+/// The market model. All fields are public so benches and tests can
+/// distort the price path (e.g. a spike-free market for ablations).
+#[derive(Clone, Debug)]
+pub struct SpotMarket {
+    /// Seed of the price path (part of the simulated world's identity).
+    pub seed: u64,
+    /// Mean spot price as a fraction of the on-demand rate.
+    pub base_fraction: f64,
+    /// Half-width of the hourly jitter around `base_fraction`.
+    pub jitter_fraction: f64,
+    /// Probability that an hour's price spikes above on-demand.
+    pub spike_prob: f64,
+    /// Spike level as a fraction of the on-demand rate (> 1.0 so a
+    /// bid at the on-demand price is interrupted by every spike).
+    pub spike_fraction: f64,
+}
+
+impl Default for SpotMarket {
+    fn default() -> Self {
+        Self {
+            seed: 0x2012_51B0,
+            base_fraction: 0.30,
+            jitter_fraction: 0.10,
+            spike_prob: 0.04,
+            spike_fraction: 1.35,
+        }
+    }
+}
+
+impl SpotMarket {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Hour index containing virtual time `t_s`.
+    pub fn hour_index(t_s: f64) -> u64 {
+        (t_s.max(0.0) / 3600.0).floor() as u64
+    }
+
+    /// Two independent uniforms for `(type, hour)` — pure function of
+    /// the market seed, so the path never depends on query order.
+    fn hour_draw(&self, api_name: &str, hour: u64) -> (f64, f64) {
+        let mut h = self.seed ^ hour.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for b in api_name.bytes() {
+            h = h.wrapping_mul(0x0100_0000_01B3).wrapping_add(b as u64);
+        }
+        let mut sm = SplitMix64::new(h);
+        let u1 = (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let u2 = (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        (u1, u2)
+    }
+
+    /// Spot price of one `api_name` instance-hour, in centi-cents
+    /// (hundredths of a cent), for the given hour of the simulation.
+    /// Unknown types price at zero (launch would have failed earlier).
+    pub fn price_centi_cents_hour(&self, api_name: &str, hour: u64) -> u64 {
+        let Some(spec) = instance_type(api_name) else {
+            return 0;
+        };
+        let on_demand = spec.price_cents_hour as f64 * 100.0;
+        let (u_spike, u_jitter) = self.hour_draw(api_name, hour);
+        let fraction = if u_spike < self.spike_prob {
+            self.spike_fraction
+        } else {
+            (self.base_fraction + self.jitter_fraction * (2.0 * u_jitter - 1.0)).max(0.05)
+        };
+        ((on_demand * fraction).round() as u64).max(1)
+    }
+
+    /// Is hour `hour` a spike above `bid_centi_cents_hour` for this type?
+    pub fn interrupts_at(&self, api_name: &str, bid_centi_cents_hour: u64, hour: u64) -> bool {
+        self.price_centi_cents_hour(api_name, hour) > bid_centi_cents_hour
+    }
+
+    /// First market-driven interruption strictly after `t0_s` and at or
+    /// before `t1_s`: the earliest hour boundary in `(t0, t1]` whose
+    /// price exceeds the bid. (An instance running at `t0` already
+    /// survived the hour containing `t0`.)
+    pub fn first_interruption(
+        &self,
+        api_name: &str,
+        bid_centi_cents_hour: u64,
+        t0_s: f64,
+        t1_s: f64,
+    ) -> Option<f64> {
+        if t1_s <= t0_s {
+            return None;
+        }
+        let mut boundary = (Self::hour_index(t0_s) + 1) as f64 * 3600.0;
+        while boundary <= t1_s {
+            let hour = Self::hour_index(boundary);
+            if self.interrupts_at(api_name, bid_centi_cents_hour, hour) {
+                return Some(boundary);
+            }
+            boundary += 3600.0;
+        }
+        None
+    }
+
+    /// Total spot charge for an instance that ran `[start_s, end_s)`:
+    /// every started hour at that hour's price **capped at the bid** —
+    /// a spot customer never pays above their bid, so capacity that
+    /// happens to survive a spike (only busy fleet clusters are
+    /// scanned for reclaims) is not billed spike prices. The final
+    /// partial hour is free when the provider interrupted the
+    /// instance; a self-terminated instance pays at least one hour.
+    pub fn cost_centi_cents(
+        &self,
+        api_name: &str,
+        start_s: f64,
+        end_s: f64,
+        interrupted: bool,
+        bid_centi_cents_hour: u64,
+    ) -> u64 {
+        let dur = (end_s - start_s).max(0.0);
+        let full_hours = (dur / 3600.0).floor() as u64;
+        let partial = dur - full_hours as f64 * 3600.0 > 1e-9;
+        let billed = if interrupted {
+            full_hours
+        } else {
+            (full_hours + u64::from(partial)).max(1)
+        };
+        let h0 = Self::hour_index(start_s);
+        (0..billed)
+            .map(|i| {
+                self.price_centi_cents_hour(api_name, h0 + i)
+                    .min(bid_centi_cents_hour)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn price_path_is_deterministic_and_order_independent() {
+        let m = SpotMarket::default();
+        let a: Vec<u64> = (0..50).map(|h| m.price_centi_cents_hour("m2.2xlarge", h)).collect();
+        let b: Vec<u64> = (0..50).rev().map(|h| m.price_centi_cents_hour("m2.2xlarge", h)).collect();
+        let b_fwd: Vec<u64> = b.into_iter().rev().collect();
+        assert_eq!(a, b_fwd);
+        // Different seeds give different paths.
+        let other = SpotMarket::new(99);
+        let c: Vec<u64> = (0..50).map(|h| other.price_centi_cents_hour("m2.2xlarge", h)).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn mean_price_is_a_deep_discount() {
+        let m = SpotMarket::default();
+        let on_demand = 90.0 * 100.0; // m2.2xlarge centi-cents/hour
+        let n = 2000u64;
+        let total: u64 = (0..n).map(|h| m.price_centi_cents_hour("m2.2xlarge", h)).sum();
+        let mean = total as f64 / n as f64;
+        // ~0.30 of on-demand plus a small spike contribution.
+        assert!(mean < 0.5 * on_demand, "mean spot {mean} vs od {on_demand}");
+        assert!(mean > 0.15 * on_demand, "mean spot {mean} suspiciously low");
+    }
+
+    #[test]
+    fn spikes_exist_and_interrupt_on_demand_bids() {
+        let m = SpotMarket::default();
+        let bid = 90 * 100; // bid = on-demand price
+        let spikes = (0..2000).filter(|&h| m.interrupts_at("m2.2xlarge", bid, h)).count();
+        // spike_prob = 4%: expect roughly 80/2000, generously bounded.
+        assert!(spikes > 20 && spikes < 250, "spikes = {spikes}");
+    }
+
+    #[test]
+    fn first_interruption_is_an_hour_boundary_in_window() {
+        let m = SpotMarket::default();
+        let bid = 90 * 100;
+        let t = m.first_interruption("m2.2xlarge", bid, 0.0, 3600.0 * 2000.0).unwrap();
+        assert!(t > 0.0 && t % 3600.0 == 0.0);
+        assert!(m.interrupts_at("m2.2xlarge", bid, SpotMarket::hour_index(t)));
+        // No interruption in an empty window.
+        assert_eq!(m.first_interruption("m2.2xlarge", bid, t, t), None);
+        // An unbeatable bid is never interrupted.
+        assert_eq!(
+            m.first_interruption("m2.2xlarge", u64::MAX, 0.0, 3600.0 * 500.0),
+            None
+        );
+    }
+
+    #[test]
+    fn spot_hours_cost_less_than_on_demand() {
+        let m = SpotMarket::default();
+        let dur = 3600.0 * 48.0;
+        let bid = 180 * 100; // bid = on-demand rate
+        let spot = m.cost_centi_cents("m2.4xlarge", 0.0, dur, false, bid);
+        let on_demand = 48 * 180 * 100;
+        assert!(spot < on_demand / 2, "spot {spot} vs on-demand {on_demand}");
+    }
+
+    #[test]
+    fn interrupted_partial_hour_is_free() {
+        let m = SpotMarket::default();
+        let bid = 90 * 100;
+        // 90 minutes, provider-interrupted: only the first (full) hour bills.
+        let a = m.cost_centi_cents("m2.2xlarge", 0.0, 5400.0, true, bid);
+        assert_eq!(a, m.price_centi_cents_hour("m2.2xlarge", 0).min(bid));
+        // Interrupted inside the first hour: free.
+        assert_eq!(m.cost_centi_cents("m2.2xlarge", 0.0, 1800.0, true, bid), 0);
+        // Self-terminated pays the started hour (minimum one).
+        let b = m.cost_centi_cents("m2.2xlarge", 0.0, 1800.0, false, bid);
+        assert_eq!(b, m.price_centi_cents_hour("m2.2xlarge", 0).min(bid));
+        assert!(m.cost_centi_cents("m2.2xlarge", 100.0, 100.0, false, bid) > 0);
+    }
+
+    #[test]
+    fn billed_hours_never_exceed_the_bid() {
+        // A market that spikes every hour: the customer still pays at
+        // most their bid per hour (they would have been reclaimed, not
+        // gouged — see the doc on cost_centi_cents).
+        let m = SpotMarket {
+            spike_prob: 1.0,
+            ..SpotMarket::default()
+        };
+        let bid = 90 * 100;
+        let cost = m.cost_centi_cents("m2.2xlarge", 0.0, 10.0 * 3600.0, false, bid);
+        assert_eq!(cost, 10 * bid);
+    }
+}

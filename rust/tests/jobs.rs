@@ -1,0 +1,230 @@
+//! Acceptance tests for the jobs subsystem (ISSUE 2): N >= 8
+//! mixed-priority jobs submitted concurrently all complete on an
+//! autoscaled spot fleet despite >= 2 injected spot interruptions,
+//! each job's result is bit-identical to its solo on-demand run, and
+//! the ledger shows the spot workload costing less than the same
+//! workload on demand.
+
+use p2rac::analytics::CatBondData;
+use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::jobs::{
+    files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority,
+};
+use p2rac::simcloud::SimParams;
+use std::collections::BTreeMap;
+
+fn session() -> Session {
+    // The jobs runner drives the analytics steppers directly; the
+    // session's script engine is never invoked.
+    Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
+}
+
+/// Eight projects: four CATopt optimisations and four MC sweeps with
+/// distinct seeds, so every job has its own ground-truth output.
+fn write_projects(s: &mut Session) {
+    let data = CatBondData::generate(7, 24, 96);
+    for i in 0..4u64 {
+        let dir = format!("cat{i}");
+        for (name, bytes) in data.to_files() {
+            s.analyst.write(&format!("{dir}/{name}"), bytes.clone());
+        }
+        s.analyst.write(
+            &format!("{dir}/catopt.json"),
+            format!(
+                r#"{{"type":"catopt","pop_size":12,"max_generations":4,"seed":{},"bfgs_every":2}}"#,
+                100 + i
+            )
+            .into_bytes(),
+        );
+        let dir = format!("sweep{i}");
+        s.analyst.write(
+            &format!("{dir}/sweep.json"),
+            format!(r#"{{"type":"mc_sweep","n_jobs":24,"seed":{}}}"#, 500 + i).into_bytes(),
+        );
+    }
+}
+
+fn job_specs() -> Vec<JobSpec> {
+    let prios = [
+        Priority::High,
+        Priority::Low,
+        Priority::Normal,
+        Priority::High,
+        Priority::Low,
+        Priority::Normal,
+        Priority::Low,
+        Priority::High,
+    ];
+    (0..8)
+        .map(|i| {
+            let (dir, script) = if i % 2 == 0 {
+                (format!("cat{}", i / 2), "catopt.json".to_string())
+            } else {
+                (format!("sweep{}", i / 2), "sweep.json".to_string())
+            };
+            JobSpec {
+                name: format!("run{i}"),
+                projectdir: dir,
+                rscript: script,
+                priority: prios[i],
+                placement: Placement::ByNode,
+            }
+        })
+        .collect()
+}
+
+fn results_of(s: &Session, dir: &str) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = s
+        .analyst
+        .list_dir(dir)
+        .into_iter()
+        .map(|rel| {
+            let bytes = s.analyst.read(&format!("{dir}/{rel}")).unwrap().to_vec();
+            (rel, bytes)
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+/// Run the full 8-job workload on a fleet; returns per-job result
+/// digests, the total bill in centi-cents, and interruptions seen.
+fn run_workload(spot: bool, interruptions: usize) -> (BTreeMap<String, u64>, u64, usize) {
+    let mut s = session();
+    // A spike-free price path: the test's interruptions come from the
+    // armed FaultPlan, so the run is deterministic by construction.
+    s.cloud.spot.spike_prob = 0.0;
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 3,
+        nodes_per_cluster: 2,
+        spot,
+        ..Default::default()
+    });
+    js.slice_units = 1; // checkpoint after every generation / batch
+    s.cloud.faults.spot_interruptions = interruptions;
+    let specs = job_specs();
+    for spec in &specs {
+        js.submit(&s, spec.clone());
+    }
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+
+    let mut digests = BTreeMap::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let job = js.queue.jobs().find(|j| j.spec.name == spec.name).unwrap();
+        assert_eq!(
+            job.state,
+            JobState::Completed,
+            "job {} must complete (spot={spot})",
+            spec.name
+        );
+        let dir = format!("{}_results/run{i}", spec.projectdir);
+        let files = results_of(&s, &dir);
+        assert!(!files.is_empty(), "no results under {dir}");
+        digests.insert(spec.name.clone(), files_digest(&files));
+    }
+    (
+        digests,
+        s.cloud.ledger.total_centi_cents(),
+        js.interruptions_delivered,
+    )
+}
+
+/// Solo reference: each job alone on a one-cluster on-demand fleet.
+fn solo_digest(spec: &JobSpec) -> u64 {
+    let mut s = session();
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    js.submit(&s, spec.clone());
+    js.run_until_idle(&mut s).unwrap();
+    let job = js.queue.jobs().next().unwrap();
+    assert_eq!(job.state, JobState::Completed);
+    let dir = format!(
+        "{}_results/{}",
+        spec.projectdir,
+        spec.name
+    );
+    files_digest(&results_of(&s, &dir))
+}
+
+#[test]
+fn eight_mixed_priority_jobs_survive_spot_interruptions_bit_identically() {
+    // The acceptance scenario: autoscaled spot fleet, two injected
+    // interruptions, all jobs complete.
+    let (spot_digests, spot_cost, delivered) = run_workload(true, 2);
+    assert!(
+        delivered >= 2,
+        "expected >= 2 spot interruptions delivered, got {delivered}"
+    );
+
+    // Bit-identity: every job's result files match its solo on-demand
+    // run exactly, interruptions and checkpoint resumes included.
+    for spec in job_specs() {
+        let solo = solo_digest(&spec);
+        assert_eq!(
+            spot_digests.get(&spec.name),
+            Some(&solo),
+            "job {} diverged from its solo on-demand run",
+            spec.name
+        );
+    }
+
+    // Cost: the same workload on an identically-bounded on-demand
+    // fleet (no interruptions) must cost strictly more.
+    let (od_digests, od_cost, _) = run_workload(false, 0);
+    assert_eq!(
+        spot_digests, od_digests,
+        "spot and on-demand runs must agree on every result"
+    );
+    assert!(
+        spot_cost < od_cost,
+        "spot bill ({spot_cost}cc) must undercut on-demand ({od_cost}cc)"
+    );
+}
+
+#[test]
+fn interrupted_jobs_record_their_interruptions() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 2,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    s.cloud.faults.spot_interruptions = 1;
+    let id = js.submit(
+        &s,
+        JobSpec {
+            name: "r".into(),
+            projectdir: "cat0".into(),
+            rscript: "catopt.json".into(),
+            priority: Priority::Normal,
+            placement: Placement::ByNode,
+        },
+    );
+    js.run_until_idle(&mut s).unwrap();
+    let j = js.queue.get(id).unwrap();
+    assert_eq!(j.state, JobState::Completed);
+    assert_eq!(j.interruptions, 1, "the interruption must be attributed");
+    assert_eq!(js.interruptions_delivered, 1);
+    // The reclaimed cluster was billed with the spot rules.
+    assert!(s
+        .cloud
+        .ledger
+        .items()
+        .iter()
+        .any(|i| i.detail.contains("spot (interrupted")));
+}
