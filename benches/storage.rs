@@ -1,0 +1,87 @@
+//! Storage-plane resume scenario: the same long CATopt job on a
+//! one-cluster spot fleet whose bid is exceeded at every hour boundary,
+//! so the provider reclaims the cluster mid-run and the scheduler must
+//! resume the job on replacement capacity —
+//!
+//! * **WAN-resume baseline**: checkpoints ship to the Analyst site and
+//!   the replacement cluster re-syncs the paper-scale project over the
+//!   metered WAN (the seed's world);
+//! * **LAN-resume resident**: checkpoints live cluster-side (EBS
+//!   volume + S3 mirror + EBS snapshot) and replacement capacity
+//!   restores project + checkpoint over the LAN from a
+//!   snapshot-backed volume (§3.2.1 of the source paper: the
+//!   Analyst's data lives in the cloud, so repeated runs pay LAN).
+//!
+//! Asserts the headline property: the resident resume pays strictly
+//! less transfer cost AND strictly less virtual time than the WAN
+//! baseline, while both produce results bit-identical to an
+//! uninterrupted on-demand run. Emits `BENCH_storage.json` at the
+//! repository root.
+//!
+//! Run: `cargo bench --bench storage`
+
+use p2rac::bench_support::{emit_bench_json, run_storage_scenario};
+use p2rac::util::json::Json;
+
+fn main() {
+    println!("=== storage plane: WAN-resume vs LAN-resume of a spot-interrupted job ===\n");
+    let truth = run_storage_scenario("uninterrupted truth", false, false).unwrap();
+    let wan = run_storage_scenario("wan-resume baseline", false, true).unwrap();
+    let lan = run_storage_scenario("lan-resume resident", true, true).unwrap();
+    for r in [&truth, &wan, &lan] {
+        println!("  {}", r.row());
+    }
+
+    assert!(
+        wan.interruptions >= 1 && lan.interruptions >= 1,
+        "both interruptible runs must actually be reclaimed"
+    );
+    assert_eq!(
+        wan.result_digest, truth.result_digest,
+        "WAN resume must be bit-identical to the uninterrupted run"
+    );
+    assert_eq!(
+        lan.result_digest, truth.result_digest,
+        "LAN resume must be bit-identical to the uninterrupted run"
+    );
+    assert!(
+        lan.wan_transfer_centi_cents < wan.wan_transfer_centi_cents,
+        "LAN resume ({}cc) must pay strictly less transfer cost than WAN resume ({}cc)",
+        lan.wan_transfer_centi_cents,
+        wan.wan_transfer_centi_cents
+    );
+    assert!(
+        lan.makespan_s < wan.makespan_s,
+        "LAN resume ({:.0}s) must be strictly faster than WAN resume ({:.0}s)",
+        lan.makespan_s,
+        wan.makespan_s
+    );
+    println!(
+        "\n  -> cluster-side snapshot resume: {:.0}% of the baseline's WAN transfer bill, \
+         {:.0}s less virtual time",
+        100.0 * lan.wan_transfer_centi_cents as f64 / wan.wan_transfer_centi_cents.max(1) as f64,
+        wan.makespan_s - lan.makespan_s
+    );
+
+    let mut report = Json::obj();
+    report.set(
+        "scenarios",
+        Json::Arr(vec![truth.to_json(), wan.to_json(), lan.to_json()]),
+    );
+    report.set(
+        "lan_vs_wan",
+        Json::from_pairs(vec![
+            (
+                "transfer_saving_centi_cents",
+                Json::num((wan.wan_transfer_centi_cents - lan.wan_transfer_centi_cents) as f64),
+            ),
+            ("virtual_time_saving_s", Json::num(wan.makespan_s - lan.makespan_s)),
+            ("bit_identical", Json::Bool(true)),
+        ]),
+    );
+    match emit_bench_json("storage", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_storage.json: {e}"),
+    }
+    println!("\nstorage bench complete.");
+}

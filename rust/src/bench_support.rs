@@ -476,6 +476,136 @@ pub fn run_queue_scenario(
     })
 }
 
+// ============================================== storage-plane scenario
+
+/// Outcome of one storage-plane resume scenario (WAN vs LAN resume of
+/// a spot-interrupted job).
+#[derive(Clone, Debug)]
+pub struct StorageScenarioReport {
+    pub label: String,
+    /// Cluster-resident checkpoints (LAN resume) vs Analyst-site
+    /// checkpoints (WAN resume).
+    pub resident: bool,
+    /// Virtual time from submission to completed results + released
+    /// fleet.
+    pub makespan_s: f64,
+    /// Metered WAN transfer charges only (the cost the storage plane
+    /// exists to avoid).
+    pub wan_transfer_centi_cents: u64,
+    pub total_centi_cents: u64,
+    pub interruptions: usize,
+    /// Bit-identity fingerprint of the job's result files.
+    pub result_digest: u64,
+}
+
+impl StorageScenarioReport {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<22} makespan {:>8.0}s  wan-transfer {:>6}cc  total {:>8}cc  interruptions {}",
+            self.label,
+            self.makespan_s,
+            self.wan_transfer_centi_cents,
+            self.total_centi_cents,
+            self.interruptions
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("label", Json::str(&self.label)),
+            ("resident", Json::Bool(self.resident)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            (
+                "wan_transfer_centi_cents",
+                Json::num(self.wan_transfer_centi_cents as f64),
+            ),
+            ("total_centi_cents", Json::num(self.total_centi_cents as f64)),
+            ("interruptions", Json::num(self.interruptions as f64)),
+            ("result_digest", Json::str(format!("{:016x}", self.result_digest))),
+        ])
+    }
+}
+
+/// Run one long CATopt job on a one-cluster spot fleet whose bid (the
+/// on-demand rate) is exceeded at **every** hour boundary
+/// (`spike_prob = 1`), so the provider reclaims the cluster while the
+/// job is mid-flight and the scheduler must resume it on replacement
+/// capacity — over the WAN (baseline) or over the LAN from the
+/// cluster-side snapshot (`resident = true`). `interruptible = false`
+/// runs the uninterrupted on-demand ground truth for the bit-identity
+/// check. The project is paper-scale on the wire (`data_scale`), which
+/// is exactly what makes the WAN re-sync the dominant resume cost.
+pub fn run_storage_scenario(
+    label: &str,
+    resident: bool,
+    interruptible: bool,
+) -> Result<StorageScenarioReport> {
+    let mut s = bench_session(256.0);
+    s.cloud.spot.spike_prob = if interruptible { 1.0 } else { 0.0 };
+    // ~17 MB of real loss-table bytes (≈ 4.3 GB at paper scale).
+    let data = CatBondData::generate(7, 1024, 4096);
+    for (name, bytes) in data.to_files() {
+        s.analyst.write(&format!("stor/{name}"), bytes);
+    }
+    // candidate_cost_s makes each generation ~20 virtual minutes, so
+    // the job spans hour boundaries and the reclaim lands mid-run.
+    s.analyst.write(
+        "stor/catopt.json",
+        br#"{"type":"catopt","pop_size":12,"max_generations":4,"seed":42,"bfgs_every":0,"candidate_cost_s":600.0}"#
+            .to_vec(),
+    );
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 2,
+        spot: interruptible,
+        policy: ScalePolicy::QueueDepth,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    let t0 = s.cloud.clock.now_s();
+    let id = js.submit_opts(
+        &s,
+        JobSpec {
+            name: "resume".into(),
+            projectdir: "stor".into(),
+            rscript: "catopt.json".into(),
+            priority: Priority::Normal,
+            placement: Placement::ByNode,
+        },
+        resident,
+        "bench",
+    );
+    js.run_until_idle(&mut s)?;
+    js.shutdown_fleet(&mut s)?;
+    let job = js.queue.get(id).expect("job exists");
+    anyhow::ensure!(
+        job.state == JobState::Completed,
+        "{label}: job must complete, got {:?}",
+        job.state
+    );
+    let mut files: Vec<(String, Vec<u8>)> = s
+        .analyst
+        .list_dir("stor_results/resume")
+        .into_iter()
+        .map(|rel| {
+            let bytes = s.analyst.read(&format!("stor_results/resume/{rel}")).unwrap().to_vec();
+            (rel, bytes)
+        })
+        .collect();
+    files.sort();
+    let wan_cc = s.cloud.ledger.total_wan_transfer_centi_cents();
+    Ok(StorageScenarioReport {
+        label: label.to_string(),
+        resident,
+        makespan_s: s.cloud.clock.now_s() - t0,
+        wan_transfer_centi_cents: wan_cc,
+        total_centi_cents: s.cloud.ledger.total_centi_cents(),
+        interruptions: js.interruptions_delivered,
+        result_digest: crate::jobs::files_digest(&files),
+    })
+}
+
 /// Write `BENCH_<name>.json` at the repository root so the perf
 /// trajectory is tracked across PRs (machine-readable counterpart of
 /// the bench stdout).

@@ -23,6 +23,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("snap", "EBS snapshot ID to materialise a volume from")
             .value_arg("type", "EC2 instance type (e.g. m2.4xlarge)")
             .value_arg("desc", "description of the instance")
+            .value_arg("analyst", "tenant id to tag the instance and its charges with")
             .switch_arg("spot", "request spot-market capacity (bid = on-demand rate)")
             .exclusive(&["ebsvol", "snap"]),
         CommandSpec::new("ec2terminateinstance", "safely release an instance")
@@ -48,6 +49,7 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("snap", "EBS snapshot ID to materialise a volume from")
             .value_arg("type", "EC2 instance type")
             .value_arg("desc", "description of the cluster")
+            .value_arg("analyst", "tenant id to tag the cluster and its charges with")
             .switch_arg("spot", "request spot-market capacity for every node")
             .exclusive(&["ebsvol", "snap"]),
         CommandSpec::new("ec2terminatecluster", "safely release a cluster")
@@ -108,10 +110,22 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("projectdir", "project directory at the Analyst site")
             .value_arg("rscript", "script to execute from the project directory")
             .value_arg("priority", "low | normal | high (default normal)")
+            .value_arg("analyst", "tenant id the job's charges are attributed to")
             .required_arg("runname", "name for this job's results")
             .switch_arg("bynode", "round-robin slave placement (default)")
             .switch_arg("byslot", "fill each node's cores before the next")
+            .switch_arg(
+                "resident",
+                "keep checkpoints cluster-side (EBS+S3+snapshot); resume pays LAN, not WAN",
+            )
             .exclusive(&["bynode", "byslot"]),
+        CommandSpec::new("ec2snapshot", "point-in-time EBS snapshot of a resource's volume")
+            .value_arg("iname", "instance whose volume to snapshot")
+            .value_arg("cname", "cluster whose shared volume to snapshot")
+            .value_arg("desc", "description of the snapshot")
+            .exclusive(&["iname", "cname"]),
+        CommandSpec::new("ec2lsobjects", "list the storage plane's objects with content digests")
+            .value_arg("bucket", "bucket to list (default: all buckets)"),
         CommandSpec::new("ec2jobstatus", "show one job (or every job) in the queue")
             .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)"),
         CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
@@ -254,6 +268,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 itype: p.value("type").map(str::to_string),
                 desc: p.value("desc").map(str::to_string),
                 spot: p.switch("spot"),
+                analyst: p.value("analyst").map(str::to_string),
             })?;
             let e = s.instances_cfg.get(&name).unwrap();
             Ok(format!(
@@ -314,6 +329,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 itype: p.value("type").map(str::to_string),
                 desc: p.value("desc").map(str::to_string),
                 spot: p.switch("spot"),
+                analyst: p.value("analyst").map(str::to_string),
             })?;
             let e = s.clusters_cfg.get(&name).unwrap();
             Ok(format!(
@@ -420,6 +436,22 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 )
                 .join("\n"))
         }
+        "ec2snapshot" => {
+            let snap = s.snapshot_resource_volume(
+                p.value("iname"),
+                p.value("cname"),
+                p.value_or("desc", "manual snapshot"),
+            )?;
+            Ok(format!("created snapshot {snap}"))
+        }
+        "ec2lsobjects" => {
+            let lines = s.list_storage_objects(p.value("bucket"));
+            if lines.is_empty() {
+                Ok("no objects in the storage plane".into())
+            } else {
+                Ok(lines.join("\n"))
+            }
+        }
         "ec2logintoinstance" => s.login_banner(p.value("iname"), None),
         "ec2logintocluster" => {
             let cname = p
@@ -493,7 +525,8 @@ pub fn apply_with_jobs(
             let rscript = pick_script(s, p)?;
             let priority = Priority::parse(p.value_or("priority", "normal"))?;
             let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
-            let id = js.submit(
+            let resident = p.switch("resident");
+            let id = js.submit_opts(
                 s,
                 JobSpec {
                     name: p.value("runname").unwrap().to_string(),
@@ -502,10 +535,13 @@ pub fn apply_with_jobs(
                     priority,
                     placement,
                 },
+                resident,
+                p.value_or("analyst", ""),
             );
             Ok(format!(
-                "submitted {id} (priority {}, {} pending)",
+                "submitted {id} (priority {}{}, {} pending)",
                 priority.label(),
+                if resident { ", resident" } else { "" },
                 js.queue.pending()
             ))
         }
@@ -655,6 +691,25 @@ pub fn report(s: &Session) -> String {
         s.cloud.ledger.total_dollars(),
         s.cloud.ledger.items().len()
     ));
+    let tenants = s.cloud.ledger.analysts();
+    if !tenants.is_empty() {
+        out.push_str("billed by analyst:\n");
+        for a in &tenants {
+            out.push_str(&format!(
+                "  {:<20} ${:.2}\n",
+                a,
+                s.cloud.ledger.total_centi_cents_for(a) as f64 / 10_000.0
+            ));
+        }
+        let untagged = s.cloud.ledger.total_centi_cents_for("");
+        if untagged > 0 {
+            out.push_str(&format!(
+                "  {:<20} ${:.2}\n",
+                "(platform)",
+                untagged as f64 / 10_000.0
+            ));
+        }
+    }
     let cats = [
         (SpanCategory::CreateResource, "create resources"),
         (SpanCategory::SubmitToMaster, "submit to instance/master"),
@@ -785,9 +840,55 @@ mod tests {
             "ec2jobstatus",
             "ec2jobqueue",
             "ec2autoscale",
+            "ec2snapshot",
+            "ec2lsobjects",
         ] {
             assert!(h.contains(c), "help missing {c}");
         }
+    }
+
+    #[test]
+    fn snapshot_and_lsobjects_commands() {
+        let mut s = session();
+        run(&mut s, "ec2createcluster", &["-cname", "c", "-csize", "2"]).unwrap();
+        let out = run(&mut s, "ec2snapshot", &["-cname", "c", "-desc", "state"]).unwrap();
+        assert!(out.contains("created snapshot snap-"), "{out}");
+        // Empty storage plane lists cleanly…
+        let out = run(&mut s, "ec2lsobjects", &[]).unwrap();
+        assert!(out.contains("no objects"), "{out}");
+        // …and objects show up once something is stored.
+        s.cloud
+            .s3_put("p2rac-checkpoints", "job-1", b"{}".to_vec(), crate::simcloud::Link::Lan);
+        let out = run(&mut s, "ec2lsobjects", &["-bucket", "p2rac-checkpoints"]).unwrap();
+        assert!(out.contains("job-1") && out.contains("digest="), "{out}");
+    }
+
+    #[test]
+    fn resident_submit_flag_reaches_the_queue() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig::default());
+        let out = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &[
+                "-projectdir",
+                "proj",
+                "-rscript",
+                "sweep.json",
+                "-runname",
+                "r1",
+                "-resident",
+                "-analyst",
+                "alice",
+            ],
+        )
+        .unwrap();
+        assert!(out.contains("resident"), "{out}");
+        let job = js.queue.jobs().next().unwrap();
+        assert!(job.resident);
+        assert_eq!(job.analyst, "alice");
     }
 
     fn run_jobs(

@@ -106,7 +106,8 @@ mod tests {
         c.insert("hpc_instance", entry());
         assert!(c.contains("hpc_instance"));
         let j = c.to_json();
-        let back = InstancesConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        let back =
+            InstancesConfig::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
         assert_eq!(back, c);
         assert!(back.get("hpc_instance").unwrap().volume_id.is_some());
     }

@@ -1,0 +1,414 @@
+//! Data management (paper §3.2.1/§3.2.2): project sync to instances
+//! and clusters, result gathering under the three scenarios, and the
+//! cloud-side storage plane (EBS snapshots of live volumes, S3 object
+//! listing). Every byte that crosses a link — rsync project sync,
+//! result gather, checkpoint traffic — is accounted through one path,
+//! [`crate::simcloud::SimCloud::account_transfer`], so the WAN/LAN
+//! billing split is uniform across the whole platform.
+
+use super::{local_results_dir, remote_project_dir, Session};
+use crate::datasync::{sync_dir, Protocol, SyncReport, DEFAULT_BLOCK_LEN};
+use crate::simcloud::{Link, SpanCategory};
+use anyhow::{anyhow, bail, Result};
+
+impl Session {
+    /// `ec2senddatatoinstance`.
+    pub fn send_data_to_instance(
+        &mut self,
+        iname: Option<&str>,
+        projectdir: &str,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        let dest = remote_project_dir(projectdir);
+        let start = self.cloud.clock.now_s();
+        let analyst = &self.analyst;
+        let rep = self
+            .cloud
+            .with_instance_fs(&entry.instance_id, |fs, net, faults| {
+                sync_dir(
+                    analyst,
+                    projectdir,
+                    fs,
+                    &dest,
+                    Protocol::Rsync,
+                    DEFAULT_BLOCK_LEN,
+                    net,
+                    Link::Wan,
+                    faults,
+                )
+            })?
+            .map_err(|e| anyhow!("sync to instance '{name}': {e}"))?;
+        self.cloud
+            .account_transfer(&format!("sync {projectdir} -> {name}"), rep.wire_bytes(), Link::Wan);
+        self.cloud.clock.advance(rep.elapsed_s);
+        self.cloud.clock.push_span(
+            SpanCategory::SubmitToMaster,
+            &format!("send {projectdir} to instance {name}"),
+            start,
+        );
+        Ok(rep)
+    }
+
+    /// `ec2senddatatomaster`.
+    pub fn send_data_to_master(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        let dest = remote_project_dir(projectdir);
+        let start = self.cloud.clock.now_s();
+        let analyst = &self.analyst;
+        let rep = self
+            .cloud
+            .with_instance_fs(&entry.master_id, |fs, net, faults| {
+                sync_dir(
+                    analyst,
+                    projectdir,
+                    fs,
+                    &dest,
+                    Protocol::Rsync,
+                    DEFAULT_BLOCK_LEN,
+                    net,
+                    Link::Wan,
+                    faults,
+                )
+            })?
+            .map_err(|e| anyhow!("sync to master of '{name}': {e}"))?;
+        self.cloud
+            .account_transfer(&format!("sync {projectdir} -> {name}"), rep.wire_bytes(), Link::Wan);
+        self.cloud.clock.advance(rep.elapsed_s);
+        self.cloud.clock.push_span(
+            SpanCategory::SubmitToMaster,
+            &format!("send {projectdir} to master of {name}"),
+            start,
+        );
+        Ok(rep)
+    }
+
+    /// `ec2senddatatoclusternodes`.
+    pub fn send_data_to_cluster_nodes(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+    ) -> Result<Vec<SyncReport>> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        let dest = remote_project_dir(projectdir);
+        let start = self.cloud.clock.now_s();
+        let mut reports = Vec::new();
+        let ids = entry.all_ids();
+        for id in &ids {
+            let analyst = &self.analyst;
+            let rep = self
+                .cloud
+                .with_instance_fs(id, |fs, net, faults| {
+                    sync_dir(
+                        analyst,
+                        projectdir,
+                        fs,
+                        &dest,
+                        Protocol::Rsync,
+                        DEFAULT_BLOCK_LEN,
+                        net,
+                        Link::Wan,
+                        faults,
+                    )
+                })?
+                .map_err(|e| anyhow!("sync to node of '{name}': {e}"))?;
+            reports.push(rep);
+        }
+        let total_wire: u64 = reports.iter().map(SyncReport::wire_bytes).sum();
+        self.cloud.account_transfer(
+            &format!("fanout {projectdir} -> {name}"),
+            total_wire,
+            Link::Wan,
+        );
+        // Fan-out wire time: n copies over the shared Analyst uplink.
+        let bytes_each = reports.iter().map(SyncReport::wire_bytes).max().unwrap_or(0);
+        let files_each = reports[0].files_sent.max(1);
+        let t = self
+            .cloud
+            .net
+            .fanout_s(bytes_each, files_each, ids.len(), Link::Wan);
+        self.cloud.clock.advance(t);
+        self.cloud.clock.push_span(
+            SpanCategory::SubmitToAllNodes,
+            &format!("send {projectdir} to all {} nodes of {name}", ids.len()),
+            start,
+        );
+        Ok(reports)
+    }
+
+    /// `ec2getresultsfrominstance`.
+    pub fn get_results_from_instance(
+        &mut self,
+        iname: Option<&str>,
+        projectdir: &str,
+        runname: &str,
+    ) -> Result<SyncReport> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        let remote_results = format!("{}/results/{runname}", remote_project_dir(projectdir));
+        let local = format!("{}/{runname}", local_results_dir(projectdir));
+        let start = self.cloud.clock.now_s();
+        let inst = self.cloud.instance(&entry.instance_id)?;
+        if !inst.fs.dir_exists(&remote_results) {
+            bail!("no results for run '{runname}' on instance '{name}'");
+        }
+        let src = inst.fs.clone();
+        let mut faults = std::mem::take(&mut self.cloud.faults);
+        let rep = sync_dir(
+            &src,
+            &remote_results,
+            &mut self.analyst,
+            &local,
+            Protocol::Rsync,
+            DEFAULT_BLOCK_LEN,
+            &self.cloud.net,
+            Link::Wan,
+            &mut faults,
+        )
+        .map_err(|e| anyhow!("fetch results from '{name}': {e}"))?;
+        self.cloud.faults = faults;
+        self.cloud
+            .account_transfer(&format!("fetch {runname} <- {name}"), rep.wire_bytes(), Link::Wan);
+        self.cloud.clock.advance(rep.elapsed_s);
+        self.cloud.clock.push_span(
+            SpanCategory::FetchFromMaster,
+            &format!("fetch run {runname} from instance {name}"),
+            start,
+        );
+        Ok(rep)
+    }
+
+    /// `ec2getresults` with the three scenarios.
+    pub fn get_results(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+        runname: &str,
+        scope: super::ResultScope,
+    ) -> Result<SyncReport> {
+        use super::ResultScope;
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        let remote_results = format!("{}/results/{runname}", remote_project_dir(projectdir));
+        let local = format!("{}/{runname}", local_results_dir(projectdir));
+        let start = self.cloud.clock.now_s();
+
+        let mut sources: Vec<(String, String)> = Vec::new(); // (instance id, label)
+        match scope {
+            ResultScope::FromMaster => sources.push((entry.master_id.clone(), "master".into())),
+            ResultScope::FromWorkers => {
+                for (i, w) in entry.worker_ids.iter().enumerate() {
+                    sources.push((w.clone(), format!("worker{i}")));
+                }
+            }
+            ResultScope::FromAll => {
+                sources.push((entry.master_id.clone(), "master".into()));
+                for (i, w) in entry.worker_ids.iter().enumerate() {
+                    sources.push((w.clone(), format!("worker{i}")));
+                }
+            }
+        }
+
+        let mut total = SyncReport::default();
+        let mut found_any = false;
+        let n_src = sources.len();
+        let mut faults = std::mem::take(&mut self.cloud.faults);
+        for (id, label) in sources {
+            let inst = self.cloud.instance(&id)?;
+            if !inst.fs.dir_exists(&remote_results) {
+                continue;
+            }
+            found_any = true;
+            let src = inst.fs.clone();
+            // Multi-source gathers are disambiguated per node.
+            let dst_dir = if scope == ResultScope::FromMaster {
+                local.clone()
+            } else {
+                format!("{local}/{label}")
+            };
+            let rep = sync_dir(
+                &src,
+                &remote_results,
+                &mut self.analyst,
+                &dst_dir,
+                Protocol::Rsync,
+                DEFAULT_BLOCK_LEN,
+                &self.cloud.net,
+                Link::Wan,
+                &mut faults,
+            )
+            .map_err(|e| anyhow!("fetch results from {label} of '{name}': {e}"))?;
+            total.files_examined += rep.files_examined;
+            total.files_sent += rep.files_sent;
+            total.files_unchanged += rep.files_unchanged;
+            total.literal_bytes += rep.literal_bytes;
+            total.matched_bytes += rep.matched_bytes;
+            total.protocol_bytes += rep.protocol_bytes;
+        }
+        self.cloud.faults = faults;
+        if !found_any {
+            bail!("no results for run '{runname}' on cluster '{name}'");
+        }
+        self.cloud
+            .account_transfer(&format!("fetch {runname} <- {name}"), total.wire_bytes(), Link::Wan);
+        let cat = match scope {
+            ResultScope::FromMaster => SpanCategory::FetchFromMaster,
+            _ => SpanCategory::FetchFromAllNodes,
+        };
+        let t = match scope {
+            ResultScope::FromMaster => self
+                .cloud
+                .net
+                .transfer_s(total.wire_bytes(), total.files_sent.max(1), Link::Wan),
+            _ => self.cloud.net.gather_s(
+                total.wire_bytes() / n_src.max(1) as u64,
+                (total.files_sent / n_src.max(1)).max(1),
+                n_src,
+                Link::Wan,
+            ),
+        };
+        total.elapsed_s = t;
+        self.cloud.clock.advance(t);
+        self.cloud
+            .clock
+            .push_span(cat, &format!("fetch run {runname} from {name}"), start);
+        Ok(total)
+    }
+
+    // ======================================================= storage plane
+
+    /// `ec2snapshot`: point-in-time EBS snapshot of the volume behind
+    /// an instance or a cluster (exactly one of the two). Returns the
+    /// snapshot id; the contents are whatever the volume holds now —
+    /// for a cluster running resident jobs, that includes the
+    /// checkpoints committed so far.
+    pub fn snapshot_resource_volume(
+        &mut self,
+        iname: Option<&str>,
+        cname: Option<&str>,
+        desc: &str,
+    ) -> Result<String> {
+        let (vol, what) = if let Some(c) = cname {
+            let e = self.cluster_entry(c)?;
+            (
+                e.volume_id
+                    .clone()
+                    .ok_or_else(|| anyhow!("cluster '{c}' has no EBS volume"))?,
+                format!("cluster {c}"),
+            )
+        } else {
+            let name = self.resolve_iname(iname)?;
+            let e = self.instance_entry(&name)?;
+            (
+                e.volume_id
+                    .clone()
+                    .ok_or_else(|| anyhow!("instance '{name}' has no EBS volume"))?,
+                format!("instance {name}"),
+            )
+        };
+        let start = self.cloud.clock.now_s();
+        let snap = self.cloud.snapshot_volume(&vol, desc)?;
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("snapshot {vol} of {what}"),
+            start,
+        );
+        Ok(snap)
+    }
+
+    /// `ec2lsobjects`: list the storage plane's objects (all buckets,
+    /// or one) with size, content digest and put time.
+    pub fn list_storage_objects(&self, bucket: Option<&str>) -> Vec<String> {
+        let buckets = match bucket {
+            Some(b) => vec![b.to_string()],
+            None => self.cloud.s3.bucket_names(),
+        };
+        let mut out = Vec::new();
+        for b in buckets {
+            for (key, obj) in self.cloud.s3.objects(&b, "") {
+                out.push(format!(
+                    "s3://{b}/{key}  {} B  digest={:016x}  put_at={:.0}s",
+                    obj.data.len(),
+                    obj.digest,
+                    obj.put_at_s
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::MockEngine;
+    use crate::coordinator::{CreateClusterOpts, CreateInstanceOpts};
+    use crate::simcloud::SimParams;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(100.0)))
+    }
+
+    #[test]
+    fn wan_syncs_land_on_the_metered_transfer_path() {
+        let mut s = session();
+        s.analyst.write("p/sweep.json", br#"{"type":"mock"}"#.to_vec());
+        s.analyst.write("p/data/big.bin", vec![3u8; 200_000]);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_instance(Some("i"), "p").unwrap();
+        assert!(
+            s.cloud.ledger.total_wan_transfer_centi_cents() >= 1,
+            "project sync must book metered WAN bytes"
+        );
+    }
+
+    #[test]
+    fn cluster_volume_snapshot_captures_current_contents() {
+        let mut s = session();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+        let vol = s.clusters_cfg.get("c").unwrap().volume_id.clone().unwrap();
+        s.cloud
+            .volume_fs_mut(&vol)
+            .unwrap()
+            .write("jobs/job-1/checkpoint.json", b"{}".to_vec());
+        let snap = s
+            .snapshot_resource_volume(None, Some("c"), "mid-run state")
+            .unwrap();
+        assert!(s
+            .cloud
+            .snapshot(&snap)
+            .unwrap()
+            .fs
+            .exists("jobs/job-1/checkpoint.json"));
+        // And it shows up in the resource listing.
+        let listing = s.list_all_resources(false, false, true, false).join("\n");
+        assert!(listing.contains(&snap));
+    }
+
+    #[test]
+    fn storage_object_listing_shows_digests() {
+        let mut s = session();
+        s.cloud
+            .s3_put("p2rac-checkpoints", "job-1", b"{\"kind\":\"mc_sweep\"}".to_vec(), Link::Lan);
+        let lines = s.list_storage_objects(None);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("s3://p2rac-checkpoints/job-1"));
+        assert!(lines[0].contains("digest="));
+        assert!(s.list_storage_objects(Some("empty-bucket")).is_empty());
+    }
+}

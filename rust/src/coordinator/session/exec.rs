@@ -1,0 +1,218 @@
+//! Execution management (paper §3.2.2): running a script on an
+//! instance, a cluster (with bynode/byslot placement and the memory
+//! feasibility check) or a Table-I desktop.
+
+use super::{local_results_dir, remote_project_dir, Session};
+use crate::coordinator::engine::{ResourceView, TaskOutput};
+use crate::coordinator::scheduler::{self, NodeSpec, Placement};
+use crate::simcloud::{instance_type, SpanCategory, Vfs};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+impl Session {
+    pub(super) fn load_script(fs: &Vfs, project_dir: &str, rscript: &str) -> Result<Json> {
+        let path = format!("{project_dir}/{rscript}");
+        let bytes = fs
+            .read(&path)
+            .ok_or_else(|| anyhow!("script '{rscript}' not found in project directory"))?;
+        let text = std::str::from_utf8(bytes).context("script is not UTF-8")?;
+        Json::parse(text).map_err(|e| anyhow!("script '{rscript}' is not valid JSON: {e}"))
+    }
+
+    /// List candidate scripts in a project dir (used when `-rscript` is
+    /// omitted and the CLI prompts the Analyst).
+    pub fn list_scripts(&self, projectdir: &str) -> Vec<String> {
+        self.analyst
+            .list_dir(projectdir)
+            .into_iter()
+            .filter(|f| f.ends_with(".json") && !f.starts_with("results/"))
+            .collect()
+    }
+
+    /// `ec2runoninstance`.
+    pub fn run_on_instance(
+        &mut self,
+        iname: Option<&str>,
+        projectdir: &str,
+        rscript: &str,
+        runname: &str,
+    ) -> Result<TaskOutput> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("instance '{name}' is locked by another run");
+        }
+        let inst = self.cloud.instance(&entry.instance_id)?;
+        let spec = inst.itype;
+        let pdir = remote_project_dir(projectdir);
+        let project = inst.fs.clone();
+        let script = Self::load_script(&project, &pdir, rscript)?;
+
+        // Lock for the duration of the run (§3.2.1).
+        self.set_instance_lock(&name, true)?;
+        let nodes = vec![NodeSpec {
+            name: name.clone(),
+            cores: spec.cores,
+            mem_gb: spec.mem_gb,
+            core_speed: spec.core_speed,
+        }];
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(spec.cores);
+        let assignment = vec![0usize; nproc];
+        let view = ResourceView {
+            nodes,
+            assignment,
+            net: self.cloud.net.clone(),
+            resource_name: name.clone(),
+            real_threads: self.threads,
+        };
+        let out = self.engine.run(rscript, &script, &project, &pdir, &view);
+        // Always unlock, even on engine failure.
+        self.set_instance_lock(&name, false)?;
+        let out = out?;
+
+        let start = self.cloud.clock.now_s();
+        self.cloud.clock.advance(out.compute_s);
+        self.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("run {rscript} ({runname}) on instance {name}"),
+            start,
+        );
+        // Results land in results/<runname>/ inside the project dir.
+        let fs = self.cloud.instance_fs_mut(&entry.instance_id)?;
+        for (rel, bytes) in &out.master_files {
+            fs.write(&format!("{pdir}/results/{runname}/{rel}"), bytes.clone());
+        }
+        Ok(out)
+    }
+
+    /// `ec2runoncluster`.
+    pub fn run_on_cluster(
+        &mut self,
+        cname: Option<&str>,
+        projectdir: &str,
+        rscript: &str,
+        runname: &str,
+        placement: Placement,
+    ) -> Result<TaskOutput> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("cluster '{name}' is locked by another run");
+        }
+        let spec = instance_type(&entry.instance_type)
+            .ok_or_else(|| anyhow!("unknown type in config: {}", entry.instance_type))?;
+        let pdir = remote_project_dir(projectdir);
+        let master = self.cloud.instance(&entry.master_id)?;
+        let project = master.fs.clone();
+        let script = Self::load_script(&project, &pdir, rscript)?;
+
+        self.set_cluster_lock(&name, true)?;
+        let nodes: Vec<NodeSpec> = entry
+            .all_ids()
+            .iter()
+            .enumerate()
+            .map(|(i, _)| NodeSpec {
+                name: if i == 0 {
+                    format!("{name}_Master")
+                } else {
+                    format!("{name}_Worker{i}")
+                },
+                cores: spec.cores,
+                mem_gb: spec.mem_gb,
+                core_speed: spec.core_speed,
+            })
+            .collect();
+        let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(total_cores);
+        // Memory feasibility check — the reason bynode exists (§3.2.2).
+        if let Some(mem) = script.get("mem_gb_per_proc").and_then(Json::as_f64) {
+            if !scheduler::feasible(nproc, mem, &nodes, placement) {
+                self.set_cluster_lock(&name, false)?;
+                bail!(
+                    "{nproc} processes needing {mem} GB each do not fit under {placement:?}; \
+                     try -bynode or fewer slaves"
+                );
+            }
+        }
+        let assignment = scheduler::schedule(nproc, &nodes, placement);
+        let view = ResourceView {
+            nodes,
+            assignment,
+            net: self.cloud.net.clone(),
+            resource_name: name.clone(),
+            real_threads: self.threads,
+        };
+        let out = self.engine.run(rscript, &script, &project, &pdir, &view);
+        self.set_cluster_lock(&name, false)?;
+        let out = out?;
+
+        let start = self.cloud.clock.now_s();
+        self.cloud.clock.advance(out.compute_s);
+        self.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("run {rscript} ({runname}) on cluster {name}"),
+            start,
+        );
+        // Scenario 1/3 files on the master…
+        let master_fs = self.cloud.instance_fs_mut(&entry.master_id)?;
+        for (rel, bytes) in &out.master_files {
+            master_fs.write(&format!("{pdir}/results/{runname}/{rel}"), bytes.clone());
+        }
+        // …scenario 2/3 files on the workers.
+        for (widx, rel, bytes) in &out.worker_files {
+            let Some(wid) = entry.worker_ids.get(*widx) else {
+                bail!("engine wrote to nonexistent worker {widx}");
+            };
+            let fs = self.cloud.instance_fs_mut(wid)?;
+            fs.write(&format!("{pdir}/results/{runname}/{rel}"), bytes.clone());
+        }
+        Ok(out)
+    }
+
+    /// Run a script locally on a Table-I desktop (Fig 5 comparison).
+    pub fn run_local(
+        &mut self,
+        desktop: &super::DesktopSpec,
+        projectdir: &str,
+        rscript: &str,
+        runname: &str,
+    ) -> Result<TaskOutput> {
+        let script = Self::load_script(&self.analyst, projectdir, rscript)?;
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(desktop.cores);
+        let view = ResourceView {
+            nodes: vec![NodeSpec {
+                name: desktop.name.clone(),
+                cores: desktop.cores,
+                mem_gb: desktop.mem_gb,
+                core_speed: desktop.core_speed,
+            }],
+            assignment: vec![0; nproc],
+            net: self.cloud.net.clone(),
+            resource_name: desktop.name.clone(),
+            real_threads: self.threads,
+        };
+        let project = self.analyst.clone();
+        let out = self.engine.run(rscript, &script, &project, projectdir, &view)?;
+        let start = self.cloud.clock.now_s();
+        self.cloud.clock.advance(out.compute_s);
+        self.cloud.clock.push_span(
+            SpanCategory::Compute,
+            &format!("run {rscript} ({runname}) on {}", desktop.name),
+            start,
+        );
+        let local = format!("{}/{runname}", local_results_dir(projectdir));
+        for (rel, bytes) in &out.master_files {
+            self.analyst.write(&format!("{local}/{rel}"), bytes.clone());
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,684 @@
+//! The P2RAC session: the Analyst-side object every command-line tool
+//! operates on. One `Session` owns the simulated cloud, the Analyst
+//! workstation filesystem, the four configuration files (paper §3.4)
+//! and the script engine, and exposes one method per paper command.
+//!
+//! The implementation is split along the paper's three management
+//! concerns (§3.2): [`resources`] (create/terminate/resize/lock),
+//! [`data`] (project sync, result gathering and the storage plane) and
+//! [`exec`] (running scripts). This file holds the session state,
+//! configuration persistence and name resolution they all share.
+
+mod data;
+mod exec;
+mod resources;
+
+use super::engine::ScriptEngine;
+use crate::config::{
+    ClusterEntry, ClustersConfig, InstanceEntry, InstancesConfig, PlatformConfig, RLibsConfig,
+    CONFIG_DIR,
+};
+use crate::simcloud::{Lifecycle, SimCloud, SimParams, Vfs};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Result-gathering scope (paper §3.2.2: the three scenarios).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResultScope {
+    FromMaster,
+    FromWorkers,
+    FromAll,
+}
+
+/// A non-cloud resource (paper Table I: Desktop A / Desktop B) on which
+/// the same scripts can run for the timing comparison of Fig 5.
+#[derive(Clone, Debug)]
+pub struct DesktopSpec {
+    pub name: String,
+    pub cores: usize,
+    pub mem_gb: f64,
+    pub core_speed: f64,
+}
+
+/// The two desktops of Table I.
+pub fn table1_desktops() -> Vec<DesktopSpec> {
+    vec![
+        DesktopSpec {
+            name: "Desktop A".into(),
+            cores: 8,
+            mem_gb: 16.0,
+            core_speed: 1.00,
+        },
+        DesktopSpec {
+            name: "Desktop B".into(),
+            cores: 6,
+            mem_gb: 24.0,
+            core_speed: 0.82,
+        },
+    ]
+}
+
+/// Options for `ec2createinstance`.
+#[derive(Clone, Debug, Default)]
+pub struct CreateInstanceOpts {
+    pub iname: Option<String>,
+    pub ebsvol: Option<String>,
+    pub snap: Option<String>,
+    pub itype: Option<String>,
+    pub desc: Option<String>,
+    /// Request spot capacity (bid = the on-demand rate, the classic
+    /// "never outbid, just ride the discount" strategy).
+    pub spot: bool,
+    /// Tenant the instance (and its usage charges) belongs to.
+    pub analyst: Option<String>,
+}
+
+/// Options for `ec2createcluster`.
+#[derive(Clone, Debug, Default)]
+pub struct CreateClusterOpts {
+    pub cname: Option<String>,
+    pub csize: Option<usize>,
+    pub ebsvol: Option<String>,
+    pub snap: Option<String>,
+    pub itype: Option<String>,
+    pub desc: Option<String>,
+    /// Request spot capacity for every node of the cluster.
+    pub spot: bool,
+    /// Tenant the cluster (and its usage charges) belongs to.
+    pub analyst: Option<String>,
+}
+
+/// Bid used for `-spot` requests: the on-demand rate in centi-cents.
+fn spot_bid(spec: &crate::simcloud::InstanceTypeSpec) -> Lifecycle {
+    Lifecycle::Spot {
+        bid_centi_cents_hour: spec.price_cents_hour * 100,
+    }
+}
+
+/// One P2RAC session.
+pub struct Session {
+    pub cloud: SimCloud,
+    /// The Analyst's workstation filesystem (projects + configs).
+    pub analyst: Vfs,
+    pub platform: PlatformConfig,
+    pub instances_cfg: InstancesConfig,
+    pub clusters_cfg: ClustersConfig,
+    pub rlibs: RLibsConfig,
+    /// Real OS threads the analytics engine may use for this
+    /// invocation (CLI `-threads`); `None` = host parallelism. A
+    /// runtime knob, deliberately not persisted with the session.
+    pub threads: Option<usize>,
+    engine: Box<dyn ScriptEngine>,
+}
+
+fn project_name(projectdir: &str) -> String {
+    projectdir
+        .trim_end_matches('/')
+        .rsplit('/')
+        .next()
+        .unwrap_or(projectdir)
+        .to_string()
+}
+
+/// Where a project lands on an instance: "synchronised at the home
+/// directory of the root user" (§3.2.1).
+fn remote_project_dir(projectdir: &str) -> String {
+    format!("root/{}", project_name(projectdir))
+}
+
+/// Results directory at the Analyst site: "stored in a directory at the
+/// same hierarchical level of the project directory" (§3.2.2).
+fn local_results_dir(projectdir: &str) -> String {
+    let base = projectdir.trim_end_matches('/');
+    match base.rsplit_once('/') {
+        Some((parent, name)) => format!("{parent}/{name}_results"),
+        None => format!("{base}_results"),
+    }
+}
+
+impl Session {
+    /// Create a session against a fresh simulated cloud. `ec2configurep2rac`
+    /// equivalent: seeds the platform config with the cloud's default AMI
+    /// and a default snapshot.
+    pub fn new(params: SimParams, engine: Box<dyn ScriptEngine>) -> Self {
+        let mut cloud = SimCloud::new(params);
+        let default_snapshot = cloud.create_snapshot(8.0, Vfs::new(), "p2rac default snapshot");
+        let platform = PlatformConfig {
+            default_ami: cloud.default_ami(false).id.clone(),
+            default_snapshot,
+            ..PlatformConfig::default()
+        };
+        let mut s = Self {
+            cloud,
+            analyst: Vfs::new(),
+            platform,
+            instances_cfg: InstancesConfig::default(),
+            clusters_cfg: ClustersConfig::default(),
+            rlibs: RLibsConfig::default(),
+            threads: None,
+            engine,
+        };
+        s.save_configs();
+        s
+    }
+
+    /// Swap the script engine (used by benches to insert mocks).
+    pub fn set_engine(&mut self, engine: Box<dyn ScriptEngine>) {
+        self.engine = engine;
+    }
+
+    /// Persist the four config files onto the Analyst-site vfs.
+    pub fn save_configs(&mut self) {
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/p2rac.json"),
+            self.platform.to_json().to_string_pretty().into_bytes(),
+        );
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/instances.json"),
+            self.instances_cfg.to_json().to_string_pretty().into_bytes(),
+        );
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/clusters.json"),
+            self.clusters_cfg.to_json().to_string_pretty().into_bytes(),
+        );
+        self.analyst.write(
+            &format!("{CONFIG_DIR}/rlibs.json"),
+            self.rlibs.to_json().to_string_pretty().into_bytes(),
+        );
+    }
+
+    /// Serialize the whole session (cloud + analyst site + configs) for
+    /// cross-invocation CLI use.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cloud", self.cloud.to_json());
+        j.set("analyst", self.analyst.to_json());
+        j.set("platform", self.platform.to_json());
+        j.set("instances", self.instances_cfg.to_json());
+        j.set("clusters", self.clusters_cfg.to_json());
+        j.set("rlibs", self.rlibs.to_json());
+        j
+    }
+
+    /// Restore a persisted session with a fresh engine.
+    pub fn from_json(
+        params: SimParams,
+        engine: Box<dyn ScriptEngine>,
+        j: &Json,
+    ) -> Result<Self> {
+        Ok(Self {
+            cloud: SimCloud::from_json(
+                params,
+                j.get("cloud").ok_or_else(|| anyhow!("missing cloud state"))?,
+            )?,
+            analyst: Vfs::from_json(
+                j.get("analyst").ok_or_else(|| anyhow!("missing analyst state"))?,
+            )?,
+            platform: PlatformConfig::from_json(
+                j.get("platform").ok_or_else(|| anyhow!("missing platform"))?,
+            )?,
+            instances_cfg: InstancesConfig::from_json(
+                j.get("instances").ok_or_else(|| anyhow!("missing instances"))?,
+            )?,
+            clusters_cfg: ClustersConfig::from_json(
+                j.get("clusters").ok_or_else(|| anyhow!("missing clusters"))?,
+            )?,
+            rlibs: RLibsConfig::from_json(
+                j.get("rlibs").ok_or_else(|| anyhow!("missing rlibs"))?,
+            )?,
+            threads: None,
+            engine,
+        })
+    }
+
+    // ===================================================== name resolution
+
+    fn resolve_iname(&self, iname: Option<&str>) -> Result<String> {
+        match iname {
+            Some(n) => Ok(n.to_string()),
+            None => self
+                .platform
+                .default_instance
+                .clone()
+                .ok_or_else(|| anyhow!("no -iname given and no default instance configured")),
+        }
+    }
+
+    fn resolve_cname(&self, cname: Option<&str>) -> Result<String> {
+        match cname {
+            Some(n) => Ok(n.to_string()),
+            None => self
+                .platform
+                .default_cluster
+                .clone()
+                .ok_or_else(|| anyhow!("no -cname given and no default cluster configured")),
+        }
+    }
+
+    fn instance_entry(&self, name: &str) -> Result<&InstanceEntry> {
+        self.instances_cfg
+            .get(name)
+            .ok_or_else(|| anyhow!("no instance named '{name}' in the configuration file"))
+    }
+
+    fn cluster_entry(&self, name: &str) -> Result<&ClusterEntry> {
+        self.clusters_cfg
+            .get(name)
+            .ok_or_else(|| anyhow!("no cluster named '{name}' in the configuration file"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::{MockEngine, ResourceView, ScriptEngine, TaskOutput};
+    use crate::coordinator::scheduler::Placement;
+    use crate::simcloud::SpanCategory;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(1000.0)))
+    }
+
+    fn write_project(s: &mut Session, dir: &str, data_bytes: usize) {
+        s.analyst.write(
+            &format!("{dir}/sweep.json"),
+            br#"{"type":"mock","slaves":4}"#.to_vec(),
+        );
+        s.analyst
+            .write(&format!("{dir}/data/input.bin"), vec![7u8; data_bytes]);
+    }
+
+    #[test]
+    fn instance_workflow_figure2() {
+        // The full Fig-2 workflow: create → send → run → fetch → terminate.
+        let mut s = session();
+        write_project(&mut s, "home/analyst/sweep", 50_000);
+        let name = s
+            .create_instance(&CreateInstanceOpts {
+                iname: Some("hpc_instance".into()),
+                itype: Some("m2.4xlarge".into()),
+                desc: Some("For Trial Simulation Run".into()),
+                ..Default::default()
+            })
+            .unwrap();
+        assert_eq!(name, "hpc_instance");
+        assert!(s.instances_cfg.contains("hpc_instance"));
+
+        let rep = s
+            .send_data_to_instance(Some("hpc_instance"), "home/analyst/sweep")
+            .unwrap();
+        assert_eq!(rep.files_sent, 2);
+
+        let out = s
+            .run_on_instance(Some("hpc_instance"), "home/analyst/sweep", "sweep.json", "run1")
+            .unwrap();
+        assert!(out.compute_s > 0.0);
+
+        let fetched = s
+            .get_results_from_instance(Some("hpc_instance"), "home/analyst/sweep", "run1")
+            .unwrap();
+        assert!(fetched.files_sent >= 1);
+        assert!(s
+            .analyst
+            .exists("home/analyst/sweep_results/run1/summary.json"));
+
+        s.terminate_instance(Some("hpc_instance"), true).unwrap();
+        assert!(!s.instances_cfg.contains("hpc_instance"));
+        assert!(s.cloud.live_instances().is_empty());
+    }
+
+    #[test]
+    fn cluster_workflow_figure3() {
+        let mut s = session();
+        write_project(&mut s, "home/analyst/catopt", 80_000);
+        let name = s
+            .create_cluster(&CreateClusterOpts {
+                cname: Some("hpc_cluster".into()),
+                csize: Some(4),
+                itype: Some("m2.2xlarge".into()),
+                ..Default::default()
+            })
+            .unwrap();
+        let entry = s.clusters_cfg.get(&name).unwrap().clone();
+        assert_eq!(entry.size, 4);
+        assert_eq!(entry.worker_ids.len(), 3);
+        // Master holds the volume; workers NFS-mount it.
+        let master = s.cloud.instance(&entry.master_id).unwrap();
+        assert!(master.attached_volume.is_some());
+        for w in &entry.worker_ids {
+            assert_eq!(
+                s.cloud.instance(w).unwrap().nfs_mount_from,
+                master.attached_volume
+            );
+        }
+
+        let reps = s
+            .send_data_to_cluster_nodes(Some("hpc_cluster"), "home/analyst/catopt")
+            .unwrap();
+        assert_eq!(reps.len(), 4);
+        for id in entry.all_ids() {
+            assert!(s
+                .cloud
+                .instance(&id)
+                .unwrap()
+                .fs
+                .exists("root/catopt/sweep.json"));
+        }
+
+        let out = s
+            .run_on_cluster(
+                Some("hpc_cluster"),
+                "home/analyst/catopt",
+                "sweep.json",
+                "trial1",
+                Placement::ByNode,
+            )
+            .unwrap();
+        assert!(out.compute_s > 0.0);
+
+        let rep = s
+            .get_results(
+                Some("hpc_cluster"),
+                "home/analyst/catopt",
+                "trial1",
+                ResultScope::FromMaster,
+            )
+            .unwrap();
+        assert!(rep.files_sent >= 1);
+        assert!(s
+            .analyst
+            .exists("home/analyst/catopt_results/trial1/summary.json"));
+
+        s.terminate_cluster(Some("hpc_cluster"), false).unwrap();
+        assert!(s.cloud.live_instances().is_empty());
+        // Volume persisted (no -deletevol).
+        assert_eq!(s.cloud.live_volumes().len(), 1);
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("a".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(s
+            .create_instance(&CreateInstanceOpts {
+                iname: Some("a".into()),
+                ..Default::default()
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn ebsvol_and_snap_conflict() {
+        let mut s = session();
+        let e = s.create_instance(&CreateInstanceOpts {
+            iname: Some("x".into()),
+            ebsvol: Some("vol-1".into()),
+            snap: Some("snap-1".into()),
+            ..Default::default()
+        });
+        assert!(e.unwrap_err().to_string().contains("cannot be specified"));
+    }
+
+    #[test]
+    fn in_use_cluster_refuses_termination() {
+        let mut s = session();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+        s.set_cluster_lock("c", true).unwrap();
+        assert!(s.terminate_cluster(Some("c"), false).is_err());
+        s.set_cluster_lock("c", false).unwrap();
+        s.terminate_cluster(Some("c"), false).unwrap();
+    }
+
+    #[test]
+    fn run_locks_and_unlocks() {
+        let mut s = session();
+        write_project(&mut s, "p", 1000);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_instance(Some("i"), "p").unwrap();
+        s.run_on_instance(Some("i"), "p", "sweep.json", "r1").unwrap();
+        // Unlocked afterwards.
+        assert!(!s.instances_cfg.get("i").unwrap().in_use);
+        // Manual lock blocks a run.
+        s.set_instance_lock("i", true).unwrap();
+        assert!(s.run_on_instance(Some("i"), "p", "sweep.json", "r2").is_err());
+    }
+
+    #[test]
+    fn missing_script_is_an_error() {
+        let mut s = session();
+        write_project(&mut s, "p", 100);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_instance(Some("i"), "p").unwrap();
+        let e = s.run_on_instance(Some("i"), "p", "nope.json", "r");
+        assert!(e.unwrap_err().to_string().contains("not found"));
+    }
+
+    #[test]
+    fn default_names_from_platform_config() {
+        let mut s = session();
+        write_project(&mut s, "p", 100);
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("only".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        // iname omitted → default instance from config.
+        s.send_data_to_instance(None, "p").unwrap();
+        assert!(s
+            .cloud
+            .find_by_name("only")
+            .unwrap()
+            .fs
+            .exists("root/p/sweep.json"));
+    }
+
+    #[test]
+    fn terminate_all_clears_everything() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i1".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c1".into()),
+            csize: Some(2),
+            ..Default::default()
+        })
+        .unwrap();
+        let log = s.terminate_all(true, true, true, true).unwrap();
+        assert!(log.len() >= 4);
+        assert!(s.cloud.live_instances().is_empty());
+        assert!(s.cloud.live_volumes().is_empty());
+        assert!(s.cloud.live_snapshots().is_empty());
+        assert!(s.instances_cfg.names().is_empty());
+        assert!(s.clusters_cfg.names().is_empty());
+    }
+
+    #[test]
+    fn management_spans_recorded_for_figures() {
+        let mut s = session();
+        write_project(&mut s, "p", 10_000);
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_master(Some("c"), "p").unwrap();
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        s.run_on_cluster(Some("c"), "p", "sweep.json", "r", Placement::ByNode)
+            .unwrap();
+        s.get_results(Some("c"), "p", "r", ResultScope::FromMaster).unwrap();
+        s.terminate_cluster(Some("c"), false).unwrap();
+        let cl = &s.cloud.clock;
+        assert!(cl.category_total_s(SpanCategory::CreateResource) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::SubmitToMaster) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::SubmitToAllNodes) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::FetchFromMaster) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::TerminateResource) > 0.0);
+        assert!(cl.category_total_s(SpanCategory::Compute) > 0.0);
+        // Creation dominates for small data (paper Figs 6–7 shape).
+        assert!(
+            cl.category_total_s(SpanCategory::CreateResource)
+                > cl.category_total_s(SpanCategory::SubmitToMaster)
+        );
+    }
+
+    #[test]
+    fn worker_results_gathered_fromall() {
+        // Engine that writes files on workers (paper's scenario 3).
+        struct WorkerEngine;
+        impl ScriptEngine for WorkerEngine {
+            fn run(
+                &mut self,
+                _s: &str,
+                _j: &Json,
+                _p: &Vfs,
+                _d: &str,
+                r: &ResourceView,
+            ) -> anyhow::Result<TaskOutput> {
+                Ok(TaskOutput {
+                    master_files: vec![("agg.json".into(), b"{}".to_vec())],
+                    worker_files: (0..r.nodes.len() - 1)
+                        .map(|w| (w, format!("part{w}.bin"), vec![w as u8; 64]))
+                        .collect(),
+                    compute_s: 10.0,
+                    summary: Json::Null,
+                })
+            }
+        }
+        let mut s = Session::new(SimParams::default(), Box::new(WorkerEngine));
+        write_project(&mut s, "p", 1000);
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(3),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        s.run_on_cluster(Some("c"), "p", "sweep.json", "r", Placement::ByNode)
+            .unwrap();
+        let rep = s
+            .get_results(Some("c"), "p", "r", ResultScope::FromAll)
+            .unwrap();
+        assert!(rep.files_sent >= 3);
+        assert!(s.analyst.exists("p_results/r/master/agg.json"));
+        assert!(s.analyst.exists("p_results/r/worker0/part0.bin"));
+        assert!(s.analyst.exists("p_results/r/worker1/part1.bin"));
+        // fromworkers only:
+        let rep2 = s
+            .get_results(Some("c"), "p", "r", ResultScope::FromWorkers)
+            .unwrap();
+        assert!(rep2.files_unchanged + rep2.files_sent >= 2);
+    }
+
+    #[test]
+    fn memory_infeasible_byslot_rejected() {
+        let mut s = session();
+        s.analyst.write(
+            "p/big.json",
+            br#"{"type":"mock","slaves":4,"mem_gb_per_proc":30.0}"#.to_vec(),
+        );
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("c".into()),
+            csize: Some(4),
+            itype: Some("m2.2xlarge".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        s.send_data_to_cluster_nodes(Some("c"), "p").unwrap();
+        // 4 × 30 GB on one 34.2 GB node → infeasible byslot…
+        let e = s.run_on_cluster(Some("c"), "p", "big.json", "r", Placement::BySlot);
+        assert!(e.is_err());
+        // …but bynode spreads them, one per node.
+        assert!(!s.clusters_cfg.get("c").unwrap().in_use, "must unlock after failure");
+        s.run_on_cluster(Some("c"), "p", "big.json", "r", Placement::ByNode)
+            .unwrap();
+    }
+
+    #[test]
+    fn login_banner_mentions_dns() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        let b = s.login_banner(Some("i"), None).unwrap();
+        assert!(b.contains("ssh root@ec2-"));
+    }
+
+    #[test]
+    fn spot_cluster_interruption_reclaims_but_keeps_volume() {
+        let mut s = session();
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some("sc".into()),
+            csize: Some(3),
+            spot: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let e = s.clusters_cfg.get("sc").unwrap().clone();
+        let vol = e.volume_id.clone().unwrap();
+        for id in e.all_ids() {
+            assert!(s.cloud.instance(&id).unwrap().is_spot());
+        }
+        // A run is in flight — interruptions do not care.
+        s.set_cluster_lock("sc", true).unwrap();
+        s.spot_interrupt_cluster("sc").unwrap();
+        assert!(s.clusters_cfg.get("sc").is_none());
+        assert!(s.cloud.live_instances().is_empty());
+        assert!(
+            s.cloud.volume(&vol).is_ok(),
+            "EBS volume must survive the interruption"
+        );
+    }
+
+    #[test]
+    fn desktop_local_run_writes_results() {
+        let mut s = session();
+        write_project(&mut s, "p", 500);
+        let d = table1_desktops();
+        let out = s.run_local(&d[0], "p", "sweep.json", "r1").unwrap();
+        assert!(out.compute_s > 0.0);
+        assert!(s.analyst.exists("p_results/r1/summary.json"));
+    }
+
+    #[test]
+    fn analyst_tag_rides_instances_into_the_ledger() {
+        let mut s = session();
+        s.create_instance(&CreateInstanceOpts {
+            iname: Some("i".into()),
+            analyst: Some("alice".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        let id = s.instances_cfg.get("i").unwrap().instance_id.clone();
+        assert_eq!(
+            s.cloud.instance(&id).unwrap().tags.get("p2rac:analyst"),
+            Some(&"alice".to_string())
+        );
+        s.terminate_instance(Some("i"), true).unwrap();
+        // The instance-hours landed on alice's side of the ledger.
+        assert!(s.cloud.ledger.total_centi_cents_for("alice") > 0);
+        assert!(s.cloud.ledger.analysts().contains(&"alice".to_string()));
+    }
+}

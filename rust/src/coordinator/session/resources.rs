@@ -1,0 +1,534 @@
+//! Resource management (paper §3.2.1/§3.2.2): creating, terminating,
+//! resizing and locking instances and clusters, plus the spot-reclaim
+//! teardown path and the `ec2terminateall` big red switch.
+
+use super::{spot_bid, CreateClusterOpts, CreateInstanceOpts, Session};
+use crate::config::{ClusterEntry, InstanceEntry};
+use crate::simcloud::{instance_type, CloudError, Lifecycle, SpanCategory};
+use anyhow::{anyhow, bail, Context, Result};
+
+impl Session {
+    /// `ec2createinstance`.
+    pub fn create_instance(&mut self, opts: &CreateInstanceOpts) -> Result<String> {
+        let name = opts
+            .iname
+            .clone()
+            .unwrap_or_else(|| format!("instance{}", self.instances_cfg.entries.len() + 1));
+        if self.instances_cfg.contains(&name) {
+            bail!("an instance named '{name}' already exists (names must be unique)");
+        }
+        let itype = opts
+            .itype
+            .clone()
+            .unwrap_or_else(|| self.platform.default_type.clone());
+        let spec = instance_type(&itype)
+            .ok_or_else(|| anyhow!("instance type '{itype}' is not offered"))?;
+        let ami = if spec.hvm {
+            self.cloud.default_ami(true).id.clone()
+        } else {
+            self.platform.default_ami.clone()
+        };
+
+        let lifecycle = if opts.spot {
+            spot_bid(spec)
+        } else {
+            Lifecycle::OnDemand
+        };
+        let start = self.cloud.clock.now_s();
+        let ids = self
+            .cloud
+            .run_instances_as(1, &itype, &ami, &self.rlibs.libraries, lifecycle)
+            .context("launching instance")?;
+        let id = ids[0].clone();
+        self.cloud.set_name(&id, &name)?;
+        self.cloud.set_tag(&id, "p2rac:name", &name)?;
+        if let Some(a) = &opts.analyst {
+            self.cloud.set_tag(&id, "p2rac:analyst", a)?;
+        }
+
+        // Volume resolution: -ebsvol | -snap | default snapshot.
+        let vol_id = match (&opts.ebsvol, &opts.snap) {
+            (Some(_), Some(_)) => bail!("-ebsvol and -snap cannot be specified at the same time"),
+            (Some(v), None) => {
+                self.cloud.volume(v).map_err(|e| anyhow!(e.to_string()))?;
+                v.clone()
+            }
+            (None, Some(s)) => self.cloud.create_volume_from_snapshot(s)?,
+            (None, None) => self
+                .cloud
+                .create_volume_from_snapshot(&self.platform.default_snapshot)?,
+        };
+        self.cloud.attach_volume(&vol_id, &id)?;
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("create instance {name}"),
+            start,
+        );
+
+        let inst = self.cloud.instance(&id)?;
+        self.instances_cfg.insert(
+            &name,
+            InstanceEntry {
+                instance_id: id.clone(),
+                public_dns: inst.public_dns.clone(),
+                volume_id: Some(vol_id),
+                instance_type: itype,
+                description: opts.desc.clone().unwrap_or_default(),
+                in_use: false,
+            },
+        );
+        self.platform.default_instance = Some(name.clone());
+        self.save_configs();
+        Ok(name)
+    }
+
+    /// `ec2terminateinstance`.
+    pub fn terminate_instance(&mut self, iname: Option<&str>, deletevol: bool) -> Result<()> {
+        let name = self.resolve_iname(iname)?;
+        let entry = self.instance_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("instance '{name}' is in use; unlock it with ec2resourcelock -free first");
+        }
+        let start = self.cloud.clock.now_s();
+        if let Some(vol) = &entry.volume_id {
+            self.cloud.detach_volume(vol).ok();
+        }
+        self.cloud
+            .terminate_instances(std::slice::from_ref(&entry.instance_id))?;
+        if deletevol {
+            if let Some(vol) = &entry.volume_id {
+                self.cloud.delete_volume(vol)?;
+            }
+        }
+        self.cloud.clock.push_span(
+            SpanCategory::TerminateResource,
+            &format!("terminate instance {name}"),
+            start,
+        );
+        self.instances_cfg.remove(&name);
+        if self.platform.default_instance.as_deref() == Some(name.as_str()) {
+            self.platform.default_instance = self.instances_cfg.names().first().cloned();
+        }
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2createcluster`.
+    pub fn create_cluster(&mut self, opts: &CreateClusterOpts) -> Result<String> {
+        let name = opts
+            .cname
+            .clone()
+            .unwrap_or_else(|| format!("cluster{}", self.clusters_cfg.entries.len() + 1));
+        if self.clusters_cfg.contains(&name) {
+            bail!("a cluster named '{name}' already exists (names must be unique)");
+        }
+        let csize = opts.csize.unwrap_or(self.platform.default_cluster_size);
+        if csize < 2 {
+            bail!("cluster size must be at least 2 (1 master + workers), got {csize}");
+        }
+        let itype = opts
+            .itype
+            .clone()
+            .unwrap_or_else(|| self.platform.default_type.clone());
+        let spec = instance_type(&itype)
+            .ok_or_else(|| anyhow!("instance type '{itype}' is not offered"))?;
+        let ami = if spec.hvm {
+            self.cloud.default_ami(true).id.clone()
+        } else {
+            self.platform.default_ami.clone()
+        };
+
+        let lifecycle = if opts.spot {
+            spot_bid(spec)
+        } else {
+            Lifecycle::OnDemand
+        };
+        let start = self.cloud.clock.now_s();
+        let ids = self
+            .cloud
+            .run_instances_as(csize, &itype, &ami, &self.rlibs.libraries, lifecycle)
+            .context("launching cluster instances")?;
+        let master = ids[0].clone();
+        let workers: Vec<String> = ids[1..].to_vec();
+        self.cloud.set_tag(&master, "p2rac:role", &format!("{name}_Master"))?;
+        for w in &workers {
+            self.cloud.set_tag(w, "p2rac:role", &format!("{name}_Workers"))?;
+        }
+        if let Some(a) = &opts.analyst {
+            for id in &ids {
+                self.cloud.set_tag(id, "p2rac:analyst", a)?;
+            }
+        }
+
+        let vol_id = match (&opts.ebsvol, &opts.snap) {
+            (Some(_), Some(_)) => bail!("-ebsvol and -snap cannot be specified at the same time"),
+            (Some(v), None) => {
+                self.cloud.volume(v).map_err(|e| anyhow!(e.to_string()))?;
+                v.clone()
+            }
+            (None, Some(s)) => self.cloud.create_volume_from_snapshot(s)?,
+            (None, None) => self
+                .cloud
+                .create_volume_from_snapshot(&self.platform.default_snapshot)?,
+        };
+        self.cloud.attach_volume(&vol_id, &master)?;
+        self.cloud.nfs_export(&master, &vol_id, &workers)?;
+        // Master/worker configuration (hosts files, SNOW socket setup).
+        let cfg_s = self.cloud.params().cluster_config_base_s;
+        self.cloud.clock.advance(cfg_s);
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("create cluster {name} ({csize} nodes)"),
+            start,
+        );
+
+        let master_dns = self.cloud.instance(&master)?.public_dns.clone();
+        let worker_dns: Vec<String> = workers
+            .iter()
+            .map(|w| self.cloud.instance(w).map(|i| i.public_dns.clone()))
+            .collect::<std::result::Result<_, CloudError>>()?;
+        self.clusters_cfg.insert(
+            &name,
+            ClusterEntry {
+                size: csize,
+                master_id: master,
+                master_dns,
+                worker_ids: workers,
+                worker_dns,
+                volume_id: Some(vol_id),
+                instance_type: itype,
+                description: opts.desc.clone().unwrap_or_default(),
+                in_use: false,
+            },
+        );
+        self.platform.default_cluster = Some(name.clone());
+        self.save_configs();
+        Ok(name)
+    }
+
+    /// `ec2terminatecluster`.
+    pub fn terminate_cluster(&mut self, cname: Option<&str>, deletevol: bool) -> Result<()> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        // "whether a cluster is in use is firstly checked" (§3.2.2).
+        if entry.in_use {
+            bail!("cluster '{name}' is in use and cannot be terminated");
+        }
+        let start = self.cloud.clock.now_s();
+        self.cloud.nfs_unexport(&entry.worker_ids)?;
+        if let Some(vol) = &entry.volume_id {
+            self.cloud.detach_volume(vol).ok();
+        }
+        self.cloud.terminate_instances(&entry.all_ids())?;
+        if deletevol {
+            if let Some(vol) = &entry.volume_id {
+                self.cloud.delete_volume(vol)?;
+            }
+        }
+        self.cloud.clock.push_span(
+            SpanCategory::TerminateResource,
+            &format!("terminate cluster {name}"),
+            start,
+        );
+        self.clusters_cfg.remove(&name);
+        if self.platform.default_cluster.as_deref() == Some(name.as_str()) {
+            self.platform.default_cluster = self.clusters_cfg.names().first().cloned();
+        }
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2resizecluster` — the dynamic scaling the paper lists as
+    /// future work (§5): grow or shrink a running cluster. New workers
+    /// boot, NFS-mount the master's volume and join the worker pool;
+    /// removed workers are drained (refused while the cluster is
+    /// locked) and terminated.
+    pub fn resize_cluster(&mut self, cname: Option<&str>, new_size: usize) -> Result<()> {
+        let name = self.resolve_cname(cname)?;
+        let entry = self.cluster_entry(&name)?.clone();
+        if entry.in_use {
+            bail!("cluster '{name}' is in use; cannot resize mid-run");
+        }
+        if new_size < 2 {
+            bail!("cluster size must be at least 2, got {new_size}");
+        }
+        if new_size == entry.size {
+            return Ok(());
+        }
+        let start = self.cloud.clock.now_s();
+        let mut worker_ids = entry.worker_ids.clone();
+        let mut worker_dns = entry.worker_dns.clone();
+        if new_size > entry.size {
+            // Grow: boot the delta as one batch, mount the shared
+            // volume. New workers inherit the master's purchase model
+            // (a spot cluster grows with spot capacity).
+            let add = new_size - entry.size;
+            let (ami, lifecycle, owner) = {
+                let inst = self.cloud.instance(&entry.master_id)?;
+                (
+                    inst.ami_id.clone(),
+                    inst.lifecycle,
+                    inst.tags.get("p2rac:analyst").cloned(),
+                )
+            };
+            let ids = self
+                .cloud
+                .run_instances_as(add, &entry.instance_type, &ami, &self.rlibs.libraries, lifecycle)
+                .context("scaling cluster up")?;
+            if let Some(vol) = &entry.volume_id {
+                self.cloud.nfs_export(&entry.master_id, vol, &ids)?;
+            }
+            for id in &ids {
+                self.cloud
+                    .set_tag(id, "p2rac:role", &format!("{name}_Workers"))?;
+                // Grown capacity belongs to whoever owns the cluster.
+                if let Some(a) = &owner {
+                    self.cloud.set_tag(id, "p2rac:analyst", a)?;
+                }
+                worker_dns.push(self.cloud.instance(id)?.public_dns.clone());
+            }
+            worker_ids.extend(ids);
+        } else {
+            // Shrink: drain and terminate the tail workers.
+            let drop_n = entry.size - new_size;
+            let dropped: Vec<String> = worker_ids.split_off(worker_ids.len() - drop_n);
+            worker_dns.truncate(worker_dns.len() - drop_n);
+            self.cloud.nfs_unexport(&dropped)?;
+            self.cloud.terminate_instances(&dropped)?;
+        }
+        self.cloud.clock.push_span(
+            SpanCategory::CreateResource,
+            &format!("resize cluster {name} {} -> {new_size}", entry.size),
+            start,
+        );
+        let e = self.clusters_cfg.get_mut(&name).expect("checked above");
+        e.size = new_size;
+        e.worker_ids = worker_ids;
+        e.worker_dns = worker_dns;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// The provider reclaims a spot cluster (price exceeded the bid).
+    /// Unlike [`Session::terminate_cluster`] this ignores the in-use
+    /// lock — interruptions do not wait for runs to finish — and bills
+    /// every node with the interrupted-partial-hour-free rule. The
+    /// shared EBS volume survives, exactly like a real interruption:
+    /// anything checkpointed to it is recoverable by replacement
+    /// capacity.
+    pub fn spot_interrupt_cluster(&mut self, cname: &str) -> Result<()> {
+        let entry = self.cluster_entry(cname)?.clone();
+        let start = self.cloud.clock.now_s();
+        self.cloud.nfs_unexport(&entry.worker_ids)?;
+        if let Some(vol) = &entry.volume_id {
+            self.cloud.detach_volume(vol).ok();
+        }
+        self.cloud.spot_interrupt_instances(&entry.all_ids())?;
+        self.cloud.clock.push_span(
+            SpanCategory::TerminateResource,
+            &format!("spot interruption reclaims cluster {cname}"),
+            start,
+        );
+        self.clusters_cfg.remove(cname);
+        if self.platform.default_cluster.as_deref() == Some(cname) {
+            self.platform.default_cluster = self.clusters_cfg.names().first().cloned();
+        }
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2terminateall`.
+    pub fn terminate_all(
+        &mut self,
+        instances: bool,
+        clusters: bool,
+        ebsvolumes: bool,
+        snapshots: bool,
+    ) -> Result<Vec<String>> {
+        let mut log = Vec::new();
+        if clusters {
+            for name in self.clusters_cfg.names() {
+                // Force-unlock: ec2terminateall is the big red switch.
+                if let Some(e) = self.clusters_cfg.get_mut(&name) {
+                    e.in_use = false;
+                }
+                self.terminate_cluster(Some(&name), false)?;
+                log.push(format!("terminated cluster {name}"));
+            }
+        }
+        if instances {
+            for name in self.instances_cfg.names() {
+                if let Some(e) = self.instances_cfg.entries.get_mut(&name) {
+                    e.in_use = false;
+                }
+                let id = self.instance_entry(&name)?.instance_id.clone();
+                self.cloud.set_lock(&id, false).ok();
+                self.terminate_instance(Some(&name), false)?;
+                log.push(format!("terminated instance {name}"));
+            }
+        }
+        if ebsvolumes {
+            for v in self
+                .cloud
+                .live_volumes()
+                .iter()
+                .map(|v| v.id.clone())
+                .collect::<Vec<_>>()
+            {
+                match self.cloud.delete_volume(&v) {
+                    Ok(()) => log.push(format!("deleted volume {v}")),
+                    Err(CloudError::VolumeInUse(..)) => {
+                        log.push(format!("skipped attached volume {v}"))
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        if snapshots {
+            for s in self
+                .cloud
+                .live_snapshots()
+                .iter()
+                .map(|s| s.id.clone())
+                .collect::<Vec<_>>()
+            {
+                self.cloud.delete_snapshot(&s)?;
+                log.push(format!("deleted snapshot {s}"));
+            }
+        }
+        self.save_configs();
+        Ok(log)
+    }
+
+    // ========================================================== diagnostics
+
+    /// `ec2resourcelock` on an instance.
+    pub fn set_instance_lock(&mut self, iname: &str, in_use: bool) -> Result<()> {
+        let entry = self.instance_entry(iname)?.clone();
+        self.cloud.set_lock(&entry.instance_id, in_use)?;
+        self.instances_cfg
+            .entries
+            .get_mut(iname)
+            .expect("checked above")
+            .in_use = in_use;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2resourcelock` on a cluster.
+    pub fn set_cluster_lock(&mut self, cname: &str, in_use: bool) -> Result<()> {
+        let entry = self.cluster_entry(cname)?.clone();
+        for id in entry.all_ids() {
+            self.cloud.set_lock(&id, in_use)?;
+        }
+        self.clusters_cfg
+            .get_mut(cname)
+            .expect("checked above")
+            .in_use = in_use;
+        self.save_configs();
+        Ok(())
+    }
+
+    /// `ec2listinstances`.
+    pub fn list_instances(&self, names_only: bool) -> Vec<String> {
+        self.instances_cfg
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                if names_only {
+                    name.clone()
+                } else {
+                    format!(
+                        "{name}  dns={}  vol={}  type={}  inuse={}  desc={:?}",
+                        e.public_dns,
+                        e.volume_id.as_deref().unwrap_or("-"),
+                        e.instance_type,
+                        e.in_use,
+                        e.description
+                    )
+                }
+            })
+            .collect()
+    }
+
+    /// `ec2listclusters`.
+    pub fn list_clusters(&self, names_only: bool) -> Vec<String> {
+        self.clusters_cfg
+            .entries
+            .iter()
+            .map(|(name, e)| {
+                if names_only {
+                    name.clone()
+                } else {
+                    format!(
+                        "{name}  size={}  master={}  workers=[{}]  vol={}  inuse={}  desc={:?}",
+                        e.size,
+                        e.master_dns,
+                        e.worker_dns.join(", "),
+                        e.volume_id.as_deref().unwrap_or("-"),
+                        e.in_use,
+                        e.description
+                    )
+                }
+            })
+            .collect()
+    }
+
+    /// `ec2listallresources`.
+    pub fn list_all_resources(
+        &self,
+        instances: bool,
+        ebsvols: bool,
+        snapshots: bool,
+        amis: bool,
+    ) -> Vec<String> {
+        let mut out = Vec::new();
+        if instances {
+            for i in self.cloud.live_instances() {
+                out.push(format!(
+                    "instance {}  type={}  name={}",
+                    i.id,
+                    i.itype.api_name,
+                    i.name.as_deref().unwrap_or("-")
+                ));
+            }
+        }
+        if ebsvols {
+            for v in self.cloud.live_volumes() {
+                out.push(format!(
+                    "volume {}  {:.0}GiB  attached_to={}",
+                    v.id,
+                    v.size_gb,
+                    v.attached_to.as_deref().unwrap_or("-")
+                ));
+            }
+        }
+        if snapshots {
+            for s in self.cloud.live_snapshots() {
+                out.push(format!("snapshot {}  {:.0}GiB  {:?}", s.id, s.size_gb, s.description));
+            }
+        }
+        if amis {
+            for a in self.cloud.amis() {
+                out.push(format!("ami {}  {}  hvm={}", a.id, a.name, a.hvm));
+            }
+        }
+        out
+    }
+
+    /// `ec2logintoinstance` / `ec2logintocluster` (simulated SSH): returns
+    /// the login banner for the target machine.
+    pub fn login_banner(&self, iname: Option<&str>, cname: Option<&str>) -> Result<String> {
+        let (dns, what) = if let Some(c) = cname {
+            let e = self.cluster_entry(c)?;
+            (e.master_dns.clone(), format!("master of cluster {c}"))
+        } else {
+            let name = self.resolve_iname(iname)?;
+            let e = self.instance_entry(&name)?;
+            (e.public_dns.clone(), format!("instance {name}"))
+        };
+        Ok(format!(
+            "ssh root@{dns}\nWelcome to Ubuntu ({what})\nLast login: simulated\nroot@ip:~#"
+        ))
+    }
+}

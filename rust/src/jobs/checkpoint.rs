@@ -3,10 +3,16 @@
 //!
 //! A job executes as a sequence of **slices** (a few GA generations or
 //! MC batches). After every slice the scheduler commits a checkpoint —
-//! a small JSON document conceptually shipped back to the Analyst
-//! site/S3 — so that when spot capacity is reclaimed mid-slice, the
-//! job resumes from the last committed slice on replacement capacity
-//! and produces **bit-identical** results to an uninterrupted run:
+//! a small JSON document shipped to the Analyst site over the WAN, or,
+//! for **resident** jobs, persisted cluster-side: onto the fleet
+//! cluster's EBS volume, mirrored to the S3 store, and frozen into an
+//! EBS snapshot ([`commit_resident_checkpoint`]) so that replacement
+//! spot capacity restores the whole job state over the LAN
+//! ([`restore_resident_checkpoint`]) instead of re-syncing the project
+//! over the most expensive link in the system. Either way, when spot
+//! capacity is reclaimed mid-slice the job resumes from the last
+//! committed slice and produces **bit-identical** results to an
+//! uninterrupted run:
 //!
 //! * `{"kind":"catopt","ga":{...}}` — the GA's full loop state
 //!   ([`GaRunner::snapshot`]): population, fitness, incumbent, history
@@ -33,9 +39,117 @@ use crate::analytics::script::{
     RUST_SWEEP_K, RUST_SWEEP_S, RUST_SWEEP_TILE,
 };
 use crate::coordinator::engine::ResourceView;
-use crate::simcloud::Vfs;
+use crate::simcloud::{content_digest, Link, SimCloud, Vfs};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+
+/// Bucket holding the durable cloud-side copy of every resident job's
+/// last committed checkpoint (keyed by job id, content-digested).
+pub const CHECKPOINT_BUCKET: &str = "p2rac-checkpoints";
+
+/// Where a resident job's state lives on the fleet cluster's volume
+/// (and therefore inside every snapshot of it).
+pub fn resident_dir(job_key: &str) -> String {
+    format!("jobs/{job_key}")
+}
+
+fn resident_project_dir(job_key: &str) -> String {
+    format!("jobs/{job_key}/project")
+}
+
+fn resident_checkpoint_path(job_key: &str) -> String {
+    format!("jobs/{job_key}/checkpoint.json")
+}
+
+/// Commit a resident job's state cluster-side after a surviving slice:
+/// the project and checkpoint land on the cluster's EBS volume, the
+/// checkpoint document is mirrored to the S3 store over the LAN, and a
+/// point-in-time EBS snapshot of the volume makes the whole thing
+/// durable against a spot reclaim. Returns the new snapshot id; the
+/// caller retires the previous one.
+pub fn commit_resident_checkpoint(
+    cloud: &mut SimCloud,
+    vol_id: &str,
+    job_key: &str,
+    project: &Vfs,
+    project_dir: &str,
+    snapshot_doc: &Json,
+) -> Result<String> {
+    let wire = snapshot_doc.to_string_compact().into_bytes();
+    {
+        let vol_fs = cloud.volume_fs_mut(vol_id)?;
+        project.copy_dir_to(project_dir, vol_fs, &resident_project_dir(job_key));
+        vol_fs.write(&resident_checkpoint_path(job_key), wire.clone());
+    }
+    // Durable S3 mirror, LAN path (free bytes, billed request).
+    cloud.s3_put(CHECKPOINT_BUCKET, job_key, wire, Link::Lan);
+    let snap = cloud.snapshot_volume(vol_id, &format!("resident state of {job_key}"))?;
+    Ok(snap)
+}
+
+/// Restore a resident job's state from its snapshot onto replacement
+/// capacity: materialise a volume from the snapshot (virtual time:
+/// EBS hydration), lift the project subtree and checkpoint off it,
+/// verify the checkpoint against the S3 mirror's content digest, and
+/// return `(project files, checkpoint, LAN copy seconds)`. The scratch
+/// volume is deleted (its storage is billed). Restoring the same
+/// snapshot twice is a clean no-op-equivalent: both calls return
+/// identical state.
+pub fn restore_resident_checkpoint(
+    cloud: &mut SimCloud,
+    snap_id: &str,
+    job_key: &str,
+) -> Result<(Vfs, Json, f64)> {
+    let vol = cloud.create_volume_from_snapshot(snap_id)?;
+    // Lift only this job's subtree off the restored volume, not the
+    // whole (multi-job) volume filesystem.
+    let mut vol_fs = Vfs::new();
+    let sub = resident_dir(job_key);
+    cloud
+        .volume(&vol)
+        .map_err(|e| anyhow!(e.to_string()))?
+        .fs
+        .copy_dir_to(&sub, &mut vol_fs, &sub);
+    cloud.delete_volume(&vol).map_err(|e| anyhow!(e.to_string()))?;
+
+    let ck_bytes = vol_fs
+        .read(&resident_checkpoint_path(job_key))
+        .ok_or_else(|| anyhow!("snapshot {snap_id} holds no checkpoint for {job_key}"))?
+        .to_vec();
+    // Integrity: the snapshot's checkpoint must be the same bytes the
+    // S3 mirror fingerprinted at commit time. The mirror always exists
+    // for a live resume snapshot (commit creates both, completion and
+    // failure retire both), so its absence is itself an error.
+    let obj = cloud
+        .s3
+        .object(CHECKPOINT_BUCKET, job_key)
+        .ok_or_else(|| anyhow!("no S3 checkpoint mirror for {job_key}"))?;
+    if obj.digest != content_digest(&ck_bytes) {
+        bail!(
+            "checkpoint in snapshot {snap_id} does not match the S3 mirror for {job_key} \
+             (digest mismatch)"
+        );
+    }
+    let text = std::str::from_utf8(&ck_bytes).context("restored checkpoint is not UTF-8")?;
+    let checkpoint =
+        Json::parse(text).map_err(|e| anyhow!("restored checkpoint is not valid JSON: {e}"))?;
+
+    // Lift the project subtree into a standalone vfs rooted at "".
+    let pdir = resident_project_dir(job_key);
+    let mut project = Vfs::new();
+    let mut bytes: u64 = 0;
+    let mut files = 0usize;
+    for rel in vol_fs.list_dir(&pdir) {
+        let data = vol_fs.read(&format!("{pdir}/{rel}")).expect("listed file exists").to_vec();
+        bytes += data.len() as u64;
+        files += 1;
+        project.write(&rel, data);
+    }
+    bytes += ck_bytes.len() as u64;
+    let lan_s = cloud.net.transfer_s(bytes, files.max(1), Link::Lan);
+    cloud.account_transfer(&format!("{job_key} LAN restore"), bytes, Link::Lan);
+    Ok((project, checkpoint, lan_s))
+}
 
 /// Result of one slice.
 #[derive(Clone, Copy, Debug)]
@@ -239,7 +353,12 @@ impl JobWork {
 
     /// Execute up to `units` work units on the pool, billing virtual
     /// time against `view` through the workload cost models.
-    pub fn step(&mut self, units: usize, view: &ResourceView, pool: &WorkerPool) -> Result<StepOutcome> {
+    pub fn step(
+        &mut self,
+        units: usize,
+        view: &ResourceView,
+        pool: &WorkerPool,
+    ) -> Result<StepOutcome> {
         match self {
             JobWork::Catopt {
                 backend,
@@ -493,5 +612,58 @@ mod tests {
         v.write("proj/x.json", br#"{"type":"quantum"}"#.to_vec());
         let pool = WorkerPool::serial();
         assert!(JobWork::from_project(&v, "proj", "x.json", None, &pool).is_err());
+    }
+
+    #[test]
+    fn resident_commit_restore_roundtrip_and_double_restore() {
+        let mut cloud = SimCloud::new(SimParams::default());
+        let vol = cloud.create_volume(8.0);
+        let v = sweep_project();
+        let pool = WorkerPool::serial();
+        let work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+        let doc = work.snapshot();
+        let snap =
+            commit_resident_checkpoint(&mut cloud, &vol, "job-1", &v, "proj", &doc).unwrap();
+
+        // The S3 mirror exists and fingerprints the committed bytes.
+        let obj = cloud.s3.object(CHECKPOINT_BUCKET, "job-1").unwrap();
+        assert_eq!(obj.digest, content_digest(doc.to_string_compact().as_bytes()));
+
+        let vols_before = cloud.live_volumes().len();
+        let (proj, ck, lan_s) = restore_resident_checkpoint(&mut cloud, &snap, "job-1").unwrap();
+        assert!(lan_s > 0.0);
+        assert_eq!(ck.to_string_compact(), doc.to_string_compact());
+        assert_eq!(proj.read("sweep.json"), v.read("proj/sweep.json"));
+        // The scratch restore volume was cleaned up.
+        assert_eq!(cloud.live_volumes().len(), vols_before);
+
+        // Double restore of the same slice: identical state, no leaks.
+        let (proj2, ck2, _) = restore_resident_checkpoint(&mut cloud, &snap, "job-1").unwrap();
+        assert_eq!(ck2.to_string_compact(), ck.to_string_compact());
+        assert_eq!(proj2.read("sweep.json"), proj.read("sweep.json"));
+        assert_eq!(cloud.live_volumes().len(), vols_before);
+
+        // Restoring a job the snapshot does not hold fails cleanly.
+        let err = restore_resident_checkpoint(&mut cloud, &snap, "job-9").unwrap_err();
+        assert!(err.to_string().contains("no checkpoint"));
+    }
+
+    #[test]
+    fn restore_detects_a_tampered_snapshot_via_the_s3_digest() {
+        let mut cloud = SimCloud::new(SimParams::default());
+        let vol = cloud.create_volume(8.0);
+        let v = sweep_project();
+        let pool = WorkerPool::serial();
+        let work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+        let doc = work.snapshot();
+        commit_resident_checkpoint(&mut cloud, &vol, "job-1", &v, "proj", &doc).unwrap();
+        // Corrupt the volume's checkpoint and snapshot it again.
+        cloud
+            .volume_fs_mut(&vol)
+            .unwrap()
+            .write("jobs/job-1/checkpoint.json", br#"{"kind":"mc_sweep","done":0}"#.to_vec());
+        let bad = cloud.snapshot_volume(&vol, "tampered").unwrap();
+        let err = restore_resident_checkpoint(&mut cloud, &bad, "job-1").unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"));
     }
 }

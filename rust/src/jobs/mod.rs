@@ -9,7 +9,11 @@
 //! queue depth (billed through the centi-cent ledger), and jobs
 //! execute as **checkpointed slices** so that spot interruptions cost
 //! a slice of work, never a job — a resumed job is bit-identical to an
-//! uninterrupted one (see `jobs::checkpoint`).
+//! uninterrupted one (see `jobs::checkpoint`). Jobs submitted
+//! `-resident` keep their state cluster-side (EBS volume + S3 mirror +
+//! EBS snapshot) and resume over the LAN from a snapshot-backed
+//! volume; the default path ships checkpoints to the Analyst site over
+//! the metered WAN.
 //!
 //! Execution is discrete-event on the virtual clock: numerics run
 //! eagerly when a slice is dispatched (results cannot depend on
@@ -29,7 +33,10 @@ pub mod queue;
 pub mod spot;
 
 pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleEvent, ScalePolicy};
-pub use checkpoint::{JobWork, StepOutcome};
+pub use checkpoint::{
+    commit_resident_checkpoint, restore_resident_checkpoint, JobWork, StepOutcome,
+    CHECKPOINT_BUCKET,
+};
 pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority};
 
 use crate::analytics::pool::WorkerPool;
@@ -37,6 +44,7 @@ use crate::coordinator::engine::ResourceView;
 use crate::coordinator::scheduler::{self, NodeSpec};
 use crate::coordinator::Session;
 use crate::datasync::{sync_dir, Protocol, DEFAULT_BLOCK_LEN};
+use crate::simcloud::s3::{digest_update, DIGEST_SEED};
 use crate::simcloud::{instance_type, Link, SpanCategory};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
@@ -72,20 +80,15 @@ struct SliceEnd {
 
 /// FNV-1a digest of a result file set — the bit-identity fingerprint
 /// used to compare a job's output across capacity/interruption
-/// histories.
+/// histories. Streams through the storage plane's incremental hasher
+/// (the same one behind [`crate::simcloud::content_digest`]).
 pub fn files_digest(files: &[(String, Vec<u8>)]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-    };
+    let mut h = DIGEST_SEED;
     for (name, bytes) in files {
-        eat(name.as_bytes());
-        eat(&[0]);
-        eat(bytes);
-        eat(&[0xFF]);
+        h = digest_update(h, name.as_bytes());
+        h = digest_update(h, &[0]);
+        h = digest_update(h, bytes);
+        h = digest_update(h, &[0xFF]);
     }
     h
 }
@@ -109,6 +112,40 @@ fn local_results_dir(projectdir: &str) -> String {
         Some((parent, name)) => format!("{parent}/{name}_results"),
         None => format!("{base}_results"),
     }
+}
+
+/// Commit a continuing resident job's cluster-side state: extract the
+/// project subtree off the cluster master and hand it to
+/// [`checkpoint::commit_resident_checkpoint`]. Returns the new EBS
+/// snapshot id, or `None` when the cluster has no volume (nothing to
+/// be resident on).
+fn commit_resident_state(
+    s: &mut Session,
+    cluster: &str,
+    key: &str,
+    projectdir: &str,
+    snapshot_doc: &Json,
+) -> Result<Option<String>> {
+    let Some(entry) = s.clusters_cfg.get(cluster).cloned() else {
+        return Ok(None);
+    };
+    let Some(vol) = entry.volume_id.clone() else {
+        return Ok(None);
+    };
+    let pdir = remote_project_dir(projectdir);
+    let mut project = crate::simcloud::Vfs::new();
+    s.cloud
+        .instance(&entry.master_id)?
+        .fs
+        .copy_dir_to(&pdir, &mut project, &pdir);
+    Ok(Some(checkpoint::commit_resident_checkpoint(
+        &mut s.cloud,
+        &vol,
+        key,
+        &project,
+        &pdir,
+        snapshot_doc,
+    )?))
 }
 
 /// The platform scheduler.
@@ -144,6 +181,24 @@ impl JobScheduler {
     /// Submit a job at the current virtual time.
     pub fn submit(&mut self, s: &Session, spec: JobSpec) -> JobId {
         self.queue.submit(spec, s.cloud.clock.now_s())
+    }
+
+    /// Submit with storage-plane options: `resident` keeps the job's
+    /// checkpoints cluster-side (EBS volume + S3 + snapshot; resume
+    /// pays LAN, not WAN) and `analyst` tags the job's charges in the
+    /// ledger.
+    pub fn submit_opts(
+        &mut self,
+        s: &Session,
+        spec: JobSpec,
+        resident: bool,
+        analyst: &str,
+    ) -> JobId {
+        let id = self.queue.submit(spec, s.cloud.clock.now_s());
+        let job = self.queue.get_mut(id).expect("just submitted");
+        job.resident = resident;
+        job.analyst = analyst.to_string();
+        id
     }
 
     /// Drop fleet entries whose cluster no longer exists in the
@@ -191,15 +246,28 @@ impl JobScheduler {
             let horizon = at.max(now);
 
             // Any spot interruption in the gap outranks the event.
+            // Idle fleet clusters are scanned alongside busy ones: the
+            // provider reclaims capacity, not slices, so idle spot
+            // capacity disappears too.
             let busy: Vec<String> = self.slices.iter().map(|e| e.cluster.clone()).collect();
+            let idle: Vec<String> = self
+                .fleet
+                .iter()
+                .filter(|c| c.running.is_none())
+                .map(|c| c.name.clone())
+                .collect();
             if let Some((cname, t_int)) =
-                spot::next_interruption(s, &busy, self.scanned_to, horizon)
+                spot::next_interruption(s, &busy, &idle, self.scanned_to, horizon)
             {
                 let now = s.cloud.clock.now_s();
                 if t_int > now {
                     s.cloud.clock.advance(t_int - now);
                 }
-                self.scanned_to = t_int;
+                // Resume the scan from just before the reclaim time:
+                // other clusters whose bid the same price spike
+                // exceeded are reclaimed at the same boundary rather
+                // than an hour later.
+                self.scanned_to = t_int - 1e-6;
                 self.handle_interruption(s, &cname)?;
                 continue;
             }
@@ -256,19 +324,33 @@ impl JobScheduler {
             };
             if let Err(e) = self.start_slice(s, jid, slot) {
                 // The job cannot start (bad script, sync error): fail
-                // it and let the loop try the next one.
+                // it and let the loop try the next one. start_slice
+                // bailed mid-flight, so restore the platform ledger
+                // context it would have reset on success.
+                s.cloud.ledger.set_analyst("");
                 let job = self.queue.get_mut(jid).expect("job exists");
                 job.state = JobState::Failed;
                 job.assigned = None;
                 job.summary = Json::str(format!("failed: {e:#}"));
+                // A permanently failed resident job retires its
+                // cluster-side artifacts (billing their storage) —
+                // nothing will ever restore from them.
+                if let Some(old) = job.resume_snapshot.take() {
+                    s.cloud.delete_snapshot(&old).ok();
+                }
+                if job.resident {
+                    s.cloud.s3_delete(checkpoint::CHECKPOINT_BUCKET, &jid.to_string()).ok();
+                }
                 self.log.push(format!("{jid} failed to start: {e:#}"));
             }
         }
         Ok(())
     }
 
-    /// Dispatch one slice of `jid` onto fleet slot `slot`: sync the
-    /// project, run `slice_units` work units eagerly, and schedule the
+    /// Dispatch one slice of `jid` onto fleet slot `slot`: land the
+    /// project (WAN rsync, or — for a resident job resuming after an
+    /// interruption — LAN restore from its snapshot-backed volume),
+    /// run `slice_units` work units eagerly, and schedule the
     /// completion event (sync + compute + checkpoint shipment + — for
     /// a finishing slice — result gather).
     fn start_slice(&mut self, s: &mut Session, jid: JobId, slot: usize) -> Result<()> {
@@ -279,22 +361,61 @@ impl JobScheduler {
             .get(&cname)
             .ok_or_else(|| anyhow!("fleet cluster '{cname}' not in the configuration"))?
             .clone();
-        let (spec, job_checkpoint, compute_so_far) = {
+        let (spec, mut job_checkpoint, compute_so_far, resident, resume_snapshot, analyst) = {
             let j = self.queue.get(jid).ok_or_else(|| anyhow!("unknown job {jid}"))?;
-            (j.spec.clone(), j.checkpoint.clone(), j.compute_s)
+            (
+                j.spec.clone(),
+                j.checkpoint.clone(),
+                j.compute_s,
+                j.resident,
+                j.resume_snapshot.clone(),
+                j.analyst.clone(),
+            )
         };
+        let project_on = self
+            .queue
+            .get(jid)
+            .and_then(|j| j.project_on.clone());
+        // This job's traffic and storage charges go to its tenant.
+        s.cloud.ledger.set_analyst(&analyst);
         let mut duration = 0.0;
+        let key = jid.to_string();
 
-        // Project sync onto the cluster master (rsync: nearly free when
-        // the project is already there from a previous slice).
+        // Land the project on the cluster master. "Already there" means
+        // *this job* landed it on *this cluster* — remote project dirs
+        // are shared per project name, so a bare dir-exists check could
+        // pick up another job's files.
         let dest = remote_project_dir(&spec.projectdir);
-        {
-            let analyst = &s.analyst;
+        let have_project = project_on.as_deref() == Some(cname.as_str())
+            && s.cloud.instance(&entry.master_id)?.fs.dir_exists(&dest);
+        if resident && have_project {
+            // Cluster-resident project already in place: nothing
+            // crosses any link (the paper's "repeated runs pay LAN,
+            // not WAN" — here not even LAN).
+        } else if let (true, Some(snap)) = (resident, resume_snapshot.as_deref()) {
+            // Replacement capacity: restore project + checkpoint over
+            // the LAN from the snapshot-backed volume. The restored
+            // checkpoint (not the queue's in-memory copy) is
+            // authoritative — the bytes genuinely round-trip through
+            // EBS, and the existing config/dims fingerprint checks in
+            // `JobWork::from_script` decide whether it is reusable.
+            let (proj, ck, lan_s) =
+                checkpoint::restore_resident_checkpoint(&mut s.cloud, snap, &key)?;
+            duration += lan_s;
+            let fs = s.cloud.instance_fs_mut(&entry.master_id)?;
+            proj.copy_dir_to("", fs, &dest);
+            job_checkpoint = Some(ck);
+        } else {
+            // WAN rsync from the Analyst site: the paper's default
+            // path, and a resident job's very first dispatch (rsync:
+            // nearly free when the project is already there from a
+            // previous slice).
+            let analyst_fs = &s.analyst;
             let rep = s
                 .cloud
                 .with_instance_fs(&entry.master_id, |fs, net, faults| {
                     sync_dir(
-                        analyst,
+                        analyst_fs,
                         &spec.projectdir,
                         fs,
                         &dest,
@@ -306,6 +427,8 @@ impl JobScheduler {
                     )
                 })?
                 .map_err(|e| anyhow!("project sync to '{cname}': {e}"))?;
+            s.cloud
+                .account_transfer(&format!("{key} project sync"), rep.wire_bytes(), Link::Wan);
             duration += rep.elapsed_s;
         }
 
@@ -369,23 +492,32 @@ impl JobScheduler {
             let (files, summary) = work.finish(compute_so_far + outcome.virtual_s)?;
             let bytes: u64 = files.iter().map(|(_, b)| b.len() as u64).sum();
             duration += s.cloud.net.transfer_s(bytes, files.len().max(1), Link::Wan);
+            s.cloud
+                .account_transfer(&format!("{key} results fetch"), bytes, Link::Wan);
             (files, summary)
         } else {
             (Vec::new(), Json::Null)
         };
 
-        // Checkpoint shipment back to the Analyst site (small, WAN).
+        // Checkpoint shipment: WAN to the Analyst site by default, or
+        // LAN to the cluster-side store for a resident job (the commit
+        // itself — volume write + S3 mirror + EBS snapshot — happens
+        // only if the slice survives, in `complete_slice`).
         let snapshot = work.snapshot();
-        duration += s
-            .cloud
-            .net
-            .transfer_s(snapshot.to_string_compact().len() as u64, 1, Link::Wan);
+        let ckpt_len = snapshot.to_string_compact().len() as u64;
+        let ship_link = if resident { Link::Lan } else { Link::Wan };
+        duration += s.cloud.net.transfer_s(ckpt_len, 1, ship_link);
+        if !resident {
+            s.cloud
+                .account_transfer(&format!("{key} checkpoint ship"), ckpt_len, Link::Wan);
+        }
 
         s.set_cluster_lock(&cname, true)?;
         {
             let job = self.queue.get_mut(jid).expect("job exists");
             job.state = JobState::Running;
             job.assigned = Some(cname.clone());
+            job.project_on = Some(cname.clone());
             if job.started_at_s.is_none() {
                 job.started_at_s = Some(now0);
             }
@@ -404,12 +536,17 @@ impl JobScheduler {
             files,
             summary,
         });
+        // Shared-infrastructure charges (fleet teardown etc.) stay on
+        // the platform's side of the ledger.
+        s.cloud.ledger.set_analyst("");
         Ok(())
     }
 
     /// A slice survived to its completion event: commit the checkpoint
-    /// (or requeue on exec failure), free the cluster, and on a
-    /// finishing slice land the result files.
+    /// (cluster-side for resident jobs — volume + S3 mirror + EBS
+    /// snapshot — or back to the queue for the WAN path; requeue on
+    /// exec failure), free the cluster, and on a finishing slice land
+    /// the result files.
     fn complete_slice(&mut self, s: &mut Session, ev: SliceEnd) -> Result<()> {
         let now = s.cloud.clock.now_s();
         s.cloud.clock.push_span(
@@ -421,11 +558,34 @@ impl JobScheduler {
         if let Some(c) = self.fleet.iter_mut().find(|c| c.name == ev.cluster) {
             c.running = None;
         }
-        let spec = {
+        let (job_spec, resident, analyst) = {
             let job = self
                 .queue
-                .get_mut(ev.job)
+                .get(ev.job)
                 .ok_or_else(|| anyhow!("unknown job {}", ev.job))?;
+            (job.spec.clone(), job.resident, job.analyst.clone())
+        };
+        s.cloud.ledger.set_analyst(&analyst);
+        // Resident commit: make the surviving slice's state durable
+        // cluster-side before anything else can go wrong. Only
+        // continuing jobs need it — a finished job's state is its
+        // result files. An error restores the platform ledger context
+        // on the way out.
+        let key = ev.job.to_string();
+        let commit = if resident && !ev.failed && !ev.finished {
+            commit_resident_state(s, &ev.cluster, &key, &job_spec.projectdir, &ev.snapshot)
+        } else {
+            Ok(None)
+        };
+        let mut new_resume_snapshot = match commit {
+            Ok(v) => v,
+            Err(e) => {
+                s.cloud.ledger.set_analyst("");
+                return Err(e);
+            }
+        };
+        let spec = {
+            let job = self.queue.get_mut(ev.job).expect("job checked above");
             job.assigned = None;
             if ev.failed {
                 job.retries += 1;
@@ -440,16 +600,31 @@ impl JobScheduler {
                     job.summary = ev.summary;
                     // The result files + summary carry everything a
                     // finished job needs; dropping the checkpoint keeps
-                    // the persisted queue small.
+                    // the persisted queue small, and the cluster-side
+                    // artifacts are retired (billing their storage).
                     job.checkpoint = None;
+                    if let Some(old) = job.resume_snapshot.take() {
+                        s.cloud.delete_snapshot(&old).ok();
+                    }
+                    if resident {
+                        s.cloud.s3_delete(checkpoint::CHECKPOINT_BUCKET, &key).ok();
+                    }
                     Some(job.spec.clone())
                 } else {
                     job.checkpoint = Some(ev.snapshot);
+                    if let Some(ns) = new_resume_snapshot.take() {
+                        // One durable snapshot per job: retire the
+                        // previous commit's.
+                        if let Some(old) = job.resume_snapshot.replace(ns) {
+                            s.cloud.delete_snapshot(&old).ok();
+                        }
+                    }
                     job.state = JobState::Queued;
                     None
                 }
             }
         };
+        s.cloud.ledger.set_analyst("");
         if ev.failed {
             self.log.push(format!(
                 "{} slice failed on {} (worker exec failure); rescheduling from checkpoint",
@@ -480,8 +655,11 @@ impl JobScheduler {
     }
 
     /// Spot capacity under `cname` was reclaimed: discard the in-flight
-    /// slice, requeue its job from the last committed checkpoint, and
-    /// tear the cluster down (billed with the partial-hour-free rule).
+    /// slice (if any — idle capacity is reclaimed too), requeue its job
+    /// from the last committed checkpoint, and tear the cluster down
+    /// (billed with the partial-hour-free rule). The autoscaler sees
+    /// the shrunken fleet on its next reconcile and replaces the lost
+    /// capacity.
     fn handle_interruption(&mut self, s: &mut Session, cname: &str) -> Result<()> {
         if let Some(pos) = self.slices.iter().position(|e| e.cluster == cname) {
             let ev = self.slices.swap_remove(pos);
@@ -495,6 +673,11 @@ impl JobScheduler {
             self.log.push(format!(
                 "spot interruption reclaimed {} mid-slice of {}; will resume from checkpoint",
                 cname, ev.job
+            ));
+        } else {
+            self.log.push(format!(
+                "spot interruption reclaimed idle cluster {cname}; \
+                 autoscaler will replace the lost capacity"
             ));
         }
         self.fleet.retain(|c| c.name != cname);

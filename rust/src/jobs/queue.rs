@@ -106,6 +106,15 @@ pub struct Job {
     pub id: JobId,
     pub spec: JobSpec,
     pub state: JobState,
+    /// Cluster-resident job state (§3.2.1 of the source paper): the
+    /// checkpoint lives on the fleet cluster's EBS volume + the
+    /// cloud-side S3 store and an interruption resumes over LAN from
+    /// `resume_snapshot`, instead of shipping every checkpoint to the
+    /// Analyst site over the WAN.
+    pub resident: bool,
+    /// Tenant the job belongs to; its traffic and storage charges are
+    /// attributed to this id in the ledger ("" = untagged).
+    pub analyst: String,
     /// Fraction of work units (GA generations / MC batches) committed
     /// to a checkpoint so far.
     pub progress: f64,
@@ -113,6 +122,14 @@ pub struct Job {
     /// format). Conceptually shipped to the Analyst site / S3 after
     /// every slice; survives any loss of cloud capacity.
     pub checkpoint: Option<Json>,
+    /// EBS snapshot holding the last committed cluster-resident state
+    /// (project + checkpoint); replacement capacity restores from it
+    /// over the LAN via `create_volume_from_snapshot`.
+    pub resume_snapshot: Option<String>,
+    /// Fleet cluster that currently holds this job's landed project
+    /// (remote project dirs are shared per project *name*, so a bare
+    /// dir-exists check could pick up another job's files).
+    pub project_on: Option<String>,
     pub submitted_at_s: f64,
     pub started_at_s: Option<f64>,
     pub completed_at_s: Option<f64>,
@@ -150,8 +167,12 @@ impl JobQueue {
                 id,
                 spec,
                 state: JobState::Queued,
+                resident: false,
+                analyst: String::new(),
                 progress: 0.0,
                 checkpoint: None,
+                resume_snapshot: None,
+                project_on: None,
                 submitted_at_s: now_s,
                 started_at_s: None,
                 completed_at_s: None,
@@ -250,10 +271,20 @@ impl JobQueue {
                 }),
             );
             o.set("state", Json::str(j.state.label()));
+            o.set("resident", Json::Bool(j.resident));
+            o.set("analyst", Json::str(&j.analyst));
             o.set("progress", Json::num(j.progress));
             o.set(
                 "checkpoint",
                 j.checkpoint.clone().unwrap_or(Json::Null),
+            );
+            o.set(
+                "resume_snapshot",
+                j.resume_snapshot.as_ref().map(Json::str).unwrap_or(Json::Null),
+            );
+            o.set(
+                "project_on",
+                j.project_on.as_ref().map(Json::str).unwrap_or(Json::Null),
             );
             o.set("submitted_at_s", Json::num(j.submitted_at_s));
             o.set(
@@ -308,11 +339,15 @@ impl JobQueue {
                         },
                     },
                     state,
+                    resident: o.opt_bool("resident", false),
+                    analyst: o.opt_str("analyst").unwrap_or_default(),
                     progress: o.req_f64("progress")?,
                     checkpoint: match o.get("checkpoint") {
                         Some(Json::Null) | None => None,
                         Some(c) => Some(c.clone()),
                     },
+                    resume_snapshot: o.opt_str("resume_snapshot"),
+                    project_on: o.opt_str("project_on"),
                     submitted_at_s: o.req_f64("submitted_at_s")?,
                     started_at_s: o.get("started_at_s").and_then(Json::as_f64),
                     completed_at_s: o.get("completed_at_s").and_then(Json::as_f64),

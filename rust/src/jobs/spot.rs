@@ -5,11 +5,15 @@
 //! Two interruption sources, both deterministic:
 //! * the market's price path (`SpotMarket::first_interruption`) — a
 //!   cluster whose hourly price exceeds its bid at an hour boundary
-//!   inside the scan window is reclaimed at that boundary;
+//!   inside the scan window is reclaimed at that boundary. **Idle**
+//!   fleet clusters are scanned exactly like busy ones: the provider
+//!   does not care whether a slice is in flight, so idle spot capacity
+//!   disappears too and the autoscaler has to notice;
 //! * `FaultPlan::spot_interruptions` — tests and benches arm a count
 //!   and each armed interruption fires at the midpoint of the next
-//!   scan window that has spot capacity in flight, independent of the
-//!   price path.
+//!   scan window that has spot capacity (preferring busy clusters,
+//!   which is what the tests arm them for), optionally held until
+//!   `FaultPlan::spot_interrupt_not_before_s`.
 
 use crate::coordinator::Session;
 use crate::simcloud::Lifecycle;
@@ -41,31 +45,47 @@ fn spot_clusters(s: &Session, clusters: &[String]) -> Vec<(String, String, u64, 
     out
 }
 
-/// Earliest spot interruption hitting any of `clusters` in `(t0, t1]`,
-/// or `None`. Per cluster the window is clamped to its launch time.
-/// Consumes at most one armed `FaultPlan` interruption.
+/// Earliest spot interruption hitting any of the `busy` (slice in
+/// flight) or `idle` clusters in `(t0, t1]`, or `None`. Per cluster
+/// the window is clamped to its launch time. Consumes at most one
+/// armed `FaultPlan` interruption.
 pub fn next_interruption(
     s: &mut Session,
-    clusters: &[String],
+    busy: &[String],
+    idle: &[String],
     t0: f64,
     t1: f64,
 ) -> Option<(String, f64)> {
     if t1 <= t0 {
         return None;
     }
-    let spot = spot_clusters(s, clusters);
-    if spot.is_empty() {
+    let busy_spot = spot_clusters(s, busy);
+    let idle_spot = spot_clusters(s, idle);
+    if busy_spot.is_empty() && idle_spot.is_empty() {
         return None;
     }
     // Armed interruptions outrank the market (they exist so tests can
-    // force a reclaim regardless of the price path).
-    if s.cloud.faults.take_spot_interruption() {
-        let (name, _, _, launched) = &spot[0];
-        let at = (t0 + (t1 - t0) * 0.5).max(*launched);
-        return Some((name.clone(), at));
+    // force a reclaim regardless of the price path). Busy clusters are
+    // preferred; a held interruption (`not_before`) that cannot land
+    // inside this window stays armed for a later one.
+    if s.cloud.faults.spot_interruptions > 0 {
+        let target = busy_spot.first().or_else(|| idle_spot.first());
+        if let Some((name, _, _, launched)) = target {
+            let not_before = s.cloud.faults.spot_interrupt_not_before_s;
+            let at = (t0 + (t1 - t0) * 0.5).max(*launched).max(not_before);
+            if at < t1 || not_before <= t0 {
+                let name = name.clone();
+                s.cloud.faults.take_spot_interruption();
+                return Some((name, at));
+            }
+        }
     }
+    // Market scan. Idle clusters go first so that a price spike
+    // reclaiming several clusters at the same hour boundary takes the
+    // idle ones too (the dispatch loop would otherwise re-busy them
+    // before the next scan ever sees them idle).
     let mut best: Option<(String, f64)> = None;
-    for (name, itype, bid, launched) in spot {
+    for (name, itype, bid, launched) in idle_spot.into_iter().chain(busy_spot) {
         if let Some(at) = s.cloud.spot.first_interruption(&itype, bid, t0.max(launched), t1) {
             let earlier = match &best {
                 Some((_, t)) => at < *t,
@@ -103,7 +123,7 @@ mod tests {
         s.cloud.faults.spot_interruptions = 1;
         s.cloud.spot.spike_prob = 1.0;
         assert_eq!(
-            next_interruption(&mut s, &[c], 0.0, 3600.0 * 100.0),
+            next_interruption(&mut s, &[c], &[], 0.0, 3600.0 * 100.0),
             None
         );
         // The armed interruption was NOT consumed (no spot capacity).
@@ -114,10 +134,40 @@ mod tests {
     fn armed_interruption_fires_mid_window() {
         let (mut s, c) = session_with_cluster(true);
         s.cloud.faults.spot_interruptions = 1;
-        let hit = next_interruption(&mut s, &[c.clone()], 100.0, 300.0).unwrap();
+        let hit = next_interruption(&mut s, &[c.clone()], &[], 100.0, 300.0).unwrap();
         assert_eq!(hit.0, c);
         assert_eq!(hit.1, 200.0);
         assert_eq!(s.cloud.faults.spot_interruptions, 0);
+    }
+
+    #[test]
+    fn armed_interruption_honours_not_before() {
+        let (mut s, c) = session_with_cluster(true);
+        s.cloud.faults.spot_interruptions = 1;
+        s.cloud.faults.spot_interrupt_not_before_s = 1_000.0;
+        // Window entirely before the hold point: stays armed.
+        assert_eq!(next_interruption(&mut s, &[c.clone()], &[], 100.0, 300.0), None);
+        assert_eq!(s.cloud.faults.spot_interruptions, 1);
+        // Window crossing it: fires at the hold point (>= midpoint).
+        let hit = next_interruption(&mut s, &[c.clone()], &[], 900.0, 1_100.0).unwrap();
+        assert_eq!(hit.0, c);
+        assert_eq!(hit.1, 1_000.0);
+        assert_eq!(s.cloud.faults.spot_interruptions, 0);
+    }
+
+    #[test]
+    fn idle_spot_clusters_are_visible_to_interruptions() {
+        let (mut s, c) = session_with_cluster(true);
+        // Nothing busy — the idle cluster is still reclaimable.
+        s.cloud.faults.spot_interruptions = 1;
+        let hit = next_interruption(&mut s, &[], &[c.clone()], 100.0, 300.0).unwrap();
+        assert_eq!(hit.0, c);
+        // Market spikes reclaim idle capacity too.
+        s.cloud.spot.spike_prob = 1.0;
+        let now = s.cloud.clock.now_s();
+        let hit = next_interruption(&mut s, &[], &[c.clone()], now, now + 2.0 * 3600.0).unwrap();
+        assert_eq!(hit.0, c);
+        assert!(hit.1 % 3600.0 == 0.0);
     }
 
     #[test]
@@ -125,13 +175,13 @@ mod tests {
         let (mut s, c) = session_with_cluster(true);
         s.cloud.spot.spike_prob = 1.0; // every hour spikes above any od bid
         let now = s.cloud.clock.now_s();
-        let hit = next_interruption(&mut s, &[c.clone()], now, now + 2.0 * 3600.0).unwrap();
+        let hit = next_interruption(&mut s, &[c.clone()], &[], now, now + 2.0 * 3600.0).unwrap();
         assert_eq!(hit.0, c);
         assert!(hit.1 > now && hit.1 % 3600.0 == 0.0);
         // A price path that never spikes leaves the fleet alone.
         s.cloud.spot.spike_prob = 0.0;
         assert_eq!(
-            next_interruption(&mut s, &[c], now, now + 100.0 * 3600.0),
+            next_interruption(&mut s, &[c], &[], now, now + 100.0 * 3600.0),
             None
         );
     }

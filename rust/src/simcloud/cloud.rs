@@ -9,7 +9,7 @@ use super::clock::Clock;
 use super::ebs::{Snapshot, Volume, VolumeState};
 use super::ec2::{instance_type, Ami, Instance, InstanceState, Lifecycle};
 use super::faults::FaultPlan;
-use super::network::NetworkModel;
+use super::network::{Link, NetworkModel};
 use super::pricing::Ledger;
 use super::s3::S3;
 use super::spot::SpotMarket;
@@ -27,6 +27,7 @@ pub enum CloudError {
     NoSuchVolume(String),
     NoSuchSnapshot(String),
     NoSuchAmi(String),
+    NoSuchObject(String),
     VolumeInUse(String, String),
     VolumeNotAttached(String),
     VolumeDeleted(String),
@@ -45,6 +46,7 @@ impl std::fmt::Display for CloudError {
             CloudError::NoSuchVolume(v) => write!(f, "no such volume '{v}'"),
             CloudError::NoSuchSnapshot(s) => write!(f, "no such snapshot '{s}'"),
             CloudError::NoSuchAmi(a) => write!(f, "no such AMI '{a}'"),
+            CloudError::NoSuchObject(o) => write!(f, "no such storage object '{o}'"),
             CloudError::VolumeInUse(v, i) => {
                 write!(f, "volume '{v}' is attached to instance '{i}'")
             }
@@ -78,6 +80,7 @@ pub struct SimCloud {
     volumes: BTreeMap<String, Volume>,
     snapshots: BTreeMap<String, Snapshot>,
     volume_created_at: BTreeMap<String, f64>,
+    snapshot_created_at: BTreeMap<String, f64>,
 }
 
 impl SimCloud {
@@ -113,6 +116,7 @@ impl SimCloud {
             volumes: BTreeMap::new(),
             snapshots: BTreeMap::new(),
             volume_created_at: BTreeMap::new(),
+            snapshot_created_at: BTreeMap::new(),
         }
     }
 
@@ -156,7 +160,24 @@ impl SimCloud {
                 deleted: false,
             },
         );
+        self.snapshot_created_at.insert(id.clone(), self.clock.now_s());
         id
+    }
+
+    /// Point-in-time snapshot of a live volume's contents (advances
+    /// virtual time: incremental S3-backed copy, base + per-GiB). This
+    /// is how cluster-resident job state becomes durable — the
+    /// snapshot outlives any spot reclaim of the instances around it.
+    pub fn snapshot_volume(
+        &mut self,
+        vol_id: &str,
+        description: &str,
+    ) -> Result<String, CloudError> {
+        let v = self.volume(vol_id)?;
+        let (size_gb, fs) = (v.size_gb, v.fs.clone());
+        let dt = self.params.snapshot_base_s + self.params.snapshot_s_per_gb * size_gb;
+        self.clock.advance(dt);
+        Ok(self.create_snapshot(size_gb, fs, description))
     }
 
     pub fn snapshot(&self, id: &str) -> Result<&Snapshot, CloudError> {
@@ -167,16 +188,81 @@ impl SimCloud {
     }
 
     pub fn delete_snapshot(&mut self, id: &str) -> Result<(), CloudError> {
+        let created = self.snapshot_created_at.get(id).copied().unwrap_or(0.0);
+        let now = self.clock.now_s();
         let s = self
             .snapshots
             .get_mut(id)
             .ok_or_else(|| CloudError::NoSuchSnapshot(id.to_string()))?;
         s.deleted = true;
+        let (sid, size) = (s.id.clone(), s.size_gb);
+        self.ledger.bill_snapshot_storage(&sid, size, created, now);
         Ok(())
     }
 
     pub fn live_snapshots(&self) -> Vec<&Snapshot> {
         self.snapshots.values().filter(|s| !s.deleted).collect()
+    }
+
+    // -------------------------------------------------- storage plane
+
+    /// Store an object: the bytes cross `link` (virtual wire time), a
+    /// PUT request is billed, and the transfer goes through the shared
+    /// metered path. Returns the content digest.
+    pub fn s3_put(&mut self, bucket: &str, key: &str, data: Vec<u8>, link: Link) -> u64 {
+        let id = format!("s3://{bucket}/{key}");
+        let bytes = data.len() as u64;
+        let t = self.net.transfer_s(bytes, 1, link);
+        self.clock.advance(t);
+        // Overwrites bill the replaced object's storage lifetime first
+        // (otherwise a repeatedly-rewritten key would only ever pay
+        // from its final put to its delete).
+        if let Some(old) = self.s3.take(bucket, key) {
+            let now = self.clock.now_s();
+            self.ledger
+                .bill_s3_storage(&id, old.data.len() as u64, old.put_at_s, now);
+        }
+        self.ledger.bill_s3_request(&id, "PUT");
+        self.account_transfer(&id, bytes, link);
+        self.s3.put_at(bucket, key, data, self.clock.now_s())
+    }
+
+    /// Fetch an object over `link` (wire time + GET request billed).
+    pub fn s3_get(&mut self, bucket: &str, key: &str, link: Link) -> Result<Vec<u8>, CloudError> {
+        let id = format!("s3://{bucket}/{key}");
+        let data = self
+            .s3
+            .get(bucket, key)
+            .ok_or_else(|| CloudError::NoSuchObject(id.clone()))?
+            .to_vec();
+        let t = self.net.transfer_s(data.len() as u64, 1, link);
+        self.clock.advance(t);
+        self.ledger.bill_s3_request(&id, "GET");
+        self.account_transfer(&id, data.len() as u64, link);
+        Ok(data)
+    }
+
+    /// Delete an object, billing its storage from put to now.
+    pub fn s3_delete(&mut self, bucket: &str, key: &str) -> Result<(), CloudError> {
+        let id = format!("s3://{bucket}/{key}");
+        let obj = self
+            .s3
+            .take(bucket, key)
+            .ok_or_else(|| CloudError::NoSuchObject(id.clone()))?;
+        let now = self.clock.now_s();
+        self.ledger.bill_s3_request(&id, "DEL");
+        self.ledger.bill_s3_storage(&id, obj.data.len() as u64, obj.put_at_s, now);
+        Ok(())
+    }
+
+    /// The single transfer-accounting path every byte crossing a link
+    /// goes through: project sync, result gather, checkpoint shipment
+    /// and S3 traffic all end up here. WAN bytes are metered (scaled
+    /// by `data_scale`, the same factor the time model applies); LAN
+    /// bytes are free.
+    pub fn account_transfer(&mut self, label: &str, bytes: u64, link: Link) {
+        let scaled = (bytes as f64 * self.params.data_scale) as u64;
+        self.ledger.bill_data_transfer(label, scaled, link);
     }
 
     // ------------------------------------------------------------- volumes
@@ -554,6 +640,13 @@ impl SimCloud {
             i.launched_at_s,
             i.lifecycle,
         );
+        // Attribute the charge to the tenant that owns the instance
+        // (the `p2rac:analyst` tag), not whoever triggered teardown.
+        let owner = i.tags.get("p2rac:analyst").cloned();
+        let saved = self.ledger.analyst().to_string();
+        if let Some(a) = &owner {
+            self.ledger.set_analyst(a);
+        }
         match lifecycle {
             Lifecycle::OnDemand => {
                 self.ledger.bill_instance(&iid, api, price, start, end);
@@ -566,6 +659,9 @@ impl SimCloud {
                         .cost_centi_cents(api, start, end, interrupted, bid_centi_cents_hour);
                 self.ledger.bill_spot_instance(&iid, api, cc, interrupted);
             }
+        }
+        if owner.is_some() {
+            self.ledger.set_analyst(&saved);
         }
     }
 }
@@ -644,6 +740,10 @@ impl SimCloud {
             o.set("size_gb", Json::num(s.size_gb));
             o.set("description", Json::str(&s.description));
             o.set("fs", s.fs.to_json());
+            o.set(
+                "created_at_s",
+                Json::num(self.snapshot_created_at.get(&s.id).copied().unwrap_or(0.0)),
+            );
             snaps.set(&s.id, o);
         }
         root.set("snapshots", snaps);
@@ -655,6 +755,7 @@ impl SimCloud {
                 ("detail", Json::str(&item.detail)),
                 // Centi-cents: sub-cent EBS charges survive a restore.
                 ("centi_cents", Json::num(item.centi_cents as f64)),
+                ("analyst", Json::str(&item.analyst)),
             ]));
         }
         root.set("ledger", Json::Arr(ledger));
@@ -682,6 +783,8 @@ impl SimCloud {
                     deleted: false,
                 },
             );
+            c.snapshot_created_at
+                .insert(id.clone(), o.req_f64("created_at_s").unwrap_or(0.0));
         }
         for (id, o) in j
             .get("volumes")
@@ -766,7 +869,13 @@ impl SimCloud {
                     Some(cc) => cc,
                     None => item.req_u64("cents")? * 100,
                 };
-                c.ledger.push_raw(&item.req_str("id")?, &item.req_str("detail")?, centi);
+                let analyst = item.opt_str("analyst").unwrap_or_default();
+                c.ledger.push_raw_as(
+                    &item.req_str("id")?,
+                    &item.req_str("detail")?,
+                    centi,
+                    &analyst,
+                );
             }
         }
         Ok(c)
@@ -1028,6 +1137,56 @@ mod tests {
                 bid_centi_cents_hour: 4321
             }
         );
+    }
+
+    #[test]
+    fn snapshot_volume_freezes_contents_and_advances_time() {
+        let mut c = cloud();
+        let vol = c.create_volume(8.0);
+        c.volume_fs_mut(&vol).unwrap().write("jobs/j1/ck.json", vec![1, 2]);
+        let t0 = c.clock.now_s();
+        let snap = c.snapshot_volume(&vol, "resident state").unwrap();
+        assert!(c.clock.now_s() > t0, "snapshotting takes virtual time");
+        // Later volume edits do not leak into the snapshot.
+        c.volume_fs_mut(&vol).unwrap().write("jobs/j1/ck.json", vec![9]);
+        assert_eq!(
+            c.snapshot(&snap).unwrap().fs.read("jobs/j1/ck.json"),
+            Some([1u8, 2].as_slice())
+        );
+        // Restore path: a new volume hydrates the frozen bytes.
+        let vol2 = c.create_volume_from_snapshot(&snap).unwrap();
+        assert_eq!(
+            c.volume(&vol2).unwrap().fs.read("jobs/j1/ck.json"),
+            Some([1u8, 2].as_slice())
+        );
+        // Deleting the snapshot bills its storage lifetime.
+        let before = c.ledger.items().len();
+        c.delete_snapshot(&snap).unwrap();
+        assert!(c.ledger.items().len() > before);
+    }
+
+    #[test]
+    fn s3_plane_bills_requests_and_meters_wan_only() {
+        let mut c = cloud();
+        let t0 = c.clock.now_s();
+        let digest = c.s3_put("ckpts", "job-1", vec![7; 4096], Link::Wan);
+        assert!(c.clock.now_s() > t0, "the put crossed the wire");
+        assert_eq!(digest, super::super::s3::content_digest(&[7; 4096]));
+        let wan_cc = c.ledger.total_centi_cents();
+        assert!(wan_cc >= 2, "PUT request + metered WAN bytes");
+        // The same put over LAN: request billed, bytes free.
+        let before = c.ledger.total_centi_cents();
+        c.s3_put("ckpts", "job-2", vec![7; 4096], Link::Lan);
+        assert_eq!(c.ledger.total_centi_cents(), before + 1);
+        // Get round-trips the bytes; delete bills storage.
+        let data = c.s3_get("ckpts", "job-1", Link::Lan).unwrap();
+        assert_eq!(data, vec![7; 4096]);
+        assert!(matches!(
+            c.s3_get("ckpts", "nope", Link::Lan),
+            Err(CloudError::NoSuchObject(_))
+        ));
+        c.s3_delete("ckpts", "job-1").unwrap();
+        assert_eq!(c.s3.get("ckpts", "job-1"), None);
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub struct FaultPlan {
     /// jobs scheduler delivers each as a spot interruption on the
     /// virtual timeline (independent of the market's own price path).
     pub spot_interruptions: usize,
+    /// Armed spot interruptions hold their fire until this virtual
+    /// time (benches use it to land a reclaim after a checkpoint has
+    /// been committed rather than mid-first-slice). 0.0 = fire in the
+    /// first scan window, the historical behaviour.
+    pub spot_interrupt_not_before_s: f64,
 }
 
 impl FaultPlan {

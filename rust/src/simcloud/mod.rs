@@ -28,6 +28,7 @@ pub use ec2::{
 };
 pub use faults::FaultPlan;
 pub use network::{Link, NetworkModel};
+pub use s3::{content_digest, S3Object, S3};
 pub use spot::SpotMarket;
 pub use timing::SimParams;
 pub use vfs::Vfs;

@@ -1,12 +1,22 @@
 //! Usage-based billing, EC2-2012 style: instance-hours are billed in
 //! whole-hour increments from launch to termination; EBS is billed per
-//! GiB-month (pro-rated here per virtual hour).
+//! GiB-month (pro-rated here per virtual hour); the storage plane adds
+//! S3 request + storage charges and a metered WAN link (per-GiB data
+//! transfer — LAN traffic inside the cloud is free, which is exactly
+//! why cluster-resident checkpoints are worth having).
 //!
 //! Sub-cent amounts are carried in **centi-cents** per line item and
 //! rounded exactly once, in [`Ledger::total_cents`]. The earlier
 //! per-item `/ 100` truncation meant any volume-hour total under 100
 //! centi-cents billed 0¢ — a fleet of small volumes never cost
 //! anything, no matter how many accumulated.
+//!
+//! Every line item carries the **analyst id** that was active on the
+//! ledger when the charge was booked (empty = platform/untagged), so
+//! the bill can be filtered per tenant; full per-tenant quotas and
+//! invoices are a later PR.
+
+use super::network::Link;
 
 /// One billed line item. Amounts are stored in hundredths of a cent so
 /// small EBS charges are not truncated away item by item.
@@ -15,6 +25,8 @@ pub struct LineItem {
     pub resource_id: String,
     pub detail: String,
     pub centi_cents: u64,
+    /// Tenant the charge is attributed to ("" = platform/untagged).
+    pub analyst: String,
 }
 
 impl LineItem {
@@ -29,14 +41,41 @@ impl LineItem {
 #[derive(Clone, Debug, Default)]
 pub struct Ledger {
     items: Vec<LineItem>,
+    /// Tenant stamped onto subsequently booked items.
+    analyst: String,
 }
 
 /// EBS price per GiB-hour in hundredths of a cent (≈ $0.10/GiB-month).
 const EBS_CENTI_CENTS_PER_GB_HOUR: u64 = 1;
+/// S3/snapshot storage per GiB-hour in hundredths of a cent.
+const S3_CENTI_CENTS_PER_GB_HOUR: u64 = 1;
+/// Flat per-request S3 charge (PUT/GET/DEL), hundredths of a cent.
+const S3_REQUEST_CENTI_CENTS: u64 = 1;
+/// Metered WAN transfer, hundredths of a cent per GiB (≈ $0.12/GiB,
+/// the 2012 Internet data-transfer rate). LAN transfer is free.
+const WAN_CENTI_CENTS_PER_GB: u64 = 1200;
 
 impl Ledger {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the tenant subsequent charges are attributed to ("" clears).
+    pub fn set_analyst(&mut self, analyst: &str) {
+        self.analyst = analyst.to_string();
+    }
+
+    pub fn analyst(&self) -> &str {
+        &self.analyst
+    }
+
+    fn push(&mut self, resource_id: String, detail: String, centi_cents: u64) {
+        self.items.push(LineItem {
+            resource_id,
+            detail,
+            centi_cents,
+            analyst: self.analyst.clone(),
+        });
     }
 
     /// Bill an instance that ran from `start_s` to `end_s` virtual time.
@@ -49,11 +88,11 @@ impl Ledger {
         end_s: f64,
     ) {
         let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
-        self.items.push(LineItem {
-            resource_id: id.to_string(),
-            detail: format!("{api_name} x {hours} instance-hour(s)"),
-            centi_cents: hours * price_cents_hour * 100,
-        });
+        self.push(
+            id.to_string(),
+            format!("{api_name} x {hours} instance-hour(s)"),
+            hours * price_cents_hour * 100,
+        );
     }
 
     /// Bill a volume's storage for its lifetime. The centi-cent amount
@@ -61,11 +100,57 @@ impl Ledger {
     pub fn bill_volume(&mut self, id: &str, size_gb: f64, start_s: f64, end_s: f64) {
         let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
         let centi_cents = (size_gb.ceil() as u64) * hours * EBS_CENTI_CENTS_PER_GB_HOUR;
-        self.items.push(LineItem {
-            resource_id: id.to_string(),
-            detail: format!("EBS {size_gb:.0} GiB x {hours} hour(s)"),
+        self.push(
+            id.to_string(),
+            format!("EBS {size_gb:.0} GiB x {hours} hour(s)"),
             centi_cents,
-        });
+        );
+    }
+
+    /// Bill a snapshot's S3-backed storage for its lifetime.
+    pub fn bill_snapshot_storage(&mut self, id: &str, size_gb: f64, start_s: f64, end_s: f64) {
+        let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
+        let centi_cents = (size_gb.ceil() as u64) * hours * S3_CENTI_CENTS_PER_GB_HOUR;
+        self.push(
+            id.to_string(),
+            format!("snapshot {size_gb:.0} GiB x {hours} hour(s)"),
+            centi_cents,
+        );
+    }
+
+    /// Bill one S3 API request (PUT/GET/DEL).
+    pub fn bill_s3_request(&mut self, id: &str, op: &str) {
+        self.push(id.to_string(), format!("S3 {op} request"), S3_REQUEST_CENTI_CENTS);
+    }
+
+    /// Bill an object's storage for its lifetime (booked at delete,
+    /// like volumes).
+    pub fn bill_s3_storage(&mut self, id: &str, bytes: u64, start_s: f64, end_s: f64) {
+        let hours = ((end_s - start_s).max(0.0) / 3600.0).ceil().max(1.0) as u64;
+        let gb = (bytes as f64 / (1024.0 * 1024.0 * 1024.0)).ceil().max(1.0) as u64;
+        self.push(
+            id.to_string(),
+            format!("S3 storage {bytes} B x {hours} hour(s)"),
+            gb * hours * S3_CENTI_CENTS_PER_GB_HOUR,
+        );
+    }
+
+    /// Bill the bytes a transfer put on a link: WAN traffic is metered
+    /// per GiB (any nonzero transfer books at least one centi-cent);
+    /// LAN traffic inside the cloud is free and books nothing. This is
+    /// the single billing path every transfer — project sync, result
+    /// gather, checkpoint shipment — goes through.
+    pub fn bill_data_transfer(&mut self, id: &str, bytes: u64, link: Link) {
+        if bytes == 0 || link == Link::Lan {
+            return;
+        }
+        let gb = bytes as f64 / (1024.0 * 1024.0 * 1024.0);
+        let centi_cents = (gb * WAN_CENTI_CENTS_PER_GB as f64).ceil().max(1.0) as u64;
+        self.push(
+            id.to_string(),
+            format!("WAN transfer {bytes} B"),
+            centi_cents,
+        );
     }
 
     /// Bill a spot instance's usage. The amount is pre-computed by the
@@ -84,20 +169,30 @@ impl Ledger {
         } else {
             format!("{api_name} spot")
         };
-        self.items.push(LineItem {
-            resource_id: id.to_string(),
-            detail,
-            centi_cents,
-        });
+        self.push(id.to_string(), detail, centi_cents);
     }
 
-    /// Re-book a persisted line item verbatim (session restore).
-    pub fn push_raw(&mut self, resource_id: &str, detail: &str, centi_cents: u64) {
+    /// Re-book a persisted line item verbatim (session restore), with
+    /// its original tenant attribution.
+    pub fn push_raw_as(
+        &mut self,
+        resource_id: &str,
+        detail: &str,
+        centi_cents: u64,
+        analyst: &str,
+    ) {
         self.items.push(LineItem {
             resource_id: resource_id.to_string(),
             detail: detail.to_string(),
             centi_cents,
+            analyst: analyst.to_string(),
         });
+    }
+
+    /// Re-book a persisted line item under the current tenant context.
+    pub fn push_raw(&mut self, resource_id: &str, detail: &str, centi_cents: u64) {
+        let analyst = self.analyst.clone();
+        self.push_raw_as(resource_id, detail, centi_cents, &analyst);
     }
 
     /// Total in whole cents: centi-cents are summed exactly and rounded
@@ -109,6 +204,38 @@ impl Ledger {
     /// Exact total in hundredths of a cent.
     pub fn total_centi_cents(&self) -> u64 {
         self.items.iter().map(|i| i.centi_cents).sum()
+    }
+
+    /// Exact metered-WAN-transfer total — the line items booked by
+    /// [`Ledger::bill_data_transfer`]. Lives here, next to the detail
+    /// format it matches, so benches and tests share one definition.
+    pub fn total_wan_transfer_centi_cents(&self) -> u64 {
+        self.items
+            .iter()
+            .filter(|i| i.detail.starts_with("WAN transfer"))
+            .map(|i| i.centi_cents)
+            .sum()
+    }
+
+    /// Exact per-tenant total ("" = platform/untagged items).
+    pub fn total_centi_cents_for(&self, analyst: &str) -> u64 {
+        self.items
+            .iter()
+            .filter(|i| i.analyst == analyst)
+            .map(|i| i.centi_cents)
+            .sum()
+    }
+
+    /// Distinct analyst ids with at least one line item (excluding "").
+    pub fn analysts(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for i in &self.items {
+            if !i.analyst.is_empty() && !out.contains(&i.analyst) {
+                out.push(i.analyst.clone());
+            }
+        }
+        out.sort();
+        out
     }
 
     pub fn items(&self) -> &[LineItem] {
@@ -178,9 +305,56 @@ mod tests {
         a.bill_instance("i-1", "m1.large", 32, 0.0, 100.0);
         let mut b = Ledger::new();
         for item in a.items() {
-            b.push_raw(&item.resource_id, &item.detail, item.centi_cents);
+            b.push_raw_as(&item.resource_id, &item.detail, item.centi_cents, &item.analyst);
         }
         assert_eq!(a.total_centi_cents(), b.total_centi_cents());
         assert_eq!(a.items(), b.items());
+    }
+
+    #[test]
+    fn wan_transfer_is_metered_and_lan_is_free() {
+        let mut l = Ledger::new();
+        l.bill_data_transfer("sync", 1024 * 1024 * 1024, Link::Wan);
+        assert_eq!(l.total_centi_cents(), 1200); // 12 cents per GiB
+        l.bill_data_transfer("nfs", 10 * 1024 * 1024 * 1024, Link::Lan);
+        assert_eq!(l.total_centi_cents(), 1200, "LAN bytes must be free");
+        // Any nonzero WAN transfer books at least one centi-cent.
+        l.bill_data_transfer("ckpt", 512, Link::Wan);
+        assert_eq!(l.total_centi_cents(), 1201);
+        l.bill_data_transfer("noop", 0, Link::Wan);
+        assert_eq!(l.total_centi_cents(), 1201);
+    }
+
+    #[test]
+    fn line_items_carry_the_active_analyst() {
+        let mut l = Ledger::new();
+        l.bill_instance("i-1", "m2.2xlarge", 90, 0.0, 3600.0);
+        l.set_analyst("alice");
+        l.bill_instance("i-2", "m2.2xlarge", 90, 0.0, 3600.0);
+        l.bill_s3_request("s3://b/k", "PUT");
+        l.set_analyst("bob");
+        l.bill_volume("vol-1", 8.0, 0.0, 3600.0);
+        l.set_analyst("");
+        assert_eq!(l.total_centi_cents_for("alice"), 9000 + 1);
+        assert_eq!(l.total_centi_cents_for("bob"), 8);
+        assert_eq!(l.total_centi_cents_for(""), 9000);
+        assert_eq!(
+            l.total_centi_cents(),
+            l.total_centi_cents_for("alice")
+                + l.total_centi_cents_for("bob")
+                + l.total_centi_cents_for("")
+        );
+        assert_eq!(l.analysts(), vec!["alice".to_string(), "bob".to_string()]);
+    }
+
+    #[test]
+    fn s3_requests_and_storage_bill() {
+        let mut l = Ledger::new();
+        l.bill_s3_request("s3://b/k", "PUT");
+        l.bill_s3_storage("s3://b/k", 1024, 0.0, 7200.0);
+        // 1 request + (1 GiB minimum) x 2 hours.
+        assert_eq!(l.total_centi_cents(), 1 + 2);
+        l.bill_snapshot_storage("snap-1", 8.0, 0.0, 3600.0);
+        assert_eq!(l.total_centi_cents(), 1 + 2 + 8);
     }
 }

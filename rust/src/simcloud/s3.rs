@@ -1,13 +1,50 @@
-//! Simulated Simple Storage Service. The paper uses S3 as the common
-//! source that multiple EBS snapshots materialise from when several
-//! instances/clusters need the same dataset.
+//! Simulated Simple Storage Service — the cloud side of the storage
+//! plane (paper §3.2.1: the Analyst's project and results live in the
+//! cloud, so repeated runs pay LAN, not WAN).
+//!
+//! Objects are first-class: every `put` records a content digest
+//! (FNV-1a over the bytes) and the virtual put time, so callers can
+//! fingerprint cloud-side artifacts for cheap, correct re-execution
+//! and the ledger can bill storage for an object's lifetime. Transfer
+//! time and request/storage billing live on [`crate::simcloud::SimCloud`]
+//! (`s3_put` / `s3_get` / `s3_delete`); this module is the pure store.
 
 use std::collections::BTreeMap;
 
-/// Bucket → key → object bytes.
+/// FNV-1a offset basis — seed of an incremental digest.
+pub const DIGEST_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold `bytes` into an incremental FNV-1a digest state. Chaining
+/// calls is identical to digesting the concatenation, so callers can
+/// stream multi-part content without materialising it.
+pub fn digest_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a digest of a byte string — the content fingerprint recorded
+/// on every stored object.
+pub fn content_digest(bytes: &[u8]) -> u64 {
+    digest_update(DIGEST_SEED, bytes)
+}
+
+/// One stored object: bytes plus the metadata the storage plane needs.
+#[derive(Clone, Debug)]
+pub struct S3Object {
+    pub data: Vec<u8>,
+    /// Content fingerprint (FNV-1a), recorded at put time.
+    pub digest: u64,
+    /// Virtual time of the put (storage billing runs from here).
+    pub put_at_s: f64,
+}
+
+/// Bucket → key → object.
 #[derive(Clone, Debug, Default)]
 pub struct S3 {
-    buckets: BTreeMap<String, BTreeMap<String, Vec<u8>>>,
+    buckets: BTreeMap<String, BTreeMap<String, S3Object>>,
 }
 
 impl S3 {
@@ -15,25 +52,42 @@ impl S3 {
         Self::default()
     }
 
-    pub fn put(&mut self, bucket: &str, key: &str, data: Vec<u8>) {
-        self.buckets
-            .entry(bucket.to_string())
-            .or_default()
-            .insert(key.to_string(), data);
+    /// Store an object at virtual time zero (tests / pre-seeded data).
+    /// Returns the content digest.
+    pub fn put(&mut self, bucket: &str, key: &str, data: Vec<u8>) -> u64 {
+        self.put_at(bucket, key, data, 0.0)
+    }
+
+    /// Store an object, recording its digest and put time.
+    pub fn put_at(&mut self, bucket: &str, key: &str, data: Vec<u8>, now_s: f64) -> u64 {
+        let digest = content_digest(&data);
+        self.buckets.entry(bucket.to_string()).or_default().insert(
+            key.to_string(),
+            S3Object {
+                data,
+                digest,
+                put_at_s: now_s,
+            },
+        );
+        digest
     }
 
     pub fn get(&self, bucket: &str, key: &str) -> Option<&[u8]> {
-        self.buckets
-            .get(bucket)
-            .and_then(|b| b.get(key))
-            .map(|v| v.as_slice())
+        self.object(bucket, key).map(|o| o.data.as_slice())
+    }
+
+    /// Full object (bytes + digest + put time).
+    pub fn object(&self, bucket: &str, key: &str) -> Option<&S3Object> {
+        self.buckets.get(bucket).and_then(|b| b.get(key))
     }
 
     pub fn delete(&mut self, bucket: &str, key: &str) -> bool {
-        self.buckets
-            .get_mut(bucket)
-            .map(|b| b.remove(key).is_some())
-            .unwrap_or(false)
+        self.take(bucket, key).is_some()
+    }
+
+    /// Remove and return an object (the caller bills its storage).
+    pub fn take(&mut self, bucket: &str, key: &str) -> Option<S3Object> {
+        self.buckets.get_mut(bucket).and_then(|b| b.remove(key))
     }
 
     pub fn list(&self, bucket: &str, prefix: &str) -> Vec<String> {
@@ -48,21 +102,48 @@ impl S3 {
             .unwrap_or_default()
     }
 
+    /// Every bucket name with at least one object.
+    pub fn bucket_names(&self) -> Vec<String> {
+        self.buckets
+            .iter()
+            .filter(|(_, b)| !b.is_empty())
+            .map(|(name, _)| name.clone())
+            .collect()
+    }
+
+    /// `(key, object)` pairs of a bucket under a prefix.
+    pub fn objects(&self, bucket: &str, prefix: &str) -> Vec<(String, &S3Object)> {
+        self.buckets
+            .get(bucket)
+            .map(|b| {
+                b.iter()
+                    .filter(|(k, _)| k.starts_with(prefix))
+                    .map(|(k, o)| (k.clone(), o))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
     /// Serialize (session persistence).
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         let mut root = Json::obj();
         for (bucket, objs) in &self.buckets {
             let mut b = Json::obj();
-            for (key, data) in objs {
-                b.set(key, Json::str(crate::util::hex::encode(data)));
+            for (key, obj) in objs {
+                let mut o = Json::obj();
+                o.set("data", Json::str(crate::util::hex::encode(&obj.data)));
+                o.set("put_at_s", Json::num(obj.put_at_s));
+                b.set(key, o);
             }
             root.set(bucket, b);
         }
         root
     }
 
-    /// Restore from [`S3::to_json`].
+    /// Restore from [`S3::to_json`]. Accepts the pre-storage-plane
+    /// format too (bare hex strings, no metadata): digests are
+    /// recomputed from the bytes either way.
     pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
         let mut s = S3::new();
         let root = j
@@ -73,14 +154,18 @@ impl S3 {
                 .as_obj()
                 .ok_or_else(|| anyhow::anyhow!("bucket '{bucket}' must be an object"))?;
             for (key, val) in o {
-                let hexs = val
-                    .as_str()
-                    .ok_or_else(|| anyhow::anyhow!("object '{key}' not hex"))?;
-                s.put(
-                    bucket,
-                    key,
-                    crate::util::hex::decode(hexs).map_err(|e| anyhow::anyhow!(e))?,
-                );
+                let (hexs, put_at) = match val {
+                    crate::util::json::Json::Str(h) => (h.as_str(), 0.0),
+                    other => (
+                        other
+                            .get("data")
+                            .and_then(|d| d.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("object '{key}' missing data"))?,
+                        other.get("put_at_s").and_then(|t| t.as_f64()).unwrap_or(0.0),
+                    ),
+                };
+                let data = crate::util::hex::decode(hexs).map_err(|e| anyhow::anyhow!(e))?;
+                s.put_at(bucket, key, data, put_at);
             }
         }
         Ok(s)
@@ -89,7 +174,7 @@ impl S3 {
     pub fn bucket_size(&self, bucket: &str) -> u64 {
         self.buckets
             .get(bucket)
-            .map(|b| b.values().map(|v| v.len() as u64).sum())
+            .map(|b| b.values().map(|o| o.data.len() as u64).sum())
             .unwrap_or(0)
     }
 }
@@ -117,5 +202,46 @@ mod tests {
         s.put("b", "c/3", vec![]);
         assert_eq!(s.list("b", "a/").len(), 2);
         assert_eq!(s.list("nope", "").len(), 0);
+    }
+
+    #[test]
+    fn digests_fingerprint_content() {
+        let mut s = S3::new();
+        let d1 = s.put_at("b", "k", vec![1, 2, 3], 42.0);
+        assert_eq!(d1, content_digest(&[1, 2, 3]));
+        let obj = s.object("b", "k").unwrap();
+        assert_eq!(obj.digest, d1);
+        assert_eq!(obj.put_at_s, 42.0);
+        // Same bytes, same digest; different bytes, different digest.
+        assert_eq!(content_digest(&[1, 2, 3]), d1);
+        assert_ne!(content_digest(&[1, 2, 4]), d1);
+    }
+
+    #[test]
+    fn json_roundtrip_keeps_metadata_and_reads_legacy() {
+        let mut s = S3::new();
+        s.put_at("b", "k", vec![9, 9], 77.0);
+        let back = S3::from_json(&s.to_json()).unwrap();
+        let o = back.object("b", "k").unwrap();
+        assert_eq!(o.data, vec![9, 9]);
+        assert_eq!(o.put_at_s, 77.0);
+        assert_eq!(o.digest, content_digest(&[9, 9]));
+        // Legacy format: bare hex string per key.
+        let legacy = crate::util::json::Json::parse(r#"{"b":{"k":"0909"}}"#).unwrap();
+        let old = S3::from_json(&legacy).unwrap();
+        assert_eq!(old.get("b", "k"), Some([9u8, 9].as_slice()));
+        assert_eq!(old.object("b", "k").unwrap().digest, content_digest(&[9, 9]));
+    }
+
+    #[test]
+    fn bucket_and_object_enumeration() {
+        let mut s = S3::new();
+        s.put("alpha", "x/1", vec![1]);
+        s.put("beta", "y/2", vec![2, 2]);
+        assert_eq!(s.bucket_names(), vec!["alpha".to_string(), "beta".to_string()]);
+        let objs = s.objects("beta", "y/");
+        assert_eq!(objs.len(), 1);
+        assert_eq!(objs[0].0, "y/2");
+        assert_eq!(objs[0].1.data.len(), 2);
     }
 }

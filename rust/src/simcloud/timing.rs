@@ -26,6 +26,10 @@ pub struct SimParams {
     /// EBS volume creation from a snapshot (plus per-GiB cost).
     pub volume_from_snap_base_s: f64,
     pub volume_from_snap_s_per_gb: f64,
+    /// Point-in-time snapshot of a live volume (plus per-GiB cost):
+    /// incremental S3-backed copy, cheaper than full hydration.
+    pub snapshot_base_s: f64,
+    pub snapshot_s_per_gb: f64,
     /// Instance/cluster termination (paper: flat, size-independent).
     pub terminate_s: f64,
 
@@ -73,6 +77,8 @@ impl Default for SimParams {
             volume_attach_s: 12.0,
             volume_from_snap_base_s: 25.0,
             volume_from_snap_s_per_gb: 0.05,
+            snapshot_base_s: 5.0,
+            snapshot_s_per_gb: 0.2,
             terminate_s: 35.0,
 
             wan_bw_bytes_s: 12.0 * 1024.0 * 1024.0,

@@ -35,7 +35,9 @@ impl Gen {
         // Grow the size hint from 4 → 256 across the run.
         let size = 4 + (252 * case_index) / total.max(1);
         Self {
-            rng: Xoshiro256::seed_from_u64(seed ^ (case_index as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            rng: Xoshiro256::seed_from_u64(
+                seed ^ (case_index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
             case_index,
             size,
         }

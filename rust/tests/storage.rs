@@ -1,0 +1,288 @@
+//! Acceptance tests for the cloud-side storage plane (ISSUE 3): a
+//! spot-interrupted job with cluster-resident checkpoints resumes over
+//! the LAN from a snapshot-backed volume, bit-identical to both the
+//! WAN-resume path and an uninterrupted run, while paying strictly
+//! less metered WAN transfer; restore edge cases (different-size
+//! replacement cluster, stale checkpoint after a mid-job edit) behave
+//! cleanly; idle spot capacity is visible to interruptions and the
+//! autoscaler replaces it; and the ledger can be filtered per analyst.
+
+use p2rac::analytics::pool::WorkerPool;
+use p2rac::analytics::CatBondData;
+use p2rac::coordinator::{CreateClusterOpts, MockEngine, Placement, Session};
+use p2rac::jobs::{
+    files_digest, AutoscalerConfig, FleetCluster, JobScheduler, JobSpec, JobState, JobWork,
+    Priority,
+};
+use p2rac::simcloud::{SimParams, Vfs};
+
+fn session() -> Session {
+    Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
+}
+
+/// A CATopt project whose generations take ~20 virtual minutes
+/// (candidate_cost_s), so a 4-generation job spans the first hour
+/// boundary and a spike-every-hour spot market reclaims it mid-run —
+/// after at least one checkpoint has been committed.
+fn write_long_catopt(s: &mut Session, dir: &str, seed: u64) {
+    let data = CatBondData::generate(7, 24, 96);
+    for (name, bytes) in data.to_files() {
+        s.analyst.write(&format!("{dir}/{name}"), bytes);
+    }
+    s.analyst.write(
+        &format!("{dir}/catopt.json"),
+        format!(
+            r#"{{"type":"catopt","pop_size":12,"max_generations":4,"seed":{seed},"bfgs_every":0,"candidate_cost_s":600.0}}"#
+        )
+        .into_bytes(),
+    );
+}
+
+fn spec(name: &str, dir: &str, script: &str) -> JobSpec {
+    JobSpec {
+        name: name.into(),
+        projectdir: dir.into(),
+        rscript: script.into(),
+        priority: Priority::Normal,
+        placement: Placement::ByNode,
+    }
+}
+
+fn results_of(s: &Session, dir: &str) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = s
+        .analyst
+        .list_dir(dir)
+        .into_iter()
+        .map(|rel| {
+            let bytes = s.analyst.read(&format!("{dir}/{rel}")).unwrap().to_vec();
+            (rel, bytes)
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+fn wan_transfer_cc(s: &Session) -> u64 {
+    s.cloud.ledger.total_wan_transfer_centi_cents()
+}
+
+/// Run the long CATopt job on a one-cluster fleet. `interruptible`
+/// buys spot capacity under a spike-every-hour market (bid = on-demand
+/// rate), so the cluster is reclaimed at hour boundaries while the job
+/// runs; `false` is the uninterrupted on-demand ground truth.
+fn run_resume_scenario(resident: bool, interruptible: bool) -> (Session, JobScheduler, u64) {
+    let mut s = session();
+    s.cloud.spot.spike_prob = if interruptible { 1.0 } else { 0.0 };
+    write_long_catopt(&mut s, "proj", 42);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 2,
+        spot: interruptible,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    let id = js.submit_opts(&s, spec("r", "proj", "catopt.json"), resident, "tenant");
+    js.run_until_idle(&mut s).unwrap();
+    let job = js.queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Completed, "resident={resident}");
+    let digest = files_digest(&results_of(&s, "proj_results/r"));
+    (s, js, digest)
+}
+
+#[test]
+fn resident_resume_pays_lan_not_wan_and_stays_bit_identical() {
+    let (_truth_s, truth_js, truth_digest) = run_resume_scenario(false, false);
+    assert_eq!(truth_js.interruptions_delivered, 0);
+
+    let (wan_s, wan_js, wan_digest) = run_resume_scenario(false, true);
+    let (res_s, res_js, res_digest) = run_resume_scenario(true, true);
+    assert!(wan_js.interruptions_delivered >= 1, "baseline must be reclaimed");
+    assert!(res_js.interruptions_delivered >= 1, "resident must be reclaimed");
+
+    // Bit-identity across all three capacity histories.
+    assert_eq!(wan_digest, truth_digest, "WAN resume diverged");
+    assert_eq!(res_digest, truth_digest, "LAN resume diverged");
+
+    // The resident job's resume paid LAN: strictly fewer metered WAN
+    // centi-cents (no checkpoint shipments, no project re-sync).
+    assert!(
+        wan_transfer_cc(&res_s) < wan_transfer_cc(&wan_s),
+        "resident WAN bill ({}cc) must undercut the baseline ({}cc)",
+        wan_transfer_cc(&res_s),
+        wan_transfer_cc(&wan_s)
+    );
+
+    // The resident machinery actually ran: checkpoints were mirrored
+    // to S3 and EBS snapshots were created and later retired (their
+    // storage billed).
+    let items = res_s.cloud.ledger.items();
+    assert!(items.iter().any(|it| it.detail == "S3 PUT request"));
+    assert!(items.iter().any(|it| it.detail.starts_with("snapshot ")));
+    // Completed job's cluster-side artifacts are cleaned up.
+    assert!(res_s.cloud.s3.get("p2rac-checkpoints", "job-1").is_none());
+}
+
+#[test]
+fn restore_from_snapshot_onto_a_different_size_cluster() {
+    let (_s, _js, truth_digest) = run_resume_scenario(false, false);
+
+    let mut s = session();
+    s.cloud.spot.spike_prob = 1.0;
+    write_long_catopt(&mut s, "proj", 42);
+    // Replacement fleet clusters will have 3 nodes…
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 3,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    // …but the job starts on an adopted 2-node spot cluster.
+    s.create_cluster(&CreateClusterOpts {
+        cname: Some("small".into()),
+        csize: Some(2),
+        spot: true,
+        ..Default::default()
+    })
+    .unwrap();
+    js.fleet.push(FleetCluster {
+        name: "small".into(),
+        running: None,
+    });
+    let id = js.submit_opts(&s, spec("r", "proj", "catopt.json"), true, "");
+    js.run_until_idle(&mut s).unwrap();
+
+    assert!(js.interruptions_delivered >= 1, "the 2-node cluster must be reclaimed");
+    assert!(s.clusters_cfg.get("small").is_none(), "reclaimed cluster is gone");
+    // The replacement the job resumed on has a different shape.
+    let replacement = s
+        .clusters_cfg
+        .names()
+        .into_iter()
+        .find(|n| n.starts_with("fleet"))
+        .expect("autoscaler created a replacement");
+    assert_eq!(s.clusters_cfg.get(&replacement).unwrap().size, 3);
+    let job = js.queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Completed);
+    assert_eq!(
+        files_digest(&results_of(&s, "proj_results/r")),
+        truth_digest,
+        "restore onto a different-size cluster must stay bit-identical"
+    );
+}
+
+#[test]
+fn stale_checkpoint_after_mid_job_edit_fails_cleanly() {
+    let mut s = session();
+    s.analyst.write(
+        "proj/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":24,"seed":21}"#.to_vec(),
+    );
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        ..Default::default()
+    });
+    let id = js.submit(&s, spec("r", "proj", "sweep.json"));
+    // A checkpoint taken against a different sweep configuration — what
+    // a mid-job script edit leaves behind.
+    let stale = {
+        let mut v = Vfs::new();
+        v.write(
+            "proj/sweep.json",
+            br#"{"type":"mc_sweep","n_jobs":24,"seed":99}"#.to_vec(),
+        );
+        let pool = WorkerPool::serial();
+        JobWork::from_project(&v, "proj", "sweep.json", None, &pool)
+            .unwrap()
+            .snapshot()
+    };
+    js.queue.get_mut(id).unwrap().checkpoint = Some(stale);
+    js.run_until_idle(&mut s).unwrap();
+    let job = js.queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Failed, "stale checkpoint must fail, not corrupt");
+    let msg = job.summary.as_str().unwrap_or_default().to_string();
+    assert!(msg.contains("edited mid-job"), "diagnostic missing: {msg}");
+}
+
+#[test]
+fn idle_spot_capacity_is_reclaimed_and_replaced() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 1.0;
+    write_long_catopt(&mut s, "proj", 7);
+    // Fleet floor of 2: one cluster works the single job, one sits
+    // idle. The price spike at the hour boundary must reclaim both —
+    // idle capacity is not invisible — and the autoscaler must replace
+    // the loss.
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 2,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    let id = js.submit(&s, spec("r", "proj", "catopt.json"));
+    js.run_until_idle(&mut s).unwrap();
+
+    assert_eq!(js.queue.get(id).unwrap().state, JobState::Completed);
+    assert!(
+        js.interruptions_delivered >= 2,
+        "busy AND idle clusters must be reclaimed, got {}",
+        js.interruptions_delivered
+    );
+    assert!(
+        js.log.iter().any(|l| l.contains("idle cluster")),
+        "an idle-capacity reclaim must be delivered: {:?}",
+        js.log
+    );
+    let scale_ups = js
+        .autoscaler
+        .events
+        .iter()
+        .filter(|e| e.action.contains("scale-up"))
+        .count();
+    assert!(
+        scale_ups >= 3,
+        "autoscaler must replace reclaimed capacity (2 initial + replacements), got {scale_ups}"
+    );
+}
+
+#[test]
+fn ledger_filters_per_analyst() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    s.analyst.write(
+        "pa/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":24,"seed":1}"#.to_vec(),
+    );
+    s.analyst.write(
+        "pb/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":24,"seed":2}"#.to_vec(),
+    );
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 2,
+        ..Default::default()
+    });
+    js.submit_opts(&s, spec("ra", "pa", "sweep.json"), false, "alice");
+    js.submit_opts(&s, spec("rb", "pb", "sweep.json"), true, "bob");
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+
+    let l = &s.cloud.ledger;
+    let alice = l.total_centi_cents_for("alice");
+    let bob = l.total_centi_cents_for("bob");
+    let platform = l.total_centi_cents_for("");
+    assert!(alice > 0, "alice's job traffic must be attributed");
+    assert!(bob > 0, "bob's job traffic must be attributed");
+    assert!(platform > 0, "fleet infrastructure stays on the platform bill");
+    assert_eq!(alice + bob + platform, l.total_centi_cents());
+    assert_eq!(
+        l.analysts(),
+        vec!["alice".to_string(), "bob".to_string()],
+        "both tenants appear in the ledger"
+    );
+}
