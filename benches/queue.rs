@@ -8,11 +8,26 @@
 //!
 //! Asserts the headline property: every job survives the
 //! interruptions, and the spot fleet bill undercuts the static
-//! on-demand bill. Emits `BENCH_queue.json` at the repository root.
+//! on-demand bill.
+//!
+//! Then the **cost-vs-deadline-miss tradeoff curve** (ISSUE 4): six
+//! SLO'd jobs — tight, loose and one infeasible deadline — on a hot
+//! spot market, under three policies: all-on-demand (zero feasible
+//! misses, full price), all-spot (cheapest, deadlines ignored) and the
+//! deadline-aware scheduler (per-slice spot vs on-demand from the
+//! forecast's cost/risk curve). Deadlines are calibrated against the
+//! measured all-on-demand run, which also defines feasibility. Asserts
+//! the tentpole property: the deadline-aware policy meets **every
+//! feasible deadline** at **lower cost than all-on-demand**.
+//!
+//! Emits `BENCH_queue.json` at the repository root with both the
+//! scenario table and the curve.
 //!
 //! Run: `cargo bench --bench queue`
 
-use p2rac::bench_support::{emit_bench_json, run_queue_scenario};
+use p2rac::bench_support::{
+    emit_bench_json, run_deadline_scenario, run_queue_scenario, DeadlinePolicy, DEADLINE_FACTORS,
+};
 use p2rac::util::json::Json;
 
 fn main() {
@@ -48,7 +63,79 @@ fn main() {
         spot.interruptions
     );
 
-    let report = Json::Arr(reports.iter().map(|r| r.to_json()).collect());
+    println!("\n=== cost vs deadline-miss tradeoff (hot spot market) ===\n");
+    // Calibrate: the all-on-demand reference durations define the
+    // deadlines (factor < 1 = infeasible by construction).
+    let reference = run_deadline_scenario(DeadlinePolicy::AllOnDemand, None).unwrap();
+    let deadlines: Vec<f64> = reference
+        .outcomes
+        .iter()
+        .zip(DEADLINE_FACTORS)
+        .map(|(o, factor)| {
+            let duration = o.completed_s.expect("reference run completes every job");
+            factor * duration
+        })
+        .collect();
+    // The all-on-demand curve point IS the calibration run re-graded:
+    // with no spot capacity, deadlines never influence scheduling, so
+    // re-running the identical simulation would only burn time.
+    let od_point = {
+        let mut r = reference;
+        for (o, d) in r.outcomes.iter_mut().zip(&deadlines) {
+            o.deadline_s = *d;
+            o.met = o.completed_s.map(|c| c <= *d).unwrap_or(false);
+        }
+        r.met = r.outcomes.iter().filter(|o| o.met).count();
+        r.missed = r.jobs - r.met;
+        r
+    };
+    let curve: Vec<_> = std::iter::once(od_point)
+        .chain(
+            [DeadlinePolicy::AllSpot, DeadlinePolicy::DeadlineAware]
+                .into_iter()
+                .map(|p| run_deadline_scenario(p, Some(&deadlines)).unwrap()),
+        )
+        .collect();
+    for r in &curve {
+        println!("  {}", r.row());
+    }
+    let od_point = &curve[0];
+    let aware = &curve[2];
+    // The tentpole property: every deadline the full-price fleet can
+    // meet, the deadline-aware policy also meets — at a lower bill.
+    for (ref_o, aware_o) in od_point.outcomes.iter().zip(&aware.outcomes) {
+        if ref_o.met {
+            assert!(
+                aware_o.met,
+                "deadline-aware policy missed feasible deadline of {} \
+                 (deadline t={:.0}s, completed {:?})",
+                aware_o.name, aware_o.deadline_s, aware_o.completed_s
+            );
+        }
+    }
+    assert!(
+        aware.total_cost_cents < od_point.total_cost_cents,
+        "deadline-aware ({}c) must undercut all-on-demand ({}c)",
+        aware.total_cost_cents,
+        od_point.total_cost_cents
+    );
+    println!(
+        "\n  -> deadline-aware fleet meets every feasible deadline for {:.0}% of the \
+         all-on-demand bill ({} vs {} deadlines met)",
+        100.0 * aware.total_cost_cents as f64 / od_point.total_cost_cents.max(1) as f64,
+        aware.met,
+        od_point.met,
+    );
+
+    let mut report = Json::obj();
+    report.set(
+        "scenarios",
+        Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+    );
+    report.set(
+        "deadline_tradeoff",
+        Json::Arr(curve.iter().map(|r| r.to_json()).collect()),
+    );
     match emit_bench_json("queue", &report) {
         Ok(path) => println!("  wrote {}", path.display()),
         Err(e) => eprintln!("  could not write BENCH_queue.json: {e}"),

@@ -14,7 +14,9 @@ use crate::coordinator::{
     table1_desktops, CreateClusterOpts, CreateInstanceOpts, DesktopSpec, NodeSpec, Placement,
     ResourceView, ResultScope, Session,
 };
-use crate::jobs::{AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority, ScalePolicy};
+use crate::jobs::{
+    AutoscalerConfig, BidStrategy, JobScheduler, JobSpec, JobState, Priority, ScalePolicy,
+};
 use crate::simcloud::{NetworkModel, SimParams, SpanCategory};
 use crate::util::json::Json;
 use anyhow::Result;
@@ -456,6 +458,7 @@ pub fn run_queue_scenario(
                 rscript: script.into(),
                 priority: prios[i % prios.len()],
                 placement: Placement::ByNode,
+                deadline_s: None,
             },
         );
     }
@@ -473,6 +476,227 @@ pub fn run_queue_scenario(
         total_cost_cents: s.cloud.ledger.total_cents(),
         interruptions: js.interruptions_delivered,
         scale_events: js.autoscaler.events.len(),
+    })
+}
+
+// ============================================ deadline/SLO scenario
+
+/// Fleet purchase policy of one deadline scenario run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadlinePolicy {
+    /// Everything on-demand: the zero-miss, full-price reference that
+    /// also defines which deadlines are *feasible*.
+    AllOnDemand,
+    /// Everything on spot, deadlines ignored by the scheduler (they
+    /// are only graded afterwards): the cheapest corner of the curve.
+    AllSpot,
+    /// The deadline-aware scheduler: per-slice spot vs on-demand from
+    /// the forecast's cost/risk curve.
+    DeadlineAware,
+}
+
+impl DeadlinePolicy {
+    /// Row label used in the emitted curve.
+    pub fn label(self) -> &'static str {
+        match self {
+            DeadlinePolicy::AllOnDemand => "all-ondemand",
+            DeadlinePolicy::AllSpot => "all-spot",
+            DeadlinePolicy::DeadlineAware => "deadline-aware",
+        }
+    }
+}
+
+/// One job's deadline outcome in a scenario run.
+#[derive(Clone, Debug)]
+pub struct DeadlineJobOutcome {
+    pub name: String,
+    /// Absolute virtual-time deadline the job was graded against.
+    pub deadline_s: f64,
+    /// Completion time, `None` if the job did not complete.
+    pub completed_s: Option<f64>,
+    pub met: bool,
+}
+
+/// Outcome of one point on the cost-vs-deadline-miss tradeoff curve.
+#[derive(Clone, Debug)]
+pub struct DeadlineScenarioReport {
+    pub label: String,
+    pub jobs: usize,
+    pub met: usize,
+    pub missed: usize,
+    pub total_cost_cents: u64,
+    pub makespan_s: f64,
+    pub interruptions: usize,
+    pub outcomes: Vec<DeadlineJobOutcome>,
+}
+
+impl DeadlineScenarioReport {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<16} deadlines met {:>2}/{:<2}  cost {:>7}c  makespan {:>8.0}s  interruptions {}",
+            self.label,
+            self.met,
+            self.jobs,
+            self.total_cost_cents,
+            self.makespan_s,
+            self.interruptions
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("label", Json::str(&self.label)),
+            ("jobs", Json::num(self.jobs as f64)),
+            ("deadlines_met", Json::num(self.met as f64)),
+            ("deadlines_missed", Json::num(self.missed as f64)),
+            ("total_cost_cents", Json::num(self.total_cost_cents as f64)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("interruptions", Json::num(self.interruptions as f64)),
+            (
+                "outcomes",
+                Json::Arr(
+                    self.outcomes
+                        .iter()
+                        .map(|o| {
+                            Json::from_pairs(vec![
+                                ("name", Json::str(&o.name)),
+                                ("deadline_s", Json::num(o.deadline_s)),
+                                (
+                                    "completed_s",
+                                    o.completed_s.map(Json::num).unwrap_or(Json::Null),
+                                ),
+                                ("met", Json::Bool(o.met)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Virtual-hours-heavy projects for the deadline scenario: a few
+/// seconds of real numerics whose *modelled* cost spans hours, so
+/// hour-boundary spot reclaims genuinely threaten deadlines.
+fn write_deadline_projects(s: &mut Session) {
+    s.analyst.write(
+        "dsweep/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":256,"seed":2012,"job_cost_s":120}"#.to_vec(),
+    );
+    let data = CatBondData::generate(7, 24, 96);
+    for (name, bytes) in data.to_files() {
+        s.analyst.write(&format!("dcat/{name}"), bytes);
+    }
+    s.analyst.write(
+        "dcat/catopt.json",
+        br#"{"type":"catopt","pop_size":12,"max_generations":8,"seed":42,"bfgs_every":0,"candidate_cost_s":320}"#
+            .to_vec(),
+    );
+}
+
+/// The scenario's job mix: six jobs alternating sweep / CATopt.
+/// `deadline_factors[i]` scales job `i`'s deadline relative to its
+/// measured all-on-demand duration (1.0 = exactly as fast as the
+/// full-price reference ran it): < 1 is infeasible by construction,
+/// ~1.25 is tight (the cost/risk curve forces on-demand under a hot
+/// market), >= 5 is loose (safe to ride spot).
+pub const DEADLINE_FACTORS: [f64; 6] = [1.25, 5.0, 0.15, 5.0, 1.25, 5.0];
+
+fn deadline_specs(deadlines: Option<&[f64]>) -> Vec<JobSpec> {
+    (0..DEADLINE_FACTORS.len())
+        .map(|i| {
+            let (dir, script) = if i % 2 == 0 {
+                ("dsweep", "sweep.json")
+            } else {
+                ("dcat", "catopt.json")
+            };
+            JobSpec {
+                name: format!("slo{i}"),
+                projectdir: dir.into(),
+                rscript: script.into(),
+                priority: Priority::Normal,
+                placement: Placement::ByNode,
+                deadline_s: deadlines.map(|d| d[i]),
+            }
+        })
+        .collect()
+}
+
+/// Run one point of the cost-vs-deadline-miss curve.
+///
+/// `deadlines`: absolute virtual-time deadlines per job, graded for
+/// every policy but only *scheduled against* under `DeadlineAware`
+/// (and `AllOnDemand`, where they change nothing: the fleet is already
+/// the premium one). `None` runs uncalibrated (used once to measure
+/// the all-on-demand reference durations the deadlines derive from).
+pub fn run_deadline_scenario(
+    policy: DeadlinePolicy,
+    deadlines: Option<&[f64]>,
+) -> Result<DeadlineScenarioReport> {
+    let mut s = bench_session(1.0);
+    // A hot but deterministic market: one hour in four spikes above
+    // every bid. The seed is chosen so two spikes land inside the
+    // workload's first hours (this path: hours 1, 2, 12, 16, 17) —
+    // multi-hour spot jobs really are reclaimed mid-run, which is what
+    // puts the "risk" in the cost/risk curve.
+    s.cloud.spot.seed = 109;
+    s.cloud.spot.spike_prob = 0.25;
+    write_deadline_projects(&mut s);
+    let cfg = AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: DEADLINE_FACTORS.len(),
+        nodes_per_cluster: 2,
+        spot: policy != DeadlinePolicy::AllOnDemand,
+        policy: ScalePolicy::Work,
+        bid: BidStrategy::ForecastMargin,
+        ..Default::default()
+    };
+    let mut js = JobScheduler::new(cfg);
+    let t0 = s.cloud.clock.now_s();
+    let scheduler_sees = match policy {
+        // The cost-optimal corner ignores deadlines at scheduling
+        // time; they are graded afterwards.
+        DeadlinePolicy::AllSpot => None,
+        _ => deadlines,
+    };
+    let specs = deadline_specs(scheduler_sees);
+    for spec in &specs {
+        js.submit(&s, spec.clone());
+    }
+    js.run_until_idle(&mut s)?;
+    js.shutdown_fleet(&mut s)?;
+
+    let graded: Vec<f64> = match deadlines {
+        Some(d) => d.to_vec(),
+        None => vec![f64::INFINITY; specs.len()],
+    };
+    let mut outcomes = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let job = js
+            .queue
+            .jobs()
+            .find(|j| j.spec.name == spec.name)
+            .expect("submitted job exists");
+        let completed = (job.state == JobState::Completed)
+            .then_some(job.completed_at_s)
+            .flatten();
+        outcomes.push(DeadlineJobOutcome {
+            name: spec.name.clone(),
+            deadline_s: graded[i],
+            completed_s: completed,
+            met: completed.map(|c| c <= graded[i]).unwrap_or(false),
+        });
+    }
+    let met = outcomes.iter().filter(|o| o.met).count();
+    Ok(DeadlineScenarioReport {
+        label: policy.label().to_string(),
+        jobs: specs.len(),
+        met,
+        missed: specs.len() - met,
+        total_cost_cents: s.cloud.ledger.total_cents(),
+        makespan_s: s.cloud.clock.now_s() - t0,
+        interruptions: js.interruptions_delivered,
+        outcomes,
     })
 }
 
@@ -572,6 +796,7 @@ pub fn run_storage_scenario(
             rscript: "catopt.json".into(),
             priority: Priority::Normal,
             placement: Placement::ByNode,
+            deadline_s: None,
         },
         resident,
         "bench",

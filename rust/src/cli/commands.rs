@@ -7,7 +7,9 @@ use crate::analytics::CatBondData;
 use crate::coordinator::{
     table1_desktops, CreateClusterOpts, CreateInstanceOpts, Placement, ResultScope, Session,
 };
-use crate::jobs::{JobId, JobScheduler, JobSpec, Priority, ScalePolicy};
+use crate::jobs::{
+    parse_deadline, BidStrategy, JobId, JobScheduler, JobSpec, Priority, ScalePolicy,
+};
 use crate::simcloud::SpanCategory;
 use crate::util::argparse::{CommandSpec, ParsedArgs};
 use crate::util::humanfmt;
@@ -111,6 +113,10 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("rscript", "script to execute from the project directory")
             .value_arg("priority", "low | normal | high (default normal)")
             .value_arg("analyst", "tenant id the job's charges are attributed to")
+            .value_arg(
+                "deadline",
+                "complete-by time: seconds from now, or RFC 3339 (virtual t=0 is 2012-01-01T00:00:00Z)",
+            )
             .required_arg("runname", "name for this job's results")
             .switch_arg("bynode", "round-robin slave placement (default)")
             .switch_arg("byslot", "fill each node's cores before the next")
@@ -137,7 +143,12 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("csize", "nodes per fleet cluster")
             .value_arg("maxcsize", "node cap for the elastic policy")
             .value_arg("type", "EC2 instance type for fleet clusters")
-            .value_arg("policy", "depth | elastic")
+            .value_arg("policy", "depth | elastic | work")
+            .value_arg("bid", "spot bid strategy: ondemand | forecast+margin | capped")
+            .value_arg(
+                "target",
+                "work policy: drain the estimated backlog within this many seconds (default 3600)",
+            )
             .switch_arg("spot", "buy fleet capacity on the spot market")
             .switch_arg("ondemand", "buy fleet capacity on demand")
             .exclusive(&["spot", "ondemand"]),
@@ -329,6 +340,7 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 itype: p.value("type").map(str::to_string),
                 desc: p.value("desc").map(str::to_string),
                 spot: p.switch("spot"),
+                bid_centi_cents_hour: None,
                 analyst: p.value("analyst").map(str::to_string),
             })?;
             let e = s.clusters_cfg.get(&name).unwrap();
@@ -526,7 +538,11 @@ pub fn apply_with_jobs(
             let priority = Priority::parse(p.value_or("priority", "normal"))?;
             let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
             let resident = p.switch("resident");
-            let id = js.submit_opts(
+            let deadline_s = match p.value("deadline") {
+                Some(v) => Some(parse_deadline(v, s.cloud.clock.now_s())?),
+                None => None,
+            };
+            let id = js.admit(
                 s,
                 JobSpec {
                     name: p.value("runname").unwrap().to_string(),
@@ -534,14 +550,18 @@ pub fn apply_with_jobs(
                     rscript,
                     priority,
                     placement,
+                    deadline_s,
                 },
                 resident,
                 p.value_or("analyst", ""),
-            );
+            )?;
             Ok(format!(
-                "submitted {id} (priority {}{}, {} pending)",
+                "submitted {id} (priority {}{}{}, {} pending)",
                 priority.label(),
                 if resident { ", resident" } else { "" },
+                deadline_s
+                    .map(|d| format!(", deadline t={d:.0}s"))
+                    .unwrap_or_default(),
                 js.queue.pending()
             ))
         }
@@ -555,14 +575,19 @@ pub fn apply_with_jobs(
                     .queue
                     .get(JobId(n))
                     .ok_or_else(|| anyhow!("no such job 'job-{n}'"))?;
+                let deadline = js
+                    .deadline_status(s, j)
+                    .map(|line| format!("\n{line}"))
+                    .unwrap_or_default();
                 Ok(format!(
-                    "{} {}  progress={:.0}%  interruptions={}  retries={}  compute={}\nsummary: {}",
+                    "{} {}  progress={:.0}%  interruptions={}  retries={}  compute={}{}\nsummary: {}",
                     j.id,
                     j.state.label(),
                     j.progress * 100.0,
                     j.interruptions,
                     j.retries,
                     humanfmt::secs(j.compute_s),
+                    deadline,
                     j.summary
                 ))
             }
@@ -601,6 +626,16 @@ pub fn apply_with_jobs(
             if let Some(pol) = p.value("policy") {
                 cfg.policy = ScalePolicy::parse(pol)?;
             }
+            if let Some(b) = p.value("bid") {
+                cfg.bid = BidStrategy::parse(b)?;
+            }
+            if let Some(t) = p.value("target") {
+                cfg.work_target_s = t
+                    .parse::<f64>()
+                    .ok()
+                    .filter(|v| v.is_finite() && *v >= 1.0)
+                    .ok_or_else(|| anyhow!("-target expects seconds >= 1, got '{t}'"))?;
+            }
             if p.switch("spot") {
                 cfg.spot = true;
             }
@@ -608,14 +643,17 @@ pub fn apply_with_jobs(
                 cfg.spot = false;
             }
             Ok(format!(
-                "autoscaler: clusters [{}..{}] x {} nodes (elastic cap {}), type {}, {}, policy {}",
+                "autoscaler: clusters [{}..{}] x {} nodes (elastic cap {}), type {}, {}, \
+                 policy {} (target {:.0}s), bid {}",
                 cfg.min_clusters,
                 cfg.max_clusters,
                 cfg.nodes_per_cluster,
                 cfg.max_nodes_per_cluster,
                 cfg.itype,
                 if cfg.spot { "spot" } else { "on-demand" },
-                cfg.policy.label()
+                cfg.policy.label(),
+                cfg.work_target_s,
+                cfg.bid.label()
             ))
         }
         other => apply(s, other, p),
@@ -935,6 +973,96 @@ mod tests {
         let out = run_jobs(&mut s, &mut js, "ec2jobqueue", &["-shutdown"]).unwrap();
         assert!(out.contains("fleet released"), "{out}");
         assert!(s.cloud.live_instances().is_empty());
+    }
+
+    #[test]
+    fn manual_documents_every_ec2_command() {
+        // The operator manual must carry a `## `ec2…`` section for
+        // every registered ec2* subcommand (CI runs the same check as
+        // a grep so doc drift fails fast either way).
+        let manual = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../docs/MANUAL.md"
+        ))
+        .expect("docs/MANUAL.md must exist");
+        for c in registry() {
+            if !c.name.starts_with("ec2") {
+                continue;
+            }
+            assert!(
+                manual.contains(&format!("## `{}`", c.name)),
+                "docs/MANUAL.md has no section for {}",
+                c.name
+            );
+        }
+    }
+
+    #[test]
+    fn submitjob_deadline_flag_validates_and_reaches_the_queue() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig::default());
+        // A deadline before the virtual epoch can only be in the past.
+        let err = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &[
+                "-projectdir",
+                "proj",
+                "-rscript",
+                "sweep.json",
+                "-runname",
+                "r0",
+                "-deadline",
+                "2011-12-31T00:00:00Z",
+            ],
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("past"), "{err:#}");
+        assert_eq!(js.queue.jobs().count(), 0, "a rejected job must not queue");
+        // A sane relative deadline is echoed and lands on the job.
+        let out = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &[
+                "-projectdir",
+                "proj",
+                "-rscript",
+                "sweep.json",
+                "-runname",
+                "r1",
+                "-deadline",
+                "86400",
+            ],
+        )
+        .unwrap();
+        assert!(out.contains("deadline t="), "{out}");
+        let job = js.queue.jobs().next().unwrap();
+        assert!(job.spec.deadline_s.is_some());
+        // ec2jobstatus reports eta + margin from the estimator.
+        let out = run_jobs(&mut s, &mut js, "ec2jobstatus", &["-jobid", "1"]).unwrap();
+        assert!(out.contains("deadline t=") && out.contains("green"), "{out}");
+    }
+
+    #[test]
+    fn autoscale_bid_and_work_policy_flags() {
+        let mut s = session();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig::default());
+        let out = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2autoscale",
+            &["-policy", "work", "-target", "1800", "-bid", "forecast+margin", "-spot"],
+        )
+        .unwrap();
+        assert!(out.contains("work") && out.contains("forecast+margin"), "{out}");
+        assert_eq!(js.autoscaler.cfg.work_target_s, 1800.0);
+        assert_eq!(js.autoscaler.cfg.bid, crate::jobs::BidStrategy::ForecastMargin);
+        // Bad values are rejected cleanly.
+        assert!(run_jobs(&mut s, &mut js, "ec2autoscale", &["-bid", "yolo"]).is_err());
+        assert!(run_jobs(&mut s, &mut js, "ec2autoscale", &["-target", "0"]).is_err());
     }
 
     #[test]

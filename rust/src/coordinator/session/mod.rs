@@ -84,14 +84,20 @@ pub struct CreateClusterOpts {
     pub desc: Option<String>,
     /// Request spot capacity for every node of the cluster.
     pub spot: bool,
+    /// Spot bid in centi-cents per instance-hour; `None` = the
+    /// on-demand rate (the classic "never outbid" default). The jobs
+    /// autoscaler sets this from its bid strategy (`ec2autoscale
+    /// -bid`).
+    pub bid_centi_cents_hour: Option<u64>,
     /// Tenant the cluster (and its usage charges) belongs to.
     pub analyst: Option<String>,
 }
 
-/// Bid used for `-spot` requests: the on-demand rate in centi-cents.
-fn spot_bid(spec: &crate::simcloud::InstanceTypeSpec) -> Lifecycle {
+/// Bid used for `-spot` requests: `bid` when given, otherwise the
+/// on-demand rate in centi-cents.
+fn spot_bid(spec: &crate::simcloud::InstanceTypeSpec, bid: Option<u64>) -> Lifecycle {
     Lifecycle::Spot {
-        bid_centi_cents_hour: spec.price_cents_hour * 100,
+        bid_centi_cents_hour: bid.unwrap_or(spec.price_cents_hour * 100).max(1),
     }
 }
 

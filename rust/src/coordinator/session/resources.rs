@@ -30,7 +30,7 @@ impl Session {
         };
 
         let lifecycle = if opts.spot {
-            spot_bid(spec)
+            spot_bid(spec, None)
         } else {
             Lifecycle::OnDemand
         };
@@ -139,7 +139,7 @@ impl Session {
         };
 
         let lifecycle = if opts.spot {
-            spot_bid(spec)
+            spot_bid(spec, opts.bid_centi_cents_hour)
         } else {
             Lifecycle::OnDemand
         };

@@ -1,13 +1,32 @@
-//! The elastic autoscaler: watches queue depth (and, under the
-//! `elastic` policy, per-job backlog) on the virtual clock and drives
-//! `Session::create_cluster` / `terminate_cluster` / `resize_cluster`
-//! to keep the fleet matched to demand. Every scale event is ordinary
-//! resource management, so it is billed through the centi-cent ledger
-//! like anything else an Analyst does — elasticity has a visible price.
+//! The elastic autoscaler: watches demand on the virtual clock and
+//! drives `Session::create_cluster` / `terminate_cluster` /
+//! `resize_cluster` to keep the fleet matched to it. Under the `depth`
+//! policy demand is raw queue depth; under `work` it is the
+//! scheduler's **estimated remaining work** (checkpoint progress +
+//! per-slice virtual-time history), so ten nearly-finished jobs no
+//! longer buy ten fresh clusters. Deadline pressure arrives as an
+//! on-demand cluster quota ([`FleetDemand::ondemand_clusters`]): the
+//! reconcile loop keeps that many clusters on-demand — converting idle
+//! spot capacity when short, releasing surplus on-demand capacity back
+//! to spot when the pressure clears — and buys everything else at the
+//! configured [`BidStrategy`] against the [`PriceForecast`]. Every
+//! scale event is ordinary resource management, billed through the
+//! centi-cent ledger like anything else an Analyst does — elasticity
+//! has a visible price.
 
 use super::FleetCluster;
 use crate::coordinator::{CreateClusterOpts, Session};
+use crate::simcloud::{instance_type, PriceForecast, SpotMarket};
 use anyhow::{bail, Result};
+
+/// Margin over the forecast's expected price for the
+/// `forecast+margin` bid strategy: high enough to ride out ordinary
+/// jitter, far enough under the on-demand rate to keep the discount.
+const FORECAST_BID_MARGIN: f64 = 0.5;
+
+/// Hard bid ceiling of the `capped` strategy, as a fraction of the
+/// on-demand rate.
+const CAPPED_BID_FRACTION: f64 = 0.5;
 
 /// Scaling policy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -20,21 +39,70 @@ pub enum ScalePolicy {
     /// shrink them back once the backlog clears) via
     /// `Session::resize_cluster`.
     Elastic,
+    /// Scale on the scheduler's estimated remaining work instead of
+    /// raw queue depth: provision enough clusters to drain the
+    /// estimated backlog within `work_target_s` (still bounded by the
+    /// number of jobs — a cluster runs one slice at a time — and by
+    /// `[min_clusters, max_clusters]`).
+    Work,
 }
 
 impl ScalePolicy {
+    /// Parse a CLI policy value (`depth | elastic | work`).
     pub fn parse(s: &str) -> Result<ScalePolicy> {
         match s {
             "depth" => Ok(ScalePolicy::QueueDepth),
             "elastic" => Ok(ScalePolicy::Elastic),
-            other => bail!("unknown autoscale policy '{other}' (depth | elastic)"),
+            "work" => Ok(ScalePolicy::Work),
+            other => bail!("unknown autoscale policy '{other}' (depth | elastic | work)"),
         }
     }
 
+    /// The CLI spelling of this policy.
     pub fn label(self) -> &'static str {
         match self {
             ScalePolicy::QueueDepth => "depth",
             ScalePolicy::Elastic => "elastic",
+            ScalePolicy::Work => "work",
+        }
+    }
+}
+
+/// How the autoscaler prices spot bids (`ec2autoscale -bid`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BidStrategy {
+    /// Bid the on-demand rate: never outbid by choice, just ride the
+    /// discount (the classic 2012 default).
+    OnDemand,
+    /// Bid the forecast's expected price plus a 50% margin: survives
+    /// ordinary jitter, is reclaimed by spikes, and never pays more
+    /// than ~half the on-demand rate per hour.
+    ForecastMargin,
+    /// Bid a hard cap of half the on-demand rate: the cheapest
+    /// capacity with the highest reclaim exposure.
+    Capped,
+}
+
+impl BidStrategy {
+    /// Parse a CLI bid-strategy value
+    /// (`ondemand | forecast+margin | capped`).
+    pub fn parse(s: &str) -> Result<BidStrategy> {
+        match s {
+            "ondemand" => Ok(BidStrategy::OnDemand),
+            "forecast+margin" => Ok(BidStrategy::ForecastMargin),
+            "capped" => Ok(BidStrategy::Capped),
+            other => bail!(
+                "unknown bid strategy '{other}' (ondemand | forecast+margin | capped)"
+            ),
+        }
+    }
+
+    /// The CLI spelling of this strategy.
+    pub fn label(self) -> &'static str {
+        match self {
+            BidStrategy::OnDemand => "ondemand",
+            BidStrategy::ForecastMargin => "forecast+margin",
+            BidStrategy::Capped => "capped",
         }
     }
 }
@@ -42,16 +110,25 @@ impl ScalePolicy {
 /// Fleet-shape configuration (`ec2autoscale`).
 #[derive(Clone, Debug)]
 pub struct AutoscalerConfig {
+    /// Floor the fleet never shrinks below.
     pub min_clusters: usize,
+    /// Ceiling the fleet never grows above.
     pub max_clusters: usize,
     /// Nodes per fleet cluster (>= 2: one master + workers).
     pub nodes_per_cluster: usize,
     /// Upper bound the `elastic` policy may resize a cluster to.
     pub max_nodes_per_cluster: usize,
+    /// EC2 instance type fleet clusters are built from.
     pub itype: String,
     /// Buy fleet capacity on the spot market.
     pub spot: bool,
+    /// Scaling policy (`depth | elastic | work`).
     pub policy: ScalePolicy,
+    /// Spot bid strategy (`ondemand | forecast+margin | capped`).
+    pub bid: BidStrategy,
+    /// The `work` policy provisions enough clusters to drain the
+    /// estimated backlog within this many virtual seconds.
+    pub work_target_s: f64,
 }
 
 impl Default for AutoscalerConfig {
@@ -64,41 +141,108 @@ impl Default for AutoscalerConfig {
             itype: "m2.2xlarge".into(),
             spot: false,
             policy: ScalePolicy::QueueDepth,
+            bid: BidStrategy::OnDemand,
+            work_target_s: 3600.0,
         }
     }
+}
+
+/// What the scheduler asks the autoscaler to provision for one
+/// reconcile pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetDemand {
+    /// Jobs waiting for capacity.
+    pub pending: usize,
+    /// Jobs with a slice in flight.
+    pub running: usize,
+    /// Clusters that must be on-demand: one per pending job whose
+    /// deadline the cost/risk curve says spot cannot safely meet.
+    pub ondemand_clusters: usize,
+    /// Estimated remaining work (virtual compute seconds) across
+    /// pending and running jobs; `None` when the scheduler has no
+    /// estimator (plain queue-depth callers).
+    pub est_remaining_s: Option<f64>,
 }
 
 /// One recorded scaling decision (for reports and benches).
 #[derive(Clone, Debug)]
 pub struct ScaleEvent {
+    /// Virtual time of the decision.
     pub at_s: f64,
+    /// Human-readable description ("scale-up: created fleet3 …").
     pub action: String,
 }
 
 /// The autoscaler itself.
 pub struct Autoscaler {
+    /// Fleet-shape configuration (`ec2autoscale`).
     pub cfg: AutoscalerConfig,
+    /// Price forecast consulted for bids (and shared with the
+    /// scheduler's deadline cost/risk decisions).
+    pub forecast: PriceForecast,
     /// Monotonic suffix for fleet cluster names (reclaimed clusters
     /// never reuse a name).
     counter: u64,
+    /// Every scaling decision taken, in order.
     pub events: Vec<ScaleEvent>,
 }
 
 impl Autoscaler {
+    /// An autoscaler with the given fleet shape and a default
+    /// 24-hour-window forecast.
     pub fn new(cfg: AutoscalerConfig) -> Self {
         Self {
             cfg,
+            forecast: PriceForecast::default(),
             counter: 0,
             events: Vec::new(),
         }
     }
 
-    /// Target fleet size for the current demand. (Not `clamp`: a
+    /// Target fleet size for plain queue-depth demand. (Not `clamp`: a
     /// min > max misconfiguration should saturate at max, not panic.)
     pub fn desired_clusters(&self, pending: usize, running: usize) -> usize {
         (pending + running)
             .max(self.cfg.min_clusters)
             .min(self.cfg.max_clusters)
+    }
+
+    /// Target fleet size for a full demand picture: queue depth by
+    /// default, estimated-remaining-work under the `work` policy.
+    pub fn desired_clusters_for(&self, d: &FleetDemand) -> usize {
+        let by_depth = d.pending + d.running;
+        let want = match (self.cfg.policy, d.est_remaining_s) {
+            (ScalePolicy::Work, Some(w)) => {
+                let n = (w / self.cfg.work_target_s.max(1.0)).ceil() as usize;
+                // A cluster runs one slice at a time, so more clusters
+                // than jobs is waste; fewer than the busy set is
+                // impossible to honour (busy clusters never drain).
+                n.min(by_depth).max(d.running)
+            }
+            _ => by_depth,
+        };
+        want.max(self.cfg.min_clusters).min(self.cfg.max_clusters)
+    }
+
+    /// The bid (centi-cents per instance-hour) the configured strategy
+    /// produces right now, from the forecast over the market's price
+    /// path. Unknown instance types bid zero (their launch fails with
+    /// a clean error before the bid matters).
+    pub fn bid_for(&self, s: &Session) -> u64 {
+        let od = instance_type(&self.cfg.itype)
+            .map(|t| t.price_cents_hour * 100)
+            .unwrap_or(0);
+        match self.cfg.bid {
+            BidStrategy::OnDemand => od,
+            BidStrategy::ForecastMargin => {
+                let hour = SpotMarket::hour_index(s.cloud.clock.now_s());
+                let expected =
+                    self.forecast
+                        .expected_price_centi_cents(&s.cloud.spot, &self.cfg.itype, hour);
+                ((expected as f64 * (1.0 + FORECAST_BID_MARGIN)).ceil() as u64).max(1)
+            }
+            BidStrategy::Capped => ((od as f64 * CAPPED_BID_FRACTION).ceil() as u64).max(1),
+        }
     }
 
     fn note(&mut self, at_s: f64, action: String) {
@@ -111,12 +255,13 @@ impl Autoscaler {
         self.counter
     }
 
+    /// Restore the persisted name counter.
     pub fn set_counter(&mut self, c: u64) {
         self.counter = c;
     }
 
-    /// Drive the fleet toward the desired size. Busy clusters are
-    /// never torn down; scale-downs drain idle capacity only.
+    /// Drive the fleet toward the queue-depth target. Busy clusters
+    /// are never torn down; scale-downs drain idle capacity only.
     pub fn reconcile(
         &mut self,
         s: &mut Session,
@@ -124,37 +269,47 @@ impl Autoscaler {
         pending: usize,
         running: usize,
     ) -> Result<()> {
-        let desired = self.desired_clusters(pending, running);
+        self.reconcile_demand(
+            s,
+            fleet,
+            &FleetDemand {
+                pending,
+                running,
+                ondemand_clusters: 0,
+                est_remaining_s: None,
+            },
+        )
+    }
 
-        while fleet.len() < desired {
-            self.counter += 1;
-            let name = format!("fleet{}", self.counter);
-            let csize = self.cfg.nodes_per_cluster.max(2);
-            s.create_cluster(&CreateClusterOpts {
-                cname: Some(name.clone()),
-                csize: Some(csize),
-                itype: Some(self.cfg.itype.clone()),
-                desc: Some("autoscaler fleet".into()),
-                spot: self.cfg.spot,
-                ..Default::default()
-            })?;
-            let now = s.cloud.clock.now_s();
-            self.note(
-                now,
-                format!(
-                    "scale-up: created {name} ({csize} x {}, {})",
-                    self.cfg.itype,
-                    if self.cfg.spot { "spot" } else { "on-demand" }
-                ),
-            );
-            fleet.push(FleetCluster {
-                name,
-                running: None,
-            });
-        }
+    /// Drive the fleet toward a full demand picture: size from the
+    /// policy, purchase-model mix from the deadline quota. Busy
+    /// clusters are never torn down; scale-downs and purchase-model
+    /// conversions drain idle capacity only.
+    pub fn reconcile_demand(
+        &mut self,
+        s: &mut Session,
+        fleet: &mut Vec<FleetCluster>,
+        d: &FleetDemand,
+    ) -> Result<()> {
+        let desired = self.desired_clusters_for(d);
+        // How many clusters must be on-demand: everything when the
+        // fleet is an on-demand fleet, the deadline quota otherwise.
+        let od_target = if self.cfg.spot {
+            d.ondemand_clusters.min(desired)
+        } else {
+            desired
+        };
 
+        // Scale down: drain idle capacity, preferring the kind in
+        // surplus so the mix converges along the way.
         while fleet.len() > desired {
-            let Some(pos) = fleet.iter().position(|c| c.running.is_none()) else {
+            let od_count = fleet.iter().filter(|c| !c.spot).count();
+            let prefer_spot_removal = od_count <= od_target;
+            let pos = fleet
+                .iter()
+                .position(|c| c.running.is_none() && c.spot == prefer_spot_removal)
+                .or_else(|| fleet.iter().position(|c| c.running.is_none()));
+            let Some(pos) = pos else {
                 break; // everything is busy; drain later
             };
             let name = fleet.remove(pos).name;
@@ -163,10 +318,51 @@ impl Autoscaler {
             self.note(now, format!("scale-down: terminated {name}"));
         }
 
+        // Purchase-model conversions, idle capacity only. Short of
+        // on-demand (a deadline is at risk on spot): release idle spot
+        // clusters so the scale-up below recreates the slots
+        // on-demand. The other direction — surplus on-demand once the
+        // deadline pressure clears — is left to drain naturally at
+        // scale-down time: terminating a paid-by-the-hour cluster
+        // early just to rebuy it as spot churns the minimum-one-hour
+        // billing rule.
+        if self.cfg.spot {
+            // Each released slot is recreated on-demand by the
+            // scale-up below, so count releases toward the quota —
+            // otherwise this loop would drain every idle spot cluster
+            // before the first replacement exists.
+            let mut released = 0usize;
+            loop {
+                let od_count = fleet.iter().filter(|c| !c.spot).count();
+                if od_count + released >= od_target {
+                    break;
+                }
+                let Some(pos) = fleet.iter().position(|c| c.running.is_none() && c.spot) else {
+                    break; // no idle spot capacity to convert
+                };
+                let name = fleet.remove(pos).name;
+                s.terminate_cluster(Some(&name), true)?;
+                released += 1;
+                let now = s.cloud.clock.now_s();
+                self.note(
+                    now,
+                    format!("convert: released spot {name} for on-demand deadline capacity"),
+                );
+            }
+        }
+
+        // Scale up to the desired size, covering the on-demand quota
+        // first.
+        while fleet.len() < desired {
+            let od_count = fleet.iter().filter(|c| !c.spot).count();
+            let spot_kind = self.cfg.spot && od_count >= od_target;
+            self.create_fleet_cluster(s, fleet, spot_kind)?;
+        }
+
         if self.cfg.policy == ScalePolicy::Elastic {
             // Saturated with a backlog -> widen idle clusters; backlog
             // cleared -> shrink them back to the baseline.
-            let target = if fleet.len() >= self.cfg.max_clusters && pending > fleet.len() {
+            let target = if fleet.len() >= self.cfg.max_clusters && d.pending > fleet.len() {
                 self.cfg.max_nodes_per_cluster.max(2)
             } else {
                 self.cfg.nodes_per_cluster.max(2)
@@ -185,6 +381,44 @@ impl Autoscaler {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Create one fleet cluster of the given purchase model (spot
+    /// capacity is bid per the configured strategy) and record it.
+    fn create_fleet_cluster(
+        &mut self,
+        s: &mut Session,
+        fleet: &mut Vec<FleetCluster>,
+        spot: bool,
+    ) -> Result<()> {
+        self.counter += 1;
+        let name = format!("fleet{}", self.counter);
+        let csize = self.cfg.nodes_per_cluster.max(2);
+        let bid = if spot { Some(self.bid_for(s)) } else { None };
+        s.create_cluster(&CreateClusterOpts {
+            cname: Some(name.clone()),
+            csize: Some(csize),
+            itype: Some(self.cfg.itype.clone()),
+            desc: Some("autoscaler fleet".into()),
+            spot,
+            bid_centi_cents_hour: bid,
+            ..Default::default()
+        })?;
+        let now = s.cloud.clock.now_s();
+        self.note(
+            now,
+            format!(
+                "scale-up: created {name} ({csize} x {}, {})",
+                self.cfg.itype,
+                if spot { "spot" } else { "on-demand" }
+            ),
+        );
+        fleet.push(FleetCluster {
+            name,
+            running: None,
+            spot,
+        });
         Ok(())
     }
 }
@@ -209,6 +443,66 @@ mod tests {
         assert_eq!(a.desired_clusters(0, 0), 1);
         assert_eq!(a.desired_clusters(2, 1), 3);
         assert_eq!(a.desired_clusters(9, 3), 4);
+    }
+
+    #[test]
+    fn work_policy_scales_on_estimated_backlog_not_depth() {
+        let a = Autoscaler::new(AutoscalerConfig {
+            min_clusters: 0,
+            max_clusters: 8,
+            policy: ScalePolicy::Work,
+            work_target_s: 3600.0,
+            ..Default::default()
+        });
+        // Six nearly-finished jobs with 30 minutes of work between
+        // them need one cluster, not six.
+        let d = FleetDemand {
+            pending: 6,
+            running: 0,
+            ondemand_clusters: 0,
+            est_remaining_s: Some(1800.0),
+        };
+        assert_eq!(a.desired_clusters_for(&d), 1);
+        // A deep backlog wants many clusters, but never more than the
+        // job count (a cluster runs one slice at a time)...
+        let d = FleetDemand {
+            pending: 3,
+            running: 1,
+            ondemand_clusters: 0,
+            est_remaining_s: Some(100_000.0),
+        };
+        assert_eq!(a.desired_clusters_for(&d), 4);
+        // ...and never fewer than the busy set.
+        let d = FleetDemand {
+            pending: 0,
+            running: 3,
+            ondemand_clusters: 0,
+            est_remaining_s: Some(10.0),
+        };
+        assert_eq!(a.desired_clusters_for(&d), 3);
+        // Without an estimate the policy degrades to queue depth.
+        let d = FleetDemand {
+            pending: 6,
+            running: 0,
+            ondemand_clusters: 0,
+            est_remaining_s: None,
+        };
+        assert_eq!(a.desired_clusters_for(&d), 6);
+    }
+
+    #[test]
+    fn bid_strategies_price_against_the_forecast() {
+        let s = session();
+        let od = 90 * 100; // m2.2xlarge on-demand, centi-cents
+        let mut a = Autoscaler::new(AutoscalerConfig::default());
+        assert_eq!(a.bid_for(&s), od);
+        a.cfg.bid = BidStrategy::Capped;
+        assert_eq!(a.bid_for(&s), od / 2);
+        a.cfg.bid = BidStrategy::ForecastMargin;
+        let bid = a.bid_for(&s);
+        // Expected price ~30-35% of on-demand, +50% margin: well under
+        // the on-demand rate, well over the floor.
+        assert!(bid > od / 5 && bid < od, "forecast+margin bid {bid} vs od {od}");
     }
 
     #[test]
@@ -251,6 +545,54 @@ mod tests {
         // The busy cluster stays; only the idle one went away.
         assert_eq!(fleet.len(), 1);
         assert!(fleet[0].running.is_some());
+    }
+
+    #[test]
+    fn deadline_quota_converts_idle_spot_to_on_demand() {
+        let mut s = session();
+        let mut a = Autoscaler::new(AutoscalerConfig {
+            min_clusters: 0,
+            max_clusters: 2,
+            spot: true,
+            ..Default::default()
+        });
+        let mut fleet = Vec::new();
+        // Two relaxed jobs: an all-spot fleet.
+        a.reconcile_demand(
+            &mut s,
+            &mut fleet,
+            &FleetDemand {
+                pending: 2,
+                running: 0,
+                ondemand_clusters: 0,
+                est_remaining_s: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert!(fleet.iter().all(|c| c.spot));
+        // One job's deadline is now at risk on spot: one idle spot
+        // cluster is released and recreated on-demand.
+        a.reconcile_demand(
+            &mut s,
+            &mut fleet,
+            &FleetDemand {
+                pending: 2,
+                running: 0,
+                ondemand_clusters: 1,
+                est_remaining_s: None,
+            },
+        )
+        .unwrap();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet.iter().filter(|c| !c.spot).count(), 1);
+        assert!(a.events.iter().any(|e| e.action.contains("convert")));
+        // The session agrees on the purchase models.
+        for c in &fleet {
+            let entry = s.clusters_cfg.get(&c.name).unwrap();
+            let inst = s.cloud.instance(&entry.master_id).unwrap();
+            assert_eq!(inst.is_spot(), c.spot, "cluster {} kind mismatch", c.name);
+        }
     }
 
     #[test]

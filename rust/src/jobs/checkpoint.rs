@@ -156,24 +156,56 @@ pub fn restore_resident_checkpoint(
 pub struct StepOutcome {
     /// Billed virtual compute time of the slice on the given resource.
     pub virtual_s: f64,
+    /// The job ran out of work during this slice: results are ready.
     pub finished: bool,
 }
 
 /// One job's executable state, reconstructed from the project files
 /// (and a checkpoint, if any) each time the job lands on capacity.
 pub enum JobWork {
+    /// A CATopt GA optimisation.
     Catopt {
+        /// Loss-table objective over the project's data files.
         backend: RustBackend,
+        /// The GA loop state (checkpoint = its snapshot).
         runner: GaRunner,
+        /// Virtual-time cost model of one generation.
         cost: CatoptCost,
     },
+    /// A Monte-Carlo parameter sweep.
     Sweep {
+        /// Sweep configuration (grid + seed).
         cfg: SweepConfig,
+        /// Pre-forked per-batch PRNG streams.
         plan: SweepPlan,
+        /// Batches committed so far.
         done: usize,
+        /// Results of the committed batches, in job order.
         results: Vec<JobResult>,
+        /// Virtual-time cost model of one batch.
         cost: SweepCost,
     },
+}
+
+/// Best-effort total work units (GA generations / MC batches) a script
+/// will run, readable **before** any dispatch — the deadline
+/// scheduler sizes jobs at submission with it. GA runs may stop early
+/// (`wait_generations`), so the GA number is an upper bound, which is
+/// the conservative direction for deadline estimates. `None` for
+/// unknown script types (dispatch will fail such jobs with a precise
+/// error).
+pub fn script_units(script: &Json) -> Option<usize> {
+    match script.opt_str("type")?.as_str() {
+        "catopt" => Some(ga_config_from(script).max_generations.max(1)),
+        "mc_sweep" => {
+            // One unit per batch of up to a tile of MC jobs — counted
+            // arithmetically, not by materialising the whole plan
+            // (grid + forked PRNG streams) just to take its length.
+            let cfg = sweep_config_from(script);
+            Some(cfg.n_jobs.div_ceil(RUST_SWEEP_TILE).max(1))
+        }
+        _ => None,
+    }
 }
 
 pub(crate) fn load_script(project: &Vfs, project_dir: &str, rscript: &str) -> Result<Json> {
@@ -604,6 +636,19 @@ mod tests {
             err.unwrap_err().to_string().contains("dim"),
             "dimension change must be rejected"
         );
+    }
+
+    #[test]
+    fn script_units_sizes_both_workloads_before_dispatch() {
+        let ck = Json::parse(r#"{"type":"catopt","pop_size":16,"max_generations":6}"#).unwrap();
+        assert_eq!(script_units(&ck), Some(6));
+        // 40 MC jobs at the 64-job tile: one batch.
+        let sw = Json::parse(r#"{"type":"mc_sweep","n_jobs":40,"seed":21}"#).unwrap();
+        assert_eq!(script_units(&sw), Some(1));
+        let sw = Json::parse(r#"{"type":"mc_sweep","n_jobs":256,"seed":21}"#).unwrap();
+        assert_eq!(script_units(&sw), Some(4));
+        let bad = Json::parse(r#"{"type":"quantum"}"#).unwrap();
+        assert_eq!(script_units(&bad), None);
     }
 
     #[test]

@@ -26,35 +26,78 @@
 //! committed checkpoint. Between slices the highest-priority pending
 //! job wins the freed cluster, so priorities preempt at checkpoint
 //! granularity.
+//!
+//! **Deadlines.** A job may carry an SLO (`ec2submitjob -deadline`).
+//! The scheduler estimates its remaining work from checkpoint
+//! `progress` and the per-slice virtual-time history (static cost-model
+//! hint before the first slice, cross-job EWMA as a last resort) and
+//! decides **per slice** whether spot capacity is safe: the remaining
+//! time is risk-adjusted by the [`crate::simcloud::PriceForecast`]'s
+//! interruption likelihood at the fleet's current bid, padded by a
+//! safety margin, and compared against the slack (see
+//! `DESIGN.md` § "Deadline scheduling & forecasting" for the formula).
+//! At-risk jobs are routed to on-demand clusters — the autoscaler
+//! converts idle spot capacity when the quota is short — while relaxed
+//! jobs keep riding the spot discount; the same estimator feeds
+//! `ec2jobstatus` margins and, under the `work` scaling policy, the
+//! autoscaler's fleet sizing.
+
+#![warn(missing_docs)]
 
 pub mod autoscaler;
 pub mod checkpoint;
 pub mod queue;
 pub mod spot;
 
-pub use autoscaler::{Autoscaler, AutoscalerConfig, ScaleEvent, ScalePolicy};
+pub use autoscaler::{
+    Autoscaler, AutoscalerConfig, BidStrategy, FleetDemand, ScaleEvent, ScalePolicy,
+};
 pub use checkpoint::{
-    commit_resident_checkpoint, restore_resident_checkpoint, JobWork, StepOutcome,
+    commit_resident_checkpoint, restore_resident_checkpoint, script_units, JobWork, StepOutcome,
     CHECKPOINT_BUCKET,
 };
 pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority};
 
+use crate::analytics::cost::{self, CatoptCost, SweepCost};
 use crate::analytics::pool::WorkerPool;
+use crate::analytics::script::{ga_config_from, sweep_config_from, RUST_SWEEP_TILE};
 use crate::coordinator::engine::ResourceView;
 use crate::coordinator::scheduler::{self, NodeSpec};
 use crate::coordinator::Session;
 use crate::datasync::{sync_dir, Protocol, DEFAULT_BLOCK_LEN};
 use crate::simcloud::s3::{digest_update, DIGEST_SEED};
-use crate::simcloud::{instance_type, Link, SpanCategory};
+use crate::simcloud::{instance_type, Link, SpanCategory, SpotMarket};
+use crate::util::humanfmt;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
+
+/// Fractional headroom the deadline decision demands over the
+/// risk-adjusted remaining-time estimate: covers what the estimator
+/// deliberately leaves out (project sync, checkpoint shipment, queue
+/// wait between slices).
+const DEADLINE_SAFETY_MARGIN: f64 = 0.25;
+
+/// Virtual-time cost attributed to one spot interruption when
+/// risk-adjusting a deadline estimate, in slices: the discarded
+/// in-flight slice plus roughly one slice of restore/resync on
+/// replacement capacity.
+const INTERRUPTION_COST_SLICES: f64 = 2.0;
+
+/// Smoothing factor of the scheduler's cross-job per-unit EWMA (weight
+/// of the newest committed slice).
+const PRIOR_EWMA_ALPHA: f64 = 0.3;
 
 /// One cluster of the elastic fleet.
 #[derive(Clone, Debug)]
 pub struct FleetCluster {
+    /// Cluster name in the session configuration (`fleet<N>`).
     pub name: String,
     /// Job whose slice is executing on this cluster, if any.
     pub running: Option<JobId>,
+    /// Purchase model: spot-market capacity (reclaimable) or
+    /// on-demand. Kept in sync with the session by
+    /// [`JobScheduler::prune_fleet`].
+    pub spot: bool,
 }
 
 /// An in-flight slice: the numerics already ran; this is its
@@ -71,6 +114,12 @@ struct SliceEnd {
     snapshot: Json,
     progress: f64,
     virtual_s: f64,
+    /// Work units this slice ran (estimator history entry).
+    units_run: usize,
+    /// Work units committed after this slice.
+    units_done: usize,
+    /// Total work units of the job (authoritative, from the work).
+    units_total: usize,
     finished: bool,
     /// A `FaultPlan` exec failure hit this slice: commit nothing.
     failed: bool,
@@ -150,8 +199,11 @@ fn commit_resident_state(
 
 /// The platform scheduler.
 pub struct JobScheduler {
+    /// The multi-tenant priority queue.
     pub queue: JobQueue,
+    /// Drives the fleet toward the queue's demand.
     pub autoscaler: Autoscaler,
+    /// The elastic fleet the autoscaler currently provides.
     pub fleet: Vec<FleetCluster>,
     /// Work units (GA generations / MC batches) per slice — the
     /// checkpoint cadence. Smaller = less work lost per interruption,
@@ -161,10 +213,17 @@ pub struct JobScheduler {
     scanned_to: f64,
     /// Spot interruptions delivered to running slices.
     pub interruptions_delivered: usize,
+    /// Cross-job EWMA of committed per-unit virtual seconds — the
+    /// estimator's last-resort prior for jobs with no history of their
+    /// own, and the floor under `ec2submitjob`'s "deadline shorter
+    /// than one slice" rejection.
+    pub unit_s_prior: Option<f64>,
+    /// Human-readable scheduling decisions, in order.
     pub log: Vec<String>,
 }
 
 impl JobScheduler {
+    /// A scheduler with an empty queue over a fresh autoscaled fleet.
     pub fn new(cfg: AutoscalerConfig) -> Self {
         Self {
             queue: JobQueue::new(),
@@ -174,13 +233,32 @@ impl JobScheduler {
             slices: Vec::new(),
             scanned_to: 0.0,
             interruptions_delivered: 0,
+            unit_s_prior: None,
             log: Vec::new(),
         }
     }
 
-    /// Submit a job at the current virtual time.
+    /// Submit a job at the current virtual time, sizing it against the
+    /// analyst-side script (work units + static per-unit cost hint) so
+    /// deadline decisions have an estimate before the first slice runs.
     pub fn submit(&mut self, s: &Session, spec: JobSpec) -> JobId {
-        self.queue.submit(spec, s.cloud.clock.now_s())
+        let sized = self.size_job(s, &spec);
+        self.submit_sized(s, spec, sized)
+    }
+
+    /// Submit with the `(units_total, unit-seconds hint)` already
+    /// computed — `admit` sizes once for validation and reuses it here.
+    fn submit_sized(
+        &mut self,
+        s: &Session,
+        spec: JobSpec,
+        (units_total, hint): (usize, Option<f64>),
+    ) -> JobId {
+        let id = self.queue.submit(spec, s.cloud.clock.now_s());
+        let job = self.queue.get_mut(id).expect("just submitted");
+        job.units_total = units_total;
+        job.est_unit_s_hint = hint;
+        id
     }
 
     /// Submit with storage-plane options: `resident` keeps the job's
@@ -194,17 +272,141 @@ impl JobScheduler {
         resident: bool,
         analyst: &str,
     ) -> JobId {
-        let id = self.queue.submit(spec, s.cloud.clock.now_s());
+        let id = self.submit(s, spec);
         let job = self.queue.get_mut(id).expect("just submitted");
         job.resident = resident;
         job.analyst = analyst.to_string();
         id
     }
 
+    /// `ec2submitjob`'s entry point: validate the spec's deadline (a
+    /// deadline already in the past, or closer than the minimum
+    /// one-slice runtime at the best available rate estimate, can only
+    /// be missed — reject it cleanly instead of queueing a guaranteed
+    /// failure), then submit.
+    pub fn admit(
+        &mut self,
+        s: &Session,
+        spec: JobSpec,
+        resident: bool,
+        analyst: &str,
+    ) -> Result<JobId> {
+        let sized = self.size_job(s, &spec);
+        if let Some(deadline) = spec.deadline_s {
+            let now = s.cloud.clock.now_s();
+            if deadline <= now {
+                bail!(
+                    "deadline t={deadline:.0}s is already in the past (virtual now is \
+                     t={now:.0}s): the job could only miss it"
+                );
+            }
+            if let Some(unit_s) = sized.1.or(self.unit_s_prior) {
+                // A slice never runs more units than the job has left
+                // (`JobWork::step` caps at the remainder), so a job
+                // smaller than one nominal slice is judged by its real
+                // size — not rejected for a slice it would never run.
+                let slice_cap = match sized.0 {
+                    0 => self.slice_units.max(1),
+                    units => self.slice_units.max(1).min(units),
+                };
+                let min_slice_s = unit_s * slice_cap as f64;
+                if deadline - now < min_slice_s {
+                    bail!(
+                        "deadline is {} away but one slice of this workload needs about {} \
+                         of compute: the job could only miss it (resubmit without -deadline, \
+                         or with a later one)",
+                        humanfmt::secs(deadline - now),
+                        humanfmt::secs(min_slice_s),
+                    );
+                }
+            }
+        }
+        let id = self.submit_sized(s, spec, sized);
+        let job = self.queue.get_mut(id).expect("just submitted");
+        job.resident = resident;
+        job.analyst = analyst.to_string();
+        Ok(id)
+    }
+
+    /// Size a job from its analyst-side script before any slice has
+    /// run: `(total work units, static per-unit seconds)`. Best
+    /// effort — `(0, None)` when the script is missing or malformed
+    /// (the dispatch path will fail the job with a precise error).
+    fn size_job(&self, s: &Session, spec: &JobSpec) -> (usize, Option<f64>) {
+        let Ok(script) = checkpoint::load_script(&s.analyst, &spec.projectdir, &spec.rscript)
+        else {
+            return (0, None);
+        };
+        let units = checkpoint::script_units(&script).unwrap_or(0);
+        (units, self.static_unit_estimate(s, spec, &script))
+    }
+
+    /// Per-unit virtual seconds the workload cost model predicts on a
+    /// fleet-shaped cluster — the estimator's evidence before any real
+    /// slice has committed. Uses the same cost functions the executor
+    /// bills with, so the hint and the history converge.
+    fn static_unit_estimate(&self, s: &Session, spec: &JobSpec, script: &Json) -> Option<f64> {
+        let cfg = &self.autoscaler.cfg;
+        let ispec = instance_type(&cfg.itype)?;
+        let nodes: Vec<NodeSpec> = (0..cfg.nodes_per_cluster.max(2))
+            .map(|i| NodeSpec {
+                name: format!("est{i}"),
+                cores: ispec.cores,
+                mem_gb: ispec.mem_gb,
+                core_speed: ispec.core_speed,
+            })
+            .collect();
+        let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
+        let nproc = script
+            .get("slaves")
+            .and_then(Json::as_usize)
+            .unwrap_or(total_cores);
+        let assignment = scheduler::schedule(nproc, &nodes, spec.placement);
+        let view = ResourceView {
+            nodes,
+            assignment,
+            net: s.cloud.net.clone(),
+            resource_name: "estimator".into(),
+            real_threads: Some(1),
+        };
+        match script.opt_str("type")?.as_str() {
+            "catopt" => {
+                let gcfg = ga_config_from(script);
+                let mut c = CatoptCost::default();
+                if let Some(v) = script.get("candidate_cost_s").and_then(Json::as_f64) {
+                    c.candidate_cost_s = v;
+                }
+                // One generation evaluates roughly the population.
+                Some(cost::catopt_generation_s(gcfg.pop_size.max(1), &c, &view))
+            }
+            "mc_sweep" => {
+                let scfg = sweep_config_from(script);
+                let mut c = SweepCost::default();
+                if let Some(v) = script.get("job_cost_s").and_then(Json::as_f64) {
+                    c.job_cost_s = v;
+                }
+                // One unit is one batch of up to a tile of MC jobs.
+                let per_batch = scfg.n_jobs.min(RUST_SWEEP_TILE).max(1);
+                Some(cost::sweep_total_s(per_batch, &c, &view))
+            }
+            _ => None,
+        }
+    }
+
     /// Drop fleet entries whose cluster no longer exists in the
-    /// session (e.g. terminated out-of-band between CLI invocations).
+    /// session (e.g. terminated out-of-band between CLI invocations)
+    /// and re-derive each survivor's purchase model from its master
+    /// instance (the session, not the persisted flag, is
+    /// authoritative).
     pub fn prune_fleet(&mut self, s: &Session) {
         self.fleet.retain(|c| s.clusters_cfg.contains(&c.name));
+        for c in &mut self.fleet {
+            if let Some(entry) = s.clusters_cfg.get(&c.name) {
+                if let Ok(inst) = s.cloud.instance(&entry.master_id) {
+                    c.spot = inst.is_spot();
+                }
+            }
+        }
     }
 
     /// Drain the queue: autoscale, dispatch, and process slice events
@@ -218,12 +420,25 @@ impl JobScheduler {
             if pending == 0 && self.slices.is_empty() {
                 break;
             }
+            let demand = self.demand(s);
             self.autoscaler
-                .reconcile(s, &mut self.fleet, pending, self.queue.running())?;
+                .reconcile_demand(s, &mut self.fleet, &demand)?;
             self.dispatch_ready(s)?;
 
             if self.slices.is_empty() {
                 if self.queue.pending() > 0 {
+                    // Safety valve: a deadline job may have declined
+                    // spot-only capacity while waiting for on-demand,
+                    // but with nothing in flight there is no event to
+                    // wait on — place the head job on any idle slot
+                    // rather than stall.
+                    if let (Some(slot), Some(jid)) = (
+                        self.fleet.iter().position(|c| c.running.is_none()),
+                        self.queue.next_ready(),
+                    ) {
+                        self.try_start(s, jid, slot)?;
+                        continue;
+                    }
                     bail!(
                         "{} job(s) pending but the autoscaler provides no capacity \
                          (max_clusters = {})",
@@ -312,37 +527,296 @@ impl JobScheduler {
         out
     }
 
+    /// One-line deadline report for `ec2jobstatus`, derived from the
+    /// **same** remaining-work estimator the scheduler's spot/on-demand
+    /// decisions use: estimated completion time, margin, and a
+    /// green / at-risk / missed verdict. At-risk is exactly the
+    /// dispatcher's condition — a job the cost/risk curve would keep
+    /// off spot right now (or whose margin the safety factor consumes)
+    /// reports at-risk, so the status line and the premium the
+    /// scheduler is paying can never disagree. `None` when the job has
+    /// no deadline.
+    pub fn deadline_status(&self, s: &Session, job: &Job) -> Option<String> {
+        let deadline = job.spec.deadline_s?;
+        let now = s.cloud.clock.now_s();
+        Some(match job.state {
+            JobState::Completed => {
+                let done = job.completed_at_s.unwrap_or(now);
+                if done <= deadline {
+                    format!(
+                        "deadline t={deadline:.0}s: met with {} to spare (green)",
+                        humanfmt::secs(deadline - done)
+                    )
+                } else {
+                    format!(
+                        "deadline t={deadline:.0}s: missed by {}",
+                        humanfmt::secs(done - deadline)
+                    )
+                }
+            }
+            JobState::Failed => format!("deadline t={deadline:.0}s: job failed"),
+            _ => match job.estimate_remaining_s(self.unit_s_prior) {
+                Some(remaining) => {
+                    let eta = now + remaining;
+                    let verdict = if now >= deadline || eta > deadline {
+                        "missed"
+                    } else if self.needs_ondemand(s, job)
+                        || eta + remaining * DEADLINE_SAFETY_MARGIN > deadline
+                    {
+                        "at-risk"
+                    } else {
+                        "green"
+                    };
+                    let margin = deadline - eta;
+                    format!(
+                        "deadline t={deadline:.0}s: eta t={eta:.0}s, margin {}{} ({verdict})",
+                        if margin >= 0.0 { "+" } else { "-" },
+                        humanfmt::secs(margin.abs()),
+                    )
+                }
+                None => format!("deadline t={deadline:.0}s: no runtime estimate yet (at-risk)"),
+            },
+        })
+    }
+
     // ------------------------------------------------------- internals
 
-    fn dispatch_ready(&mut self, s: &mut Session) -> Result<()> {
-        loop {
-            let Some(slot) = self.fleet.iter().position(|c| c.running.is_none()) else {
-                break;
-            };
-            let Some(jid) = self.queue.next_ready() else {
-                break;
-            };
-            if let Err(e) = self.start_slice(s, jid, slot) {
-                // The job cannot start (bad script, sync error): fail
-                // it and let the loop try the next one. start_slice
-                // bailed mid-flight, so restore the platform ledger
-                // context it would have reset on success.
-                s.cloud.ledger.set_analyst("");
-                let job = self.queue.get_mut(jid).expect("job exists");
-                job.state = JobState::Failed;
-                job.assigned = None;
-                job.summary = Json::str(format!("failed: {e:#}"));
-                // A permanently failed resident job retires its
-                // cluster-side artifacts (billing their storage) —
-                // nothing will ever restore from them.
-                if let Some(old) = job.resume_snapshot.take() {
-                    s.cloud.delete_snapshot(&old).ok();
-                }
-                if job.resident {
-                    s.cloud.s3_delete(checkpoint::CHECKPOINT_BUCKET, &jid.to_string()).ok();
-                }
-                self.log.push(format!("{jid} failed to start: {e:#}"));
+    /// Estimated remaining work and deadline pressure across the
+    /// queue, for the autoscaler's next reconcile. Jobs the estimator
+    /// cannot size yet claim a full `work_target_s` window each, so a
+    /// fresh queue scales like queue depth until evidence exists.
+    ///
+    /// The on-demand quota counts every at-risk job that needs a
+    /// premium cluster *of its own*: the waiting ones, plus the ones
+    /// currently running a slice on on-demand capacity — their
+    /// clusters are occupied, so without counting them a busy
+    /// on-demand cluster would satisfy the quota slot of a second,
+    /// still-waiting at-risk job and leave it stalled behind a
+    /// multi-hour slice.
+    fn demand(&self, s: &Session) -> FleetDemand {
+        let target = self.autoscaler.cfg.work_target_s.max(1.0);
+        let mut est_total = 0.0;
+        let mut ondemand_clusters = 0;
+        for j in self.queue.jobs() {
+            let waiting = matches!(j.state, JobState::Queued | JobState::Interrupted);
+            if !waiting && j.state != JobState::Running {
+                continue;
             }
+            est_total += j.estimate_remaining_s(self.unit_s_prior).unwrap_or(target);
+            if self.needs_ondemand(s, j) {
+                let occupies_ondemand = j.state == JobState::Running
+                    && j.assigned.as_deref().is_some_and(|cname| {
+                        self.fleet.iter().any(|c| c.name == cname && !c.spot)
+                    });
+                if waiting || occupies_ondemand {
+                    ondemand_clusters += 1;
+                }
+            }
+        }
+        FleetDemand {
+            pending: self.queue.pending(),
+            running: self.queue.running(),
+            ondemand_clusters,
+            est_remaining_s: Some(est_total),
+        }
+    }
+
+    /// The deadline cost/risk decision, re-taken before every slice:
+    /// is spot capacity too risky for this job right now?
+    ///
+    /// The remaining-work estimate is risk-adjusted by the expected
+    /// interruption rework — the forecast's hourly reclaim likelihood
+    /// at the fleet's current bid, times the cost of an interruption
+    /// (a discarded slice plus its restore) — padded by
+    /// [`DEADLINE_SAFETY_MARGIN`], and compared against the slack. A
+    /// job the estimator cannot size is conservatively kept off spot.
+    /// A deadline that is already lost stops claiming premium
+    /// capacity: the cheapest capacity finishes the job late either
+    /// way.
+    fn needs_ondemand(&self, s: &Session, job: &Job) -> bool {
+        if !self.autoscaler.cfg.spot {
+            return false; // the whole fleet is on-demand anyway
+        }
+        let Some(deadline) = job.spec.deadline_s else {
+            return false;
+        };
+        let now = s.cloud.clock.now_s();
+        if now >= deadline {
+            return false;
+        }
+        let Some(remaining) = job.estimate_remaining_s(self.unit_s_prior) else {
+            return true;
+        };
+        let unit_s = job
+            .unit_s()
+            .or(job.est_unit_s_hint)
+            .or(self.unit_s_prior)
+            .unwrap_or(0.0);
+        let slice_s = unit_s * self.slice_units.max(1) as f64;
+        // Assess the risk at the *worst* bid the job could land on:
+        // existing fleet clusters keep the bid they were created with,
+        // which under forecast-driven strategies can sit below what a
+        // fresh cluster would bid right now — pricing the risk only at
+        // today's bid would understate the exposure of yesterday's
+        // capacity.
+        let bid = match self.live_spot_bid_floor(s) {
+            Some(floor) => floor.min(self.autoscaler.bid_for(s)),
+            None => self.autoscaler.bid_for(s),
+        };
+        let hour = SpotMarket::hour_index(now);
+        let p_interrupt = self.autoscaler.forecast.interruption_likelihood(
+            &s.cloud.spot,
+            &self.autoscaler.cfg.itype,
+            bid,
+            hour,
+        );
+        // Expected interruptions over the remaining runtime, times the
+        // rework each one costs.
+        let one_loss_s = INTERRUPTION_COST_SLICES * slice_s;
+        let rework_s = p_interrupt * (remaining / 3600.0) * one_loss_s;
+        let risk_adjusted = remaining + rework_s;
+        // Spot is safe only when, on top of the risk-adjusted estimate
+        // and its margin, one full interruption landing immediately
+        // still could not break the SLO — without this absolute guard
+        // a nearly-finished job could wander onto spot with seconds of
+        // slack and lose its last slice to a reclaim.
+        now + risk_adjusted * (1.0 + DEADLINE_SAFETY_MARGIN) + one_loss_s > deadline
+    }
+
+    /// Dispatch ready jobs onto idle fleet clusters, matching each
+    /// job's capacity preference: deadline-at-risk jobs take on-demand
+    /// clusters (waiting for one when the autoscaler can still provide
+    /// it), relaxed jobs prefer spot so the on-demand quota stays free
+    /// for at-risk work.
+    fn dispatch_ready(&mut self, s: &mut Session) -> Result<()> {
+        // Ready jobs in the queue's dispatch order, each with its
+        // capacity preference — computed once per dispatch round:
+        // placing a slice only shrinks this list and the idle set
+        // (the one clock movement a placement can cause, a resident
+        // job's EBS rehydration, is far inside the decision's safety
+        // margin).
+        let mut ready: Vec<(JobId, bool)> = self
+            .queue
+            .ready_ids()
+            .into_iter()
+            .map(|id| {
+                let j = self.queue.get(id).expect("ready job exists");
+                (id, self.needs_ondemand(s, j))
+            })
+            .collect();
+        loop {
+            if ready.is_empty() {
+                break;
+            }
+            let idle: Vec<usize> = self
+                .fleet
+                .iter()
+                .enumerate()
+                .filter(|(_, c)| c.running.is_none())
+                .map(|(i, _)| i)
+                .collect();
+            if idle.is_empty() {
+                break;
+            }
+            let any_at_risk_waiting = ready.iter().any(|(_, od)| *od);
+            let mut pick: Option<(usize, usize)> = None;
+            for (pos, (_, needs_od)) in ready.iter().enumerate() {
+                let slot = if *needs_od {
+                    self.idle_of_kind(&idle, false).or_else(|| {
+                        // No idle on-demand cluster and no way for the
+                        // autoscaler to produce one: take what exists
+                        // rather than stall the queue.
+                        if self.ondemand_may_appear() {
+                            None
+                        } else {
+                            idle.first().copied()
+                        }
+                    })
+                } else {
+                    // A relaxed job falls back to an idle on-demand
+                    // cluster only when no at-risk job is queued for
+                    // it — otherwise a higher-priority relaxed job
+                    // would consume exactly the capacity the deadline
+                    // quota reserved (the at-risk job takes the slot
+                    // later this same loop, so declining cannot
+                    // stall).
+                    self.idle_of_kind(&idle, true).or_else(|| {
+                        if any_at_risk_waiting {
+                            None
+                        } else {
+                            idle.first().copied()
+                        }
+                    })
+                };
+                if let Some(slot) = slot {
+                    pick = Some((pos, slot));
+                    break;
+                }
+            }
+            let Some((pos, slot)) = pick else {
+                break; // everyone ready is waiting for on-demand capacity
+            };
+            let (jid, _) = ready.remove(pos);
+            self.try_start(s, jid, slot)?;
+        }
+        Ok(())
+    }
+
+    /// First idle slot of the requested purchase model.
+    fn idle_of_kind(&self, idle: &[usize], spot: bool) -> Option<usize> {
+        idle.iter().copied().find(|&i| self.fleet[i].spot == spot)
+    }
+
+    /// Lowest bid among the fleet's live spot clusters (their masters'
+    /// `Lifecycle::Spot` is what the market reclaims against), or
+    /// `None` with no spot capacity up.
+    fn live_spot_bid_floor(&self, s: &Session) -> Option<u64> {
+        self.fleet
+            .iter()
+            .filter_map(|c| {
+                let entry = s.clusters_cfg.get(&c.name)?;
+                let inst = s.cloud.instance(&entry.master_id).ok()?;
+                match inst.lifecycle {
+                    crate::simcloud::Lifecycle::Spot {
+                        bid_centi_cents_hour,
+                    } => Some(bid_centi_cents_hour),
+                    crate::simcloud::Lifecycle::OnDemand => None,
+                }
+            })
+            .min()
+    }
+
+    /// Can the autoscaler still produce an on-demand cluster — is one
+    /// busy (it frees at a slice boundary), or is there room to grow
+    /// or idle spot capacity to convert at the next reconcile?
+    fn ondemand_may_appear(&self) -> bool {
+        self.fleet.iter().any(|c| !c.spot)
+            || self.fleet.len() < self.autoscaler.cfg.max_clusters
+            || self.fleet.iter().any(|c| c.running.is_none() && c.spot)
+    }
+
+    /// Start a slice of `jid` on fleet slot `slot`; a start failure
+    /// (bad script, sync error) fails the job in place instead of
+    /// propagating, so the dispatch loop can move on to the next job.
+    fn try_start(&mut self, s: &mut Session, jid: JobId, slot: usize) -> Result<()> {
+        if let Err(e) = self.start_slice(s, jid, slot) {
+            // start_slice bailed mid-flight, so restore the platform
+            // ledger context it would have reset on success.
+            s.cloud.ledger.set_analyst("");
+            let job = self.queue.get_mut(jid).expect("job exists");
+            job.state = JobState::Failed;
+            job.assigned = None;
+            job.summary = Json::str(format!("failed: {e:#}"));
+            // A permanently failed resident job retires its
+            // cluster-side artifacts (billing their storage) —
+            // nothing will ever restore from them.
+            if let Some(old) = job.resume_snapshot.take() {
+                s.cloud.delete_snapshot(&old).ok();
+            }
+            if job.resident {
+                s.cloud.s3_delete(checkpoint::CHECKPOINT_BUCKET, &jid.to_string()).ok();
+            }
+            self.log.push(format!("{jid} failed to start: {e:#}"));
         }
         Ok(())
     }
@@ -454,7 +928,7 @@ impl JobScheduler {
         // Numerics, eagerly (they cannot depend on virtual time). The
         // master's filesystem is borrowed, not cloned — the work owns
         // everything it needs once constructed.
-        let (work, outcome) = {
+        let (work, outcome, units_before) = {
             let project = &s.cloud.instance(&entry.master_id)?.fs;
             let script = checkpoint::load_script(project, &dest, &spec.rscript)?;
             let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
@@ -479,8 +953,9 @@ impl JobScheduler {
                 job_checkpoint.as_ref(),
                 &pool,
             )?;
+            let units_before = work.units_done();
             let outcome = work.step(self.slice_units, &view, &pool)?;
-            (work, outcome)
+            (work, outcome, units_before)
         };
         duration += outcome.virtual_s;
 
@@ -531,6 +1006,9 @@ impl JobScheduler {
             snapshot,
             progress: work.progress(),
             virtual_s: outcome.virtual_s,
+            units_run: work.units_done().saturating_sub(units_before),
+            units_done: work.units_done(),
+            units_total: work.total_units(),
             finished: outcome.finished,
             failed,
             files,
@@ -594,6 +1072,18 @@ impl JobScheduler {
             } else {
                 job.compute_s += ev.virtual_s;
                 job.progress = ev.progress;
+                job.units_done = ev.units_done;
+                job.units_total = ev.units_total;
+                job.record_slice(ev.units_run, ev.virtual_s);
+                // Feed the cross-job prior (the estimator's last
+                // resort for jobs with no evidence of their own).
+                if ev.units_run > 0 {
+                    let per_unit = ev.virtual_s / ev.units_run as f64;
+                    self.unit_s_prior = Some(match self.unit_s_prior {
+                        Some(p) => (1.0 - PRIOR_EWMA_ALPHA) * p + PRIOR_EWMA_ALPHA * per_unit,
+                        None => per_unit,
+                    });
+                }
                 if ev.finished {
                     job.state = JobState::Completed;
                     job.completed_at_s = Some(now);
@@ -703,10 +1193,20 @@ impl JobScheduler {
         c.set("itype", Json::str(&cfg.itype));
         c.set("spot", Json::Bool(cfg.spot));
         c.set("policy", Json::str(cfg.policy.label()));
+        c.set("bid", Json::str(cfg.bid.label()));
+        c.set("work_target_s", Json::num(cfg.work_target_s));
         let mut root = Json::obj();
         root.set("queue", self.queue.to_json());
         root.set("autoscaler", c);
         root.set("counter", Json::num(self.autoscaler.counter() as f64));
+        root.set(
+            "forecast_window_hours",
+            Json::num(self.autoscaler.forecast.window_hours as f64),
+        );
+        root.set(
+            "unit_s_prior",
+            self.unit_s_prior.map(Json::num).unwrap_or(Json::Null),
+        );
         root.set("slice_units", Json::num(self.slice_units as f64));
         root.set(
             "fleet",
@@ -720,6 +1220,9 @@ impl JobScheduler {
         root
     }
 
+    /// Restore a scheduler persisted by [`JobScheduler::to_json`];
+    /// fields added after PR 2 default when absent, so older
+    /// `jobs.json` files keep loading.
     pub fn from_json(j: &Json) -> Result<Self> {
         let c = j
             .get("autoscaler")
@@ -732,12 +1235,25 @@ impl JobScheduler {
             itype: c.req_str("itype")?,
             spot: c.opt_bool("spot", false),
             policy: ScalePolicy::parse(&c.req_str("policy")?)?,
+            bid: match c.opt_str("bid") {
+                Some(b) => BidStrategy::parse(&b)?,
+                None => BidStrategy::OnDemand,
+            },
+            work_target_s: c
+                .get("work_target_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(3600.0),
         };
+        let fleet_spot = cfg.spot;
         let mut sched = JobScheduler::new(cfg);
         sched.queue = JobQueue::from_json(
             j.get("queue").ok_or_else(|| anyhow!("jobs state missing queue"))?,
         )?;
         sched.autoscaler.set_counter(j.req_u64("counter")?);
+        if let Some(w) = j.get("forecast_window_hours").and_then(Json::as_u64) {
+            sched.autoscaler.forecast = crate::simcloud::PriceForecast::new(w);
+        }
+        sched.unit_s_prior = j.get("unit_s_prior").and_then(Json::as_f64);
         sched.slice_units = (j.req_u64("slice_units")? as usize).max(1);
         sched.scanned_to = j.req_f64("scanned_to").unwrap_or(0.0);
         sched.interruptions_delivered =
@@ -748,12 +1264,132 @@ impl JobScheduler {
                     sched.fleet.push(FleetCluster {
                         name: name.to_string(),
                         running: None,
+                        // Placeholder: `prune_fleet` re-derives the
+                        // purchase model from the live session.
+                        spot: fleet_spot,
                     });
                 }
             }
         }
         Ok(sched)
     }
+}
+
+// --------------------------------------------------- deadline parsing
+
+/// The virtual clock's calendar anchor: virtual t=0 is
+/// 2012-01-01T00:00:00Z (the paper's EC2 era), so RFC 3339 deadlines
+/// have a fixed, reproducible meaning in every simulated world.
+pub const VIRTUAL_EPOCH_RFC3339: &str = "2012-01-01T00:00:00Z";
+
+/// Parse an `ec2submitjob -deadline` argument into absolute virtual
+/// seconds: either a number of seconds from now (`7200`, `1800.5`) or
+/// an RFC 3339 timestamp (`2012-01-01T06:00:00Z`, offsets allowed)
+/// against [`VIRTUAL_EPOCH_RFC3339`].
+pub fn parse_deadline(arg: &str, now_s: f64) -> Result<f64> {
+    if let Ok(rel) = arg.parse::<f64>() {
+        if !rel.is_finite() {
+            bail!("-deadline seconds must be finite, got '{arg}'");
+        }
+        return Ok(now_s + rel);
+    }
+    rfc3339_to_virtual_s(arg)
+}
+
+/// Days from civil date to 1970-01-01 (Howard Hinnant's algorithm;
+/// proleptic Gregorian).
+fn days_from_civil(y: i64, m: i64, d: i64) -> i64 {
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = y - era * 400; // [0, 399]
+    let mp = (m + 9) % 12; // [0, 11]
+    let doy = (153 * mp + 2) / 5 + d - 1;
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy;
+    era * 146_097 + doe - 719_468
+}
+
+/// Virtual seconds (since [`VIRTUAL_EPOCH_RFC3339`]) of an RFC 3339
+/// timestamp. Fractional seconds are accepted and ignored; the offset
+/// must be `Z`/`z` or `±hh:mm`.
+fn rfc3339_to_virtual_s(ts: &str) -> Result<f64> {
+    let fail = || {
+        anyhow!(
+            "'{ts}' is neither a number of seconds nor an RFC 3339 timestamp \
+             (e.g. 7200, or 2012-01-01T06:00:00Z — virtual t=0 is {VIRTUAL_EPOCH_RFC3339})"
+        )
+    };
+    let field = |lo: usize, hi: usize| -> Result<i64> {
+        ts.get(lo..hi)
+            .filter(|t| t.bytes().all(|b| b.is_ascii_digit()))
+            .and_then(|t| t.parse::<i64>().ok())
+            .ok_or_else(fail)
+    };
+    let b = ts.as_bytes();
+    if b.len() < 20 {
+        return Err(fail());
+    }
+    for (i, c) in [(4usize, b'-'), (7, b'-'), (13, b':'), (16, b':')] {
+        if b[i] != c {
+            return Err(fail());
+        }
+    }
+    if b[10] != b'T' && b[10] != b't' && b[10] != b' ' {
+        return Err(fail());
+    }
+    let (y, mo, d) = (field(0, 4)?, field(5, 7)?, field(8, 10)?);
+    let (h, mi, sec) = (field(11, 13)?, field(14, 16)?, field(17, 19)?);
+    if !(1..=12).contains(&mo) || h > 23 || mi > 59 || sec > 60 {
+        return Err(fail());
+    }
+    // Real calendar days only: 2012-02-30 must be rejected, not
+    // silently normalised onto March by the day arithmetic.
+    let leap = (y % 4 == 0 && y % 100 != 0) || y % 400 == 0;
+    let days_in_month = match mo {
+        2 => {
+            if leap {
+                29
+            } else {
+                28
+            }
+        }
+        4 | 6 | 9 | 11 => 30,
+        _ => 31,
+    };
+    if !(1..=days_in_month).contains(&d) {
+        return Err(fail());
+    }
+    // Skip (ignore) fractional seconds.
+    let mut idx = 19;
+    if b[idx] == b'.' {
+        idx += 1;
+        let digits = b[idx..].iter().take_while(|c| c.is_ascii_digit()).count();
+        if digits == 0 {
+            return Err(fail());
+        }
+        idx += digits;
+    }
+    let offset_s: i64 = match b.get(idx).copied() {
+        Some(b'Z') | Some(b'z') if idx + 1 == b.len() => 0,
+        Some(sign) if (sign == b'+' || sign == b'-') && idx + 6 == b.len() => {
+            if b[idx + 3] != b':' {
+                return Err(fail());
+            }
+            let oh = field(idx + 1, idx + 3)?;
+            let om = field(idx + 4, idx + 6)?;
+            if oh > 23 || om > 59 {
+                return Err(fail());
+            }
+            let o = oh * 3600 + om * 60;
+            if sign == b'-' {
+                -o
+            } else {
+                o
+            }
+        }
+        _ => return Err(fail()),
+    };
+    let days = days_from_civil(y, mo, d) - days_from_civil(2012, 1, 1);
+    Ok((days * 86_400 + h * 3600 + mi * 60 + sec - offset_s) as f64)
 }
 
 #[cfg(test)]
@@ -795,6 +1431,7 @@ mod tests {
             rscript: script.into(),
             priority: prio,
             placement: Placement::ByNode,
+            deadline_s: None,
         }
     }
 
@@ -879,6 +1516,104 @@ mod tests {
             clean_digest,
             "a rescheduled slice must not change the numbers"
         );
+    }
+
+    #[test]
+    fn deadline_arguments_parse_as_seconds_or_rfc3339() {
+        // Relative seconds are offset from "now".
+        assert_eq!(parse_deadline("7200", 100.0).unwrap(), 7300.0);
+        assert_eq!(parse_deadline("1800.5", 0.0).unwrap(), 1800.5);
+        // RFC 3339 against the virtual epoch (2012-01-01T00:00:00Z).
+        assert_eq!(parse_deadline("2012-01-01T06:00:00Z", 0.0).unwrap(), 21_600.0);
+        assert_eq!(parse_deadline("2012-01-02T00:00:00Z", 9.9).unwrap(), 86_400.0);
+        // 2012 is a leap year: March 1st is day 60.
+        assert_eq!(
+            parse_deadline("2012-03-01T00:00:00Z", 0.0).unwrap(),
+            5_184_000.0
+        );
+        // Offsets normalise to the same instant.
+        assert_eq!(parse_deadline("2012-01-01T01:00:00+01:00", 0.0).unwrap(), 0.0);
+        assert_eq!(parse_deadline("2011-12-31T23:00:00-01:00", 0.0).unwrap(), 0.0);
+        // Fractional seconds are accepted (and ignored).
+        assert_eq!(parse_deadline("2012-01-01T00:00:30.25Z", 0.0).unwrap(), 30.0);
+        // Garbage is rejected with a useful message.
+        // 2012-02-30 must be a clean rejection, not a silent
+        // normalisation onto March 1 by the day arithmetic.
+        let bad_inputs = [
+            "tomorrow",
+            "2012-01-01",
+            "2012-13-01T00:00:00Z",
+            "2012-02-30T00:00:00Z",
+            "2013-02-29T00:00:00Z",
+            "2012-04-31T00:00:00Z",
+            "2012-01-01T00:00:00",
+            "inf",
+        ];
+        for bad in bad_inputs {
+            let err = parse_deadline(bad, 0.0).unwrap_err().to_string();
+            assert!(err.contains(bad) || err.contains("finite"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn admit_rejects_deadlines_that_can_only_miss() {
+        let mut s = session();
+        write_sweep_project(&mut s, "proj", 7);
+        s.cloud.clock.advance(500.0);
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        // A deadline in the past is refused outright.
+        let mut past = spec("r", "proj", "sweep.json", Priority::Normal);
+        past.deadline_s = Some(100.0);
+        let err = js.admit(&s, past, false, "").unwrap_err().to_string();
+        assert!(err.contains("already in the past"), "{err}");
+        // A deadline tighter than one slice of this workload (the
+        // static cost-model hint knows the rate before any slice has
+        // run) is refused too.
+        let mut tight = spec("r", "proj", "sweep.json", Priority::Normal);
+        tight.deadline_s = Some(s.cloud.clock.now_s() + 1e-6);
+        let err = js.admit(&s, tight, false, "").unwrap_err().to_string();
+        assert!(err.contains("one slice"), "{err}");
+        // A sane deadline is admitted and lands on the job.
+        let mut ok = spec("r", "proj", "sweep.json", Priority::Normal);
+        ok.deadline_s = Some(s.cloud.clock.now_s() + 86_400.0);
+        let id = js.admit(&s, ok, false, "alice").unwrap();
+        let job = js.queue.get(id).unwrap();
+        assert_eq!(job.spec.deadline_s, Some(s.cloud.clock.now_s() + 86_400.0));
+        assert_eq!(job.analyst, "alice");
+        // Submission sized the job: units + a static rate hint exist
+        // before any slice has run.
+        assert!(job.units_total > 0);
+        assert!(job.est_unit_s_hint.unwrap_or(0.0) > 0.0);
+    }
+
+    #[test]
+    fn deadline_status_tracks_the_estimator() {
+        let mut s = session();
+        write_sweep_project(&mut s, "proj", 7);
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        let mut sp = spec("r", "proj", "sweep.json", Priority::Normal);
+        sp.deadline_s = Some(86_400.0);
+        let id = js.submit(&s, sp);
+        // Before running: an estimate exists (static hint) and the
+        // roomy deadline is green.
+        let line = js
+            .deadline_status(&s, js.queue.get(id).unwrap())
+            .expect("deadline job must report");
+        assert!(line.contains("green"), "{line}");
+        js.run_until_idle(&mut s).unwrap();
+        let line = js.deadline_status(&s, js.queue.get(id).unwrap()).unwrap();
+        assert!(line.contains("met with"), "{line}");
+        // No deadline, no report.
+        let id2 = js.submit(&s, spec("r2", "proj", "sweep.json", Priority::Normal));
+        assert!(js.deadline_status(&s, js.queue.get(id2).unwrap()).is_none());
     }
 
     #[test]

@@ -15,12 +15,16 @@ use std::fmt;
 /// Job priority class. `Ord`: `Low < Normal < High`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Priority {
+    /// Background work: runs when nothing more important is pending.
     Low,
+    /// The default class.
     Normal,
+    /// Preempts lower classes at every checkpoint boundary.
     High,
 }
 
 impl Priority {
+    /// Parse a CLI priority value (`low | normal | high`).
     pub fn parse(s: &str) -> Result<Priority> {
         match s {
             "low" => Ok(Priority::Low),
@@ -30,6 +34,7 @@ impl Priority {
         }
     }
 
+    /// The CLI spelling of this class.
     pub fn label(self) -> &'static str {
         match self {
             Priority::Low => "low",
@@ -41,7 +46,10 @@ impl Priority {
 
 /// Queue-wide unique job handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
-pub struct JobId(pub u64);
+pub struct JobId(
+    /// The queue's monotonically increasing job number.
+    pub u64,
+);
 
 impl fmt::Display for JobId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -59,11 +67,14 @@ pub enum JobState {
     /// Spot capacity was reclaimed mid-slice; will resume from the
     /// last checkpoint on replacement capacity.
     Interrupted,
+    /// All work units done, results landed at the Analyst site.
     Completed,
+    /// Could not start or run (bad script, sync error); terminal.
     Failed,
 }
 
 impl JobState {
+    /// The status spelling used by `ec2jobstatus` / persistence.
     pub fn label(self) -> &'static str {
         match self {
             JobState::Queued => "queued",
@@ -95,16 +106,34 @@ pub struct JobSpec {
     pub projectdir: String,
     /// Task descriptor inside the project directory.
     pub rscript: String,
+    /// Priority class (strict priority, FIFO within a class).
     pub priority: Priority,
     /// Slave placement for the job's slices (§3.2.2).
     pub placement: Placement,
+    /// Absolute virtual-time deadline (`ec2submitjob -deadline`).
+    /// `None` = no SLO: the job is scheduled purely by priority and
+    /// cost. With a deadline the scheduler picks spot vs on-demand
+    /// capacity per slice from the forecast's cost/risk curve (see
+    /// `jobs::JobScheduler`).
+    pub deadline_s: Option<f64>,
 }
+
+/// Committed slices the remaining-work estimator looks back over: old
+/// slices age out so a job whose per-unit cost drifts (e.g. after a
+/// resize) converges to the current rate.
+const ESTIMATE_WINDOW_SLICES: usize = 8;
+
+/// Upper bound kept in a job's persisted slice history.
+const SLICE_HISTORY_CAP: usize = 32;
 
 /// One tracked job.
 #[derive(Clone, Debug)]
 pub struct Job {
+    /// Queue-wide handle (also the persistence key).
     pub id: JobId,
+    /// What the Analyst submitted.
     pub spec: JobSpec,
+    /// Lifecycle state.
     pub state: JobState,
     /// Cluster-resident job state (§3.2.1 of the source paper): the
     /// checkpoint lives on the fleet cluster's EBS volume + the
@@ -118,6 +147,21 @@ pub struct Job {
     /// Fraction of work units (GA generations / MC batches) committed
     /// to a checkpoint so far.
     pub progress: f64,
+    /// Total work units the job will run, when known (0 until the
+    /// script has been sized at submission or first dispatch). GA jobs
+    /// may finish early (`wait_generations`), so this is an upper
+    /// bound — which is the conservative direction for deadlines.
+    pub units_total: usize,
+    /// Work units committed to a checkpoint so far.
+    pub units_done: usize,
+    /// Static per-unit virtual-seconds estimate from the workload cost
+    /// model at submission (fleet-shaped, before any slice has run).
+    /// Real slice history supersedes it.
+    pub est_unit_s_hint: Option<f64>,
+    /// Trailing `(units, virtual_seconds)` of committed slices — the
+    /// evidence base of the remaining-work estimator (bounded to
+    /// `SLICE_HISTORY_CAP` entries).
+    pub slice_history: Vec<(usize, f64)>,
     /// Last committed checkpoint (see `jobs::checkpoint` for the
     /// format). Conceptually shipped to the Analyst site / S3 after
     /// every slice; survives any loss of cloud capacity.
@@ -130,8 +174,11 @@ pub struct Job {
     /// (remote project dirs are shared per project *name*, so a bare
     /// dir-exists check could pick up another job's files).
     pub project_on: Option<String>,
+    /// Virtual time of submission.
     pub submitted_at_s: f64,
+    /// Virtual time the first slice was dispatched, if any.
     pub started_at_s: Option<f64>,
+    /// Virtual time the finishing slice's results landed, if any.
     pub completed_at_s: Option<f64>,
     /// Spot interruptions survived.
     pub interruptions: usize,
@@ -145,6 +192,51 @@ pub struct Job {
     pub summary: Json,
 }
 
+impl Job {
+    /// Observed virtual seconds per work unit over the trailing slice
+    /// window, or `None` before any slice has committed.
+    pub fn unit_s(&self) -> Option<f64> {
+        let from = self.slice_history.len().saturating_sub(ESTIMATE_WINDOW_SLICES);
+        let window = &self.slice_history[from..];
+        let units: usize = window.iter().map(|(u, _)| u).sum();
+        if units == 0 {
+            return None;
+        }
+        let secs: f64 = window.iter().map(|(_, s)| s).sum();
+        Some(secs / units as f64)
+    }
+
+    /// Estimated remaining virtual compute seconds, from the committed
+    /// checkpoint progress and the per-slice virtual-time history.
+    /// Evidence order: this job's own slice history, then its static
+    /// cost-model hint, then `fallback_unit_s` (the scheduler's
+    /// cross-job EWMA). `None` when the job has never been sized and
+    /// no fallback exists — the caller must treat that as "unknown",
+    /// not "zero". Compute time only: project sync / checkpoint
+    /// shipment ride in the scheduler's safety margin.
+    pub fn estimate_remaining_s(&self, fallback_unit_s: Option<f64>) -> Option<f64> {
+        match self.state {
+            JobState::Completed => return Some(0.0),
+            JobState::Failed => return Some(0.0),
+            _ => {}
+        }
+        let unit_s = self.unit_s().or(self.est_unit_s_hint).or(fallback_unit_s)?;
+        if self.units_total == 0 {
+            return None;
+        }
+        Some(unit_s * self.units_total.saturating_sub(self.units_done) as f64)
+    }
+
+    /// Record a committed slice in the estimator history (bounded).
+    pub fn record_slice(&mut self, units: usize, virtual_s: f64) {
+        self.slice_history.push((units, virtual_s));
+        if self.slice_history.len() > SLICE_HISTORY_CAP {
+            let drop = self.slice_history.len() - SLICE_HISTORY_CAP;
+            self.slice_history.drain(..drop);
+        }
+    }
+}
+
 /// The queue itself.
 #[derive(Default)]
 pub struct JobQueue {
@@ -153,6 +245,7 @@ pub struct JobQueue {
 }
 
 impl JobQueue {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
@@ -170,6 +263,10 @@ impl JobQueue {
                 resident: false,
                 analyst: String::new(),
                 progress: 0.0,
+                units_total: 0,
+                units_done: 0,
+                est_unit_s_hint: None,
+                slice_history: Vec::new(),
                 checkpoint: None,
                 resume_snapshot: None,
                 project_on: None,
@@ -186,26 +283,40 @@ impl JobQueue {
         id
     }
 
-    /// The next job to dispatch: highest priority first, FIFO (by id)
-    /// within a class. Queued and Interrupted jobs are both ready —
-    /// every dispatch boundary is a checkpoint boundary, so capacity
-    /// always goes to the most important pending work.
-    pub fn next_ready(&self) -> Option<JobId> {
-        self.jobs
+    /// Every ready job in dispatch order: highest priority first, FIFO
+    /// (by id) within a class. Queued and Interrupted jobs are both
+    /// ready — every dispatch boundary is a checkpoint boundary, so
+    /// capacity always goes to the most important pending work. The
+    /// single source of dispatch ordering: the scheduler's capacity
+    /// matching and its safety valve both consume it, so a future
+    /// ordering change (e.g. EDF within a class) lands everywhere at
+    /// once.
+    pub fn ready_ids(&self) -> Vec<JobId> {
+        let mut ready: Vec<&Job> = self
+            .jobs
             .values()
             .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
-            .min_by_key(|j| (std::cmp::Reverse(j.spec.priority), j.id))
-            .map(|j| j.id)
+            .collect();
+        ready.sort_by_key(|j| (std::cmp::Reverse(j.spec.priority), j.id));
+        ready.into_iter().map(|j| j.id).collect()
     }
 
+    /// The next job to dispatch (head of [`JobQueue::ready_ids`]).
+    pub fn next_ready(&self) -> Option<JobId> {
+        self.ready_ids().into_iter().next()
+    }
+
+    /// Look a job up by handle.
     pub fn get(&self, id: JobId) -> Option<&Job> {
         self.jobs.get(&id)
     }
 
+    /// Mutable lookup by handle.
     pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
         self.jobs.get_mut(&id)
     }
 
+    /// All tracked jobs in id order.
     pub fn jobs(&self) -> impl Iterator<Item = &Job> {
         self.jobs.values()
     }
@@ -226,6 +337,7 @@ impl JobQueue {
             .count()
     }
 
+    /// Is every job in a terminal state (Completed or Failed)?
     pub fn all_done(&self) -> bool {
         self.jobs
             .values()
@@ -254,6 +366,7 @@ impl JobQueue {
 
     // ------------------------------------------------------ persistence
 
+    /// Serialise the queue (jobs + id counter) for `jobs.json`.
     pub fn to_json(&self) -> Json {
         let mut arr = Vec::new();
         for j in self.jobs.values() {
@@ -271,9 +384,33 @@ impl JobQueue {
                 }),
             );
             o.set("state", Json::str(j.state.label()));
+            o.set(
+                "deadline_s",
+                j.spec.deadline_s.map(Json::num).unwrap_or(Json::Null),
+            );
             o.set("resident", Json::Bool(j.resident));
             o.set("analyst", Json::str(&j.analyst));
             o.set("progress", Json::num(j.progress));
+            o.set("units_total", Json::num(j.units_total as f64));
+            o.set("units_done", Json::num(j.units_done as f64));
+            o.set(
+                "est_unit_s_hint",
+                j.est_unit_s_hint.map(Json::num).unwrap_or(Json::Null),
+            );
+            o.set(
+                "slice_history",
+                Json::Arr(
+                    j.slice_history
+                        .iter()
+                        .map(|(u, s)| {
+                            Json::from_pairs(vec![
+                                ("units", Json::num(*u as f64)),
+                                ("secs", Json::num(*s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
             o.set(
                 "checkpoint",
                 j.checkpoint.clone().unwrap_or(Json::Null),
@@ -307,6 +444,9 @@ impl JobQueue {
         root
     }
 
+    /// Restore a queue persisted by [`JobQueue::to_json`]; estimator
+    /// and deadline fields added later default when absent, so older
+    /// `jobs.json` files keep loading.
     pub fn from_json(j: &Json) -> Result<Self> {
         let mut q = JobQueue {
             next_id: j.req_u64("next_id")?,
@@ -337,11 +477,29 @@ impl JobQueue {
                             "byslot" => Placement::BySlot,
                             _ => Placement::ByNode,
                         },
+                        deadline_s: o.get("deadline_s").and_then(Json::as_f64),
                     },
                     state,
                     resident: o.opt_bool("resident", false),
                     analyst: o.opt_str("analyst").unwrap_or_default(),
                     progress: o.req_f64("progress")?,
+                    units_total: o.get("units_total").and_then(Json::as_usize).unwrap_or(0),
+                    units_done: o.get("units_done").and_then(Json::as_usize).unwrap_or(0),
+                    est_unit_s_hint: o.get("est_unit_s_hint").and_then(Json::as_f64),
+                    slice_history: o
+                        .get("slice_history")
+                        .and_then(Json::as_arr)
+                        .map(|arr| {
+                            arr.iter()
+                                .filter_map(|e| {
+                                    Some((
+                                        e.get("units").and_then(Json::as_usize)?,
+                                        e.get("secs").and_then(Json::as_f64)?,
+                                    ))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default(),
                     checkpoint: match o.get("checkpoint") {
                         Some(Json::Null) | None => None,
                         Some(c) => Some(c.clone()),
@@ -374,6 +532,7 @@ mod tests {
             rscript: "sweep.json".into(),
             priority: prio,
             placement: Placement::ByNode,
+            deadline_s: None,
         }
     }
 
@@ -408,6 +567,49 @@ mod tests {
     }
 
     #[test]
+    fn estimator_prefers_history_then_hint_then_fallback() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let j = q.get_mut(a).unwrap();
+        j.units_total = 10;
+        // Nothing known yet: only the fallback can answer.
+        assert_eq!(j.estimate_remaining_s(None), None);
+        assert_eq!(j.estimate_remaining_s(Some(2.0)), Some(20.0));
+        // A static hint beats the cross-job fallback.
+        j.est_unit_s_hint = Some(5.0);
+        assert_eq!(j.estimate_remaining_s(Some(2.0)), Some(50.0));
+        // Real slice history beats both.
+        j.units_done = 4;
+        j.record_slice(2, 20.0);
+        j.record_slice(2, 20.0); // 10 s/unit observed
+        assert_eq!(j.estimate_remaining_s(Some(2.0)), Some(60.0));
+        // A completed job has nothing left, whatever the evidence.
+        j.state = JobState::Completed;
+        assert_eq!(j.estimate_remaining_s(None), Some(0.0));
+    }
+
+    #[test]
+    fn slice_history_window_ages_out_old_rates() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let j = q.get_mut(a).unwrap();
+        // Eight old slow slices, then eight fast ones: the window must
+        // see only the recent rate.
+        for _ in 0..8 {
+            j.record_slice(1, 100.0);
+        }
+        for _ in 0..8 {
+            j.record_slice(1, 10.0);
+        }
+        assert_eq!(j.unit_s(), Some(10.0));
+        // History is bounded.
+        for _ in 0..100 {
+            j.record_slice(1, 1.0);
+        }
+        assert!(j.slice_history.len() <= 32);
+    }
+
+    #[test]
     fn queue_roundtrips_through_json() {
         let mut q = JobQueue::new();
         let a = q.submit(spec("a", Priority::High), 5.0);
@@ -416,6 +618,14 @@ mod tests {
             Json::str("mc_sweep"),
         )]));
         q.get_mut(a).unwrap().state = JobState::Running; // mid-slice
+        {
+            let j = q.get_mut(a).unwrap();
+            j.spec.deadline_s = Some(900.0);
+            j.units_total = 7;
+            j.units_done = 3;
+            j.est_unit_s_hint = Some(4.5);
+            j.record_slice(2, 25.0);
+        }
         let b = q.submit(spec("b", Priority::Low), 6.0);
         q.get_mut(b).unwrap().state = JobState::Completed;
         let wire = q.to_json().to_string_compact();
@@ -423,6 +633,12 @@ mod tests {
         // Running collapses to Queued (resume from checkpoint).
         assert_eq!(back.get(a).unwrap().state, JobState::Queued);
         assert!(back.get(a).unwrap().checkpoint.is_some());
+        // Deadline and estimator evidence survive the round trip.
+        let ja = back.get(a).unwrap();
+        assert_eq!(ja.spec.deadline_s, Some(900.0));
+        assert_eq!((ja.units_total, ja.units_done), (7, 3));
+        assert_eq!(ja.est_unit_s_hint, Some(4.5));
+        assert_eq!(ja.slice_history, vec![(2, 25.0)]);
         assert_eq!(back.get(b).unwrap().state, JobState::Completed);
         // Fresh submissions continue the id sequence.
         let mut back = back;

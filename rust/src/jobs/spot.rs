@@ -14,6 +14,13 @@
 //!   scan window that has spot capacity (preferring busy clusters,
 //!   which is what the tests arm them for), optionally held until
 //!   `FaultPlan::spot_interrupt_not_before_s`.
+//!
+//! The same price path this module scans *reactively* is what the
+//! [`crate::simcloud::PriceForecast`] summarises *predictively*: the
+//! deadline scheduler's spot-vs-on-demand choice and the autoscaler's
+//! bids are forecasts over exactly the spikes that land here, so a
+//! correctly-forecast risk and a delivered reclaim can never disagree
+//! about the world they describe.
 
 use crate::coordinator::Session;
 use crate::simcloud::Lifecycle;

@@ -18,8 +18,11 @@
 //!   that plays the role of the Analyst's R scripts. On top of the
 //!   coordinator, the `jobs` subsystem turns the one-shot session into
 //!   a multi-tenant platform: a priority job queue, an elastic
-//!   autoscaled fleet, and checkpointed execution that survives spot
-//!   interruptions bit-identically.
+//!   autoscaled fleet (bid against a deterministic spot-price
+//!   forecast), deadline/SLO-aware spot-vs-on-demand placement per
+//!   checkpointed slice, and execution that survives spot
+//!   interruptions bit-identically. `docs/MANUAL.md` is the operator
+//!   reference for the whole command set.
 //! * **L2** — JAX compute graphs (`python/compile/model.py`), AOT-lowered
 //!   to HLO text at build time.
 //! * **L1** — Pallas kernels (`python/compile/kernels/`), fused into the

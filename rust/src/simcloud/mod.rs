@@ -7,6 +7,20 @@
 //! *real bytes* (so the rsync data sync is genuine), usage billing, and
 //! a virtual clock that every operation advances by a calibrated
 //! duration (DESIGN.md §2, §7).
+//!
+//! The simulation is **discrete-event**: nothing happens "while time
+//! passes" — operations compute a duration from the models here
+//! (network shape, instance speeds, EBS hydration, cluster
+//! configuration) and advance [`Clock`] by it, and anything
+//! time-driven (spot reclaims at hour boundaries, hourly prices,
+//! billing periods) is a pure function of the resulting timestamps.
+//! That is what makes every run bit-reproducible: the world has no
+//! state outside the clock, the seeds, and the bytes. Two modules are
+//! explicitly stochastic-looking but seeded: [`spot`] (the hourly
+//! price path, a pure function of `(seed, type, hour)`) and its
+//! summary [`pricing::PriceForecast`] (rolling-window expected price
+//! and interruption likelihood — the basis of the jobs scheduler's
+//! deadline cost/risk decisions and the autoscaler's bids).
 
 pub mod clock;
 pub mod cloud;
@@ -28,6 +42,7 @@ pub use ec2::{
 };
 pub use faults::FaultPlan;
 pub use network::{Link, NetworkModel};
+pub use pricing::PriceForecast;
 pub use s3::{content_digest, S3Object, S3};
 pub use spot::SpotMarket;
 pub use timing::SimParams;

@@ -15,8 +15,116 @@
 //! ledger when the charge was booked (empty = platform/untagged), so
 //! the bill can be filtered per tenant; full per-tenant quotas and
 //! invoices are a later PR.
+//!
+//! This module also hosts [`PriceForecast`], the *predictive* side of
+//! pricing: deterministic rolling-window statistics over the spot
+//! market's price path that the deadline scheduler and the autoscaler
+//! price their decisions against.
 
 use super::network::Link;
+use super::spot::SpotMarket;
+
+/// Deterministic spot-price forecast: rolling-window statistics over
+/// the market's seeded price path.
+///
+/// The spot path is a pure function of `(seed, type, hour)` (see
+/// [`SpotMarket`]), so a trailing window ending at the query hour is
+/// both an honest "observed history" forecast *and* perfectly
+/// reproducible: every component that consults it — the deadline-aware
+/// `JobScheduler` choosing spot vs on-demand per slice, the
+/// `Autoscaler` pricing its bids — sees the same numbers in the same
+/// simulated world. The expected price is the window mean (never below
+/// the window's observed floor, never below one centi-cent); the
+/// interruption likelihood is the fraction of window hours whose price
+/// would have exceeded a given bid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PriceForecast {
+    /// Trailing hours aggregated per query (>= 1; default 24).
+    pub window_hours: u64,
+}
+
+impl Default for PriceForecast {
+    fn default() -> Self {
+        Self { window_hours: 24 }
+    }
+}
+
+impl PriceForecast {
+    /// A forecast over a trailing window of `window_hours` (clamped to
+    /// at least one hour).
+    pub fn new(window_hours: u64) -> Self {
+        Self {
+            window_hours: window_hours.max(1),
+        }
+    }
+
+    /// The window of hour indices the statistics aggregate for a query
+    /// at `hour`: the trailing `window_hours` ending at `hour` once
+    /// that much history exists. Before then the path's first
+    /// `window_hours` serve as the warm-up sample — the simulated
+    /// stand-in for the price history an operator brings to a fresh
+    /// session; without it a query at hour 0 would "forecast" from a
+    /// single observation and flap between certainties.
+    fn window(&self, hour: u64) -> std::ops::RangeInclusive<u64> {
+        let w = self.window_hours.max(1);
+        if hour < w {
+            0..=w - 1
+        } else {
+            hour - w + 1..=hour
+        }
+    }
+
+    /// Expected spot price of one `api_name` instance-hour in
+    /// centi-cents: the mean over the trailing window ending at
+    /// `hour`. Always >= the window's observed floor (a mean cannot
+    /// undercut its minimum) and >= 1.
+    pub fn expected_price_centi_cents(
+        &self,
+        market: &SpotMarket,
+        api_name: &str,
+        hour: u64,
+    ) -> u64 {
+        let mut sum: u64 = 0;
+        let mut n: u64 = 0;
+        for h in self.window(hour) {
+            sum += market.price_centi_cents_hour(api_name, h);
+            n += 1;
+        }
+        ((sum as f64 / n.max(1) as f64).round() as u64).max(1)
+    }
+
+    /// Cheapest hour in the trailing window — the "spot floor" the
+    /// expected price can never undercut.
+    pub fn floor_centi_cents(&self, market: &SpotMarket, api_name: &str, hour: u64) -> u64 {
+        self.window(hour)
+            .map(|h| market.price_centi_cents_hour(api_name, h))
+            .min()
+            .unwrap_or(1)
+            .max(1)
+    }
+
+    /// Likelihood in `[0, 1]` that one hour reclaims capacity bid at
+    /// `bid_centi_cents_hour`: the fraction of window hours whose
+    /// price exceeded the bid.
+    pub fn interruption_likelihood(
+        &self,
+        market: &SpotMarket,
+        api_name: &str,
+        bid_centi_cents_hour: u64,
+        hour: u64,
+    ) -> f64 {
+        let mut hit: u64 = 0;
+        let mut n: u64 = 0;
+        for h in self.window(hour) {
+            if market.interrupts_at(api_name, bid_centi_cents_hour, h) {
+                hit += 1;
+            }
+            n += 1;
+        }
+        hit as f64 / n.max(1) as f64
+    }
+
+}
 
 /// One billed line item. Amounts are stored in hundredths of a cent so
 /// small EBS charges are not truncated away item by item.
@@ -345,6 +453,58 @@ mod tests {
                 + l.total_centi_cents_for("")
         );
         assert_eq!(l.analysts(), vec!["alice".to_string(), "bob".to_string()]);
+    }
+
+    #[test]
+    fn forecast_mean_sits_between_window_floor_and_ceiling() {
+        let m = SpotMarket::default();
+        let f = PriceForecast::default();
+        for hour in [0u64, 23, 24, 500, 4999] {
+            let e = f.expected_price_centi_cents(&m, "m2.2xlarge", hour);
+            let floor = f.floor_centi_cents(&m, "m2.2xlarge", hour);
+            // Same window the forecast uses (24 h, warm-up before
+            // hour 24).
+            let (lo, hi) = if hour < 24 { (0, 23) } else { (hour - 23, hour) };
+            let ceil = (lo..=hi)
+                .map(|h| m.price_centi_cents_hour("m2.2xlarge", h))
+                .max()
+                .unwrap();
+            assert!(e >= floor, "hour {hour}: mean {e} under floor {floor}");
+            assert!(e <= ceil, "hour {hour}: mean {e} over ceiling {ceil}");
+        }
+        // Warm-up: every query inside the first window sees the same
+        // sample, so early decisions cannot flap between certainties.
+        assert_eq!(
+            f.expected_price_centi_cents(&m, "m2.2xlarge", 0),
+            f.expected_price_centi_cents(&m, "m2.2xlarge", 23),
+        );
+    }
+
+    #[test]
+    fn forecast_interruption_likelihood_tracks_the_bid() {
+        let m = SpotMarket::default();
+        let f = PriceForecast::new(2000);
+        let od = 90 * 100; // m2.2xlarge on-demand, centi-cents
+        // An unbeatable bid is never at risk; a floor bid always is.
+        assert_eq!(f.interruption_likelihood(&m, "m2.2xlarge", u64::MAX, 1999), 0.0);
+        assert_eq!(f.interruption_likelihood(&m, "m2.2xlarge", 0, 1999), 1.0);
+        // A bid at the on-demand rate is exposed to spikes only:
+        // roughly spike_prob of the window.
+        let p = f.interruption_likelihood(&m, "m2.2xlarge", od, 1999);
+        assert!(p > 0.005 && p < 0.15, "spike fraction {p}");
+    }
+
+    #[test]
+    fn forecast_expected_discount_is_deep() {
+        // The paper-era market sits around 30% of on-demand; the
+        // forecast must see that discount, not mistake spikes for the
+        // norm.
+        let m = SpotMarket::default();
+        let f = PriceForecast::new(500);
+        let od = 90 * 100; // m2.2xlarge on-demand, centi-cents
+        let e = f.expected_price_centi_cents(&m, "m2.2xlarge", 499);
+        let frac = e as f64 / od as f64;
+        assert!(frac > 0.15 && frac < 0.6, "expected fraction {frac}");
     }
 
     #[test]

@@ -125,6 +125,7 @@ fn run_jobs_with_exec_failures(failures: usize) -> (u64, usize) {
             rscript: "catopt.json".into(),
             priority: Priority::Normal,
             placement: Placement::ByNode,
+            deadline_s: None,
         },
     );
     let b = js.submit(
@@ -135,6 +136,7 @@ fn run_jobs_with_exec_failures(failures: usize) -> (u64, usize) {
             rscript: "catopt.json".into(),
             priority: Priority::High,
             placement: Placement::BySlot,
+            deadline_s: None,
         },
     );
     s.cloud.faults.exec_failures = failures;

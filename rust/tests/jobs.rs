@@ -10,7 +10,8 @@ use p2rac::coordinator::{MockEngine, Placement, Session};
 use p2rac::jobs::{
     files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority,
 };
-use p2rac::simcloud::SimParams;
+use p2rac::simcloud::{PriceForecast, SimParams, SpotMarket};
+use p2rac::util::quickprop;
 use std::collections::BTreeMap;
 
 fn session() -> Session {
@@ -68,6 +69,7 @@ fn job_specs() -> Vec<JobSpec> {
                 rscript: script,
                 priority: prios[i],
                 placement: Placement::ByNode,
+                deadline_s: None,
             }
         })
         .collect()
@@ -191,6 +193,131 @@ fn eight_mixed_priority_jobs_survive_spot_interruptions_bit_identically() {
     );
 }
 
+/// Property: the forecast is a pure function of `(market seed, type,
+/// window, hour)` — deterministic across instances — and its expected
+/// price never undercuts the window's observed spot floor (nor one
+/// centi-cent); the interruption likelihood is a probability and
+/// decreases as the bid rises.
+#[test]
+fn property_forecast_is_deterministic_and_never_below_the_spot_floor() {
+    quickprop::check("forecast determinism + floor", 200, |g| {
+        let seed = g.u64(0..1 << 48);
+        let ty = *g.pick(&["m1.large", "m2.2xlarge", "m2.4xlarge", "cc1.4xlarge"]);
+        let window = g.u64(1..100);
+        let hour = g.u64(0..10_000);
+        let m1 = SpotMarket::new(seed);
+        let m2 = SpotMarket::new(seed);
+        let f = PriceForecast::new(window);
+        let e1 = f.expected_price_centi_cents(&m1, ty, hour);
+        let e2 = f.expected_price_centi_cents(&m2, ty, hour);
+        assert_eq!(e1, e2, "same seed must forecast the same price");
+        let floor = f.floor_centi_cents(&m1, ty, hour);
+        assert!(e1 >= floor, "expected {e1} under the spot floor {floor}");
+        assert!(e1 >= 1, "expected price must never reach zero");
+        // Likelihood is a probability, monotone in the bid.
+        let lo_bid = g.u64(1..5_000);
+        let hi_bid = lo_bid + g.u64(1..50_000);
+        let p_lo = f.interruption_likelihood(&m1, ty, lo_bid, hour);
+        let p_hi = f.interruption_likelihood(&m1, ty, hi_bid, hour);
+        assert!((0.0..=1.0).contains(&p_lo) && (0.0..=1.0).contains(&p_hi));
+        assert!(p_hi <= p_lo, "a higher bid cannot be riskier ({p_hi} > {p_lo})");
+        assert_eq!(
+            p_lo,
+            f.interruption_likelihood(&m2, ty, lo_bid, hour),
+            "same seed must forecast the same risk"
+        );
+    });
+}
+
+/// A project whose modelled compute spans several virtual hours (a few
+/// seconds of real numerics), so hour-boundary spot reclaims genuinely
+/// threaten its deadline.
+fn write_heavy_sweep(s: &mut Session, dir: &str) {
+    s.analyst.write(
+        &format!("{dir}/sweep.json"),
+        br#"{"type":"mc_sweep","n_jobs":256,"seed":5,"job_cost_s":120}"#.to_vec(),
+    );
+}
+
+fn heavy_spec(deadline_s: Option<f64>) -> JobSpec {
+    JobSpec {
+        name: "slo".into(),
+        projectdir: "heavy".into(),
+        rscript: "sweep.json".into(),
+        priority: Priority::Normal,
+        placement: Placement::ByNode,
+        deadline_s,
+    }
+}
+
+/// The tentpole guarantee: a feasible deadline is never missed when
+/// on-demand fallback is allowed, even on a market so hostile that
+/// spot capacity cannot survive a single hour. The scheduler's
+/// forecast sees the permanent spike and routes the job on-demand.
+#[test]
+fn feasible_deadline_is_met_via_on_demand_fallback() {
+    // Reference: the job alone on an on-demand fleet — its duration
+    // defines feasibility.
+    let duration = {
+        let mut s = session();
+        write_heavy_sweep(&mut s, "heavy");
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 0,
+            max_clusters: 2,
+            nodes_per_cluster: 2,
+            spot: false,
+            ..Default::default()
+        });
+        let id = js.submit(&s, heavy_spec(None));
+        js.run_until_idle(&mut s).unwrap();
+        let j = js.queue.get(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        let d = j.completed_at_s.unwrap() - j.submitted_at_s;
+        assert!(
+            d > 3600.0,
+            "the heavy project must span hours for spot to matter, got {d}s"
+        );
+        d
+    };
+
+    // Hostile market: every hour's price spikes above any sane bid, so
+    // a spot cluster never survives an hour boundary — a job this size
+    // could literally never finish on spot.
+    let mut s = session();
+    s.cloud.spot.spike_prob = 1.0;
+    write_heavy_sweep(&mut s, "heavy");
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: true, // spot fleet *allowed*, on-demand fallback available
+        ..Default::default()
+    });
+    let deadline = s.cloud.clock.now_s() + 3.0 * duration; // comfortably feasible
+    let id = js.admit(&s, heavy_spec(Some(deadline)), false, "").unwrap();
+    js.run_until_idle(&mut s).unwrap();
+    let j = js.queue.get(id).unwrap();
+    assert_eq!(j.state, JobState::Completed);
+    assert!(
+        j.completed_at_s.unwrap() <= deadline,
+        "feasible deadline missed: completed t={:.0}s > deadline t={:.0}s",
+        j.completed_at_s.unwrap(),
+        deadline
+    );
+    // The guarantee was delivered by the fallback, not by luck: the
+    // fleet bought on-demand capacity for the at-risk job and no spot
+    // interruption ever fired.
+    assert_eq!(js.interruptions_delivered, 0);
+    assert!(
+        js.autoscaler
+            .events
+            .iter()
+            .any(|e| e.action.contains("scale-up") && e.action.contains("on-demand")),
+        "expected an on-demand scale-up, got {:?}",
+        js.autoscaler.events.iter().map(|e| &e.action).collect::<Vec<_>>()
+    );
+}
+
 #[test]
 fn interrupted_jobs_record_their_interruptions() {
     let mut s = session();
@@ -213,6 +340,7 @@ fn interrupted_jobs_record_their_interruptions() {
             rscript: "catopt.json".into(),
             priority: Priority::Normal,
             placement: Placement::ByNode,
+            deadline_s: None,
         },
     );
     js.run_until_idle(&mut s).unwrap();

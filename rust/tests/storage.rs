@@ -45,6 +45,7 @@ fn spec(name: &str, dir: &str, script: &str) -> JobSpec {
         rscript: script.into(),
         priority: Priority::Normal,
         placement: Placement::ByNode,
+        deadline_s: None,
     }
 }
 
@@ -150,6 +151,7 @@ fn restore_from_snapshot_onto_a_different_size_cluster() {
     js.fleet.push(FleetCluster {
         name: "small".into(),
         running: None,
+        spot: true,
     });
     let id = js.submit_opts(&s, spec("r", "proj", "catopt.json"), true, "");
     js.run_until_idle(&mut s).unwrap();
