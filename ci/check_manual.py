@@ -1,0 +1,33 @@
+#!/usr/bin/env python3
+"""Check that docs/MANUAL.md documents every ec2* subcommand the CLI
+registers.
+
+Single source of the manual-coverage invariant: the CI workflow calls
+this script, and the `manual_coverage_script_agrees_with_the_registry`
+unit test shells out to it, so the workflow and the test suite cannot
+drift apart. (A pure-Rust twin, `manual_documents_every_ec2_command`,
+walks the real registry — this script greps the source so it works
+without a build, for doc-only PRs.)
+
+Run from the repository root: python3 ci/check_manual.py
+"""
+
+import re
+import sys
+
+
+def main():
+    src = open("rust/src/cli/commands.rs").read()
+    cmds = sorted(set(re.findall(r'CommandSpec::new\(\s*"(ec2[a-z0-9]+)"', src)))
+    # Guard against the regex rotting (e.g. a rustfmt wrap): the
+    # registry has had >= 19 paper commands since PR 0.
+    assert len(cmds) >= 19, f"only matched {len(cmds)} ec2* registrations — regex stale?"
+    manual = open("docs/MANUAL.md").read()
+    missing = [c for c in cmds if f"## `{c}`" not in manual]
+    if missing:
+        sys.exit(f"docs/MANUAL.md is missing sections for: {', '.join(missing)}")
+    print(f"manual covers all {len(cmds)} ec2* subcommands")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,171 @@
+#!/usr/bin/env python3
+"""Validate emitted BENCH_*.json bench artifacts.
+
+One schema-and-invariants entry per bench artifact, in SCHEMAS below.
+The benches assert their headline properties while running; this script
+re-checks the *emitted artifact* so a bench that silently wrote a
+truncated or stale JSON (or a CI cache that resurrected an old one)
+fails the gate too — machine-checkable artifacts, not just green logs.
+
+Usage:
+    python3 ci/validate_bench.py [BENCH_queue.json ...]
+
+With no arguments, validates every BENCH_*.json found in the current
+directory (at least one must exist). Exits non-zero on the first
+violation, naming the file and the failed check.
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+class Violation(Exception):
+    pass
+
+
+def require(cond, msg):
+    if not cond:
+        raise Violation(msg)
+
+
+def _rows(report, key, n=None):
+    rows = report.get(key)
+    require(isinstance(rows, list), f"'{key}' must be an array")
+    if n is not None:
+        require(len(rows) == n, f"'{key}' must have {n} rows, found {len(rows)}")
+    return rows
+
+
+def validate_micro(report):
+    """BENCH_micro.json: one object per micro/ablation section."""
+    for key in (
+        "datasync",
+        "scheduler_us",
+        "runtime",
+        "backend",
+        "ga_ops",
+        "ga_parallel",
+        "virt_ablation",
+    ):
+        require(key in report and report[key] is not None, f"missing section '{key}'")
+    ablation = _rows(report, "virt_ablation")
+    require(len(ablation) > 0, "virt_ablation must carry at least one row")
+    for row in ablation:
+        require(
+            0.0 < row["efficiency_16_nodes_pct"] <= 110.0,
+            f"implausible 16-node efficiency: {row}",
+        )
+
+
+def validate_queue(report):
+    """BENCH_queue.json: fleet scenarios + deadline tradeoff curve +
+    the EDF-vs-FIFO ordering comparison, with their invariants."""
+    scenarios = _rows(report, "scenarios", 3)
+    by_label = {r["label"]: r for r in scenarios}
+    require(
+        set(by_label) == {"static on-demand", "autoscaled on-demand", "autoscaled spot"},
+        f"unexpected scenario labels: {sorted(by_label)}",
+    )
+    for r in scenarios:
+        require(
+            r["completed"] == r["jobs"],
+            f"{r['label']}: {r['completed']}/{r['jobs']} jobs completed",
+        )
+    require(
+        by_label["autoscaled spot"]["total_cost_cents"]
+        < by_label["static on-demand"]["total_cost_cents"],
+        "autoscaled spot must undercut static on-demand",
+    )
+    require(
+        by_label["autoscaled spot"]["interruptions"] >= 2,
+        "both armed spot interruptions must land",
+    )
+
+    curve = _rows(report, "deadline_tradeoff", 3)
+    labels = [r["label"] for r in curve]
+    require(
+        labels == ["all-ondemand", "all-spot", "deadline-aware"],
+        f"unexpected tradeoff labels: {labels}",
+    )
+    od, _, aware = curve
+    for ref_o, aware_o in zip(od["outcomes"], aware["outcomes"]):
+        if ref_o["met"]:
+            require(
+                aware_o["met"],
+                f"deadline-aware missed feasible deadline of {aware_o['name']}",
+            )
+    require(
+        aware["total_cost_cents"] < od["total_cost_cents"],
+        "deadline-aware must undercut all-on-demand",
+    )
+
+    ordering = _rows(report, "queue_ordering", 2)
+    fifo, edf = ordering
+    require(
+        (fifo["label"], edf["label"]) == ("fifo-within-class", "edf-within-class"),
+        f"unexpected ordering labels: {[r['label'] for r in ordering]}",
+    )
+    for f, e in zip(fifo["outcomes"], edf["outcomes"]):
+        if f["met"]:
+            require(e["met"], f"EDF missed deadline of {e['name']} that FIFO met")
+    require(
+        edf["deadlines_met"] > fifo["deadlines_met"],
+        "EDF must rescue deadlines FIFO-within-class misses",
+    )
+    require(
+        edf["total_cost_cents"] <= fifo["total_cost_cents"],
+        "EDF must not cost more than FIFO",
+    )
+
+
+def validate_storage(report):
+    """BENCH_storage.json: WAN vs LAN resume scenarios and the
+    lan_vs_wan savings summary."""
+    _rows(report, "scenarios", 3)
+    lan_vs_wan = report.get("lan_vs_wan")
+    require(isinstance(lan_vs_wan, dict), "'lan_vs_wan' must be an object")
+    require(
+        lan_vs_wan["transfer_saving_centi_cents"] > 0,
+        "LAN resume must save metered WAN transfer",
+    )
+    require(
+        lan_vs_wan["virtual_time_saving_s"] > 0,
+        "LAN resume must save virtual time",
+    )
+
+
+SCHEMAS = {
+    "BENCH_micro.json": validate_micro,
+    "BENCH_queue.json": validate_queue,
+    "BENCH_storage.json": validate_storage,
+}
+
+
+def validate(path):
+    name = os.path.basename(path)
+    validator = SCHEMAS.get(name)
+    if validator is None:
+        sys.exit(f"{name}: no schema registered (known: {', '.join(sorted(SCHEMAS))})")
+    try:
+        with open(path) as f:
+            report = json.load(f)
+        validator(report)
+    except Violation as v:
+        sys.exit(f"{name}: {v}")
+    except (KeyError, TypeError, ValueError) as e:
+        sys.exit(f"{name}: malformed artifact ({e!r})")
+    print(f"{name}: OK")
+
+
+def main(argv):
+    paths = argv or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        sys.exit("no BENCH_*.json artifacts found (run `cargo bench` first)")
+    for path in paths:
+        validate(path)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -134,6 +134,18 @@ pub fn registry() -> Vec<CommandSpec> {
             .value_arg("bucket", "bucket to list (default: all buckets)"),
         CommandSpec::new("ec2jobstatus", "show one job (or every job) in the queue")
             .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)"),
+        CommandSpec::new("ec2quota", "set, show or clear per-tenant governance quotas")
+            .value_arg("analyst", "tenant id the quota applies to (omit to list all quotas)")
+            .value_arg(
+                "maxclusters",
+                "max clusters per pool: concurrent fleet clusters, and owned created clusters",
+            )
+            .value_arg("maxcentihour", "compute budget in centihours (1/100 instance-hour)")
+            .value_arg("maxqueued", "max jobs the tenant may have queued at once")
+            .switch_arg("clear", "remove the tenant's quota (back to unlimited)"),
+        CommandSpec::new("ec2invoice", "itemised per-tenant bill from the usage ledger")
+            .value_arg("analyst", "tenant id to invoice (as tagged on jobs/resources)")
+            .switch_arg("json", "emit the invoice as JSON instead of text"),
         CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
             .switch_arg("drain", "run the scheduler until every job completes")
             .switch_arg("shutdown", "terminate the fleet and bill its usage"),
@@ -229,11 +241,19 @@ fn run_command(cmd: &str, p: &ParsedArgs) -> Result<String> {
     Ok(out)
 }
 
-/// Commands that operate on the persisted job-queue state.
+/// Commands that operate on the persisted job-queue state (including
+/// the quota book persisted beside it, which `ec2createcluster`
+/// consults on its create path and `report` for the SLO rollup).
 fn is_jobs_command(cmd: &str) -> bool {
     matches!(
         cmd,
-        "ec2submitjob" | "ec2jobstatus" | "ec2jobqueue" | "ec2autoscale"
+        "ec2submitjob"
+            | "ec2jobstatus"
+            | "ec2jobqueue"
+            | "ec2autoscale"
+            | "ec2quota"
+            | "ec2createcluster"
+            | "report"
     )
 }
 
@@ -518,14 +538,26 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 out.summary
             ))
         }
+        "ec2invoice" => {
+            let analyst = p.value("analyst").ok_or_else(|| {
+                anyhow!("-analyst is required (run `report` to see tenants with charges)")
+            })?;
+            let inv = s.cloud.ledger.invoice_for(analyst);
+            if p.switch("json") {
+                Ok(inv.to_json().to_string_pretty())
+            } else {
+                Ok(inv.lines().join("\n"))
+            }
+        }
         "report" => Ok(report(s)),
         other => bail!("unhandled command '{other}'"),
     }
 }
 
 /// Execute one command against a session and the persisted job
-/// scheduler: the four queue/autoscaler commands live here; everything
-/// else falls through to [`apply`].
+/// scheduler: the queue/autoscaler/governance commands live here
+/// (plus the quota gate on `ec2createcluster` and the SLO rollup on
+/// `report`); everything else falls through to [`apply`].
 pub fn apply_with_jobs(
     s: &mut Session,
     js: &mut JobScheduler,
@@ -565,6 +597,64 @@ pub fn apply_with_jobs(
                 js.queue.pending()
             ))
         }
+        "ec2quota" => {
+            let Some(analyst) = p.value("analyst") else {
+                let lines = js.quotas.lines();
+                return Ok(if lines.is_empty() {
+                    "no tenant quotas set (every tenant is unlimited)".into()
+                } else {
+                    lines.join("\n")
+                });
+            };
+            if p.switch("clear") {
+                return Ok(match js.quotas.remove(analyst) {
+                    Some(_) => format!("cleared quota for tenant '{analyst}'"),
+                    None => format!("tenant '{analyst}' had no quota set"),
+                });
+            }
+            let mut q = js.quotas.get(analyst).cloned().unwrap_or_default();
+            if let Some(v) = p.usize_value("maxclusters")? {
+                q.max_clusters = Some(v);
+            }
+            if let Some(v) = p.value("maxcentihour") {
+                q.max_centihours = Some(v.parse::<u64>().map_err(|_| {
+                    anyhow!("-maxcentihour expects a whole number of centihours, got '{v}'")
+                })?);
+            }
+            if let Some(v) = p.usize_value("maxqueued")? {
+                q.max_queued = Some(v);
+            }
+            let summary = q.summary();
+            js.quotas.set(analyst, q);
+            Ok(format!("quota for tenant '{analyst}': {summary}"))
+        }
+        "ec2createcluster" => {
+            // Governance gate on the create path: a tenant at its
+            // cluster quota is refused before anything is launched
+            // (the fleet and the cloud stay untouched).
+            if let Some(analyst) = p.value("analyst") {
+                if let Some(limit) = js.quotas.get(analyst).and_then(|q| q.max_clusters) {
+                    let owned = s.clusters_owned_by(analyst).len();
+                    if owned >= limit {
+                        bail!(
+                            "tenant '{analyst}': cluster quota reached (limit {limit}, \
+                             currently owns {owned} cluster(s)); terminate one or raise \
+                             the limit with ec2quota -analyst {analyst} -maxclusters N"
+                        );
+                    }
+                }
+            }
+            apply(s, cmd, p)
+        }
+        "report" => {
+            let mut out = report(s);
+            let slo = js.slo_lines(s);
+            if !slo.is_empty() {
+                out.push_str(&slo.join("\n"));
+                out.push('\n');
+            }
+            Ok(out)
+        }
         "ec2jobstatus" => match p.value("jobid") {
             Some(v) => {
                 let n: u64 = v
@@ -591,7 +681,11 @@ pub fn apply_with_jobs(
                     j.summary
                 ))
             }
-            None => Ok(js.status().join("\n")),
+            None => {
+                let mut out = js.status();
+                out.extend(js.slo_lines(s));
+                Ok(out.join("\n"))
+            }
         },
         "ec2jobqueue" => {
             let mut out = Vec::new();
@@ -880,6 +974,8 @@ mod tests {
             "ec2autoscale",
             "ec2snapshot",
             "ec2lsobjects",
+            "ec2quota",
+            "ec2invoice",
         ] {
             assert!(h.contains(c), "help missing {c}");
         }
@@ -976,6 +1072,126 @@ mod tests {
     }
 
     #[test]
+    fn quota_cli_sets_lists_clears_and_gates_cluster_creation() {
+        let mut s = session();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig::default());
+        // Set, show, update.
+        let out = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2quota",
+            &["-analyst", "alice", "-maxclusters", "1", "-maxqueued", "4"],
+        )
+        .unwrap();
+        assert!(out.contains("maxclusters 1") && out.contains("maxqueued 4"), "{out}");
+        assert!(out.contains("maxcentihour unlimited"), "{out}");
+        let listing = run_jobs(&mut s, &mut js, "ec2quota", &[]).unwrap();
+        assert!(listing.contains("alice"), "{listing}");
+        // The create path is gated: alice may own one cluster, not two.
+        run_jobs(
+            &mut s,
+            &mut js,
+            "ec2createcluster",
+            &["-cname", "a1", "-csize", "2", "-analyst", "alice"],
+        )
+        .unwrap();
+        let err = run_jobs(
+            &mut s,
+            &mut js,
+            "ec2createcluster",
+            &["-cname", "a2", "-csize", "2", "-analyst", "alice"],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(
+            err.contains("alice") && err.contains("limit 1") && err.contains("owns 1"),
+            "the error must name the tenant, the limit and the usage: {err}"
+        );
+        assert!(!s.clusters_cfg.contains("a2"), "a refused cluster must not exist");
+        // Other tenants (and untagged creates) are unaffected.
+        run_jobs(
+            &mut s,
+            &mut js,
+            "ec2createcluster",
+            &["-cname", "b1", "-csize", "2", "-analyst", "bob"],
+        )
+        .unwrap();
+        // Clear restores unlimited.
+        let out = run_jobs(&mut s, &mut js, "ec2quota", &["-analyst", "alice", "-clear"]).unwrap();
+        assert!(out.contains("cleared"), "{out}");
+        run_jobs(
+            &mut s,
+            &mut js,
+            "ec2createcluster",
+            &["-cname", "a2", "-csize", "2", "-analyst", "alice"],
+        )
+        .unwrap();
+        assert!(s.clusters_cfg.contains("a2"));
+    }
+
+    #[test]
+    fn invoice_cli_renders_text_and_json() {
+        let mut s = session();
+        s.cloud.ledger.set_analyst("alice");
+        s.cloud
+            .ledger
+            .bill_instance("i-1", "m2.2xlarge", 90, 0.0, 3600.0);
+        s.cloud.ledger.set_analyst("");
+        let out = run(&mut s, "ec2invoice", &["-analyst", "alice"]).unwrap();
+        assert!(out.contains("invoice for tenant 'alice'"), "{out}");
+        assert!(out.contains("on-demand instance-hours"), "{out}");
+        assert!(out.contains("9000"), "exact centi-cents must render: {out}");
+        let out = run(&mut s, "ec2invoice", &["-analyst", "alice", "-json"]).unwrap();
+        let j = crate::util::json::Json::parse(&out).unwrap();
+        assert_eq!(
+            j.get("total_centi_cents").and_then(crate::util::json::Json::as_u64),
+            Some(s.cloud.ledger.total_centi_cents_for("alice"))
+        );
+        // -analyst is required.
+        assert!(run(&mut s, "ec2invoice", &[]).is_err());
+    }
+
+    #[test]
+    fn report_and_jobstatus_carry_the_slo_rollup() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        run_jobs(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &[
+                "-projectdir",
+                "proj",
+                "-rscript",
+                "sweep.json",
+                "-runname",
+                "r1",
+                "-deadline",
+                "86400",
+                "-analyst",
+                "alice",
+            ],
+        )
+        .unwrap();
+        let out = run_jobs(&mut s, &mut js, "ec2jobstatus", &[]).unwrap();
+        assert!(out.contains("deadline SLOs by analyst:"), "{out}");
+        assert!(out.contains("alice"), "{out}");
+        let out = run_jobs(&mut s, &mut js, "report", &[]).unwrap();
+        assert!(out.contains("deadline SLOs by analyst:"), "{out}");
+        run_jobs(&mut s, &mut js, "ec2jobqueue", &["-drain"]).unwrap();
+        let out = run_jobs(&mut s, &mut js, "report", &[]).unwrap();
+        assert!(out.contains("met 1"), "{out}");
+        // No deadlines anywhere -> no SLO section.
+        let js2 = JobScheduler::new(crate::jobs::AutoscalerConfig::default());
+        assert!(js2.slo_lines(&s).is_empty());
+    }
+
+    #[test]
     fn manual_documents_every_ec2_command() {
         // The operator manual must carry a `## `ec2…`` section for
         // every registered ec2* subcommand (CI runs the same check as
@@ -995,6 +1211,30 @@ mod tests {
                 c.name
             );
         }
+    }
+
+    #[test]
+    fn manual_coverage_script_agrees_with_the_registry() {
+        // The CI manual-coverage gate lives in ci/check_manual.py;
+        // this guard runs the same script so the workflow and the
+        // test suite cannot drift. Skipped silently where python3 is
+        // unavailable — the pure-Rust twin above still enforces the
+        // invariant there.
+        let root = concat!(env!("CARGO_MANIFEST_DIR"), "/..");
+        let out = match std::process::Command::new("python3")
+            .arg("ci/check_manual.py")
+            .current_dir(root)
+            .output()
+        {
+            Ok(o) => o,
+            Err(_) => return, // no python3 on this machine
+        };
+        assert!(
+            out.status.success(),
+            "ci/check_manual.py failed:\n{}{}",
+            String::from_utf8_lossy(&out.stdout),
+            String::from_utf8_lossy(&out.stderr)
+        );
     }
 
     #[test]

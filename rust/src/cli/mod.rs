@@ -20,7 +20,7 @@ pub mod commands;
 
 use crate::analytics::P2racEngine;
 use crate::coordinator::{ScriptEngine, Session};
-use crate::jobs::{AutoscalerConfig, JobScheduler};
+use crate::jobs::{AutoscalerConfig, JobScheduler, QuotaBook};
 use crate::runtime::Runtime;
 use crate::simcloud::SimParams;
 use crate::util::json::Json;
@@ -81,25 +81,40 @@ fn jobs_path() -> PathBuf {
     session_dir().join("jobs.json")
 }
 
-/// Load the persisted job-queue/autoscaler state, or a fresh default.
+fn quotas_path() -> PathBuf {
+    session_dir().join("quotas.json")
+}
+
+/// Load the persisted job-queue/autoscaler state (plus the tenant
+/// quota book persisted beside it), or a fresh default.
 pub fn load_jobs() -> Result<JobScheduler> {
     let path = jobs_path();
-    if path.exists() {
+    let mut js = if path.exists() {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {}", path.display()))?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt jobs state: {e}"))?;
-        JobScheduler::from_json(&j)
+        JobScheduler::from_json(&j)?
     } else {
-        Ok(JobScheduler::new(AutoscalerConfig::default()))
+        JobScheduler::new(AutoscalerConfig::default())
+    };
+    let qpath = quotas_path();
+    if qpath.exists() {
+        let text = std::fs::read_to_string(&qpath)
+            .with_context(|| format!("reading {}", qpath.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt quota book: {e}"))?;
+        js.quotas = QuotaBook::from_json(&j)?;
     }
+    Ok(js)
 }
 
-/// Persist the job-queue/autoscaler state.
+/// Persist the job-queue/autoscaler state and the tenant quota book.
 pub fn save_jobs(js: &JobScheduler) -> Result<()> {
     let dir = session_dir();
     std::fs::create_dir_all(&dir)?;
     std::fs::write(jobs_path(), js.to_json().to_string_compact())
-        .with_context(|| format!("writing {}", jobs_path().display()))
+        .with_context(|| format!("writing {}", jobs_path().display()))?;
+    std::fs::write(quotas_path(), js.quotas.to_json().to_string_compact())
+        .with_context(|| format!("writing {}", quotas_path().display()))
 }
 
 /// Entry point used by `main.rs`; returns the process exit code.

@@ -474,6 +474,26 @@ impl Session {
             .collect()
     }
 
+    /// Cluster names owned by `analyst` — the clusters whose master
+    /// instance carries that `p2rac:analyst` tag (`ec2createcluster
+    /// -analyst`). Used by the governance quota check on the create
+    /// path.
+    pub fn clusters_owned_by(&self, analyst: &str) -> Vec<String> {
+        self.clusters_cfg
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                self.cloud
+                    .instance(&e.master_id)
+                    .ok()
+                    .and_then(|i| i.tags.get("p2rac:analyst"))
+                    .map(|a| a.as_str() == analyst)
+                    .unwrap_or(false)
+            })
+            .map(|(name, _)| name.clone())
+            .collect()
+    }
+
     /// `ec2listallresources`.
     pub fn list_all_resources(
         &self,

@@ -47,6 +47,7 @@
 pub mod autoscaler;
 pub mod checkpoint;
 pub mod queue;
+pub mod quota;
 pub mod spot;
 
 pub use autoscaler::{
@@ -56,7 +57,8 @@ pub use checkpoint::{
     commit_resident_checkpoint, restore_resident_checkpoint, script_units, JobWork, StepOutcome,
     CHECKPOINT_BUCKET,
 };
-pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority};
+pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority, QueueOrdering};
+pub use quota::{QuotaBook, TenantQuota, SECONDS_PER_CENTIHOUR};
 
 use crate::analytics::cost::{self, CatoptCost, SweepCost};
 use crate::analytics::pool::WorkerPool;
@@ -70,6 +72,8 @@ use crate::simcloud::{instance_type, Link, SpanCategory, SpotMarket};
 use crate::util::humanfmt;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
 
 /// Fractional headroom the deadline decision demands over the
 /// risk-adjusted remaining-time estimate: covers what the estimator
@@ -86,6 +90,62 @@ const INTERRUPTION_COST_SLICES: f64 = 2.0;
 /// Smoothing factor of the scheduler's cross-job per-unit EWMA (weight
 /// of the newest committed slice).
 const PRIOR_EWMA_ALPHA: f64 = 0.3;
+
+/// The deadline verdict of one SLO'd job — the single source of the
+/// `green | at-risk | missed` wording, rendered via [`fmt::Display`]
+/// by every consumer (`ec2jobstatus` lines, `report`'s per-tenant SLO
+/// rollup), so the spelling cannot fork between paths.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeadlineVerdict {
+    /// On track: the projected (or actual) completion beats the
+    /// deadline with the safety margin intact.
+    Green,
+    /// The dispatcher's at-risk condition: the cost/risk curve would
+    /// keep the job off spot right now, or the safety margin consumes
+    /// the remaining slack, or no runtime estimate exists yet.
+    AtRisk,
+    /// The deadline is (or is projected to be) lost; a failed job also
+    /// reports missed.
+    Missed,
+}
+
+impl DeadlineVerdict {
+    /// The canonical spelling (`green | at-risk | missed`).
+    pub fn label(self) -> &'static str {
+        match self {
+            DeadlineVerdict::Green => "green",
+            DeadlineVerdict::AtRisk => "at-risk",
+            DeadlineVerdict::Missed => "missed",
+        }
+    }
+}
+
+impl fmt::Display for DeadlineVerdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Per-tenant SLO rollup (`report` / `ec2jobstatus`): how many of the
+/// tenant's deadline jobs are met, missed, at risk or merely on track,
+/// and the worst margin across them.
+#[derive(Clone, Debug, Default)]
+pub struct SloStats {
+    /// Jobs carrying a deadline.
+    pub deadline_jobs: usize,
+    /// Completed in time.
+    pub met: usize,
+    /// Lost: completed late, failed, or projected past the deadline.
+    pub missed: usize,
+    /// Unfinished with the dispatcher's at-risk condition true.
+    pub at_risk: usize,
+    /// Unfinished but comfortably green.
+    pub on_track: usize,
+    /// Smallest signed margin (deadline minus actual/projected
+    /// completion) across the tenant's estimable deadline jobs;
+    /// `None` when no job has an estimate yet.
+    pub worst_margin_s: Option<f64>,
+}
 
 /// One cluster of the elastic fleet.
 #[derive(Clone, Debug)]
@@ -218,6 +278,12 @@ pub struct JobScheduler {
     /// own, and the floor under `ec2submitjob`'s "deadline shorter
     /// than one slice" rejection.
     pub unit_s_prior: Option<f64>,
+    /// Per-tenant governance quotas (`ec2quota`): enforced by `admit`
+    /// (queued-job and compute budgets), the dispatch loop (concurrent
+    /// cluster cap) and the demand picture handed to the autoscaler
+    /// (never grow the fleet for work a capped tenant cannot run).
+    /// Persisted beside `jobs.json` by the CLI, not with the queue.
+    pub quotas: QuotaBook,
     /// Human-readable scheduling decisions, in order.
     pub log: Vec<String>,
 }
@@ -234,6 +300,7 @@ impl JobScheduler {
             scanned_to: 0.0,
             interruptions_delivered: 0,
             unit_s_prior: None,
+            quotas: QuotaBook::new(),
             log: Vec::new(),
         }
     }
@@ -279,11 +346,13 @@ impl JobScheduler {
         id
     }
 
-    /// `ec2submitjob`'s entry point: validate the spec's deadline (a
-    /// deadline already in the past, or closer than the minimum
-    /// one-slice runtime at the best available rate estimate, can only
-    /// be missed — reject it cleanly instead of queueing a guaranteed
-    /// failure), then submit.
+    /// `ec2submitjob`'s entry point: enforce the tenant's governance
+    /// quotas (queued-job cap, compute budget — rejected here, before
+    /// anything is queued or any fleet state is touched), validate the
+    /// spec's deadline (a deadline already in the past, or closer than
+    /// the minimum one-slice runtime at the best available rate
+    /// estimate, can only be missed — reject it cleanly instead of
+    /// queueing a guaranteed failure), then submit.
     pub fn admit(
         &mut self,
         s: &Session,
@@ -291,6 +360,54 @@ impl JobScheduler {
         resident: bool,
         analyst: &str,
     ) -> Result<JobId> {
+        if let Some(q) = self.quotas.get(analyst) {
+            // A zero-cluster quota means the job could never dispatch:
+            // reject it here (like a deadline that can only miss)
+            // rather than queue a job the drain loop must hard-fail
+            // on later.
+            if q.max_clusters == Some(0) {
+                bail!(
+                    "tenant '{analyst}': cluster quota is 0, so a submitted job could \
+                     never dispatch; raise the limit with \
+                     ec2quota -analyst {analyst} -maxclusters N"
+                );
+            }
+            if let Some(max_queued) = q.max_queued {
+                let queued = self
+                    .queue
+                    .jobs()
+                    .filter(|j| {
+                        j.analyst == analyst
+                            && matches!(j.state, JobState::Queued | JobState::Interrupted)
+                    })
+                    .count();
+                if queued >= max_queued {
+                    bail!(
+                        "tenant '{analyst}': queued-job quota reached (limit {max_queued}, \
+                         currently {queued} queued); drain the queue or raise the limit with \
+                         ec2quota -analyst {analyst} -maxqueued N"
+                    );
+                }
+            }
+            if let Some(max_centihours) = q.max_centihours {
+                let used_s: f64 = self
+                    .queue
+                    .jobs()
+                    .filter(|j| j.analyst == analyst)
+                    .map(|j| j.compute_s)
+                    .sum();
+                let used_centihours = used_s / SECONDS_PER_CENTIHOUR;
+                if used_centihours >= max_centihours as f64 {
+                    bail!(
+                        "tenant '{analyst}': compute budget exhausted (limit {max_centihours} \
+                         centihour(s) = {}, already committed {}); raise the limit with \
+                         ec2quota -analyst {analyst} -maxcentihour N",
+                        humanfmt::secs(max_centihours as f64 * SECONDS_PER_CENTIHOUR),
+                        humanfmt::secs(used_s),
+                    );
+                }
+            }
+        }
         let sized = self.size_job(s, &spec);
         if let Some(deadline) = spec.deadline_s {
             let now = s.cloud.clock.now_s();
@@ -430,18 +547,28 @@ impl JobScheduler {
                     // Safety valve: a deadline job may have declined
                     // spot-only capacity while waiting for on-demand,
                     // but with nothing in flight there is no event to
-                    // wait on — place the head job on any idle slot
-                    // rather than stall.
+                    // wait on — place the head dispatchable job on any
+                    // idle slot rather than stall. A tenant at its
+                    // cluster quota is never dispatchable here (with
+                    // nothing in flight, only a zero-cluster quota can
+                    // be at its cap — the valve must not override it).
+                    let startable = self.queue.ready_ids().into_iter().find(|id| {
+                        self.queue
+                            .get(*id)
+                            .map(|j| !self.tenant_at_cluster_cap(&j.analyst))
+                            .unwrap_or(false)
+                    });
                     if let (Some(slot), Some(jid)) = (
                         self.fleet.iter().position(|c| c.running.is_none()),
-                        self.queue.next_ready(),
+                        startable,
                     ) {
                         self.try_start(s, jid, slot)?;
                         continue;
                     }
                     bail!(
-                        "{} job(s) pending but the autoscaler provides no capacity \
-                         (max_clusters = {})",
+                        "{} job(s) pending but no capacity is dispatchable \
+                         (autoscaler max_clusters = {}; tenant cluster quotas \
+                         may also cap concurrency — see ec2quota)",
                         self.queue.pending(),
                         self.autoscaler.cfg.max_clusters
                     );
@@ -527,46 +654,85 @@ impl JobScheduler {
         out
     }
 
-    /// One-line deadline report for `ec2jobstatus`, derived from the
-    /// **same** remaining-work estimator the scheduler's spot/on-demand
-    /// decisions use: estimated completion time, margin, and a
-    /// green / at-risk / missed verdict. At-risk is exactly the
-    /// dispatcher's condition — a job the cost/risk curve would keep
-    /// off spot right now (or whose margin the safety factor consumes)
-    /// reports at-risk, so the status line and the premium the
-    /// scheduler is paying can never disagree. `None` when the job has
-    /// no deadline.
+    /// The [`DeadlineVerdict`] of one job, derived from the **same**
+    /// remaining-work estimator the scheduler's spot/on-demand
+    /// decisions use. At-risk is exactly the dispatcher's condition —
+    /// a job the cost/risk curve would keep off spot right now (or
+    /// whose margin the safety factor consumes) reports at-risk, so
+    /// the status line and the premium the scheduler is paying can
+    /// never disagree. `None` when the job has no deadline.
+    pub fn deadline_verdict(&self, s: &Session, job: &Job) -> Option<DeadlineVerdict> {
+        let deadline = job.spec.deadline_s?;
+        let now = s.cloud.clock.now_s();
+        Some(match job.state {
+            JobState::Completed => {
+                if job.completed_at_s.unwrap_or(now) <= deadline {
+                    DeadlineVerdict::Green
+                } else {
+                    DeadlineVerdict::Missed
+                }
+            }
+            JobState::Failed => DeadlineVerdict::Missed,
+            _ => match job.estimate_remaining_s(self.unit_s_prior) {
+                Some(remaining) => {
+                    let eta = now + remaining;
+                    if now >= deadline || eta > deadline {
+                        DeadlineVerdict::Missed
+                    } else if self.needs_ondemand(s, job)
+                        || eta + remaining * DEADLINE_SAFETY_MARGIN > deadline
+                    {
+                        DeadlineVerdict::AtRisk
+                    } else {
+                        DeadlineVerdict::Green
+                    }
+                }
+                None => DeadlineVerdict::AtRisk,
+            },
+        })
+    }
+
+    /// Signed deadline margin in virtual seconds: the deadline minus
+    /// the actual (completed) or projected (estimator eta) completion
+    /// time. `None` for jobs without a deadline, failed jobs, and
+    /// unfinished jobs with no runtime estimate yet.
+    pub fn deadline_margin_s(&self, s: &Session, job: &Job) -> Option<f64> {
+        let deadline = job.spec.deadline_s?;
+        let now = s.cloud.clock.now_s();
+        match job.state {
+            JobState::Completed => Some(deadline - job.completed_at_s.unwrap_or(now)),
+            JobState::Failed => None,
+            _ => job
+                .estimate_remaining_s(self.unit_s_prior)
+                .map(|remaining| deadline - (now + remaining)),
+        }
+    }
+
+    /// One-line deadline report for `ec2jobstatus`: estimated
+    /// completion time, margin, and the [`DeadlineVerdict`]. `None`
+    /// when the job has no deadline.
     pub fn deadline_status(&self, s: &Session, job: &Job) -> Option<String> {
         let deadline = job.spec.deadline_s?;
+        let verdict = self.deadline_verdict(s, job)?;
         let now = s.cloud.clock.now_s();
         Some(match job.state {
             JobState::Completed => {
                 let done = job.completed_at_s.unwrap_or(now);
                 if done <= deadline {
                     format!(
-                        "deadline t={deadline:.0}s: met with {} to spare (green)",
+                        "deadline t={deadline:.0}s: met with {} to spare ({verdict})",
                         humanfmt::secs(deadline - done)
                     )
                 } else {
                     format!(
-                        "deadline t={deadline:.0}s: missed by {}",
+                        "deadline t={deadline:.0}s: missed by {} ({verdict})",
                         humanfmt::secs(done - deadline)
                     )
                 }
             }
-            JobState::Failed => format!("deadline t={deadline:.0}s: job failed"),
+            JobState::Failed => format!("deadline t={deadline:.0}s: job failed ({verdict})"),
             _ => match job.estimate_remaining_s(self.unit_s_prior) {
                 Some(remaining) => {
                     let eta = now + remaining;
-                    let verdict = if now >= deadline || eta > deadline {
-                        "missed"
-                    } else if self.needs_ondemand(s, job)
-                        || eta + remaining * DEADLINE_SAFETY_MARGIN > deadline
-                    {
-                        "at-risk"
-                    } else {
-                        "green"
-                    };
                     let margin = deadline - eta;
                     format!(
                         "deadline t={deadline:.0}s: eta t={eta:.0}s, margin {}{} ({verdict})",
@@ -574,9 +740,68 @@ impl JobScheduler {
                         humanfmt::secs(margin.abs()),
                     )
                 }
-                None => format!("deadline t={deadline:.0}s: no runtime estimate yet (at-risk)"),
+                None => {
+                    format!("deadline t={deadline:.0}s: no runtime estimate yet ({verdict})")
+                }
             },
         })
+    }
+
+    /// Per-tenant SLO rollup over every deadline job in the queue,
+    /// sorted by analyst id ("" = untagged). Empty when no job
+    /// carries a deadline.
+    pub fn slo_by_analyst(&self, s: &Session) -> Vec<(String, SloStats)> {
+        let mut per: BTreeMap<String, SloStats> = BTreeMap::new();
+        for job in self.queue.jobs() {
+            let Some(verdict) = self.deadline_verdict(s, job) else {
+                continue;
+            };
+            let st = per.entry(job.analyst.clone()).or_default();
+            st.deadline_jobs += 1;
+            match verdict {
+                DeadlineVerdict::Green if job.state == JobState::Completed => st.met += 1,
+                DeadlineVerdict::Green => st.on_track += 1,
+                DeadlineVerdict::AtRisk => st.at_risk += 1,
+                DeadlineVerdict::Missed => st.missed += 1,
+            }
+            if let Some(margin) = self.deadline_margin_s(s, job) {
+                st.worst_margin_s = Some(match st.worst_margin_s {
+                    Some(w) => w.min(margin),
+                    None => margin,
+                });
+            }
+        }
+        per.into_iter().collect()
+    }
+
+    /// Render [`JobScheduler::slo_by_analyst`] for `report` and
+    /// `ec2jobstatus`; empty when no job carries a deadline.
+    pub fn slo_lines(&self, s: &Session) -> Vec<String> {
+        let per = self.slo_by_analyst(s);
+        if per.is_empty() {
+            return Vec::new();
+        }
+        let mut out = vec!["deadline SLOs by analyst:".to_string()];
+        for (analyst, st) in per {
+            let name = if analyst.is_empty() {
+                "(untagged)".to_string()
+            } else {
+                analyst
+            };
+            let margin = match st.worst_margin_s {
+                Some(m) => format!(
+                    "worst margin {}{}",
+                    if m >= 0.0 { "+" } else { "-" },
+                    humanfmt::secs(m.abs())
+                ),
+                None => "no margin estimate".to_string(),
+            };
+            out.push(format!(
+                "  {:<20} met {}  missed {}  at-risk {}  on-track {}  ({margin})",
+                name, st.met, st.missed, st.at_risk, st.on_track
+            ));
+        }
+        out
     }
 
     // ------------------------------------------------------- internals
@@ -593,29 +818,69 @@ impl JobScheduler {
     /// on-demand cluster would satisfy the quota slot of a second,
     /// still-waiting at-risk job and leave it stalled behind a
     /// multi-hour slice.
+    ///
+    /// Governance: a tenant with a `-maxclusters` quota can never
+    /// occupy more than that many clusters (the dispatch loop enforces
+    /// it), so its contribution to the demand picture — queue depth,
+    /// estimated backlog, on-demand pressure — is clamped to the same
+    /// cap here. Without the clamp the autoscaler would buy capacity
+    /// the capped tenant can never use.
     fn demand(&self, s: &Session) -> FleetDemand {
         let target = self.autoscaler.cfg.work_target_s.max(1.0);
-        let mut est_total = 0.0;
-        let mut ondemand_clusters = 0;
+        #[derive(Default)]
+        struct TenantDemand {
+            waiting: usize,
+            running: usize,
+            est_s: f64,
+            ondemand: usize,
+        }
+        let mut per: BTreeMap<&str, TenantDemand> = BTreeMap::new();
         for j in self.queue.jobs() {
             let waiting = matches!(j.state, JobState::Queued | JobState::Interrupted);
             if !waiting && j.state != JobState::Running {
                 continue;
             }
-            est_total += j.estimate_remaining_s(self.unit_s_prior).unwrap_or(target);
+            let acc = per.entry(j.analyst.as_str()).or_default();
+            if waiting {
+                acc.waiting += 1;
+            } else {
+                acc.running += 1;
+            }
+            acc.est_s += j.estimate_remaining_s(self.unit_s_prior).unwrap_or(target);
             if self.needs_ondemand(s, j) {
                 let occupies_ondemand = j.state == JobState::Running
                     && j.assigned.as_deref().is_some_and(|cname| {
                         self.fleet.iter().any(|c| c.name == cname && !c.spot)
                     });
                 if waiting || occupies_ondemand {
-                    ondemand_clusters += 1;
+                    acc.ondemand += 1;
+                }
+            }
+        }
+        let mut pending = 0;
+        let mut running = 0;
+        let mut est_total = 0.0;
+        let mut ondemand_clusters = 0;
+        for (&analyst, acc) in &per {
+            match self.quotas.get(analyst).and_then(|q| q.max_clusters) {
+                None => {
+                    pending += acc.waiting;
+                    running += acc.running;
+                    est_total += acc.est_s;
+                    ondemand_clusters += acc.ondemand;
+                }
+                Some(cap) => {
+                    let r = acc.running.min(cap);
+                    pending += acc.waiting.min(cap.saturating_sub(r));
+                    running += r;
+                    est_total += acc.est_s.min(cap as f64 * target);
+                    ondemand_clusters += acc.ondemand.min(cap);
                 }
             }
         }
         FleetDemand {
-            pending: self.queue.pending(),
-            running: self.queue.running(),
+            pending,
+            running,
             ondemand_clusters,
             est_remaining_s: Some(est_total),
         }
@@ -683,25 +948,52 @@ impl JobScheduler {
         now + risk_adjusted * (1.0 + DEADLINE_SAFETY_MARGIN) + one_loss_s > deadline
     }
 
+    /// How many fleet clusters are currently running a slice of
+    /// `analyst`'s jobs.
+    fn tenant_clusters_in_use(&self, analyst: &str) -> usize {
+        self.fleet
+            .iter()
+            .filter(|c| {
+                c.running
+                    .and_then(|id| self.queue.get(id))
+                    .map(|j| j.analyst == analyst)
+                    .unwrap_or(false)
+            })
+            .count()
+    }
+
+    /// Is `analyst` at its `-maxclusters` quota right now (no quota =
+    /// never)? The dispatch loop skips a tenant at its cap, so the
+    /// quota bounds *concurrency*, never correctness: the work runs
+    /// later on the clusters the tenant is entitled to.
+    fn tenant_at_cluster_cap(&self, analyst: &str) -> bool {
+        match self.quotas.get(analyst).and_then(|q| q.max_clusters) {
+            Some(cap) => self.tenant_clusters_in_use(analyst) >= cap,
+            None => false,
+        }
+    }
+
     /// Dispatch ready jobs onto idle fleet clusters, matching each
     /// job's capacity preference: deadline-at-risk jobs take on-demand
     /// clusters (waiting for one when the autoscaler can still provide
     /// it), relaxed jobs prefer spot so the on-demand quota stays free
-    /// for at-risk work.
+    /// for at-risk work. A tenant at its `-maxclusters` quota is
+    /// skipped — its jobs stay queued until one of its slices
+    /// completes.
     fn dispatch_ready(&mut self, s: &mut Session) -> Result<()> {
         // Ready jobs in the queue's dispatch order, each with its
-        // capacity preference — computed once per dispatch round:
-        // placing a slice only shrinks this list and the idle set
-        // (the one clock movement a placement can cause, a resident
-        // job's EBS rehydration, is far inside the decision's safety
-        // margin).
-        let mut ready: Vec<(JobId, bool)> = self
+        // capacity preference and tenant — computed once per dispatch
+        // round: placing a slice only shrinks this list and the idle
+        // set (the one clock movement a placement can cause, a
+        // resident job's EBS rehydration, is far inside the decision's
+        // safety margin).
+        let mut ready: Vec<(JobId, bool, String)> = self
             .queue
             .ready_ids()
             .into_iter()
             .map(|id| {
                 let j = self.queue.get(id).expect("ready job exists");
-                (id, self.needs_ondemand(s, j))
+                (id, self.needs_ondemand(s, j), j.analyst.clone())
             })
             .collect();
         loop {
@@ -718,9 +1010,14 @@ impl JobScheduler {
             if idle.is_empty() {
                 break;
             }
-            let any_at_risk_waiting = ready.iter().any(|(_, od)| *od);
+            let any_at_risk_waiting = ready
+                .iter()
+                .any(|(_, od, a)| *od && !self.tenant_at_cluster_cap(a));
             let mut pick: Option<(usize, usize)> = None;
-            for (pos, (_, needs_od)) in ready.iter().enumerate() {
+            for (pos, (_, needs_od, analyst)) in ready.iter().enumerate() {
+                if self.tenant_at_cluster_cap(analyst) {
+                    continue;
+                }
                 let slot = if *needs_od {
                     self.idle_of_kind(&idle, false).or_else(|| {
                         // No idle on-demand cluster and no way for the
@@ -756,7 +1053,7 @@ impl JobScheduler {
             let Some((pos, slot)) = pick else {
                 break; // everyone ready is waiting for on-demand capacity
             };
-            let (jid, _) = ready.remove(pos);
+            let (jid, _, _) = ready.remove(pos);
             self.try_start(s, jid, slot)?;
         }
         Ok(())

@@ -2,9 +2,14 @@
 //!
 //! Many simulated Analysts submit work (`ec2submitjob`); the scheduler
 //! in [`crate::jobs`] drains it onto the elastic fleet. Ordering is
-//! strict priority, FIFO within a priority class; an interrupted job
-//! keeps its original submission order, so a spot interruption never
-//! costs a job its place in line.
+//! strict priority; within a priority class the default is
+//! **earliest-deadline-first** (jobs without a deadline sort last,
+//! FIFO among themselves; ties break by submission order), so an
+//! at-risk job with a tight SLO dispatches before a relaxed one of
+//! equal priority. The PR 4 FIFO-within-class policy remains
+//! selectable via [`QueueOrdering`] — the queue bench compares the
+//! two. An interrupted job keeps its place in line either way: a spot
+//! interruption never costs a job its ordering key.
 
 use crate::coordinator::Placement;
 use crate::util::json::Json;
@@ -40,6 +45,40 @@ impl Priority {
             Priority::Low => "low",
             Priority::Normal => "normal",
             Priority::High => "high",
+        }
+    }
+}
+
+/// How ready jobs are ordered *within* a priority class (strict
+/// priority always comes first).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueOrdering {
+    /// Submission order (by job id) — the PR 4 policy.
+    FifoWithinClass,
+    /// Earliest deadline first; jobs without a deadline sort last
+    /// (an absent deadline is an infinitely late one). Ties — equal
+    /// deadlines, or two no-deadline jobs — break by submission
+    /// order, so the ordering is a refinement of FIFO, not a
+    /// replacement.
+    #[default]
+    EdfWithinClass,
+}
+
+impl QueueOrdering {
+    /// Parse a persisted/CLI ordering value (`fifo | edf`).
+    pub fn parse(s: &str) -> Result<QueueOrdering> {
+        match s {
+            "fifo" => Ok(QueueOrdering::FifoWithinClass),
+            "edf" => Ok(QueueOrdering::EdfWithinClass),
+            other => bail!("unknown queue ordering '{other}' (fifo | edf)"),
+        }
+    }
+
+    /// The persisted spelling of this ordering.
+    pub fn label(self) -> &'static str {
+        match self {
+            QueueOrdering::FifoWithinClass => "fifo",
+            QueueOrdering::EdfWithinClass => "edf",
         }
     }
 }
@@ -242,6 +281,8 @@ impl Job {
 pub struct JobQueue {
     next_id: u64,
     jobs: BTreeMap<JobId, Job>,
+    /// Within-class dispatch ordering (EDF by default).
+    pub ordering: QueueOrdering,
 }
 
 impl JobQueue {
@@ -283,21 +324,42 @@ impl JobQueue {
         id
     }
 
-    /// Every ready job in dispatch order: highest priority first, FIFO
-    /// (by id) within a class. Queued and Interrupted jobs are both
-    /// ready — every dispatch boundary is a checkpoint boundary, so
-    /// capacity always goes to the most important pending work. The
-    /// single source of dispatch ordering: the scheduler's capacity
-    /// matching and its safety valve both consume it, so a future
-    /// ordering change (e.g. EDF within a class) lands everywhere at
-    /// once.
+    /// Every ready job in dispatch order: highest priority first, then
+    /// the configured within-class ordering ([`QueueOrdering`]: EDF by
+    /// default, submission order under `fifo`). Queued and Interrupted
+    /// jobs are both ready — every dispatch boundary is a checkpoint
+    /// boundary, so capacity always goes to the most important pending
+    /// work. The single source of dispatch ordering: the scheduler's
+    /// capacity matching and its safety valve both consume it, so an
+    /// ordering change lands everywhere at once.
     pub fn ready_ids(&self) -> Vec<JobId> {
         let mut ready: Vec<&Job> = self
             .jobs
             .values()
             .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
             .collect();
-        ready.sort_by_key(|j| (std::cmp::Reverse(j.spec.priority), j.id));
+        match self.ordering {
+            QueueOrdering::FifoWithinClass => {
+                ready.sort_by_key(|j| (std::cmp::Reverse(j.spec.priority), j.id));
+            }
+            QueueOrdering::EdfWithinClass => {
+                // Deadlines are validated finite at admission, so the
+                // partial order over {finite deadlines} ∪ {+inf for
+                // none} is total; ties fall through to the job id
+                // (submission order).
+                ready.sort_by(|a, b| {
+                    b.spec
+                        .priority
+                        .cmp(&a.spec.priority)
+                        .then_with(|| {
+                            let da = a.spec.deadline_s.unwrap_or(f64::INFINITY);
+                            let db = b.spec.deadline_s.unwrap_or(f64::INFINITY);
+                            da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+                        })
+                        .then_with(|| a.id.cmp(&b.id))
+                });
+            }
+        }
         ready.into_iter().map(|j| j.id).collect()
     }
 
@@ -440,6 +502,7 @@ impl JobQueue {
         }
         let mut root = Json::obj();
         root.set("next_id", Json::num(self.next_id as f64));
+        root.set("ordering", Json::str(self.ordering.label()));
         root.set("jobs", Json::Arr(arr));
         root
     }
@@ -451,6 +514,12 @@ impl JobQueue {
         let mut q = JobQueue {
             next_id: j.req_u64("next_id")?,
             jobs: BTreeMap::new(),
+            // Files from before the ordering existed dispatch with the
+            // current default (EDF).
+            ordering: match j.opt_str("ordering") {
+                Some(o) => QueueOrdering::parse(&o)?,
+                None => QueueOrdering::default(),
+            },
         };
         for o in j
             .get("jobs")
@@ -553,6 +622,47 @@ mod tests {
         assert_eq!(q.pending(), 1);
         assert_eq!(q.running(), 1);
         assert!(!q.all_done());
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_within_a_class() {
+        let mut q = JobQueue::new();
+        assert_eq!(q.ordering, QueueOrdering::EdfWithinClass);
+        // Same class, submitted loose-deadline first.
+        let loose = q.submit(spec("loose", Priority::Normal), 0.0);
+        let none = q.submit(spec("none", Priority::Normal), 1.0);
+        let tight = q.submit(spec("tight", Priority::Normal), 2.0);
+        q.get_mut(loose).unwrap().spec.deadline_s = Some(9_000.0);
+        q.get_mut(tight).unwrap().spec.deadline_s = Some(1_000.0);
+        // Priority still dominates: a High job with no deadline beats
+        // every Normal deadline.
+        let hi = q.submit(spec("hi", Priority::High), 3.0);
+        assert_eq!(q.ready_ids(), vec![hi, tight, loose, none]);
+        // Equal deadlines tie-break by submission order.
+        q.get_mut(loose).unwrap().spec.deadline_s = Some(1_000.0);
+        assert_eq!(q.ready_ids(), vec![hi, loose, tight, none]);
+        // The PR 4 policy is still selectable.
+        q.ordering = QueueOrdering::FifoWithinClass;
+        assert_eq!(q.ready_ids(), vec![hi, loose, none, tight]);
+    }
+
+    #[test]
+    fn ordering_parses_and_roundtrips() {
+        assert_eq!(
+            QueueOrdering::parse("fifo").unwrap(),
+            QueueOrdering::FifoWithinClass
+        );
+        assert_eq!(
+            QueueOrdering::parse("edf").unwrap(),
+            QueueOrdering::EdfWithinClass
+        );
+        assert!(QueueOrdering::parse("lifo").is_err());
+        let mut q = JobQueue::new();
+        q.ordering = QueueOrdering::FifoWithinClass;
+        q.submit(spec("a", Priority::Normal), 0.0);
+        let wire = q.to_json().to_string_compact();
+        let back = JobQueue::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.ordering, QueueOrdering::FifoWithinClass);
     }
 
     #[test]

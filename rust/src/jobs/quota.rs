@@ -1,0 +1,244 @@
+//! Per-tenant governance quotas (`ec2quota`).
+//!
+//! The platform serves many Analysts from one shared fleet; without
+//! limits one tenant can queue unbounded work and starve everyone
+//! else. A [`TenantQuota`] caps three independent axes:
+//!
+//! * **clusters** — how many fleet clusters the tenant may occupy at
+//!   once (and how many analyst-created clusters it may own). The
+//!   scheduler's dispatch loop never places a tenant's slice past the
+//!   cap, and the autoscaler's demand picture clamps the tenant's
+//!   contribution so the fleet is never *grown* for work the tenant
+//!   could not run anyway.
+//! * **compute budget** — billed compute in *centihours* (hundredths
+//!   of an instance-hour); `admit` rejects new submissions once the
+//!   tenant's committed compute has consumed the budget.
+//! * **queued jobs** — how many jobs the tenant may have waiting;
+//!   `admit` rejects at submission, before anything is queued or any
+//!   fleet state is touched.
+//!
+//! Quotas live in a [`QuotaBook`] persisted beside `jobs.json`
+//! (`quotas.json` in the session directory). A tenant with no entry is
+//! unlimited; every limit is optional.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+
+/// One tenant's limits. `None` = unlimited on that axis.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Max clusters per pool (`-maxclusters`), enforced independently
+    /// on each: at most this many *fleet* clusters running the
+    /// tenant's slices at once, and at most this many analyst-created
+    /// clusters owned at once (`ec2createcluster -analyst`).
+    pub max_clusters: Option<usize>,
+    /// Compute budget in centihours — hundredths of a billed
+    /// instance-hour (`-maxcentihour`). 1 centihour = 36 virtual
+    /// seconds of committed compute.
+    pub max_centihours: Option<u64>,
+    /// Max jobs the tenant may have queued at once (`-maxqueued`).
+    pub max_queued: Option<usize>,
+}
+
+/// Virtual seconds per centihour (a centihour is 1/100 instance-hour).
+pub const SECONDS_PER_CENTIHOUR: f64 = 36.0;
+
+impl TenantQuota {
+    /// Is every axis unlimited (nothing worth persisting)?
+    pub fn is_unlimited(&self) -> bool {
+        self.max_clusters.is_none() && self.max_centihours.is_none() && self.max_queued.is_none()
+    }
+
+    /// One-line rendering used by `ec2quota`.
+    pub fn summary(&self) -> String {
+        fn show<T: std::fmt::Display>(v: &Option<T>) -> String {
+            match v {
+                Some(x) => x.to_string(),
+                None => "unlimited".to_string(),
+            }
+        }
+        format!(
+            "maxclusters {}, maxcentihour {}, maxqueued {}",
+            show(&self.max_clusters),
+            show(&self.max_centihours),
+            show(&self.max_queued)
+        )
+    }
+}
+
+/// Every tenant quota the platform enforces, keyed by analyst id.
+#[derive(Clone, Debug, Default)]
+pub struct QuotaBook {
+    quotas: BTreeMap<String, TenantQuota>,
+}
+
+impl QuotaBook {
+    /// An empty book: every tenant unlimited.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The quota for `analyst`, if one is set.
+    pub fn get(&self, analyst: &str) -> Option<&TenantQuota> {
+        self.quotas.get(analyst)
+    }
+
+    /// Set (or replace) a tenant's quota. A fully-unlimited quota is
+    /// equivalent to removing the entry.
+    pub fn set(&mut self, analyst: &str, quota: TenantQuota) {
+        if quota.is_unlimited() {
+            self.quotas.remove(analyst);
+        } else {
+            self.quotas.insert(analyst.to_string(), quota);
+        }
+    }
+
+    /// Remove a tenant's quota (back to unlimited).
+    pub fn remove(&mut self, analyst: &str) -> Option<TenantQuota> {
+        self.quotas.remove(analyst)
+    }
+
+    /// Is the book empty?
+    pub fn is_empty(&self) -> bool {
+        self.quotas.is_empty()
+    }
+
+    /// Human-readable listing, one tenant per line.
+    pub fn lines(&self) -> Vec<String> {
+        self.quotas
+            .iter()
+            .map(|(a, q)| format!("{:<20} {}", a, q.summary()))
+            .collect()
+    }
+
+    /// Serialise for `quotas.json`.
+    pub fn to_json(&self) -> Json {
+        let mut arr = Vec::new();
+        for (a, q) in &self.quotas {
+            let mut o = Json::obj();
+            o.set("analyst", Json::str(a));
+            o.set(
+                "max_clusters",
+                q.max_clusters.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+            );
+            o.set(
+                "max_centihours",
+                q.max_centihours.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+            );
+            o.set(
+                "max_queued",
+                q.max_queued.map(|v| Json::num(v as f64)).unwrap_or(Json::Null),
+            );
+            arr.push(o);
+        }
+        let mut root = Json::obj();
+        root.set("quotas", Json::Arr(arr));
+        root
+    }
+
+    /// Restore a book persisted by [`QuotaBook::to_json`]. A limit
+    /// that is present but not a non-negative whole number is an
+    /// **error**, not "unlimited": a malformed `quotas.json` must not
+    /// silently turn a governance cap off.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut book = QuotaBook::new();
+        for o in j
+            .get("quotas")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("quota book missing quotas array"))?
+        {
+            let analyst = o.req_str("analyst")?;
+            let limit = |key: &str| -> Result<Option<u64>> {
+                match o.get(key) {
+                    None | Some(Json::Null) => Ok(None),
+                    Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+                        anyhow!(
+                            "quota book: '{key}' for tenant '{analyst}' must be a \
+                             non-negative whole number"
+                        )
+                    }),
+                }
+            };
+            book.set(
+                &analyst,
+                TenantQuota {
+                    max_clusters: limit("max_clusters")?.map(|v| v as usize),
+                    max_centihours: limit("max_centihours")?,
+                    max_queued: limit("max_queued")?.map(|v| v as usize),
+                },
+            );
+        }
+        Ok(book)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn book_roundtrips_through_json() {
+        let mut book = QuotaBook::new();
+        book.set(
+            "alice",
+            TenantQuota {
+                max_clusters: Some(2),
+                max_centihours: Some(500),
+                max_queued: None,
+            },
+        );
+        book.set(
+            "bob",
+            TenantQuota {
+                max_clusters: None,
+                max_centihours: None,
+                max_queued: Some(0),
+            },
+        );
+        let wire = book.to_json().to_string_compact();
+        let back = QuotaBook::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.get("alice"), book.get("alice"));
+        assert_eq!(back.get("bob").unwrap().max_queued, Some(0));
+        assert!(back.get("carol").is_none());
+    }
+
+    #[test]
+    fn malformed_quota_values_fail_loudly() {
+        // A string or fractional limit must error, not load as
+        // unlimited — a corrupt quotas.json must not disable a cap.
+        let j = Json::parse(r#"{"quotas":[{"analyst":"alice","max_queued":"3"}]}"#).unwrap();
+        assert!(QuotaBook::from_json(&j).is_err());
+        let j = Json::parse(r#"{"quotas":[{"analyst":"alice","max_queued":1.5}]}"#).unwrap();
+        assert!(QuotaBook::from_json(&j).is_err());
+        let j = Json::parse(r#"{"quotas":[{"analyst":"alice","max_clusters":-2}]}"#).unwrap();
+        assert!(QuotaBook::from_json(&j).is_err());
+        // Null / absent limits still mean unlimited.
+        let j = Json::parse(
+            r#"{"quotas":[{"analyst":"alice","max_queued":null,"max_clusters":2}]}"#,
+        )
+        .unwrap();
+        let book = QuotaBook::from_json(&j).unwrap();
+        assert_eq!(book.get("alice").unwrap().max_clusters, Some(2));
+        assert_eq!(book.get("alice").unwrap().max_queued, None);
+        assert_eq!(book.get("alice").unwrap().max_centihours, None);
+    }
+
+    #[test]
+    fn unlimited_quota_clears_the_entry() {
+        let mut book = QuotaBook::new();
+        book.set("alice", TenantQuota::default());
+        assert!(book.is_empty());
+        book.set(
+            "alice",
+            TenantQuota {
+                max_queued: Some(3),
+                ..Default::default()
+            },
+        );
+        assert!(!book.is_empty());
+        assert!(book.lines()[0].contains("maxqueued 3"));
+        book.remove("alice");
+        assert!(book.get("alice").is_none());
+    }
+}

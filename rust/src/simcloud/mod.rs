@@ -42,7 +42,7 @@ pub use ec2::{
 };
 pub use faults::FaultPlan;
 pub use network::{Link, NetworkModel};
-pub use pricing::PriceForecast;
+pub use pricing::{Invoice, Ledger, LineItem, PriceForecast};
 pub use s3::{content_digest, S3Object, S3};
 pub use spot::SpotMarket;
 pub use timing::SimParams;

@@ -13,8 +13,10 @@
 //!
 //! Every line item carries the **analyst id** that was active on the
 //! ledger when the charge was booked (empty = platform/untagged), so
-//! the bill can be filtered per tenant; full per-tenant quotas and
-//! invoices are a later PR.
+//! the bill can be filtered per tenant, and [`Ledger::invoice_for`]
+//! folds a tenant's items into an itemised [`Invoice`] whose category
+//! totals reconcile *exactly* (centi-cent equality) with
+//! [`Ledger::total_centi_cents_for`].
 //!
 //! This module also hosts [`PriceForecast`], the *predictive* side of
 //! pricing: deterministic rolling-window statistics over the spot
@@ -23,6 +25,7 @@
 
 use super::network::Link;
 use super::spot::SpotMarket;
+use crate::util::json::Json;
 
 /// Deterministic spot-price forecast: rolling-window statistics over
 /// the market's seeded price path.
@@ -353,6 +356,138 @@ impl Ledger {
     pub fn total_dollars(&self) -> f64 {
         self.total_centi_cents() as f64 / 10_000.0
     }
+
+    /// Fold one tenant's line items into an itemised [`Invoice`]
+    /// (`ec2invoice`). Every item lands in **exactly one** category —
+    /// anything the detail patterns below do not recognise goes to
+    /// `other_cc` — so the invoice total reconciles exactly with
+    /// [`Ledger::total_centi_cents_for`], by construction. The
+    /// patterns match the detail strings the `bill_*` methods above
+    /// write; keep the two in sync.
+    pub fn invoice_for(&self, analyst: &str) -> Invoice {
+        let mut inv = Invoice {
+            analyst: analyst.to_string(),
+            ..Default::default()
+        };
+        for item in self.items.iter().filter(|i| i.analyst == analyst) {
+            inv.line_items += 1;
+            let d = item.detail.as_str();
+            let cc = item.centi_cents;
+            if d.contains("instance-hour(s)") {
+                inv.ondemand_instance_cc += cc; // bill_instance
+            } else if d.contains(" spot") {
+                inv.spot_instance_cc += cc; // bill_spot_instance
+            } else if d.starts_with("EBS ") {
+                inv.ebs_cc += cc; // bill_volume
+            } else if d.starts_with("snapshot ") {
+                inv.snapshot_cc += cc; // bill_snapshot_storage
+            } else if d.starts_with("S3 storage") {
+                inv.s3_storage_cc += cc; // bill_s3_storage
+            } else if d.starts_with("S3 ") && d.ends_with("request") {
+                inv.s3_request_cc += cc; // bill_s3_request
+            } else if d.starts_with("WAN transfer") {
+                inv.wan_transfer_cc += cc; // bill_data_transfer
+            } else {
+                inv.other_cc += cc;
+            }
+        }
+        inv
+    }
+}
+
+/// One tenant's itemised bill: the ledger's line items folded into
+/// billing categories (instance-hours split spot vs on-demand,
+/// EBS/snapshot/S3 GiB-hours, S3 requests, metered WAN transfer).
+/// Amounts are exact centi-cents; [`Invoice::total_centi_cents`] is
+/// the sum of every category and reconciles exactly with
+/// [`Ledger::total_centi_cents_for`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Invoice {
+    /// Tenant the invoice is for ("" = platform/untagged).
+    pub analyst: String,
+    /// On-demand instance-hours.
+    pub ondemand_instance_cc: u64,
+    /// Spot instance usage (per started hour at that hour's price).
+    pub spot_instance_cc: u64,
+    /// EBS volume GiB-hours.
+    pub ebs_cc: u64,
+    /// EBS snapshot (S3-backed) GiB-hours.
+    pub snapshot_cc: u64,
+    /// S3 API requests (PUT/GET/DEL).
+    pub s3_request_cc: u64,
+    /// S3 object storage GiB-hours.
+    pub s3_storage_cc: u64,
+    /// Metered WAN data transfer.
+    pub wan_transfer_cc: u64,
+    /// Line items no category pattern recognised.
+    pub other_cc: u64,
+    /// How many ledger line items the invoice folds.
+    pub line_items: usize,
+}
+
+impl Invoice {
+    /// Exact total in centi-cents (the sum of every category).
+    pub fn total_centi_cents(&self) -> u64 {
+        self.ondemand_instance_cc
+            + self.spot_instance_cc
+            + self.ebs_cc
+            + self.snapshot_cc
+            + self.s3_request_cc
+            + self.s3_storage_cc
+            + self.wan_transfer_cc
+            + self.other_cc
+    }
+
+    /// Human-readable rendering (`ec2invoice`).
+    pub fn lines(&self) -> Vec<String> {
+        fn row(label: &str, cc: u64) -> String {
+            format!("  {:<26} {:>12} cc  (${:.4})", label, cc, cc as f64 / 10_000.0)
+        }
+        let who = if self.analyst.is_empty() {
+            "(platform)"
+        } else {
+            self.analyst.as_str()
+        };
+        let mut out = vec![format!(
+            "invoice for tenant '{}' — {} line item(s)",
+            who, self.line_items
+        )];
+        out.push(row("on-demand instance-hours", self.ondemand_instance_cc));
+        out.push(row("spot instance usage", self.spot_instance_cc));
+        out.push(row("EBS GiB-hours", self.ebs_cc));
+        out.push(row("snapshot GiB-hours", self.snapshot_cc));
+        out.push(row("S3 requests", self.s3_request_cc));
+        out.push(row("S3 storage GiB-hours", self.s3_storage_cc));
+        out.push(row("WAN transfer", self.wan_transfer_cc));
+        if self.other_cc > 0 {
+            out.push(row("other", self.other_cc));
+        }
+        out.push(row("total", self.total_centi_cents()));
+        out
+    }
+
+    /// Machine-readable rendering (`ec2invoice -json`).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("analyst", Json::str(&self.analyst)),
+            ("line_items", Json::num(self.line_items as f64)),
+            (
+                "ondemand_instance_cc",
+                Json::num(self.ondemand_instance_cc as f64),
+            ),
+            ("spot_instance_cc", Json::num(self.spot_instance_cc as f64)),
+            ("ebs_cc", Json::num(self.ebs_cc as f64)),
+            ("snapshot_cc", Json::num(self.snapshot_cc as f64)),
+            ("s3_request_cc", Json::num(self.s3_request_cc as f64)),
+            ("s3_storage_cc", Json::num(self.s3_storage_cc as f64)),
+            ("wan_transfer_cc", Json::num(self.wan_transfer_cc as f64)),
+            ("other_cc", Json::num(self.other_cc as f64)),
+            (
+                "total_centi_cents",
+                Json::num(self.total_centi_cents() as f64),
+            ),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -453,6 +588,54 @@ mod tests {
                 + l.total_centi_cents_for("")
         );
         assert_eq!(l.analysts(), vec!["alice".to_string(), "bob".to_string()]);
+    }
+
+    #[test]
+    fn invoice_reconciles_exactly_and_categorises_every_item() {
+        let mut l = Ledger::new();
+        l.set_analyst("alice");
+        l.bill_instance("i-1", "m2.2xlarge", 90, 0.0, 3600.0); // 9000 cc
+        l.bill_spot_instance("i-2", "m2.2xlarge", 1234, true);
+        l.bill_volume("vol-1", 8.0, 0.0, 3600.0); // 8 cc
+        l.bill_snapshot_storage("snap-1", 4.0, 0.0, 3600.0); // 4 cc
+        l.bill_s3_request("s3://b/k", "PUT"); // 1 cc
+        l.bill_s3_storage("s3://b/k", 1024, 0.0, 3600.0); // 1 cc
+        l.bill_data_transfer("sync", 1024 * 1024 * 1024, Link::Wan); // 1200 cc
+        l.push_raw("legacy", "some unrecognised detail", 77);
+        l.set_analyst("bob");
+        l.bill_instance("i-3", "m1.large", 32, 0.0, 3600.0);
+        l.set_analyst("");
+        l.bill_volume("vol-2", 1.0, 0.0, 3600.0);
+
+        for tenant in ["alice", "bob", ""] {
+            let inv = l.invoice_for(tenant);
+            assert_eq!(
+                inv.total_centi_cents(),
+                l.total_centi_cents_for(tenant),
+                "invoice for '{tenant}' must reconcile exactly with the ledger"
+            );
+        }
+        let alice = l.invoice_for("alice");
+        assert_eq!(alice.ondemand_instance_cc, 9000);
+        assert_eq!(alice.spot_instance_cc, 1234);
+        assert_eq!(alice.ebs_cc, 8);
+        assert_eq!(alice.snapshot_cc, 4);
+        assert_eq!(alice.s3_request_cc, 1);
+        assert_eq!(alice.s3_storage_cc, 1);
+        assert_eq!(alice.wan_transfer_cc, 1200);
+        assert_eq!(alice.other_cc, 77, "unrecognised items must not be dropped");
+        assert_eq!(alice.line_items, 8);
+        // Rendering carries the exact total; JSON mirrors it.
+        let total = alice.total_centi_cents();
+        assert!(alice.lines().last().unwrap().contains(&total.to_string()));
+        assert_eq!(
+            alice.to_json().get("total_centi_cents").and_then(Json::as_u64),
+            Some(total)
+        );
+        // A tenant with no charges gets a clean zero invoice.
+        let ghost = l.invoice_for("carol");
+        assert_eq!(ghost.total_centi_cents(), 0);
+        assert_eq!(ghost.line_items, 0);
     }
 
     #[test]

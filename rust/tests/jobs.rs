@@ -8,7 +8,8 @@
 use p2rac::analytics::CatBondData;
 use p2rac::coordinator::{MockEngine, Placement, Session};
 use p2rac::jobs::{
-    files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority,
+    files_digest, AutoscalerConfig, JobQueue, JobScheduler, JobSpec, JobState, Priority,
+    TenantQuota,
 };
 use p2rac::simcloud::{PriceForecast, SimParams, SpotMarket};
 use p2rac::util::quickprop;
@@ -316,6 +317,253 @@ fn feasible_deadline_is_met_via_on_demand_fallback() {
         "expected an on-demand scale-up, got {:?}",
         js.autoscaler.events.iter().map(|e| &e.action).collect::<Vec<_>>()
     );
+}
+
+#[test]
+fn quota_zero_queued_jobs_rejects_at_submit() {
+    let mut s = session();
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: 2,
+        ..Default::default()
+    });
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_queued: Some(0),
+            ..Default::default()
+        },
+    );
+    let err = js
+        .admit(&s, job_specs()[0].clone(), false, "alice")
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("alice") && err.contains("queued-job quota") && err.contains("limit 0"),
+        "the error must name the tenant, the limit and the usage: {err}"
+    );
+    assert_eq!(js.queue.jobs().count(), 0, "a rejected job must not queue");
+    assert!(
+        js.fleet.is_empty() && s.cloud.live_instances().is_empty(),
+        "a quota rejection must never mutate fleet state"
+    );
+    // Other tenants are unaffected.
+    js.admit(&s, job_specs()[1].clone(), false, "bob").unwrap();
+    assert_eq!(js.queue.jobs().count(), 1);
+    // A zero-cluster quota likewise rejects at submit: the job could
+    // never dispatch, and a later drain must not hard-fail on it.
+    js.quotas.set(
+        "carol",
+        TenantQuota {
+            max_clusters: Some(0),
+            ..Default::default()
+        },
+    );
+    let err = js
+        .admit(&s, job_specs()[2].clone(), false, "carol")
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("carol") && err.contains("cluster quota is 0"),
+        "{err}"
+    );
+    assert_eq!(js.queue.jobs().count(), 1, "carol's job must not queue");
+}
+
+#[test]
+fn autoscaler_never_scales_a_tenant_past_its_cluster_quota() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: 4,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_clusters: Some(1),
+            ..Default::default()
+        },
+    );
+    // Four jobs from the capped tenant: without the quota the
+    // autoscaler would buy four clusters (queue-depth policy).
+    for i in [1usize, 3, 5, 7] {
+        js.admit(&s, job_specs()[i].clone(), false, "alice").unwrap();
+    }
+    js.run_until_idle(&mut s).unwrap();
+    for j in js.queue.jobs() {
+        assert_eq!(j.state, JobState::Completed, "capped work still completes");
+    }
+    // The demand clamp kept the fleet at the tenant's entitlement:
+    // exactly one cluster was ever created.
+    let scale_ups = js
+        .autoscaler
+        .events
+        .iter()
+        .filter(|e| e.action.contains("scale-up"))
+        .count();
+    assert_eq!(
+        scale_ups,
+        1,
+        "the fleet must never grow past the tenant quota; events: {:?}",
+        js.autoscaler.events.iter().map(|e| &e.action).collect::<Vec<_>>()
+    );
+    assert!(js.fleet.len() <= 1);
+    js.shutdown_fleet(&mut s).unwrap();
+}
+
+#[test]
+fn quota_compute_budget_rejects_once_exhausted() {
+    let mut s = session();
+    write_heavy_sweep(&mut s, "heavy");
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        ..Default::default()
+    });
+    // A zero budget rejects immediately, before any usage exists.
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_centihours: Some(0),
+            ..Default::default()
+        },
+    );
+    let err = js
+        .admit(&s, heavy_spec(None), false, "alice")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("compute budget"), "{err}");
+    // One centihour of budget (36 virtual seconds): the first job
+    // admits, runs (consuming far more), and the next submit bounces.
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_centihours: Some(1),
+            ..Default::default()
+        },
+    );
+    js.admit(&s, heavy_spec(None), false, "alice").unwrap();
+    js.run_until_idle(&mut s).unwrap();
+    let used: f64 = js.queue.jobs().map(|j| j.compute_s).sum();
+    assert!(
+        used > 36.0,
+        "the heavy sweep must consume more than one centihour, got {used}s"
+    );
+    let err = js
+        .admit(&s, heavy_spec(None), false, "alice")
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("alice") && err.contains("compute budget"),
+        "{err}"
+    );
+    // Tenants without a quota are unaffected.
+    js.admit(&s, heavy_spec(None), false, "bob").unwrap();
+}
+
+/// Satellite property: EDF-within-class ordering is a total order —
+/// priority dominates, deadlines sort non-decreasing within a class
+/// (no deadline = infinitely late), and ties break by submission
+/// order, so the ordering is stable.
+#[test]
+fn property_edf_ordering_is_stable_with_ties_by_submit_order() {
+    quickprop::check("EDF within class: sorted + stable", 200, |g| {
+        let mut q = JobQueue::new();
+        let n = g.usize(1..20);
+        for i in 0..n {
+            let priority = *g.pick(&[Priority::Low, Priority::Normal, Priority::High]);
+            // A small deadline alphabet so ties genuinely occur.
+            let deadline_s = if g.bool() {
+                None
+            } else {
+                Some(*g.pick(&[100.0, 200.0, 300.0]))
+            };
+            q.submit(
+                JobSpec {
+                    name: format!("j{i}"),
+                    projectdir: "p".into(),
+                    rscript: "sweep.json".into(),
+                    priority,
+                    placement: Placement::ByNode,
+                    deadline_s,
+                },
+                i as f64,
+            );
+        }
+        let order = q.ready_ids();
+        assert_eq!(order.len(), n);
+        for w in order.windows(2) {
+            let a = q.get(w[0]).unwrap();
+            let b = q.get(w[1]).unwrap();
+            assert!(
+                a.spec.priority >= b.spec.priority,
+                "priority must dominate the ordering"
+            );
+            if a.spec.priority == b.spec.priority {
+                let da = a.spec.deadline_s.unwrap_or(f64::INFINITY);
+                let db = b.spec.deadline_s.unwrap_or(f64::INFINITY);
+                assert!(da <= db, "deadlines must be non-decreasing within a class");
+                if da == db {
+                    assert!(a.id < b.id, "ties must break by submission order");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn invoice_totals_reconcile_with_the_ledger_per_tenant() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    // Two tenants; alice runs resident so her ledger trail spans every
+    // plane: instances, EBS, S3 requests/storage, snapshots and WAN.
+    js.admit(&s, job_specs()[0].clone(), true, "alice").unwrap();
+    js.admit(&s, job_specs()[1].clone(), false, "bob").unwrap();
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+
+    let ledger = &s.cloud.ledger;
+    let mut tenants = ledger.analysts();
+    assert!(tenants.contains(&"alice".to_string()) && tenants.contains(&"bob".to_string()));
+    tenants.push(String::new()); // the platform's own share
+    let mut sum: u64 = 0;
+    for t in &tenants {
+        let inv = ledger.invoice_for(t);
+        assert_eq!(
+            inv.total_centi_cents(),
+            ledger.total_centi_cents_for(t),
+            "invoice for tenant '{t}' must reconcile exactly (centi-cent equality)"
+        );
+        sum += inv.total_centi_cents();
+    }
+    assert_eq!(
+        sum,
+        ledger.total_centi_cents(),
+        "per-tenant invoices must partition the whole bill"
+    );
+    // The tenants' activity lands in real categories, never 'other'.
+    let alice = ledger.invoice_for("alice");
+    assert!(alice.wan_transfer_cc > 0, "project sync is metered WAN");
+    assert!(
+        alice.s3_request_cc > 0,
+        "resident checkpoints mirror to S3 under the tenant"
+    );
+    assert_eq!(alice.other_cc, 0, "every platform charge must be categorised");
 }
 
 #[test]
