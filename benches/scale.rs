@@ -1,0 +1,595 @@
+//! Scale bench (ISSUE 6): the discrete-event core against a large
+//! multi-tenant backlog, indexed paths vs honest replicas of the
+//! pre-refactor scan paths.
+//!
+//! Both modes run the *same* event-driven simulation over the real
+//! [`p2rac::jobs::JobQueue`] and [`p2rac::simcloud::SpotMarket`] — a
+//! synthetic `ec2genload` workload (diurnal arrivals, heavy-tailed
+//! sizes, skewed tenants) dispatched onto a mixed spot/on-demand
+//! fleet with market-driven reclaims. Only the *lookup structures*
+//! differ per mode:
+//!
+//! * **legacy** — next ready job by collect-and-sort over every job
+//!   (the old `ready_ids` shape), idle cluster by fleet walk, next
+//!   completion by slice-list walk, next spot reclaim by per-cluster
+//!   market scan;
+//! * **indexed** — `JobQueue::next_ready` off the ready index, idle
+//!   sets, a tombstoned completion heap, and `SpotDirectory` range
+//!   queries.
+//!
+//! Because the semantics are shared, both modes must produce the same
+//! dispatch sequence, bill and completion count — asserted on the
+//! reduced workload, recorded as `parity` in `BENCH_scale.json`.
+//! Demand probes every 256 events additionally check the queue's
+//! incremental per-tenant accounting against a full scan.
+//!
+//! The full workload (10k clusters, 1M-job backlog, one simulated
+//! day) is gated behind `P2RAC_SCALE_FULL=1` — CI runs the reduced
+//! workload. The legacy baseline for the full-scale speedup is
+//! measured at 20k jobs and scaled linearly down to the 1M backlog
+//! (legacy dispatch cost is Θ(total jobs) per event, and the true
+//! n·log n sort grows *faster* than linear, so the reported speedup
+//! is a lower bound).
+//!
+//! Run: `cargo bench --bench scale`
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+use std::time::Instant;
+
+use p2rac::bench_support::emit_bench_json;
+use p2rac::coordinator::Placement;
+use p2rac::jobs::genload::{generate, GenJob, GenLoadConfig};
+use p2rac::jobs::spot::SpotDirectory;
+use p2rac::jobs::{JobId, JobQueue, JobSpec, JobState, Priority};
+use p2rac::simcloud::SpotMarket;
+use p2rac::util::json::Json;
+
+/// Virtual seconds per work unit (every bench job is unit-rate).
+const UNIT_S: f64 = 60.0;
+/// Fleet instance type (90 cents/hour on demand).
+const ITYPE: &str = "m2.2xlarge";
+/// On-demand rate in centi-cents/hour.
+const OD_RATE_CENTI: u64 = 9000;
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Legacy,
+    Indexed,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Legacy => "legacy",
+            Mode::Indexed => "indexed",
+        }
+    }
+}
+
+/// FNV-1a over the little-endian bytes of `x`.
+fn fnv1a(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01B3);
+    }
+    h
+}
+
+/// Total-order bits of an f64 (mirror of the queue's key encoding).
+fn order_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Honest replica of the pre-index `ready_ids` head: walk every job,
+/// collect the ready ones, sort the whole vector, take the front.
+fn legacy_next_ready(q: &JobQueue) -> Option<JobId> {
+    let mut v: Vec<(u8, u64, u64)> = q
+        .jobs()
+        .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
+        .map(|j| {
+            let class = match j.spec.priority {
+                Priority::High => 0u8,
+                Priority::Normal => 1,
+                Priority::Low => 2,
+            };
+            (
+                class,
+                order_bits(j.spec.deadline_s.unwrap_or(f64::INFINITY)),
+                j.id.0,
+            )
+        })
+        .collect();
+    v.sort_unstable();
+    v.first().map(|k| JobId(k.2))
+}
+
+struct BenchCluster {
+    spot: bool,
+    bid: u64,
+    alive: bool,
+    busy: Option<u64>,
+}
+
+struct RunResult {
+    label: String,
+    mode: Mode,
+    jobs: usize,
+    clusters: usize,
+    tenants: usize,
+    sim_seconds: f64,
+    events: u64,
+    wall_s: f64,
+    completed: u64,
+    reclaims: u64,
+    evictions: u64,
+    billed_centi_cents: u64,
+    dispatch_digest: u64,
+    probes: Vec<(u64, u64, u64)>,
+    tenant_probes: Vec<Vec<(String, u64, u64)>>,
+    loads_match_scan: bool,
+}
+
+impl RunResult {
+    fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn wall_per_sim_day(&self) -> f64 {
+        self.wall_s * 86_400.0 / self.sim_seconds.max(1.0)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("label", Json::str(&self.label));
+        o.set("mode", Json::str(self.mode.label()));
+        o.set("jobs", Json::num(self.jobs as f64));
+        o.set("clusters", Json::num(self.clusters as f64));
+        o.set("tenants", Json::num(self.tenants as f64));
+        o.set("sim_seconds", Json::num(self.sim_seconds));
+        o.set("events", Json::num(self.events as f64));
+        o.set("wall_s", Json::num(self.wall_s));
+        o.set("events_per_sec", Json::num(self.events_per_sec()));
+        o.set("wall_clock_per_sim_day_s", Json::num(self.wall_per_sim_day()));
+        o.set("completed", Json::num(self.completed as f64));
+        o.set("reclaims", Json::num(self.reclaims as f64));
+        o.set("evictions", Json::num(self.evictions as f64));
+        o.set("billed_centi_cents", Json::num(self.billed_centi_cents as f64));
+        o.set("dispatch_digest", Json::str(format!("{:016x}", self.dispatch_digest)));
+        o.set("loads_match_scan", Json::Bool(self.loads_match_scan));
+        o
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "{:<22} {:>8} jobs {:>6} clusters  {:>10} events  {:>8.3}s wall  {:>12.0} ev/s  \
+             digest {:016x}",
+            self.label,
+            self.jobs,
+            self.clusters,
+            self.events,
+            self.wall_s,
+            self.events_per_sec(),
+            self.dispatch_digest,
+        )
+    }
+}
+
+/// One full simulation of `arrivals` over `n_clusters` under `mode`.
+/// `probe_every` > 0 snapshots the demand picture by O(jobs) full scan
+/// at that event cadence — the parity instrument for the reduced
+/// legacy/indexed pair. The timing-only runs pass 0: an O(jobs) scan
+/// every few hundred events would dominate the 1M-job measurement.
+fn run(
+    label: &str,
+    mode: Mode,
+    arrivals: &[GenJob],
+    n_clusters: usize,
+    tenants: usize,
+    probe_every: u64,
+) -> RunResult {
+    let market = SpotMarket::default();
+    let mut queue = JobQueue::new();
+    // 60% spot with staggered bids (low bids churn on price jitter,
+    // high bids only fall to spikes), 40% on-demand ballast so the
+    // backlog always drains.
+    let names: Vec<String> = (0..n_clusters).map(|i| format!("fc{i}")).collect();
+    let mut fleet: Vec<BenchCluster> = (0..n_clusters)
+        .map(|i| {
+            let spot = i % 5 < 3;
+            BenchCluster {
+                spot,
+                bid: if spot { 2_250 + (i as u64 % 8) * 965 } else { 0 },
+                alive: true,
+                busy: None,
+            }
+        })
+        .collect();
+    let mut dir = SpotDirectory::default();
+    let mut name_pos: BTreeMap<String, usize> = BTreeMap::new();
+    if mode == Mode::Indexed {
+        for (i, c) in fleet.iter().enumerate() {
+            if c.spot {
+                dir.insert(&names[i], ITYPE, c.bid, 0.0);
+            }
+            name_pos.insert(names[i].clone(), i);
+        }
+    }
+    let mut idle: BTreeSet<usize> = (0..n_clusters).collect();
+    let mut slices: BTreeMap<u64, (usize, JobId, f64, f64)> = BTreeMap::new();
+    let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut remaining: BTreeMap<JobId, f64> = BTreeMap::new();
+    let (mut events, mut completions, mut reclaims, mut evictions) = (0u64, 0u64, 0u64, 0u64);
+    let mut billed = 0u64;
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    let mut probes: Vec<(u64, u64, u64)> = Vec::new();
+    let mut tenant_probes: Vec<Vec<(String, u64, u64)>> = Vec::new();
+    let mut loads_ok = true;
+    let mut next_probe = if probe_every > 0 { probe_every } else { u64::MAX };
+    let mut ai = 0usize;
+    let mut now = 0.0f64;
+    let wall = Instant::now();
+    loop {
+        // Dispatch ready work onto idle capacity.
+        loop {
+            let slot = match mode {
+                Mode::Indexed => idle.iter().next().copied(),
+                Mode::Legacy => fleet.iter().position(|c| c.alive && c.busy.is_none()),
+            };
+            let Some(slot) = slot else { break };
+            let jid = match mode {
+                Mode::Indexed => queue.next_ready(),
+                Mode::Legacy => legacy_next_ready(&queue),
+            };
+            let Some(jid) = jid else { break };
+            let end = now + remaining[&jid];
+            {
+                let j = queue.get_mut(jid).expect("dispatched job exists");
+                j.state = JobState::Running;
+                if j.started_at_s.is_none() {
+                    j.started_at_s = Some(now);
+                }
+            }
+            seq += 1;
+            slices.insert(seq, (slot, jid, now, end));
+            fleet[slot].busy = Some(seq);
+            if mode == Mode::Indexed {
+                idle.remove(&slot);
+                heap.push(Reverse((order_bits(end), seq)));
+            }
+            digest = fnv1a(fnv1a(fnv1a(digest, jid.0), slot as u64), now.to_bits());
+            events += 1;
+        }
+        // Next completion (seq tie-break matches the heap's).
+        let next_done: Option<(u64, f64)> = match mode {
+            Mode::Indexed => loop {
+                match heap.peek().copied() {
+                    Some(Reverse((_, s))) => {
+                        if let Some(&(_, _, _, end)) = slices.get(&s) {
+                            break Some((s, end));
+                        }
+                        heap.pop();
+                    }
+                    None => break None,
+                }
+            },
+            Mode::Legacy => {
+                let mut best: Option<(u64, f64)> = None;
+                for (&s, &(_, _, _, end)) in &slices {
+                    let better = match best {
+                        Some((_, e)) => end < e,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((s, end));
+                    }
+                }
+                best
+            }
+        };
+        let t_arr = arrivals.get(ai).map(|g| g.arrival_s);
+        let t_next = match (t_arr, next_done) {
+            (None, None) => break,
+            (Some(a), None) => a,
+            (None, Some((_, e))) => e,
+            (Some(a), Some((_, e))) => {
+                if e <= a {
+                    e
+                } else {
+                    a
+                }
+            }
+        };
+        // Spot reclaims strictly inside (now, t_next] pre-empt the
+        // next queue event; every out-bid cluster at the boundary goes.
+        let reclaim_t = match mode {
+            Mode::Indexed => dir.earliest_reclaim(&market, now, t_next).map(|(_, t)| t),
+            Mode::Legacy => {
+                let mut best: Option<f64> = None;
+                for c in &fleet {
+                    if !c.alive || !c.spot {
+                        continue;
+                    }
+                    if let Some(t) = market.first_interruption(ITYPE, c.bid, now, t_next) {
+                        let better = match best {
+                            Some(b) => t < b,
+                            None => true,
+                        };
+                        if better {
+                            best = Some(t);
+                        }
+                    }
+                }
+                best
+            }
+        };
+        if let Some(t_r) = reclaim_t {
+            now = t_r;
+            let hour = SpotMarket::hour_index(t_r);
+            let mut victims: Vec<usize> = match mode {
+                Mode::Indexed => dir
+                    .reclaimed_at_hour(&market, hour)
+                    .iter()
+                    .map(|n| name_pos[n])
+                    .collect(),
+                Mode::Legacy => fleet
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.alive && c.spot && market.interrupts_at(ITYPE, c.bid, hour))
+                    .map(|(i, _)| i)
+                    .collect(),
+            };
+            victims.sort_unstable();
+            for slot in victims {
+                let bid = fleet[slot].bid;
+                fleet[slot].alive = false;
+                if mode == Mode::Indexed {
+                    dir.remove(&names[slot]);
+                    idle.remove(&slot);
+                }
+                if let Some(s) = fleet[slot].busy.take() {
+                    let (_, jid, start, end) = slices.remove(&s).expect("busy slice exists");
+                    billed += market.cost_centi_cents(ITYPE, start, t_r, true, bid);
+                    remaining.insert(jid, (end - t_r).max(0.0));
+                    let j = queue.get_mut(jid).expect("evicted job exists");
+                    j.state = JobState::Interrupted;
+                    j.interruptions += 1;
+                    evictions += 1;
+                }
+                reclaims += 1;
+                events += 1;
+            }
+        } else {
+            now = t_next;
+            let take_completion = match (next_done, t_arr) {
+                (Some((_, e)), Some(a)) => e <= a,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_completion {
+                let (s, _) = next_done.expect("completion chosen");
+                let (slot, jid, start, end) = slices.remove(&s).expect("completing slice");
+                fleet[slot].busy = None;
+                if mode == Mode::Indexed {
+                    idle.insert(slot);
+                }
+                billed += if fleet[slot].spot {
+                    market.cost_centi_cents(ITYPE, start, end, false, fleet[slot].bid)
+                } else {
+                    OD_RATE_CENTI * (((end - start) / 3600.0).ceil().max(1.0) as u64)
+                };
+                remaining.remove(&jid);
+                let j = queue.get_mut(jid).expect("completing job exists");
+                j.state = JobState::Completed;
+                j.units_done = j.units_total;
+                j.progress = 1.0;
+                j.completed_at_s = Some(end);
+                j.compute_s += end - start;
+                completions += 1;
+                events += 1;
+            } else {
+                let g = &arrivals[ai];
+                ai += 1;
+                let id = queue.submit(
+                    JobSpec {
+                        name: format!("s{ai}"),
+                        projectdir: "bench".to_string(),
+                        rscript: "sweep.json".to_string(),
+                        priority: g.priority,
+                        placement: Placement::ByNode,
+                        deadline_s: g.deadline_s,
+                    },
+                    g.arrival_s,
+                );
+                let j = queue.get_mut(id).expect("submitted job exists");
+                j.analyst = g.tenant.clone();
+                j.units_total = g.units as usize;
+                remaining.insert(id, g.units as f64 * UNIT_S);
+                events += 1;
+            }
+        }
+        // Demand probe: every ~`probe_every` events snapshot the
+        // queue-wide and per-tenant load picture by full scan; in
+        // indexed mode also cross-check the incremental accounting
+        // against that scan.
+        if events >= next_probe {
+            next_probe += probe_every;
+            let mut per: BTreeMap<String, (u64, u64, u64)> = BTreeMap::new();
+            let (mut wait_n, mut run_n) = (0u64, 0u64);
+            for j in queue.jobs() {
+                let e = per.entry(j.analyst.clone()).or_insert((0, 0, 0));
+                e.2 += 1;
+                match j.state {
+                    JobState::Queued | JobState::Interrupted => {
+                        e.0 += 1;
+                        wait_n += 1;
+                    }
+                    JobState::Running => {
+                        e.1 += 1;
+                        run_n += 1;
+                    }
+                    _ => {}
+                }
+            }
+            probes.push((next_probe - probe_every, wait_n, run_n));
+            tenant_probes.push(per.iter().map(|(k, v)| (k.clone(), v.0, v.1)).collect());
+            if mode == Mode::Indexed {
+                if queue.pending() as u64 != wait_n || queue.running() as u64 != run_n {
+                    loads_ok = false;
+                }
+                for (analyst, load) in queue.tenant_loads() {
+                    let &(w, r, n) = per.get(&analyst).unwrap_or(&(0, 0, 0));
+                    if load.waiting as u64 != w
+                        || load.running as u64 != r
+                        || load.jobs as u64 != n
+                    {
+                        loads_ok = false;
+                    }
+                }
+            }
+        }
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    assert!(
+        queue.all_done() || fleet.iter().all(|c| !c.alive || c.spot),
+        "{label}: backlog stranded with live on-demand capacity"
+    );
+    RunResult {
+        label: label.to_string(),
+        mode,
+        jobs: arrivals.len(),
+        clusters: n_clusters,
+        tenants,
+        sim_seconds: now,
+        events,
+        wall_s,
+        completed: completions,
+        reclaims,
+        evictions,
+        billed_centi_cents: billed,
+        dispatch_digest: digest,
+        probes,
+        tenant_probes,
+        loads_match_scan: loads_ok,
+    }
+}
+
+fn workload(jobs: usize, tenants: usize) -> GenLoadConfig {
+    GenLoadConfig {
+        jobs,
+        tenants,
+        ..GenLoadConfig::default()
+    }
+}
+
+fn main() {
+    println!("=== discrete-event core at scale: indexed vs scan paths ===\n");
+    let full = std::env::var("P2RAC_SCALE_FULL").map(|v| v == "1").unwrap_or(false);
+
+    // Reduced workload: both paths, full parity checks (this is what
+    // the CI smoke job runs).
+    let reduced_cfg = workload(4_000, 48);
+    let reduced_jobs = generate(&reduced_cfg);
+    let legacy_red = run("reduced/legacy", Mode::Legacy, &reduced_jobs, 64, 48, 256);
+    println!("  {}", legacy_red.row());
+    let indexed_red = run("reduced/indexed", Mode::Indexed, &reduced_jobs, 64, 48, 256);
+    println!("  {}", indexed_red.row());
+
+    let digest_eq = legacy_red.dispatch_digest == indexed_red.dispatch_digest;
+    let billed_eq = legacy_red.billed_centi_cents == indexed_red.billed_centi_cents;
+    let completed_eq = legacy_red.completed == indexed_red.completed;
+    let probes_eq = legacy_red.probes == indexed_red.probes
+        && legacy_red.tenant_probes == indexed_red.tenant_probes;
+    assert!(
+        digest_eq,
+        "dispatch order diverged: legacy {:016x} vs indexed {:016x}",
+        legacy_red.dispatch_digest, indexed_red.dispatch_digest
+    );
+    assert!(
+        billed_eq,
+        "bills diverged: legacy {} vs indexed {} centi-cents",
+        legacy_red.billed_centi_cents, indexed_red.billed_centi_cents
+    );
+    assert!(completed_eq, "completion counts diverged");
+    assert!(probes_eq, "demand probes diverged between modes");
+    assert!(
+        indexed_red.loads_match_scan,
+        "incremental tenant accounting diverged from the full scan"
+    );
+    assert_eq!(
+        indexed_red.completed as usize, indexed_red.jobs,
+        "reduced workload must drain completely"
+    );
+    let speedup_reduced = indexed_red.events_per_sec() / legacy_red.events_per_sec().max(1e-9);
+    println!(
+        "\n  -> parity holds (digest/bill/completions/probes identical); \
+         indexed is {speedup_reduced:.1}x the scan path at this size\n"
+    );
+
+    let mut workload_rows = vec![legacy_red.to_json(), indexed_red.to_json()];
+    let mut speedup_vs_legacy = None;
+    let mut legacy_full_eps = None;
+    if full {
+        // Legacy baseline at 20k jobs; its per-event cost is Θ(total
+        // jobs), so scaling the measured rate down by 20k/1M gives a
+        // conservative (optimistic-for-legacy) 1M-job baseline.
+        println!("  running full workload (this takes a while)...");
+        let base_cfg = workload(20_000, 100);
+        let base_jobs = generate(&base_cfg);
+        // probe_every = 0: the timing runs measure the schedulers, not
+        // the probe instrument.
+        let legacy_base = run("baseline/legacy", Mode::Legacy, &base_jobs, 256, 100, 0);
+        println!("  {}", legacy_base.row());
+        let full_cfg = workload(1_000_000, 400);
+        let full_jobs = generate(&full_cfg);
+        let indexed_full = run("full/indexed", Mode::Indexed, &full_jobs, 10_000, 400, 0);
+        println!("  {}", indexed_full.row());
+        let extrapolated =
+            legacy_base.events_per_sec() * (legacy_base.jobs as f64 / indexed_full.jobs as f64);
+        let s = indexed_full.events_per_sec() / extrapolated.max(1e-9);
+        println!(
+            "\n  -> full day, 1M-job backlog: {:.0} ev/s, {:.1}s wall per simulated day; \
+             {s:.0}x the extrapolated scan-path baseline",
+            indexed_full.events_per_sec(),
+            indexed_full.wall_per_sim_day(),
+        );
+        workload_rows.push(legacy_base.to_json());
+        workload_rows.push(indexed_full.to_json());
+        legacy_full_eps = Some(extrapolated);
+        speedup_vs_legacy = Some(s);
+    } else {
+        println!("  (set P2RAC_SCALE_FULL=1 for the 10k-cluster / 1M-job workload)");
+    }
+
+    let mut report = Json::obj();
+    report.set("workloads", Json::Arr(workload_rows));
+    let mut parity = Json::obj();
+    parity.set("dispatch_digest_equal", Json::Bool(digest_eq));
+    parity.set("billed_equal", Json::Bool(billed_eq));
+    parity.set("completions_equal", Json::Bool(completed_eq));
+    parity.set("demand_probes_equal", Json::Bool(probes_eq));
+    parity.set(
+        "tenant_loads_match_scan",
+        Json::Bool(indexed_red.loads_match_scan),
+    );
+    report.set("parity", parity);
+    report.set("speedup_reduced", Json::num(speedup_reduced));
+    report.set(
+        "speedup_vs_legacy",
+        speedup_vs_legacy.map(Json::num).unwrap_or(Json::Null),
+    );
+    report.set(
+        "legacy_full_eps_extrapolated",
+        legacy_full_eps.map(Json::num).unwrap_or(Json::Null),
+    );
+    match emit_bench_json("scale", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_scale.json: {e}"),
+    }
+    println!("\nscale bench complete.");
+}

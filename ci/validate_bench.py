@@ -136,9 +136,83 @@ def validate_storage(report):
     )
 
 
+def validate_scale(report):
+    """BENCH_scale.json: legacy-vs-indexed scheduler-core comparison.
+
+    The reduced workload always runs both paths; parity between them
+    (dispatch digest, bill, completions, demand probes) must hold and
+    the indexed path must clear throughput floors. The full 1M-job
+    workload is optional (P2RAC_SCALE_FULL=1) — when its rows are
+    present, the extrapolated-baseline speedup must clear 50x.
+    """
+    rows = _rows(report, "workloads")
+    require(len(rows) >= 2, "workloads must carry the reduced legacy+indexed pair")
+    by_label = {r["label"]: r for r in rows}
+    require(
+        {"reduced/legacy", "reduced/indexed"} <= set(by_label),
+        f"missing reduced rows: {sorted(by_label)}",
+    )
+    for r in rows:
+        require(r["events"] > 0 and r["wall_s"] > 0, f"{r['label']}: empty run")
+        require(
+            r["events_per_sec"] > 0 and r["wall_clock_per_sim_day_s"] > 0,
+            f"{r['label']}: implausible rates",
+        )
+    legacy = by_label["reduced/legacy"]
+    indexed = by_label["reduced/indexed"]
+    require(
+        legacy["dispatch_digest"] == indexed["dispatch_digest"],
+        "dispatch order diverged between legacy and indexed paths",
+    )
+    require(
+        legacy["billed_centi_cents"] == indexed["billed_centi_cents"],
+        "billed centi-cents diverged between legacy and indexed paths",
+    )
+    require(
+        legacy["completed"] == indexed["completed"] == indexed["jobs"],
+        "reduced workload must drain identically on both paths",
+    )
+    parity = report.get("parity")
+    require(isinstance(parity, dict), "'parity' must be an object")
+    for key in (
+        "dispatch_digest_equal",
+        "billed_equal",
+        "completions_equal",
+        "demand_probes_equal",
+        "tenant_loads_match_scan",
+    ):
+        require(parity.get(key) is True, f"parity check '{key}' did not hold")
+    require(
+        indexed["events_per_sec"] >= 20_000,
+        f"indexed reduced throughput too low: {indexed['events_per_sec']:.0f} ev/s",
+    )
+    require(
+        report["speedup_reduced"] >= 2,
+        f"indexed path must beat the scan path 2x even at reduced scale "
+        f"(got {report['speedup_reduced']:.2f}x)",
+    )
+    if "full/indexed" in by_label:
+        full = by_label["full/indexed"]
+        require(full["jobs"] >= 1_000_000, "full row must carry the 1M-job backlog")
+        require(full["clusters"] >= 10_000, "full row must carry the 10k-cluster fleet")
+        require(
+            "baseline/legacy" in by_label,
+            "full run must record its measured legacy baseline",
+        )
+        require(
+            report["legacy_full_eps_extrapolated"] > 0,
+            "full run must record the extrapolated legacy baseline rate",
+        )
+        require(
+            report["speedup_vs_legacy"] >= 50,
+            f"full-scale speedup floor is 50x (got {report['speedup_vs_legacy']:.1f}x)",
+        )
+
+
 SCHEMAS = {
     "BENCH_micro.json": validate_micro,
     "BENCH_queue.json": validate_queue,
+    "BENCH_scale.json": validate_scale,
     "BENCH_storage.json": validate_storage,
 }
 

@@ -13,6 +13,7 @@ use crate::jobs::{
 use crate::simcloud::SpanCategory;
 use crate::util::argparse::{CommandSpec, ParsedArgs};
 use crate::util::humanfmt;
+use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
 /// All commands with their specs, paper-accurate syntax.
@@ -133,7 +134,8 @@ pub fn registry() -> Vec<CommandSpec> {
         CommandSpec::new("ec2lsobjects", "list the storage plane's objects with content digests")
             .value_arg("bucket", "bucket to list (default: all buckets)"),
         CommandSpec::new("ec2jobstatus", "show one job (or every job) in the queue")
-            .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)"),
+            .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)")
+            .switch_arg("json", "emit machine-readable JSON instead of text"),
         CommandSpec::new("ec2quota", "set, show or clear per-tenant governance quotas")
             .value_arg("analyst", "tenant id the quota applies to (omit to list all quotas)")
             .value_arg(
@@ -148,7 +150,13 @@ pub fn registry() -> Vec<CommandSpec> {
             .switch_arg("json", "emit the invoice as JSON instead of text"),
         CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
             .switch_arg("drain", "run the scheduler until every job completes")
-            .switch_arg("shutdown", "terminate the fleet and bill its usage"),
+            .switch_arg("shutdown", "terminate the fleet and bill its usage")
+            .switch_arg("json", "emit queue depth and per-tenant load as JSON"),
+        CommandSpec::new("ec2genload", "submit a synthetic multi-tenant workload to the queue")
+            .value_arg("jobs", "number of jobs to generate (default 200)")
+            .value_arg("tenants", "number of distinct tenants (default 8)")
+            .value_arg("seed", "workload seed (default 7)")
+            .switch_arg("json", "emit a summary of the generated workload as JSON"),
         CommandSpec::new("ec2autoscale", "configure the elastic fleet autoscaler")
             .value_arg("min", "minimum fleet clusters")
             .value_arg("max", "maximum fleet clusters")
@@ -232,7 +240,7 @@ fn run_command(cmd: &str, p: &ParsedArgs) -> Result<String> {
         let mut js = load_jobs()?;
         js.prune_fleet(&s);
         let out = apply_with_jobs(&mut s, &mut js, cmd, p)?;
-        save_jobs(&js)?;
+        save_jobs(&mut js)?;
         save_session(&s)?;
         return Ok(out);
     }
@@ -248,6 +256,7 @@ fn is_jobs_command(cmd: &str) -> bool {
     matches!(
         cmd,
         "ec2submitjob"
+            | "ec2genload"
             | "ec2jobstatus"
             | "ec2jobqueue"
             | "ec2autoscale"
@@ -283,7 +292,7 @@ fn run_batch(file: &str) -> Result<String> {
         out.push_str(&apply_with_jobs(&mut s, &mut js, &cmd, &parsed)?);
         out.push('\n');
     }
-    save_jobs(&js)?;
+    save_jobs(&mut js)?;
     save_session(&s)?;
     Ok(out)
 }
@@ -665,6 +674,13 @@ pub fn apply_with_jobs(
                     .queue
                     .get(JobId(n))
                     .ok_or_else(|| anyhow!("no such job 'job-{n}'"))?;
+                if p.switch("json") {
+                    let mut o = js.queue.job_json(JobId(n)).unwrap();
+                    if let Some(line) = js.deadline_status(s, j) {
+                        o.set("deadline_status", Json::str(line));
+                    }
+                    return Ok(o.to_string_pretty());
+                }
                 let deadline = js
                     .deadline_status(s, j)
                     .map(|line| format!("\n{line}"))
@@ -682,6 +698,21 @@ pub fn apply_with_jobs(
                 ))
             }
             None => {
+                if p.switch("json") {
+                    let mut o = Json::obj();
+                    o.set(
+                        "jobs",
+                        Json::Arr(
+                            js.queue
+                                .jobs()
+                                .filter_map(|j| js.queue.job_json(j.id))
+                                .collect(),
+                        ),
+                    );
+                    o.set("pending", Json::num(js.queue.pending() as f64));
+                    o.set("running", Json::num(js.queue.running() as f64));
+                    return Ok(o.to_string_pretty());
+                }
                 let mut out = js.status();
                 out.extend(js.slo_lines(s));
                 Ok(out.join("\n"))
@@ -689,16 +720,112 @@ pub fn apply_with_jobs(
         },
         "ec2jobqueue" => {
             let mut out = Vec::new();
+            let mut released: Vec<String> = Vec::new();
             if p.switch("drain") {
                 js.run_until_idle(s)?;
                 out.push("queue drained".to_string());
             }
             if p.switch("shutdown") {
-                let released = js.shutdown_fleet(s)?;
+                released = js.shutdown_fleet(s)?;
                 out.push(format!("fleet released: [{}]", released.join(", ")));
+            }
+            if p.switch("json") {
+                let mut o = Json::obj();
+                o.set("pending", Json::num(js.queue.pending() as f64));
+                o.set("running", Json::num(js.queue.running() as f64));
+                o.set("all_done", Json::Bool(js.queue.all_done()));
+                o.set("ordering", Json::str(js.queue.ordering.label()));
+                o.set("fleet_clusters", Json::num(js.fleet.len() as f64));
+                o.set("drained", Json::Bool(p.switch("drain")));
+                o.set("released", Json::arr_str(released));
+                let tenants: Vec<Json> = js
+                    .queue
+                    .tenant_loads()
+                    .into_iter()
+                    .map(|(analyst, load)| {
+                        Json::from_pairs(vec![
+                            ("analyst", Json::str(analyst)),
+                            ("waiting", Json::num(load.waiting as f64)),
+                            ("running", Json::num(load.running as f64)),
+                            ("jobs", Json::num(load.jobs as f64)),
+                        ])
+                    })
+                    .collect();
+                o.set("tenants", Json::Arr(tenants));
+                return Ok(o.to_string_pretty());
             }
             out.extend(js.status());
             Ok(out.join("\n"))
+        }
+        "ec2genload" => {
+            let cfg = crate::jobs::genload::GenLoadConfig {
+                jobs: p.usize_value("jobs")?.unwrap_or(200),
+                tenants: p.usize_value("tenants")?.unwrap_or(8).max(1),
+                seed: match p.value("seed") {
+                    Some(v) => v
+                        .parse::<u64>()
+                        .map_err(|_| anyhow!("-seed expects a number, got '{v}'"))?,
+                    None => 7,
+                },
+                ..Default::default()
+            };
+            let generated = crate::jobs::genload::generate(&cfg);
+            let now = s.cloud.clock.now_s();
+            let mut projects: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
+            let (mut submitted, mut rejected) = (0usize, 0usize);
+            for (i, g) in generated.iter().enumerate() {
+                // The engine derives a job's work units from its sweep
+                // config: n_jobs = units * tile. Cap per-job units so a
+                // heavy-tailed outlier cannot stall an interactive CLI
+                // session (the scale bench runs uncapped workloads).
+                let units = g.units.min(64);
+                let dir = format!("genload/u{units}");
+                if projects.insert(units) {
+                    let n_jobs = units as usize * crate::analytics::script::RUST_SWEEP_TILE;
+                    s.analyst.write(
+                        &format!("{dir}/sweep.json"),
+                        format!(
+                            r#"{{"type":"mc_sweep","n_jobs":{n_jobs},"seed":{}}}"#,
+                            cfg.seed
+                        )
+                        .into_bytes(),
+                    );
+                }
+                let spec = JobSpec {
+                    name: format!("gen-{}-{i}", cfg.seed),
+                    projectdir: dir,
+                    rscript: "sweep.json".to_string(),
+                    priority: g.priority,
+                    placement: Placement::ByNode,
+                    // Arrivals collapse to "now"; deadlines keep their
+                    // slack relative to the generated arrival.
+                    deadline_s: g.deadline_s.map(|d| now + (d - g.arrival_s)),
+                };
+                match js.admit(s, spec, false, &g.tenant) {
+                    Ok(_) => submitted += 1,
+                    Err(_) => rejected += 1,
+                }
+            }
+            if p.switch("json") {
+                let mut o = Json::obj();
+                o.set("generated", Json::num(generated.len() as f64));
+                o.set("submitted", Json::num(submitted as f64));
+                o.set("rejected", Json::num(rejected as f64));
+                o.set("tenants", Json::num(cfg.tenants as f64));
+                o.set("seed", Json::num(cfg.seed as f64));
+                o.set("pending", Json::num(js.queue.pending() as f64));
+                return Ok(o.to_string_pretty());
+            }
+            Ok(format!(
+                "generated {} jobs across {} tenants (seed {}): {} submitted, {} rejected \
+                 by quota, {} pending",
+                generated.len(),
+                cfg.tenants,
+                cfg.seed,
+                submitted,
+                rejected,
+                js.queue.pending()
+            ))
         }
         "ec2autoscale" => {
             let cfg = &mut js.autoscaler.cfg;

@@ -77,26 +77,19 @@ pub fn save_session(session: &Session) -> Result<()> {
         .with_context(|| format!("writing {}", session_path().display()))
 }
 
-fn jobs_path() -> PathBuf {
-    session_dir().join("jobs.json")
-}
-
 fn quotas_path() -> PathBuf {
     session_dir().join("quotas.json")
 }
 
 /// Load the persisted job-queue/autoscaler state (plus the tenant
-/// quota book persisted beside it), or a fresh default.
+/// quota book persisted beside it), or a fresh default. Reads the
+/// snapshot + append log via [`crate::jobs::persist`]; legacy
+/// `jobs.json`-only session directories load unchanged.
 pub fn load_jobs() -> Result<JobScheduler> {
-    let path = jobs_path();
-    let mut js = if path.exists() {
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("corrupt jobs state: {e}"))?;
-        JobScheduler::from_json(&j)?
-    } else {
-        JobScheduler::new(AutoscalerConfig::default())
-    };
+    let dir = session_dir();
+    let mut js = crate::jobs::persist::load(&dir)
+        .with_context(|| format!("loading jobs state from {}", dir.display()))?
+        .unwrap_or_else(|| JobScheduler::new(AutoscalerConfig::default()));
     let qpath = quotas_path();
     if qpath.exists() {
         let text = std::fs::read_to_string(&qpath)
@@ -108,11 +101,13 @@ pub fn load_jobs() -> Result<JobScheduler> {
 }
 
 /// Persist the job-queue/autoscaler state and the tenant quota book.
-pub fn save_jobs(js: &JobScheduler) -> Result<()> {
+/// Jobs persist through the append log (O(mutated jobs) per command,
+/// periodically compacted); the small quota book still rewrites.
+pub fn save_jobs(js: &mut JobScheduler) -> Result<()> {
     let dir = session_dir();
     std::fs::create_dir_all(&dir)?;
-    std::fs::write(jobs_path(), js.to_json().to_string_compact())
-        .with_context(|| format!("writing {}", jobs_path().display()))?;
+    crate::jobs::persist::save(&dir, js)
+        .with_context(|| format!("saving jobs state to {}", dir.display()))?;
     std::fs::write(quotas_path(), js.quotas.to_json().to_string_compact())
         .with_context(|| format!("writing {}", quotas_path().display()))
 }

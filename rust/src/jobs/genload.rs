@@ -1,0 +1,203 @@
+//! Synthetic workload generation (`ec2genload`).
+//!
+//! The scale bench and the `ec2genload` CLI command need a backlog
+//! that looks like real analyst traffic rather than eight hand-placed
+//! jobs: arrivals follow a **diurnal** curve (quiet overnight, peak
+//! mid-day), job sizes are **heavy-tailed** (most runs are small, a
+//! few are enormous — the RCOMPSs task-trace shape), and tenants are
+//! **skewed** (a handful of heavy hitters, a long tail of occasional
+//! users). Everything is a pure function of the seed via
+//! [`Xoshiro256`], so a workload is reproducible across runs, hosts
+//! and — crucially for the legacy-vs-indexed bench — across the two
+//! scheduler paths being compared.
+
+use crate::util::prng::Xoshiro256;
+
+use super::queue::Priority;
+
+/// Parameters of a synthetic workload.
+#[derive(Clone, Debug)]
+pub struct GenLoadConfig {
+    /// Number of jobs to generate.
+    pub jobs: usize,
+    /// Number of distinct tenants (`t0`, `t1`, …).
+    pub tenants: usize,
+    /// PRNG seed — the workload's identity.
+    pub seed: u64,
+    /// Arrival horizon in virtual seconds (default: one day).
+    pub horizon_s: f64,
+    /// Mean job size in work units (Pareto-distributed around this).
+    pub mean_units: f64,
+    /// Pareto tail index; lower = heavier tail. Must be > 1 so the
+    /// mean exists.
+    pub tail_alpha: f64,
+    /// Fraction of jobs carrying a deadline (drives EDF + on-demand).
+    pub deadline_fraction: f64,
+    /// Peak-to-trough ratio of the diurnal arrival-rate curve.
+    pub peak_to_trough: f64,
+}
+
+impl Default for GenLoadConfig {
+    fn default() -> Self {
+        Self {
+            jobs: 1_000,
+            tenants: 40,
+            seed: 0x06E1_0AD0,
+            horizon_s: 86_400.0,
+            mean_units: 6.0,
+            tail_alpha: 1.6,
+            deadline_fraction: 0.2,
+            peak_to_trough: 4.0,
+        }
+    }
+}
+
+/// One generated job, ready to feed `JobScheduler::admit` (or the
+/// bench's mirror of it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenJob {
+    /// Arrival time in virtual seconds from the start of the horizon.
+    pub arrival_s: f64,
+    /// Owning tenant (`t<k>`).
+    pub tenant: String,
+    /// Queue priority class.
+    pub priority: Priority,
+    /// Job size in work units.
+    pub units: u64,
+    /// Absolute deadline in virtual seconds, if any.
+    pub deadline_s: Option<f64>,
+}
+
+/// Diurnal arrival-rate multiplier at time `t`: 1.0 at the trough
+/// (t=0, midnight), `peak` at mid-horizon. Shape only — the absolute
+/// rate is fixed by `cfg.jobs` over the horizon.
+fn diurnal_rate(t: f64, horizon_s: f64, peak: f64) -> f64 {
+    1.0 + (peak - 1.0) * 0.5 * (1.0 - (2.0 * std::f64::consts::PI * t / horizon_s).cos())
+}
+
+/// Generate `cfg.jobs` jobs, sorted by arrival time (stable, so equal
+/// arrivals keep generation order). Pure in `cfg` — same config, same
+/// workload, bit for bit.
+pub fn generate(cfg: &GenLoadConfig) -> Vec<GenJob> {
+    let mut rng = Xoshiro256::seed_from_u64(cfg.seed);
+    let tenants = cfg.tenants.max(1);
+    let alpha = cfg.tail_alpha.max(1.01);
+    let peak = cfg.peak_to_trough.max(1.0);
+    // Pareto scale chosen so the distribution's mean is `mean_units`.
+    let x_m = (cfg.mean_units * (alpha - 1.0) / alpha).max(1.0);
+    let mut out = Vec::with_capacity(cfg.jobs);
+    for _ in 0..cfg.jobs {
+        // Thinning: uniform candidate times accepted with probability
+        // rate(t)/peak reproduce the diurnal intensity. The trough
+        // rate is 1, so acceptance never drops below 1/peak and the
+        // loop terminates.
+        let arrival_s = loop {
+            let t = rng.range_f64(0.0, cfg.horizon_s);
+            if rng.next_f64() * peak <= diurnal_rate(t, cfg.horizon_s, peak) {
+                break t;
+            }
+        };
+        // u² skews tenant mass toward low indices: tenant 0 is the
+        // heaviest hitter, the tail barely shows up.
+        let u = rng.next_f64();
+        let k = ((u * u) * tenants as f64) as usize;
+        let tenant = format!("t{}", k.min(tenants - 1));
+        let units = (rng.next_pareto(x_m, alpha).round() as u64).clamp(1, 100_000);
+        let p = rng.next_f64();
+        let priority = if p < 0.10 {
+            Priority::High
+        } else if p < 0.80 {
+            Priority::Normal
+        } else {
+            Priority::Low
+        };
+        let deadline_s = if rng.next_f64() < cfg.deadline_fraction {
+            Some(arrival_s + units as f64 * rng.range_f64(60.0, 600.0))
+        } else {
+            None
+        };
+        out.push(GenJob {
+            arrival_s,
+            tenant,
+            priority,
+            units,
+            deadline_s,
+        });
+    }
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_workload() {
+        let cfg = GenLoadConfig::default();
+        assert_eq!(generate(&cfg), generate(&cfg));
+        let other = GenLoadConfig {
+            seed: cfg.seed + 1,
+            ..cfg.clone()
+        };
+        assert_ne!(generate(&cfg), generate(&other));
+    }
+
+    #[test]
+    fn jobs_respect_config_bounds() {
+        let cfg = GenLoadConfig {
+            jobs: 2_000,
+            tenants: 10,
+            ..GenLoadConfig::default()
+        };
+        let jobs = generate(&cfg);
+        assert_eq!(jobs.len(), 2_000);
+        let mut last = 0.0f64;
+        for j in &jobs {
+            assert!(j.arrival_s >= last && j.arrival_s < cfg.horizon_s);
+            last = j.arrival_s;
+            assert!((1..=100_000).contains(&j.units));
+            let k: usize = j.tenant[1..].parse().unwrap();
+            assert!(k < cfg.tenants);
+            if let Some(d) = j.deadline_s {
+                assert!(d > j.arrival_s);
+            }
+        }
+        let with_deadline = jobs.iter().filter(|j| j.deadline_s.is_some()).count();
+        // 20% nominal, generously bounded.
+        assert!(with_deadline > 200 && with_deadline < 700, "{with_deadline}");
+    }
+
+    #[test]
+    fn arrivals_are_diurnal_and_tenants_skewed() {
+        let cfg = GenLoadConfig {
+            jobs: 20_000,
+            ..GenLoadConfig::default()
+        };
+        let jobs = generate(&cfg);
+        // Mid-day quarter vs overnight quarter of the horizon.
+        let quarter = cfg.horizon_s / 4.0;
+        let peak_n = jobs
+            .iter()
+            .filter(|j| j.arrival_s >= 1.5 * quarter && j.arrival_s < 2.5 * quarter)
+            .count();
+        let trough_n = jobs
+            .iter()
+            .filter(|j| j.arrival_s < 0.5 * quarter || j.arrival_s >= 3.5 * quarter)
+            .count();
+        assert!(
+            peak_n as f64 > 2.0 * trough_n as f64,
+            "peak {peak_n} vs trough {trough_n}"
+        );
+        // Tenant 0 out-submits the median tenant by a wide margin.
+        let t0 = jobs.iter().filter(|j| j.tenant == "t0").count();
+        assert!(
+            t0 as f64 > 3.0 * (cfg.jobs as f64 / cfg.tenants as f64),
+            "t0 submitted {t0}"
+        );
+        // Sizes are heavy-tailed: the max dwarfs the mean.
+        let mean = jobs.iter().map(|j| j.units).sum::<u64>() as f64 / jobs.len() as f64;
+        let max = jobs.iter().map(|j| j.units).max().unwrap();
+        assert!(max as f64 > 10.0 * mean, "max {max} vs mean {mean}");
+    }
+}

@@ -46,6 +46,8 @@
 
 pub mod autoscaler;
 pub mod checkpoint;
+pub mod genload;
+pub mod persist;
 pub mod queue;
 pub mod quota;
 pub mod spot;
@@ -57,7 +59,7 @@ pub use checkpoint::{
     commit_resident_checkpoint, restore_resident_checkpoint, script_units, JobWork, StepOutcome,
     CHECKPOINT_BUCKET,
 };
-pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority, QueueOrdering};
+pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority, QueueOrdering, TenantLoad};
 pub use quota::{QuotaBook, TenantQuota, SECONDS_PER_CENTIHOUR};
 
 use crate::analytics::cost::{self, CatoptCost, SweepCost};
@@ -72,7 +74,8 @@ use crate::simcloud::{instance_type, Link, SpanCategory, SpotMarket};
 use crate::util::humanfmt;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::fmt;
 
 /// Fractional headroom the deadline decision demands over the
@@ -269,7 +272,30 @@ pub struct JobScheduler {
     /// checkpoint cadence. Smaller = less work lost per interruption,
     /// more checkpoint shipping.
     pub slice_units: usize,
-    slices: Vec<SliceEnd>,
+    /// In-flight slices, slab-addressed by dispatch sequence number.
+    live_slices: BTreeMap<u64, SliceEnd>,
+    /// Next slice sequence number (never reused within a run).
+    slice_seq: u64,
+    /// Min-heap of `(f64_order_bits(at_s), seq)` completion events.
+    /// Interruptions remove from the slab only; dead heap entries are
+    /// lazily discarded at peek/pop (classic tombstone DES heap).
+    slice_heap: BinaryHeap<Reverse<(u64, u64)>>,
+    /// Slice sequence number per busy cluster name.
+    slice_by_cluster: BTreeMap<String, u64>,
+    /// Fleet slot by cluster name.
+    fleet_pos: BTreeMap<String, usize>,
+    /// Idle fleet slots holding spot capacity (ascending slot order =
+    /// the legacy first-idle scan order).
+    idle_spot: BTreeSet<usize>,
+    /// Idle fleet slots holding on-demand capacity.
+    idle_od: BTreeSet<usize>,
+    /// Busy-cluster count per tenant (cluster-quota check without a
+    /// fleet walk).
+    tenant_busy: BTreeMap<String, usize>,
+    /// On-demand clusters in the fleet (busy or idle).
+    fleet_od_count: usize,
+    /// Spot clusters in the fleet (busy or idle).
+    fleet_spot_count: usize,
     scanned_to: f64,
     /// Spot interruptions delivered to running slices.
     pub interruptions_delivered: usize,
@@ -296,7 +322,16 @@ impl JobScheduler {
             autoscaler: Autoscaler::new(cfg),
             fleet: Vec::new(),
             slice_units: 2,
-            slices: Vec::new(),
+            live_slices: BTreeMap::new(),
+            slice_seq: 0,
+            slice_heap: BinaryHeap::new(),
+            slice_by_cluster: BTreeMap::new(),
+            fleet_pos: BTreeMap::new(),
+            idle_spot: BTreeSet::new(),
+            idle_od: BTreeSet::new(),
+            tenant_busy: BTreeMap::new(),
+            fleet_od_count: 0,
+            fleet_spot_count: 0,
             scanned_to: 0.0,
             interruptions_delivered: 0,
             unit_s_prior: None,
@@ -524,6 +559,119 @@ impl JobScheduler {
                 }
             }
         }
+        self.reindex_fleet();
+    }
+
+    // ------------------------------------------ event & fleet indexes
+
+    /// Rebuild every fleet-derived index from `self.fleet`. Called
+    /// whenever slot positions may have shifted (reconcile, reclaim's
+    /// `retain`, prune, shutdown); steady-state dispatch/complete paths
+    /// update the indexes incrementally instead.
+    fn reindex_fleet(&mut self) {
+        self.fleet_pos.clear();
+        self.idle_spot.clear();
+        self.idle_od.clear();
+        self.tenant_busy.clear();
+        self.fleet_od_count = 0;
+        self.fleet_spot_count = 0;
+        for (i, c) in self.fleet.iter().enumerate() {
+            self.fleet_pos.insert(c.name.clone(), i);
+            if c.spot {
+                self.fleet_spot_count += 1;
+            } else {
+                self.fleet_od_count += 1;
+            }
+            match c.running {
+                None => {
+                    if c.spot {
+                        self.idle_spot.insert(i);
+                    } else {
+                        self.idle_od.insert(i);
+                    }
+                }
+                Some(jid) => {
+                    if let Some(j) = self.queue.get(jid) {
+                        *self.tenant_busy.entry(j.analyst.clone()).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Schedule a slice-completion event.
+    fn push_slice(&mut self, ev: SliceEnd) {
+        let seq = self.slice_seq;
+        self.slice_seq += 1;
+        self.slice_heap
+            .push(Reverse((queue::f64_order_bits(ev.at_s), seq)));
+        self.slice_by_cluster.insert(ev.cluster.clone(), seq);
+        self.live_slices.insert(seq, ev);
+    }
+
+    /// Completion time of the earliest live slice event, discarding
+    /// heap tombstones on the way.
+    fn peek_earliest_slice_at(&mut self) -> Option<f64> {
+        while let Some(Reverse((_, seq))) = self.slice_heap.peek().copied() {
+            if let Some(ev) = self.live_slices.get(&seq) {
+                return Some(ev.at_s);
+            }
+            self.slice_heap.pop();
+        }
+        None
+    }
+
+    /// Pop the earliest live slice event (skipping tombstones).
+    fn pop_earliest_slice(&mut self) -> Option<SliceEnd> {
+        while let Some(Reverse((_, seq))) = self.slice_heap.pop() {
+            if let Some(ev) = self.live_slices.remove(&seq) {
+                self.slice_by_cluster.remove(&ev.cluster);
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    /// Remove and return the in-flight slice on `cname`, if any; its
+    /// heap entry becomes a tombstone.
+    fn take_slice_of_cluster(&mut self, cname: &str) -> Option<SliceEnd> {
+        let seq = self.slice_by_cluster.remove(cname)?;
+        self.live_slices.remove(&seq)
+    }
+
+    /// First idle slot of the requested purchase model, in slot order.
+    fn first_idle_of_kind(&self, spot: bool) -> Option<usize> {
+        let set = if spot { &self.idle_spot } else { &self.idle_od };
+        set.iter().next().copied()
+    }
+
+    /// First idle slot of any kind, in slot order (the legacy
+    /// `fleet.iter().position(running.is_none())`).
+    fn first_idle_slot(&self) -> Option<usize> {
+        match (
+            self.idle_spot.iter().next().copied(),
+            self.idle_od.iter().next().copied(),
+        ) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        }
+    }
+
+    /// Would [`Autoscaler::reconcile_demand`] provably do nothing for
+    /// this demand picture? True when the fleet is already at the
+    /// desired size (no scale-down, no scale-up), the policy is not
+    /// `Elastic` (whose resize block runs regardless of fleet size),
+    /// and — under spot — the on-demand floor is already met (no
+    /// conversion loop). Lets the drain loop skip the reconcile call
+    /// (and the fleet reindex after it) on the hot path.
+    fn reconcile_is_noop(&self, d: &FleetDemand) -> bool {
+        let desired = self.autoscaler.desired_clusters_for(d);
+        self.fleet.len() == desired
+            && self.autoscaler.cfg.policy != ScalePolicy::Elastic
+            && (!self.autoscaler.cfg.spot
+                || self.fleet_od_count >= d.ondemand_clusters.min(desired))
     }
 
     /// Drain the queue: autoscale, dispatch, and process slice events
@@ -532,17 +680,24 @@ impl JobScheduler {
     /// [`JobScheduler::shutdown_fleet`] to release and bill it).
     pub fn run_until_idle(&mut self, s: &mut Session) -> Result<()> {
         self.scanned_to = self.scanned_to.max(s.cloud.clock.now_s());
+        // CLI entries and tests may have touched fleet/queue state
+        // since the indexes last matched; one rebuild at the door.
+        self.reindex_fleet();
         loop {
             let pending = self.queue.pending();
-            if pending == 0 && self.slices.is_empty() {
+            if pending == 0 && self.live_slices.is_empty() {
                 break;
             }
             let demand = self.demand(s);
-            self.autoscaler
-                .reconcile_demand(s, &mut self.fleet, &demand)?;
+            if !self.reconcile_is_noop(&demand) {
+                self.autoscaler
+                    .reconcile_demand(s, &mut self.fleet, &demand)?;
+                // Reconcile may add/remove/convert slots: rebuild.
+                self.reindex_fleet();
+            }
             self.dispatch_ready(s)?;
 
-            if self.slices.is_empty() {
+            if self.live_slices.is_empty() {
                 if self.queue.pending() > 0 {
                     // Safety valve: a deadline job may have declined
                     // spot-only capacity while waiting for on-demand,
@@ -552,16 +707,26 @@ impl JobScheduler {
                     // cluster quota is never dispatchable here (with
                     // nothing in flight, only a zero-cluster quota can
                     // be at its cap — the valve must not override it).
-                    let startable = self.queue.ready_ids().into_iter().find(|id| {
-                        self.queue
-                            .get(*id)
-                            .map(|j| !self.tenant_at_cluster_cap(&j.analyst))
-                            .unwrap_or(false)
-                    });
-                    if let (Some(slot), Some(jid)) = (
-                        self.fleet.iter().position(|c| c.running.is_none()),
-                        startable,
-                    ) {
+                    // Walked via the per-tenant index so a capped
+                    // tenant's whole backlog is skipped at once.
+                    let mut excluded: BTreeSet<String> = BTreeSet::new();
+                    let mut after = None;
+                    let mut startable = None;
+                    while let Some(id) = self.queue.next_ready_excluding(after, &excluded) {
+                        let analyst = self
+                            .queue
+                            .get(id)
+                            .map(|j| j.analyst.clone())
+                            .unwrap_or_default();
+                        if self.tenant_at_cluster_cap(&analyst) {
+                            excluded.insert(analyst);
+                            after = Some(id);
+                            continue;
+                        }
+                        startable = Some(id);
+                        break;
+                    }
+                    if let (Some(slot), Some(jid)) = (self.first_idle_slot(), startable) {
                         self.try_start(s, jid, slot)?;
                         continue;
                     }
@@ -576,31 +741,35 @@ impl JobScheduler {
                 continue; // dispatch failed the remaining jobs
             }
 
-            // Earliest slice-completion event.
-            let (idx, at) = self
-                .slices
-                .iter()
-                .enumerate()
-                .min_by(|a, b| a.1.at_s.partial_cmp(&b.1.at_s).unwrap())
-                .map(|(i, e)| (i, e.at_s))
-                .unwrap();
+            // Earliest slice-completion event, off the event heap.
+            let at = self.peek_earliest_slice_at().expect("live slices checked");
             let now = s.cloud.clock.now_s();
             let horizon = at.max(now);
 
             // Any spot interruption in the gap outranks the event.
             // Idle fleet clusters are scanned alongside busy ones: the
             // provider reclaims capacity, not slices, so idle spot
-            // capacity disappears too.
-            let busy: Vec<String> = self.slices.iter().map(|e| e.cluster.clone()).collect();
-            let idle: Vec<String> = self
-                .fleet
-                .iter()
-                .filter(|c| c.running.is_none())
-                .map(|c| c.name.clone())
-                .collect();
-            if let Some((cname, t_int)) =
+            // capacity disappears too. A fleet with no spot capacity
+            // at all skips the scan — nothing is reclaimable, and
+            // armed fault-plan interruptions are not consumed against
+            // an all-on-demand fleet either way.
+            let interruption = if self.fleet_spot_count > 0 {
+                let busy: Vec<String> = self
+                    .live_slices
+                    .values()
+                    .map(|e| e.cluster.clone())
+                    .collect();
+                let idle: Vec<String> = self
+                    .idle_spot
+                    .iter()
+                    .chain(self.idle_od.iter())
+                    .map(|&i| self.fleet[i].name.clone())
+                    .collect();
                 spot::next_interruption(s, &busy, &idle, self.scanned_to, horizon)
-            {
+            } else {
+                None
+            };
+            if let Some((cname, t_int)) = interruption {
                 let now = s.cloud.clock.now_s();
                 if t_int > now {
                     s.cloud.clock.advance(t_int - now);
@@ -617,7 +786,7 @@ impl JobScheduler {
             if at > now {
                 s.cloud.clock.advance(at - now);
             }
-            let ev = self.slices.swap_remove(idx);
+            let ev = self.pop_earliest_slice().expect("live slices checked");
             self.complete_slice(s, ev)?;
         }
         Ok(())
@@ -626,7 +795,7 @@ impl JobScheduler {
     /// Terminate every fleet cluster (bills their usage). Refuses with
     /// slices in flight.
     pub fn shutdown_fleet(&mut self, s: &mut Session) -> Result<Vec<String>> {
-        if !self.slices.is_empty() {
+        if !self.live_slices.is_empty() {
             bail!("cannot shut down the fleet with slices in flight");
         }
         let mut released = Vec::new();
@@ -634,6 +803,7 @@ impl JobScheduler {
             s.terminate_cluster(Some(&c.name), true)?;
             released.push(c.name);
         }
+        self.reindex_fleet();
         Ok(released)
     }
 
@@ -827,54 +997,67 @@ impl JobScheduler {
     /// the capped tenant can never use.
     fn demand(&self, s: &Session) -> FleetDemand {
         let target = self.autoscaler.cfg.work_target_s.max(1.0);
-        #[derive(Default)]
-        struct TenantDemand {
-            waiting: usize,
-            running: usize,
-            est_s: f64,
-            ondemand: usize,
-        }
-        let mut per: BTreeMap<&str, TenantDemand> = BTreeMap::new();
-        for j in self.queue.jobs() {
+        // On-demand pressure first: only a deadline job can prefer
+        // on-demand capacity (`needs_ondemand` is false without one),
+        // so the cost/risk evaluation walks the queue's deadline-active
+        // index, never the whole job table.
+        let mut od_per: BTreeMap<String, usize> = BTreeMap::new();
+        for id in self.queue.deadline_active_ids() {
+            let Some(j) = self.queue.get(id) else {
+                continue;
+            };
             let waiting = matches!(j.state, JobState::Queued | JobState::Interrupted);
             if !waiting && j.state != JobState::Running {
                 continue;
             }
-            let acc = per.entry(j.analyst.as_str()).or_default();
-            if waiting {
-                acc.waiting += 1;
-            } else {
-                acc.running += 1;
+            if !self.needs_ondemand(s, j) {
+                continue;
             }
-            acc.est_s += j.estimate_remaining_s(self.unit_s_prior).unwrap_or(target);
-            if self.needs_ondemand(s, j) {
-                let occupies_ondemand = j.state == JobState::Running
-                    && j.assigned.as_deref().is_some_and(|cname| {
-                        self.fleet.iter().any(|c| c.name == cname && !c.spot)
-                    });
-                if waiting || occupies_ondemand {
-                    acc.ondemand += 1;
-                }
+            let occupies_ondemand = j.state == JobState::Running
+                && j.assigned.as_deref().is_some_and(|cname| {
+                    self.fleet_pos
+                        .get(cname)
+                        .is_some_and(|&i| !self.fleet[i].spot)
+                });
+            if waiting || occupies_ondemand {
+                *od_per.entry(j.analyst.clone()).or_insert(0) += 1;
             }
         }
+        // Everything else folds over the queue's per-tenant running
+        // sums — O(tenants), not O(jobs). The estimate mirrors
+        // `estimate_remaining_s(prior).unwrap_or(target)` per job:
+        // own-rate products are summed incrementally, unsized jobs
+        // claim a target window each, and sized-but-rateless jobs
+        // multiply by the scheduler's prior here (it changes without
+        // queue mutations, so it cannot be baked into the index).
         let mut pending = 0;
         let mut running = 0;
         let mut est_total = 0.0;
         let mut ondemand_clusters = 0;
-        for (&analyst, acc) in &per {
-            match self.quotas.get(analyst).and_then(|q| q.max_clusters) {
+        for (analyst, load) in self.queue.tenant_loads() {
+            if load.waiting == 0 && load.running == 0 {
+                continue;
+            }
+            let est_s = load.rate_est_s.max(0.0)
+                + load.target_jobs as f64 * target
+                + match self.unit_s_prior {
+                    Some(p) => p * load.noown_rem_units as f64,
+                    None => load.noown_jobs as f64 * target,
+                };
+            let od = od_per.get(&analyst).copied().unwrap_or(0);
+            match self.quotas.get(&analyst).and_then(|q| q.max_clusters) {
                 None => {
-                    pending += acc.waiting;
-                    running += acc.running;
-                    est_total += acc.est_s;
-                    ondemand_clusters += acc.ondemand;
+                    pending += load.waiting;
+                    running += load.running;
+                    est_total += est_s;
+                    ondemand_clusters += od;
                 }
                 Some(cap) => {
-                    let r = acc.running.min(cap);
-                    pending += acc.waiting.min(cap.saturating_sub(r));
+                    let r = load.running.min(cap);
+                    pending += load.waiting.min(cap.saturating_sub(r));
                     running += r;
-                    est_total += acc.est_s.min(cap as f64 * target);
-                    ondemand_clusters += acc.ondemand.min(cap);
+                    est_total += est_s.min(cap as f64 * target);
+                    ondemand_clusters += od.min(cap);
                 }
             }
         }
@@ -949,17 +1132,9 @@ impl JobScheduler {
     }
 
     /// How many fleet clusters are currently running a slice of
-    /// `analyst`'s jobs.
+    /// `analyst`'s jobs (O(log tenants) off the busy index).
     fn tenant_clusters_in_use(&self, analyst: &str) -> usize {
-        self.fleet
-            .iter()
-            .filter(|c| {
-                c.running
-                    .and_then(|id| self.queue.get(id))
-                    .map(|j| j.analyst == analyst)
-                    .unwrap_or(false)
-            })
-            .count()
+        self.tenant_busy.get(analyst).copied().unwrap_or(0)
     }
 
     /// Is `analyst` at its `-maxclusters` quota right now (no quota =
@@ -981,87 +1156,91 @@ impl JobScheduler {
     /// skipped — its jobs stay queued until one of its slices
     /// completes.
     fn dispatch_ready(&mut self, s: &mut Session) -> Result<()> {
-        // Ready jobs in the queue's dispatch order, each with its
-        // capacity preference and tenant — computed once per dispatch
-        // round: placing a slice only shrinks this list and the idle
-        // set (the one clock movement a placement can cause, a
-        // resident job's EBS rehydration, is far inside the decision's
-        // safety margin).
-        let mut ready: Vec<(JobId, bool, String)> = self
-            .queue
-            .ready_ids()
-            .into_iter()
-            .map(|id| {
-                let j = self.queue.get(id).expect("ready job exists");
-                (id, self.needs_ondemand(s, j), j.analyst.clone())
-            })
-            .collect();
+        // One cursor walk over the ready index instead of a collected
+        // snapshot: `after` advances past candidates left waiting for
+        // on-demand capacity, `excluded` accumulates tenants at their
+        // cluster cap (a cap only tightens within a round, so skipping
+        // their whole backlog via the per-tenant index is safe), and a
+        // placement resets the cursor to the head — the legacy
+        // re-walk, since freed preferences never loosen mid-round but
+        // fallback conditions can.
+        let mut after: Option<JobId> = None;
+        let mut excluded: BTreeSet<String> = BTreeSet::new();
+        let mut at_risk_cache: Option<bool> = None;
         loop {
-            if ready.is_empty() {
+            if self.idle_spot.is_empty() && self.idle_od.is_empty() {
                 break;
             }
-            let idle: Vec<usize> = self
-                .fleet
-                .iter()
-                .enumerate()
-                .filter(|(_, c)| c.running.is_none())
-                .map(|(i, _)| i)
-                .collect();
-            if idle.is_empty() {
-                break;
-            }
-            let any_at_risk_waiting = ready
-                .iter()
-                .any(|(_, od, a)| *od && !self.tenant_at_cluster_cap(a));
-            let mut pick: Option<(usize, usize)> = None;
-            for (pos, (_, needs_od, analyst)) in ready.iter().enumerate() {
-                if self.tenant_at_cluster_cap(analyst) {
-                    continue;
-                }
-                let slot = if *needs_od {
-                    self.idle_of_kind(&idle, false).or_else(|| {
-                        // No idle on-demand cluster and no way for the
-                        // autoscaler to produce one: take what exists
-                        // rather than stall the queue.
-                        if self.ondemand_may_appear() {
-                            None
-                        } else {
-                            idle.first().copied()
-                        }
-                    })
-                } else {
-                    // A relaxed job falls back to an idle on-demand
-                    // cluster only when no at-risk job is queued for
-                    // it — otherwise a higher-priority relaxed job
-                    // would consume exactly the capacity the deadline
-                    // quota reserved (the at-risk job takes the slot
-                    // later this same loop, so declining cannot
-                    // stall).
-                    self.idle_of_kind(&idle, true).or_else(|| {
-                        if any_at_risk_waiting {
-                            None
-                        } else {
-                            idle.first().copied()
-                        }
-                    })
-                };
-                if let Some(slot) = slot {
-                    pick = Some((pos, slot));
-                    break;
-                }
-            }
-            let Some((pos, slot)) = pick else {
+            let Some(jid) = self.queue.next_ready_excluding(after, &excluded) else {
                 break; // everyone ready is waiting for on-demand capacity
             };
-            let (jid, _, _) = ready.remove(pos);
-            self.try_start(s, jid, slot)?;
+            let (needs_od, analyst) = {
+                let j = self.queue.get(jid).expect("ready job exists");
+                (self.needs_ondemand(s, j), j.analyst.clone())
+            };
+            if self.tenant_at_cluster_cap(&analyst) {
+                excluded.insert(analyst);
+                after = Some(jid);
+                continue;
+            }
+            let slot = if needs_od {
+                self.first_idle_of_kind(false).or_else(|| {
+                    // No idle on-demand cluster and no way for the
+                    // autoscaler to produce one: take what exists
+                    // rather than stall the queue.
+                    if self.ondemand_may_appear() {
+                        None
+                    } else {
+                        self.first_idle_slot()
+                    }
+                })
+            } else {
+                // A relaxed job falls back to an idle on-demand
+                // cluster only when no at-risk job is queued for
+                // it — otherwise a higher-priority relaxed job
+                // would consume exactly the capacity the deadline
+                // quota reserved (the at-risk job takes the slot
+                // later this same loop, so declining cannot
+                // stall). Evaluated lazily, once per placement round.
+                let at_risk = match at_risk_cache {
+                    Some(v) => v,
+                    None => {
+                        let v = self.any_at_risk_waiting(s);
+                        at_risk_cache = Some(v);
+                        v
+                    }
+                };
+                self.first_idle_of_kind(true).or_else(|| {
+                    if at_risk {
+                        None
+                    } else {
+                        self.first_idle_slot()
+                    }
+                })
+            };
+            match slot {
+                Some(slot) => {
+                    self.try_start(s, jid, slot)?;
+                    after = None;
+                    at_risk_cache = None;
+                }
+                None => after = Some(jid),
+            }
         }
         Ok(())
     }
 
-    /// First idle slot of the requested purchase model.
-    fn idle_of_kind(&self, idle: &[usize], spot: bool) -> Option<usize> {
-        idle.iter().copied().find(|&i| self.fleet[i].spot == spot)
+    /// Is any *dispatchable* ready job currently preferring on-demand
+    /// capacity? Walks the deadline-active index — only deadline jobs
+    /// can prefer on-demand — instead of the whole ready set.
+    fn any_at_risk_waiting(&self, s: &Session) -> bool {
+        self.queue.deadline_active_ids().into_iter().any(|id| {
+            self.queue.get(id).is_some_and(|j| {
+                matches!(j.state, JobState::Queued | JobState::Interrupted)
+                    && !self.tenant_at_cluster_cap(&j.analyst)
+                    && self.needs_ondemand(s, j)
+            })
+        })
     }
 
     /// Lowest bid among the fleet's live spot clusters (their masters'
@@ -1087,9 +1266,9 @@ impl JobScheduler {
     /// busy (it frees at a slice boundary), or is there room to grow
     /// or idle spot capacity to convert at the next reconcile?
     fn ondemand_may_appear(&self) -> bool {
-        self.fleet.iter().any(|c| !c.spot)
+        self.fleet_od_count > 0
             || self.fleet.len() < self.autoscaler.cfg.max_clusters
-            || self.fleet.iter().any(|c| c.running.is_none() && c.spot)
+            || !self.idle_spot.is_empty()
     }
 
     /// Start a slice of `jid` on fleet slot `slot`; a start failure
@@ -1295,7 +1474,10 @@ impl JobScheduler {
             }
         }
         self.fleet[slot].running = Some(jid);
-        self.slices.push(SliceEnd {
+        self.idle_spot.remove(&slot);
+        self.idle_od.remove(&slot);
+        *self.tenant_busy.entry(analyst).or_insert(0) += 1;
+        self.push_slice(SliceEnd {
             at_s: now0 + duration,
             from_s: now0,
             job: jid,
@@ -1330,8 +1512,26 @@ impl JobScheduler {
             ev.from_s.min(now),
         );
         s.set_cluster_lock(&ev.cluster, false)?;
-        if let Some(c) = self.fleet.iter_mut().find(|c| c.name == ev.cluster) {
-            c.running = None;
+        if let Some(&slot) = self.fleet_pos.get(&ev.cluster) {
+            self.fleet[slot].running = None;
+            if self.fleet[slot].spot {
+                self.idle_spot.insert(slot);
+            } else {
+                self.idle_od.insert(slot);
+            }
+        }
+        if let Some(j) = self.queue.get(ev.job) {
+            let analyst = j.analyst.clone();
+            let emptied = match self.tenant_busy.get_mut(&analyst) {
+                Some(n) => {
+                    *n = n.saturating_sub(1);
+                    *n == 0
+                }
+                None => false,
+            };
+            if emptied {
+                self.tenant_busy.remove(&analyst);
+            }
         }
         let (job_spec, resident, analyst) = {
             let job = self
@@ -1448,8 +1648,7 @@ impl JobScheduler {
     /// the shrunken fleet on its next reconcile and replaces the lost
     /// capacity.
     fn handle_interruption(&mut self, s: &mut Session, cname: &str) -> Result<()> {
-        if let Some(pos) = self.slices.iter().position(|e| e.cluster == cname) {
-            let ev = self.slices.swap_remove(pos);
+        if let Some(ev) = self.take_slice_of_cluster(cname) {
             let job = self
                 .queue
                 .get_mut(ev.job)
@@ -1468,6 +1667,8 @@ impl JobScheduler {
             ));
         }
         self.fleet.retain(|c| c.name != cname);
+        // `retain` shifts every slot index after the reclaimed one.
+        self.reindex_fleet();
         s.spot_interrupt_cluster(cname)?;
         self.interruptions_delivered += 1;
         Ok(())
@@ -1475,9 +1676,10 @@ impl JobScheduler {
 
     // ----------------------------------------------------- persistence
 
-    /// Persist queue + autoscaler config + fleet membership (in-flight
-    /// slices never persist: `run_until_idle` drains before saving).
-    pub fn to_json(&self) -> Json {
+    /// Everything [`JobScheduler::to_json`] persists *except* the queue:
+    /// autoscaler config, counters, fleet membership, spot bookkeeping.
+    /// Shared by full snapshots and append-log record headers.
+    fn meta_json(&self) -> Json {
         let cfg = &self.autoscaler.cfg;
         let mut c = Json::obj();
         c.set("min_clusters", Json::num(cfg.min_clusters as f64));
@@ -1493,7 +1695,6 @@ impl JobScheduler {
         c.set("bid", Json::str(cfg.bid.label()));
         c.set("work_target_s", Json::num(cfg.work_target_s));
         let mut root = Json::obj();
-        root.set("queue", self.queue.to_json());
         root.set("autoscaler", c);
         root.set("counter", Json::num(self.autoscaler.counter() as f64));
         root.set(
@@ -1515,6 +1716,35 @@ impl JobScheduler {
             Json::num(self.interruptions_delivered as f64),
         );
         root
+    }
+
+    /// Persist queue + autoscaler config + fleet membership (in-flight
+    /// slices never persist: `run_until_idle` drains before saving).
+    pub fn to_json(&self) -> Json {
+        let mut root = self.meta_json();
+        root.set("queue", self.queue.to_json());
+        root
+    }
+
+    /// One append-log record: the full scheduler metadata plus only the
+    /// jobs mutated since the last record or snapshot. Replaying records
+    /// over a snapshot by upserting jobs by id reproduces `to_json`
+    /// state exactly; replay is idempotent, so a torn tail or a stale
+    /// log after a fresh snapshot is harmless.
+    pub fn append_record_json(&mut self) -> Json {
+        let mut meta = self.meta_json();
+        meta.set("queue_next_id", Json::num(self.queue.next_id() as f64));
+        meta.set("queue_ordering", Json::str(self.queue.ordering.label()));
+        let mut rec = Json::obj();
+        rec.set("meta", meta);
+        rec.set("jobs", Json::Arr(self.queue.take_touched_json()));
+        rec
+    }
+
+    /// Forget the mutation delta without emitting it (used right after
+    /// writing a full snapshot, which already captures every job).
+    pub fn drain_touched(&mut self) {
+        self.queue.clear_touched();
     }
 
     /// Restore a scheduler persisted by [`JobScheduler::to_json`];

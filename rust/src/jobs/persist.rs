@@ -1,0 +1,163 @@
+//! Append-log persistence for the job scheduler.
+//!
+//! PR 2–5 rewrote the entire `jobs.json` on every CLI command — O(all
+//! jobs) of serialisation per submit, which is exactly the wrong shape
+//! for a 1M-job backlog. This module keeps the same JSON vocabulary
+//! but splits the store into two files inside the session directory:
+//!
+//! * `jobs.json` — a **snapshot**: the full [`JobScheduler::to_json`]
+//!   document, written atomically (temp file + rename). A pre-PR-6
+//!   `jobs.json` *is* a valid snapshot with an empty log, so legacy
+//!   session directories load unchanged.
+//! * `jobs.log` — an **append-only op log**: one compact-JSON record
+//!   per line, each `{"meta": {...}, "jobs": [...]}` where `meta` is
+//!   the full (small) scheduler metadata and `jobs` holds the complete
+//!   state of only the jobs mutated since the previous record. A save
+//!   appends one record — O(delta), not O(backlog).
+//!
+//! Replay folds each record over the snapshot in order: `meta`
+//! replaces the scheduler metadata wholesale and jobs upsert by id.
+//! Records carry *full* job state (not diffs), so replay is
+//! **idempotent**: applying a record twice, or applying a stale log on
+//! top of a snapshot that already contains its effects, converges to
+//! the same state. That idempotence is the whole crash story —
+//!
+//! * **kill mid-append**: the last log line is torn; parsing stops at
+//!   the first malformed line and the tail is discarded, restoring the
+//!   state of the previous successful save;
+//! * **kill mid-compaction** after the snapshot rename but before the
+//!   log unlink: the stale log replays over the fresh snapshot; every
+//!   record's job states are already embedded in the snapshot, so the
+//!   replay is a no-op.
+//!
+//! Compaction runs when the log reaches [`LOG_COMPACT_RECORDS`]
+//! records: write a fresh snapshot, then delete the log.
+//!
+//! Worked example (a submit followed by a cancel, after a snapshot
+//! containing jobs 1 and 2):
+//!
+//! ```text
+//! jobs.log:
+//! {"jobs":[{"id":3,"state":"queued",...}],"meta":{...,"queue_next_id":4}}
+//! {"jobs":[{"id":1,"state":"canceled",...}],"meta":{...,"queue_next_id":4}}
+//! ```
+//!
+//! Load = snapshot{1,2} → upsert 3 → upsert 1 ⇒ {1 canceled, 2, 3},
+//! `next_id` 4 — bit-identical to a clean full save.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use super::JobScheduler;
+use crate::util::json::Json;
+
+/// Log length (in records) that triggers compaction into a snapshot.
+pub const LOG_COMPACT_RECORDS: usize = 64;
+
+/// Path of the snapshot file inside a session directory.
+pub fn snapshot_path(dir: &Path) -> PathBuf {
+    dir.join("jobs.json")
+}
+
+/// Path of the append log inside a session directory.
+pub fn log_path(dir: &Path) -> PathBuf {
+    dir.join("jobs.log")
+}
+
+/// Load the scheduler from `dir`: snapshot plus log replay. Returns
+/// `Ok(None)` when no snapshot exists (a session that never submitted
+/// a job). A legacy `jobs.json` without a log loads as-is.
+pub fn load(dir: &Path) -> Result<Option<JobScheduler>> {
+    let snap = snapshot_path(dir);
+    if !snap.exists() {
+        return Ok(None);
+    }
+    let text = fs::read_to_string(&snap)?;
+    let mut root = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", snap.display()))?;
+    let mut queue = root
+        .get("queue")
+        .cloned()
+        .ok_or_else(|| anyhow!("{}: snapshot missing queue", snap.display()))?;
+    let mut by_id: BTreeMap<u64, Json> = BTreeMap::new();
+    if let Some(jobs) = queue.get("jobs").and_then(Json::as_arr) {
+        for j in jobs {
+            by_id.insert(j.req_u64("id")?, j.clone());
+        }
+    }
+    if let Ok(log_text) = fs::read_to_string(log_path(dir)) {
+        for line in log_text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            // A torn tail (kill mid-append) is expected, not an error:
+            // stop at the first malformed record.
+            let Ok(rec) = Json::parse(line) else {
+                break;
+            };
+            if let Some(meta) = rec.get("meta").and_then(Json::as_obj) {
+                for (k, v) in meta {
+                    match k.as_str() {
+                        "queue_next_id" => queue.set("next_id", v.clone()),
+                        "queue_ordering" => queue.set("ordering", v.clone()),
+                        _ => root.set(k, v.clone()),
+                    }
+                }
+            }
+            if let Some(jobs) = rec.get("jobs").and_then(Json::as_arr) {
+                for j in jobs {
+                    if let Some(id) = j.get("id").and_then(Json::as_u64) {
+                        by_id.insert(id, j.clone());
+                    }
+                }
+            }
+        }
+    }
+    queue.set("jobs", Json::Arr(by_id.into_values().collect()));
+    root.set("queue", queue);
+    Ok(Some(JobScheduler::from_json(&root)?))
+}
+
+/// Persist the scheduler into `dir`. The first save of a session (no
+/// snapshot yet) writes a full snapshot; later saves append one
+/// O(delta) log record, compacting back into a snapshot once the log
+/// reaches [`LOG_COMPACT_RECORDS`] records.
+pub fn save(dir: &Path, js: &mut JobScheduler) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    if !snapshot_path(dir).exists() {
+        return write_snapshot(dir, js);
+    }
+    let line = js.append_record_json().to_string_compact();
+    let logp = log_path(dir);
+    {
+        let mut f = fs::OpenOptions::new().create(true).append(true).open(&logp)?;
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+    }
+    let records = fs::read_to_string(&logp)
+        .map(|t| t.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    if records >= LOG_COMPACT_RECORDS {
+        write_snapshot(dir, js)?;
+    }
+    Ok(())
+}
+
+/// Write a full snapshot atomically (temp + rename), then drop the
+/// now-redundant log. Crash-ordering matters: the rename lands before
+/// the unlink, so a kill in between leaves snapshot + stale log, which
+/// replay handles idempotently (see module docs).
+fn write_snapshot(dir: &Path, js: &mut JobScheduler) -> Result<()> {
+    let snap = snapshot_path(dir);
+    let tmp = dir.join("jobs.json.tmp");
+    fs::write(&tmp, js.to_json().to_string_pretty())?;
+    fs::rename(&tmp, &snap)?;
+    let _ = fs::remove_file(log_path(dir));
+    // The snapshot captures every job; the pending delta is obsolete.
+    js.drain_touched();
+    Ok(())
+}

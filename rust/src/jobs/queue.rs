@@ -14,8 +14,10 @@
 use crate::coordinator::Placement;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
+use std::ops::Bound;
 
 /// Job priority class. `Ord`: `Low < Normal < High`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -276,6 +278,308 @@ impl Job {
     }
 }
 
+/// Map an `f64` onto a `u64` whose unsigned order matches the float's
+/// numeric order for every non-NaN value (NaN sorts above `+inf`):
+/// flip the sign bit of positives, complement negatives. Shared with
+/// the scheduler's slice-event heap.
+pub(crate) fn f64_order_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1 << 63) != 0 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// Total dispatch-order key of one ready job. The derived `Ord` over
+/// `(class, deadline_bits, id)` reproduces [`JobQueue::ready_ids`]'s
+/// legacy sort exactly: strict priority first (`High = 0` sorts
+/// lowest), then the within-class ordering (deadline bits under EDF,
+/// constant under FIFO), with the unique job id as the final
+/// tie-break — so index iteration order cannot depend on sort
+/// stability.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct ReadyKey {
+    /// Priority class, inverted so `High` iterates first.
+    class: u8,
+    /// `f64_order_bits(deadline or +inf)` under EDF; `0` under FIFO.
+    deadline_bits: u64,
+    /// Submission-order tie-break (unique).
+    id: JobId,
+}
+
+/// The dispatch-order key of `j` under `ordering`.
+fn ready_key(j: &Job, ordering: QueueOrdering) -> ReadyKey {
+    let class = match j.spec.priority {
+        Priority::High => 0u8,
+        Priority::Normal => 1,
+        Priority::Low => 2,
+    };
+    let deadline_bits = match ordering {
+        QueueOrdering::FifoWithinClass => 0,
+        QueueOrdering::EdfWithinClass => {
+            f64_order_bits(j.spec.deadline_s.unwrap_or(f64::INFINITY))
+        }
+    };
+    ReadyKey {
+        class,
+        deadline_bits,
+        id: j.id,
+    }
+}
+
+/// Which branch of [`Job::estimate_remaining_s`] a job currently
+/// resolves through — cached so the demand aggregates can be updated
+/// incrementally. `Prior` jobs are kept as raw remaining units because
+/// the scheduler's cross-job EWMA changes *without* any queue
+/// mutation: the prior multiplies in at read time, never here.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum EstCat {
+    /// Terminal job: contributes nothing to demand.
+    None,
+    /// Unsized (`units_total == 0`): claims one `work_target_s` window.
+    Target,
+    /// Own evidence (slice history or static hint): the product
+    /// `unit_s * remaining_units`, fixed until the job mutates.
+    Rate(f64),
+    /// Sized but rateless: `remaining_units`, multiplied by the
+    /// scheduler's prior (or a target window without one) at read time.
+    Prior {
+        /// Remaining work units (`units_total - units_done`).
+        rem: u64,
+    },
+}
+
+/// Everything the index accounted for one job — stored so a later
+/// removal subtracts exactly what was added, whatever the job looks
+/// like by then.
+#[derive(Clone, Debug)]
+struct JobAcct {
+    /// Present iff the job was ready (Queued | Interrupted).
+    key: Option<ReadyKey>,
+    /// Tenant the job's load was booked under.
+    analyst: String,
+    /// 0 = ready, 1 = running, 2 = terminal.
+    state_group: u8,
+    /// Demand-estimate category at accounting time.
+    est: EstCat,
+    /// Counted in the deadline-active set.
+    has_deadline_active: bool,
+}
+
+/// One tenant's incremental load picture — the autoscaler's
+/// [`crate::jobs::JobScheduler`] demand accounting reads these running
+/// sums instead of scanning every job. Integer counts are exact; the
+/// `f64` running sum accepts ulp-level drift versus a fresh scan
+/// (zero-clamped when its job count reaches zero).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TenantLoad {
+    /// Ready jobs (Queued | Interrupted).
+    pub waiting: usize,
+    /// Jobs with a slice in flight.
+    pub running: usize,
+    /// Summed `unit_s * remaining_units` over active jobs with their
+    /// own rate evidence. Clamp with `.max(0.0)` at read.
+    pub rate_est_s: f64,
+    /// Active jobs contributing to `rate_est_s`.
+    pub rate_jobs: usize,
+    /// Active jobs with no size estimate at all (each claims one
+    /// `work_target_s` window).
+    pub target_jobs: usize,
+    /// Summed remaining units of active sized-but-rateless jobs
+    /// (multiply by the scheduler's cross-job prior at read time).
+    pub noown_rem_units: u64,
+    /// Active sized-but-rateless jobs (fallback: one target window
+    /// each when no prior exists yet).
+    pub noown_jobs: usize,
+    /// Every tracked job of the tenant, any state (entry lifetime).
+    pub jobs: usize,
+}
+
+/// The queue's derived indexes: global + per-tenant ready sets in
+/// dispatch order, per-tenant demand aggregates, the deadline-active
+/// id set, and state counters. Maintained lazily — mutators mark jobs
+/// dirty, every read reconciles — and rebuilt from scratch whenever
+/// the queue's `ordering` flips (tests flip the public field at
+/// runtime).
+#[derive(Default)]
+struct ReadyIndex {
+    /// Ordering the keys were built under; `None` forces a rebuild.
+    built_for: Option<QueueOrdering>,
+    /// Every ready job in dispatch order.
+    set: BTreeSet<ReadyKey>,
+    /// Ready jobs per tenant, same order (capped-tenant skip).
+    per_tenant: BTreeMap<String, BTreeSet<ReadyKey>>,
+    /// What was accounted per job (for exact reversal).
+    accts: BTreeMap<JobId, JobAcct>,
+    /// Per-tenant demand aggregates.
+    loads: BTreeMap<String, TenantLoad>,
+    /// Non-terminal jobs carrying a deadline.
+    deadline_active: BTreeSet<JobId>,
+    /// Jobs in state Running.
+    running_count: usize,
+    /// Jobs not yet Completed/Failed.
+    nonterminal_count: usize,
+    /// Jobs mutated since the last reconcile.
+    dirty: BTreeSet<JobId>,
+}
+
+impl ReadyIndex {
+    fn rebuild(&mut self, jobs: &BTreeMap<JobId, Job>, ordering: QueueOrdering) {
+        *self = ReadyIndex {
+            built_for: Some(ordering),
+            ..ReadyIndex::default()
+        };
+        for (id, j) in jobs {
+            self.apply_job(*id, j, ordering);
+        }
+    }
+
+    fn refresh(&mut self, id: JobId, job: Option<&Job>, ordering: QueueOrdering) {
+        self.remove_acct(id);
+        if let Some(j) = job {
+            self.apply_job(id, j, ordering);
+        }
+    }
+
+    fn apply_job(&mut self, id: JobId, j: &Job, ordering: QueueOrdering) {
+        let state_group = match j.state {
+            JobState::Queued | JobState::Interrupted => 0u8,
+            JobState::Running => 1,
+            JobState::Completed | JobState::Failed => 2,
+        };
+        let key = if state_group == 0 {
+            Some(ready_key(j, ordering))
+        } else {
+            None
+        };
+        // Mirror of `estimate_remaining_s(prior).unwrap_or(target)`:
+        // unsized jobs always resolve to a target window (the rate
+        // chain is irrelevant once `units_total == 0` returns `None`).
+        let est = if state_group == 2 {
+            EstCat::None
+        } else if j.units_total == 0 {
+            EstCat::Target
+        } else if let Some(u) = j.unit_s().or(j.est_unit_s_hint) {
+            EstCat::Rate(u * j.units_total.saturating_sub(j.units_done) as f64)
+        } else {
+            EstCat::Prior {
+                rem: j.units_total.saturating_sub(j.units_done) as u64,
+            }
+        };
+        let has_deadline_active = state_group != 2 && j.spec.deadline_s.is_some();
+        if let Some(k) = key {
+            self.set.insert(k);
+            self.per_tenant.entry(j.analyst.clone()).or_default().insert(k);
+        }
+        if has_deadline_active {
+            self.deadline_active.insert(id);
+        }
+        if state_group == 1 {
+            self.running_count += 1;
+        }
+        if state_group != 2 {
+            self.nonterminal_count += 1;
+        }
+        let load = self.loads.entry(j.analyst.clone()).or_default();
+        load.jobs += 1;
+        match state_group {
+            0 => load.waiting += 1,
+            1 => load.running += 1,
+            _ => {}
+        }
+        if state_group != 2 {
+            match est {
+                EstCat::Target => load.target_jobs += 1,
+                EstCat::Rate(v) => {
+                    load.rate_est_s += v;
+                    load.rate_jobs += 1;
+                }
+                EstCat::Prior { rem } => {
+                    load.noown_rem_units += rem;
+                    load.noown_jobs += 1;
+                }
+                EstCat::None => {}
+            }
+        }
+        self.accts.insert(
+            id,
+            JobAcct {
+                key,
+                analyst: j.analyst.clone(),
+                state_group,
+                est,
+                has_deadline_active,
+            },
+        );
+    }
+
+    fn remove_acct(&mut self, id: JobId) {
+        let Some(acct) = self.accts.remove(&id) else {
+            return;
+        };
+        if let Some(k) = acct.key {
+            self.set.remove(&k);
+            let emptied = match self.per_tenant.get_mut(&acct.analyst) {
+                Some(set) => {
+                    set.remove(&k);
+                    set.is_empty()
+                }
+                None => false,
+            };
+            if emptied {
+                self.per_tenant.remove(&acct.analyst);
+            }
+        }
+        if acct.has_deadline_active {
+            self.deadline_active.remove(&id);
+        }
+        if acct.state_group == 1 {
+            self.running_count = self.running_count.saturating_sub(1);
+        }
+        if acct.state_group != 2 {
+            self.nonterminal_count = self.nonterminal_count.saturating_sub(1);
+        }
+        let emptied = match self.loads.get_mut(&acct.analyst) {
+            Some(load) => {
+                load.jobs = load.jobs.saturating_sub(1);
+                match acct.state_group {
+                    0 => load.waiting = load.waiting.saturating_sub(1),
+                    1 => load.running = load.running.saturating_sub(1),
+                    _ => {}
+                }
+                if acct.state_group != 2 {
+                    match acct.est {
+                        EstCat::Target => {
+                            load.target_jobs = load.target_jobs.saturating_sub(1);
+                        }
+                        EstCat::Rate(v) => {
+                            load.rate_jobs = load.rate_jobs.saturating_sub(1);
+                            load.rate_est_s -= v;
+                            if load.rate_jobs == 0 {
+                                // Zero-clamp: an empty sum is exactly
+                                // zero, whatever f64 residue the
+                                // add/subtract pairs left behind.
+                                load.rate_est_s = 0.0;
+                            }
+                        }
+                        EstCat::Prior { rem } => {
+                            load.noown_jobs = load.noown_jobs.saturating_sub(1);
+                            load.noown_rem_units = load.noown_rem_units.saturating_sub(rem);
+                        }
+                        EstCat::None => {}
+                    }
+                }
+                load.jobs == 0
+            }
+            None => false,
+        };
+        if emptied {
+            self.loads.remove(&acct.analyst);
+        }
+    }
+}
+
 /// The queue itself.
 #[derive(Default)]
 pub struct JobQueue {
@@ -283,6 +587,12 @@ pub struct JobQueue {
     jobs: BTreeMap<JobId, Job>,
     /// Within-class dispatch ordering (EDF by default).
     pub ordering: QueueOrdering,
+    /// Derived ready/demand indexes (interior mutability keeps every
+    /// read path `&self`); reconciled lazily from `dirty`.
+    index: RefCell<ReadyIndex>,
+    /// Jobs mutated since the last persistence drain — the delta an
+    /// append-log record carries (see `jobs::persist`).
+    touched: BTreeSet<JobId>,
 }
 
 impl JobQueue {
@@ -321,7 +631,26 @@ impl JobQueue {
                 summary: Json::Null,
             },
         );
+        self.index.get_mut().dirty.insert(id);
+        self.touched.insert(id);
         id
+    }
+
+    /// Reconcile the derived indexes with the jobs marked dirty since
+    /// the last read (full rebuild when `ordering` flipped).
+    fn sync_index(&self) {
+        let mut ix = self.index.borrow_mut();
+        if ix.built_for != Some(self.ordering) {
+            ix.rebuild(&self.jobs, self.ordering);
+            return;
+        }
+        if ix.dirty.is_empty() {
+            return;
+        }
+        let dirty: Vec<JobId> = std::mem::take(&mut ix.dirty).into_iter().collect();
+        for id in dirty {
+            ix.refresh(id, self.jobs.get(&id), self.ordering);
+        }
     }
 
     /// Every ready job in dispatch order: highest priority first, then
@@ -333,39 +662,92 @@ impl JobQueue {
     /// capacity matching and its safety valve both consume it, so an
     /// ordering change lands everywhere at once.
     pub fn ready_ids(&self) -> Vec<JobId> {
-        let mut ready: Vec<&Job> = self
-            .jobs
-            .values()
-            .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
-            .collect();
-        match self.ordering {
-            QueueOrdering::FifoWithinClass => {
-                ready.sort_by_key(|j| (std::cmp::Reverse(j.spec.priority), j.id));
-            }
-            QueueOrdering::EdfWithinClass => {
-                // Deadlines are validated finite at admission, so the
-                // partial order over {finite deadlines} ∪ {+inf for
-                // none} is total; ties fall through to the job id
-                // (submission order).
-                ready.sort_by(|a, b| {
-                    b.spec
-                        .priority
-                        .cmp(&a.spec.priority)
-                        .then_with(|| {
-                            let da = a.spec.deadline_s.unwrap_or(f64::INFINITY);
-                            let db = b.spec.deadline_s.unwrap_or(f64::INFINITY);
-                            da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
-                        })
-                        .then_with(|| a.id.cmp(&b.id))
-                });
-            }
-        }
-        ready.into_iter().map(|j| j.id).collect()
+        self.sync_index();
+        self.index.borrow().set.iter().map(|k| k.id).collect()
     }
 
-    /// The next job to dispatch (head of [`JobQueue::ready_ids`]).
+    /// The next job to dispatch (head of [`JobQueue::ready_ids`]) —
+    /// an O(log n) index peek, never a full sorted collection.
     pub fn next_ready(&self) -> Option<JobId> {
-        self.ready_ids().into_iter().next()
+        self.sync_index();
+        self.index.borrow().set.iter().next().map(|k| k.id)
+    }
+
+    /// The first ready job in dispatch order strictly after `after`
+    /// (from the head with `None`) whose tenant is not in `excluded`.
+    /// `after` must itself still be ready — the dispatch loop only
+    /// advances past jobs it decided not to place, which it never
+    /// mutates. With exclusions the per-tenant indexes are merged
+    /// (O(tenants · log n)), so a capped tenant's whole backlog is
+    /// skipped without touching it.
+    pub fn next_ready_excluding(
+        &self,
+        after: Option<JobId>,
+        excluded: &BTreeSet<String>,
+    ) -> Option<JobId> {
+        self.sync_index();
+        let ix = self.index.borrow();
+        let lower = match after.and_then(|id| ix.accts.get(&id).and_then(|a| a.key)) {
+            Some(b) => Bound::Excluded(b),
+            None => Bound::Unbounded,
+        };
+        if excluded.is_empty() {
+            return ix.set.range((lower, Bound::Unbounded)).next().map(|k| k.id);
+        }
+        let mut best: Option<ReadyKey> = None;
+        for (tenant, set) in &ix.per_tenant {
+            if excluded.contains(tenant) {
+                continue;
+            }
+            if let Some(k) = set.range((lower, Bound::Unbounded)).next() {
+                let better = match best {
+                    Some(b) => *k < b,
+                    None => true,
+                };
+                if better {
+                    best = Some(*k);
+                }
+            }
+        }
+        best.map(|k| k.id)
+    }
+
+    /// One tenant's incremental load picture (zero-valued when the
+    /// tenant has no tracked jobs).
+    pub fn tenant_load(&self, analyst: &str) -> TenantLoad {
+        self.sync_index();
+        self.index
+            .borrow()
+            .loads
+            .get(analyst)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Every tenant with tracked jobs and its load picture, sorted by
+    /// tenant id — the autoscaler demand fold is O(tenants), not
+    /// O(jobs).
+    pub fn tenant_loads(&self) -> Vec<(String, TenantLoad)> {
+        self.sync_index();
+        self.index
+            .borrow()
+            .loads
+            .iter()
+            .map(|(a, l)| (a.clone(), l.clone()))
+            .collect()
+    }
+
+    /// Ids of every non-terminal job carrying a deadline — the only
+    /// jobs whose spot-vs-on-demand preference the scheduler ever has
+    /// to evaluate.
+    pub fn deadline_active_ids(&self) -> Vec<JobId> {
+        self.sync_index();
+        self.index.borrow().deadline_active.iter().copied().collect()
+    }
+
+    /// The id counter's current value (next submission gets `+1`).
+    pub fn next_id(&self) -> u64 {
+        self.next_id
     }
 
     /// Look a job up by handle.
@@ -373,8 +755,12 @@ impl JobQueue {
         self.jobs.get(&id)
     }
 
-    /// Mutable lookup by handle.
+    /// Mutable lookup by handle. The job is conservatively marked
+    /// dirty (index refresh on next read) and touched (persistence
+    /// delta) — a `&mut Job` can change anything.
     pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        self.index.get_mut().dirty.insert(id);
+        self.touched.insert(id);
         self.jobs.get_mut(&id)
     }
 
@@ -383,27 +769,22 @@ impl JobQueue {
         self.jobs.values()
     }
 
-    /// Jobs waiting for capacity.
+    /// Jobs waiting for capacity (O(1) off the index).
     pub fn pending(&self) -> usize {
-        self.jobs
-            .values()
-            .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
-            .count()
+        self.sync_index();
+        self.index.borrow().set.len()
     }
 
-    /// Jobs with a slice in flight.
+    /// Jobs with a slice in flight (O(1) off the index).
     pub fn running(&self) -> usize {
-        self.jobs
-            .values()
-            .filter(|j| j.state == JobState::Running)
-            .count()
+        self.sync_index();
+        self.index.borrow().running_count
     }
 
     /// Is every job in a terminal state (Completed or Failed)?
     pub fn all_done(&self) -> bool {
-        self.jobs
-            .values()
-            .all(|j| matches!(j.state, JobState::Completed | JobState::Failed))
+        self.sync_index();
+        self.index.borrow().nonterminal_count == 0
     }
 
     /// Human-readable status lines (`ec2jobqueue`).
@@ -430,8 +811,42 @@ impl JobQueue {
 
     /// Serialise the queue (jobs + id counter) for `jobs.json`.
     pub fn to_json(&self) -> Json {
-        let mut arr = Vec::new();
-        for j in self.jobs.values() {
+        let arr: Vec<Json> = self.jobs.values().map(Self::job_to_json).collect();
+        let mut root = Json::obj();
+        root.set("next_id", Json::num(self.next_id as f64));
+        root.set("ordering", Json::str(self.ordering.label()));
+        root.set("jobs", Json::Arr(arr));
+        root
+    }
+
+    /// Serialised state of every job mutated since the last drain, in
+    /// id order, clearing the touched set — the payload of one
+    /// append-log record (`jobs::persist`). Records carry full job
+    /// state, so replay is a by-id upsert and therefore idempotent.
+    pub fn take_touched_json(&mut self) -> Vec<Json> {
+        let ids = std::mem::take(&mut self.touched);
+        ids.iter()
+            .filter_map(|id| self.jobs.get(id))
+            .map(Self::job_to_json)
+            .collect()
+    }
+
+    /// Forget the pending persistence delta (a compacted snapshot
+    /// already carries every job).
+    pub fn clear_touched(&mut self) {
+        self.touched.clear();
+    }
+
+    /// One job's full state in the persisted JSON vocabulary — the
+    /// `-json` output of `ec2jobstatus`.
+    pub fn job_json(&self, id: JobId) -> Option<Json> {
+        self.jobs.get(&id).map(Self::job_to_json)
+    }
+
+    /// One job's persisted form — shared by whole-queue snapshots and
+    /// per-record append-log deltas, so the vocabulary cannot fork.
+    fn job_to_json(j: &Job) -> Json {
+        {
             let mut o = Json::obj();
             o.set("id", Json::num(j.id.0 as f64));
             o.set("name", Json::str(&j.spec.name));
@@ -498,13 +913,8 @@ impl JobQueue {
             o.set("retries", Json::num(j.retries as f64));
             o.set("compute_s", Json::num(j.compute_s));
             o.set("summary", j.summary.clone());
-            arr.push(o);
+            o
         }
-        let mut root = Json::obj();
-        root.set("next_id", Json::num(self.next_id as f64));
-        root.set("ordering", Json::str(self.ordering.label()));
-        root.set("jobs", Json::Arr(arr));
-        root
     }
 
     /// Restore a queue persisted by [`JobQueue::to_json`]; estimator
@@ -513,13 +923,14 @@ impl JobQueue {
     pub fn from_json(j: &Json) -> Result<Self> {
         let mut q = JobQueue {
             next_id: j.req_u64("next_id")?,
-            jobs: BTreeMap::new(),
             // Files from before the ordering existed dispatch with the
-            // current default (EDF).
+            // current default (EDF). The index starts unbuilt
+            // (`built_for: None`) and materialises on first read.
             ordering: match j.opt_str("ordering") {
                 Some(o) => QueueOrdering::parse(&o)?,
                 None => QueueOrdering::default(),
             },
+            ..JobQueue::default()
         };
         for o in j
             .get("jobs")
@@ -754,5 +1165,165 @@ mod tests {
         let mut back = back;
         let c = back.submit(spec("c", Priority::Normal), 7.0);
         assert!(c > b);
+    }
+
+    #[test]
+    fn f64_order_bits_is_monotone() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1.0e300,
+            -2.0,
+            -0.0,
+            0.0,
+            1e-300,
+            1.0,
+            9_000.0,
+            f64::INFINITY,
+        ];
+        for w in xs.windows(2) {
+            assert!(
+                f64_order_bits(w[0]) <= f64_order_bits(w[1]),
+                "{} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert!(f64_order_bits(-0.0) <= f64_order_bits(0.0));
+        assert!(f64_order_bits(f64::NAN) > f64_order_bits(f64::INFINITY));
+    }
+
+    #[test]
+    fn indexed_order_matches_a_fresh_sort_under_churn() {
+        // Brute-force oracle: re-derive the legacy sort from scratch
+        // and compare against the index after every mutation.
+        fn oracle(q: &JobQueue) -> Vec<JobId> {
+            let mut ready: Vec<&Job> = q
+                .jobs()
+                .filter(|j| matches!(j.state, JobState::Queued | JobState::Interrupted))
+                .collect();
+            ready.sort_by(|a, b| {
+                b.spec
+                    .priority
+                    .cmp(&a.spec.priority)
+                    .then_with(|| {
+                        let da = a.spec.deadline_s.unwrap_or(f64::INFINITY);
+                        let db = b.spec.deadline_s.unwrap_or(f64::INFINITY);
+                        da.partial_cmp(&db).unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .then_with(|| a.id.cmp(&b.id))
+            });
+            ready.into_iter().map(|j| j.id).collect()
+        }
+        let mut q = JobQueue::new();
+        let prios = [Priority::Low, Priority::Normal, Priority::High];
+        let ids: Vec<JobId> = (0..30)
+            .map(|i| q.submit(spec(&format!("j{i}"), prios[i % 3]), i as f64))
+            .collect();
+        for (i, id) in ids.iter().enumerate() {
+            if i % 4 == 0 {
+                q.get_mut(*id).unwrap().spec.deadline_s = Some(1000.0 + (i % 7) as f64 * 100.0);
+            }
+            if i % 5 == 1 {
+                q.get_mut(*id).unwrap().state = JobState::Running;
+            }
+            if i % 5 == 2 {
+                q.get_mut(*id).unwrap().state = JobState::Completed;
+            }
+            if i % 5 == 3 {
+                q.get_mut(*id).unwrap().state = JobState::Interrupted;
+            }
+            assert_eq!(q.ready_ids(), oracle(&q), "after mutating {id}");
+        }
+        // Resurrect some and flip states again; the index must follow.
+        for id in &ids {
+            q.get_mut(*id).unwrap().state = JobState::Queued;
+        }
+        assert_eq!(q.ready_ids(), oracle(&q));
+        assert_eq!(q.pending(), 30);
+        assert_eq!(q.running(), 0);
+    }
+
+    #[test]
+    fn next_ready_excluding_walks_and_skips_tenants() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let b = q.submit(spec("b", Priority::Normal), 1.0);
+        let c = q.submit(spec("c", Priority::Normal), 2.0);
+        q.get_mut(a).unwrap().analyst = "t1".into();
+        q.get_mut(b).unwrap().analyst = "t2".into();
+        q.get_mut(c).unwrap().analyst = "t1".into();
+        let none = BTreeSet::new();
+        assert_eq!(q.next_ready_excluding(None, &none), Some(a));
+        assert_eq!(q.next_ready_excluding(Some(a), &none), Some(b));
+        assert_eq!(q.next_ready_excluding(Some(c), &none), None);
+        let mut t1_capped = BTreeSet::new();
+        t1_capped.insert("t1".to_string());
+        assert_eq!(q.next_ready_excluding(None, &t1_capped), Some(b));
+        assert_eq!(q.next_ready_excluding(Some(b), &t1_capped), None);
+        let mut both = t1_capped.clone();
+        both.insert("t2".to_string());
+        assert_eq!(q.next_ready_excluding(None, &both), None);
+    }
+
+    #[test]
+    fn tenant_loads_mirror_states_and_estimates() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let b = q.submit(spec("b", Priority::Normal), 1.0);
+        let c = q.submit(spec("c", Priority::Normal), 2.0);
+        for id in [a, b, c] {
+            q.get_mut(id).unwrap().analyst = "t".into();
+        }
+        // a: own rate (hint), b: sized but rateless, c: unsized.
+        {
+            let j = q.get_mut(a).unwrap();
+            j.units_total = 10;
+            j.units_done = 4;
+            j.est_unit_s_hint = Some(3.0);
+        }
+        {
+            let j = q.get_mut(b).unwrap();
+            j.units_total = 7;
+            j.units_done = 2;
+        }
+        let load = q.tenant_load("t");
+        assert_eq!(load.waiting, 3);
+        assert_eq!(load.running, 0);
+        assert_eq!(load.rate_jobs, 1);
+        assert!((load.rate_est_s - 18.0).abs() < 1e-9);
+        assert_eq!(load.noown_jobs, 1);
+        assert_eq!(load.noown_rem_units, 5);
+        assert_eq!(load.target_jobs, 1);
+        // Running moves between the counters; terminal leaves demand.
+        q.get_mut(a).unwrap().state = JobState::Running;
+        q.get_mut(c).unwrap().state = JobState::Completed;
+        let load = q.tenant_load("t");
+        assert_eq!((load.waiting, load.running), (1, 1));
+        assert_eq!(load.target_jobs, 0);
+        assert_eq!(load.jobs, 3);
+        // Deadline-active tracking follows state, not just the spec.
+        q.get_mut(b).unwrap().spec.deadline_s = Some(500.0);
+        assert_eq!(q.deadline_active_ids(), vec![b]);
+        q.get_mut(b).unwrap().state = JobState::Failed;
+        assert!(q.deadline_active_ids().is_empty());
+        // Unknown tenants read as zero load.
+        assert_eq!(q.tenant_load("nobody"), TenantLoad::default());
+    }
+
+    #[test]
+    fn touched_set_drains_the_mutation_delta() {
+        let mut q = JobQueue::new();
+        let a = q.submit(spec("a", Priority::Normal), 0.0);
+        let b = q.submit(spec("b", Priority::Low), 1.0);
+        let drained = q.take_touched_json();
+        assert_eq!(drained.len(), 2);
+        assert!(q.take_touched_json().is_empty(), "drain clears the set");
+        q.get_mut(b).unwrap().progress = 0.5;
+        let drained = q.take_touched_json();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].get("id").and_then(Json::as_u64), Some(b.0));
+        q.get_mut(a).unwrap().progress = 1.0;
+        q.clear_touched();
+        assert!(q.take_touched_json().is_empty());
     }
 }

@@ -23,7 +23,8 @@
 //! about the world they describe.
 
 use crate::coordinator::Session;
-use crate::simcloud::Lifecycle;
+use crate::simcloud::{Lifecycle, SpotMarket};
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Spot clusters among `clusters`, with their type, bid and the
 /// master's launch time (a cluster cannot be reclaimed by a price
@@ -104,6 +105,127 @@ pub fn next_interruption(
         }
     }
     best
+}
+
+/// Sorted directory of live spot clusters, indexed for reclaim scans.
+///
+/// `next_interruption` walks every fleet cluster per scan window; at
+/// 10k clusters that linear walk dominates the event loop. The
+/// directory keeps per-instance-type `(bid, name)` sets so a price
+/// spike resolves to its victims with a range query — all clusters of
+/// a type whose bid is below the hour's price — instead of a fleet
+/// walk. Semantics mirror [`SpotMarket::first_interruption`] exactly:
+/// a cluster is reclaimable at an hour boundary `b` iff the price of
+/// `b`'s hour strictly exceeds its bid and `b` lies strictly after
+/// the hour containing `max(t0, launch)`.
+#[derive(Clone, Debug, Default)]
+pub struct SpotDirectory {
+    /// Instance-type → ascending `(bid, name)` set; a range query up
+    /// to the hour's price yields exactly the out-bid clusters.
+    by_type: BTreeMap<String, BTreeSet<(u64, String)>>,
+    /// Cluster name → `(itype, bid, launched_at_s)` for removal and
+    /// launch-clamp checks.
+    entries: BTreeMap<String, (String, u64, f64)>,
+}
+
+impl SpotDirectory {
+    /// Track a spot cluster. Re-inserting a name replaces its entry.
+    pub fn insert(&mut self, name: &str, itype: &str, bid_centi_cents_hour: u64, launched_s: f64) {
+        self.remove(name);
+        self.by_type
+            .entry(itype.to_string())
+            .or_default()
+            .insert((bid_centi_cents_hour, name.to_string()));
+        self.entries.insert(
+            name.to_string(),
+            (itype.to_string(), bid_centi_cents_hour, launched_s),
+        );
+    }
+
+    /// Forget a cluster (on reclaim or scale-down). Returns whether it
+    /// was present.
+    pub fn remove(&mut self, name: &str) -> bool {
+        let Some((itype, bid, _)) = self.entries.remove(name) else {
+            return false;
+        };
+        let emptied = match self.by_type.get_mut(&itype) {
+            Some(set) => {
+                set.remove(&(bid, name.to_string()));
+                set.is_empty()
+            }
+            None => false,
+        };
+        if emptied {
+            self.by_type.remove(&itype);
+        }
+        true
+    }
+
+    /// Number of tracked clusters.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no spot clusters are tracked (reclaim scans can be
+    /// skipped entirely).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Every tracked cluster out-bid by `hour`'s price and launched
+    /// before that hour — the victims of a reclaim landing at the
+    /// boundary `hour * 3600`. Sorted by `(itype, bid, name)`.
+    pub fn reclaimed_at_hour(&self, market: &SpotMarket, hour: u64) -> Vec<String> {
+        let mut out = Vec::new();
+        for (itype, set) in &self.by_type {
+            let price = market.price_centi_cents_hour(itype, hour);
+            // (bid, name) < (price, "") iff bid < price, i.e. the
+            // market's strict `price > bid` interruption rule.
+            for (_, name) in set.range(..(price, String::new())) {
+                let launched = self.entries[name].2;
+                if hour > SpotMarket::hour_index(launched) {
+                    out.push(name.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Earliest market reclaim of any tracked cluster in `(t0, t1]`,
+    /// as `(name, boundary_s)` — the indexed equivalent of scanning
+    /// every cluster with [`SpotMarket::first_interruption`] and
+    /// taking the minimum. Ties at one boundary resolve to the lowest
+    /// `(itype, bid, name)`.
+    pub fn earliest_reclaim(
+        &self,
+        market: &SpotMarket,
+        t0: f64,
+        t1: f64,
+    ) -> Option<(String, f64)> {
+        if t1 <= t0 || self.entries.is_empty() {
+            return None;
+        }
+        let mut boundary = (SpotMarket::hour_index(t0) + 1) as f64 * 3600.0;
+        while boundary <= t1 {
+            let hour = SpotMarket::hour_index(boundary);
+            for (itype, set) in &self.by_type {
+                let price = market.price_centi_cents_hour(itype, hour);
+                for (_, name) in set.range(..(price, String::new())) {
+                    let launched = self.entries[name].2;
+                    // A cluster running at t0 already survived the hour
+                    // containing max(t0, launch): its first vulnerable
+                    // boundary is the end of that hour.
+                    let first_ok =
+                        (SpotMarket::hour_index(t0.max(launched)) + 1) as f64 * 3600.0;
+                    if boundary >= first_ok {
+                        return Some((name.clone(), boundary));
+                    }
+                }
+            }
+            boundary += 3600.0;
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +311,112 @@ mod tests {
         s.cloud.spot.spike_prob = 0.0;
         assert_eq!(
             next_interruption(&mut s, &[c], &[], now, now + 100.0 * 3600.0),
+            None
+        );
+    }
+
+    /// A mixed fleet for directory tests: types, bids and launch times
+    /// all vary so the launch clamp and the per-type range query are
+    /// both exercised.
+    fn mixed_fleet() -> Vec<(String, String, u64, f64)> {
+        vec![
+            ("a".into(), "m2.2xlarge".into(), 30 * 100, 0.0),
+            ("b".into(), "m2.2xlarge".into(), 45 * 100, 1_800.0),
+            ("c".into(), "m2.2xlarge".into(), 90 * 100, 7_200.0),
+            ("d".into(), "m2.4xlarge".into(), 60 * 100, 0.0),
+            ("e".into(), "m2.4xlarge".into(), 180 * 100, 10_000.0),
+        ]
+    }
+
+    fn directory_of(fleet: &[(String, String, u64, f64)]) -> SpotDirectory {
+        let mut dir = SpotDirectory::default();
+        for (name, itype, bid, launched) in fleet {
+            dir.insert(name, itype, *bid, *launched);
+        }
+        dir
+    }
+
+    #[test]
+    fn directory_insert_remove_track_membership() {
+        let fleet = mixed_fleet();
+        let mut dir = directory_of(&fleet);
+        assert_eq!(dir.len(), 5);
+        assert!(!dir.is_empty());
+        assert!(dir.remove("c"));
+        assert!(!dir.remove("c"));
+        assert_eq!(dir.len(), 4);
+        // Re-insert replaces, never duplicates.
+        dir.insert("a", "m2.2xlarge", 33 * 100, 5.0);
+        assert_eq!(dir.len(), 4);
+        for (name, _, _, _) in &fleet {
+            dir.remove(name);
+        }
+        assert!(dir.is_empty());
+    }
+
+    #[test]
+    fn reclaimed_at_hour_matches_per_cluster_rule() {
+        let market = SpotMarket::default();
+        let fleet = mixed_fleet();
+        let dir = directory_of(&fleet);
+        for hour in 0..500 {
+            let mut expect: Vec<String> = fleet
+                .iter()
+                .filter(|(_, itype, bid, launched)| {
+                    market.interrupts_at(itype, *bid, hour)
+                        && hour > SpotMarket::hour_index(*launched)
+                })
+                .map(|(name, _, _, _)| name.clone())
+                .collect();
+            expect.sort();
+            let mut got = dir.reclaimed_at_hour(&market, hour);
+            got.sort();
+            assert_eq!(got, expect, "hour {hour}");
+        }
+    }
+
+    #[test]
+    fn earliest_reclaim_matches_brute_force_scan() {
+        let market = SpotMarket::default();
+        let fleet = mixed_fleet();
+        let dir = directory_of(&fleet);
+        // Slide the scan window across several days so spikes land at
+        // many different offsets relative to t0.
+        for k in 0..200u64 {
+            let t0 = k as f64 * 1_717.0;
+            let t1 = t0 + 12.0 * 3600.0;
+            let brute = fleet
+                .iter()
+                .filter_map(|(name, itype, bid, launched)| {
+                    market
+                        .first_interruption(itype, *bid, t0.max(*launched), t1)
+                        .map(|t| (name.clone(), t))
+                })
+                .min_by(|a, b| a.1.total_cmp(&b.1));
+            let got = dir.earliest_reclaim(&market, t0, t1);
+            match (&brute, &got) {
+                (None, None) => {}
+                (Some((_, bt)), Some((gname, gt))) => {
+                    assert_eq!(gt, bt, "window {t0}..{t1}");
+                    // The victim really is reclaimable at that time.
+                    let (itype, bid, launched) = (
+                        &fleet.iter().find(|f| &f.0 == gname).unwrap().1,
+                        fleet.iter().find(|f| &f.0 == gname).unwrap().2,
+                        fleet.iter().find(|f| &f.0 == gname).unwrap().3,
+                    );
+                    assert_eq!(
+                        market.first_interruption(itype, bid, t0.max(launched), t1),
+                        Some(*gt)
+                    );
+                }
+                _ => panic!("window {t0}..{t1}: brute {brute:?} vs indexed {got:?}"),
+            }
+        }
+        // Empty and inverted windows return nothing.
+        assert_eq!(dir.earliest_reclaim(&market, 100.0, 100.0), None);
+        assert_eq!(dir.earliest_reclaim(&market, 200.0, 100.0), None);
+        assert_eq!(
+            SpotDirectory::default().earliest_reclaim(&market, 0.0, 1e9),
             None
         );
     }

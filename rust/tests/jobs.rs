@@ -566,6 +566,136 @@ fn invoice_totals_reconcile_with_the_ledger_per_tenant() {
     assert_eq!(alice.other_cc, 0, "every platform charge must be categorised");
 }
 
+/// The queued-job quota is a boundary on *waiting* work, tracked by
+/// the per-tenant load index: at `maxqueued=1` the second submit
+/// bounces while the first waits, and draining the queue releases the
+/// slot for the next submit.
+#[test]
+fn quota_max_queued_boundary_releases_as_the_queue_drains() {
+    let mut s = session();
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_queued: Some(1),
+            ..Default::default()
+        },
+    );
+    js.admit(&s, job_specs()[1].clone(), false, "alice").unwrap();
+    let err = js
+        .admit(&s, job_specs()[3].clone(), false, "alice")
+        .unwrap_err()
+        .to_string();
+    assert!(
+        err.contains("alice") && err.contains("limit 1"),
+        "the rejection must cite the boundary: {err}"
+    );
+    js.run_until_idle(&mut s).unwrap();
+    // Nothing of alice's is waiting any more — the quota slot frees.
+    js.admit(&s, job_specs()[3].clone(), false, "alice").unwrap();
+    js.run_until_idle(&mut s).unwrap();
+    for j in js.queue.jobs() {
+        assert_eq!(j.state, JobState::Completed);
+    }
+    js.shutdown_fleet(&mut s).unwrap();
+}
+
+/// A tenant sitting *exactly* at its cluster cap is skipped by
+/// dispatch (>= boundary, not >), its backlog runs later on the
+/// clusters it is entitled to, and the fleet never grows past the
+/// entitlement even with deeper demand queued.
+#[test]
+fn tenant_at_exact_cluster_cap_waits_without_losing_work() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: 4,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_clusters: Some(2),
+            ..Default::default()
+        },
+    );
+    // Four jobs against an entitlement of two: without the dispatch
+    // skip the queue-depth policy would buy four clusters.
+    for i in [1usize, 3, 5, 7] {
+        js.admit(&s, job_specs()[i].clone(), false, "alice").unwrap();
+    }
+    js.run_until_idle(&mut s).unwrap();
+    for j in js.queue.jobs() {
+        assert_eq!(j.state, JobState::Completed, "capped work still completes");
+    }
+    let scale_ups = js
+        .autoscaler
+        .events
+        .iter()
+        .filter(|e| e.action.contains("scale-up"))
+        .count();
+    assert!(
+        scale_ups <= 2 && js.fleet.len() <= 2,
+        "the fleet must never grow past the two-cluster entitlement; \
+         {scale_ups} scale-up(s), {} cluster(s); events: {:?}",
+        js.fleet.len(),
+        js.autoscaler.events.iter().map(|e| &e.action).collect::<Vec<_>>()
+    );
+    js.shutdown_fleet(&mut s).unwrap();
+}
+
+/// A spot reclaim must release the victim tenant's cluster-cap usage:
+/// with `maxclusters=1`, the reclaimed cluster may no longer count
+/// against the cap, or the interrupted job could never redispatch and
+/// the drain loop would hard-fail with "no capacity is dispatchable".
+#[test]
+fn cluster_cap_usage_is_released_on_spot_reclaim() {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    js.quotas.set(
+        "alice",
+        TenantQuota {
+            max_clusters: Some(1),
+            ..Default::default()
+        },
+    );
+    s.cloud.faults.spot_interruptions = 1;
+    let id = js.admit(&s, job_specs()[0].clone(), false, "alice").unwrap();
+    js.run_until_idle(&mut s).unwrap();
+    let j = js.queue.get(id).unwrap();
+    assert_eq!(
+        j.state,
+        JobState::Completed,
+        "the interrupted job must redispatch inside the released cap"
+    );
+    assert_eq!(j.interruptions, 1, "the reclaim must actually land");
+    assert!(
+        js.fleet.len() <= 1,
+        "replacement capacity still honours the one-cluster cap"
+    );
+    js.shutdown_fleet(&mut s).unwrap();
+}
+
 #[test]
 fn interrupted_jobs_record_their_interruptions() {
     let mut s = session();

@@ -1,0 +1,209 @@
+//! Crash-point coverage for the append-log persistence layer
+//! (ISSUE 6, satellite c): kill mid-append, kill mid-compaction and
+//! legacy `jobs.json` load must each restore a state bit-identical to
+//! a clean save.
+//!
+//! "Bit-identical to a clean save" is checked literally: the crashed
+//! directory and a freshly-snapshotted directory are both loaded
+//! through `jobs::persist::load` and their `to_json` documents
+//! compared as compact strings.
+
+use p2rac::coordinator::Placement;
+use p2rac::jobs::persist::{self, log_path, snapshot_path, LOG_COMPACT_RECORDS};
+use p2rac::jobs::{AutoscalerConfig, JobId, JobScheduler, JobSpec, JobState, Priority};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// A scratch directory unique to this test run; recreated empty.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("p2rac_persist_{}_{}", name, std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn spec(i: usize, deadline_s: Option<f64>) -> JobSpec {
+    JobSpec {
+        name: format!("run{i}"),
+        projectdir: format!("proj{}", i % 3),
+        rscript: "sweep.json".to_string(),
+        priority: match i % 3 {
+            0 => Priority::High,
+            1 => Priority::Normal,
+            _ => Priority::Low,
+        },
+        placement: Placement::ByNode,
+        deadline_s,
+    }
+}
+
+/// A scheduler with a mixed backlog: queued, interrupted and completed
+/// jobs across three tenants. No `Running` jobs — a running slice is
+/// not a persistable state (restart resumes from the last checkpoint),
+/// so round-trips are exercised on the states that actually persist.
+fn populated_scheduler() -> JobScheduler {
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 0,
+        max_clusters: 3,
+        nodes_per_cluster: 2,
+        ..Default::default()
+    });
+    for i in 0..6 {
+        let deadline = if i % 2 == 0 { Some(5_000.0 + i as f64) } else { None };
+        let id = js.queue.submit(spec(i, deadline), 10.0 * i as f64);
+        let j = js.queue.get_mut(id).unwrap();
+        j.analyst = format!("t{}", i % 3);
+        j.units_total = 4 + i;
+    }
+    // One interrupted, one completed job, so replay covers non-trivial
+    // state transitions, not just inserts.
+    let j = js.queue.get_mut(JobId(2)).unwrap();
+    j.state = JobState::Interrupted;
+    j.interruptions = 1;
+    j.units_done = 2;
+    j.progress = 2.0 / 6.0;
+    j.started_at_s = Some(40.0);
+    let j = js.queue.get_mut(JobId(3)).unwrap();
+    j.state = JobState::Completed;
+    j.units_done = j.units_total;
+    j.progress = 1.0;
+    j.started_at_s = Some(55.0);
+    j.completed_at_s = Some(300.0);
+    j.compute_s = 245.0;
+    js
+}
+
+/// Apply a second round of mutations after the first save, so the
+/// append log carries a genuine delta.
+fn mutate_more(js: &mut JobScheduler) {
+    for i in 6..9 {
+        let id = js.queue.submit(spec(i, None), 100.0 + i as f64);
+        let j = js.queue.get_mut(id).unwrap();
+        j.analyst = "t0".to_string();
+        j.units_total = 2;
+    }
+    // A previously-snapshotted job changes state — replay must upsert,
+    // not just insert.
+    let j = js.queue.get_mut(JobId(1)).unwrap();
+    j.state = JobState::Failed;
+}
+
+/// Load `dir` and render the restored state canonically.
+fn load_compact(dir: &Path) -> String {
+    persist::load(dir)
+        .unwrap()
+        .expect("state must load")
+        .to_json()
+        .to_string_compact()
+}
+
+/// A clean save of `js` into a fresh directory (first save = full
+/// snapshot), loaded back — the reference every crash state must
+/// match bit for bit.
+fn clean_reference(name: &str, js: &mut JobScheduler) -> String {
+    let dir = scratch(name);
+    persist::save(&dir, js).unwrap();
+    load_compact(&dir)
+}
+
+#[test]
+fn legacy_jobs_json_loads_as_a_snapshot_with_an_empty_log() {
+    let dir = scratch("legacy");
+    let mut js = populated_scheduler();
+    // A pre-append-log session directory: the full document under
+    // jobs.json, no jobs.log beside it.
+    fs::write(snapshot_path(&dir), js.to_json().to_string_pretty()).unwrap();
+    assert!(!log_path(&dir).exists());
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("legacy_ref", &mut js),
+        "a legacy jobs.json must restore bit-identically to a clean save"
+    );
+}
+
+#[test]
+fn append_log_replay_is_bit_identical_to_a_clean_save() {
+    let dir = scratch("append");
+    let mut js = populated_scheduler();
+    persist::save(&dir, &mut js).unwrap(); // snapshot
+    mutate_more(&mut js);
+    persist::save(&dir, &mut js).unwrap(); // one O(delta) log record
+    assert!(log_path(&dir).exists(), "the second save must append, not rewrite");
+    let snapshot_before = fs::read_to_string(snapshot_path(&dir)).unwrap();
+    let restored = load_compact(&dir);
+    assert_eq!(restored, clean_reference("append_ref", &mut js));
+    // The snapshot itself was untouched by the append.
+    assert_eq!(
+        fs::read_to_string(snapshot_path(&dir)).unwrap(),
+        snapshot_before
+    );
+}
+
+#[test]
+fn kill_mid_append_discards_the_torn_tail() {
+    let dir = scratch("torn");
+    let mut js = populated_scheduler();
+    persist::save(&dir, &mut js).unwrap();
+    mutate_more(&mut js);
+    persist::save(&dir, &mut js).unwrap();
+    // The crash: a later append died partway through its write. Torn
+    // bytes of a would-be record sit at the end of the log.
+    let log = fs::read_to_string(log_path(&dir)).unwrap();
+    let full_line = log.lines().next().unwrap();
+    let torn = &full_line[..full_line.len() / 2];
+    fs::write(log_path(&dir), format!("{log}{torn}")).unwrap();
+    // Replay stops at the torn record: the state of the last
+    // *successful* save is restored exactly.
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("torn_ref", &mut js),
+        "a torn tail must roll back to the previous successful save"
+    );
+}
+
+#[test]
+fn kill_mid_compaction_replays_the_stale_log_idempotently() {
+    let dir = scratch("compact_crash");
+    let mut js = populated_scheduler();
+    persist::save(&dir, &mut js).unwrap();
+    mutate_more(&mut js);
+    persist::save(&dir, &mut js).unwrap();
+    assert!(log_path(&dir).exists());
+    // The crash: compaction renamed the fresh full snapshot into place
+    // and died before unlinking the log. Every log record's effects
+    // are already inside the snapshot.
+    fs::write(snapshot_path(&dir), js.to_json().to_string_pretty()).unwrap();
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("compact_crash_ref", &mut js),
+        "replaying a stale log over a fresh snapshot must be a no-op"
+    );
+}
+
+#[test]
+fn compaction_folds_the_log_back_into_a_single_snapshot() {
+    let dir = scratch("compact");
+    let mut js = populated_scheduler();
+    persist::save(&dir, &mut js).unwrap();
+    // Enough O(delta) saves to cross the compaction threshold.
+    for i in 0..LOG_COMPACT_RECORDS {
+        let id = js.queue.submit(spec(9 + i, None), 1_000.0 + i as f64);
+        let j = js.queue.get_mut(id).unwrap();
+        j.analyst = format!("t{}", i % 3);
+        j.units_total = 1;
+        persist::save(&dir, &mut js).unwrap();
+    }
+    assert!(
+        !log_path(&dir).exists(),
+        "reaching {LOG_COMPACT_RECORDS} records must compact the log away"
+    );
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("compact_ref", &mut js),
+        "the compacted snapshot must carry the whole backlog"
+    );
+}
