@@ -1,0 +1,269 @@
+//! Observability-overhead bench (ISSUE 7): the same seeded
+//! `ec2genload`-style workload through the real [`JobScheduler`] at
+//! the three telemetry levels —
+//!
+//! * **off** — every emission site returns after one atomic load;
+//! * **metrics** — events fan into the deterministic registry;
+//! * **trace** — metrics plus JSONL lines into the in-memory sink.
+//!
+//! Runs are interleaved and timed best-of-N, and the bench asserts
+//! the metrics path costs less than 3% over the disabled path
+//! (`overhead_metrics_vs_off < 1.03` in `BENCH_obs.json`, validated
+//! by CI). On top of the timing it re-checks the plane's two
+//! correctness pillars end to end: two traced runs are bit-identical,
+//! and the event counts reconcile with the scheduler's own counters
+//! and the billing ledger.
+//!
+//! Run: `cargo bench --bench obs`
+
+use std::time::Instant;
+
+use p2rac::analytics::script::RUST_SWEEP_TILE;
+use p2rac::bench_support::emit_bench_json;
+use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::jobs::genload::{generate, GenJob, GenLoadConfig};
+use p2rac::jobs::{AutoscalerConfig, JobScheduler, JobSpec};
+use p2rac::simcloud::SimParams;
+use p2rac::telemetry::{EventKind, TelemetryLevel};
+use p2rac::util::json::Json;
+
+/// Interleaved timing rounds per level; the minimum is reported.
+const ROUNDS: usize = 5;
+/// Per-job work-unit cap (keeps one bench run around a second).
+const UNIT_CAP: u64 = 6;
+/// JSONL lines sampled into `BENCH_obs.json` for the CI
+/// well-formedness check.
+const TRACE_SAMPLE_LINES: usize = 200;
+
+struct RunOut {
+    wall_s: f64,
+    submitted: u64,
+    rejected: u64,
+    events: u64,
+    snapshot: String,
+    trace: Vec<String>,
+    reconcile_ok: bool,
+    reconcile_notes: Vec<String>,
+    phase_profile: Json,
+    events_by_kind: Json,
+}
+
+/// One full drain of the seeded workload at `level`. The returned
+/// reconciliation verdict cross-checks the registry against the
+/// scheduler and the ledger (trivially true at `Off`, where both
+/// sides are zero by construction).
+fn run_once(level: TelemetryLevel, arrivals: &[GenJob], seed: u64) -> RunOut {
+    let mut s = Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)));
+    s.cloud.spot.spike_prob = 0.0;
+    match level {
+        TelemetryLevel::Off => s.cloud.telemetry.set_level(TelemetryLevel::Off),
+        TelemetryLevel::Metrics => {}
+        TelemetryLevel::Trace => s.cloud.telemetry.enable_memory_trace(),
+    }
+    // One project per distinct unit count, exactly like `ec2genload`.
+    let mut seen = std::collections::BTreeSet::new();
+    for g in arrivals {
+        let units = g.units.min(UNIT_CAP);
+        if seen.insert(units) {
+            let n_jobs = units as usize * RUST_SWEEP_TILE;
+            s.analyst.write(
+                &format!("genload/u{units}/sweep.json"),
+                format!(r#"{{"type":"mc_sweep","n_jobs":{n_jobs},"seed":{seed}}}"#).into_bytes(),
+            );
+        }
+    }
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 4,
+        nodes_per_cluster: 2,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 2;
+    s.cloud.faults.spot_interruptions = 4;
+
+    let t0 = Instant::now();
+    let now = s.cloud.clock.now_s();
+    let (mut submitted, mut rejected) = (0u64, 0u64);
+    for (i, g) in arrivals.iter().enumerate() {
+        let units = g.units.min(UNIT_CAP);
+        let spec = JobSpec {
+            name: format!("gen-{seed}-{i}"),
+            projectdir: format!("genload/u{units}"),
+            rscript: "sweep.json".to_string(),
+            priority: g.priority,
+            placement: Placement::ByNode,
+            deadline_s: g.deadline_s.map(|d| now + (d - g.arrival_s)),
+        };
+        match js.admit(&s, spec, false, &g.tenant) {
+            Ok(_) => submitted += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let t = &s.cloud.telemetry;
+    let mut notes = Vec::new();
+    let mut check = |name: &str, lhs: u64, rhs: u64| {
+        if lhs != rhs {
+            notes.push(format!("{name}: {lhs} != {rhs}"));
+        }
+    };
+    if level != TelemetryLevel::Off {
+        check("submits vs scheduler", t.counter("jobs_submitted_total"), submitted);
+        check(
+            "reclaims vs scheduler",
+            t.counter("spot_reclaims_total"),
+            js.interruptions_delivered as u64,
+        );
+        let wan_items = s
+            .cloud
+            .ledger
+            .items()
+            .iter()
+            .filter(|i| i.detail.starts_with("WAN transfer"))
+            .count() as u64;
+        check("WAN transfers vs ledger", t.counter("wan_billed_transfers_total"), wan_items);
+        check(
+            "scale events vs autoscaler",
+            t.events_of(EventKind::Scale),
+            js.autoscaler.events.len() as u64,
+        );
+    }
+
+    let mut by_kind = Json::obj();
+    for kind in [
+        EventKind::Submit,
+        EventKind::AdmitReject,
+        EventKind::Dispatch,
+        EventKind::SliceComplete,
+        EventKind::CheckpointCommit,
+        EventKind::SpotReclaim,
+        EventKind::Scale,
+        EventKind::Transfer,
+        EventKind::Invoice,
+    ] {
+        by_kind.set(kind.label(), Json::num(t.events_of(kind) as f64));
+    }
+
+    RunOut {
+        wall_s,
+        submitted,
+        rejected,
+        events: t.events_emitted(),
+        snapshot: t.snapshot_json().to_string_compact(),
+        trace: t.take_memory_trace(),
+        reconcile_ok: notes.is_empty(),
+        reconcile_notes: notes,
+        phase_profile: js.profiler.to_json(),
+        events_by_kind: by_kind,
+    }
+}
+
+fn main() {
+    println!("=== telemetry overhead: off vs metrics vs trace ===\n");
+    let cfg = GenLoadConfig {
+        jobs: 150,
+        tenants: 12,
+        ..GenLoadConfig::default()
+    };
+    let arrivals = generate(&cfg);
+
+    let levels = [TelemetryLevel::Off, TelemetryLevel::Metrics, TelemetryLevel::Trace];
+    let mut best = [f64::INFINITY; 3];
+    let mut rounds: Vec<[f64; 3]> = Vec::new();
+    let mut last: [Option<RunOut>; 3] = [None, None, None];
+    for round in 0..ROUNDS {
+        let mut row = [0.0f64; 3];
+        for (i, level) in levels.iter().enumerate() {
+            let out = run_once(*level, &arrivals, cfg.seed);
+            row[i] = out.wall_s;
+            best[i] = best[i].min(out.wall_s);
+            last[i] = Some(out);
+        }
+        rounds.push(row);
+        println!(
+            "  round {round}: off {:.3}s  metrics {:.3}s  trace {:.3}s",
+            row[0], row[1], row[2]
+        );
+    }
+    let overhead_metrics = best[1] / best[0].max(1e-9);
+    let overhead_trace = best[2] / best[0].max(1e-9);
+    println!(
+        "\n  best-of-{ROUNDS}: off {:.3}s  metrics {:.3}s ({overhead_metrics:.3}x)  \
+         trace {:.3}s ({overhead_trace:.3}x)",
+        best[0], best[1], best[2]
+    );
+
+    let off = last[0].take().unwrap();
+    let metrics = last[1].take().unwrap();
+    let trace = last[2].take().unwrap();
+
+    // Determinism: a second traced drain replays identical bytes.
+    let replay = run_once(TelemetryLevel::Trace, &arrivals, cfg.seed);
+    let snapshot_identical = trace.snapshot == replay.snapshot;
+    let trace_identical = trace.trace == replay.trace;
+    println!(
+        "  determinism: snapshot {}  trace {} ({} lines)",
+        snapshot_identical,
+        trace_identical,
+        trace.trace.len()
+    );
+    for out in [&metrics, &trace, &replay] {
+        for n in &out.reconcile_notes {
+            eprintln!("  reconcile mismatch: {n}");
+        }
+    }
+
+    assert!(off.events == 0, "the Off path must record nothing");
+    assert!(trace.events > 0 && !trace.trace.is_empty());
+    assert!(snapshot_identical && trace_identical, "telemetry must be deterministic");
+    assert!(
+        metrics.reconcile_ok && trace.reconcile_ok && replay.reconcile_ok,
+        "event counts must reconcile with the scheduler and ledger"
+    );
+    assert!(
+        overhead_metrics < 1.03,
+        "metrics-level telemetry must cost <3% over the disabled path, got {overhead_metrics:.3}x"
+    );
+
+    let mut report = Json::obj();
+    let mut runs = Vec::new();
+    for (i, (level, out)) in levels.iter().zip([&off, &metrics, &trace]).enumerate() {
+        let mut o = Json::obj();
+        o.set("level", Json::str(level.label()));
+        o.set("wall_s_best", Json::num(best[i]));
+        o.set(
+            "wall_s_rounds",
+            Json::Arr(rounds.iter().map(|r| Json::num(r[i])).collect()),
+        );
+        o.set("events", Json::num(out.events as f64));
+        o.set("jobs_submitted", Json::num(out.submitted as f64));
+        o.set("jobs_rejected", Json::num(out.rejected as f64));
+        o.set("reconcile_ok", Json::Bool(out.reconcile_ok));
+        runs.push(o);
+    }
+    report.set("runs", Json::Arr(runs));
+    report.set("overhead_metrics_vs_off", Json::num(overhead_metrics));
+    report.set("overhead_trace_vs_off", Json::num(overhead_trace));
+    report.set(
+        "determinism",
+        Json::from_pairs(vec![
+            ("snapshot_identical", Json::Bool(snapshot_identical)),
+            ("trace_identical", Json::Bool(trace_identical)),
+        ]),
+    );
+    report.set("events_by_kind", trace.events_by_kind.clone());
+    report.set(
+        "trace_sample",
+        Json::arr_str(trace.trace.iter().take(TRACE_SAMPLE_LINES).cloned().collect::<Vec<_>>()),
+    );
+    report.set("phase_profile", metrics.phase_profile.clone());
+    match emit_bench_json("obs", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_obs.json: {e}"),
+    }
+    println!("\nobs bench complete.");
+}

@@ -209,8 +209,86 @@ def validate_scale(report):
         )
 
 
+def validate_obs(report):
+    """BENCH_obs.json: telemetry overhead + determinism + reconciliation.
+
+    Three runs of the same seeded workload at levels off/metrics/trace;
+    the disabled path must record nothing, the metrics path must cost
+    <3% over it, two traced runs must be bit-identical, the event
+    counts must reconcile with the scheduler and ledger, and the
+    sampled JSONL trace must be well-formed with strictly increasing
+    sequence numbers.
+    """
+    runs = _rows(report, "runs", 3)
+    by_level = {r["level"]: r for r in runs}
+    require(
+        set(by_level) == {"off", "metrics", "trace"},
+        f"unexpected run levels: {sorted(by_level)}",
+    )
+    for r in runs:
+        require(r["wall_s_best"] > 0, f"{r['level']}: empty run")
+        require(
+            r["jobs_submitted"] > 0,
+            f"{r['level']}: workload admitted no jobs",
+        )
+        require(r["reconcile_ok"] is True, f"{r['level']}: reconciliation failed")
+    require(by_level["off"]["events"] == 0, "the disabled path must record nothing")
+    require(by_level["trace"]["events"] > 0, "the traced run must record events")
+    require(
+        by_level["metrics"]["jobs_submitted"] == by_level["off"]["jobs_submitted"],
+        "admission outcomes diverged across telemetry levels",
+    )
+
+    overhead = report["overhead_metrics_vs_off"]
+    require(
+        0 < overhead < 1.03,
+        f"metrics-level overhead must stay under 3% (got {overhead:.3f}x)",
+    )
+    require(report["overhead_trace_vs_off"] > 0, "trace overhead must be recorded")
+
+    determinism = report.get("determinism")
+    require(isinstance(determinism, dict), "'determinism' must be an object")
+    for key in ("snapshot_identical", "trace_identical"):
+        require(determinism.get(key) is True, f"determinism check '{key}' did not hold")
+
+    by_kind = report.get("events_by_kind")
+    require(isinstance(by_kind, dict), "'events_by_kind' must be an object")
+    for kind in ("submit", "dispatch", "slice-complete", "spot-reclaim", "scale"):
+        require(by_kind.get(kind, 0) > 0, f"scenario must record '{kind}' events")
+
+    sample = _rows(report, "trace_sample")
+    require(len(sample) > 0, "trace_sample must carry JSONL lines")
+    prev_seq = -1
+    for i, line in enumerate(sample):
+        try:
+            ev = json.loads(line)
+        except ValueError as e:
+            raise Violation(f"trace_sample[{i}] is not valid JSON: {e}")
+        require(isinstance(ev, dict), f"trace_sample[{i}] must be an object")
+        for key in ("seq", "t_s", "kind"):
+            require(key in ev, f"trace_sample[{i}] missing '{key}'")
+        require(
+            ev["seq"] > prev_seq,
+            f"trace_sample[{i}]: seq {ev['seq']} not increasing (prev {prev_seq})",
+        )
+        prev_seq = ev["seq"]
+
+    profile = _rows(report, "phase_profile")
+    require(len(profile) > 0, "phase_profile must carry entries")
+    for entry in profile:
+        require(
+            entry["phase"] and entry["entries"] >= 0 and entry["wall_s"] >= 0,
+            f"implausible phase-profile entry: {entry}",
+        )
+    require(
+        any(e["entries"] > 0 for e in profile),
+        "the scheduler must have profiled at least one phase",
+    )
+
+
 SCHEMAS = {
     "BENCH_micro.json": validate_micro,
+    "BENCH_obs.json": validate_obs,
     "BENCH_queue.json": validate_queue,
     "BENCH_scale.json": validate_scale,
     "BENCH_storage.json": validate_storage,

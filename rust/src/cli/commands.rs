@@ -11,6 +11,7 @@ use crate::jobs::{
     parse_deadline, BidStrategy, JobId, JobScheduler, JobSpec, Priority, ScalePolicy,
 };
 use crate::simcloud::SpanCategory;
+use crate::telemetry::{trace, EventKind, TelemetryLevel};
 use crate::util::argparse::{CommandSpec, ParsedArgs};
 use crate::util::humanfmt;
 use crate::util::json::Json;
@@ -125,6 +126,7 @@ pub fn registry() -> Vec<CommandSpec> {
                 "resident",
                 "keep checkpoints cluster-side (EBS+S3+snapshot); resume pays LAN, not WAN",
             )
+            .value_arg("trace", "append JSONL telemetry events to this file (raises level to trace)")
             .exclusive(&["bynode", "byslot"]),
         CommandSpec::new("ec2snapshot", "point-in-time EBS snapshot of a resource's volume")
             .value_arg("iname", "instance whose volume to snapshot")
@@ -151,11 +153,13 @@ pub fn registry() -> Vec<CommandSpec> {
         CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
             .switch_arg("drain", "run the scheduler until every job completes")
             .switch_arg("shutdown", "terminate the fleet and bill its usage")
-            .switch_arg("json", "emit queue depth and per-tenant load as JSON"),
+            .switch_arg("json", "emit queue depth and per-tenant load as JSON")
+            .switch_arg("profile", "show wall-clock per scheduler phase for this invocation"),
         CommandSpec::new("ec2genload", "submit a synthetic multi-tenant workload to the queue")
             .value_arg("jobs", "number of jobs to generate (default 200)")
             .value_arg("tenants", "number of distinct tenants (default 8)")
             .value_arg("seed", "workload seed (default 7)")
+            .value_arg("trace", "append JSONL telemetry events to this file (raises level to trace)")
             .switch_arg("json", "emit a summary of the generated workload as JSON"),
         CommandSpec::new("ec2autoscale", "configure the elastic fleet autoscaler")
             .value_arg("min", "minimum fleet clusters")
@@ -172,6 +176,15 @@ pub fn registry() -> Vec<CommandSpec> {
             .switch_arg("spot", "buy fleet capacity on the spot market")
             .switch_arg("ondemand", "buy fleet capacity on demand")
             .exclusive(&["spot", "ondemand"]),
+        CommandSpec::new("ec2metrics", "deterministic metrics snapshot from the telemetry bus")
+            .value_arg("level", "set the recording level first: off | metrics | trace")
+            .switch_arg("json", "emit the snapshot as JSON instead of text")
+            .switch_arg("prom", "emit Prometheus-style exposition text")
+            .exclusive(&["json", "prom"]),
+        CommandSpec::new("ec2trace", "summarise or export a recorded JSONL telemetry trace")
+            .value_arg("file", "trace file to read (default: the session's -trace sink)")
+            .value_arg("chrome", "also write a Chrome trace-event JSON file to this path")
+            .switch_arg("json", "emit the summary as JSON instead of text"),
         CommandSpec::new("mkproject", "create an example analytics project at the Analyst site")
             .value_arg("projectdir", "project directory to create")
             .value_arg("kind", "catopt | sweep")
@@ -552,10 +565,69 @@ pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
                 anyhow!("-analyst is required (run `report` to see tenants with charges)")
             })?;
             let inv = s.cloud.ledger.invoice_for(analyst);
+            if s.cloud.telemetry.on() {
+                s.cloud.telemetry.emit(
+                    s.cloud.clock.now_s(),
+                    EventKind::Invoice,
+                    analyst,
+                    None,
+                    None,
+                    Json::from_pairs(vec![
+                        ("total_centi_cents", Json::num(inv.total_centi_cents() as f64)),
+                        ("lines", Json::num(inv.lines().len() as f64)),
+                    ]),
+                );
+            }
             if p.switch("json") {
                 Ok(inv.to_json().to_string_pretty())
             } else {
                 Ok(inv.lines().join("\n"))
+            }
+        }
+        "ec2metrics" => {
+            if let Some(lvl) = p.value("level") {
+                let level = match lvl {
+                    "off" => TelemetryLevel::Off,
+                    "metrics" => TelemetryLevel::Metrics,
+                    "trace" => TelemetryLevel::Trace,
+                    other => bail!("unknown telemetry level '{other}' (off | metrics | trace)"),
+                };
+                s.cloud.telemetry.set_level(level);
+            }
+            if p.switch("json") {
+                Ok(s.cloud.telemetry.snapshot_json().to_string_pretty())
+            } else if p.switch("prom") {
+                Ok(s.cloud.telemetry.prometheus_text())
+            } else {
+                Ok(s.cloud.telemetry.text_lines().join("\n"))
+            }
+        }
+        "ec2trace" => {
+            let path = match p.value("file") {
+                Some(f) => f.to_string(),
+                None => s.cloud.telemetry.trace_path().ok_or_else(|| {
+                    anyhow!(
+                        "-file is required (this session has no -trace sink; \
+                         record one with ec2genload -trace <path>)"
+                    )
+                })?,
+            };
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("cannot read trace '{path}': {e}"))?;
+            let summary = trace::TraceSummary::from_lines(text.lines())?;
+            if let Some(out) = p.value("chrome") {
+                let doc = trace::chrome_from_lines(text.lines())?;
+                std::fs::write(out, doc.to_string_pretty())
+                    .map_err(|e| anyhow!("cannot write '{out}': {e}"))?;
+                return Ok(format!(
+                    "wrote Chrome trace ({} events) to {out}\nopen it in chrome://tracing or Perfetto",
+                    summary.events
+                ));
+            }
+            if p.switch("json") {
+                Ok(summary.to_json().to_string_pretty())
+            } else {
+                Ok(summary.lines().join("\n"))
             }
         }
         "report" => Ok(report(s)),
@@ -575,6 +647,9 @@ pub fn apply_with_jobs(
 ) -> Result<String> {
     match cmd {
         "ec2submitjob" => {
+            if let Some(path) = p.value("trace") {
+                s.cloud.telemetry.set_trace_file(path);
+            }
             let rscript = pick_script(s, p)?;
             let priority = Priority::parse(p.value_or("priority", "normal"))?;
             let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
@@ -752,12 +827,26 @@ pub fn apply_with_jobs(
                     })
                     .collect();
                 o.set("tenants", Json::Arr(tenants));
+                if p.switch("profile") {
+                    o.set("profile", js.profiler.to_json());
+                }
                 return Ok(o.to_string_pretty());
             }
             out.extend(js.status());
+            if p.switch("profile") {
+                let lines = js.profiler.lines();
+                if lines.is_empty() {
+                    out.push("no scheduler phases profiled this invocation".to_string());
+                } else {
+                    out.extend(lines);
+                }
+            }
             Ok(out.join("\n"))
         }
         "ec2genload" => {
+            if let Some(path) = p.value("trace") {
+                s.cloud.telemetry.set_trace_file(path);
+            }
             let cfg = crate::jobs::genload::GenLoadConfig {
                 jobs: p.usize_value("jobs")?.unwrap_or(200),
                 tenants: p.usize_value("tenants")?.unwrap_or(8).max(1),
@@ -1103,9 +1192,60 @@ mod tests {
             "ec2lsobjects",
             "ec2quota",
             "ec2invoice",
+            "ec2genload",
+            "ec2metrics",
+            "ec2trace",
         ] {
             assert!(h.contains(c), "help missing {c}");
         }
+    }
+
+    #[test]
+    fn metrics_command_reports_the_bus() {
+        let mut s = session();
+        s.cloud.telemetry.emit(0.0, EventKind::Submit, "alice", None, None, Json::obj());
+        let out = run(&mut s, "ec2metrics", &[]).unwrap();
+        assert!(out.contains("telemetry level metrics"), "{out}");
+        assert!(out.contains("jobs_submitted_total"), "{out}");
+        let out = run(&mut s, "ec2metrics", &["-json"]).unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.opt_str("level").as_deref(), Some("metrics"));
+        assert_eq!(j.get("events").and_then(Json::as_u64), Some(1));
+        let out = run(&mut s, "ec2metrics", &["-prom"]).unwrap();
+        assert!(out.contains("p2rac_jobs_submitted_total 1"), "{out}");
+        // The level switch round-trips.
+        run(&mut s, "ec2metrics", &["-level", "off"]).unwrap();
+        assert!(!s.cloud.telemetry.on());
+        assert!(run(&mut s, "ec2metrics", &["-level", "loud"]).is_err());
+    }
+
+    #[test]
+    fn trace_command_summarises_and_exports() {
+        let dir = std::env::temp_dir().join(format!("p2rac-cli-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        std::fs::write(
+            &path,
+            "{\"detail\":{},\"kind\":\"submit\",\"seq\":1,\"t_s\":0,\"tenant\":\"a\"}\n\
+             {\"cluster\":\"fleet1\",\"detail\":{\"duration_s\":60,\"from_s\":5},\"job\":\"job-1\",\
+             \"kind\":\"slice-complete\",\"seq\":2,\"t_s\":65,\"tenant\":\"a\"}\n",
+        )
+        .unwrap();
+        let mut s = session();
+        // No sink configured and no -file: a clean error.
+        assert!(run(&mut s, "ec2trace", &[]).is_err());
+        let p = path.to_str().unwrap();
+        let out = run(&mut s, "ec2trace", &["-file", p]).unwrap();
+        assert!(out.contains("2 events"), "{out}");
+        let out = run(&mut s, "ec2trace", &["-file", p, "-json"]).unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.path(&["by_kind", "slice-complete"]).and_then(Json::as_u64), Some(1));
+        let chrome = dir.join("t.chrome.json");
+        let c = chrome.to_str().unwrap();
+        run(&mut s, "ec2trace", &["-file", p, "-chrome", c]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&chrome).unwrap()).unwrap();
+        assert_eq!(doc.get("traceEvents").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

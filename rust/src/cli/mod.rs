@@ -69,10 +69,15 @@ pub fn load_session(engine: Box<dyn ScriptEngine>) -> Result<Session> {
     }
 }
 
-/// Persist the session.
+/// Persist the session. Also the telemetry flush point: buffered
+/// JSONL trace lines reach their `-trace` file exactly when the
+/// session state they describe reaches disk.
 pub fn save_session(session: &Session) -> Result<()> {
     let dir = session_dir();
     std::fs::create_dir_all(&dir)?;
+    if let Err(e) = session.cloud.telemetry.flush() {
+        crate::log_warn!("telemetry trace flush failed: {e}");
+    }
     std::fs::write(session_path(), session.to_json().to_string_compact())
         .with_context(|| format!("writing {}", session_path().display()))
 }
@@ -102,14 +107,18 @@ pub fn load_jobs() -> Result<JobScheduler> {
 
 /// Persist the job-queue/autoscaler state and the tenant quota book.
 /// Jobs persist through the append log (O(mutated jobs) per command,
-/// periodically compacted); the small quota book still rewrites.
+/// periodically compacted); the small quota book still rewrites. The
+/// wall-clock cost lands in the scheduler's `persist` profile phase.
 pub fn save_jobs(js: &mut JobScheduler) -> Result<()> {
+    let t0 = std::time::Instant::now();
     let dir = session_dir();
     std::fs::create_dir_all(&dir)?;
     crate::jobs::persist::save(&dir, js)
         .with_context(|| format!("saving jobs state to {}", dir.display()))?;
     std::fs::write(quotas_path(), js.quotas.to_json().to_string_compact())
-        .with_context(|| format!("writing {}", quotas_path().display()))
+        .with_context(|| format!("writing {}", quotas_path().display()))?;
+    js.profiler.add(crate::telemetry::Phase::Persist, t0.elapsed());
+    Ok(())
 }
 
 /// Entry point used by `main.rs`; returns the process exit code.

@@ -17,6 +17,8 @@
 use super::FleetCluster;
 use crate::coordinator::{CreateClusterOpts, Session};
 use crate::simcloud::{instance_type, PriceForecast, SpotMarket};
+use crate::telemetry::EventKind;
+use crate::util::json::Json;
 use anyhow::{bail, Result};
 
 /// Margin over the forecast's expected price for the
@@ -245,7 +247,31 @@ impl Autoscaler {
         }
     }
 
-    fn note(&mut self, at_s: f64, action: String) {
+    /// Record a scaling decision: the in-memory event log (tests and
+    /// the fleet status line read it), the stderr log, and a `scale`
+    /// telemetry event whose `action` field is the decision verb
+    /// (`scale-up` / `scale-down` / `convert` / `resize`).
+    fn note(&mut self, s: &Session, action: String) {
+        let at_s = s.cloud.clock.now_s();
+        crate::log_info!("autoscaler: {action}");
+        if s.cloud.telemetry.on() {
+            let verb = action
+                .split_whitespace()
+                .next()
+                .unwrap_or("other")
+                .trim_end_matches(':');
+            s.cloud.telemetry.emit(
+                at_s,
+                EventKind::Scale,
+                "",
+                None,
+                None,
+                Json::from_pairs(vec![
+                    ("action", Json::str(verb)),
+                    ("detail", Json::str(&action)),
+                ]),
+            );
+        }
         self.events.push(ScaleEvent { at_s, action });
     }
 
@@ -314,8 +340,7 @@ impl Autoscaler {
             };
             let name = fleet.remove(pos).name;
             s.terminate_cluster(Some(&name), true)?;
-            let now = s.cloud.clock.now_s();
-            self.note(now, format!("scale-down: terminated {name}"));
+            self.note(s, format!("scale-down: terminated {name}"));
         }
 
         // Purchase-model conversions, idle capacity only. Short of
@@ -343,9 +368,8 @@ impl Autoscaler {
                 let name = fleet.remove(pos).name;
                 s.terminate_cluster(Some(&name), true)?;
                 released += 1;
-                let now = s.cloud.clock.now_s();
                 self.note(
-                    now,
+                    s,
                     format!("convert: released spot {name} for on-demand deadline capacity"),
                 );
             }
@@ -376,8 +400,7 @@ impl Autoscaler {
                 let cur = s.clusters_cfg.get(&name).map(|e| e.size).unwrap_or(target);
                 if cur != target {
                     s.resize_cluster(Some(&name), target)?;
-                    let now = s.cloud.clock.now_s();
-                    self.note(now, format!("resize: {name} {cur} -> {target}"));
+                    self.note(s, format!("resize: {name} {cur} -> {target}"));
                 }
             }
         }
@@ -405,9 +428,8 @@ impl Autoscaler {
             bid_centi_cents_hour: bid,
             ..Default::default()
         })?;
-        let now = s.cloud.clock.now_s();
         self.note(
-            now,
+            s,
             format!(
                 "scale-up: created {name} ({csize} x {}, {})",
                 self.cfg.itype,

@@ -71,12 +71,14 @@ use crate::coordinator::Session;
 use crate::datasync::{sync_dir, Protocol, DEFAULT_BLOCK_LEN};
 use crate::simcloud::s3::{digest_update, DIGEST_SEED};
 use crate::simcloud::{instance_type, Link, SpanCategory, SpotMarket};
+use crate::telemetry::{EventKind, Phase, PhaseProfiler};
 use crate::util::humanfmt;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 use std::cmp::Reverse;
 use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::fmt;
+use std::time::Instant;
 
 /// Fractional headroom the deadline decision demands over the
 /// risk-adjusted remaining-time estimate: covers what the estimator
@@ -312,6 +314,11 @@ pub struct JobScheduler {
     pub quotas: QuotaBook,
     /// Human-readable scheduling decisions, in order.
     pub log: Vec<String>,
+    /// Wall-clock self-profile of the drain loop's phases (dispatch,
+    /// interruption scan, autoscale, completion). Host-side
+    /// measurement only: never persisted, never part of a
+    /// deterministic snapshot.
+    pub profiler: PhaseProfiler,
 }
 
 impl JobScheduler {
@@ -337,6 +344,7 @@ impl JobScheduler {
             unit_s_prior: None,
             quotas: QuotaBook::new(),
             log: Vec::new(),
+            profiler: PhaseProfiler::default(),
         }
     }
 
@@ -345,7 +353,9 @@ impl JobScheduler {
     /// deadline decisions have an estimate before the first slice runs.
     pub fn submit(&mut self, s: &Session, spec: JobSpec) -> JobId {
         let sized = self.size_job(s, &spec);
-        self.submit_sized(s, spec, sized)
+        let id = self.submit_sized(s, spec, sized);
+        self.note_submitted(s, id);
+        id
     }
 
     /// Submit with the `(units_total, unit-seconds hint)` already
@@ -374,11 +384,53 @@ impl JobScheduler {
         resident: bool,
         analyst: &str,
     ) -> JobId {
-        let id = self.submit(s, spec);
+        let sized = self.size_job(s, &spec);
+        let id = self.submit_sized(s, spec, sized);
         let job = self.queue.get_mut(id).expect("just submitted");
         job.resident = resident;
         job.analyst = analyst.to_string();
+        self.note_submitted(s, id);
         id
+    }
+
+    /// Emit the Submit telemetry event for a job whose tenant/options
+    /// are final — the one exit point of every submission path.
+    fn note_submitted(&self, s: &Session, id: JobId) {
+        if !s.cloud.telemetry.on() {
+            return;
+        }
+        let Some(job) = self.queue.get(id) else {
+            return;
+        };
+        s.cloud.telemetry.emit(
+            job.submitted_at_s,
+            EventKind::Submit,
+            &job.analyst,
+            Some(&id.to_string()),
+            None,
+            Json::from_pairs(vec![
+                ("priority", Json::str(job.spec.priority.label())),
+                ("units_total", Json::num(job.units_total as f64)),
+                (
+                    "deadline_s",
+                    job.spec.deadline_s.map(Json::num).unwrap_or(Json::Null),
+                ),
+            ]),
+        );
+    }
+
+    /// Emit an AdmitReject event (reason-coded) and a log line just
+    /// before `admit` refuses a submission.
+    fn note_rejected(&self, s: &Session, analyst: &str, reason: &str) {
+        crate::log_info!("admit rejected for tenant '{analyst}': {reason}");
+        s.cloud.telemetry.emit(
+            s.cloud.clock.now_s(),
+            EventKind::AdmitReject,
+            analyst,
+            None,
+            None,
+            Json::from_pairs(vec![("reason", Json::str(reason))]),
+        );
     }
 
     /// `ec2submitjob`'s entry point: enforce the tenant's governance
@@ -401,6 +453,7 @@ impl JobScheduler {
             // rather than queue a job the drain loop must hard-fail
             // on later.
             if q.max_clusters == Some(0) {
+                self.note_rejected(s, analyst, "quota_clusters");
                 bail!(
                     "tenant '{analyst}': cluster quota is 0, so a submitted job could \
                      never dispatch; raise the limit with \
@@ -417,6 +470,7 @@ impl JobScheduler {
                     })
                     .count();
                 if queued >= max_queued {
+                    self.note_rejected(s, analyst, "quota_queued");
                     bail!(
                         "tenant '{analyst}': queued-job quota reached (limit {max_queued}, \
                          currently {queued} queued); drain the queue or raise the limit with \
@@ -433,6 +487,7 @@ impl JobScheduler {
                     .sum();
                 let used_centihours = used_s / SECONDS_PER_CENTIHOUR;
                 if used_centihours >= max_centihours as f64 {
+                    self.note_rejected(s, analyst, "quota_centihours");
                     bail!(
                         "tenant '{analyst}': compute budget exhausted (limit {max_centihours} \
                          centihour(s) = {}, already committed {}); raise the limit with \
@@ -447,6 +502,7 @@ impl JobScheduler {
         if let Some(deadline) = spec.deadline_s {
             let now = s.cloud.clock.now_s();
             if deadline <= now {
+                self.note_rejected(s, analyst, "deadline_past");
                 bail!(
                     "deadline t={deadline:.0}s is already in the past (virtual now is \
                      t={now:.0}s): the job could only miss it"
@@ -463,6 +519,7 @@ impl JobScheduler {
                 };
                 let min_slice_s = unit_s * slice_cap as f64;
                 if deadline - now < min_slice_s {
+                    self.note_rejected(s, analyst, "deadline_too_tight");
                     bail!(
                         "deadline is {} away but one slice of this workload needs about {} \
                          of compute: the job could only miss it (resubmit without -deadline, \
@@ -477,6 +534,7 @@ impl JobScheduler {
         let job = self.queue.get_mut(id).expect("just submitted");
         job.resident = resident;
         job.analyst = analyst.to_string();
+        self.note_submitted(s, id);
         Ok(id)
     }
 
@@ -688,6 +746,7 @@ impl JobScheduler {
             if pending == 0 && self.live_slices.is_empty() {
                 break;
             }
+            let t0 = Instant::now();
             let demand = self.demand(s);
             if !self.reconcile_is_noop(&demand) {
                 self.autoscaler
@@ -695,7 +754,10 @@ impl JobScheduler {
                 // Reconcile may add/remove/convert slots: rebuild.
                 self.reindex_fleet();
             }
+            self.profiler.add(Phase::Autoscale, t0.elapsed());
+            let t0 = Instant::now();
             self.dispatch_ready(s)?;
+            self.profiler.add(Phase::Dispatch, t0.elapsed());
 
             if self.live_slices.is_empty() {
                 if self.queue.pending() > 0 {
@@ -753,6 +815,7 @@ impl JobScheduler {
             // at all skips the scan — nothing is reclaimable, and
             // armed fault-plan interruptions are not consumed against
             // an all-on-demand fleet either way.
+            let t0 = Instant::now();
             let interruption = if self.fleet_spot_count > 0 {
                 let busy: Vec<String> = self
                     .live_slices
@@ -769,6 +832,7 @@ impl JobScheduler {
             } else {
                 None
             };
+            self.profiler.add(Phase::InterruptionScan, t0.elapsed());
             if let Some((cname, t_int)) = interruption {
                 let now = s.cloud.clock.now_s();
                 if t_int > now {
@@ -787,7 +851,9 @@ impl JobScheduler {
                 s.cloud.clock.advance(at - now);
             }
             let ev = self.pop_earliest_slice().expect("live slices checked");
+            let t0 = Instant::now();
             self.complete_slice(s, ev)?;
+            self.profiler.add(Phase::Complete, t0.elapsed());
         }
         Ok(())
     }
@@ -1292,6 +1358,7 @@ impl JobScheduler {
             if job.resident {
                 s.cloud.s3_delete(checkpoint::CHECKPOINT_BUCKET, &jid.to_string()).ok();
             }
+            crate::log_warn!("{jid} failed to start: {e:#}");
             self.log.push(format!("{jid} failed to start: {e:#}"));
         }
         Ok(())
@@ -1464,14 +1531,31 @@ impl JobScheduler {
         }
 
         s.set_cluster_lock(&cname, true)?;
-        {
+        let (wait_s, first_dispatch) = {
             let job = self.queue.get_mut(jid).expect("job exists");
+            let first_dispatch = job.started_at_s.is_none();
+            let wait_s = (now0 - job.ready_since_s).max(0.0);
             job.state = JobState::Running;
             job.assigned = Some(cname.clone());
             job.project_on = Some(cname.clone());
-            if job.started_at_s.is_none() {
+            if first_dispatch {
                 job.started_at_s = Some(now0);
             }
+            (wait_s, first_dispatch)
+        };
+        crate::log_debug!("{jid} dispatched on {cname} after {wait_s:.0}s queued");
+        if s.cloud.telemetry.on() {
+            s.cloud.telemetry.emit(
+                now0,
+                EventKind::Dispatch,
+                &analyst,
+                Some(&key),
+                Some(&cname),
+                Json::from_pairs(vec![
+                    ("wait_s", Json::num(wait_s)),
+                    ("first", Json::Bool(first_dispatch)),
+                ]),
+            );
         }
         self.fleet[slot].running = Some(jid);
         self.idle_spot.remove(&slot);
@@ -1565,6 +1649,9 @@ impl JobScheduler {
             if ev.failed {
                 job.retries += 1;
                 job.state = JobState::Queued;
+                // The job re-enters the queue now: its next dispatch
+                // wait is measured from here, not from submission.
+                job.ready_since_s = now;
                 None
             } else {
                 job.compute_s += ev.virtual_s;
@@ -1607,12 +1694,60 @@ impl JobScheduler {
                         }
                     }
                     job.state = JobState::Queued;
+                    job.ready_since_s = now;
                     None
                 }
             }
         };
         s.cloud.ledger.set_analyst("");
+        if s.cloud.telemetry.on() {
+            // Deadline margin is only final (and only interesting for
+            // the histogram) once the job completes.
+            let margin_s = if ev.finished && !ev.failed {
+                self.queue
+                    .get(ev.job)
+                    .and_then(|j| self.deadline_margin_s(s, j))
+            } else {
+                None
+            };
+            let mut detail = Json::from_pairs(vec![
+                ("from_s", Json::num(ev.from_s.min(now))),
+                ("duration_s", Json::num((now - ev.from_s).max(0.0))),
+                ("units_run", Json::num(ev.units_run as f64)),
+                ("failed", Json::Bool(ev.failed)),
+                ("finished", Json::Bool(ev.finished && !ev.failed)),
+            ]);
+            if let Some(m) = margin_s {
+                detail.set("margin_s", Json::num(m));
+            }
+            s.cloud.telemetry.emit(
+                now,
+                EventKind::SliceComplete,
+                &analyst,
+                Some(&key),
+                Some(&ev.cluster),
+                detail,
+            );
+            if !ev.failed && !ev.finished {
+                // The continuing job committed a checkpoint (resident:
+                // volume + S3 + snapshot; default: shipped to the
+                // Analyst over the WAN).
+                s.cloud.telemetry.emit(
+                    now,
+                    EventKind::CheckpointCommit,
+                    &analyst,
+                    Some(&key),
+                    Some(&ev.cluster),
+                    Json::from_pairs(vec![("resident", Json::Bool(resident))]),
+                );
+            }
+        }
         if ev.failed {
+            crate::log_warn!(
+                "{} slice failed on {} (worker exec failure); rescheduling from checkpoint",
+                ev.job,
+                ev.cluster
+            );
             self.log.push(format!(
                 "{} slice failed on {} (worker exec failure); rescheduling from checkpoint",
                 ev.job, ev.cluster
@@ -1635,6 +1770,7 @@ impl JobScheduler {
             for (rel, bytes) in &ev.files {
                 s.analyst.write(&format!("{local}/{rel}"), bytes.clone());
             }
+            crate::log_info!("{} completed on {}", ev.job, ev.cluster);
             self.log
                 .push(format!("{} completed on {}", ev.job, ev.cluster));
         }
@@ -1648,6 +1784,7 @@ impl JobScheduler {
     /// the shrunken fleet on its next reconcile and replaces the lost
     /// capacity.
     fn handle_interruption(&mut self, s: &mut Session, cname: &str) -> Result<()> {
+        let now = s.cloud.clock.now_s();
         if let Some(ev) = self.take_slice_of_cluster(cname) {
             let job = self
                 .queue
@@ -1656,11 +1793,43 @@ impl JobScheduler {
             job.state = JobState::Interrupted;
             job.interruptions += 1;
             job.assigned = None;
+            // Back in line from the moment of the reclaim.
+            job.ready_since_s = now;
+            let tenant = job.analyst.clone();
+            crate::log_warn!(
+                "spot interruption reclaimed {cname} mid-slice of {}; \
+                 will resume from checkpoint",
+                ev.job
+            );
+            if s.cloud.telemetry.on() {
+                s.cloud.telemetry.emit(
+                    now,
+                    EventKind::SpotReclaim,
+                    &tenant,
+                    Some(&ev.job.to_string()),
+                    Some(cname),
+                    Json::from_pairs(vec![("mid_slice", Json::Bool(true))]),
+                );
+            }
             self.log.push(format!(
                 "spot interruption reclaimed {} mid-slice of {}; will resume from checkpoint",
                 cname, ev.job
             ));
         } else {
+            crate::log_warn!(
+                "spot interruption reclaimed idle cluster {cname}; \
+                 autoscaler will replace the lost capacity"
+            );
+            if s.cloud.telemetry.on() {
+                s.cloud.telemetry.emit(
+                    now,
+                    EventKind::SpotReclaim,
+                    "",
+                    None,
+                    Some(cname),
+                    Json::from_pairs(vec![("mid_slice", Json::Bool(false))]),
+                );
+            }
             self.log.push(format!(
                 "spot interruption reclaimed idle cluster {cname}; \
                  autoscaler will replace the lost capacity"

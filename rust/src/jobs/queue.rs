@@ -217,6 +217,12 @@ pub struct Job {
     pub project_on: Option<String>,
     /// Virtual time of submission.
     pub submitted_at_s: f64,
+    /// Virtual time the job last became ready to dispatch: submission,
+    /// a requeue after a failed slice, or a spot interruption. The
+    /// telemetry queue-wait histogram measures dispatch time minus
+    /// this, so one long-lived checkpointed job contributes its actual
+    /// per-dispatch waits, not its whole lifetime per slice.
+    pub ready_since_s: f64,
     /// Virtual time the first slice was dispatched, if any.
     pub started_at_s: Option<f64>,
     /// Virtual time the finishing slice's results landed, if any.
@@ -622,6 +628,7 @@ impl JobQueue {
                 resume_snapshot: None,
                 project_on: None,
                 submitted_at_s: now_s,
+                ready_since_s: now_s,
                 started_at_s: None,
                 completed_at_s: None,
                 interruptions: 0,
@@ -901,6 +908,7 @@ impl JobQueue {
                 j.project_on.as_ref().map(Json::str).unwrap_or(Json::Null),
             );
             o.set("submitted_at_s", Json::num(j.submitted_at_s));
+            o.set("ready_since_s", Json::num(j.ready_since_s));
             o.set(
                 "started_at_s",
                 j.started_at_s.map(Json::num).unwrap_or(Json::Null),
@@ -987,6 +995,10 @@ impl JobQueue {
                     resume_snapshot: o.opt_str("resume_snapshot"),
                     project_on: o.opt_str("project_on"),
                     submitted_at_s: o.req_f64("submitted_at_s")?,
+                    ready_since_s: o
+                        .get("ready_since_s")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(o.req_f64("submitted_at_s")?),
                     started_at_s: o.get("started_at_s").and_then(Json::as_f64),
                     completed_at_s: o.get("completed_at_s").and_then(Json::as_f64),
                     interruptions: o.req_u64("interruptions")? as usize,

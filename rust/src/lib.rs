@@ -37,6 +37,7 @@ pub mod datasync;
 pub mod jobs;
 pub mod runtime;
 pub mod simcloud;
+pub mod telemetry;
 pub mod util;
 
 /// Version string reported by every command's `-v` switch.

@@ -26,7 +26,7 @@ impl Span {
 }
 
 /// The six bar groups of Figs 6–7, plus compute/other.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum SpanCategory {
     CreateResource,
     SubmitToMaster,
@@ -38,11 +38,38 @@ pub enum SpanCategory {
     Other,
 }
 
-/// Virtual clock + recorded timeline.
+/// Detailed spans kept verbatim on the timeline. Past this cap new
+/// spans fold into per-(category, label) aggregates, so a 1M-job
+/// drain (`P2RAC_SCALE_FULL=1`) records bounded memory instead of one
+/// `Span` per event while `category_total_s` stays exact.
+pub const TIMELINE_DETAIL_CAP: usize = 4096;
+
+/// Distinct (category, label) aggregate keys kept once the detail cap
+/// is hit; further new labels fold into `"(other)"`.
+const AGG_LABEL_CAP: usize = 512;
+
+/// Where capped-out spans go: total virtual time and span count per
+/// (category, label).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanAgg {
+    /// Summed `duration_s` of the folded spans.
+    pub total_s: f64,
+    /// How many spans folded into this key.
+    pub count: u64,
+}
+
+/// Virtual clock + recorded timeline (bounded: detailed up to
+/// [`TIMELINE_DETAIL_CAP`] spans, aggregated past it).
 #[derive(Debug, Default)]
 pub struct Clock {
     now_s: f64,
     timeline: Vec<Span>,
+    aggregates: std::collections::BTreeMap<(SpanCategory, String), SpanAgg>,
+    /// Incremental per-category totals over *every* recorded span,
+    /// detailed or aggregated — the single source of
+    /// `category_total_s`, maintained in each push path.
+    totals: std::collections::BTreeMap<SpanCategory, f64>,
+    total_spans: u64,
 }
 
 impl Clock {
@@ -78,12 +105,7 @@ impl Clock {
         let start = self.now_s;
         let out = f(self);
         let end = self.now_s;
-        self.timeline.push(Span {
-            label: label.to_string(),
-            category,
-            start_s: start,
-            end_s: end,
-        });
+        self.push(category, label, start, end);
         out
     }
 
@@ -91,12 +113,7 @@ impl Clock {
     pub fn record(&mut self, category: SpanCategory, label: &str, dt_s: f64) {
         let start = self.now_s;
         self.advance(dt_s);
-        self.timeline.push(Span {
-            label: label.to_string(),
-            category,
-            start_s: start,
-            end_s: self.now_s,
-        });
+        self.push(category, label, start, self.now_s);
     }
 
     /// Record a span from an explicit earlier start time to now (used
@@ -104,25 +121,55 @@ impl Clock {
     /// sub-objects before closing the span).
     pub fn push_span(&mut self, category: SpanCategory, label: &str, start_s: f64) {
         assert!(start_s <= self.now_s, "span starts in the future");
-        self.timeline.push(Span {
-            label: label.to_string(),
-            category,
-            start_s,
-            end_s: self.now_s,
-        });
+        self.push(category, label, start_s, self.now_s);
     }
 
+    /// The single recording path behind `span`/`record`/`push_span`:
+    /// the per-category total is always updated exactly; the span
+    /// itself stays detailed below [`TIMELINE_DETAIL_CAP`] and folds
+    /// into the (category, label) aggregates past it.
+    fn push(&mut self, category: SpanCategory, label: &str, start_s: f64, end_s: f64) {
+        *self.totals.entry(category).or_insert(0.0) += end_s - start_s;
+        self.total_spans += 1;
+        if self.timeline.len() < TIMELINE_DETAIL_CAP {
+            self.timeline.push(Span {
+                label: label.to_string(),
+                category,
+                start_s,
+                end_s,
+            });
+            return;
+        }
+        let key = (category, label.to_string());
+        let agg = if self.aggregates.contains_key(&key) || self.aggregates.len() < AGG_LABEL_CAP {
+            self.aggregates.entry(key).or_default()
+        } else {
+            self.aggregates.entry((category, "(other)".to_string())).or_default()
+        };
+        agg.total_s += end_s - start_s;
+        agg.count += 1;
+    }
+
+    /// The detailed (pre-cap) spans.
     pub fn timeline(&self) -> &[Span] {
         &self.timeline
     }
 
+    /// Post-cap spans, aggregated per (category, label).
+    pub fn aggregated(&self) -> &std::collections::BTreeMap<(SpanCategory, String), SpanAgg> {
+        &self.aggregates
+    }
+
+    /// Every span ever recorded since the last `clear_timeline`,
+    /// detailed or aggregated.
+    pub fn total_spans(&self) -> u64 {
+        self.total_spans
+    }
+
     /// Total recorded time in one category (for the bar charts).
+    /// Exact whether or not the detail cap was hit, and O(log n).
     pub fn category_total_s(&self, cat: SpanCategory) -> f64 {
-        self.timeline
-            .iter()
-            .filter(|s| s.category == cat)
-            .map(Span::duration_s)
-            .sum()
+        self.totals.get(&cat).copied().unwrap_or(0.0)
     }
 
     /// Restore a persisted clock position (timeline is not persisted —
@@ -134,6 +181,9 @@ impl Clock {
     /// Drop recorded spans (keep the clock) — used between bench phases.
     pub fn clear_timeline(&mut self) {
         self.timeline.clear();
+        self.aggregates.clear();
+        self.totals.clear();
+        self.total_spans = 0;
     }
 }
 
@@ -177,5 +227,48 @@ mod tests {
         assert_eq!(c.category_total_s(SpanCategory::TerminateResource), 35.0);
         assert_eq!(c.category_total_s(SpanCategory::Compute), 0.0);
         assert_eq!(c.now_s(), 455.0);
+    }
+
+    #[test]
+    fn timeline_caps_but_totals_stay_exact() {
+        let mut c = Clock::new();
+        let n = TIMELINE_DETAIL_CAP + 100;
+        for i in 0..n {
+            // Few distinct labels: post-cap spans aggregate per label.
+            c.record(SpanCategory::Compute, &format!("slice on fleet{}", i % 3), 2.0);
+        }
+        assert_eq!(c.timeline().len(), TIMELINE_DETAIL_CAP, "detail is bounded");
+        assert_eq!(c.total_spans(), n as u64);
+        let agg_count: u64 = c.aggregated().values().map(|a| a.count).sum();
+        assert_eq!(agg_count, 100, "overflow lands in aggregates");
+        let agg_total: f64 = c.aggregated().values().map(|a| a.total_s).sum();
+        assert_eq!(agg_total, 200.0);
+        // The bar-chart total never loses a span to the cap.
+        assert_eq!(c.category_total_s(SpanCategory::Compute), 2.0 * n as f64);
+        c.clear_timeline();
+        assert_eq!(c.total_spans(), 0);
+        assert!(c.aggregated().is_empty());
+        assert_eq!(c.category_total_s(SpanCategory::Compute), 0.0);
+    }
+
+    #[test]
+    fn aggregate_labels_fold_to_other_past_their_cap() {
+        let mut c = Clock::new();
+        for i in 0..(TIMELINE_DETAIL_CAP + 600) {
+            // Every label unique: the aggregate key set itself must
+            // stay bounded by folding the tail into "(other)".
+            c.record(SpanCategory::Other, &format!("op-{i}"), 1.0);
+        }
+        assert!(c.aggregated().len() <= 513, "got {}", c.aggregated().len());
+        let other = c
+            .aggregated()
+            .get(&(SpanCategory::Other, "(other)".to_string()))
+            .copied()
+            .unwrap();
+        assert_eq!(other.count, 600 - 512);
+        assert_eq!(
+            c.category_total_s(SpanCategory::Other),
+            (TIMELINE_DETAIL_CAP + 600) as f64
+        );
     }
 }

@@ -15,6 +15,7 @@ use super::s3::S3;
 use super::spot::SpotMarket;
 use super::timing::SimParams;
 use super::vfs::Vfs;
+use crate::telemetry::{EventKind, Telemetry};
 use crate::util::ids::IdFactory;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -72,6 +73,8 @@ pub struct SimCloud {
     pub faults: FaultPlan,
     /// Deterministic spot price path + interruption source.
     pub spot: SpotMarket,
+    /// The observability bus: every subsystem emits typed events here.
+    pub telemetry: Telemetry,
     params: SimParams,
     ids: IdFactory,
     region: String,
@@ -108,6 +111,7 @@ impl SimCloud {
             ledger: Ledger::new(),
             faults: FaultPlan::none(),
             spot: SpotMarket::default(),
+            telemetry: Telemetry::default(),
             params,
             ids,
             region: "us-east-1".to_string(),
@@ -263,6 +267,27 @@ impl SimCloud {
     pub fn account_transfer(&mut self, label: &str, bytes: u64, link: Link) {
         let scaled = (bytes as f64 * self.params.data_scale) as u64;
         self.ledger.bill_data_transfer(label, scaled, link);
+        if self.telemetry.on() {
+            // `billed` mirrors bill_data_transfer's early return, so the
+            // count reconciles exactly with the ledger's WAN line items.
+            let billed = scaled > 0 && link == Link::Wan;
+            self.telemetry.emit(
+                self.clock.now_s(),
+                EventKind::Transfer,
+                self.ledger.analyst(),
+                None,
+                None,
+                Json::from_pairs(vec![
+                    ("label", Json::str(label)),
+                    ("bytes", Json::num(scaled as f64)),
+                    (
+                        "link",
+                        Json::str(if link == Link::Wan { "wan" } else { "lan" }),
+                    ),
+                    ("billed", Json::Bool(billed)),
+                ]),
+            );
+        }
     }
 
     // ------------------------------------------------------------- volumes
@@ -759,6 +784,7 @@ impl SimCloud {
             ]));
         }
         root.set("ledger", Json::Arr(ledger));
+        root.set("telemetry", self.telemetry.to_json());
         root
     }
 
@@ -877,6 +903,9 @@ impl SimCloud {
                     &analyst,
                 );
             }
+        }
+        if let Some(t) = j.get("telemetry") {
+            c.telemetry = Telemetry::from_json(t)?;
         }
         Ok(c)
     }

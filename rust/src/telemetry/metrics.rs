@@ -1,0 +1,298 @@
+//! The deterministic metrics registry.
+//!
+//! Counters, gauges and fixed-bucket histograms keyed by
+//! Prometheus-style series names (`queue_wait_s`,
+//! `admit_rejects_total{reason="quota_queued"}`). Everything lives in
+//! `BTreeMap`s and every observation is driven by the **virtual**
+//! clock, so a snapshot of the registry is a pure function of the
+//! event stream: the same seeded workload produces a bit-identical
+//! `snapshot_json()` on every run, host and OS. Wall-clock data (the
+//! scheduler's [`super::PhaseProfiler`]) is deliberately kept out of
+//! this registry for exactly that reason.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Bucket upper bounds (seconds) for queue-wait and
+/// time-to-first-dispatch histograms: sub-second dispatch up to a
+/// full virtual day of queueing.
+pub const WAIT_BOUNDS: &[f64] = &[1.0, 10.0, 60.0, 300.0, 1800.0, 3600.0, 14400.0, 86400.0];
+
+/// Bucket upper bounds (seconds) for slice-latency histograms: the
+/// scheduler aims slices at ~tens of virtual minutes.
+pub const SLICE_BOUNDS: &[f64] = &[60.0, 300.0, 900.0, 1800.0, 3600.0, 7200.0, 14400.0, 43200.0];
+
+/// Bucket upper bounds (seconds) for the deadline-margin histogram.
+/// Negative buckets are misses; `0.0` is the met/missed watershed.
+pub const MARGIN_BOUNDS: &[f64] = &[
+    -86400.0, -3600.0, -600.0, 0.0, 600.0, 3600.0, 14400.0, 86400.0,
+];
+
+/// A fixed-bucket histogram (cumulative counts are derived at render
+/// time; storage is per-bucket so merges stay trivial).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    /// Upper bounds of the finite buckets, ascending. An implicit
+    /// `+Inf` bucket catches the rest.
+    pub bounds: Vec<f64>,
+    /// One count per finite bound plus the `+Inf` overflow bucket
+    /// (`counts.len() == bounds.len() + 1`).
+    pub counts: Vec<u64>,
+    /// Sum of every observed value.
+    pub sum: f64,
+    /// Total number of observations.
+    pub count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        Self {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|b| v <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("bounds", Json::Arr(self.bounds.iter().map(|b| Json::num(*b)).collect())),
+            (
+                "counts",
+                Json::Arr(self.counts.iter().map(|c| Json::num(*c as f64)).collect()),
+            ),
+            ("sum", Json::num(self.sum)),
+            ("count", Json::num(self.count as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let bounds = j
+            .get("bounds")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("histogram missing 'bounds'"))?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect::<Vec<_>>();
+        let counts = j
+            .get("counts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("histogram missing 'counts'"))?
+            .iter()
+            .filter_map(Json::as_u64)
+            .collect::<Vec<_>>();
+        anyhow::ensure!(
+            counts.len() == bounds.len() + 1,
+            "histogram bucket/bound mismatch"
+        );
+        Ok(Self {
+            bounds,
+            counts,
+            sum: j.req_f64("sum")?,
+            count: j.req_u64("count")?,
+        })
+    }
+}
+
+/// The registry: three deterministic series families.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    /// Add `by` to a counter series (created at zero on first touch).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set a gauge series to `v`.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record `v` into a fixed-bucket histogram series; `bounds` only
+    /// applies on first touch (a series never changes shape).
+    pub fn observe(&mut self, name: &str, bounds: &[f64], v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::new(bounds))
+            .observe(v);
+    }
+
+    /// Current value of a counter series (0 if never touched).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Current value of a gauge series, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// A histogram series, if any observation landed in it.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// Deterministic snapshot: sorted keys, virtual-time data only.
+    pub fn snapshot_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, Json::num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, Json::num(*v));
+        }
+        let mut histograms = Json::obj();
+        for (k, h) in &self.histograms {
+            histograms.set(k, h.to_json());
+        }
+        Json::from_pairs(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+
+    /// Restore a snapshot written by [`MetricsRegistry::snapshot_json`]
+    /// (tolerant: missing sections restore empty).
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut r = MetricsRegistry::default();
+        if let Some(o) = j.get("counters").and_then(Json::as_obj) {
+            for (k, v) in o {
+                r.counters.insert(
+                    k.clone(),
+                    v.as_u64().ok_or_else(|| anyhow::anyhow!("counter '{k}' not integral"))?,
+                );
+            }
+        }
+        if let Some(o) = j.get("gauges").and_then(Json::as_obj) {
+            for (k, v) in o {
+                r.gauges.insert(
+                    k.clone(),
+                    v.as_f64().ok_or_else(|| anyhow::anyhow!("gauge '{k}' not a number"))?,
+                );
+            }
+        }
+        if let Some(o) = j.get("histograms").and_then(Json::as_obj) {
+            for (k, v) in o {
+                r.histograms.insert(k.clone(), Histogram::from_json(v)?);
+            }
+        }
+        Ok(r)
+    }
+
+    /// Human-readable rendering (the `ec2metrics` text output).
+    pub fn text_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if !self.counters.is_empty() {
+            out.push("counters:".to_string());
+            for (k, v) in &self.counters {
+                out.push(format!("  {k:<52} {v}"));
+            }
+        }
+        if !self.gauges.is_empty() {
+            out.push("gauges:".to_string());
+            for (k, v) in &self.gauges {
+                out.push(format!("  {k:<52} {v}"));
+            }
+        }
+        if !self.histograms.is_empty() {
+            out.push("histograms:".to_string());
+            for (k, h) in &self.histograms {
+                let mean = if h.count > 0 { h.sum / h.count as f64 } else { 0.0 };
+                out.push(format!("  {k:<52} count {}  mean {mean:.1}s", h.count));
+            }
+        }
+        if out.is_empty() {
+            out.push("no metrics recorded yet".to_string());
+        }
+        out
+    }
+
+    /// Prometheus-style text exposition. Series names carry their
+    /// labels already (`…{reason="x"}`), so this just prefixes the
+    /// namespace and expands histogram buckets with cumulative `le`
+    /// counts.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("p2rac_{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("p2rac_{k} {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.counts[i];
+                out.push_str(&format!("p2rac_{k}_bucket{{le=\"{b}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("p2rac_{k}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("p2rac_{k}_sum {}\n", h.sum));
+            out.push_str(&format!("p2rac_{k}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_overflow() {
+        let mut r = MetricsRegistry::default();
+        for v in [0.5, 5.0, 100.0, 1e9] {
+            r.observe("queue_wait_s", WAIT_BOUNDS, v);
+        }
+        let h = r.histogram("queue_wait_s").unwrap();
+        assert_eq!(h.count, 4);
+        assert_eq!(h.counts[0], 1); // <= 1
+        assert_eq!(*h.counts.last().unwrap(), 1); // +Inf
+        assert_eq!(h.sum, 0.5 + 5.0 + 100.0 + 1e9);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bit_identical() {
+        let mut r = MetricsRegistry::default();
+        r.inc("events_total{kind=\"submit\"}", 3);
+        r.set_gauge("tenant_billed_centi_cents{tenant=\"alice\"}", 1234.0);
+        r.observe("deadline_margin_s", MARGIN_BOUNDS, -42.5);
+        r.observe("deadline_margin_s", MARGIN_BOUNDS, 777.25);
+        let snap = r.snapshot_json();
+        let restored = MetricsRegistry::from_json(&snap).unwrap();
+        assert_eq!(r, restored);
+        assert_eq!(
+            snap.to_string_compact(),
+            restored.snapshot_json().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_has_cumulative_buckets() {
+        let mut r = MetricsRegistry::default();
+        r.observe("slice_latency_s", SLICE_BOUNDS, 30.0);
+        r.observe("slice_latency_s", SLICE_BOUNDS, 200.0);
+        let text = r.prometheus_text();
+        assert!(text.contains("p2rac_slice_latency_s_bucket{le=\"60\"} 1"), "{text}");
+        assert!(text.contains("p2rac_slice_latency_s_bucket{le=\"300\"} 2"), "{text}");
+        assert!(text.contains("p2rac_slice_latency_s_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("p2rac_slice_latency_s_count 2"), "{text}");
+    }
+}

@@ -1,0 +1,549 @@
+//! # The observability plane
+//!
+//! A typed telemetry event bus threaded through the whole platform:
+//! the scheduler, queue, autoscaler, spot market and billing paths
+//! emit [`EventKind`] events carrying the **virtual** timestamp plus
+//! tenant/job/cluster ids, and the bus fans them into
+//!
+//! * a deterministic [`MetricsRegistry`] (counters, gauges and
+//!   fixed-bucket histograms — queue wait, time-to-first-dispatch,
+//!   slice latency, deadline margin, reclaims and billed centi-cents
+//!   per tenant), snapshotted on demand by `ec2metrics`;
+//! * an append-only JSONL trace sink (`ec2submitjob -trace` /
+//!   `ec2genload -trace`), exportable to Chrome trace-event JSON by
+//!   `ec2trace -chrome` (see [`trace`]);
+//! * nothing at all when disabled — the [`TelemetryLevel::Off`] path
+//!   is one atomic load per emission site, benched at <3% overhead on
+//!   the scale scenario (`cargo bench --bench obs`).
+//!
+//! Everything the bus records is driven by the virtual clock, so two
+//! runs of the same seeded workload produce bit-identical snapshots
+//! and traces. The only wall-clock component, the scheduler's
+//! [`PhaseProfiler`], lives outside the deterministic state and is
+//! never persisted.
+//!
+//! The bus lives on `SimCloud` behind a `Mutex` so emission works
+//! through the shared references the admission path holds
+//! (`JobScheduler::admit` takes `&Session`); the lock is uncontended
+//! in the single-threaded DES and costs nanoseconds.
+
+pub mod metrics;
+pub mod profile;
+pub mod trace;
+
+pub use metrics::{Histogram, MetricsRegistry, MARGIN_BOUNDS, SLICE_BOUNDS, WAIT_BOUNDS};
+pub use profile::{Phase, PhaseProfiler};
+
+use crate::util::json::Json;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+
+/// How much the bus records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TelemetryLevel {
+    /// Nothing: emission sites return after one atomic load.
+    Off = 0,
+    /// Metrics registry only (the CLI default).
+    Metrics = 1,
+    /// Metrics plus the JSONL trace sink.
+    Trace = 2,
+}
+
+impl TelemetryLevel {
+    /// Stable label (`off | metrics | trace`).
+    pub fn label(self) -> &'static str {
+        match self {
+            TelemetryLevel::Off => "off",
+            TelemetryLevel::Metrics => "metrics",
+            TelemetryLevel::Trace => "trace",
+        }
+    }
+
+    fn from_u8(v: u8) -> TelemetryLevel {
+        match v {
+            0 => TelemetryLevel::Off,
+            1 => TelemetryLevel::Metrics,
+            _ => TelemetryLevel::Trace,
+        }
+    }
+}
+
+/// The event taxonomy. Every emission site names one of these; the
+/// registry mapping in [`MetricsRegistry`]-land is centralised in
+/// [`Telemetry::emit`] so sites stay one-liners.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A job was admitted into the queue.
+    Submit,
+    /// A submission was refused at the admission gate
+    /// (detail `reason`: quota/deadline codes).
+    AdmitReject,
+    /// A slice started on a fleet cluster (detail `wait_s`, `first`).
+    Dispatch,
+    /// A slice finished (detail `from_s`, `duration_s`, `failed`,
+    /// `finished`, optional `margin_s` at job completion).
+    SliceComplete,
+    /// A checkpoint was committed for later resume.
+    CheckpointCommit,
+    /// The spot market reclaimed a fleet cluster.
+    SpotReclaim,
+    /// An autoscaler decision (detail `action`:
+    /// scale-up/scale-down/convert/resize).
+    Scale,
+    /// A metered data transfer (detail `bytes`, `link`, `billed`).
+    Transfer,
+    /// An invoice was rendered (detail `total_centi_cents`, `lines`).
+    Invoice,
+}
+
+impl EventKind {
+    /// Stable trace/metrics label.
+    pub fn label(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::AdmitReject => "admit-reject",
+            EventKind::Dispatch => "dispatch",
+            EventKind::SliceComplete => "slice-complete",
+            EventKind::CheckpointCommit => "checkpoint-commit",
+            EventKind::SpotReclaim => "spot-reclaim",
+            EventKind::Scale => "scale",
+            EventKind::Transfer => "transfer",
+            EventKind::Invoice => "invoice",
+        }
+    }
+}
+
+/// Flush the pending trace buffer to disk past this many lines, so a
+/// million-job drain does not hold its whole trace in memory.
+const AUTO_FLUSH_LINES: usize = 8192;
+
+/// Mutable bus state behind the lock.
+#[derive(Debug, Default)]
+struct Inner {
+    seq: u64,
+    registry: MetricsRegistry,
+    /// JSONL file the trace sink appends to (persisted with the
+    /// session so later `ec2jobqueue -drain` invocations keep
+    /// appending to the same trace).
+    trace_path: Option<String>,
+    /// Lines not yet appended to `trace_path`.
+    pending: Vec<String>,
+    /// In-memory sink for tests and benches (`Some` = capture lines
+    /// here instead of `pending`).
+    memory: Option<Vec<String>>,
+}
+
+/// The telemetry bus. Lives on `SimCloud`; all methods take `&self`
+/// (interior mutability) because admission-path emitters only hold a
+/// shared `Session` reference.
+#[derive(Debug)]
+pub struct Telemetry {
+    /// Level outside the lock: the `Off` fast path is one relaxed
+    /// atomic load, no lock.
+    level: AtomicU8,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self {
+            level: AtomicU8::new(TelemetryLevel::Metrics as u8),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+}
+
+impl Telemetry {
+    /// Current recording level.
+    pub fn level(&self) -> TelemetryLevel {
+        TelemetryLevel::from_u8(self.level.load(Ordering::Relaxed))
+    }
+
+    /// Set the recording level.
+    pub fn set_level(&self, l: TelemetryLevel) {
+        self.level.store(l as u8, Ordering::Relaxed);
+    }
+
+    /// Is anything being recorded? Emission sites guard detail
+    /// construction behind this so the `Off` path builds nothing.
+    #[inline]
+    pub fn on(&self) -> bool {
+        self.level.load(Ordering::Relaxed) != TelemetryLevel::Off as u8
+    }
+
+    /// Route the trace sink to a JSONL file (raises the level to
+    /// `Trace`; lines are buffered and appended on [`Telemetry::flush`]).
+    pub fn set_trace_file(&self, path: &str) {
+        self.inner.lock().unwrap().trace_path = Some(path.to_string());
+        self.set_level(TelemetryLevel::Trace);
+    }
+
+    /// The configured trace file, if any.
+    pub fn trace_path(&self) -> Option<String> {
+        self.inner.lock().unwrap().trace_path.clone()
+    }
+
+    /// Route the trace sink to memory (tests/benches; raises the
+    /// level to `Trace`). Drain with [`Telemetry::take_memory_trace`].
+    pub fn enable_memory_trace(&self) {
+        self.inner.lock().unwrap().memory = Some(Vec::new());
+        self.set_level(TelemetryLevel::Trace);
+    }
+
+    /// Drain the in-memory trace lines captured so far.
+    pub fn take_memory_trace(&self) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .memory
+            .as_mut()
+            .map(std::mem::take)
+            .unwrap_or_default()
+    }
+
+    /// Emit one event at virtual time `t_s`. Updates the registry and
+    /// (at `Trace` level) appends one JSONL line to the active sink.
+    /// `detail` keys the registry understands are documented on
+    /// [`EventKind`].
+    pub fn emit(
+        &self,
+        t_s: f64,
+        kind: EventKind,
+        tenant: &str,
+        job: Option<&str>,
+        cluster: Option<&str>,
+        detail: Json,
+    ) {
+        let level = self.level.load(Ordering::Relaxed);
+        if level == TelemetryLevel::Off as u8 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let inner = &mut *g;
+        inner.seq += 1;
+        apply_to_registry(&mut inner.registry, kind, tenant, &detail);
+        if level >= TelemetryLevel::Trace as u8 {
+            let mut o = Json::obj();
+            o.set("seq", Json::num(inner.seq as f64));
+            o.set("t_s", Json::num(t_s));
+            o.set("kind", Json::str(kind.label()));
+            if !tenant.is_empty() {
+                o.set("tenant", Json::str(tenant));
+            }
+            if let Some(j) = job {
+                o.set("job", Json::str(j));
+            }
+            if let Some(c) = cluster {
+                o.set("cluster", Json::str(c));
+            }
+            o.set("detail", detail);
+            let line = o.to_string_compact();
+            match inner.memory.as_mut() {
+                Some(mem) => mem.push(line),
+                None => {
+                    inner.pending.push(line);
+                    if inner.pending.len() >= AUTO_FLUSH_LINES {
+                        let _ = flush_locked(inner);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Append buffered trace lines to the configured file (no-op
+    /// without a file or pending lines). Called by the CLI before the
+    /// session is saved.
+    pub fn flush(&self) -> std::io::Result<()> {
+        flush_locked(&mut self.inner.lock().unwrap())
+    }
+
+    /// Total events emitted so far (== the `seq` of the last event).
+    pub fn events_emitted(&self) -> u64 {
+        self.inner.lock().unwrap().seq
+    }
+
+    /// Counter lookup, forwarded to the registry.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().registry.counter(name)
+    }
+
+    /// Events of one kind recorded so far.
+    pub fn events_of(&self, kind: EventKind) -> u64 {
+        self.counter(&format!("events_total{{kind=\"{}\"}}", kind.label()))
+    }
+
+    /// Deterministic snapshot of the whole bus: level, event count
+    /// and the registry. Bit-identical across runs of the same seeded
+    /// workload.
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::from_pairs(vec![
+            ("level", Json::str(self.level().label())),
+            ("events", Json::num(g.seq as f64)),
+            ("metrics", g.registry.snapshot_json()),
+        ])
+    }
+
+    /// Human-readable rendering (the `ec2metrics` text output).
+    pub fn text_lines(&self) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut out = vec![format!(
+            "telemetry level {}, {} events recorded",
+            self.level().label(),
+            g.seq
+        )];
+        if let Some(p) = &g.trace_path {
+            out.push(format!("trace sink: {p}"));
+        }
+        out.extend(g.registry.text_lines());
+        out
+    }
+
+    /// Prometheus-style exposition of the registry.
+    pub fn prometheus_text(&self) -> String {
+        self.inner.lock().unwrap().registry.prometheus_text()
+    }
+
+    /// Persist the deterministic state (level, seq, trace path,
+    /// registry). Pending lines must be flushed separately — they are
+    /// file contents, not session state.
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        Json::from_pairs(vec![
+            ("level", Json::str(self.level().label())),
+            ("seq", Json::num(g.seq as f64)),
+            (
+                "trace_path",
+                g.trace_path.as_deref().map(Json::str).unwrap_or(Json::Null),
+            ),
+            ("registry", g.registry.snapshot_json()),
+        ])
+    }
+
+    /// Restore from [`Telemetry::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<Telemetry> {
+        let t = Telemetry::default();
+        let level = match j.opt_str("level").as_deref() {
+            Some("off") => TelemetryLevel::Off,
+            Some("trace") => TelemetryLevel::Trace,
+            _ => TelemetryLevel::Metrics,
+        };
+        t.set_level(level);
+        {
+            let mut g = t.inner.lock().unwrap();
+            g.seq = j.get("seq").and_then(Json::as_u64).unwrap_or(0);
+            g.trace_path = j.opt_str("trace_path");
+            if let Some(r) = j.get("registry") {
+                g.registry = MetricsRegistry::from_json(r)?;
+            }
+        }
+        Ok(t)
+    }
+}
+
+fn flush_locked(inner: &mut Inner) -> std::io::Result<()> {
+    if inner.pending.is_empty() {
+        return Ok(());
+    }
+    let Some(path) = inner.trace_path.clone() else {
+        // Trace level without a file sink (e.g. a restored session
+        // whose trace file was configured on another host): drop the
+        // buffer rather than grow without bound.
+        inner.pending.clear();
+        return Ok(());
+    };
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    for line in inner.pending.drain(..) {
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+    }
+    f.flush()
+}
+
+/// The one central event→metric mapping. Keeping it here (rather than
+/// at the emission sites) means a new consumer of, say, reclaim
+/// counts never has to chase scattered `inc` calls.
+fn apply_to_registry(r: &mut MetricsRegistry, kind: EventKind, tenant: &str, detail: &Json) {
+    r.inc(&format!("events_total{{kind=\"{}\"}}", kind.label()), 1);
+    match kind {
+        EventKind::Submit => {
+            r.inc("jobs_submitted_total", 1);
+            if !tenant.is_empty() {
+                r.inc(&format!("tenant_jobs_submitted_total{{tenant=\"{tenant}\"}}"), 1);
+            }
+        }
+        EventKind::AdmitReject => {
+            let reason = detail.opt_str("reason").unwrap_or_else(|| "other".into());
+            r.inc(&format!("admit_rejects_total{{reason=\"{reason}\"}}"), 1);
+        }
+        EventKind::Dispatch => {
+            r.inc("dispatches_total", 1);
+            if let Some(w) = detail.get("wait_s").and_then(Json::as_f64) {
+                r.observe("queue_wait_s", WAIT_BOUNDS, w);
+                if detail.opt_bool("first", false) {
+                    r.observe("time_to_first_dispatch_s", WAIT_BOUNDS, w);
+                }
+            }
+        }
+        EventKind::SliceComplete => {
+            r.inc("slices_completed_total", 1);
+            if detail.opt_bool("failed", false) {
+                r.inc("slice_failures_total", 1);
+            }
+            if let Some(d) = detail.get("duration_s").and_then(Json::as_f64) {
+                r.observe("slice_latency_s", SLICE_BOUNDS, d);
+            }
+            if let Some(m) = detail.get("margin_s").and_then(Json::as_f64) {
+                r.observe("deadline_margin_s", MARGIN_BOUNDS, m);
+            }
+        }
+        EventKind::CheckpointCommit => r.inc("checkpoint_commits_total", 1),
+        EventKind::SpotReclaim => {
+            r.inc("spot_reclaims_total", 1);
+            if !tenant.is_empty() {
+                r.inc(&format!("tenant_spot_reclaims_total{{tenant=\"{tenant}\"}}"), 1);
+            }
+        }
+        EventKind::Scale => {
+            let action = detail.opt_str("action").unwrap_or_else(|| "other".into());
+            r.inc(&format!("scale_events_total{{action=\"{action}\"}}"), 1);
+        }
+        EventKind::Transfer => {
+            r.inc("transfer_events_total", 1);
+            if let (Some(b), Some(link)) =
+                (detail.get("bytes").and_then(Json::as_u64), detail.opt_str("link"))
+            {
+                r.inc(&format!("transfer_bytes_total{{link=\"{link}\"}}"), b);
+            }
+            if detail.opt_bool("billed", false) {
+                r.inc("wan_billed_transfers_total", 1);
+            }
+        }
+        EventKind::Invoice => {
+            if !tenant.is_empty() {
+                if let Some(cc) = detail.get("total_centi_cents").and_then(Json::as_f64) {
+                    r.set_gauge(&format!("tenant_billed_centi_cents{{tenant=\"{tenant}\"}}"), cc);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: &Telemetry, t_s: f64, kind: EventKind, detail: Json) {
+        t.emit(t_s, kind, "alice", Some("job-1"), Some("fleet1"), detail);
+    }
+
+    #[test]
+    fn off_level_records_nothing() {
+        let t = Telemetry::default();
+        t.set_level(TelemetryLevel::Off);
+        assert!(!t.on());
+        ev(&t, 0.0, EventKind::Submit, Json::obj());
+        assert_eq!(t.events_emitted(), 0);
+        assert_eq!(t.counter("jobs_submitted_total"), 0);
+    }
+
+    #[test]
+    fn metrics_level_maps_events_to_series() {
+        let t = Telemetry::default();
+        assert_eq!(t.level(), TelemetryLevel::Metrics);
+        ev(&t, 0.0, EventKind::Submit, Json::obj());
+        ev(
+            &t,
+            5.0,
+            EventKind::Dispatch,
+            Json::from_pairs(vec![("wait_s", Json::num(5.0)), ("first", Json::Bool(true))]),
+        );
+        ev(
+            &t,
+            65.0,
+            EventKind::SliceComplete,
+            Json::from_pairs(vec![
+                ("duration_s", Json::num(60.0)),
+                ("margin_s", Json::num(-10.0)),
+            ]),
+        );
+        ev(
+            &t,
+            65.0,
+            EventKind::AdmitReject,
+            Json::from_pairs(vec![("reason", Json::str("quota_queued"))]),
+        );
+        assert_eq!(t.counter("jobs_submitted_total"), 1);
+        assert_eq!(t.counter("tenant_jobs_submitted_total{tenant=\"alice\"}"), 1);
+        assert_eq!(t.counter("admit_rejects_total{reason=\"quota_queued\"}"), 1);
+        assert_eq!(t.events_of(EventKind::Dispatch), 1);
+        let snap = t.snapshot_json();
+        let hist = snap.path(&["metrics", "histograms", "deadline_margin_s"]).unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_u64), Some(1));
+        // Metrics level produces no trace lines.
+        assert!(t.take_memory_trace().is_empty());
+    }
+
+    #[test]
+    fn memory_trace_lines_are_sorted_key_jsonl() {
+        let t = Telemetry::default();
+        t.enable_memory_trace();
+        ev(&t, 1.5, EventKind::Submit, Json::obj());
+        ev(&t, 2.0, EventKind::CheckpointCommit, Json::obj());
+        let lines = t.take_memory_trace();
+        assert_eq!(lines.len(), 2);
+        let j = crate::telemetry::trace::parse_line(&lines[0]).unwrap();
+        assert_eq!(j.get("seq").and_then(Json::as_u64), Some(1));
+        assert_eq!(j.opt_str("tenant").as_deref(), Some("alice"));
+        assert_eq!(j.opt_str("cluster").as_deref(), Some("fleet1"));
+        // Deterministic: an identical bus replays identical bytes.
+        let t2 = Telemetry::default();
+        t2.enable_memory_trace();
+        ev(&t2, 1.5, EventKind::Submit, Json::obj());
+        ev(&t2, 2.0, EventKind::CheckpointCommit, Json::obj());
+        assert_eq!(lines, t2.take_memory_trace());
+    }
+
+    #[test]
+    fn persistence_roundtrip_keeps_registry_and_seq() {
+        let t = Telemetry::default();
+        ev(&t, 0.0, EventKind::Submit, Json::obj());
+        ev(&t, 1.0, EventKind::SpotReclaim, Json::obj());
+        t.set_trace_file("/tmp/does-not-matter.jsonl");
+        let j = t.to_json();
+        let r = Telemetry::from_json(&j).unwrap();
+        assert_eq!(r.level(), TelemetryLevel::Trace);
+        assert_eq!(r.events_emitted(), 2);
+        assert_eq!(r.counter("spot_reclaims_total"), 1);
+        assert_eq!(r.trace_path().as_deref(), Some("/tmp/does-not-matter.jsonl"));
+        assert_eq!(
+            t.snapshot_json().to_string_compact(),
+            r.snapshot_json().to_string_compact()
+        );
+        // Absent telemetry state (legacy session.json) restores default.
+        let d = Telemetry::from_json(&Json::obj()).unwrap();
+        assert_eq!(d.level(), TelemetryLevel::Metrics);
+        assert_eq!(d.events_emitted(), 0);
+    }
+
+    #[test]
+    fn file_sink_appends_on_flush() {
+        let dir = std::env::temp_dir().join(format!("p2rac-telemetry-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let t = Telemetry::default();
+        t.set_trace_file(path.to_str().unwrap());
+        ev(&t, 0.0, EventKind::Submit, Json::obj());
+        t.flush().unwrap();
+        ev(&t, 1.0, EventKind::Dispatch, Json::from_pairs(vec![("wait_s", Json::num(1.0))]));
+        t.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "flush must append, not rewrite");
+        crate::telemetry::trace::TraceSummary::from_lines(lines.into_iter()).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,144 @@
+//! Self-profiling of the DES host: **wall-clock** time per scheduler
+//! phase, so a `BENCH_scale.json` regression is attributable to
+//! dispatch vs interruption-scan vs autoscale vs persistence instead
+//! of being one opaque number.
+//!
+//! This is the one corner of the observability plane that measures
+//! real time, so it is kept strictly out of the deterministic metrics
+//! registry and out of session persistence: the profile lives and
+//! dies with the process and is surfaced through bench artifacts and
+//! `log_debug!` lines only.
+
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// One scheduler phase of the discrete-event loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Demand folding + fleet reconciliation + reindex.
+    Autoscale,
+    /// Ready-job scan and slice starts (including the safety valve).
+    Dispatch,
+    /// Spot-market interruption scan over the fleet.
+    InterruptionScan,
+    /// Slice-completion handling (checkpoint commit, requeue, retire).
+    Complete,
+    /// Snapshot/append-log persistence of the scheduler state.
+    Persist,
+}
+
+impl Phase {
+    /// Every phase, in display order.
+    pub const ALL: [Phase; 5] = [
+        Phase::Autoscale,
+        Phase::Dispatch,
+        Phase::InterruptionScan,
+        Phase::Complete,
+        Phase::Persist,
+    ];
+
+    /// Stable series/report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Autoscale => "autoscale",
+            Phase::Dispatch => "dispatch",
+            Phase::InterruptionScan => "interruption-scan",
+            Phase::Complete => "complete",
+            Phase::Persist => "persist",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Autoscale => 0,
+            Phase::Dispatch => 1,
+            Phase::InterruptionScan => 2,
+            Phase::Complete => 3,
+            Phase::Persist => 4,
+        }
+    }
+}
+
+/// Accumulated wall-clock per phase. Cheap enough to leave always on:
+/// two `Instant::now()` calls per phase entry against the hundreds of
+/// microseconds a phase costs.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseProfiler {
+    total_s: [f64; 5],
+    entries: [u64; 5],
+}
+
+impl PhaseProfiler {
+    /// Record one timed entry into `phase`.
+    pub fn add(&mut self, phase: Phase, elapsed: Duration) {
+        self.total_s[phase.idx()] += elapsed.as_secs_f64();
+        self.entries[phase.idx()] += 1;
+    }
+
+    /// Total wall seconds spent in `phase` so far.
+    pub fn total_s(&self, phase: Phase) -> f64 {
+        self.total_s[phase.idx()]
+    }
+
+    /// Number of timed entries into `phase`.
+    pub fn entries(&self, phase: Phase) -> u64 {
+        self.entries[phase.idx()]
+    }
+
+    /// Forget everything (a bench reuses one scheduler across runs).
+    pub fn reset(&mut self) {
+        *self = PhaseProfiler::default();
+    }
+
+    /// Human-readable rows, phases with zero entries skipped.
+    pub fn lines(&self) -> Vec<String> {
+        Phase::ALL
+            .iter()
+            .filter(|p| self.entries(**p) > 0)
+            .map(|p| {
+                format!(
+                    "phase {:<18} {:>10.3}ms over {} entries",
+                    p.label(),
+                    self.total_s(*p) * 1e3,
+                    self.entries(*p)
+                )
+            })
+            .collect()
+    }
+
+    /// JSON rows for bench artifacts (wall-clock — never persisted
+    /// with the session, never part of a deterministic snapshot).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            Phase::ALL
+                .iter()
+                .map(|p| {
+                    Json::from_pairs(vec![
+                        ("phase", Json::str(p.label())),
+                        ("wall_s", Json::num(self.total_s(*p))),
+                        ("entries", Json::num(self.entries(*p) as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_phase() {
+        let mut p = PhaseProfiler::default();
+        p.add(Phase::Dispatch, Duration::from_millis(2));
+        p.add(Phase::Dispatch, Duration::from_millis(3));
+        p.add(Phase::Persist, Duration::from_millis(1));
+        assert_eq!(p.entries(Phase::Dispatch), 2);
+        assert!(p.total_s(Phase::Dispatch) >= 0.005 - 1e-9);
+        assert_eq!(p.entries(Phase::Autoscale), 0);
+        assert_eq!(p.lines().len(), 2, "zero-entry phases are skipped");
+        p.reset();
+        assert_eq!(p.entries(Phase::Dispatch), 0);
+    }
+}

@@ -1,0 +1,256 @@
+//! Trace sinks and exports.
+//!
+//! The primary sink is an **append-only JSONL trace**: one compact,
+//! sorted-key JSON object per event, so two runs of the same seeded
+//! workload produce byte-identical files (`diff` is the determinism
+//! test). On top of the recorded lines (or, in-process, the virtual
+//! clock's span timeline) sits a Chrome trace-event exporter: the
+//! produced JSON loads directly into `chrome://tracing` / Perfetto
+//! with one timeline row per cluster, slice executions as complete
+//! (`"X"`) events and everything else as instants.
+
+use crate::simcloud::Span;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Microseconds per virtual second: Chrome trace timestamps are in µs.
+const US: f64 = 1e6;
+
+/// Parse one JSONL trace line, checking the invariant keys every line
+/// must carry (`seq`, `t_s`, `kind`).
+pub fn parse_line(line: &str) -> Result<Json> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad trace line: {e}"))?;
+    for key in ["seq", "t_s", "kind"] {
+        if j.get(key).is_none() {
+            bail!("trace line missing '{key}': {line}");
+        }
+    }
+    Ok(j)
+}
+
+/// Aggregate view of a recorded trace (the `ec2trace` summary).
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Total events in the trace.
+    pub events: u64,
+    /// Events per kind label.
+    pub by_kind: BTreeMap<String, u64>,
+    /// Distinct tenants seen on events.
+    pub tenants: Vec<String>,
+    /// Virtual time of the first event.
+    pub t_first_s: f64,
+    /// Virtual time of the last event.
+    pub t_last_s: f64,
+}
+
+impl TraceSummary {
+    /// Summarise parsed-and-validated trace lines; rejects malformed
+    /// lines and out-of-order sequence numbers (an interleaved or
+    /// truncated-and-rewritten file is not a trace).
+    pub fn from_lines<'a>(lines: impl Iterator<Item = &'a str>) -> Result<TraceSummary> {
+        let mut s = TraceSummary {
+            t_first_s: f64::INFINITY,
+            ..TraceSummary::default()
+        };
+        let mut tenants = std::collections::BTreeSet::new();
+        let mut last_seq = 0u64;
+        for (i, line) in lines.enumerate() {
+            let j = parse_line(line).with_context(|| format!("line {}", i + 1))?;
+            let seq = j.req_u64("seq")?;
+            if seq <= last_seq && i > 0 {
+                bail!("line {}: seq {seq} not increasing (after {last_seq})", i + 1);
+            }
+            last_seq = seq;
+            let t = j.req_f64("t_s")?;
+            s.t_first_s = s.t_first_s.min(t);
+            s.t_last_s = s.t_last_s.max(t);
+            *s.by_kind.entry(j.req_str("kind")?).or_insert(0) += 1;
+            if let Some(t) = j.opt_str("tenant") {
+                tenants.insert(t);
+            }
+            s.events += 1;
+        }
+        if s.events == 0 {
+            s.t_first_s = 0.0;
+        }
+        s.tenants = tenants.into_iter().collect();
+        Ok(s)
+    }
+
+    /// Text rendering.
+    pub fn lines(&self) -> Vec<String> {
+        let mut out = vec![format!(
+            "{} events over virtual [{:.0}s .. {:.0}s], {} tenant(s)",
+            self.events, self.t_first_s, self.t_last_s, self.tenants.len()
+        )];
+        for (k, n) in &self.by_kind {
+            out.push(format!("  {k:<20} {n}"));
+        }
+        out
+    }
+
+    /// JSON rendering (sorted keys, deterministic).
+    pub fn to_json(&self) -> Json {
+        let mut by_kind = Json::obj();
+        for (k, n) in &self.by_kind {
+            by_kind.set(k, Json::num(*n as f64));
+        }
+        Json::from_pairs(vec![
+            ("events", Json::num(self.events as f64)),
+            ("by_kind", by_kind),
+            ("tenants", Json::arr_str(self.tenants.clone())),
+            ("t_first_s", Json::num(self.t_first_s)),
+            ("t_last_s", Json::num(self.t_last_s)),
+        ])
+    }
+}
+
+/// Convert recorded JSONL trace lines into a Chrome trace-event JSON
+/// document. Slice completions carry their own start + duration, so
+/// they become complete (`"X"`) events with no begin/end pairing; the
+/// rest become instant (`"i"`) events. Rows (`tid`) are one per
+/// cluster, in order of first appearance.
+pub fn chrome_from_lines<'a>(lines: impl Iterator<Item = &'a str>) -> Result<Json> {
+    let mut events = Vec::new();
+    let mut tids: BTreeMap<String, u64> = BTreeMap::new();
+    let mut next_tid = 1u64;
+    for (i, line) in lines.enumerate() {
+        let j = parse_line(line).with_context(|| format!("line {}", i + 1))?;
+        let kind = j.req_str("kind")?;
+        let t_s = j.req_f64("t_s")?;
+        let cluster = j.opt_str("cluster").unwrap_or_default();
+        let tid = if cluster.is_empty() {
+            0
+        } else {
+            *tids.entry(cluster.clone()).or_insert_with(|| {
+                let t = next_tid;
+                next_tid += 1;
+                t
+            })
+        };
+        let detail = j.get("detail").cloned().unwrap_or(Json::Null);
+        let mut ev = Json::obj();
+        ev.set("pid", Json::num(1.0));
+        ev.set("tid", Json::num(tid as f64));
+        ev.set("cat", Json::str(kind.clone()));
+        ev.set("args", detail.clone());
+        let from_s = detail.get("from_s").and_then(Json::as_f64);
+        let dur_s = detail.get("duration_s").and_then(Json::as_f64);
+        match (kind.as_str(), from_s, dur_s) {
+            ("slice-complete", Some(from), Some(dur)) => {
+                ev.set("ph", Json::str("X"));
+                ev.set("ts", Json::num(from * US));
+                ev.set("dur", Json::num(dur * US));
+                let name = format!("{} on {}", j.opt_str("job").unwrap_or_default(), cluster);
+                ev.set("name", Json::str(name));
+            }
+            _ => {
+                ev.set("ph", Json::str("i"));
+                ev.set("s", Json::str("g"));
+                ev.set("ts", Json::num(t_s * US));
+                ev.set("name", Json::str(kind));
+            }
+        }
+        events.push(ev);
+    }
+    Ok(Json::from_pairs(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ]))
+}
+
+/// Convert the virtual clock's span timeline into the same Chrome
+/// trace-event document: one row per span category, every span a
+/// complete (`"X"`) event. In-process view of a single invocation
+/// (the timeline is not persisted across CLI commands).
+pub fn chrome_from_spans(spans: &[Span]) -> Json {
+    let mut events = Vec::new();
+    let mut tids: BTreeMap<String, u64> = BTreeMap::new();
+    let mut next_tid = 1u64;
+    for sp in spans {
+        let cat = format!("{:?}", sp.category);
+        let tid = *tids.entry(cat.clone()).or_insert_with(|| {
+            let t = next_tid;
+            next_tid += 1;
+            t
+        });
+        events.push(Json::from_pairs(vec![
+            ("ph", Json::str("X")),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(tid as f64)),
+            ("cat", Json::str(cat)),
+            ("name", Json::str(&sp.label)),
+            ("ts", Json::num(sp.start_s * US)),
+            ("dur", Json::num(sp.duration_s() * US)),
+        ]));
+    }
+    Json::from_pairs(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simcloud::SpanCategory;
+
+    const LINES: [&str; 3] = [
+        r#"{"detail":{},"kind":"submit","seq":1,"t_s":0,"tenant":"t0"}"#,
+        r#"{"cluster":"fleet1","detail":{"duration_s":600,"from_s":10},"job":"job-1","kind":"slice-complete","seq":2,"t_s":610,"tenant":"t0"}"#,
+        r#"{"cluster":"fleet1","detail":{},"job":"job-1","kind":"checkpoint-commit","seq":3,"t_s":610,"tenant":"t0"}"#,
+    ];
+
+    #[test]
+    fn summary_counts_kinds_and_validates_order() {
+        let s = TraceSummary::from_lines(LINES.iter().copied()).unwrap();
+        assert_eq!(s.events, 3);
+        assert_eq!(s.by_kind.get("slice-complete"), Some(&1));
+        assert_eq!(s.tenants, vec!["t0"]);
+        assert_eq!(s.t_last_s, 610.0);
+        // Out-of-order seq is rejected.
+        let bad = [LINES[1], LINES[0]];
+        assert!(TraceSummary::from_lines(bad.iter().copied()).is_err());
+        // Malformed lines are rejected.
+        assert!(TraceSummary::from_lines(["{}"].iter().copied()).is_err());
+    }
+
+    #[test]
+    fn chrome_export_makes_slices_complete_events() {
+        let doc = chrome_from_lines(LINES.iter().copied()).unwrap();
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 3);
+        let slice = &evs[1];
+        assert_eq!(slice.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(slice.get("ts").and_then(Json::as_f64), Some(10.0 * 1e6));
+        assert_eq!(slice.get("dur").and_then(Json::as_f64), Some(600.0 * 1e6));
+        assert_eq!(slice.get("tid").and_then(Json::as_u64), Some(1));
+        // Instants carry a timestamp and global scope.
+        assert_eq!(evs[0].get("ph").and_then(Json::as_str), Some("i"));
+        assert_eq!(evs[0].get("s").and_then(Json::as_str), Some("g"));
+    }
+
+    #[test]
+    fn chrome_export_from_clock_spans() {
+        let spans = vec![
+            Span {
+                label: "sync".into(),
+                category: SpanCategory::SubmitToMaster,
+                start_s: 0.0,
+                end_s: 30.0,
+            },
+            Span {
+                label: "run".into(),
+                category: SpanCategory::Compute,
+                start_s: 30.0,
+                end_s: 90.0,
+            },
+        ];
+        let doc = chrome_from_spans(&spans);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert!(evs.iter().all(|e| e.get("ph").and_then(Json::as_str) == Some("X")));
+        assert_eq!(evs[1].get("dur").and_then(Json::as_f64), Some(60.0 * 1e6));
+    }
+}

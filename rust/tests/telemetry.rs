@@ -1,0 +1,265 @@
+//! Acceptance tests for the observability plane (ISSUE 7): a seeded
+//! multi-tenant workload run twice produces bit-identical metric
+//! snapshots and JSONL traces, the event counts reconcile with the
+//! billing ledger and the scheduler's own counters, and the telemetry
+//! state survives the session persistence roundtrip.
+
+use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::jobs::{AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority, TenantQuota};
+use p2rac::simcloud::SimParams;
+use p2rac::telemetry::{trace::TraceSummary, EventKind, Phase};
+use p2rac::util::json::Json;
+
+fn session() -> Session {
+    Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
+}
+
+fn write_projects(s: &mut Session) {
+    for i in 0..6u64 {
+        s.analyst.write(
+            &format!("sweep{i}/sweep.json"),
+            format!(r#"{{"type":"mc_sweep","n_jobs":24,"seed":{}}}"#, 500 + i).into_bytes(),
+        );
+    }
+}
+
+fn specs(now_s: f64) -> Vec<JobSpec> {
+    let prios = [
+        Priority::High,
+        Priority::Low,
+        Priority::Normal,
+        Priority::High,
+        Priority::Low,
+        Priority::Normal,
+    ];
+    (0..6)
+        .map(|i| JobSpec {
+            name: format!("run{i}"),
+            projectdir: format!("sweep{i}"),
+            rscript: "sweep.json".to_string(),
+            priority: prios[i],
+            // One generous deadline so the margin histogram records.
+            deadline_s: if i == 0 { Some(now_s + 10_000_000.0) } else { None },
+            placement: Placement::ByNode,
+        })
+        .collect()
+}
+
+/// The seeded scenario: six jobs, three tenants, spot fleet with two
+/// injected interruptions, one quota rejection, one invoice render —
+/// every event kind except none. Telemetry records to memory.
+fn run_workload() -> (Session, JobScheduler, String, Vec<String>) {
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    s.cloud.telemetry.enable_memory_trace();
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 3,
+        nodes_per_cluster: 2,
+        spot: true,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    s.cloud.faults.spot_interruptions = 2;
+    // A rejected submission: tenant 'blocked' may queue nothing.
+    js.quotas.set(
+        "blocked",
+        TenantQuota {
+            max_queued: Some(0),
+            ..Default::default()
+        },
+    );
+    let all = specs(s.cloud.clock.now_s());
+    assert!(js.admit(&s, all[0].clone(), false, "blocked").is_err());
+    for (i, spec) in all.iter().enumerate() {
+        js.admit(&s, spec.clone(), i == 0, &format!("t{}", i % 3)).unwrap();
+    }
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+    for j in js.queue.jobs() {
+        assert_eq!(j.state, JobState::Completed);
+    }
+    // An invoice event on top (what `ec2invoice` emits).
+    let inv = s.cloud.ledger.invoice_for("t0");
+    s.cloud.telemetry.emit(
+        s.cloud.clock.now_s(),
+        EventKind::Invoice,
+        "t0",
+        None,
+        None,
+        Json::from_pairs(vec![(
+            "total_centi_cents",
+            Json::num(inv.total_centi_cents() as f64),
+        )]),
+    );
+    let snapshot = s.cloud.telemetry.snapshot_json().to_string_compact();
+    let trace = s.cloud.telemetry.take_memory_trace();
+    (s, js, snapshot, trace)
+}
+
+#[test]
+fn two_seeded_runs_produce_bit_identical_telemetry() {
+    let (_, _, snap_a, trace_a) = run_workload();
+    let (_, _, snap_b, trace_b) = run_workload();
+    assert!(!trace_a.is_empty(), "the scenario must record events");
+    assert_eq!(snap_a, snap_b, "metric snapshots must be bit-identical");
+    assert_eq!(trace_a, trace_b, "JSONL traces must be bit-identical");
+}
+
+#[test]
+fn event_counts_reconcile_with_ledger_and_scheduler() {
+    let (s, js, _, trace) = run_workload();
+    let t = &s.cloud.telemetry;
+
+    // Admissions: six jobs queued, one bounced at the quota gate.
+    assert_eq!(t.events_of(EventKind::Submit), 6);
+    assert_eq!(t.counter("jobs_submitted_total"), 6);
+    assert_eq!(t.counter("tenant_jobs_submitted_total{tenant=\"t0\"}"), 2);
+    assert_eq!(t.events_of(EventKind::AdmitReject), 1);
+    assert_eq!(t.counter("admit_rejects_total{reason=\"quota_queued\"}"), 1);
+
+    // Spot reclaims: one event per interruption the scheduler counted.
+    assert_eq!(js.interruptions_delivered, 2);
+    assert_eq!(t.events_of(EventKind::SpotReclaim), 2);
+    assert_eq!(t.counter("spot_reclaims_total"), 2);
+
+    // Every dispatched slice either completed or was reclaimed
+    // mid-slice — the trace itself proves the accounting closes.
+    let mid_slice_reclaims = trace
+        .iter()
+        .map(|l| Json::parse(l).unwrap())
+        .filter(|j| {
+            j.opt_str("kind").as_deref() == Some("spot-reclaim")
+                && j.path(&["detail", "mid_slice"]).and_then(Json::as_bool) == Some(true)
+        })
+        .count() as u64;
+    assert_eq!(
+        t.counter("dispatches_total"),
+        t.counter("slices_completed_total") + mid_slice_reclaims
+    );
+
+    // slice_units=1 on multi-unit jobs: intermediate checkpoints.
+    assert!(t.counter("checkpoint_commits_total") > 0);
+
+    // Scale decisions mirror the autoscaler's own event log.
+    assert_eq!(t.events_of(EventKind::Scale) as usize, js.autoscaler.events.len());
+
+    // WAN billing: the counter equals the ledger's WAN line items.
+    let wan_items = s
+        .cloud
+        .ledger
+        .items()
+        .iter()
+        .filter(|i| i.detail.starts_with("WAN transfer"))
+        .count() as u64;
+    assert_eq!(t.counter("wan_billed_transfers_total"), wan_items);
+
+    // The invoice gauge carries the exact ledger total for t0.
+    let snap = t.snapshot_json();
+    assert_eq!(
+        snap.path(&["metrics", "gauges", "tenant_billed_centi_cents{tenant=\"t0\"}"])
+            .and_then(Json::as_u64),
+        Some(s.cloud.ledger.total_centi_cents_for("t0"))
+    );
+
+    // The wait histogram saw every dispatch.
+    assert_eq!(
+        snap.path(&["metrics", "histograms", "queue_wait_s", "count"])
+            .and_then(Json::as_u64),
+        Some(t.counter("dispatches_total"))
+    );
+    // The deadlined job completed in time: a non-negative margin.
+    let margin_sum = snap
+        .path(&["metrics", "histograms", "deadline_margin_s", "sum"])
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert!(margin_sum > 0.0, "margin sum {margin_sum} must be positive");
+
+    // The DES host profiled its own phases (wall-clock, non-zero).
+    assert!(js.profiler.entries(Phase::Dispatch) > 0);
+    assert!(js.profiler.entries(Phase::Autoscale) > 0);
+    assert!(js.profiler.entries(Phase::Complete) > 0);
+}
+
+#[test]
+fn trace_summary_agrees_with_the_bus() {
+    let (s, _, _, trace) = run_workload();
+    let summary = TraceSummary::from_lines(trace.iter().map(String::as_str)).unwrap();
+    assert_eq!(summary.events, s.cloud.telemetry.events_emitted());
+    for kind in [
+        EventKind::Submit,
+        EventKind::AdmitReject,
+        EventKind::Dispatch,
+        EventKind::SliceComplete,
+        EventKind::CheckpointCommit,
+        EventKind::SpotReclaim,
+        EventKind::Scale,
+        EventKind::Transfer,
+        EventKind::Invoice,
+    ] {
+        assert_eq!(
+            summary.by_kind.get(kind.label()).copied().unwrap_or(0),
+            s.cloud.telemetry.events_of(kind),
+            "trace and registry disagree on '{}'",
+            kind.label()
+        );
+    }
+    assert!(summary.tenants.iter().any(|t| t == "t0"));
+}
+
+#[test]
+fn telemetry_survives_the_session_roundtrip() {
+    let (s, _, snapshot, _) = run_workload();
+    let j = s.to_json();
+    let restored =
+        Session::from_json(SimParams::default(), Box::new(MockEngine::new(10.0)), &j).unwrap();
+    assert_eq!(
+        restored.cloud.telemetry.snapshot_json().to_string_compact(),
+        snapshot,
+        "the deterministic bus state must persist with the session"
+    );
+    // A legacy session document without telemetry restores the default.
+    let mut legacy = j.clone();
+    legacy.set("cloud", {
+        let mut c = j.get("cloud").cloned().unwrap();
+        c.set("telemetry", Json::Null);
+        c
+    });
+    let fresh =
+        Session::from_json(SimParams::default(), Box::new(MockEngine::new(10.0)), &legacy)
+            .unwrap();
+    assert_eq!(fresh.cloud.telemetry.events_emitted(), 0);
+}
+
+#[test]
+fn file_trace_sink_appends_valid_jsonl() {
+    let dir = std::env::temp_dir().join(format!("p2rac-trace-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.jsonl");
+    let _ = std::fs::remove_file(&path);
+
+    let mut s = session();
+    s.cloud.spot.spike_prob = 0.0;
+    s.cloud.telemetry.set_trace_file(path.to_str().unwrap());
+    write_projects(&mut s);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    let all = specs(s.cloud.clock.now_s());
+    for spec in all.iter().take(2) {
+        js.admit(&s, spec.clone(), false, "alice").unwrap();
+    }
+    js.run_until_idle(&mut s).unwrap();
+    s.cloud.telemetry.flush().unwrap();
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let summary = TraceSummary::from_lines(text.lines()).unwrap();
+    assert_eq!(summary.events, s.cloud.telemetry.events_emitted());
+    assert!(summary.by_kind.contains_key("dispatch"));
+    std::fs::remove_dir_all(&dir).ok();
+}
