@@ -1,0 +1,255 @@
+//! Slice fast-path bench (ISSUE 8): one seeded multi-slice sweep
+//! workload driven through the real [`p2rac::jobs::JobScheduler`]
+//! twice — once with the fast path off (every slice re-parses the
+//! script, re-forks the sweep plan, round-trips the checkpoint JSON
+//! and ships the O(done) full snapshot: the seed's world) and once
+//! with it on (warm [`JobWork`] + pooled workers out of the work
+//! cache, O(slice) delta links on the checkpoint chain, full-snapshot
+//! compaction every K slices).
+//!
+//! Both modes run the same discrete-event simulation, so before any
+//! timing is reported the bench asserts **parity**: the dispatch
+//! sequence (job, cluster per dispatch event), the total bill and the
+//! result-file digests must be bit-identical. Only then are
+//! slices/sec (best of interleaved rounds) and checkpoint bytes
+//! shipped compared, and the fast path must clear 2x throughput on
+//! strictly fewer shipped bytes. Emits `BENCH_slice.json` at the
+//! repository root.
+//!
+//! Run: `cargo bench --bench slice`
+
+use std::time::Instant;
+
+use p2rac::bench_support::emit_bench_json;
+use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority};
+use p2rac::simcloud::SimParams;
+use p2rac::util::json::Json;
+
+/// Jobs per sweep: 100 batches at the 64-job tile, so each of the
+/// three queued jobs runs 100 one-unit slices and the rebuild path's
+/// O(done) checkpoint work compounds visibly.
+const N_JOBS: usize = 6400;
+/// Queued sweep jobs (serialised on the single bench cluster).
+const SWEEPS: usize = 3;
+/// Virtual seconds per MC job — tiny, so wall-clock is dominated by
+/// the per-slice bookkeeping under test, not the simulated numerics.
+const JOB_COST_S: f64 = 0.05;
+/// Interleaved timing rounds; the best round is reported.
+const ROUNDS: usize = 3;
+
+/// FNV-1a over a byte string.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01B3);
+    }
+    h
+}
+
+struct RunOut {
+    wall_s: f64,
+    slices: u64,
+    dispatch_digest: u64,
+    bill_centi_cents: u64,
+    results_digest: u64,
+    ckpt_bytes_shipped: u64,
+    cache_hits: u64,
+    delta_commits: u64,
+    completions: usize,
+}
+
+/// Drain the whole workload once with the fast path on or off and
+/// collect the parity artifacts plus the drain wall time.
+fn run(fast: bool) -> RunOut {
+    let mut s = Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)));
+    s.cloud.spot.spike_prob = 0.0;
+    s.cloud.telemetry.enable_memory_trace();
+    for i in 0..SWEEPS {
+        s.analyst.write(
+            &format!("sweep{i}/sweep.json"),
+            format!(
+                r#"{{"type":"mc_sweep","n_jobs":{N_JOBS},"seed":{},"job_cost_s":{JOB_COST_S}}}"#,
+                900 + i
+            )
+            .into_bytes(),
+        );
+    }
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    js.fast_path = fast;
+    js.slice_units = 1;
+    let ids: Vec<_> = (0..SWEEPS)
+        .map(|i| {
+            js.submit(
+                &s,
+                JobSpec {
+                    name: format!("r{i}"),
+                    projectdir: format!("sweep{i}"),
+                    rscript: "sweep.json".into(),
+                    priority: Priority::Normal,
+                    placement: Placement::ByNode,
+                    deadline_s: None,
+                },
+            )
+        })
+        .collect();
+    let t0 = Instant::now();
+    js.run_until_idle(&mut s).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    js.shutdown_fleet(&mut s).unwrap();
+
+    let mut completions = 0;
+    for &id in &ids {
+        if js.queue.get(id).unwrap().state == JobState::Completed {
+            completions += 1;
+        }
+    }
+    // The dispatch sequence, independent of per-mode detail fields
+    // (the cache hit/miss tag legitimately differs): (job, cluster)
+    // per dispatch event, in event order.
+    let mut dispatch_digest = 0xcbf2_9ce4_8422_2325u64;
+    let mut slices = 0u64;
+    for line in s.cloud.telemetry.take_memory_trace() {
+        let j = Json::parse(&line).unwrap();
+        if j.opt_str("kind").as_deref() != Some("dispatch") {
+            continue;
+        }
+        slices += 1;
+        dispatch_digest = fnv1a(dispatch_digest, j.opt_str("job").unwrap_or_default().as_bytes());
+        dispatch_digest =
+            fnv1a(dispatch_digest, j.opt_str("cluster").unwrap_or_default().as_bytes());
+    }
+    let mut results: Vec<(String, Vec<u8>)> = Vec::new();
+    for i in 0..SWEEPS {
+        let dir = format!("sweep{i}_results/r{i}");
+        for rel in s.analyst.list_dir(&dir) {
+            let bytes = s.analyst.read(&format!("{dir}/{rel}")).unwrap().to_vec();
+            results.push((format!("{dir}/{rel}"), bytes));
+        }
+    }
+    results.sort();
+    RunOut {
+        wall_s,
+        slices,
+        dispatch_digest,
+        bill_centi_cents: s.cloud.ledger.total_centi_cents(),
+        results_digest: files_digest(&results),
+        ckpt_bytes_shipped: js.ckpt_bytes_shipped,
+        cache_hits: js.work_cache_hits,
+        delta_commits: js.ckpt_delta_commits,
+        completions,
+    }
+}
+
+fn main() {
+    println!(
+        "=== slice fast path: warm work cache + delta checkpoints vs per-slice rebuild ===\n\
+         {SWEEPS} sweeps x {N_JOBS} MC jobs, one-unit slices on a single cluster\n"
+    );
+
+    // Interleaved rounds absorb machine noise; every round must agree
+    // on the parity artifacts, the best round carries the timing.
+    let mut rebuild = run(false);
+    let mut fast = run(true);
+    for _ in 1..ROUNDS {
+        let r = run(false);
+        let f = run(true);
+        assert_eq!(r.dispatch_digest, rebuild.dispatch_digest, "rebuild runs must agree");
+        assert_eq!(f.dispatch_digest, fast.dispatch_digest, "fast runs must agree");
+        if r.wall_s < rebuild.wall_s {
+            rebuild = r;
+        }
+        if f.wall_s < fast.wall_s {
+            fast = f;
+        }
+    }
+
+    // Parity: the fast path must be invisible in everything but time
+    // and shipped bytes.
+    assert_eq!(rebuild.completions, SWEEPS, "rebuild run must complete all jobs");
+    assert_eq!(fast.completions, SWEEPS, "fast run must complete all jobs");
+    let dispatch_parity = fast.dispatch_digest == rebuild.dispatch_digest;
+    let bill_parity = fast.bill_centi_cents == rebuild.bill_centi_cents;
+    let results_parity = fast.results_digest == rebuild.results_digest;
+    assert!(dispatch_parity, "dispatch sequence diverged");
+    assert!(
+        bill_parity,
+        "bill diverged: fast {}cc vs rebuild {}cc",
+        fast.bill_centi_cents, rebuild.bill_centi_cents
+    );
+    assert!(results_parity, "result files diverged");
+    assert_eq!(fast.slices, rebuild.slices, "slice count diverged");
+    assert!(fast.cache_hits > 0, "the fast run must hit the warm cache");
+    assert!(fast.delta_commits > 0, "the fast run must ship delta links");
+
+    let sps = |r: &RunOut| r.slices as f64 / r.wall_s.max(1e-9);
+    let speedup = sps(&fast) / sps(&rebuild);
+    for (label, r) in [("rebuild", &rebuild), ("fast", &fast)] {
+        println!(
+            "  {label:>8}: {:>4} slices in {:>7.3}s wall = {:>8.1} slices/s, {} ckpt bytes shipped",
+            r.slices,
+            r.wall_s,
+            sps(r),
+            r.ckpt_bytes_shipped
+        );
+    }
+    println!(
+        "\n  -> speedup {speedup:.2}x, ckpt bytes {} -> {}",
+        rebuild.ckpt_bytes_shipped, fast.ckpt_bytes_shipped
+    );
+
+    assert!(
+        speedup >= 2.0,
+        "fast path must clear 2x slices/sec (got {speedup:.2}x)"
+    );
+    assert!(
+        fast.ckpt_bytes_shipped < rebuild.ckpt_bytes_shipped,
+        "delta chain must ship strictly fewer bytes ({} vs {})",
+        fast.ckpt_bytes_shipped,
+        rebuild.ckpt_bytes_shipped
+    );
+
+    let mode_json = |r: &RunOut| {
+        Json::from_pairs(vec![
+            ("wall_s", Json::num(r.wall_s)),
+            ("slices", Json::num(r.slices as f64)),
+            ("slices_per_s", Json::num(sps(r))),
+            ("ckpt_bytes_shipped", Json::num(r.ckpt_bytes_shipped as f64)),
+            ("bill_centi_cents", Json::num(r.bill_centi_cents as f64)),
+            ("cache_hits", Json::num(r.cache_hits as f64)),
+            ("delta_commits", Json::num(r.delta_commits as f64)),
+        ])
+    };
+    let report = Json::from_pairs(vec![
+        (
+            "workload",
+            Json::from_pairs(vec![
+                ("sweeps", Json::num(SWEEPS as f64)),
+                ("n_jobs", Json::num(N_JOBS as f64)),
+                ("slice_units", Json::num(1.0)),
+                ("rounds", Json::num(ROUNDS as f64)),
+            ]),
+        ),
+        ("rebuild", mode_json(&rebuild)),
+        ("fast", mode_json(&fast)),
+        (
+            "parity",
+            Json::from_pairs(vec![
+                ("dispatch", Json::Bool(dispatch_parity)),
+                ("bill", Json::Bool(bill_parity)),
+                ("results", Json::Bool(results_parity)),
+            ]),
+        ),
+        ("speedup", Json::num(speedup)),
+    ]);
+    match emit_bench_json("slice", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_slice.json: {e}"),
+    }
+    println!("\nslice bench complete.");
+}

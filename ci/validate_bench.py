@@ -286,11 +286,55 @@ def validate_obs(report):
     )
 
 
+def validate_slice(report):
+    """BENCH_slice.json: slice fast path vs per-slice rebuild.
+
+    The same seeded multi-slice sweep workload runs twice — work cache
+    + delta checkpoints on, then off. Parity (dispatch sequence, bill,
+    result digests) must hold bit-for-bit, the fast path must actually
+    exercise (cache hits, delta links), clear the throughput floor and
+    ship strictly fewer checkpoint bytes.
+    """
+    workload = report.get("workload")
+    require(isinstance(workload, dict), "'workload' must be an object")
+    require(workload["n_jobs"] >= 1000, "workload must be genuinely multi-slice")
+
+    parity = report.get("parity")
+    require(isinstance(parity, dict), "'parity' must be an object")
+    for key in ("dispatch", "bill", "results"):
+        require(parity.get(key) is True, f"parity check '{key}' did not hold")
+
+    for label in ("rebuild", "fast"):
+        r = report.get(label)
+        require(isinstance(r, dict), f"'{label}' must be an object")
+        require(
+            r["wall_s"] > 0 and r["slices"] > 0 and r["slices_per_s"] > 0,
+            f"{label}: empty run",
+        )
+    rebuild, fast = report["rebuild"], report["fast"]
+    require(fast["slices"] == rebuild["slices"], "slice counts diverged")
+    require(fast["cache_hits"] > 0, "the fast run must hit the warm cache")
+    require(fast["delta_commits"] > 0, "the fast run must ship delta links")
+    require(rebuild["cache_hits"] == 0, "the rebuild run must never hit the cache")
+    require(rebuild["delta_commits"] == 0, "the rebuild run must never ship deltas")
+    require(
+        fast["ckpt_bytes_shipped"] < rebuild["ckpt_bytes_shipped"],
+        "the delta chain must ship strictly fewer checkpoint bytes "
+        f"({fast['ckpt_bytes_shipped']} vs {rebuild['ckpt_bytes_shipped']})",
+    )
+    require(
+        report["speedup"] >= 1,
+        f"fast path must not be slower than the rebuild path "
+        f"(got {report['speedup']:.2f}x)",
+    )
+
+
 SCHEMAS = {
     "BENCH_micro.json": validate_micro,
     "BENCH_obs.json": validate_obs,
     "BENCH_queue.json": validate_queue,
     "BENCH_scale.json": validate_scale,
+    "BENCH_slice.json": validate_slice,
     "BENCH_storage.json": validate_storage,
 }
 

@@ -9,6 +9,7 @@
 
 use crate::analytics::pool::WorkerPool;
 use crate::runtime::{Runtime, TensorF32};
+use crate::util::json::Json;
 use crate::util::prng::Xoshiro256;
 use anyhow::Result;
 use std::sync::Arc;
@@ -46,6 +47,31 @@ pub struct JobResult {
     pub limit: f32,
     pub mean_recovery: f32,
     pub std_recovery: f32,
+}
+
+impl JobResult {
+    /// The canonical checkpoint row: `{"att":..,"limit":..,"mean":..,"std":..}`.
+    /// Full sweep snapshots and the incremental delta documents both use
+    /// this shape, so a delta applied in place serializes bit-identically
+    /// to a freshly built full snapshot.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("att", Json::num(self.att as f64)),
+            ("limit", Json::num(self.limit as f64)),
+            ("mean", Json::num(self.mean_recovery as f64)),
+            ("std", Json::num(self.std_recovery as f64)),
+        ])
+    }
+
+    /// Parse a checkpoint row written by [`JobResult::to_json`].
+    pub fn from_json(row: &Json) -> Result<JobResult> {
+        Ok(JobResult {
+            att: row.req_f64("att")? as f32,
+            limit: row.req_f64("limit")? as f32,
+            mean_recovery: row.req_f64("mean")? as f32,
+            std_recovery: row.req_f64("std")? as f32,
+        })
+    }
 }
 
 /// Batch evaluator: takes `(S*K)` uniforms and `(J*2)` params, returns

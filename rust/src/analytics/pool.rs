@@ -68,6 +68,13 @@ impl WorkerPool {
         }
     }
 
+    /// Whether a cached pool still describes `view`'s fan-out — the
+    /// slice fast path reuses the pooled plan across consecutive slices
+    /// only while the cluster topology it was built for is unchanged.
+    pub fn matches_view(&self, view: &ResourceView) -> bool {
+        *self == Self::from_view(view)
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
     }

@@ -154,7 +154,9 @@ pub fn registry() -> Vec<CommandSpec> {
             .switch_arg("drain", "run the scheduler until every job completes")
             .switch_arg("shutdown", "terminate the fleet and bill its usage")
             .switch_arg("json", "emit queue depth and per-tenant load as JSON")
-            .switch_arg("profile", "show wall-clock per scheduler phase for this invocation"),
+            .switch_arg("profile", "show wall-clock per scheduler phase for this invocation")
+            .switch_arg("nofastpath", "disable the slice fast path (work cache + delta checkpoints)")
+            .value_arg("ckptfull", "ship a full checkpoint every N slices, deltas between (default 8)"),
         CommandSpec::new("ec2genload", "submit a synthetic multi-tenant workload to the queue")
             .value_arg("jobs", "number of jobs to generate (default 200)")
             .value_arg("tenants", "number of distinct tenants (default 8)")
@@ -796,6 +798,14 @@ pub fn apply_with_jobs(
         "ec2jobqueue" => {
             let mut out = Vec::new();
             let mut released: Vec<String> = Vec::new();
+            if p.switch("nofastpath") {
+                js.fast_path = false;
+                out.push("slice fast path disabled".to_string());
+            }
+            if let Some(n) = p.usize_value("ckptfull")? {
+                js.ckpt_full_every = n.max(1);
+                out.push(format!("full checkpoint every {} slice(s)", js.ckpt_full_every));
+            }
             if p.switch("drain") {
                 js.run_until_idle(s)?;
                 out.push("queue drained".to_string());

@@ -23,6 +23,19 @@
 //!   the seed ([`plan_sweep`]), so the remaining batches draw the same
 //!   numbers wherever and whenever they run.
 //!
+//! Sweep checkpoints additionally support an **incremental** wire form
+//! (the slice fast path, ISSUE 8): after a full base snapshot, each
+//! slice may ship only `{"kind":"mc_sweep_delta","base_done":m,
+//! "done":n,"prev":"<hex>","append":[rows m..n]}` — O(slice) instead of
+//! O(done) bytes. Integrity is a digest chain: the base snapshot's
+//! content digest, folded over each delta's wire bytes in commit order
+//! ([`digest_update`]); every delta names the chain head it extends in
+//! `prev`, and the S3 mirror holds the [`chain_manifest`] of the head.
+//! [`apply_sweep_delta`] reapplies a delta onto the materialised full
+//! document in place, bit-identically to rebuilding the full snapshot.
+//! The scheduler compacts the chain back to a full snapshot every K
+//! slices (mirroring `jobs/persist.rs` append-log semantics).
+//!
 //! Jobs run on the pure-Rust oracle backend: the queue is a
 //! multi-tenant control-plane feature, and the oracle is the backend
 //! every other path is verified against. (`ec2runoncluster` still
@@ -39,7 +52,7 @@ use crate::analytics::script::{
     RUST_SWEEP_K, RUST_SWEEP_S, RUST_SWEEP_TILE,
 };
 use crate::coordinator::engine::ResourceView;
-use crate::simcloud::{content_digest, Link, SimCloud, Vfs};
+use crate::simcloud::{content_digest, digest_update, Link, SimCloud, Vfs};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -61,40 +74,90 @@ fn resident_checkpoint_path(job_key: &str) -> String {
     format!("jobs/{job_key}/checkpoint.json")
 }
 
+fn resident_delta_dir(job_key: &str) -> String {
+    format!("jobs/{job_key}/delta")
+}
+
+/// What the S3 mirror fingerprints while a resident delta chain is
+/// live: not the (unshipped) materialised document but the chain head
+/// itself — restore replays the chain and must reproduce this exact
+/// manifest for the state to verify.
+pub fn chain_manifest(done: usize, head: u64) -> Json {
+    Json::from_pairs(vec![
+        ("kind", Json::str("mc_sweep_chain")),
+        ("done", Json::num(done as f64)),
+        ("head", Json::str(format!("{head:016x}"))),
+    ])
+}
+
 /// Commit a resident job's state cluster-side after a surviving slice:
 /// the project and checkpoint land on the cluster's EBS volume, the
 /// checkpoint document is mirrored to the S3 store over the LAN, and a
 /// point-in-time EBS snapshot of the volume makes the whole thing
-/// durable against a spot reclaim. Returns the new snapshot id; the
-/// caller retires the previous one.
+/// durable against a spot reclaim. Takes the already-serialized wire
+/// bytes (the scheduler serializes each snapshot exactly once per
+/// slice). A full commit compacts: any delta chain hanging off the
+/// previous base is deleted. Returns the new snapshot id; the caller
+/// retires the previous one.
 pub fn commit_resident_checkpoint(
     cloud: &mut SimCloud,
     vol_id: &str,
     job_key: &str,
     project: &Vfs,
     project_dir: &str,
-    snapshot_doc: &Json,
+    snapshot_wire: &[u8],
 ) -> Result<String> {
-    let wire = snapshot_doc.to_string_compact().into_bytes();
     {
         let vol_fs = cloud.volume_fs_mut(vol_id)?;
         project.copy_dir_to(project_dir, vol_fs, &resident_project_dir(job_key));
-        vol_fs.write(&resident_checkpoint_path(job_key), wire.clone());
+        vol_fs.write(&resident_checkpoint_path(job_key), snapshot_wire.to_vec());
+        vol_fs.remove_dir(&resident_delta_dir(job_key));
     }
     // Durable S3 mirror, LAN path (free bytes, billed request).
-    cloud.s3_put(CHECKPOINT_BUCKET, job_key, wire, Link::Lan);
+    cloud.s3_put(CHECKPOINT_BUCKET, job_key, snapshot_wire.to_vec(), Link::Lan);
     let snap = cloud.snapshot_volume(vol_id, &format!("resident state of {job_key}"))?;
+    Ok(snap)
+}
+
+/// Commit one delta link of a resident job's chain: the delta document
+/// lands next to the base checkpoint on the volume (the project is
+/// already there and digest-unchanged — fast-path precondition), the
+/// S3 mirror is updated to the [`chain_manifest`] of the new head, and
+/// the volume is snapshotted as usual. `seq` orders the delta files
+/// lexically for replay; `done`/`head` describe the chain *after* this
+/// delta. Returns the new snapshot id.
+pub fn commit_resident_delta(
+    cloud: &mut SimCloud,
+    vol_id: &str,
+    job_key: &str,
+    delta_wire: &[u8],
+    seq: u64,
+    done: usize,
+    head: u64,
+) -> Result<String> {
+    {
+        let vol_fs = cloud.volume_fs_mut(vol_id)?;
+        vol_fs.write(
+            &format!("{}/{seq:06}.json", resident_delta_dir(job_key)),
+            delta_wire.to_vec(),
+        );
+    }
+    let manifest = chain_manifest(done, head).to_string_compact().into_bytes();
+    cloud.s3_put(CHECKPOINT_BUCKET, job_key, manifest, Link::Lan);
+    let snap =
+        cloud.snapshot_volume(vol_id, &format!("resident state of {job_key} (delta {seq})"))?;
     Ok(snap)
 }
 
 /// Restore a resident job's state from its snapshot onto replacement
 /// capacity: materialise a volume from the snapshot (virtual time:
 /// EBS hydration), lift the project subtree and checkpoint off it,
-/// verify the checkpoint against the S3 mirror's content digest, and
-/// return `(project files, checkpoint, LAN copy seconds)`. The scratch
-/// volume is deleted (its storage is billed). Restoring the same
-/// snapshot twice is a clean no-op-equivalent: both calls return
-/// identical state.
+/// replay any delta chain onto the base snapshot (verifying each
+/// link's `prev` digest), check the result against the S3 mirror's
+/// content digest, and return `(project files, checkpoint, LAN copy
+/// seconds)`. The scratch volume is deleted (its storage is billed).
+/// Restoring the same snapshot twice is a clean no-op-equivalent: both
+/// calls return identical state.
 pub fn restore_resident_checkpoint(
     cloud: &mut SimCloud,
     snap_id: &str,
@@ -116,23 +179,56 @@ pub fn restore_resident_checkpoint(
         .read(&resident_checkpoint_path(job_key))
         .ok_or_else(|| anyhow!("snapshot {snap_id} holds no checkpoint for {job_key}"))?
         .to_vec();
-    // Integrity: the snapshot's checkpoint must be the same bytes the
-    // S3 mirror fingerprinted at commit time. The mirror always exists
-    // for a live resume snapshot (commit creates both, completion and
-    // failure retire both), so its absence is itself an error.
-    let obj = cloud
+    // Integrity: the mirror always exists for a live resume snapshot
+    // (commit creates both, completion and failure retire both), so
+    // its absence is itself an error. With no delta chain the mirror
+    // fingerprints the base checkpoint bytes directly; with a chain it
+    // fingerprints the chain-head manifest, which replay reconstructs.
+    let obj_digest = cloud
         .s3
         .object(CHECKPOINT_BUCKET, job_key)
-        .ok_or_else(|| anyhow!("no S3 checkpoint mirror for {job_key}"))?;
-    if obj.digest != content_digest(&ck_bytes) {
-        bail!(
-            "checkpoint in snapshot {snap_id} does not match the S3 mirror for {job_key} \
-             (digest mismatch)"
-        );
-    }
+        .ok_or_else(|| anyhow!("no S3 checkpoint mirror for {job_key}"))?
+        .digest;
+    let ddir = resident_delta_dir(job_key);
+    let delta_files = vol_fs.list_dir(&ddir);
     let text = std::str::from_utf8(&ck_bytes).context("restored checkpoint is not UTF-8")?;
-    let checkpoint =
+    let mut checkpoint =
         Json::parse(text).map_err(|e| anyhow!("restored checkpoint is not valid JSON: {e}"))?;
+    let mut delta_bytes: u64 = 0;
+    if delta_files.is_empty() {
+        if obj_digest != content_digest(&ck_bytes) {
+            bail!(
+                "checkpoint in snapshot {snap_id} does not match the S3 mirror for {job_key} \
+                 (digest mismatch)"
+            );
+        }
+    } else {
+        // Replay the chain: fold each delta's wire bytes into the
+        // running head, verifying the `prev` link before applying.
+        let mut head = content_digest(&ck_bytes);
+        for rel in &delta_files {
+            let wire = vol_fs
+                .read(&format!("{ddir}/{rel}"))
+                .expect("listed file exists")
+                .to_vec();
+            let delta = std::str::from_utf8(&wire)
+                .ok()
+                .and_then(|t| Json::parse(t).ok())
+                .ok_or_else(|| anyhow!("delta '{rel}' in snapshot {snap_id} is not valid JSON"))?;
+            apply_sweep_delta(&mut checkpoint, &delta, head)
+                .with_context(|| format!("replaying delta '{rel}' from snapshot {snap_id}"))?;
+            head = digest_update(head, &wire);
+            delta_bytes += wire.len() as u64;
+        }
+        let done = checkpoint.req_u64("done")? as usize;
+        let manifest = chain_manifest(done, head).to_string_compact();
+        if obj_digest != content_digest(manifest.as_bytes()) {
+            bail!(
+                "delta chain in snapshot {snap_id} does not match the S3 mirror for {job_key} \
+                 (digest mismatch)"
+            );
+        }
+    }
 
     // Lift the project subtree into a standalone vfs rooted at "".
     let pdir = resident_project_dir(job_key);
@@ -145,10 +241,55 @@ pub fn restore_resident_checkpoint(
         files += 1;
         project.write(&rel, data);
     }
-    bytes += ck_bytes.len() as u64;
-    let lan_s = cloud.net.transfer_s(bytes, files.max(1), Link::Lan);
+    bytes += ck_bytes.len() as u64 + delta_bytes;
+    let lan_s = cloud
+        .net
+        .transfer_s(bytes, files.max(1) + delta_files.len(), Link::Lan);
     cloud.account_transfer(&format!("{job_key} LAN restore"), bytes, Link::Lan);
     Ok((project, checkpoint, lan_s))
+}
+
+/// Apply one `mc_sweep_delta` document onto the materialised full
+/// checkpoint **in place**: verify the delta extends this exact chain
+/// (`prev` names `expect_prev`, `base_done` names the document's
+/// current `done`, the sweep fingerprint matches), then append the new
+/// rows and advance `done`. Keys stay sorted (`Json::Obj` is a
+/// `BTreeMap`), so the mutated document serializes bit-identically to
+/// a freshly built full snapshot of the same state.
+pub fn apply_sweep_delta(full: &mut Json, delta: &Json, expect_prev: u64) -> Result<()> {
+    if delta.opt_str("kind").as_deref() != Some("mc_sweep_delta") {
+        bail!("not an mc_sweep_delta document");
+    }
+    if full.opt_str("kind").as_deref() != Some("mc_sweep") {
+        bail!("delta applied to a non-sweep checkpoint");
+    }
+    if full.get("config") != delta.get("config") {
+        bail!("delta config fingerprint does not match the base checkpoint");
+    }
+    let prev = delta.req_str("prev")?;
+    if prev != format!("{expect_prev:016x}") {
+        bail!("delta chain broken: prev {prev} does not extend head {expect_prev:016x}");
+    }
+    let base_done = delta.req_u64("base_done")? as usize;
+    if full.req_u64("done")? as usize != base_done {
+        bail!(
+            "delta base_done {base_done} does not match the checkpoint's done {}",
+            full.req_u64("done")?
+        );
+    }
+    let done = delta.req_u64("done")? as usize;
+    let append = delta
+        .get("append")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("delta missing 'append' rows"))?
+        .to_vec();
+    let rows = full
+        .get_mut("results")
+        .and_then(Json::as_arr_mut)
+        .ok_or_else(|| anyhow!("base checkpoint missing 'results'"))?;
+    rows.extend(append);
+    full.set("done", Json::num(done as f64));
+    Ok(())
 }
 
 /// Result of one slice.
@@ -325,12 +466,7 @@ impl JobWork {
                             .and_then(Json::as_arr)
                             .ok_or_else(|| anyhow!("sweep checkpoint missing results"))?
                         {
-                            results.push(JobResult {
-                                att: r.req_f64("att")? as f32,
-                                limit: r.req_f64("limit")? as f32,
-                                mean_recovery: r.req_f64("mean")? as f32,
-                                std_recovery: r.req_f64("std")? as f32,
-                            });
+                            results.push(JobResult::from_json(r)?);
                         }
                         // The checkpoint must describe THIS plan: if the
                         // script changed between slices the re-derived
@@ -454,22 +590,43 @@ impl JobWork {
                 j.set("done", Json::num(*done as f64));
                 j.set(
                     "results",
-                    Json::Arr(
-                        results
-                            .iter()
-                            .map(|r| {
-                                Json::from_pairs(vec![
-                                    ("att", Json::num(r.att as f64)),
-                                    ("limit", Json::num(r.limit as f64)),
-                                    ("mean", Json::num(r.mean_recovery as f64)),
-                                    ("std", Json::num(r.std_recovery as f64)),
-                                ])
-                            })
-                            .collect(),
-                    ),
+                    Json::Arr(results.iter().map(JobResult::to_json).collect()),
                 );
                 j
             }
+        }
+    }
+
+    /// Serialize only the state appended since `base_done` committed
+    /// batches — the O(slice) incremental checkpoint. `prev_digest` is
+    /// the chain head the delta extends (recorded in the document so
+    /// apply/replay can verify the link). Returns `None` when this
+    /// work kind has no incremental form (catopt's GA state is not
+    /// append-only) or when `base_done` does not describe a prefix of
+    /// the committed state — the caller falls back to a full snapshot.
+    pub fn snapshot_delta(&self, base_done: usize, prev_digest: u64) -> Option<Json> {
+        match self {
+            JobWork::Sweep {
+                cfg,
+                plan,
+                done,
+                results,
+                ..
+            } if base_done <= *done => {
+                let base_rows = plan.jobs_in_range(0, base_done);
+                let mut j = Json::obj();
+                j.set("kind", Json::str("mc_sweep_delta"));
+                j.set("config", sweep_fingerprint(cfg));
+                j.set("base_done", Json::num(base_done as f64));
+                j.set("done", Json::num(*done as f64));
+                j.set("prev", Json::str(format!("{prev_digest:016x}")));
+                j.set(
+                    "append",
+                    Json::Arr(results[base_rows..].iter().map(JobResult::to_json).collect()),
+                );
+                Some(j)
+            }
+            _ => None,
         }
     }
 
@@ -667,8 +824,9 @@ mod tests {
         let pool = WorkerPool::serial();
         let work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
         let doc = work.snapshot();
+        let wire = doc.to_string_compact().into_bytes();
         let snap =
-            commit_resident_checkpoint(&mut cloud, &vol, "job-1", &v, "proj", &doc).unwrap();
+            commit_resident_checkpoint(&mut cloud, &vol, "job-1", &v, "proj", &wire).unwrap();
 
         // The S3 mirror exists and fingerprints the committed bytes.
         let obj = cloud.s3.object(CHECKPOINT_BUCKET, "job-1").unwrap();
@@ -693,6 +851,147 @@ mod tests {
         assert!(err.to_string().contains("no checkpoint"));
     }
 
+    fn multi_batch_sweep_project() -> Vfs {
+        let mut v = Vfs::new();
+        // 200 MC jobs at the 64-job tile: four batches (slices).
+        v.write(
+            "proj/sweep.json",
+            br#"{"type":"mc_sweep","n_jobs":200,"seed":7}"#.to_vec(),
+        );
+        v
+    }
+
+    #[test]
+    fn delta_applied_in_place_matches_the_full_snapshot_bit_for_bit() {
+        let v = multi_batch_sweep_project();
+        let pool = WorkerPool::serial();
+        let view = view(1, 4);
+        let mut work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+        work.step(1, &view, &pool).unwrap();
+        let mut full = work.snapshot();
+        let mut head = content_digest(full.to_string_compact().as_bytes());
+        // Three more slices shipped as deltas, each applied in place.
+        for _ in 0..3 {
+            let base_done = full.req_u64("done").unwrap() as usize;
+            work.step(1, &view, &pool).unwrap();
+            let delta = work.snapshot_delta(base_done, head).unwrap();
+            let wire = delta.to_string_compact();
+            // The delta round-trips through text like a real shipment.
+            let delta = Json::parse(&wire).unwrap();
+            apply_sweep_delta(&mut full, &delta, head).unwrap();
+            head = digest_update(head, wire.as_bytes());
+            assert_eq!(
+                full.to_string_compact(),
+                work.snapshot().to_string_compact(),
+                "in-place delta apply must be bit-identical to a fresh full snapshot"
+            );
+        }
+        // A broken chain link is refused.
+        let err = apply_sweep_delta(&mut full, &work.snapshot_delta(0, 123).unwrap(), head);
+        assert!(err.unwrap_err().to_string().contains("chain broken"));
+        // Catopt has no incremental form.
+        let cv = catopt_project();
+        let cwork = JobWork::from_project(&cv, "proj", "catopt.json", None, &pool).unwrap();
+        assert!(cwork.snapshot_delta(0, head).is_none());
+    }
+
+    #[test]
+    fn resident_delta_chain_commits_restore_and_compact() {
+        let mut cloud = SimCloud::new(SimParams::default());
+        let vol = cloud.create_volume(8.0);
+        let v = multi_batch_sweep_project();
+        let pool = WorkerPool::serial();
+        let view = view(1, 4);
+        let mut work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+
+        // Slice 1: full base commit starts the chain.
+        work.step(1, &view, &pool).unwrap();
+        let mut full = work.snapshot();
+        let base_wire = full.to_string_compact().into_bytes();
+        let mut head = content_digest(&base_wire);
+        commit_resident_checkpoint(&mut cloud, &vol, "job-d", &v, "proj", &base_wire).unwrap();
+
+        // Slices 2–3: delta commits extend it.
+        let mut last_snap = String::new();
+        for seq in 0..2u64 {
+            let base_done = full.req_u64("done").unwrap() as usize;
+            work.step(1, &view, &pool).unwrap();
+            let delta = work.snapshot_delta(base_done, head).unwrap();
+            let wire = delta.to_string_compact().into_bytes();
+            apply_sweep_delta(&mut full, &delta, head).unwrap();
+            head = digest_update(head, &wire);
+            let done = full.req_u64("done").unwrap() as usize;
+            last_snap =
+                commit_resident_delta(&mut cloud, &vol, "job-d", &wire, seq, done, head).unwrap();
+        }
+
+        // Restore replays the chain onto the base, bit-identically.
+        let (proj, ck, lan_s) =
+            restore_resident_checkpoint(&mut cloud, &last_snap, "job-d").unwrap();
+        assert!(lan_s > 0.0);
+        assert_eq!(ck.to_string_compact(), work.snapshot().to_string_compact());
+        assert_eq!(proj.read("sweep.json"), v.read("proj/sweep.json"));
+
+        // Compaction: a full commit clears the chain, and a fresh
+        // delta after it restarts cleanly at the new base.
+        let compact_wire = work.snapshot().to_string_compact().into_bytes();
+        let snap_c =
+            commit_resident_checkpoint(&mut cloud, &vol, "job-d", &v, "proj", &compact_wire)
+                .unwrap();
+        let (_, ck_c, _) = restore_resident_checkpoint(&mut cloud, &snap_c, "job-d").unwrap();
+        assert_eq!(ck_c.to_string_compact(), work.snapshot().to_string_compact());
+
+        let mut full = work.snapshot();
+        let mut head = content_digest(&compact_wire);
+        let base_done = full.req_u64("done").unwrap() as usize;
+        work.step(1, &view, &pool).unwrap();
+        let delta = work.snapshot_delta(base_done, head).unwrap();
+        let wire = delta.to_string_compact().into_bytes();
+        apply_sweep_delta(&mut full, &delta, head).unwrap();
+        head = digest_update(head, &wire);
+        let done = full.req_u64("done").unwrap() as usize;
+        let snap_d =
+            commit_resident_delta(&mut cloud, &vol, "job-d", &wire, 0, done, head).unwrap();
+        let (_, ck_d, _) = restore_resident_checkpoint(&mut cloud, &snap_d, "job-d").unwrap();
+        assert_eq!(ck_d.to_string_compact(), work.snapshot().to_string_compact());
+    }
+
+    #[test]
+    fn restore_detects_a_tampered_delta_chain() {
+        let mut cloud = SimCloud::new(SimParams::default());
+        let vol = cloud.create_volume(8.0);
+        let v = multi_batch_sweep_project();
+        let pool = WorkerPool::serial();
+        let view = view(1, 4);
+        let mut work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
+        work.step(1, &view, &pool).unwrap();
+        let mut full = work.snapshot();
+        let base_wire = full.to_string_compact().into_bytes();
+        let head0 = content_digest(&base_wire);
+        commit_resident_checkpoint(&mut cloud, &vol, "job-t", &v, "proj", &base_wire).unwrap();
+        let base_done = full.req_u64("done").unwrap() as usize;
+        work.step(1, &view, &pool).unwrap();
+        let delta = work.snapshot_delta(base_done, head0).unwrap();
+        let wire = delta.to_string_compact().into_bytes();
+        apply_sweep_delta(&mut full, &delta, head0).unwrap();
+        let head = digest_update(head0, &wire);
+        let done = full.req_u64("done").unwrap() as usize;
+        commit_resident_delta(&mut cloud, &vol, "job-t", &wire, 0, done, head).unwrap();
+
+        // Forge the delta on the volume: same prev link, altered rows —
+        // the chain-head manifest no longer matches the S3 mirror.
+        let mut forged = delta.clone();
+        let rows = forged.get_mut("append").and_then(Json::as_arr_mut).unwrap();
+        rows.pop();
+        cloud
+            .volume_fs_mut(&vol)
+            .unwrap()
+            .write("jobs/job-t/delta/000000.json", forged.to_string_compact().into_bytes());
+        let bad = cloud.snapshot_volume(&vol, "tampered delta").unwrap();
+        let err = restore_resident_checkpoint(&mut cloud, &bad, "job-t").unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "got: {err}");
+    }
+
     #[test]
     fn restore_detects_a_tampered_snapshot_via_the_s3_digest() {
         let mut cloud = SimCloud::new(SimParams::default());
@@ -701,7 +1000,8 @@ mod tests {
         let pool = WorkerPool::serial();
         let work = JobWork::from_project(&v, "proj", "sweep.json", None, &pool).unwrap();
         let doc = work.snapshot();
-        commit_resident_checkpoint(&mut cloud, &vol, "job-1", &v, "proj", &doc).unwrap();
+        let wire = doc.to_string_compact().into_bytes();
+        commit_resident_checkpoint(&mut cloud, &vol, "job-1", &v, "proj", &wire).unwrap();
         // Corrupt the volume's checkpoint and snapshot it again.
         cloud
             .volume_fs_mut(&vol)

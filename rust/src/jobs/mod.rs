@@ -69,7 +69,7 @@ use crate::coordinator::engine::ResourceView;
 use crate::coordinator::scheduler::{self, NodeSpec};
 use crate::coordinator::Session;
 use crate::datasync::{sync_dir, Protocol, DEFAULT_BLOCK_LEN};
-use crate::simcloud::s3::{digest_update, DIGEST_SEED};
+use crate::simcloud::s3::{content_digest, digest_update, DIGEST_SEED};
 use crate::simcloud::{instance_type, Link, SpanCategory, SpotMarket};
 use crate::telemetry::{EventKind, Phase, PhaseProfiler};
 use crate::util::humanfmt;
@@ -165,6 +165,75 @@ pub struct FleetCluster {
     pub spot: bool,
 }
 
+/// What a slice ships and (if it survives) commits: the full snapshot
+/// document, an incremental delta extending the job's digest chain, or
+/// nothing at all — a finishing slice's state is its result files, so
+/// shipping a checkpoint alongside them would be pure wasted WAN time
+/// and cents. Both forms carry the wire bytes, serialized exactly once
+/// at dispatch and reused for the resident volume write.
+enum SliceCommit {
+    /// Nothing ships (finishing slice).
+    None,
+    /// The complete checkpoint document (cold chain or compaction).
+    Full { doc: Json, wire: Vec<u8> },
+    /// Only the rows appended this slice (`mc_sweep_delta`).
+    Delta { doc: Json, wire: Vec<u8> },
+}
+
+impl SliceCommit {
+    /// Shipped wire bytes, `None` when nothing ships.
+    fn wire_len(&self) -> Option<u64> {
+        match self {
+            SliceCommit::None => None,
+            SliceCommit::Full { wire, .. } | SliceCommit::Delta { wire, .. } => {
+                Some(wire.len() as u64)
+            }
+        }
+    }
+
+    fn is_delta(&self) -> bool {
+        matches!(self, SliceCommit::Delta { .. })
+    }
+}
+
+/// One `WorkCache` entry: the live [`JobWork`] (and its pooled worker
+/// plan) kept warm between consecutive slices of the same job on the
+/// same cluster, so the next dispatch skips the script re-parse, data
+/// rebuild, PRNG-plan refork and checkpoint JSON round-trip. The entry
+/// is only valid against the exact `(cluster, digest, units_done)` it
+/// was committed under — any mismatch evicts it and the cold rebuild
+/// path (with its mid-job-edit fingerprint checks) runs instead.
+struct WorkCacheEntry {
+    /// Cluster whose master holds the project this work was built on.
+    cluster: String,
+    /// Content digest of script + project files on that master.
+    digest: u64,
+    /// Slave-process count parsed from the script at build time.
+    nproc: usize,
+    work: JobWork,
+    pool: WorkerPool,
+    /// Committed units when the entry was cached (must equal the
+    /// job's committed units at reuse time).
+    units_done: usize,
+    /// LRU stamp (dispatch sequence, never wall clock).
+    used: u64,
+}
+
+/// Per-job incremental-checkpoint chain: the rolling digest over the
+/// base full snapshot and every delta committed since, advanced only
+/// when a slice survives. Evicted on reclaim, migration, completion or
+/// failure — the next commit then re-bases with a full snapshot.
+struct ChainState {
+    /// Cluster the chain's resident artifacts live on.
+    cluster: String,
+    /// Chain head: base content digest folded over each delta's wire.
+    head: u64,
+    /// Deltas since the last full snapshot (compaction counter).
+    since_full: usize,
+    /// Committed units the materialised checkpoint describes.
+    done_units: usize,
+}
+
 /// An in-flight slice: the numerics already ran; this is its
 /// completion event on the virtual timeline. If a spot interruption
 /// lands before `at_s`, the event is discarded — the slice's work is
@@ -176,7 +245,10 @@ struct SliceEnd {
     job: JobId,
     cluster: String,
     /// State to commit if the slice survives.
-    snapshot: Json,
+    commit: SliceCommit,
+    /// Live work handed back to the `WorkCache` if the slice survives
+    /// and continues (dropped on failure/finish/reclaim — eviction).
+    cache: Option<WorkCacheEntry>,
     progress: f64,
     virtual_s: f64,
     /// Work units this slice ran (estimator history entry).
@@ -238,7 +310,7 @@ fn commit_resident_state(
     cluster: &str,
     key: &str,
     projectdir: &str,
-    snapshot_doc: &Json,
+    snapshot_wire: &[u8],
 ) -> Result<Option<String>> {
     let Some(entry) = s.clusters_cfg.get(cluster).cloned() else {
         return Ok(None);
@@ -258,9 +330,48 @@ fn commit_resident_state(
         key,
         &project,
         &pdir,
-        snapshot_doc,
+        snapshot_wire,
     )?))
 }
+
+/// Commit one delta link of a resident job's chain cluster-side —
+/// the O(slice) counterpart of [`commit_resident_state`]: the project
+/// is already on the volume and digest-unchanged (fast-path
+/// precondition), so only the delta document and the updated chain
+/// manifest move. Returns the new EBS snapshot id, or `None` when the
+/// cluster has no volume.
+fn commit_resident_delta_state(
+    s: &mut Session,
+    cluster: &str,
+    key: &str,
+    delta_wire: &[u8],
+    seq: u64,
+    done: usize,
+    head: u64,
+) -> Result<Option<String>> {
+    let Some(entry) = s.clusters_cfg.get(cluster).cloned() else {
+        return Ok(None);
+    };
+    let Some(vol) = entry.volume_id.clone() else {
+        return Ok(None);
+    };
+    Ok(Some(checkpoint::commit_resident_delta(
+        &mut s.cloud,
+        &vol,
+        key,
+        delta_wire,
+        seq,
+        done,
+        head,
+    )?))
+}
+
+/// Default delta-chain compaction cadence: every eighth commit ships a
+/// full snapshot (re-basing the chain), bounding restore replay.
+pub const DEFAULT_CKPT_FULL_EVERY: usize = 8;
+
+/// Default [`JobScheduler::work_cache_cap`].
+pub const DEFAULT_WORK_CACHE_CAP: usize = 64;
 
 /// The platform scheduler.
 pub struct JobScheduler {
@@ -274,6 +385,37 @@ pub struct JobScheduler {
     /// checkpoint cadence. Smaller = less work lost per interruption,
     /// more checkpoint shipping.
     pub slice_units: usize,
+    /// The slice fast path (ISSUE 8): keep each job's live work warm
+    /// in the `WorkCache` between consecutive slices and ship O(slice)
+    /// delta checkpoints instead of the full O(done) snapshot. Off =
+    /// the legacy rebuild-every-slice behaviour, bit-identical results
+    /// either way (asserted by `benches/slice.rs`).
+    pub fast_path: bool,
+    /// Compact a job's delta chain back to a full snapshot every this
+    /// many commits, bounding restore replay length and resident delta
+    /// accumulation.
+    pub ckpt_full_every: usize,
+    /// Max live `WorkCache` entries; beyond it the least-recently used
+    /// entry is evicted (deterministic: dispatch-sequence stamps).
+    pub work_cache_cap: usize,
+    /// Warm job state, keyed by job id (see [`WorkCacheEntry`]).
+    work_cache: BTreeMap<JobId, WorkCacheEntry>,
+    /// LRU clock for the cache (dispatch sequence, never wall time).
+    work_cache_used: u64,
+    /// Live incremental-checkpoint chains, keyed by job id.
+    ckpt_chains: BTreeMap<JobId, ChainState>,
+    /// Dispatches that reused warm cached work.
+    pub work_cache_hits: u64,
+    /// Dispatches that rebuilt from the committed checkpoint.
+    pub work_cache_misses: u64,
+    /// Cache entries invalidated (edit/migration/reclaim/LRU).
+    pub work_cache_evictions: u64,
+    /// Total checkpoint wire bytes shipped (full + delta, all jobs).
+    pub ckpt_bytes_shipped: u64,
+    /// Commits shipped as full snapshots.
+    pub ckpt_full_commits: u64,
+    /// Commits shipped as incremental deltas.
+    pub ckpt_delta_commits: u64,
     /// In-flight slices, slab-addressed by dispatch sequence number.
     live_slices: BTreeMap<u64, SliceEnd>,
     /// Next slice sequence number (never reused within a run).
@@ -329,6 +471,18 @@ impl JobScheduler {
             autoscaler: Autoscaler::new(cfg),
             fleet: Vec::new(),
             slice_units: 2,
+            fast_path: true,
+            ckpt_full_every: DEFAULT_CKPT_FULL_EVERY,
+            work_cache_cap: DEFAULT_WORK_CACHE_CAP,
+            work_cache: BTreeMap::new(),
+            work_cache_used: 0,
+            ckpt_chains: BTreeMap::new(),
+            work_cache_hits: 0,
+            work_cache_misses: 0,
+            work_cache_evictions: 0,
+            ckpt_bytes_shipped: 0,
+            ckpt_full_commits: 0,
+            ckpt_delta_commits: 0,
             live_slices: BTreeMap::new(),
             slice_seq: 0,
             slice_heap: BinaryHeap::new(),
@@ -617,7 +771,38 @@ impl JobScheduler {
                 }
             }
         }
+        // Warm state pinned to clusters that vanished outside the
+        // scheduler's view is unreachable: evict it.
+        let gone: Vec<String> = self
+            .work_cache
+            .values()
+            .map(|e| e.cluster.clone())
+            .chain(self.ckpt_chains.values().map(|c| c.cluster.clone()))
+            .filter(|c| !s.clusters_cfg.contains(c))
+            .collect();
+        for cname in gone {
+            self.evict_cluster_state(&cname);
+        }
         self.reindex_fleet();
+    }
+
+    /// Drop every cached work entry and checkpoint chain pinned to
+    /// `cname` (counting cache evictions). Returns whether any warm
+    /// work was evicted.
+    fn evict_cluster_state(&mut self, cname: &str) -> bool {
+        let victims: Vec<JobId> = self
+            .work_cache
+            .iter()
+            .filter(|(_, e)| e.cluster == cname)
+            .map(|(k, _)| *k)
+            .collect();
+        let evicted = !victims.is_empty();
+        for jid in victims {
+            self.work_cache.remove(&jid);
+            self.work_cache_evictions += 1;
+        }
+        self.ckpt_chains.retain(|_, c| c.cluster != cname);
+        evicted
     }
 
     // ------------------------------------------ event & fleet indexes
@@ -866,6 +1051,7 @@ impl JobScheduler {
         }
         let mut released = Vec::new();
         for c in std::mem::take(&mut self.fleet) {
+            self.evict_cluster_state(&c.name);
             s.terminate_cluster(Some(&c.name), true)?;
             released.push(c.name);
         }
@@ -886,6 +1072,17 @@ impl JobScheduler {
                 .join(", "),
             self.interruptions_delivered,
             self.autoscaler.events.len(),
+        ));
+        out.push(format!(
+            "fast path: {} — work cache {} hit(s) / {} miss(es) / {} eviction(s); \
+             checkpoints {} full + {} delta commit(s), {} shipped",
+            if self.fast_path { "on" } else { "off" },
+            self.work_cache_hits,
+            self.work_cache_misses,
+            self.work_cache_evictions,
+            self.ckpt_full_commits,
+            self.ckpt_delta_commits,
+            humanfmt::bytes(self.ckpt_bytes_shipped),
         ));
         out
     }
@@ -1358,6 +1555,11 @@ impl JobScheduler {
             if job.resident {
                 s.cloud.s3_delete(checkpoint::CHECKPOINT_BUCKET, &jid.to_string()).ok();
             }
+            // Failed jobs hold no warm state or live chain.
+            if self.work_cache.remove(&jid).is_some() {
+                self.work_cache_evictions += 1;
+            }
+            self.ckpt_chains.remove(&jid);
             crate::log_warn!("{jid} failed to start: {e:#}");
             self.log.push(format!("{jid} failed to start: {e:#}"));
         }
@@ -1468,17 +1670,76 @@ impl JobScheduler {
                 core_speed: ispec.core_speed,
             })
             .collect();
+        // Content digest of the script + project files as landed on
+        // the master — the `WorkCache` key component that turns any
+        // mid-job edit (or a different project altogether) into a
+        // miss, forcing the cold rebuild path and its fingerprint
+        // checks. Skipped entirely when the fast path is off.
+        let proj_digest = if self.fast_path {
+            let fs = &s.cloud.instance(&entry.master_id)?.fs;
+            let mut h = DIGEST_SEED;
+            for rel in fs.list_dir(&dest) {
+                h = digest_update(h, rel.as_bytes());
+                h = digest_update(h, &[0]);
+                h = digest_update(h, fs.read(&format!("{dest}/{rel}")).unwrap_or(&[]));
+                h = digest_update(h, &[0xFF]);
+            }
+            h
+        } else {
+            0
+        };
+
+        // Warm-state lookup: the entry is taken out of the cache for
+        // the duration of the slice (it travels in the `SliceEnd` and
+        // is reinserted only if the slice survives and continues), so
+        // a reclaim mid-slice drops it automatically.
+        let committed_units = self.queue.get(jid).map(|j| j.units_done);
+        let mut cache_hit = false;
+        let cached = if self.fast_path {
+            match self.work_cache.remove(&jid) {
+                Some(e)
+                    if e.cluster == cname
+                        && e.digest == proj_digest
+                        && Some(e.units_done) == committed_units =>
+                {
+                    cache_hit = true;
+                    self.work_cache_hits += 1;
+                    Some(e)
+                }
+                Some(_) => {
+                    // Migration, edit, or state drift: evict + rebuild.
+                    self.work_cache_evictions += 1;
+                    self.work_cache_misses += 1;
+                    None
+                }
+                None => {
+                    self.work_cache_misses += 1;
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
         // Numerics, eagerly (they cannot depend on virtual time). The
         // master's filesystem is borrowed, not cloned — the work owns
-        // everything it needs once constructed.
-        let (work, outcome, units_before) = {
+        // everything it needs once constructed. A cache hit skips the
+        // script re-parse, data rebuild, sweep-plan refork and the
+        // checkpoint JSON round-trip; the cold path is unchanged.
+        let (work, pool, outcome, units_before, nproc) = {
             let project = &s.cloud.instance(&entry.master_id)?.fs;
-            let script = checkpoint::load_script(project, &dest, &spec.rscript)?;
-            let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
-            let nproc = script
-                .get("slaves")
-                .and_then(Json::as_usize)
-                .unwrap_or(total_cores);
+            let (script, nproc) = match &cached {
+                Some(e) => (None, e.nproc),
+                None => {
+                    let script = checkpoint::load_script(project, &dest, &spec.rscript)?;
+                    let total_cores: usize = nodes.iter().map(|n| n.cores).sum();
+                    let nproc = script
+                        .get("slaves")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(total_cores);
+                    (Some(script), nproc)
+                }
+            };
             let assignment = scheduler::schedule(nproc, &nodes, spec.placement);
             let view = ResourceView {
                 nodes,
@@ -1487,18 +1748,34 @@ impl JobScheduler {
                 resource_name: cname.clone(),
                 real_threads: s.threads,
             };
-            let pool = WorkerPool::from_view(&view);
-            let mut work = JobWork::from_script(
-                project,
-                &dest,
-                &spec.rscript,
-                &script,
-                job_checkpoint.as_ref(),
-                &pool,
-            )?;
+            let (mut work, pool) = match cached {
+                Some(e) => {
+                    // Reuse the pooled worker plan while the cluster
+                    // topology it was built for is unchanged.
+                    let pool = if e.pool.matches_view(&view) {
+                        e.pool
+                    } else {
+                        WorkerPool::from_view(&view)
+                    };
+                    (e.work, pool)
+                }
+                None => {
+                    let pool = WorkerPool::from_view(&view);
+                    let script = script.expect("parsed on the cold path");
+                    let work = JobWork::from_script(
+                        project,
+                        &dest,
+                        &spec.rscript,
+                        &script,
+                        job_checkpoint.as_ref(),
+                        &pool,
+                    )?;
+                    (work, pool)
+                }
+            };
             let units_before = work.units_done();
             let outcome = work.step(self.slice_units, &view, &pool)?;
-            (work, outcome, units_before)
+            (work, pool, outcome, units_before, nproc)
         };
         duration += outcome.virtual_s;
 
@@ -1520,14 +1797,51 @@ impl JobScheduler {
         // Checkpoint shipment: WAN to the Analyst site by default, or
         // LAN to the cluster-side store for a resident job (the commit
         // itself — volume write + S3 mirror + EBS snapshot — happens
-        // only if the slice survives, in `complete_slice`).
-        let snapshot = work.snapshot();
-        let ckpt_len = snapshot.to_string_compact().len() as u64;
-        let ship_link = if resident { Link::Lan } else { Link::Wan };
-        duration += s.cloud.net.transfer_s(ckpt_len, 1, ship_link);
-        if !resident {
-            s.cloud
-                .account_transfer(&format!("{key} checkpoint ship"), ckpt_len, Link::Wan);
+        // only if the slice survives, in `complete_slice`). A
+        // finishing slice ships nothing: its result files land in the
+        // same slice and carry the whole state. On the fast path a
+        // continuing slice extends the job's digest chain with an
+        // O(slice) delta instead of the O(done) full snapshot, unless
+        // the chain is cold, broken (migration/reclaim) or due for
+        // compaction — then a full snapshot re-bases it. The wire
+        // bytes are serialized once, here, and reused at commit time.
+        let commit = if outcome.finished && !failed {
+            SliceCommit::None
+        } else {
+            let delta = if self.fast_path {
+                self.ckpt_chains.get(&jid).and_then(|chain| {
+                    if chain.cluster == cname
+                        && chain.done_units == units_before
+                        && chain.since_full + 1 < self.ckpt_full_every.max(1)
+                    {
+                        work.snapshot_delta(units_before, chain.head)
+                    } else {
+                        None
+                    }
+                })
+            } else {
+                None
+            };
+            match delta {
+                Some(doc) => {
+                    let wire = doc.to_string_compact().into_bytes();
+                    SliceCommit::Delta { doc, wire }
+                }
+                None => {
+                    let doc = work.snapshot();
+                    let wire = doc.to_string_compact().into_bytes();
+                    SliceCommit::Full { doc, wire }
+                }
+            }
+        };
+        if let Some(ckpt_len) = commit.wire_len() {
+            let ship_link = if resident { Link::Lan } else { Link::Wan };
+            duration += s.cloud.net.transfer_s(ckpt_len, 1, ship_link);
+            if !resident {
+                s.cloud
+                    .account_transfer(&format!("{key} checkpoint ship"), ckpt_len, Link::Wan);
+            }
+            self.ckpt_bytes_shipped += ckpt_len;
         }
 
         s.set_cluster_lock(&cname, true)?;
@@ -1554,6 +1868,16 @@ impl JobScheduler {
                 Json::from_pairs(vec![
                     ("wait_s", Json::num(wait_s)),
                     ("first", Json::Bool(first_dispatch)),
+                    (
+                        "cache",
+                        Json::str(if !self.fast_path {
+                            "off"
+                        } else if cache_hit {
+                            "hit"
+                        } else {
+                            "miss"
+                        }),
+                    ),
                 ]),
             );
         }
@@ -1561,17 +1885,36 @@ impl JobScheduler {
         self.idle_spot.remove(&slot);
         self.idle_od.remove(&slot);
         *self.tenant_busy.entry(analyst).or_insert(0) += 1;
+        let (progress, units_done, units_total) =
+            (work.progress(), work.units_done(), work.total_units());
+        // Hand the stepped work to the completion event: reinserted
+        // into the cache only if the slice survives and continues (a
+        // failed slice's work is ahead of the committed checkpoint).
+        let cache = if self.fast_path && !failed && !outcome.finished {
+            Some(WorkCacheEntry {
+                cluster: cname.clone(),
+                digest: proj_digest,
+                nproc,
+                work,
+                pool,
+                units_done,
+                used: 0,
+            })
+        } else {
+            None
+        };
         self.push_slice(SliceEnd {
             at_s: now0 + duration,
             from_s: now0,
             job: jid,
             cluster: cname,
-            snapshot,
-            progress: work.progress(),
+            commit,
+            cache,
+            progress,
             virtual_s: outcome.virtual_s,
-            units_run: work.units_done().saturating_sub(units_before),
-            units_done: work.units_done(),
-            units_total: work.total_units(),
+            units_run: units_done.saturating_sub(units_before),
+            units_done,
+            units_total,
             finished: outcome.finished,
             failed,
             files,
@@ -1588,7 +1931,7 @@ impl JobScheduler {
     /// snapshot — or back to the queue for the WAN path; requeue on
     /// exec failure), free the cluster, and on a finishing slice land
     /// the result files.
-    fn complete_slice(&mut self, s: &mut Session, ev: SliceEnd) -> Result<()> {
+    fn complete_slice(&mut self, s: &mut Session, mut ev: SliceEnd) -> Result<()> {
         let now = s.cloud.clock.now_s();
         s.cloud.clock.push_span(
             SpanCategory::Compute,
@@ -1631,8 +1974,55 @@ impl JobScheduler {
         // result files. An error restores the platform ledger context
         // on the way out.
         let key = ev.job.to_string();
+        let slice_commit = std::mem::replace(&mut ev.commit, SliceCommit::None);
+        let commit_bytes = slice_commit.wire_len();
+        let commit_delta = slice_commit.is_delta();
+        // Advance the job's digest chain for a surviving continuing
+        // slice — a full commit re-bases it (compaction), a delta
+        // extends it — capturing what the resident delta commit and
+        // the in-place checkpoint apply below need.
+        let mut prev_head = None;
+        let mut delta_commit_info = None;
+        if !ev.failed && !ev.finished {
+            match &slice_commit {
+                SliceCommit::Full { wire, .. } => {
+                    self.ckpt_chains.insert(
+                        ev.job,
+                        ChainState {
+                            cluster: ev.cluster.clone(),
+                            head: content_digest(wire),
+                            since_full: 0,
+                            done_units: ev.units_done,
+                        },
+                    );
+                    self.ckpt_full_commits += 1;
+                }
+                SliceCommit::Delta { wire, .. } => {
+                    let chain = self
+                        .ckpt_chains
+                        .get_mut(&ev.job)
+                        .expect("a delta only ships on a live chain");
+                    prev_head = Some(chain.head);
+                    chain.head = digest_update(chain.head, wire);
+                    chain.since_full += 1;
+                    chain.done_units = ev.units_done;
+                    delta_commit_info =
+                        Some(((chain.since_full - 1) as u64, ev.units_done, chain.head));
+                    self.ckpt_delta_commits += 1;
+                }
+                SliceCommit::None => {}
+            }
+        }
         let commit = if resident && !ev.failed && !ev.finished {
-            commit_resident_state(s, &ev.cluster, &key, &job_spec.projectdir, &ev.snapshot)
+            match (&slice_commit, delta_commit_info) {
+                (SliceCommit::Full { wire, .. }, _) => {
+                    commit_resident_state(s, &ev.cluster, &key, &job_spec.projectdir, wire)
+                }
+                (SliceCommit::Delta { wire, .. }, Some((seq, done, head))) => {
+                    commit_resident_delta_state(s, &ev.cluster, &key, wire, seq, done, head)
+                }
+                _ => Ok(None),
+            }
         } else {
             Ok(None)
         };
@@ -1685,7 +2075,22 @@ impl JobScheduler {
                     }
                     Some(job.spec.clone())
                 } else {
-                    job.checkpoint = Some(ev.snapshot);
+                    match slice_commit {
+                        SliceCommit::Full { doc, .. } => job.checkpoint = Some(doc),
+                        SliceCommit::Delta { doc, .. } => {
+                            let ck = job
+                                .checkpoint
+                                .as_mut()
+                                .expect("a delta extends a committed checkpoint");
+                            checkpoint::apply_sweep_delta(
+                                ck,
+                                &doc,
+                                prev_head.expect("chain head captured at delta commit"),
+                            )
+                            .expect("a delta built from this checkpoint applies cleanly");
+                        }
+                        SliceCommit::None => {}
+                    }
                     if let Some(ns) = new_resume_snapshot.take() {
                         // One durable snapshot per job: retire the
                         // previous commit's.
@@ -1700,6 +2105,28 @@ impl JobScheduler {
             }
         };
         s.cloud.ledger.set_analyst("");
+        if ev.finished && !ev.failed {
+            self.ckpt_chains.remove(&ev.job);
+        }
+        // Reinsert the warm work for the next slice (the payload only
+        // exists for surviving continuing slices under the fast path).
+        // LRU-evict by dispatch stamp when the cache overflows.
+        if let Some(mut e) = ev.cache.take() {
+            self.work_cache_used += 1;
+            e.used = self.work_cache_used;
+            self.work_cache.insert(ev.job, e);
+            if self.work_cache.len() > self.work_cache_cap.max(1) {
+                if let Some(victim) = self
+                    .work_cache
+                    .iter()
+                    .min_by_key(|(_, e)| e.used)
+                    .map(|(k, _)| *k)
+                {
+                    self.work_cache.remove(&victim);
+                    self.work_cache_evictions += 1;
+                }
+            }
+        }
         if s.cloud.telemetry.on() {
             // Deadline margin is only final (and only interesting for
             // the histogram) once the job completes.
@@ -1731,14 +2158,22 @@ impl JobScheduler {
             if !ev.failed && !ev.finished {
                 // The continuing job committed a checkpoint (resident:
                 // volume + S3 + snapshot; default: shipped to the
-                // Analyst over the WAN).
+                // Analyst over the WAN). `bytes` is the wire size that
+                // shipped, `delta` whether it was an incremental link.
+                let mut cdetail = Json::from_pairs(vec![
+                    ("resident", Json::Bool(resident)),
+                    ("delta", Json::Bool(commit_delta)),
+                ]);
+                if let Some(b) = commit_bytes {
+                    cdetail.set("bytes", Json::num(b as f64));
+                }
                 s.cloud.telemetry.emit(
                     now,
                     EventKind::CheckpointCommit,
                     &analyst,
                     Some(&key),
                     Some(&ev.cluster),
-                    Json::from_pairs(vec![("resident", Json::Bool(resident))]),
+                    cdetail,
                 );
             }
         }
@@ -1785,7 +2220,16 @@ impl JobScheduler {
     /// capacity.
     fn handle_interruption(&mut self, s: &mut Session, cname: &str) -> Result<()> {
         let now = s.cloud.clock.now_s();
-        if let Some(ev) = self.take_slice_of_cluster(cname) {
+        // The reclaimed cluster's warm state is gone with its nodes:
+        // evict every cached work entry and digest chain pinned to it
+        // (the in-flight slice's warm payload travels in the event and
+        // is dropped with it).
+        let mut cache_evicted = self.evict_cluster_state(cname);
+        if let Some(mut ev) = self.take_slice_of_cluster(cname) {
+            if ev.cache.take().is_some() {
+                self.work_cache_evictions += 1;
+                cache_evicted = true;
+            }
             let job = self
                 .queue
                 .get_mut(ev.job)
@@ -1808,7 +2252,10 @@ impl JobScheduler {
                     &tenant,
                     Some(&ev.job.to_string()),
                     Some(cname),
-                    Json::from_pairs(vec![("mid_slice", Json::Bool(true))]),
+                    Json::from_pairs(vec![
+                        ("mid_slice", Json::Bool(true)),
+                        ("cache_evicted", Json::Bool(cache_evicted)),
+                    ]),
                 );
             }
             self.log.push(format!(
@@ -1827,7 +2274,10 @@ impl JobScheduler {
                     "",
                     None,
                     Some(cname),
-                    Json::from_pairs(vec![("mid_slice", Json::Bool(false))]),
+                    Json::from_pairs(vec![
+                        ("mid_slice", Json::Bool(false)),
+                        ("cache_evicted", Json::Bool(cache_evicted)),
+                    ]),
                 );
             }
             self.log.push(format!(
@@ -1884,6 +2334,8 @@ impl JobScheduler {
             "interruptions_delivered",
             Json::num(self.interruptions_delivered as f64),
         );
+        root.set("fast_path", Json::Bool(self.fast_path));
+        root.set("ckpt_full_every", Json::num(self.ckpt_full_every as f64));
         root
     }
 
@@ -1954,6 +2406,14 @@ impl JobScheduler {
         sched.scanned_to = j.req_f64("scanned_to").unwrap_or(0.0);
         sched.interruptions_delivered =
             j.get("interruptions_delivered").and_then(Json::as_usize).unwrap_or(0);
+        sched.fast_path = j.opt_bool("fast_path", true);
+        sched.ckpt_full_every = j
+            .get("ckpt_full_every")
+            .and_then(Json::as_usize)
+            .unwrap_or(DEFAULT_CKPT_FULL_EVERY)
+            .max(1);
+        // Warm caches and digest chains never persist: the first
+        // commit after a restart ships a full snapshot and re-bases.
         if let Some(names) = j.get("fleet").and_then(Json::as_arr) {
             for n in names {
                 if let Some(name) = n.as_str() {
@@ -2345,5 +2805,104 @@ mod tests {
             .collect();
         files.sort();
         files
+    }
+
+    /// A sweep wide enough to need several slices at the 64-job tile
+    /// (200 jobs = 4 batches), so the work cache and delta chains get
+    /// consecutive continuing slices to work with.
+    fn write_wide_sweep_project(s: &mut Session, dir: &str, seed: u64) {
+        s.analyst.write(
+            &format!("{dir}/sweep.json"),
+            format!(r#"{{"type":"mc_sweep","n_jobs":200,"seed":{seed}}}"#).into_bytes(),
+        );
+    }
+
+    /// Advance the scheduler by exactly `n` slice-completion events
+    /// (dispatching as capacity frees), without the interruption scan
+    /// — the manual counterpart of [`JobScheduler::run_until_idle`]
+    /// for tests that need to mutate the world *between* slices.
+    fn pump_slices(js: &mut JobScheduler, s: &mut Session, n: usize) {
+        js.reindex_fleet();
+        for _ in 0..n {
+            let demand = js.demand(s);
+            js.autoscaler.reconcile_demand(s, &mut js.fleet, &demand).unwrap();
+            js.reindex_fleet();
+            js.dispatch_ready(s).unwrap();
+            let at = js.peek_earliest_slice_at().expect("a slice in flight");
+            let now = s.cloud.clock.now_s();
+            if at > now {
+                s.cloud.clock.advance(at - now);
+            }
+            let ev = js.pop_earliest_slice().unwrap();
+            js.complete_slice(s, ev).unwrap();
+        }
+    }
+
+    #[test]
+    fn warm_cache_fast_path_is_bit_identical_to_cold_rebuilds() {
+        let run = |fast: bool| {
+            let mut s = session();
+            write_wide_sweep_project(&mut s, "proj", 11);
+            let mut js = JobScheduler::new(AutoscalerConfig {
+                min_clusters: 1,
+                max_clusters: 1,
+                ..Default::default()
+            });
+            js.fast_path = fast;
+            js.slice_units = 1;
+            js.submit(&s, spec("r", "proj", "sweep.json", Priority::Normal));
+            js.run_until_idle(&mut s).unwrap();
+            (files_digest(&results_of(&s, "proj_results/r")), js)
+        };
+        let (digest_fast, js_fast) = run(true);
+        let (digest_cold, js_cold) = run(false);
+        assert_eq!(
+            digest_fast, digest_cold,
+            "warm-cache slices must produce bit-identical results"
+        );
+        // The fast run genuinely exercised the cache and delta chain…
+        assert!(js_fast.work_cache_hits > 0, "consecutive slices must hit");
+        assert!(js_fast.ckpt_delta_commits > 0, "continuing slices must ship deltas");
+        // …while the cold run took the rebuild path throughout, and
+        // paid the full O(done) snapshot on every continuing slice.
+        assert_eq!(js_cold.work_cache_hits, 0);
+        assert_eq!(js_cold.ckpt_delta_commits, 0);
+        assert!(
+            js_fast.ckpt_bytes_shipped < js_cold.ckpt_bytes_shipped,
+            "delta chain must ship fewer checkpoint bytes ({} vs {})",
+            js_fast.ckpt_bytes_shipped,
+            js_cold.ckpt_bytes_shipped
+        );
+    }
+
+    #[test]
+    fn mid_job_edit_is_rejected_even_with_a_warm_cache() {
+        let mut s = session();
+        write_wide_sweep_project(&mut s, "proj", 5);
+        let mut js = JobScheduler::new(AutoscalerConfig {
+            min_clusters: 1,
+            max_clusters: 1,
+            ..Default::default()
+        });
+        js.slice_units = 1;
+        let id = js.submit(&s, spec("r", "proj", "sweep.json", Priority::Normal));
+        // One committed continuing slice: the cache now holds warm
+        // work for the job, keyed by the project's content digest.
+        pump_slices(&mut js, &mut s, 1);
+        assert_eq!(js.queue.get(id).unwrap().units_done, 1);
+        assert!(js.work_cache.contains_key(&id), "warm entry must be cached");
+        // The analyst edits the sweep grid mid-job: the next dispatch
+        // re-syncs the project, the digest changes, the warm entry is
+        // evicted (a stale plan must never resume), and the cold
+        // path's fingerprint check rejects the checkpoint.
+        write_wide_sweep_project(&mut s, "proj", 6);
+        let hits_before = js.work_cache_hits;
+        js.run_until_idle(&mut s).unwrap();
+        assert_eq!(js.queue.get(id).unwrap().state, JobState::Failed);
+        let err = js.queue.get(id).unwrap().summary.as_str().unwrap_or("").to_string();
+        assert!(err.contains("edited mid-job"), "unexpected error: {err}");
+        assert_eq!(js.work_cache_hits, hits_before, "an edit must never hit warm");
+        assert!(js.work_cache_evictions > 0, "the stale entry must be evicted");
+        assert!(!js.work_cache.contains_key(&id));
     }
 }

@@ -43,7 +43,7 @@ pub use ec2::{
 pub use faults::FaultPlan;
 pub use network::{Link, NetworkModel};
 pub use pricing::{Invoice, Ledger, LineItem, PriceForecast};
-pub use s3::{content_digest, S3Object, S3};
+pub use s3::{content_digest, digest_update, S3Object, DIGEST_SEED, S3};
 pub use spot::SpotMarket;
 pub use timing::SimParams;
 pub use vfs::Vfs;

@@ -28,6 +28,13 @@ pub const MARGIN_BOUNDS: &[f64] = &[
     -86400.0, -3600.0, -600.0, 0.0, 600.0, 3600.0, 14400.0, 86400.0,
 ];
 
+/// Bucket upper bounds (bytes) for the per-commit checkpoint wire-size
+/// histogram: delta links sit in the low buckets, full snapshots of
+/// large sweeps in the top ones.
+pub const CKPT_BYTES_BOUNDS: &[f64] = &[
+    256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0, 1048576.0, 4194304.0,
+];
+
 /// A fixed-bucket histogram (cumulative counts are derived at render
 /// time; storage is per-bucket so merges stay trivial).
 #[derive(Clone, Debug, PartialEq)]

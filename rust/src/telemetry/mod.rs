@@ -31,7 +31,9 @@ pub mod metrics;
 pub mod profile;
 pub mod trace;
 
-pub use metrics::{Histogram, MetricsRegistry, MARGIN_BOUNDS, SLICE_BOUNDS, WAIT_BOUNDS};
+pub use metrics::{
+    Histogram, MetricsRegistry, CKPT_BYTES_BOUNDS, MARGIN_BOUNDS, SLICE_BOUNDS, WAIT_BOUNDS,
+};
 pub use profile::{Phase, PhaseProfiler};
 
 use crate::util::json::Json;
@@ -386,6 +388,15 @@ fn apply_to_registry(r: &mut MetricsRegistry, kind: EventKind, tenant: &str, det
                     r.observe("time_to_first_dispatch_s", WAIT_BOUNDS, w);
                 }
             }
+            // Slice fast path: `cache` reports whether this dispatch
+            // reused warm cached work ("hit"), rebuilt from the
+            // committed checkpoint ("miss"), or ran with the fast
+            // path disabled ("off", not counted).
+            match detail.opt_str("cache").as_deref() {
+                Some("hit") => r.inc("work_cache_hit_total", 1),
+                Some("miss") => r.inc("work_cache_miss_total", 1),
+                _ => {}
+            }
         }
         EventKind::SliceComplete => {
             r.inc("slices_completed_total", 1);
@@ -399,11 +410,22 @@ fn apply_to_registry(r: &mut MetricsRegistry, kind: EventKind, tenant: &str, det
                 r.observe("deadline_margin_s", MARGIN_BOUNDS, m);
             }
         }
-        EventKind::CheckpointCommit => r.inc("checkpoint_commits_total", 1),
+        EventKind::CheckpointCommit => {
+            r.inc("checkpoint_commits_total", 1);
+            if detail.opt_bool("delta", false) {
+                r.inc("checkpoint_delta_commits_total", 1);
+            }
+            if let Some(b) = detail.get("bytes").and_then(Json::as_f64) {
+                r.observe("checkpoint_bytes", CKPT_BYTES_BOUNDS, b);
+            }
+        }
         EventKind::SpotReclaim => {
             r.inc("spot_reclaims_total", 1);
             if !tenant.is_empty() {
                 r.inc(&format!("tenant_spot_reclaims_total{{tenant=\"{tenant}\"}}"), 1);
+            }
+            if detail.opt_bool("cache_evicted", false) {
+                r.inc("work_cache_evict_total", 1);
             }
         }
         EventKind::Scale => {

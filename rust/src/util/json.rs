@@ -111,8 +111,20 @@ impl Json {
             _ => None,
         }
     }
+    pub fn as_arr_mut(&mut self) -> Option<&mut Vec<Json>> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
+    }
+    pub fn get_mut(&mut self, key: &str) -> Option<&mut Json> {
+        match self {
+            Json::Obj(o) => o.get_mut(key),
+            _ => None,
+        }
     }
     /// `obj["a"]["b"]`-style path access.
     pub fn path(&self, keys: &[&str]) -> Option<&Json> {

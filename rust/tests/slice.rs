@@ -1,0 +1,178 @@
+//! Acceptance tests for the slice fast path (ISSUE 8): a spot reclaim
+//! mid-slice evicts the warm work cache and the job still resumes
+//! bit-identically over both the WAN and LAN (resident) paths; the
+//! incremental checkpoint chain — full snapshots every K slices,
+//! O(slice) delta links between — restores through compaction; and a
+//! finishing slice ships no checkpoint at all (its result files land
+//! in the same slice and carry the whole state).
+
+use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority};
+use p2rac::simcloud::SimParams;
+
+fn session() -> Session {
+    Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
+}
+
+/// A sweep wide enough for four slices at the 64-job tile (200 jobs)
+/// whose batches take ~30 virtual minutes each (`job_cost_s`), so the
+/// job spans hour boundaries and a spike-every-hour spot market
+/// reclaims it mid-run — after delta links have been committed.
+fn write_long_sweep(s: &mut Session, dir: &str, seed: u64) {
+    s.analyst.write(
+        &format!("{dir}/sweep.json"),
+        format!(r#"{{"type":"mc_sweep","n_jobs":200,"seed":{seed},"job_cost_s":200.0}}"#)
+            .into_bytes(),
+    );
+}
+
+fn spec(name: &str, dir: &str) -> JobSpec {
+    JobSpec {
+        name: name.into(),
+        projectdir: dir.into(),
+        rscript: "sweep.json".into(),
+        priority: Priority::Normal,
+        placement: Placement::ByNode,
+        deadline_s: None,
+    }
+}
+
+fn results_of(s: &Session, dir: &str) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = s
+        .analyst
+        .list_dir(dir)
+        .into_iter()
+        .map(|rel| {
+            let bytes = s.analyst.read(&format!("{dir}/{rel}")).unwrap().to_vec();
+            (rel, bytes)
+        })
+        .collect();
+    files.sort();
+    files
+}
+
+fn wan_transfer_cc(s: &Session) -> u64 {
+    s.cloud.ledger.total_wan_transfer_centi_cents()
+}
+
+/// Run the long sweep on a one-cluster fleet. `interruptible` buys
+/// spot capacity under a spike-every-hour market, so the cluster is
+/// reclaimed at hour boundaries while the job runs; `false` is the
+/// uninterrupted on-demand ground truth. `ckpt_full_every` sets the
+/// chain's compaction cadence.
+fn run_scenario(
+    resident: bool,
+    interruptible: bool,
+    ckpt_full_every: usize,
+) -> (Session, JobScheduler, u64) {
+    let mut s = session();
+    s.cloud.spot.spike_prob = if interruptible { 1.0 } else { 0.0 };
+    write_long_sweep(&mut s, "proj", 23);
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        nodes_per_cluster: 2,
+        spot: interruptible,
+        ..Default::default()
+    });
+    js.slice_units = 1;
+    js.ckpt_full_every = ckpt_full_every;
+    let id = js.submit_opts(&s, spec("r", "proj"), resident, "tenant");
+    js.run_until_idle(&mut s).unwrap();
+    let job = js.queue.get(id).unwrap();
+    assert_eq!(job.state, JobState::Completed, "resident={resident}");
+    let digest = files_digest(&results_of(&s, "proj_results/r"));
+    (s, js, digest)
+}
+
+#[test]
+fn reclaim_mid_slice_evicts_the_cache_and_resumes_bit_identically() {
+    let (_, truth_js, truth_digest) = run_scenario(false, false, 8);
+    assert_eq!(truth_js.interruptions_delivered, 0);
+    // The uninterrupted run lives on the fast path throughout: every
+    // re-dispatch after the first hits the warm cache, and every
+    // continuing commit after the first extends the delta chain.
+    assert!(truth_js.work_cache_hits > 0, "consecutive slices must hit");
+    assert!(truth_js.ckpt_delta_commits > 0, "the chain must ship deltas");
+    assert_eq!(truth_js.work_cache_evictions, 0);
+
+    let (wan_s, wan_js, wan_digest) = run_scenario(false, true, 8);
+    let (res_s, res_js, res_digest) = run_scenario(true, true, 8);
+    assert!(wan_js.interruptions_delivered >= 1, "baseline must be reclaimed");
+    assert!(res_js.interruptions_delivered >= 1, "resident must be reclaimed");
+
+    // A reclaim tears down the cluster the warm state was built for:
+    // the in-flight entry is dropped with its slice.
+    assert!(wan_js.work_cache_evictions >= 1, "reclaim must evict warm state");
+    assert!(res_js.work_cache_evictions >= 1, "reclaim must evict warm state");
+
+    // Bit-identity across all three capacity histories — the cache
+    // and chain machinery must be invisible in the numbers.
+    assert_eq!(wan_digest, truth_digest, "WAN resume diverged");
+    assert_eq!(res_digest, truth_digest, "LAN resume diverged");
+
+    // The resident path still pays LAN, not WAN, for its commits.
+    assert!(
+        wan_transfer_cc(&res_s) < wan_transfer_cc(&wan_s),
+        "resident WAN bill ({}cc) must undercut the baseline ({}cc)",
+        wan_transfer_cc(&res_s),
+        wan_transfer_cc(&wan_s)
+    );
+}
+
+#[test]
+fn delta_chain_restores_through_compaction_after_a_reclaim() {
+    let (_, truth_js, truth_digest) = run_scenario(false, false, 2);
+    // Compaction every 2 slices: the chain alternates full and delta
+    // commits, so both forms exercise.
+    assert!(truth_js.ckpt_full_commits >= 2, "compaction must re-base the chain");
+    assert!(truth_js.ckpt_delta_commits >= 1, "links must extend the chain");
+
+    // The resident reclaim scenario restores from the EBS snapshot by
+    // replaying whatever the chain holds at the cut — a base alone
+    // right after compaction, base + delta links otherwise — and the
+    // result bytes cannot tell the difference.
+    let (res_s, res_js, res_digest) = run_scenario(true, true, 2);
+    assert!(res_js.interruptions_delivered >= 1, "must be reclaimed");
+    assert_eq!(res_digest, truth_digest, "chain restore diverged");
+
+    // The chain artifacts really lived cluster-side: snapshot storage
+    // was billed when the job retired them.
+    let snap_items = res_s
+        .cloud
+        .ledger
+        .items()
+        .iter()
+        .filter(|i| i.detail.contains("snapshot"))
+        .count();
+    assert!(snap_items > 0, "EBS snapshot storage must be billed");
+}
+
+#[test]
+fn finishing_slices_ship_no_checkpoint() {
+    let mut s = session();
+    // 40 MC jobs at the 64-job tile: one batch, one slice — the only
+    // slice is the finishing slice.
+    s.analyst.write(
+        "proj/sweep.json",
+        br#"{"type":"mc_sweep","n_jobs":40,"seed":3}"#.to_vec(),
+    );
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 1,
+        ..Default::default()
+    });
+    let id = js.submit(&s, spec("r", "proj"));
+    js.run_until_idle(&mut s).unwrap();
+    assert_eq!(js.queue.get(id).unwrap().state, JobState::Completed);
+    assert_eq!(js.ckpt_bytes_shipped, 0, "a finishing slice must ship nothing");
+    assert_eq!(js.ckpt_full_commits + js.ckpt_delta_commits, 0);
+    let ship_items = s
+        .cloud
+        .ledger
+        .items()
+        .iter()
+        .filter(|i| i.detail.contains("checkpoint ship"))
+        .count();
+    assert_eq!(ship_items, 0, "no checkpoint transfer may be billed");
+}

@@ -14,11 +14,23 @@ fn session() -> Session {
     Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
 }
 
+/// Observation count of one histogram series in the bus snapshot
+/// (0 if the series never recorded).
+fn snap_hist_count(t: &p2rac::telemetry::Telemetry, name: &str) -> u64 {
+    t.snapshot_json()
+        .path(&["metrics", "histograms", name, "count"])
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
+}
+
 fn write_projects(s: &mut Session) {
+    // 200 MC jobs = 4 batches at the 64-job tile: with `slice_units=1`
+    // every job runs multiple slices, so intermediate checkpoints (and
+    // the slice fast path's warm re-dispatches) genuinely exercise.
     for i in 0..6u64 {
         s.analyst.write(
             &format!("sweep{i}/sweep.json"),
-            format!(r#"{{"type":"mc_sweep","n_jobs":24,"seed":{}}}"#, 500 + i).into_bytes(),
+            format!(r#"{{"type":"mc_sweep","n_jobs":200,"seed":{}}}"#, 500 + i).into_bytes(),
         );
     }
 }
@@ -141,6 +153,36 @@ fn event_counts_reconcile_with_ledger_and_scheduler() {
 
     // slice_units=1 on multi-unit jobs: intermediate checkpoints.
     assert!(t.counter("checkpoint_commits_total") > 0);
+
+    // Slice fast path (ISSUE 8): with the cache on, every dispatch is
+    // either a warm hit or a cold miss — the two counters partition
+    // the dispatch count exactly, and agree with the scheduler's own.
+    assert_eq!(
+        t.counter("work_cache_hit_total") + t.counter("work_cache_miss_total"),
+        t.counter("dispatches_total")
+    );
+    assert_eq!(t.counter("work_cache_hit_total"), js.work_cache_hits);
+    assert_eq!(t.counter("work_cache_miss_total"), js.work_cache_misses);
+    assert!(js.work_cache_hits > 0, "consecutive slices must hit the warm cache");
+    // A reclaim event flags at most one eviction however many entries
+    // it swept, so the event counter lower-bounds the scheduler's
+    // per-entry tally and never exceeds the reclaim count.
+    assert!(t.counter("work_cache_evict_total") <= t.counter("spot_reclaims_total"));
+    assert!(js.work_cache_evictions >= t.counter("work_cache_evict_total"));
+
+    // Every committed checkpoint records its wire size: the bytes
+    // histogram count equals the commit counter, and the full/delta
+    // split closes against the scheduler's tallies.
+    assert_eq!(
+        snap_hist_count(t, "checkpoint_bytes"),
+        t.counter("checkpoint_commits_total")
+    );
+    assert_eq!(t.counter("checkpoint_delta_commits_total"), js.ckpt_delta_commits);
+    assert_eq!(
+        js.ckpt_full_commits + js.ckpt_delta_commits,
+        t.counter("checkpoint_commits_total")
+    );
+    assert!(js.ckpt_delta_commits > 0, "unit slices must ship delta links");
 
     // Scale decisions mirror the autoscaler's own event log.
     assert_eq!(t.events_of(EventKind::Scale) as usize, js.autoscaler.events.len());
