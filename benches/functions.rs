@@ -1,0 +1,359 @@
+//! Serverless-tier bench (ISSUE 9): keepalive policies head to head
+//! on a seeded diurnal invocation workload.
+//!
+//! A 100k-invocation day is drawn from `ec2genload`'s arrival model
+//! (diurnal rate, skewed tenants, heavy-tailed sizes) and mapped onto
+//! the function tier: tenant from the generated job, function identity
+//! and footprint derived deterministically from the job's size field.
+//! The *same* arrival stream is then replayed against the warm pool
+//! under the two keepalive policies:
+//!
+//! * **fixed-600** — every idle container lives exactly 600 s;
+//! * **hybrid-600** — per-function keepalive adapted from the observed
+//!   inter-arrival histogram (p99 upper bound + margin, clamped),
+//!   falling back to 600 s until the histogram is representative.
+//!
+//! The report asserts the tentpole claim: hybrid achieves a *strictly
+//! lower* cold-start fraction at *no higher* total cost (cold starts
+//! pay the WAN project sync; longer keepalives pay idle memory — the
+//! policy trade the pool autoscaler also navigates, swept here across
+//! idle-memory budgets). A same-seed replay must be bit-identical:
+//! dispatch digest, bill and metric snapshot. Results land in
+//! `BENCH_functions.json` with a JSONL invocation-trace sample for the
+//! CI validator.
+//!
+//! Run: `cargo bench --bench functions`
+
+use std::collections::BTreeSet;
+use std::time::Instant;
+
+use p2rac::bench_support::emit_bench_json;
+use p2rac::coordinator::{MockEngine, Session};
+use p2rac::jobs::genload::{generate, GenJob, GenLoadConfig};
+use p2rac::jobs::{FnInvokeSpec, FnPlatform, KeepalivePolicy, QuotaBook};
+use p2rac::simcloud::SimParams;
+use p2rac::util::json::Json;
+
+/// Invocations in the main comparison (one simulated day).
+const INVOCATIONS: usize = 100_000;
+/// Tenants in the arrival stream.
+const TENANTS: usize = 50;
+/// Function names per tenant: with ~2k invocations/tenant/day this
+/// puts the typical per-function inter-arrival time in the hundreds
+/// to thousands of seconds — squarely across the 600 s fixed
+/// keepalive, where the policies genuinely diverge.
+const FNS_PER_TENANT: u64 = 24;
+/// Effectively-unbounded idle budget for the policy comparison, so
+/// keepalive (not pool pressure) decides every eviction.
+const UNBOUNDED_MB: u64 = u64::MAX;
+/// Arrival prefix for the idle-budget sweep (keeps the three extra
+/// runs cheap; the sweep compares budgets against each other, not
+/// against the main runs).
+const SWEEP_INVOCATIONS: usize = 25_000;
+/// Arrival prefix for the traced sample included in the report.
+const TRACE_INVOCATIONS: usize = 150;
+
+fn session() -> Session {
+    Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)))
+}
+
+/// Map one generated arrival onto a function invocation. Everything
+/// is a pure function of the (seeded) `GenJob`, so the invocation
+/// stream is reproducible byte for byte.
+fn spec_for(g: &GenJob) -> FnInvokeSpec {
+    // Spread function identity uniformly (the raw `units` field is
+    // heavy-tailed and would pile onto a few names).
+    let f = g.units.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+    let f = f % FNS_PER_TENANT;
+    FnInvokeSpec {
+        fname: format!("f{f}"),
+        tenant: g.tenant.clone(),
+        digest: f + 1,
+        bytes: (16 + (f % 5) * 8) << 20,
+        mem_mb: 256 << (f % 3),
+        duration_ms: 120 + (g.units % 20) * 40,
+    }
+}
+
+struct RunOut {
+    label: String,
+    invocations: u64,
+    cold: u64,
+    provisioned: u64,
+    evicted: u64,
+    expired_evictions: u64,
+    pressure_evictions: u64,
+    idle_gb_hours: f64,
+    total_cost_cc: u64,
+    fn_invoke_cc: u64,
+    fn_pool_cc: u64,
+    dispatch_digest: u64,
+    metrics_snapshot: String,
+    sim_seconds: f64,
+    wall_s: f64,
+}
+
+impl RunOut {
+    fn cold_fraction(&self) -> f64 {
+        self.cold as f64 / self.invocations.max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("label", Json::str(&self.label));
+        o.set("invocations", Json::num(self.invocations as f64));
+        o.set("cold_starts", Json::num(self.cold as f64));
+        o.set("cold_fraction", Json::num(self.cold_fraction()));
+        o.set("provisioned", Json::num(self.provisioned as f64));
+        o.set("evicted", Json::num(self.evicted as f64));
+        o.set("expired_evictions", Json::num(self.expired_evictions as f64));
+        o.set("pressure_evictions", Json::num(self.pressure_evictions as f64));
+        o.set("idle_gb_hours", Json::num(self.idle_gb_hours));
+        o.set("total_cost_cc", Json::num(self.total_cost_cc as f64));
+        o.set("fn_invoke_cc", Json::num(self.fn_invoke_cc as f64));
+        o.set("fn_pool_cc", Json::num(self.fn_pool_cc as f64));
+        o.set("dispatch_digest", Json::str(format!("{:016x}", self.dispatch_digest)));
+        o.set("sim_seconds", Json::num(self.sim_seconds));
+        o.set("wall_s", Json::num(self.wall_s));
+        o
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "{:<12} {:>7} invocations  {:>6} cold ({:>5.2}%)  {:>9} cc total  \
+             {:>8.1} idle GB-h  digest {:016x}",
+            self.label,
+            self.invocations,
+            self.cold,
+            self.cold_fraction() * 100.0,
+            self.total_cost_cc,
+            self.idle_gb_hours,
+            self.dispatch_digest,
+        )
+    }
+}
+
+/// Replay `arrivals` against a fresh platform under `policy` and
+/// `max_idle_mb`. Returns the run summary and (when `traced`) the
+/// JSONL event lines.
+fn run_policy(
+    label: &str,
+    policy: KeepalivePolicy,
+    arrivals: &[GenJob],
+    max_idle_mb: u64,
+    traced: bool,
+) -> (RunOut, Vec<String>) {
+    let mut s = session();
+    if traced {
+        s.cloud.telemetry.enable_memory_trace();
+    }
+    let mut p = FnPlatform::new(policy);
+    p.autoscaler.max_idle_mb = max_idle_mb;
+    let quotas = QuotaBook::default();
+    let wall = Instant::now();
+    for g in arrivals {
+        let now = s.cloud.clock.now_s();
+        if g.arrival_s > now {
+            s.cloud.clock.advance(g.arrival_s - now);
+        }
+        p.invoke(&mut s, &quotas, &spec_for(g)).expect("unquota'd invocation admits");
+    }
+    p.drain(&mut s, &quotas);
+    p.flush(&mut s);
+    let wall_s = wall.elapsed().as_secs_f64();
+    assert!(p.conserved(), "{label}: container conservation broken");
+    assert_eq!(p.pool.len(), 0, "{label}: drain + flush must empty the pool");
+
+    // Per-tenant invoices must close against the raw ledger exactly.
+    let tenants: BTreeSet<&str> = arrivals.iter().map(|g| g.tenant.as_str()).collect();
+    let (mut invoke_cc, mut pool_cc, mut invoiced_cc) = (0u64, 0u64, 0u64);
+    for t in tenants {
+        let inv = s.cloud.ledger.invoice_for(t);
+        invoke_cc += inv.fn_invoke_cc;
+        pool_cc += inv.fn_pool_cc;
+        invoiced_cc += inv.total_centi_cents();
+        assert_eq!(
+            inv.total_centi_cents(),
+            s.cloud.ledger.total_centi_cents_for(t),
+            "{label}: invoice for {t} must reconcile centi-cent-exactly"
+        );
+    }
+    assert_eq!(
+        invoiced_cc,
+        s.cloud.ledger.total_centi_cents(),
+        "{label}: tenant invoices must cover the whole ledger"
+    );
+
+    let out = RunOut {
+        label: label.to_string(),
+        invocations: p.invocations_total,
+        cold: p.cold_total,
+        provisioned: p.provisioned_total,
+        evicted: p.evicted_total,
+        expired_evictions: p.expired_evictions,
+        pressure_evictions: p.pressure_evictions,
+        idle_gb_hours: p.idle_gb_hours(),
+        total_cost_cc: s.cloud.ledger.total_centi_cents(),
+        fn_invoke_cc: invoke_cc,
+        fn_pool_cc: pool_cc,
+        dispatch_digest: p.dispatch_digest(),
+        metrics_snapshot: s.cloud.telemetry.snapshot_json().to_string_compact(),
+        sim_seconds: s.cloud.clock.now_s(),
+        wall_s,
+    };
+    let trace = if traced { s.cloud.telemetry.take_memory_trace() } else { Vec::new() };
+    (out, trace)
+}
+
+fn main() {
+    println!("=== serverless tier: fixed vs hybrid keepalive on a diurnal day ===\n");
+    let cfg = GenLoadConfig {
+        jobs: INVOCATIONS,
+        tenants: TENANTS,
+        ..GenLoadConfig::default()
+    };
+    let arrivals = generate(&cfg);
+    let functions: BTreeSet<String> = arrivals
+        .iter()
+        .map(|g| format!("{}/{}", g.tenant, spec_for(g).fname))
+        .collect();
+    println!(
+        "  workload: {} invocations, {} tenants, {} functions, horizon {:.0}s\n",
+        arrivals.len(),
+        TENANTS,
+        functions.len(),
+        cfg.horizon_s
+    );
+
+    let (fixed, _) =
+        run_policy("fixed-600", KeepalivePolicy::Fixed(600.0), &arrivals, UNBOUNDED_MB, false);
+    println!("  {}", fixed.row());
+    let (hybrid, _) = run_policy(
+        "hybrid-600",
+        KeepalivePolicy::Hybrid { default_s: 600.0 },
+        &arrivals,
+        UNBOUNDED_MB,
+        false,
+    );
+    println!("  {}", hybrid.row());
+
+    // The tentpole claim, asserted: strictly fewer cold starts at no
+    // higher total cost.
+    assert!(
+        hybrid.cold < fixed.cold,
+        "hybrid must cold-start strictly less: {} vs {}",
+        hybrid.cold,
+        fixed.cold
+    );
+    assert!(
+        hybrid.total_cost_cc <= fixed.total_cost_cc,
+        "hybrid must cost no more: {} vs {} cc",
+        hybrid.total_cost_cc,
+        fixed.total_cost_cc
+    );
+    println!(
+        "\n  -> hybrid: {:.2}% cold vs {:.2}% fixed, at {} vs {} cc total\n",
+        hybrid.cold_fraction() * 100.0,
+        fixed.cold_fraction() * 100.0,
+        hybrid.total_cost_cc,
+        fixed.total_cost_cc
+    );
+
+    // Same seed, same books: the replay must be bit-identical.
+    let (hybrid2, _) = run_policy(
+        "hybrid-600",
+        KeepalivePolicy::Hybrid { default_s: 600.0 },
+        &arrivals,
+        UNBOUNDED_MB,
+        false,
+    );
+    let deterministic = hybrid.dispatch_digest == hybrid2.dispatch_digest
+        && hybrid.total_cost_cc == hybrid2.total_cost_cc
+        && hybrid.metrics_snapshot == hybrid2.metrics_snapshot;
+    assert!(deterministic, "same-seed replay diverged");
+    println!("  -> same-seed replay bit-identical (digest, bill, metrics snapshot)\n");
+
+    // The autoscaler's trade: sweep the idle-memory budget on the
+    // hybrid policy. Tighter budgets convert idle GB-hours into
+    // pressure evictions — and pressure evictions into cold starts.
+    let sweep_arrivals = &arrivals[..SWEEP_INVOCATIONS.min(arrivals.len())];
+    let budgets: [(&str, u64); 3] =
+        [("8GB", 8_192), ("64GB", 65_536), ("unbounded", UNBOUNDED_MB)];
+    let mut sweep_rows = Vec::new();
+    let mut sweep_runs = Vec::new();
+    for (blabel, mb) in budgets {
+        let (r, _) = run_policy(
+            &format!("hybrid/{blabel}"),
+            KeepalivePolicy::Hybrid { default_s: 600.0 },
+            sweep_arrivals,
+            mb,
+            false,
+        );
+        println!("  {}", r.row());
+        let mut o = r.to_json();
+        o.set("max_idle_mb", if mb == UNBOUNDED_MB { Json::Null } else { Json::num(mb as f64) });
+        sweep_rows.push(o);
+        sweep_runs.push(r);
+    }
+    let (tight, open) = (&sweep_runs[0], &sweep_runs[sweep_runs.len() - 1]);
+    assert!(
+        tight.cold_fraction() >= open.cold_fraction(),
+        "a tighter idle budget cannot reduce cold starts"
+    );
+    assert!(
+        tight.idle_gb_hours <= open.idle_gb_hours,
+        "a tighter idle budget cannot spend more idle memory"
+    );
+    println!(
+        "\n  -> idle-budget trade: 8GB holds idle memory to {:.1} GB-h ({:.2}% cold) vs \
+         unbounded {:.1} GB-h ({:.2}% cold)\n",
+        tight.idle_gb_hours,
+        tight.cold_fraction() * 100.0,
+        open.idle_gb_hours,
+        open.cold_fraction() * 100.0
+    );
+
+    // A short traced replay: the JSONL invocation trace sample the CI
+    // validator checks for well-formedness.
+    let (_, trace) = run_policy(
+        "hybrid/traced",
+        KeepalivePolicy::Hybrid { default_s: 600.0 },
+        &arrivals[..TRACE_INVOCATIONS.min(arrivals.len())],
+        UNBOUNDED_MB,
+        true,
+    );
+    assert!(!trace.is_empty(), "the traced sample must record events");
+
+    let mut report = Json::obj();
+    let mut wl = Json::obj();
+    wl.set("invocations", Json::num(arrivals.len() as f64));
+    wl.set("tenants", Json::num(TENANTS as f64));
+    wl.set("functions", Json::num(functions.len() as f64));
+    wl.set("horizon_s", Json::num(cfg.horizon_s));
+    wl.set("seed", Json::num(cfg.seed as f64));
+    report.set("workload", wl);
+    report.set("policies", Json::Arr(vec![fixed.to_json(), hybrid.to_json()]));
+    report.set("fixed_cold_fraction", Json::num(fixed.cold_fraction()));
+    report.set("hybrid_cold_fraction", Json::num(hybrid.cold_fraction()));
+    report.set("fixed_cost_cc", Json::num(fixed.total_cost_cc as f64));
+    report.set("hybrid_cost_cc", Json::num(hybrid.total_cost_cc as f64));
+    report.set(
+        "hybrid_beats_fixed_cold",
+        Json::Bool(hybrid.cold < fixed.cold),
+    );
+    report.set(
+        "hybrid_cost_no_higher",
+        Json::Bool(hybrid.total_cost_cc <= fixed.total_cost_cc),
+    );
+    report.set("deterministic", Json::Bool(deterministic));
+    report.set("budget_sweep", Json::Arr(sweep_rows));
+    report.set(
+        "trace_sample",
+        Json::Arr(trace.iter().map(|l| Json::str(l.as_str())).collect()),
+    );
+    match emit_bench_json("functions", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_functions.json: {e}"),
+    }
+    println!("\nfunctions bench complete.");
+}

@@ -329,7 +329,93 @@ def validate_slice(report):
     )
 
 
+def validate_functions(report):
+    """BENCH_functions.json: fixed vs hybrid keepalive on the warm pool.
+
+    The same seeded diurnal invocation stream replays under both
+    policies: hybrid must achieve a strictly lower cold-start fraction
+    at no higher total cost, the same-seed replay must be bit-identical,
+    the idle-budget sweep must show the cold-vs-idle-memory trade, and
+    the JSONL invocation-trace sample must be well-formed with strictly
+    increasing sequence numbers.
+    """
+    workload = report.get("workload")
+    require(isinstance(workload, dict), "'workload' must be an object")
+    require(workload["invocations"] >= 100_000, "workload must carry the 100k-invocation day")
+    require(workload["functions"] > 0 and workload["tenants"] > 0, "empty workload")
+
+    policies = _rows(report, "policies", 2)
+    by_label = {r["label"]: r for r in policies}
+    require(
+        set(by_label) == {"fixed-600", "hybrid-600"},
+        f"unexpected policy labels: {sorted(by_label)}",
+    )
+    for r in policies:
+        require(
+            r["invocations"] == workload["invocations"],
+            f"{r['label']}: admitted {r['invocations']} of {workload['invocations']}",
+        )
+        require(r["cold_starts"] > 0, f"{r['label']}: a fresh pool must cold-start")
+        require(
+            r["provisioned"] == r["evicted"],
+            f"{r['label']}: containers not conserved after drain+flush",
+        )
+        require(
+            0.0 < r["cold_fraction"] < 1.0,
+            f"{r['label']}: implausible cold fraction {r['cold_fraction']}",
+        )
+    fixed, hybrid = by_label["fixed-600"], by_label["hybrid-600"]
+    require(
+        hybrid["cold_fraction"] < fixed["cold_fraction"],
+        f"hybrid must cold-start strictly less "
+        f"({hybrid['cold_fraction']:.4f} vs {fixed['cold_fraction']:.4f})",
+    )
+    require(
+        hybrid["total_cost_cc"] <= fixed["total_cost_cc"],
+        f"hybrid must cost no more "
+        f"({hybrid['total_cost_cc']} vs {fixed['total_cost_cc']} cc)",
+    )
+    require(report["hybrid_beats_fixed_cold"] is True, "cold-fraction invariant flag unset")
+    require(report["hybrid_cost_no_higher"] is True, "cost invariant flag unset")
+    require(report["deterministic"] is True, "same-seed replay must be bit-identical")
+
+    sweep = _rows(report, "budget_sweep")
+    require(len(sweep) >= 2, "budget_sweep must carry at least two budgets")
+    tight, open_ = sweep[0], sweep[-1]
+    require(
+        tight["cold_fraction"] >= open_["cold_fraction"],
+        "a tighter idle budget cannot reduce cold starts",
+    )
+    require(
+        tight["idle_gb_hours"] <= open_["idle_gb_hours"],
+        "a tighter idle budget cannot spend more idle memory",
+    )
+    require(tight["pressure_evictions"] > 0, "the tight budget must actually evict")
+
+    sample = _rows(report, "trace_sample")
+    require(len(sample) > 0, "trace_sample must carry JSONL lines")
+    prev_seq = -1
+    kinds = set()
+    for i, line in enumerate(sample):
+        try:
+            ev = json.loads(line)
+        except ValueError as e:
+            raise Violation(f"trace_sample[{i}] is not valid JSON: {e}")
+        require(isinstance(ev, dict), f"trace_sample[{i}] must be an object")
+        for key in ("seq", "t_s", "kind"):
+            require(key in ev, f"trace_sample[{i}] missing '{key}'")
+        require(
+            ev["seq"] > prev_seq,
+            f"trace_sample[{i}]: seq {ev['seq']} not increasing (prev {prev_seq})",
+        )
+        prev_seq = ev["seq"]
+        kinds.add(ev["kind"])
+    for kind in ("fn-invoke", "fn-pool"):
+        require(kind in kinds, f"trace_sample must record '{kind}' events")
+
+
 SCHEMAS = {
+    "BENCH_functions.json": validate_functions,
     "BENCH_micro.json": validate_micro,
     "BENCH_obs.json": validate_obs,
     "BENCH_queue.json": validate_queue,

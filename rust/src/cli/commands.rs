@@ -150,6 +150,22 @@ pub fn registry() -> Vec<CommandSpec> {
         CommandSpec::new("ec2invoice", "itemised per-tenant bill from the usage ledger")
             .value_arg("analyst", "tenant id to invoice (as tagged on jobs/resources)")
             .switch_arg("json", "emit the invoice as JSON instead of text"),
+        CommandSpec::new("ec2invoke", "invoke a function on the serverless warm-container tier")
+            .required_arg("fname", "function name (unique per tenant)")
+            .value_arg("analyst", "tenant id the invocation bills and counts quota against")
+            .value_arg("projectdir", "project directory whose content digest keys the warm pool")
+            .value_arg("mem", "container memory in MB (default 512)")
+            .value_arg("ms", "execution time in milliseconds (default 200)")
+            .value_arg("repeat", "invoke this many times back to back (default 1)")
+            .value_arg("gap", "virtual seconds between repeated invocations (default 60)")
+            .switch_arg("json", "emit the outcome(s) as JSON instead of text"),
+        CommandSpec::new("ec2fnpool", "inspect or configure the serverless container pool")
+            .value_arg("policy", "keepalive policy: fixed | hybrid (adaptive per-function histogram)")
+            .value_arg("keepalive", "base keepalive window in seconds (fixed value / hybrid fallback)")
+            .value_arg("maxidlemb", "autoscaler idle-memory budget in MB (0 keeps nothing idle)")
+            .switch_arg("drain", "advance the clock until every running invocation completes")
+            .switch_arg("flush", "evict every idle container now (bills their idle memory)")
+            .switch_arg("json", "emit pool status as JSON instead of text"),
         CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
             .switch_arg("drain", "run the scheduler until every job completes")
             .switch_arg("shutdown", "terminate the fleet and bill its usage")
@@ -251,6 +267,17 @@ fn run_command(cmd: &str, p: &ParsedArgs) -> Result<String> {
     }
 
     let mut s = load_session(make_engine())?;
+    if is_fn_command(cmd) {
+        // The function tier reads the quota book persisted with the
+        // jobs state but never mutates it, so jobs state is loaded
+        // read-only (no save — no spurious append-log record).
+        let js = load_jobs()?;
+        let mut fns = super::load_fns()?;
+        let out = apply_with_fns(&mut s, &js.quotas, &mut fns, cmd, p)?;
+        super::save_fns(&mut fns)?;
+        save_session(&s)?;
+        return Ok(out);
+    }
     if is_jobs_command(cmd) {
         let mut js = load_jobs()?;
         js.prune_fleet(&s);
@@ -281,6 +308,13 @@ fn is_jobs_command(cmd: &str) -> bool {
     )
 }
 
+/// Commands that operate on the persisted serverless function
+/// platform (they also read the quota book for the admit gate and the
+/// autoscaler's demand ranking).
+fn is_fn_command(cmd: &str) -> bool {
+    matches!(cmd, "ec2invoke" | "ec2fnpool")
+}
+
 /// Batch-mode execution (paper §3.4): commands listed in a script file,
 /// executed without Analyst intervention.
 fn run_batch(file: &str) -> Result<String> {
@@ -289,6 +323,9 @@ fn run_batch(file: &str) -> Result<String> {
     let mut s = load_session(make_engine())?;
     let mut js = load_jobs()?;
     js.prune_fleet(&s);
+    // The function platform loads lazily: batches that never touch the
+    // fn tier don't create (or append to) its persistence files.
+    let mut fns: Option<crate::jobs::FnPlatform> = None;
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -304,8 +341,24 @@ fn run_batch(file: &str) -> Result<String> {
             .parse(parts.collect::<Vec<_>>())
             .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
         out.push_str(&format!("$ {line}\n"));
-        out.push_str(&apply_with_jobs(&mut s, &mut js, &cmd, &parsed)?);
+        if is_fn_command(&cmd) {
+            if fns.is_none() {
+                fns = Some(super::load_fns()?);
+            }
+            out.push_str(&apply_with_fns(
+                &mut s,
+                &js.quotas,
+                fns.as_mut().unwrap(),
+                &cmd,
+                &parsed,
+            )?);
+        } else {
+            out.push_str(&apply_with_jobs(&mut s, &mut js, &cmd, &parsed)?);
+        }
         out.push('\n');
+    }
+    if let Some(mut f) = fns {
+        super::save_fns(&mut f)?;
     }
     save_jobs(&mut js)?;
     save_session(&s)?;
@@ -980,6 +1033,122 @@ pub fn apply_with_jobs(
     }
 }
 
+/// Execute one serverless-tier command (`ec2invoke` / `ec2fnpool`)
+/// against a session, the tenant quota book (read-only: the fn tier
+/// enforces but never edits quotas) and the function platform.
+pub fn apply_with_fns(
+    s: &mut Session,
+    quotas: &crate::jobs::QuotaBook,
+    fns: &mut crate::jobs::FnPlatform,
+    cmd: &str,
+    p: &ParsedArgs,
+) -> Result<String> {
+    use crate::jobs::{FnInvokeSpec, KeepalivePolicy};
+    match cmd {
+        "ec2invoke" => {
+            let fname = p.value("fname").unwrap();
+            let tenant = p.value_or("analyst", "");
+            let dir = project_dir(p);
+            let (digest, bytes) = crate::jobs::functions::project_fingerprint(s, dir)
+                .ok_or_else(|| {
+                    anyhow!("no files under project directory '{dir}' — create one with mkproject")
+                })?;
+            let mem_mb = p.usize_value("mem")?.unwrap_or(512).max(1) as u64;
+            let duration_ms = p.usize_value("ms")?.unwrap_or(200).max(1) as u64;
+            let repeat = p.usize_value("repeat")?.unwrap_or(1).max(1);
+            let gap_s: f64 = p
+                .value_or("gap", "60")
+                .parse()
+                .map_err(|_| anyhow!("-gap expects seconds, got '{}'", p.value_or("gap", "60")))?;
+            if gap_s < 0.0 {
+                bail!("-gap must be non-negative");
+            }
+            let spec = FnInvokeSpec {
+                fname: fname.to_string(),
+                tenant: tenant.to_string(),
+                digest,
+                bytes,
+                mem_mb,
+                duration_ms,
+            };
+            let mut outs = Vec::new();
+            for i in 0..repeat {
+                if i > 0 {
+                    s.cloud.clock.advance(gap_s);
+                }
+                outs.push(fns.invoke(s, quotas, &spec)?);
+            }
+            if p.switch("json") {
+                let arr: Vec<Json> = outs
+                    .iter()
+                    .map(|o| {
+                        Json::from_pairs(vec![
+                            ("container", Json::str(&format!("c-{}", o.container))),
+                            ("cold", Json::Bool(o.cold)),
+                            ("latency_s", Json::num(o.latency_s)),
+                            ("billed_cc", Json::num(o.billed_cc as f64)),
+                        ])
+                    })
+                    .collect();
+                let mut o = fns.status_json();
+                o.set("outcomes", Json::Arr(arr));
+                return Ok(o.to_string_pretty());
+            }
+            let mut lines: Vec<String> = outs
+                .iter()
+                .map(|o| {
+                    format!(
+                        "invoked '{fname}' on c-{} ({}, {:.2}s latency, {} cc)",
+                        o.container,
+                        if o.cold { "cold" } else { "warm" },
+                        o.latency_s,
+                        o.billed_cc,
+                    )
+                })
+                .collect();
+            lines.push(format!(
+                "pool: {} container(s) ({} warm / {} busy), lifetime cold fraction {:.1}%",
+                fns.pool.len(),
+                fns.warm_count(),
+                fns.busy_count(),
+                fns.cold_fraction() * 100.0,
+            ));
+            Ok(lines.join("\n"))
+        }
+        "ec2fnpool" => {
+            if p.value("policy").is_some() || p.value("keepalive").is_some() {
+                let kind = p.value_or("policy", fns.policy.label()).to_string();
+                let base: f64 = match p.value("keepalive") {
+                    Some(v) => v
+                        .parse()
+                        .map_err(|_| anyhow!("-keepalive expects seconds, got '{v}'"))?,
+                    None => fns.policy.base_s(),
+                };
+                if base <= 0.0 {
+                    bail!("-keepalive must be positive");
+                }
+                fns.policy = KeepalivePolicy::parse(&kind, base)?;
+            }
+            if let Some(mb) = p.usize_value("maxidlemb")? {
+                fns.autoscaler.max_idle_mb = mb as u64;
+            }
+            if p.switch("drain") {
+                fns.drain(s, quotas);
+            } else {
+                fns.settle(s, quotas);
+            }
+            if p.switch("flush") {
+                fns.flush(s);
+            }
+            if p.switch("json") {
+                return Ok(fns.status_json().to_string_pretty());
+            }
+            Ok(fns.status_lines().join("\n"))
+        }
+        other => bail!("'{other}' is not a serverless-tier command"),
+    }
+}
+
 fn project_dir<'a>(p: &'a ParsedArgs) -> &'a str {
     // Paper: "should the project directory not be specified then the
     // current working directory at the Analyst site is used".
@@ -1205,6 +1374,8 @@ mod tests {
             "ec2genload",
             "ec2metrics",
             "ec2trace",
+            "ec2invoke",
+            "ec2fnpool",
         ] {
             assert!(h.contains(c), "help missing {c}");
         }
@@ -1311,6 +1482,85 @@ mod tests {
         let spec = registry().into_iter().find(|c| c.name == cmd).unwrap();
         let p = spec.parse(args.iter().map(|a| a.to_string())).unwrap();
         apply_with_jobs(s, js, cmd, &p)
+    }
+
+    fn run_fns(
+        s: &mut Session,
+        quotas: &crate::jobs::QuotaBook,
+        fns: &mut crate::jobs::FnPlatform,
+        cmd: &str,
+        args: &[&str],
+    ) -> Result<String> {
+        let spec = registry().into_iter().find(|c| c.name == cmd).unwrap();
+        let p = spec.parse(args.iter().map(|a| a.to_string())).unwrap();
+        apply_with_fns(s, quotas, fns, cmd, &p)
+    }
+
+    #[test]
+    fn invoke_command_goes_cold_then_warm() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let quotas = crate::jobs::QuotaBook::default();
+        let mut fns = crate::jobs::FnPlatform::default();
+        let out = run_fns(
+            &mut s,
+            &quotas,
+            &mut fns,
+            "ec2invoke",
+            &["-fname", "score", "-projectdir", "proj", "-analyst", "alice", "-repeat", "3"],
+        )
+        .unwrap();
+        assert!(out.contains("cold"), "{out}");
+        assert!(out.contains("warm"), "{out}");
+        assert_eq!(fns.invocations_total, 3);
+        assert_eq!(fns.cold_total, 1, "repeats within the gap must stay warm");
+        // A missing project is a clean error, not a provision.
+        let err = run_fns(
+            &mut s,
+            &quotas,
+            &mut fns,
+            "ec2invoke",
+            &["-fname", "score", "-projectdir", "nope"],
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("mkproject"), "{err}");
+    }
+
+    #[test]
+    fn fnpool_command_configures_and_reports() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let quotas = crate::jobs::QuotaBook::default();
+        let mut fns = crate::jobs::FnPlatform::default();
+        let out = run_fns(
+            &mut s,
+            &quotas,
+            &mut fns,
+            "ec2fnpool",
+            &["-policy", "fixed", "-keepalive", "240", "-maxidlemb", "2048"],
+        )
+        .unwrap();
+        assert!(out.contains("policy fixed (base 240s)"), "{out}");
+        assert_eq!(fns.autoscaler.max_idle_mb, 2048);
+        run_fns(
+            &mut s,
+            &quotas,
+            &mut fns,
+            "ec2invoke",
+            &["-fname", "score", "-projectdir", "proj"],
+        )
+        .unwrap();
+        let st = run_fns(&mut s, &quotas, &mut fns, "ec2fnpool", &["-drain", "-flush", "-json"])
+            .unwrap();
+        let j = Json::parse(&st).unwrap();
+        assert_eq!(j.get("pool").and_then(Json::as_u64), Some(0));
+        assert_eq!(j.get("evicted_total").and_then(Json::as_u64), Some(1));
+        assert_eq!(j.get("invocations_total").and_then(Json::as_u64), Some(1));
+        let bad = run_fns(&mut s, &quotas, &mut fns, "ec2fnpool", &["-policy", "lru"])
+            .unwrap_err()
+            .to_string();
+        assert!(bad.contains("unknown keepalive policy"), "{bad}");
     }
 
     #[test]

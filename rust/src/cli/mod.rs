@@ -20,7 +20,7 @@ pub mod commands;
 
 use crate::analytics::P2racEngine;
 use crate::coordinator::{ScriptEngine, Session};
-use crate::jobs::{AutoscalerConfig, JobScheduler, QuotaBook};
+use crate::jobs::{AutoscalerConfig, FnPlatform, JobScheduler, QuotaBook};
 use crate::runtime::Runtime;
 use crate::simcloud::SimParams;
 use crate::util::json::Json;
@@ -119,6 +119,23 @@ pub fn save_jobs(js: &mut JobScheduler) -> Result<()> {
         .with_context(|| format!("writing {}", quotas_path().display()))?;
     js.profiler.add(crate::telemetry::Phase::Persist, t0.elapsed());
     Ok(())
+}
+
+/// Load the persisted serverless function platform (snapshot + append
+/// log via [`crate::jobs::functions::persist`]), or a fresh default.
+pub fn load_fns() -> Result<FnPlatform> {
+    let dir = session_dir();
+    Ok(crate::jobs::functions::persist::load(&dir)
+        .with_context(|| format!("loading functions state from {}", dir.display()))?
+        .unwrap_or_default())
+}
+
+/// Persist the serverless function platform through its append log.
+pub fn save_fns(fns: &mut FnPlatform) -> Result<()> {
+    let dir = session_dir();
+    std::fs::create_dir_all(&dir)?;
+    crate::jobs::functions::persist::save(&dir, fns)
+        .with_context(|| format!("saving functions state to {}", dir.display()))
 }
 
 /// Entry point used by `main.rs`; returns the process exit code.

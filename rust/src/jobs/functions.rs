@@ -1,0 +1,1397 @@
+//! The serverless function tier: a warm-container execution pool for
+//! analyst scripts too small to justify cluster spin-up (`ec2invoke` /
+//! `ec2fnpool`).
+//!
+//! The paper's Analysts mostly run small ad-hoc R jobs; on the cluster
+//! path every one of them pays provisioning and project sync. This
+//! tier runs them function-style on the existing discrete-event core:
+//!
+//! * **Cold vs warm starts.** A cold start provisions a container
+//!   ([`CONTAINER_BOOT_S`]) and syncs the project over the metered
+//!   transfer path (`SimCloud::account_transfer`, WAN — billed like
+//!   every other byte the platform moves). A warm start dispatches
+//!   immediately from a pooled container. The pool is keyed by
+//!   **tenant + project content digest** — the work-cache idiom from
+//!   the slice fast path: any content change misses the pool and pays
+//!   the cold path with its fresh sync.
+//! * **Keepalive policies** ([`KeepalivePolicy`]): `fixed <secs>`
+//!   keeps every idle container a constant window; the
+//!   **hybrid-histogram** policy (Azure's "Serverless in the Wild"
+//!   shape) tracks a per-function inter-arrival histogram
+//!   ([`IatHistogram`]) and sets the keepalive to the observed p99
+//!   inter-arrival plus margin — long enough to catch the next call,
+//!   no longer — falling back to the fixed default while the
+//!   histogram is unrepresentative (few observations, or dominated by
+//!   out-of-bounds gaps).
+//! * **Per-invocation billing.** Every invocation books a request +
+//!   MB-ms compute charge (`Ledger::bill_fn_invocation`); every idle
+//!   window books warm-memory time (`Ledger::bill_fn_idle`). Both
+//!   land in their own invoice categories (`fn_invoke_cc`,
+//!   `fn_pool_cc`) and reconcile centi-cent-exactly through
+//!   `ec2invoice`.
+//! * **Quota enforcement at admit.** A tenant's `-maxcentihour`
+//!   compute budget gates invocations exactly like job submission:
+//!   committed function compute at or past the budget rejects before
+//!   anything is provisioned or billed.
+//! * **Pool autoscaler** ([`FnAutoscalerConfig`]): a global
+//!   idle-memory budget. Past it, idle containers are evicted in
+//!   ascending order of predicted demand — and functions of tenants
+//!   whose compute budget is exhausted contribute **zero** demand, so
+//!   capped tenants lose their warm capacity first.
+//!
+//! Everything runs on the virtual clock and the platform keeps a
+//! running **dispatch digest** (FNV chain over every outcome), so two
+//! same-seed runs are bit-identical: digest, bill and metrics
+//! snapshot. State persists via the append-log idiom in [`persist`]
+//! (`functions.json` snapshot + `functions.log` replay, torn-tail and
+//! mid-compaction tolerant).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Session;
+use crate::simcloud::{digest_update, Link, DIGEST_SEED};
+use crate::telemetry::EventKind;
+use crate::util::json::Json;
+
+use super::quota::{QuotaBook, SECONDS_PER_CENTIHOUR};
+
+/// Container provisioning time for a cold start, virtual seconds
+/// (image pull + runtime boot; the project sync is billed and timed
+/// separately through the transfer path).
+pub const CONTAINER_BOOT_S: f64 = 2.0;
+
+/// Inter-arrival histogram bin width, seconds.
+pub const IAT_BIN_S: f64 = 60.0;
+
+/// Number of finite inter-arrival bins (two hours of gap); anything
+/// beyond counts as out-of-bounds.
+pub const IAT_BINS: usize = 120;
+
+/// Hybrid keepalive clamp, low end (seconds).
+pub const HYB_KEEPALIVE_MIN_S: f64 = 60.0;
+
+/// Hybrid keepalive clamp, high end (seconds).
+pub const HYB_KEEPALIVE_MAX_S: f64 = 3600.0;
+
+/// Safety margin over the observed p99 inter-arrival.
+const HYB_TAIL_MARGIN: f64 = 1.10;
+
+/// Observations before a histogram is trusted over the fixed default.
+const HYB_MIN_OBSERVATIONS: u64 = 4;
+
+/// Build the canonical per-function key (`tenant/name`).
+pub fn fn_key(tenant: &str, fname: &str) -> String {
+    format!("{tenant}/{fname}")
+}
+
+/// Build the warm-pool match key: tenant + project content digest,
+/// the work-cache idiom — containers are interchangeable exactly when
+/// the code they hold is byte-identical and owned by the same tenant.
+pub fn pool_key(tenant: &str, digest: u64) -> String {
+    format!("{tenant}:{digest:016x}")
+}
+
+/// Content digest + total bytes of a project directory at the Analyst
+/// site (path and content chained, paths in sorted order). `None` when
+/// the directory holds no files.
+pub fn project_fingerprint(s: &Session, projectdir: &str) -> Option<(u64, u64)> {
+    let files = s.analyst.list_dir(projectdir);
+    if files.is_empty() {
+        return None;
+    }
+    let mut h = DIGEST_SEED;
+    let mut bytes = 0u64;
+    for rel in &files {
+        h = digest_update(h, rel.as_bytes());
+        if let Some(data) = s.analyst.read(&format!("{projectdir}/{rel}")) {
+            h = digest_update(h, data);
+            bytes += data.len() as u64;
+        }
+    }
+    Some((h, bytes))
+}
+
+/// Fixed-bin inter-arrival histogram, the hybrid policy's memory of
+/// one function's call pattern.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IatHistogram {
+    /// Per-bin observation counts ([`IAT_BIN_S`]-wide, [`IAT_BINS`] of
+    /// them). Kept dense in memory, serialised with trailing zeros
+    /// trimmed.
+    counts: Vec<u64>,
+    /// Observations past the last finite bin.
+    oob: u64,
+    /// Total observations (in-bounds + out-of-bounds).
+    total: u64,
+}
+
+impl IatHistogram {
+    /// Record one inter-arrival gap.
+    pub fn update(&mut self, iat_s: f64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; IAT_BINS];
+        }
+        let idx = (iat_s.max(0.0) / IAT_BIN_S) as usize;
+        if idx < IAT_BINS {
+            self.counts[idx] += 1;
+        } else {
+            self.oob += 1;
+        }
+        self.total += 1;
+    }
+
+    /// Total observations recorded.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Upper bin edge (seconds) of the in-bounds percentile `p`, or
+    /// `None` with no in-bounds observations.
+    pub fn percentile_upper_s(&self, p: f64) -> Option<f64> {
+        let in_bounds = self.total - self.oob;
+        if in_bounds == 0 {
+            return None;
+        }
+        let target = ((p * in_bounds as f64).ceil() as u64).clamp(1, in_bounds);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Some((i as f64 + 1.0) * IAT_BIN_S);
+            }
+        }
+        None
+    }
+
+    /// Is the histogram trustworthy? Needs a minimum sample and a
+    /// majority of in-bounds gaps — otherwise the hybrid policy falls
+    /// back to its fixed default (the "hybrid" in hybrid histogram).
+    pub fn representative(&self) -> bool {
+        self.total >= HYB_MIN_OBSERVATIONS && self.oob * 2 <= self.total
+    }
+
+    fn to_json(&self) -> Json {
+        let mut counts = self.counts.clone();
+        while counts.last() == Some(&0) {
+            counts.pop();
+        }
+        Json::from_pairs(vec![
+            (
+                "counts",
+                Json::Arr(counts.iter().map(|c| Json::num(*c as f64)).collect()),
+            ),
+            ("oob", Json::num(self.oob as f64)),
+            ("total", Json::num(self.total as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let mut counts: Vec<u64> = j
+            .get("counts")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(Json::as_u64).collect())
+            .unwrap_or_default();
+        if !counts.is_empty() {
+            counts.resize(IAT_BINS, 0);
+        }
+        Ok(Self {
+            counts,
+            oob: j.get("oob").and_then(Json::as_u64).unwrap_or(0),
+            total: j.get("total").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// When to evict an idle container.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KeepalivePolicy {
+    /// Keep every idle container exactly this many seconds.
+    Fixed(f64),
+    /// Adapt the keepalive per function from its inter-arrival
+    /// histogram (p99 + margin, clamped); `default_s` applies while
+    /// the histogram is unrepresentative.
+    Hybrid {
+        /// Fallback keepalive, seconds.
+        default_s: f64,
+    },
+}
+
+impl Default for KeepalivePolicy {
+    fn default() -> Self {
+        KeepalivePolicy::Hybrid { default_s: 600.0 }
+    }
+}
+
+impl KeepalivePolicy {
+    /// Stable label (`fixed | hybrid`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            KeepalivePolicy::Fixed(_) => "fixed",
+            KeepalivePolicy::Hybrid { .. } => "hybrid",
+        }
+    }
+
+    /// The policy's base window (the fixed value, or the hybrid
+    /// fallback).
+    pub fn base_s(&self) -> f64 {
+        match self {
+            KeepalivePolicy::Fixed(s) => *s,
+            KeepalivePolicy::Hybrid { default_s } => *default_s,
+        }
+    }
+
+    /// Parse a CLI spelling (`fixed | hybrid`) with a base window.
+    pub fn parse(kind: &str, base_s: f64) -> Result<Self> {
+        match kind {
+            "fixed" => Ok(KeepalivePolicy::Fixed(base_s)),
+            "hybrid" => Ok(KeepalivePolicy::Hybrid { default_s: base_s }),
+            other => bail!("unknown keepalive policy '{other}' (fixed | hybrid)"),
+        }
+    }
+
+    /// Keepalive window for one function given its histogram.
+    pub fn keepalive_s(&self, hist: &IatHistogram) -> f64 {
+        match self {
+            KeepalivePolicy::Fixed(s) => *s,
+            KeepalivePolicy::Hybrid { default_s } => {
+                if !hist.representative() {
+                    return *default_s;
+                }
+                match hist.percentile_upper_s(0.99) {
+                    Some(p99) => {
+                        (p99 * HYB_TAIL_MARGIN).clamp(HYB_KEEPALIVE_MIN_S, HYB_KEEPALIVE_MAX_S)
+                    }
+                    None => *default_s,
+                }
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("kind", Json::str(self.label())),
+            ("base_s", Json::num(self.base_s())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let base = j.get("base_s").and_then(Json::as_f64).unwrap_or(600.0);
+        KeepalivePolicy::parse(j.opt_str("kind").as_deref().unwrap_or("hybrid"), base)
+    }
+}
+
+/// Pool autoscaler configuration: the idle-memory budget that trades
+/// cold-start fraction against idle container memory-hours. A bigger
+/// budget keeps more containers warm (fewer cold starts, more
+/// memory-hours); zero keeps nothing idle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FnAutoscalerConfig {
+    /// Total memory (MB) idle containers may hold before the
+    /// autoscaler starts evicting the least-demanded ones.
+    pub max_idle_mb: u64,
+}
+
+impl Default for FnAutoscalerConfig {
+    fn default() -> Self {
+        Self { max_idle_mb: 65_536 }
+    }
+}
+
+/// One registered function: identity, project fingerprint, its
+/// inter-arrival histogram and usage counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FnFunction {
+    /// Canonical key (`tenant/name`).
+    pub key: String,
+    /// Owning tenant.
+    pub tenant: String,
+    /// Function name (unique per tenant).
+    pub name: String,
+    /// Project content digest — with the tenant, the warm-pool key.
+    pub digest: u64,
+    /// Project payload synced on every cold start, bytes.
+    pub bytes: u64,
+    /// Container memory, MB.
+    pub mem_mb: u64,
+    /// Observed inter-arrival histogram (drives the hybrid policy).
+    pub hist: IatHistogram,
+    /// First arrival, virtual seconds (demand-rate anchor).
+    pub first_arrival_s: Option<f64>,
+    /// Most recent arrival, virtual seconds.
+    pub last_arrival_s: Option<f64>,
+    /// Admitted invocations.
+    pub invocations: u64,
+    /// Invocations that paid a cold start.
+    pub cold_starts: u64,
+    /// Committed execution milliseconds (counts against the tenant's
+    /// centihour compute budget).
+    pub used_ms: u64,
+}
+
+impl FnFunction {
+    fn new(key: &str, tenant: &str, name: &str) -> Self {
+        Self {
+            key: key.to_string(),
+            tenant: tenant.to_string(),
+            name: name.to_string(),
+            digest: 0,
+            bytes: 0,
+            mem_mb: 0,
+            hist: IatHistogram::default(),
+            first_arrival_s: None,
+            last_arrival_s: None,
+            invocations: 0,
+            cold_starts: 0,
+            used_ms: 0,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("key", Json::str(&self.key)),
+            ("tenant", Json::str(&self.tenant)),
+            ("name", Json::str(&self.name)),
+            ("digest", Json::str(&format!("{:016x}", self.digest))),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("mem_mb", Json::num(self.mem_mb as f64)),
+            ("hist", self.hist.to_json()),
+            (
+                "first_arrival_s",
+                self.first_arrival_s.map(Json::num).unwrap_or(Json::Null),
+            ),
+            (
+                "last_arrival_s",
+                self.last_arrival_s.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("invocations", Json::num(self.invocations as f64)),
+            ("cold_starts", Json::num(self.cold_starts as f64)),
+            ("used_ms", Json::num(self.used_ms as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            key: j.req_str("key")?,
+            tenant: j.req_str("tenant")?,
+            name: j.req_str("name")?,
+            digest: u64::from_str_radix(&j.req_str("digest")?, 16)?,
+            bytes: j.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+            mem_mb: j.get("mem_mb").and_then(Json::as_u64).unwrap_or(0),
+            hist: j
+                .get("hist")
+                .map(IatHistogram::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+            first_arrival_s: j.get("first_arrival_s").and_then(Json::as_f64),
+            last_arrival_s: j.get("last_arrival_s").and_then(Json::as_f64),
+            invocations: j.get("invocations").and_then(Json::as_u64).unwrap_or(0),
+            cold_starts: j.get("cold_starts").and_then(Json::as_u64).unwrap_or(0),
+            used_ms: j.get("used_ms").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// One pooled container. Containers exist from provision to eviction;
+/// a busy container is **never** evicted — only idle ones carry an
+/// expiry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Container {
+    /// Stable id (`c-<n>` in billing and telemetry).
+    pub id: u64,
+    /// Warm-match key (tenant + content digest).
+    pub pool_key: String,
+    /// Owning tenant (idle memory bills here).
+    pub tenant: String,
+    /// Function that last ran here — its histogram sets the keepalive.
+    pub fn_key: String,
+    /// Container memory, MB.
+    pub mem_mb: u64,
+    /// Is an invocation running right now?
+    pub busy: bool,
+    /// Provision time, virtual seconds.
+    pub provisioned_at_s: f64,
+    /// When the running invocation completes (busy only).
+    pub busy_until_s: f64,
+    /// When the current idle window began (idle only).
+    pub idle_since_s: f64,
+    /// Keepalive deadline (idle only).
+    pub expires_at_s: f64,
+    /// Invocations served over the container's lifetime.
+    pub invocations: u64,
+}
+
+impl Container {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("id", Json::num(self.id as f64)),
+            ("pool_key", Json::str(&self.pool_key)),
+            ("tenant", Json::str(&self.tenant)),
+            ("fn_key", Json::str(&self.fn_key)),
+            ("mem_mb", Json::num(self.mem_mb as f64)),
+            ("busy", Json::Bool(self.busy)),
+            ("provisioned_at_s", Json::num(self.provisioned_at_s)),
+            ("busy_until_s", Json::num(self.busy_until_s)),
+            ("idle_since_s", Json::num(self.idle_since_s)),
+            ("expires_at_s", Json::num(self.expires_at_s)),
+            ("invocations", Json::num(self.invocations as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            id: j.req_u64("id")?,
+            pool_key: j.req_str("pool_key")?,
+            tenant: j.req_str("tenant")?,
+            fn_key: j.req_str("fn_key")?,
+            mem_mb: j.get("mem_mb").and_then(Json::as_u64).unwrap_or(0),
+            busy: j.opt_bool("busy", false),
+            provisioned_at_s: j.get("provisioned_at_s").and_then(Json::as_f64).unwrap_or(0.0),
+            busy_until_s: j.get("busy_until_s").and_then(Json::as_f64).unwrap_or(0.0),
+            idle_since_s: j.get("idle_since_s").and_then(Json::as_f64).unwrap_or(0.0),
+            expires_at_s: j.get("expires_at_s").and_then(Json::as_f64).unwrap_or(0.0),
+            invocations: j.get("invocations").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+}
+
+/// One invocation request, ready for [`FnPlatform::invoke`]. The
+/// arrival time is the session clock's *now* — callers advance the
+/// clock between arrivals.
+#[derive(Clone, Debug)]
+pub struct FnInvokeSpec {
+    /// Function name (unique per tenant).
+    pub fname: String,
+    /// Invoking tenant (charges and quota apply here).
+    pub tenant: String,
+    /// Project content digest (warm-pool key with the tenant).
+    pub digest: u64,
+    /// Project payload a cold start must sync, bytes.
+    pub bytes: u64,
+    /// Container memory, MB.
+    pub mem_mb: u64,
+    /// Execution time once dispatched, milliseconds.
+    pub duration_ms: u64,
+}
+
+/// What one admitted invocation did.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FnOutcome {
+    /// Container that served it.
+    pub container: u64,
+    /// Did it pay a cold start?
+    pub cold: bool,
+    /// Arrival → completion, seconds (cold-start delay + execution).
+    pub latency_s: f64,
+    /// Cold-start delay alone (0 on a warm hit), seconds.
+    pub start_delay_s: f64,
+    /// Request + compute charge booked for this invocation,
+    /// centi-cents.
+    pub billed_cc: u64,
+    /// Completion time, virtual seconds.
+    pub busy_until_s: f64,
+}
+
+/// The warm-container platform: functions, the pool, the keepalive
+/// policy, the autoscaler and the deterministic accounting around
+/// them. One instance persists per session (`functions.json` +
+/// `functions.log`).
+#[derive(Clone, Debug)]
+pub struct FnPlatform {
+    /// Active keepalive/eviction policy.
+    pub policy: KeepalivePolicy,
+    /// Pool autoscaler configuration.
+    pub autoscaler: FnAutoscalerConfig,
+    /// Registered functions by canonical key.
+    pub functions: BTreeMap<String, FnFunction>,
+    /// Live containers by id (warm + busy; evicted ones are gone).
+    pub pool: BTreeMap<u64, Container>,
+    /// Next container id.
+    pub next_container_id: u64,
+    /// Containers ever provisioned. Conservation invariant:
+    /// `provisioned_total == pool.len() + evicted_total`, always.
+    pub provisioned_total: u64,
+    /// Containers evicted (keepalive expiry, autoscaler pressure or
+    /// flush).
+    pub evicted_total: u64,
+    /// Evictions due to keepalive expiry.
+    pub expired_evictions: u64,
+    /// Evictions forced by the idle-memory budget.
+    pub pressure_evictions: u64,
+    /// Admitted invocations.
+    pub invocations_total: u64,
+    /// Admitted invocations that paid a cold start.
+    pub cold_total: u64,
+    /// Invocations rejected at the quota gate.
+    pub rejected_total: u64,
+    /// Idle warm-memory integral, MB·ms (the memory-hours side of the
+    /// autoscaler tradeoff).
+    pub idle_mb_ms_total: u64,
+    /// FNV chain over every outcome — two same-seed runs match bit
+    /// for bit.
+    dispatch_digest: u64,
+    /// Function keys mutated since the last snapshot (the append-log
+    /// delta).
+    touched: BTreeSet<String>,
+}
+
+impl Default for FnPlatform {
+    fn default() -> Self {
+        Self::new(KeepalivePolicy::default())
+    }
+}
+
+impl FnPlatform {
+    /// A fresh platform under `policy`.
+    pub fn new(policy: KeepalivePolicy) -> Self {
+        Self {
+            policy,
+            autoscaler: FnAutoscalerConfig::default(),
+            functions: BTreeMap::new(),
+            pool: BTreeMap::new(),
+            next_container_id: 1,
+            provisioned_total: 0,
+            evicted_total: 0,
+            expired_evictions: 0,
+            pressure_evictions: 0,
+            invocations_total: 0,
+            cold_total: 0,
+            rejected_total: 0,
+            idle_mb_ms_total: 0,
+            dispatch_digest: DIGEST_SEED,
+            touched: BTreeSet::new(),
+        }
+    }
+
+    /// The running dispatch digest (FNV chain over every outcome).
+    pub fn dispatch_digest(&self) -> u64 {
+        self.dispatch_digest
+    }
+
+    /// Idle (warm) containers right now.
+    pub fn warm_count(&self) -> usize {
+        self.pool.values().filter(|c| !c.busy).count()
+    }
+
+    /// Containers executing right now.
+    pub fn busy_count(&self) -> usize {
+        self.pool.values().filter(|c| c.busy).count()
+    }
+
+    /// Total memory held by idle containers, MB.
+    pub fn idle_mb(&self) -> u64 {
+        self.pool.values().filter(|c| !c.busy).map(|c| c.mem_mb).sum()
+    }
+
+    /// Container conservation: everything ever provisioned is either
+    /// still pooled (warm or busy) or counted evicted.
+    pub fn conserved(&self) -> bool {
+        self.provisioned_total == self.pool.len() as u64 + self.evicted_total
+    }
+
+    /// Cold-start fraction over the platform's lifetime.
+    pub fn cold_fraction(&self) -> f64 {
+        if self.invocations_total == 0 {
+            return 0.0;
+        }
+        self.cold_total as f64 / self.invocations_total as f64
+    }
+
+    /// Idle warm-memory spent so far, GB-hours.
+    pub fn idle_gb_hours(&self) -> f64 {
+        self.idle_mb_ms_total as f64 / 1024.0 / 3_600_000.0
+    }
+
+    /// Committed function compute for one tenant, seconds.
+    pub fn used_s_for(&self, tenant: &str) -> f64 {
+        self.functions
+            .values()
+            .filter(|f| f.tenant == tenant)
+            .map(|f| f.used_ms as f64 / 1000.0)
+            .sum()
+    }
+
+    fn keepalive_for(&self, fk: &str) -> f64 {
+        match self.functions.get(fk) {
+            Some(f) => self.policy.keepalive_s(&f.hist),
+            None => self.policy.base_s(),
+        }
+    }
+
+    /// Per-function demand the pool autoscaler ranks evictions by:
+    /// lifetime arrivals per hour — and **zero** for any function
+    /// whose tenant has exhausted its compute budget, so capped
+    /// tenants' invocations never hold warm capacity under pressure.
+    pub fn autoscaler_demand(&self, quotas: &QuotaBook, now_s: f64) -> BTreeMap<String, f64> {
+        let mut used: BTreeMap<&str, f64> = BTreeMap::new();
+        for f in self.functions.values() {
+            *used.entry(f.tenant.as_str()).or_insert(0.0) += f.used_ms as f64 / 1000.0;
+        }
+        let capped = |tenant: &str| -> bool {
+            quotas
+                .get(tenant)
+                .and_then(|q| q.max_centihours)
+                .is_some_and(|max_ch| {
+                    used.get(tenant).copied().unwrap_or(0.0) / SECONDS_PER_CENTIHOUR
+                        >= max_ch as f64
+                })
+        };
+        let mut out = BTreeMap::new();
+        for f in self.functions.values() {
+            let rate = match (capped(&f.tenant), f.first_arrival_s) {
+                (true, _) | (_, None) => 0.0,
+                (false, Some(first)) => {
+                    f.invocations as f64 * 3600.0 / (now_s - first).max(IAT_BIN_S)
+                }
+            };
+            out.insert(f.key.clone(), rate);
+        }
+        out
+    }
+
+    fn emit_pool_event(
+        &self,
+        s: &mut Session,
+        t_s: f64,
+        tenant: &str,
+        fk: &str,
+        cid: u64,
+        action: &str,
+        idle_cc: u64,
+    ) {
+        if !s.cloud.telemetry.on() {
+            return;
+        }
+        let mut d = Json::from_pairs(vec![
+            ("action", Json::str(action)),
+            ("pool", Json::num(self.pool.len() as f64)),
+            ("idle_mb", Json::num(self.idle_mb() as f64)),
+        ]);
+        if idle_cc > 0 {
+            d.set("idle_cc", Json::num(idle_cc as f64));
+        }
+        s.cloud.telemetry.emit(
+            t_s,
+            EventKind::FnPool,
+            tenant,
+            Some(fk),
+            Some(&format!("c-{cid}")),
+            d,
+        );
+    }
+
+    /// Evict one idle container at `end_s`, billing its idle window.
+    /// Panics (debug) if asked to evict a busy container — the
+    /// policies never do.
+    fn evict_container(&mut self, s: &mut Session, id: u64, end_s: f64, action: &str) {
+        let Some(c) = self.pool.remove(&id) else { return };
+        debug_assert!(!c.busy, "a keepalive policy must never evict mid-invocation");
+        let idle_ms = ((end_s - c.idle_since_s).max(0.0) * 1000.0).round() as u64;
+        self.idle_mb_ms_total += c.mem_mb * idle_ms;
+        let prev = s.cloud.ledger.analyst().to_string();
+        s.cloud.ledger.set_analyst(&c.tenant);
+        let idle_cc = s.cloud.ledger.bill_fn_idle(&format!("c-{id}"), c.mem_mb, idle_ms);
+        s.cloud.ledger.set_analyst(&prev);
+        self.evicted_total += 1;
+        match action {
+            "keepalive" => self.expired_evictions += 1,
+            "pressure" => self.pressure_evictions += 1,
+            _ => {}
+        }
+        self.emit_pool_event(s, end_s, &c.tenant, &c.fn_key, id, action, idle_cc);
+    }
+
+    /// Advance the pool to the clock's *now*: complete finished
+    /// invocations (busy → warm, keepalive stamped from the policy),
+    /// evict idle containers past their keepalive, then enforce the
+    /// autoscaler's idle-memory budget. Deterministic: events are
+    /// processed in (time, id) order.
+    pub fn settle(&mut self, s: &mut Session, quotas: &QuotaBook) {
+        let now = s.cloud.clock.now_s();
+        let mut done: Vec<(f64, u64)> = self
+            .pool
+            .values()
+            .filter(|c| c.busy && c.busy_until_s <= now)
+            .map(|c| (c.busy_until_s, c.id))
+            .collect();
+        done.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (t_done, id) in done {
+            let fk = self.pool[&id].fn_key.clone();
+            let keep = self.keepalive_for(&fk);
+            let c = self.pool.get_mut(&id).unwrap();
+            c.busy = false;
+            c.idle_since_s = t_done;
+            c.expires_at_s = t_done + keep;
+        }
+        let mut expired: Vec<(f64, u64)> = self
+            .pool
+            .values()
+            .filter(|c| !c.busy && c.expires_at_s <= now)
+            .map(|c| (c.expires_at_s, c.id))
+            .collect();
+        expired.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (t, id) in expired {
+            self.evict_container(s, id, t, "keepalive");
+        }
+        self.enforce_idle_budget(s, quotas, now);
+    }
+
+    /// Evict least-demanded idle containers until the pool is back
+    /// under the autoscaler's idle-memory budget.
+    fn enforce_idle_budget(&mut self, s: &mut Session, quotas: &QuotaBook, now: f64) {
+        if self.idle_mb() <= self.autoscaler.max_idle_mb {
+            return;
+        }
+        let demand = self.autoscaler_demand(quotas, now);
+        let mut victims: Vec<(f64, f64, u64)> = self
+            .pool
+            .values()
+            .filter(|c| !c.busy)
+            .map(|c| (demand.get(&c.fn_key).copied().unwrap_or(0.0), c.idle_since_s, c.id))
+            .collect();
+        // Lowest demand first (capped tenants rank at zero), oldest
+        // idle window breaking ties.
+        victims.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)).then(a.2.cmp(&b.2)));
+        for (_, _, id) in victims {
+            if self.idle_mb() <= self.autoscaler.max_idle_mb {
+                break;
+            }
+            self.evict_container(s, id, now, "pressure");
+        }
+    }
+
+    /// Admit and dispatch one invocation at the clock's *now*. The
+    /// quota gate runs first (nothing is provisioned or billed on a
+    /// reject); then the warm pool is consulted by tenant + content
+    /// digest, a cold start provisioning + syncing on a miss. Billing,
+    /// telemetry and the dispatch digest all happen here.
+    pub fn invoke(
+        &mut self,
+        s: &mut Session,
+        quotas: &QuotaBook,
+        spec: &FnInvokeSpec,
+    ) -> Result<FnOutcome> {
+        let now = s.cloud.clock.now_s();
+        self.settle(s, quotas);
+        if let Some(max_ch) = quotas.get(&spec.tenant).and_then(|q| q.max_centihours) {
+            let used_s = self.used_s_for(&spec.tenant);
+            if used_s / SECONDS_PER_CENTIHOUR >= max_ch as f64 {
+                self.rejected_total += 1;
+                if s.cloud.telemetry.on() {
+                    s.cloud.telemetry.emit(
+                        now,
+                        EventKind::AdmitReject,
+                        &spec.tenant,
+                        Some(&spec.fname),
+                        None,
+                        Json::from_pairs(vec![
+                            ("reason", Json::str("quota_centihours")),
+                            ("tier", Json::str("fn")),
+                        ]),
+                    );
+                }
+                bail!(
+                    "tenant '{}': compute budget exhausted (limit {max_ch} centihour(s), \
+                     {used_s:.1}s of function compute committed); raise the limit with \
+                     ec2quota -analyst {} -maxcentihour N",
+                    spec.tenant,
+                    spec.tenant,
+                );
+            }
+        }
+        let key = fn_key(&spec.tenant, &spec.fname);
+        let f = self
+            .functions
+            .entry(key.clone())
+            .or_insert_with(|| FnFunction::new(&key, &spec.tenant, &spec.fname));
+        f.digest = spec.digest;
+        f.bytes = spec.bytes;
+        f.mem_mb = spec.mem_mb;
+        if let Some(last) = f.last_arrival_s {
+            f.hist.update(now - last);
+        }
+        if f.first_arrival_s.is_none() {
+            f.first_arrival_s = Some(now);
+        }
+        f.last_arrival_s = Some(now);
+        f.invocations += 1;
+        f.used_ms += spec.duration_ms;
+        self.touched.insert(key.clone());
+        self.invocations_total += 1;
+
+        let pkey = pool_key(&spec.tenant, spec.digest);
+        let pick = self
+            .pool
+            .values()
+            .filter(|c| !c.busy && c.pool_key == pkey && c.mem_mb == spec.mem_mb)
+            .max_by(|a, b| a.idle_since_s.total_cmp(&b.idle_since_s).then(b.id.cmp(&a.id)))
+            .map(|c| c.id);
+        let dur_s = spec.duration_ms as f64 / 1000.0;
+        let prev_analyst = s.cloud.ledger.analyst().to_string();
+        s.cloud.ledger.set_analyst(&spec.tenant);
+        let (cid, cold, start_delay_s, idle_cc) = match pick {
+            Some(id) => {
+                // Warm hit: the idle window ends here and bills.
+                let c = self.pool.get_mut(&id).unwrap();
+                let idle_ms = ((now - c.idle_since_s).max(0.0) * 1000.0).round() as u64;
+                let idle_cc = s.cloud.ledger.bill_fn_idle(&format!("c-{id}"), c.mem_mb, idle_ms);
+                let mem_mb = c.mem_mb;
+                c.busy = true;
+                c.fn_key = key.clone();
+                c.busy_until_s = now + dur_s;
+                c.invocations += 1;
+                self.idle_mb_ms_total += mem_mb * idle_ms;
+                (id, false, 0.0, idle_cc)
+            }
+            None => {
+                // Cold start: provision a container and sync the
+                // project over the metered transfer path.
+                let id = self.next_container_id;
+                self.next_container_id += 1;
+                self.provisioned_total += 1;
+                self.cold_total += 1;
+                self.functions.get_mut(&key).unwrap().cold_starts += 1;
+                s.cloud.account_transfer(&format!("fn-sync:{key}"), spec.bytes, Link::Wan);
+                let sync_s = s.cloud.net.transfer_s(spec.bytes, 1, Link::Wan);
+                let start_delay = CONTAINER_BOOT_S + sync_s;
+                self.pool.insert(
+                    id,
+                    Container {
+                        id,
+                        pool_key: pkey,
+                        tenant: spec.tenant.clone(),
+                        fn_key: key.clone(),
+                        mem_mb: spec.mem_mb,
+                        busy: true,
+                        provisioned_at_s: now,
+                        busy_until_s: now + start_delay + dur_s,
+                        idle_since_s: now,
+                        expires_at_s: 0.0,
+                        invocations: 1,
+                    },
+                );
+                self.emit_pool_event(s, now, &spec.tenant, &key, id, "provision", 0);
+                (id, true, start_delay, 0)
+            }
+        };
+        let billed_cc =
+            s.cloud
+                .ledger
+                .bill_fn_invocation(&format!("c-{cid}"), &spec.fname, spec.mem_mb, spec.duration_ms);
+        s.cloud.ledger.set_analyst(&prev_analyst);
+        let latency_s = start_delay_s + dur_s;
+        let out = FnOutcome {
+            container: cid,
+            cold,
+            latency_s,
+            start_delay_s,
+            billed_cc,
+            busy_until_s: now + latency_s,
+        };
+        if s.cloud.telemetry.on() {
+            let mut d = Json::from_pairs(vec![
+                ("cold", Json::Bool(cold)),
+                ("latency_s", Json::num(latency_s)),
+                ("billed_cc", Json::num(billed_cc as f64)),
+                ("mem_mb", Json::num(spec.mem_mb as f64)),
+            ]);
+            if idle_cc > 0 {
+                d.set("idle_cc", Json::num(idle_cc as f64));
+            }
+            s.cloud.telemetry.emit(
+                now,
+                EventKind::FnInvoke,
+                &spec.tenant,
+                Some(&spec.fname),
+                Some(&format!("c-{cid}")),
+                d,
+            );
+        }
+        let mut h = self.dispatch_digest;
+        h = digest_update(h, key.as_bytes());
+        h = digest_update(h, &out.container.to_le_bytes());
+        h = digest_update(h, &[out.cold as u8]);
+        h = digest_update(h, &out.busy_until_s.to_bits().to_le_bytes());
+        h = digest_update(h, &out.billed_cc.to_le_bytes());
+        self.dispatch_digest = h;
+        Ok(out)
+    }
+
+    /// Let every in-flight invocation finish: advance the clock to the
+    /// last completion and settle.
+    pub fn drain(&mut self, s: &mut Session, quotas: &QuotaBook) {
+        let now = s.cloud.clock.now_s();
+        let horizon = self
+            .pool
+            .values()
+            .filter(|c| c.busy)
+            .map(|c| c.busy_until_s)
+            .fold(now, f64::max);
+        if horizon > now {
+            s.cloud.clock.advance(horizon - now);
+        }
+        self.settle(s, quotas);
+    }
+
+    /// Evict every idle container right now (billing idle memory up
+    /// to *now*). Busy containers are untouched.
+    pub fn flush(&mut self, s: &mut Session) {
+        let now = s.cloud.clock.now_s();
+        let ids: Vec<u64> = self.pool.values().filter(|c| !c.busy).map(|c| c.id).collect();
+        for id in ids {
+            self.evict_container(s, id, now, "flush");
+        }
+    }
+
+    /// Human-readable pool status (`ec2fnpool`).
+    pub fn status_lines(&self) -> Vec<String> {
+        let mut out = vec![
+            format!(
+                "fn pool: {} container(s) ({} warm / {} busy), policy {} (base {:.0}s), \
+                 idle budget {} MB",
+                self.pool.len(),
+                self.warm_count(),
+                self.busy_count(),
+                self.policy.label(),
+                self.policy.base_s(),
+                self.autoscaler.max_idle_mb,
+            ),
+            format!(
+                "lifetime: {} invocation(s), {} cold ({:.1}%), {} rejected, {} evicted \
+                 ({} keepalive / {} pressure), {:.3} idle GB-hours",
+                self.invocations_total,
+                self.cold_total,
+                self.cold_fraction() * 100.0,
+                self.rejected_total,
+                self.evicted_total,
+                self.expired_evictions,
+                self.pressure_evictions,
+                self.idle_gb_hours(),
+            ),
+        ];
+        for f in self.functions.values() {
+            out.push(format!(
+                "  {:<28} {:>7} call(s)  {:>5} cold  mem {} MB  keepalive {:.0}s",
+                f.key,
+                f.invocations,
+                f.cold_starts,
+                f.mem_mb,
+                self.policy.keepalive_s(&f.hist),
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable pool status (`ec2fnpool -json`).
+    pub fn status_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("policy", self.policy.to_json()),
+            ("max_idle_mb", Json::num(self.autoscaler.max_idle_mb as f64)),
+            ("pool", Json::num(self.pool.len() as f64)),
+            ("warm", Json::num(self.warm_count() as f64)),
+            ("busy", Json::num(self.busy_count() as f64)),
+            ("idle_mb", Json::num(self.idle_mb() as f64)),
+            ("invocations_total", Json::num(self.invocations_total as f64)),
+            ("cold_total", Json::num(self.cold_total as f64)),
+            ("rejected_total", Json::num(self.rejected_total as f64)),
+            ("evicted_total", Json::num(self.evicted_total as f64)),
+            ("cold_fraction", Json::num(self.cold_fraction())),
+            ("idle_gb_hours", Json::num(self.idle_gb_hours())),
+            (
+                "dispatch_digest",
+                Json::str(&format!("{:016x}", self.dispatch_digest)),
+            ),
+            ("functions", Json::num(self.functions.len() as f64)),
+        ])
+    }
+
+    /// Everything except the function table: policy, autoscaler,
+    /// counters, digest and the (small) live pool. This is the `meta`
+    /// half of a log record, replayed wholesale.
+    fn meta_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("policy", self.policy.to_json()),
+            (
+                "autoscaler",
+                Json::from_pairs(vec![(
+                    "max_idle_mb",
+                    Json::num(self.autoscaler.max_idle_mb as f64),
+                )]),
+            ),
+            ("next_container_id", Json::num(self.next_container_id as f64)),
+            ("provisioned_total", Json::num(self.provisioned_total as f64)),
+            ("evicted_total", Json::num(self.evicted_total as f64)),
+            ("expired_evictions", Json::num(self.expired_evictions as f64)),
+            ("pressure_evictions", Json::num(self.pressure_evictions as f64)),
+            ("invocations_total", Json::num(self.invocations_total as f64)),
+            ("cold_total", Json::num(self.cold_total as f64)),
+            ("rejected_total", Json::num(self.rejected_total as f64)),
+            ("idle_mb_ms_total", Json::num(self.idle_mb_ms_total as f64)),
+            (
+                "dispatch_digest",
+                Json::str(&format!("{:016x}", self.dispatch_digest)),
+            ),
+            (
+                "pool",
+                Json::Arr(self.pool.values().map(Container::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Full snapshot document (`functions.json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = self.meta_json();
+        o.set(
+            "functions",
+            Json::Arr(self.functions.values().map(FnFunction::to_json).collect()),
+        );
+        o
+    }
+
+    /// One append-log record: the full meta (pool included — it is
+    /// small and bounded by the autoscaler) plus the complete state of
+    /// every function touched since the last record. Drains the
+    /// touched set.
+    pub fn append_record_json(&mut self) -> Json {
+        let fns: Vec<Json> = self
+            .touched
+            .iter()
+            .filter_map(|k| self.functions.get(k))
+            .map(FnFunction::to_json)
+            .collect();
+        self.touched.clear();
+        Json::from_pairs(vec![("meta", self.meta_json()), ("fns", Json::Arr(fns))])
+    }
+
+    /// Forget the pending delta (called after a snapshot captures
+    /// everything).
+    pub fn drain_touched(&mut self) {
+        self.touched.clear();
+    }
+
+    /// Restore from a [`FnPlatform::to_json`] document.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut p = FnPlatform::new(
+            j.get("policy")
+                .map(KeepalivePolicy::from_json)
+                .transpose()?
+                .unwrap_or_default(),
+        );
+        if let Some(mb) = j
+            .get("autoscaler")
+            .and_then(|a| a.get("max_idle_mb"))
+            .and_then(Json::as_u64)
+        {
+            p.autoscaler.max_idle_mb = mb;
+        }
+        p.next_container_id = j.get("next_container_id").and_then(Json::as_u64).unwrap_or(1);
+        p.provisioned_total = j.get("provisioned_total").and_then(Json::as_u64).unwrap_or(0);
+        p.evicted_total = j.get("evicted_total").and_then(Json::as_u64).unwrap_or(0);
+        p.expired_evictions = j.get("expired_evictions").and_then(Json::as_u64).unwrap_or(0);
+        p.pressure_evictions = j.get("pressure_evictions").and_then(Json::as_u64).unwrap_or(0);
+        p.invocations_total = j.get("invocations_total").and_then(Json::as_u64).unwrap_or(0);
+        p.cold_total = j.get("cold_total").and_then(Json::as_u64).unwrap_or(0);
+        p.rejected_total = j.get("rejected_total").and_then(Json::as_u64).unwrap_or(0);
+        p.idle_mb_ms_total = j.get("idle_mb_ms_total").and_then(Json::as_u64).unwrap_or(0);
+        if let Some(d) = j.opt_str("dispatch_digest") {
+            p.dispatch_digest = u64::from_str_radix(&d, 16)?;
+        }
+        if let Some(pool) = j.get("pool").and_then(Json::as_arr) {
+            for c in pool {
+                let c = Container::from_json(c)?;
+                p.pool.insert(c.id, c);
+            }
+        }
+        if let Some(fns) = j.get("functions").and_then(Json::as_arr) {
+            for f in fns {
+                let f = FnFunction::from_json(f)?;
+                p.functions.insert(f.key.clone(), f);
+            }
+        }
+        Ok(p)
+    }
+}
+
+/// Append-log persistence for the function platform, mirroring
+/// [`crate::jobs::persist`]: `functions.json` is an atomic snapshot,
+/// `functions.log` appends one full-state record per save, replay
+/// upserts functions by key and replaces the meta (pool included)
+/// wholesale — so replay is idempotent, a torn tail restores the
+/// previous save, and a stale log over a fresh snapshot is a no-op.
+pub mod persist {
+    use std::collections::BTreeMap;
+    use std::fs;
+    use std::io::Write;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{anyhow, Result};
+
+    use super::FnPlatform;
+    use crate::util::json::Json;
+
+    /// Log length (in records) that triggers compaction.
+    pub const LOG_COMPACT_RECORDS: usize = 64;
+
+    /// Path of the snapshot file inside a session directory.
+    pub fn snapshot_path(dir: &Path) -> PathBuf {
+        dir.join("functions.json")
+    }
+
+    /// Path of the append log inside a session directory.
+    pub fn log_path(dir: &Path) -> PathBuf {
+        dir.join("functions.log")
+    }
+
+    /// Load the platform from `dir`: snapshot plus log replay.
+    /// `Ok(None)` when the session never invoked a function. A legacy
+    /// `functions.json` without a log loads as-is.
+    pub fn load(dir: &Path) -> Result<Option<FnPlatform>> {
+        let snap = snapshot_path(dir);
+        if !snap.exists() {
+            return Ok(None);
+        }
+        let text = fs::read_to_string(&snap)?;
+        let mut root = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", snap.display()))?;
+        let mut by_key: BTreeMap<String, Json> = BTreeMap::new();
+        if let Some(fns) = root.get("functions").and_then(Json::as_arr) {
+            for f in fns {
+                by_key.insert(f.req_str("key")?, f.clone());
+            }
+        }
+        if let Ok(log_text) = fs::read_to_string(log_path(dir)) {
+            for line in log_text.lines() {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                // A torn tail (kill mid-append) is expected, not an
+                // error: stop at the first malformed record.
+                let Ok(rec) = Json::parse(line) else {
+                    break;
+                };
+                if let Some(meta) = rec.get("meta").and_then(Json::as_obj) {
+                    for (k, v) in meta {
+                        root.set(k, v.clone());
+                    }
+                }
+                if let Some(fns) = rec.get("fns").and_then(Json::as_arr) {
+                    for f in fns {
+                        if let Some(key) = f.opt_str("key") {
+                            by_key.insert(key, f.clone());
+                        }
+                    }
+                }
+            }
+        }
+        root.set("functions", Json::Arr(by_key.into_values().collect()));
+        Ok(Some(FnPlatform::from_json(&root)?))
+    }
+
+    /// Persist the platform into `dir`: first save writes a full
+    /// snapshot; later saves append one log record, compacting once
+    /// the log reaches [`LOG_COMPACT_RECORDS`].
+    pub fn save(dir: &Path, fns: &mut FnPlatform) -> Result<()> {
+        fs::create_dir_all(dir)?;
+        if !snapshot_path(dir).exists() {
+            return write_snapshot(dir, fns);
+        }
+        let line = fns.append_record_json().to_string_compact();
+        let logp = log_path(dir);
+        {
+            let mut f = fs::OpenOptions::new().create(true).append(true).open(&logp)?;
+            f.write_all(line.as_bytes())?;
+            f.write_all(b"\n")?;
+        }
+        let records = fs::read_to_string(&logp)
+            .map(|t| t.lines().filter(|l| !l.trim().is_empty()).count())
+            .unwrap_or(0);
+        if records >= LOG_COMPACT_RECORDS {
+            write_snapshot(dir, fns)?;
+        }
+        Ok(())
+    }
+
+    /// Atomic snapshot (temp + rename), then drop the log. The rename
+    /// lands before the unlink, so a kill in between leaves snapshot +
+    /// stale log, which replay handles idempotently.
+    fn write_snapshot(dir: &Path, fns: &mut FnPlatform) -> Result<()> {
+        let snap = snapshot_path(dir);
+        let tmp = dir.join("functions.json.tmp");
+        fs::write(&tmp, fns.to_json().to_string_pretty())?;
+        fs::rename(&tmp, &snap)?;
+        let _ = fs::remove_file(log_path(dir));
+        fns.drain_touched();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{MockEngine, Session};
+    use crate::simcloud::SimParams;
+
+    fn session() -> Session {
+        Session::new(SimParams::default(), Box::new(MockEngine::new(100.0)))
+    }
+
+    fn spec(tenant: &str, fname: &str, digest: u64) -> FnInvokeSpec {
+        FnInvokeSpec {
+            fname: fname.to_string(),
+            tenant: tenant.to_string(),
+            digest,
+            bytes: 4 * 1024 * 1024,
+            mem_mb: 512,
+            duration_ms: 200,
+        }
+    }
+
+    #[test]
+    fn cold_then_warm_within_keepalive() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Fixed(300.0));
+        let q = QuotaBook::default();
+        let first = p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap();
+        assert!(first.cold && first.start_delay_s > 0.0);
+        s.cloud.clock.advance(60.0);
+        let second = p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap();
+        assert!(!second.cold, "a warm container must serve the second call");
+        assert_eq!(second.start_delay_s, 0.0);
+        assert_eq!(first.container, second.container);
+        assert!(p.conserved());
+        // A different content digest misses the pool: cold again.
+        s.cloud.clock.advance(60.0);
+        let edited = p.invoke(&mut s, &q, &spec("alice", "f", 8)).unwrap();
+        assert!(edited.cold, "an edited project must not reuse stale code");
+    }
+
+    #[test]
+    fn fixed_keepalive_evicts_after_the_window() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Fixed(120.0));
+        let q = QuotaBook::default();
+        p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap();
+        p.drain(&mut s, &q);
+        assert_eq!(p.warm_count(), 1);
+        s.cloud.clock.advance(121.0);
+        p.settle(&mut s, &q);
+        assert_eq!(p.pool.len(), 0);
+        assert_eq!(p.evicted_total, 1);
+        assert_eq!(p.expired_evictions, 1);
+        assert!(p.conserved());
+        // The next call is cold again.
+        let out = p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap();
+        assert!(out.cold);
+    }
+
+    #[test]
+    fn hybrid_keepalive_tracks_the_observed_inter_arrival() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Hybrid { default_s: 600.0 });
+        let q = QuotaBook::default();
+        // Regular 1500 s gaps: fixed 600 s would go cold every time;
+        // the histogram learns the gap and stretches the keepalive.
+        let mut colds = 0;
+        for _ in 0..8 {
+            let out = p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap();
+            colds += out.cold as u64;
+            s.cloud.clock.advance(1500.0);
+        }
+        let f = p.functions.get("alice/f").unwrap();
+        assert!(f.hist.representative());
+        let keep = p.policy.keepalive_s(&f.hist);
+        assert!(keep > 1500.0 && keep <= HYB_KEEPALIVE_MAX_S, "keepalive {keep}");
+        // One cold start to learn, then warm: far fewer than fixed's 8.
+        assert!(colds <= 5, "hybrid saw {colds} cold starts");
+    }
+
+    #[test]
+    fn quota_gate_rejects_before_any_state_changes() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Fixed(300.0));
+        let mut q = QuotaBook::default();
+        q.set(
+            "alice",
+            super::super::TenantQuota {
+                max_centihours: Some(1),
+                ..Default::default()
+            },
+        );
+        // 36 s of compute = exactly one centihour: admitted while
+        // under, rejected once at the boundary.
+        let mut big = spec("alice", "f", 7);
+        big.duration_ms = 36_000;
+        p.invoke(&mut s, &q, &big).unwrap();
+        let before = (p.pool.len(), p.provisioned_total, s.cloud.ledger.total_centi_cents());
+        let err = p.invoke(&mut s, &q, &big).unwrap_err().to_string();
+        assert!(err.contains("compute budget exhausted"), "{err}");
+        assert_eq!(
+            before,
+            (p.pool.len(), p.provisioned_total, s.cloud.ledger.total_centi_cents()),
+            "a rejected invocation must not provision or bill"
+        );
+        assert_eq!(p.rejected_total, 1);
+    }
+
+    #[test]
+    fn idle_budget_evicts_least_demanded_first() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Fixed(3600.0));
+        let q = QuotaBook::default();
+        // Two idle containers of 512 MB each; budget fits only one.
+        p.invoke(&mut s, &q, &spec("alice", "hot", 1)).unwrap();
+        s.cloud.clock.advance(30.0);
+        p.invoke(&mut s, &q, &spec("bob", "coldish", 2)).unwrap();
+        s.cloud.clock.advance(30.0);
+        // Make alice/hot clearly higher-demand.
+        for _ in 0..4 {
+            p.invoke(&mut s, &q, &spec("alice", "hot", 1)).unwrap();
+            s.cloud.clock.advance(30.0);
+        }
+        p.drain(&mut s, &q);
+        assert_eq!(p.pool.len(), 2);
+        p.autoscaler.max_idle_mb = 512;
+        s.cloud.clock.advance(1.0);
+        p.settle(&mut s, &q);
+        assert_eq!(p.pool.len(), 1);
+        assert_eq!(p.pressure_evictions, 1);
+        let survivor = p.pool.values().next().unwrap();
+        assert_eq!(survivor.tenant, "alice", "the hot function must keep its container");
+        assert!(p.conserved());
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Hybrid { default_s: 450.0 });
+        let q = QuotaBook::default();
+        for i in 0..5 {
+            p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap();
+            s.cloud.clock.advance(200.0 + i as f64);
+        }
+        p.invoke(&mut s, &q, &spec("bob", "g", 9)).unwrap();
+        let doc = p.to_json().to_string_compact();
+        let r = FnPlatform::from_json(&Json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(doc, r.to_json().to_string_compact());
+        assert_eq!(p.dispatch_digest(), r.dispatch_digest());
+    }
+
+    #[test]
+    fn billing_reconciles_with_the_invoice_categories() {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Fixed(120.0));
+        let q = QuotaBook::default();
+        let mut billed = 0u64;
+        for _ in 0..3 {
+            billed += p.invoke(&mut s, &q, &spec("alice", "f", 7)).unwrap().billed_cc;
+            s.cloud.clock.advance(60.0);
+        }
+        s.cloud.clock.advance(500.0);
+        p.settle(&mut s, &q);
+        let inv = s.cloud.ledger.invoice_for("alice");
+        assert_eq!(inv.fn_invoke_cc, billed);
+        assert!(inv.fn_pool_cc > 0, "idle windows must bill warm memory");
+        assert_eq!(inv.total_centi_cents(), s.cloud.ledger.total_centi_cents_for("alice"));
+    }
+}

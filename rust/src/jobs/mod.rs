@@ -46,6 +46,7 @@
 
 pub mod autoscaler;
 pub mod checkpoint;
+pub mod functions;
 pub mod genload;
 pub mod persist;
 pub mod queue;
@@ -58,6 +59,10 @@ pub use autoscaler::{
 pub use checkpoint::{
     commit_resident_checkpoint, restore_resident_checkpoint, script_units, JobWork, StepOutcome,
     CHECKPOINT_BUCKET,
+};
+pub use functions::{
+    FnAutoscalerConfig, FnFunction, FnInvokeSpec, FnOutcome, FnPlatform, IatHistogram,
+    KeepalivePolicy,
 };
 pub use queue::{Job, JobId, JobQueue, JobSpec, JobState, Priority, QueueOrdering, TenantLoad};
 pub use quota::{QuotaBook, TenantQuota, SECONDS_PER_CENTIHOUR};

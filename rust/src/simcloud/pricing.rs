@@ -165,6 +165,17 @@ const S3_REQUEST_CENTI_CENTS: u64 = 1;
 /// Metered WAN transfer, hundredths of a cent per GiB (≈ $0.12/GiB,
 /// the 2012 Internet data-transfer rate). LAN transfer is free.
 const WAN_CENTI_CENTS_PER_GB: u64 = 1200;
+/// Flat per-request charge on every function invocation, hundredths
+/// of a cent (≈ $0.20 per million requests).
+pub const FN_REQUEST_CENTI_CENTS: u64 = 1;
+/// Function compute rate: MB-milliseconds of execution per hundredth
+/// of a cent (≈ $0.06 per GB-hour, rounded up per invocation).
+pub const FN_MB_MS_PER_CENTI_CENT: u64 = 6_000_000;
+/// Warm idle memory rate: MB-milliseconds of pooled idle time per
+/// hundredth of a cent (≈ 30x cheaper than executing — keeping a
+/// container warm costs far less than running it, which is the whole
+/// point of the pool). Floored, so short windows book nothing.
+pub const FN_IDLE_MB_MS_PER_CENTI_CENT: u64 = 200_000_000;
 
 impl Ledger {
     pub fn new() -> Self {
@@ -262,6 +273,43 @@ impl Ledger {
             format!("WAN transfer {bytes} B"),
             centi_cents,
         );
+    }
+
+    /// Bill one function invocation: a flat request charge plus
+    /// MB-ms compute, rounded up per invocation. Returns the exact
+    /// centi-cents booked so callers (telemetry, the dispatch digest)
+    /// carry the same number the invoice will fold.
+    pub fn bill_fn_invocation(
+        &mut self,
+        id: &str,
+        fname: &str,
+        mem_mb: u64,
+        duration_ms: u64,
+    ) -> u64 {
+        let mb_ms = mem_mb * duration_ms;
+        let compute_cc = mb_ms.div_ceil(FN_MB_MS_PER_CENTI_CENT);
+        let cc = FN_REQUEST_CENTI_CENTS + compute_cc;
+        self.push(
+            id.to_string(),
+            format!("fn invoke {fname}: {mem_mb} MB x {duration_ms} ms"),
+            cc,
+        );
+        cc
+    }
+
+    /// Bill a warm container's idle memory window, floored — a window
+    /// too short to reach one centi-cent books nothing (and no line
+    /// item). Returns the exact centi-cents booked.
+    pub fn bill_fn_idle(&mut self, id: &str, mem_mb: u64, idle_ms: u64) -> u64 {
+        let cc = (mem_mb * idle_ms) / FN_IDLE_MB_MS_PER_CENTI_CENT;
+        if cc > 0 {
+            self.push(
+                id.to_string(),
+                format!("fn idle: {mem_mb} MB x {idle_ms} ms"),
+                cc,
+            );
+        }
+        cc
     }
 
     /// Bill a spot instance's usage. The amount is pre-computed by the
@@ -387,6 +435,10 @@ impl Ledger {
                 inv.s3_request_cc += cc; // bill_s3_request
             } else if d.starts_with("WAN transfer") {
                 inv.wan_transfer_cc += cc; // bill_data_transfer
+            } else if d.starts_with("fn invoke") {
+                inv.fn_invoke_cc += cc; // bill_fn_invocation
+            } else if d.starts_with("fn idle") {
+                inv.fn_pool_cc += cc; // bill_fn_idle
             } else {
                 inv.other_cc += cc;
             }
@@ -419,6 +471,10 @@ pub struct Invoice {
     pub s3_storage_cc: u64,
     /// Metered WAN data transfer.
     pub wan_transfer_cc: u64,
+    /// Function invocations (request + MB-ms compute).
+    pub fn_invoke_cc: u64,
+    /// Warm function pool idle memory.
+    pub fn_pool_cc: u64,
     /// Line items no category pattern recognised.
     pub other_cc: u64,
     /// How many ledger line items the invoice folds.
@@ -435,6 +491,8 @@ impl Invoice {
             + self.s3_request_cc
             + self.s3_storage_cc
             + self.wan_transfer_cc
+            + self.fn_invoke_cc
+            + self.fn_pool_cc
             + self.other_cc
     }
 
@@ -459,6 +517,12 @@ impl Invoice {
         out.push(row("S3 requests", self.s3_request_cc));
         out.push(row("S3 storage GiB-hours", self.s3_storage_cc));
         out.push(row("WAN transfer", self.wan_transfer_cc));
+        if self.fn_invoke_cc > 0 {
+            out.push(row("fn invocations", self.fn_invoke_cc));
+        }
+        if self.fn_pool_cc > 0 {
+            out.push(row("fn pool idle memory", self.fn_pool_cc));
+        }
         if self.other_cc > 0 {
             out.push(row("other", self.other_cc));
         }
@@ -481,6 +545,8 @@ impl Invoice {
             ("s3_request_cc", Json::num(self.s3_request_cc as f64)),
             ("s3_storage_cc", Json::num(self.s3_storage_cc as f64)),
             ("wan_transfer_cc", Json::num(self.wan_transfer_cc as f64)),
+            ("fn_invoke_cc", Json::num(self.fn_invoke_cc as f64)),
+            ("fn_pool_cc", Json::num(self.fn_pool_cc as f64)),
             ("other_cc", Json::num(self.other_cc as f64)),
             (
                 "total_centi_cents",

@@ -35,6 +35,11 @@ pub const CKPT_BYTES_BOUNDS: &[f64] = &[
     256.0, 1024.0, 4096.0, 16384.0, 65536.0, 262144.0, 1048576.0, 4194304.0,
 ];
 
+/// Bucket upper bounds (seconds) for the function invocation latency
+/// histogram: warm hits land in the sub-second buckets, cold starts
+/// (container boot + project sync) in the seconds-to-tens range.
+pub const FN_LATENCY_BOUNDS: &[f64] = &[0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0];
+
 /// A fixed-bucket histogram (cumulative counts are derived at render
 /// time; storage is per-bucket so merges stay trivial).
 #[derive(Clone, Debug, PartialEq)]

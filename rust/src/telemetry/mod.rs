@@ -32,7 +32,8 @@ pub mod profile;
 pub mod trace;
 
 pub use metrics::{
-    Histogram, MetricsRegistry, CKPT_BYTES_BOUNDS, MARGIN_BOUNDS, SLICE_BOUNDS, WAIT_BOUNDS,
+    Histogram, MetricsRegistry, CKPT_BYTES_BOUNDS, FN_LATENCY_BOUNDS, MARGIN_BOUNDS, SLICE_BOUNDS,
+    WAIT_BOUNDS,
 };
 pub use profile::{Phase, PhaseProfiler};
 
@@ -97,6 +98,14 @@ pub enum EventKind {
     Transfer,
     /// An invoice was rendered (detail `total_centi_cents`, `lines`).
     Invoice,
+    /// A function invocation was dispatched (detail `cold`,
+    /// `latency_s`, `billed_cc`, `mem_mb`, optional `idle_cc` for the
+    /// warm idle window the hit closed).
+    FnInvoke,
+    /// A container pool transition (detail `action`:
+    /// provision/keepalive/pressure/flush, `pool`, `idle_mb`,
+    /// optional `idle_cc` billed at eviction).
+    FnPool,
 }
 
 impl EventKind {
@@ -112,6 +121,8 @@ impl EventKind {
             EventKind::Scale => "scale",
             EventKind::Transfer => "transfer",
             EventKind::Invoice => "invoice",
+            EventKind::FnInvoke => "fn-invoke",
+            EventKind::FnPool => "fn-pool",
         }
     }
 }
@@ -447,6 +458,42 @@ fn apply_to_registry(r: &mut MetricsRegistry, kind: EventKind, tenant: &str, det
             if !tenant.is_empty() {
                 if let Some(cc) = detail.get("total_centi_cents").and_then(Json::as_f64) {
                     r.set_gauge(&format!("tenant_billed_centi_cents{{tenant=\"{tenant}\"}}"), cc);
+                }
+            }
+        }
+        EventKind::FnInvoke => {
+            r.inc("fn_invoke_total", 1);
+            if detail.opt_bool("cold", false) {
+                r.inc("fn_coldstart_total", 1);
+            }
+            if let Some(l) = detail.get("latency_s").and_then(Json::as_f64) {
+                r.observe("fn_invoke_latency_s", FN_LATENCY_BOUNDS, l);
+            }
+            if !tenant.is_empty() {
+                // Billed centi-cents ride the event exactly as booked,
+                // so these counters reconcile with `ec2invoice`'s
+                // fn_invoke_cc / fn_pool_cc categories centi-cent for
+                // centi-cent.
+                if let Some(cc) = detail.get("billed_cc").and_then(Json::as_u64) {
+                    r.inc(&format!("tenant_fn_invoke_centi_cents{{tenant=\"{tenant}\"}}"), cc);
+                }
+                if let Some(cc) = detail.get("idle_cc").and_then(Json::as_u64) {
+                    r.inc(&format!("tenant_fn_pool_centi_cents{{tenant=\"{tenant}\"}}"), cc);
+                }
+            }
+        }
+        EventKind::FnPool => {
+            let action = detail.opt_str("action").unwrap_or_else(|| "other".into());
+            r.inc(&format!("fn_pool_events_total{{action=\"{action}\"}}"), 1);
+            if let Some(p) = detail.get("pool").and_then(Json::as_f64) {
+                r.set_gauge("fn_pool_size", p);
+            }
+            if let Some(mb) = detail.get("idle_mb").and_then(Json::as_f64) {
+                r.set_gauge("fn_pool_idle_mb", mb);
+            }
+            if !tenant.is_empty() {
+                if let Some(cc) = detail.get("idle_cc").and_then(Json::as_u64) {
+                    r.inc(&format!("tenant_fn_pool_centi_cents{{tenant=\"{tenant}\"}}"), cc);
                 }
             }
         }

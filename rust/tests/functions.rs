@@ -1,0 +1,283 @@
+//! Serverless-tier hardening (ISSUE 9 satellites a+b): a quickprop
+//! property over arbitrary seeded invocation sequences — no keepalive
+//! policy ever evicts a container mid-invocation and pool accounting
+//! conserves containers exactly — plus crash-point coverage for the
+//! functions append-log (kill mid-append, kill mid-compaction, legacy
+//! `functions.json` load), each restoring bit-identically to a clean
+//! save, mirroring `tests/persistence.rs`.
+
+use p2rac::coordinator::{MockEngine, Session};
+use p2rac::jobs::functions::persist::{self, log_path, snapshot_path, LOG_COMPACT_RECORDS};
+use p2rac::jobs::{FnInvokeSpec, FnPlatform, KeepalivePolicy, QuotaBook};
+use p2rac::simcloud::SimParams;
+use p2rac::util::quickprop;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+fn session() -> Session {
+    Session::new(SimParams::default(), Box::new(MockEngine::new(100.0)))
+}
+
+fn spec(tenant: &str, fname: &str, digest: u64, duration_ms: u64) -> FnInvokeSpec {
+    FnInvokeSpec {
+        fname: fname.to_string(),
+        tenant: tenant.to_string(),
+        digest,
+        bytes: 2 * 1024 * 1024,
+        mem_mb: 512,
+        duration_ms,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite a: property tests.
+// ---------------------------------------------------------------------
+
+/// Under ANY seeded invocation sequence, policy and idle budget:
+/// a container that is mid-invocation is never evicted (it is still
+/// pooled, still busy, until its completion time passes), and
+/// containers are conserved exactly — everything ever provisioned is
+/// either still pooled or counted evicted, at every step.
+#[test]
+fn no_policy_evicts_mid_invocation_and_containers_conserve() {
+    quickprop::check("fn pool safety", 30, |g| {
+        let mut s = session();
+        let policy = if g.bool() {
+            KeepalivePolicy::Fixed(g.f64(30.0, 2400.0))
+        } else {
+            KeepalivePolicy::Hybrid { default_s: g.f64(60.0, 1200.0) }
+        };
+        let mut p = FnPlatform::new(policy);
+        // Sometimes a tight idle budget, so pressure evictions fire too.
+        p.autoscaler.max_idle_mb = *g.pick(&[0u64, 512, 1024, 65_536]);
+        let quotas = QuotaBook::default();
+        let n_fns = g.usize(1..5);
+        let steps = g.usize(10..60);
+        for _ in 0..steps {
+            let fi = g.usize(0..n_fns);
+            let sp = spec(
+                &format!("t{}", fi % 2),
+                &format!("f{fi}"),
+                fi as u64 + 1,
+                g.u64(50..8_000),
+            );
+            // Every container mid-invocation right now, before the step.
+            let busy_before: Vec<(u64, f64)> = p
+                .pool
+                .values()
+                .filter(|c| c.busy)
+                .map(|c| (c.id, c.busy_until_s))
+                .collect();
+            p.invoke(&mut s, &quotas, &sp).unwrap();
+            let now = s.cloud.clock.now_s();
+            for (id, until) in busy_before {
+                if until > now {
+                    let c = p
+                        .pool
+                        .get(&id)
+                        .unwrap_or_else(|| panic!("container c-{id} evicted mid-invocation"));
+                    assert!(c.busy, "c-{id} marked idle before its invocation completed");
+                }
+            }
+            assert!(
+                p.conserved(),
+                "conservation broken: provisioned {} != pool {} + evicted {}",
+                p.provisioned_total,
+                p.pool.len(),
+                p.evicted_total
+            );
+            s.cloud.clock.advance(g.f64(0.0, 900.0));
+        }
+        // Drain + flush: afterwards nothing is left and the books
+        // still balance.
+        p.drain(&mut s, &quotas);
+        p.flush(&mut s);
+        assert_eq!(p.pool.len(), 0, "drain + flush must empty the pool");
+        assert!(p.conserved());
+        assert_eq!(p.provisioned_total, p.evicted_total);
+    });
+}
+
+/// Same-seed sequences are bit-identical: dispatch digest, bill and
+/// pool counters all match across two independent runs.
+#[test]
+fn same_seed_invocation_sequences_are_bit_identical() {
+    let run = || {
+        let mut s = session();
+        let mut p = FnPlatform::new(KeepalivePolicy::Hybrid { default_s: 300.0 });
+        let quotas = QuotaBook::default();
+        for i in 0..40u64 {
+            let sp = spec(
+                if i % 3 == 0 { "alice" } else { "bob" },
+                &format!("f{}", i % 4),
+                (i % 4) + 1,
+                100 + (i * 37) % 2_000,
+            );
+            p.invoke(&mut s, &quotas, &sp).unwrap();
+            s.cloud.clock.advance(((i * 131) % 700) as f64);
+        }
+        p.drain(&mut s, &quotas);
+        p.flush(&mut s);
+        (
+            p.dispatch_digest(),
+            s.cloud.ledger.total_centi_cents(),
+            p.to_json().to_string_compact(),
+        )
+    };
+    let (d1, b1, j1) = run();
+    let (d2, b2, j2) = run();
+    assert_eq!(d1, d2, "dispatch digest must be deterministic");
+    assert_eq!(b1, b2, "bill must be deterministic");
+    assert_eq!(j1, j2, "platform state must be deterministic");
+}
+
+// ---------------------------------------------------------------------
+// Satellite b: crash-point persistence, mirroring tests/persistence.rs.
+// ---------------------------------------------------------------------
+
+/// A scratch directory unique to this test run; recreated empty.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("p2rac_fns_{}_{}", name, std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run a deterministic workload on `p`: two tenants, three functions,
+/// warm hits and live pooled containers — so replay covers histograms,
+/// counters and the pool, not just inserts.
+fn drive(s: &mut Session, p: &mut FnPlatform, rounds: u64, offset: u64) {
+    let quotas = QuotaBook::default();
+    for i in 0..rounds {
+        let k = (i + offset) % 3;
+        let tenant = if k == 0 { "alice" } else { "bob" };
+        let sp = spec(tenant, &format!("f{k}"), k + 1, 300 + 40 * k);
+        p.invoke(s, &quotas, &sp).unwrap();
+        s.cloud.clock.advance(200.0 + 30.0 * (i % 5) as f64);
+    }
+    p.settle(s, &quotas);
+}
+
+/// Load `dir` and render the restored state canonically.
+fn load_compact(dir: &Path) -> String {
+    persist::load(dir)
+        .unwrap()
+        .expect("functions state must load")
+        .to_json()
+        .to_string_compact()
+}
+
+/// A clean save of `p` into a fresh directory (first save = full
+/// snapshot), loaded back — the reference every crash state must
+/// match bit for bit.
+fn clean_reference(name: &str, p: &mut FnPlatform) -> String {
+    let dir = scratch(name);
+    persist::save(&dir, p).unwrap();
+    load_compact(&dir)
+}
+
+#[test]
+fn legacy_functions_json_loads_as_a_snapshot_with_an_empty_log() {
+    let dir = scratch("legacy");
+    let mut s = session();
+    let mut p = FnPlatform::default();
+    drive(&mut s, &mut p, 8, 0);
+    // A pre-append-log directory: the full document under
+    // functions.json, no functions.log beside it.
+    fs::write(snapshot_path(&dir), p.to_json().to_string_pretty()).unwrap();
+    assert!(!log_path(&dir).exists());
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("legacy_ref", &mut p),
+        "a legacy functions.json must restore bit-identically to a clean save"
+    );
+}
+
+#[test]
+fn append_log_replay_is_bit_identical_to_a_clean_save() {
+    let dir = scratch("append");
+    let mut s = session();
+    let mut p = FnPlatform::default();
+    drive(&mut s, &mut p, 6, 0);
+    persist::save(&dir, &mut p).unwrap(); // snapshot
+    drive(&mut s, &mut p, 6, 1);
+    persist::save(&dir, &mut p).unwrap(); // one O(delta) log record
+    assert!(log_path(&dir).exists(), "the second save must append, not rewrite");
+    let snapshot_before = fs::read_to_string(snapshot_path(&dir)).unwrap();
+    let restored = load_compact(&dir);
+    assert_eq!(restored, clean_reference("append_ref", &mut p));
+    // The snapshot itself was untouched by the append.
+    assert_eq!(fs::read_to_string(snapshot_path(&dir)).unwrap(), snapshot_before);
+}
+
+#[test]
+fn kill_mid_append_discards_the_torn_tail() {
+    let dir = scratch("torn");
+    let mut s = session();
+    let mut p = FnPlatform::default();
+    drive(&mut s, &mut p, 6, 0);
+    persist::save(&dir, &mut p).unwrap();
+    drive(&mut s, &mut p, 6, 1);
+    persist::save(&dir, &mut p).unwrap();
+    // The crash: a later append died partway through its write. Torn
+    // bytes of a would-be record sit at the end of the log.
+    let log = fs::read_to_string(log_path(&dir)).unwrap();
+    let full_line = log.lines().next().unwrap();
+    let torn = &full_line[..full_line.len() / 2];
+    fs::write(log_path(&dir), format!("{log}{torn}")).unwrap();
+    // Replay stops at the torn record: the state of the last
+    // *successful* save is restored exactly.
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("torn_ref", &mut p),
+        "a torn tail must roll back to the previous successful save"
+    );
+}
+
+#[test]
+fn kill_mid_compaction_replays_the_stale_log_idempotently() {
+    let dir = scratch("compact_crash");
+    let mut s = session();
+    let mut p = FnPlatform::default();
+    drive(&mut s, &mut p, 6, 0);
+    persist::save(&dir, &mut p).unwrap();
+    drive(&mut s, &mut p, 6, 1);
+    persist::save(&dir, &mut p).unwrap();
+    assert!(log_path(&dir).exists());
+    // The crash: compaction renamed the fresh full snapshot into place
+    // and died before unlinking the log. Every log record's effects
+    // are already inside the snapshot.
+    fs::write(snapshot_path(&dir), p.to_json().to_string_pretty()).unwrap();
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("compact_crash_ref", &mut p),
+        "replaying a stale log over a fresh snapshot must be a no-op"
+    );
+}
+
+#[test]
+fn compaction_folds_the_log_back_into_a_single_snapshot() {
+    let dir = scratch("compact");
+    let mut s = session();
+    let mut p = FnPlatform::default();
+    drive(&mut s, &mut p, 4, 0);
+    persist::save(&dir, &mut p).unwrap();
+    // Enough O(delta) saves to cross the compaction threshold.
+    for i in 0..LOG_COMPACT_RECORDS as u64 {
+        drive(&mut s, &mut p, 1, i);
+        persist::save(&dir, &mut p).unwrap();
+    }
+    assert!(
+        !log_path(&dir).exists(),
+        "reaching {LOG_COMPACT_RECORDS} records must compact the log away"
+    );
+    let restored = load_compact(&dir);
+    assert_eq!(
+        restored,
+        clean_reference("compact_ref", &mut p),
+        "the compacted snapshot must carry the whole backlog"
+    );
+}

@@ -8,8 +8,8 @@
 use p2rac::analytics::CatBondData;
 use p2rac::coordinator::{MockEngine, Placement, Session};
 use p2rac::jobs::{
-    files_digest, AutoscalerConfig, JobQueue, JobScheduler, JobSpec, JobState, Priority,
-    TenantQuota,
+    files_digest, AutoscalerConfig, FnInvokeSpec, FnPlatform, JobQueue, JobScheduler, JobSpec,
+    JobState, KeepalivePolicy, Priority, QuotaBook, TenantQuota,
 };
 use p2rac::simcloud::{PriceForecast, SimParams, SpotMarket};
 use p2rac::util::quickprop;
@@ -465,6 +465,125 @@ fn quota_compute_budget_rejects_once_exhausted() {
     );
     // Tenants without a quota are unaffected.
     js.admit(&s, heavy_spec(None), false, "bob").unwrap();
+}
+
+/// Serverless-tier quota edge (ISSUE 9): the fn admit gate sits on
+/// the same centihour budget as the batch tier. An invocation that
+/// lands the books *exactly* on the budget boundary still admits;
+/// the very next one — now one step past — bounces, and the reject
+/// path books nothing.
+#[test]
+fn fn_quota_admits_at_the_boundary_and_rejects_past_it() {
+    let mut s = session();
+    let mut p = FnPlatform::new(KeepalivePolicy::Fixed(600.0));
+    let mut quotas = QuotaBook::default();
+    quotas.set(
+        "alice",
+        TenantQuota {
+            max_centihours: Some(1),
+            ..Default::default()
+        },
+    );
+    let spec = |ms: u64| FnInvokeSpec {
+        fname: "f".to_string(),
+        tenant: "alice".to_string(),
+        digest: 1,
+        bytes: 1 << 20,
+        mem_mb: 512,
+        duration_ms: ms,
+    };
+    // 35.999 s committed: under the 36 s (= 1 centihour) budget.
+    p.invoke(&mut s, &quotas, &spec(35_999)).unwrap();
+    // Still under at admit time, and this invocation lands the books
+    // exactly on the boundary: admitted.
+    p.invoke(&mut s, &quotas, &spec(1)).unwrap();
+    assert_eq!(p.used_s_for("alice"), 36.0);
+    // One centihour is now fully committed: the gate closes.
+    let provisioned = p.provisioned_total;
+    let billed = s.cloud.ledger.total_centi_cents_for("alice");
+    let err = p.invoke(&mut s, &quotas, &spec(1)).unwrap_err().to_string();
+    assert!(
+        err.contains("alice") && err.contains("compute budget") && err.contains("ec2quota"),
+        "{err}"
+    );
+    assert_eq!(p.rejected_total, 1);
+    assert_eq!(
+        p.provisioned_total, provisioned,
+        "a fn quota reject must provision nothing"
+    );
+    assert_eq!(
+        s.cloud.ledger.total_centi_cents_for("alice"),
+        billed,
+        "a fn quota reject must bill nothing"
+    );
+    // Raising the budget reopens the gate; unquota'd tenants never hit it.
+    quotas.set(
+        "alice",
+        TenantQuota {
+            max_centihours: Some(2),
+            ..Default::default()
+        },
+    );
+    p.invoke(&mut s, &quotas, &spec(1)).unwrap();
+    let bob = FnInvokeSpec {
+        tenant: "bob".to_string(),
+        ..spec(50_000)
+    };
+    p.invoke(&mut s, &quotas, &bob).unwrap();
+}
+
+/// Serverless-tier quota edge (ISSUE 9): a capped tenant's functions
+/// rank at zero in the pool autoscaler's demand map — even when their
+/// raw arrival rate dominates — so under idle-memory pressure their
+/// warm containers are evicted first.
+#[test]
+fn fn_pool_pressure_evicts_capped_tenants_first() {
+    let mut s = session();
+    let mut p = FnPlatform::new(KeepalivePolicy::Fixed(7_200.0));
+    let mut quotas = QuotaBook::default();
+    let spec = |tenant: &str, digest: u64| FnInvokeSpec {
+        fname: format!("f{digest}"),
+        tenant: tenant.to_string(),
+        digest,
+        bytes: 1 << 20,
+        mem_mb: 512,
+        duration_ms: 1_000,
+    };
+    // Tenant 'capped' invokes four times as often as 'alice': one warm
+    // container each, but capped's raw demand dominates.
+    for _ in 0..4 {
+        p.invoke(&mut s, &quotas, &spec("capped", 1)).unwrap();
+        s.cloud.clock.advance(10.0);
+    }
+    p.invoke(&mut s, &quotas, &spec("alice", 2)).unwrap();
+    s.cloud.clock.advance(60.0);
+    let now = s.cloud.clock.now_s();
+    let raw = p.autoscaler_demand(&quotas, now);
+    assert!(
+        raw["capped/f1"] > raw["alice/f2"],
+        "without the cap, capped's arrival rate must dominate: {raw:?}"
+    );
+    // Exhaust capped's budget: its demand clamps to zero.
+    quotas.set(
+        "capped",
+        TenantQuota {
+            max_centihours: Some(0),
+            ..Default::default()
+        },
+    );
+    let clamped = p.autoscaler_demand(&quotas, now);
+    assert_eq!(clamped["capped/f1"], 0.0, "a capped tenant must rank at zero demand");
+    assert!(clamped["alice/f2"] > 0.0);
+    // Idle-memory pressure: budget for one 512 MB container. The
+    // autoscaler must evict capped's container, not alice's.
+    p.autoscaler.max_idle_mb = 512;
+    p.settle(&mut s, &quotas);
+    assert_eq!(p.pressure_evictions, 1);
+    assert_eq!(p.pool.len(), 1);
+    assert!(
+        p.pool.values().all(|c| c.tenant == "alice"),
+        "pressure must reclaim the capped tenant's warm capacity first"
+    );
 }
 
 /// Satellite property: EDF-within-class ordering is a total order —

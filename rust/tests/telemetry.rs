@@ -5,7 +5,10 @@
 //! state survives the session persistence roundtrip.
 
 use p2rac::coordinator::{MockEngine, Placement, Session};
-use p2rac::jobs::{AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority, TenantQuota};
+use p2rac::jobs::{
+    AutoscalerConfig, FnInvokeSpec, FnPlatform, JobScheduler, JobSpec, JobState, KeepalivePolicy,
+    Priority, QuotaBook, TenantQuota,
+};
 use p2rac::simcloud::SimParams;
 use p2rac::telemetry::{trace::TraceSummary, EventKind, Phase};
 use p2rac::util::json::Json;
@@ -272,6 +275,161 @@ fn telemetry_survives_the_session_roundtrip() {
         Session::from_json(SimParams::default(), Box::new(MockEngine::new(10.0)), &legacy)
             .unwrap();
     assert_eq!(fresh.cloud.telemetry.events_emitted(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Serverless tier (ISSUE 9): the fn_* metrics reconcile centi-cent-
+// exactly with `ec2invoice`'s fn categories, and same-seed runs are
+// bit-identical.
+// ---------------------------------------------------------------------
+
+/// The seeded serverless scenario: two tenants, three functions, warm
+/// hits, keepalive evictions forced by long gaps, one quota rejection,
+/// then drain + flush so every idle window is billed before the books
+/// are compared. Telemetry records to memory.
+fn run_fn_workload() -> (Session, FnPlatform, String, Vec<String>) {
+    let mut s = session();
+    s.cloud.telemetry.enable_memory_trace();
+    let mut p = FnPlatform::new(KeepalivePolicy::Hybrid { default_s: 400.0 });
+    let mut quotas = QuotaBook::default();
+    // Tenant 'capped' has no compute budget: its invocation bounces at
+    // the admit gate before anything is provisioned or billed.
+    quotas.set(
+        "capped",
+        TenantQuota {
+            max_centihours: Some(0),
+            ..Default::default()
+        },
+    );
+    let blocked = FnInvokeSpec {
+        fname: "blocked".to_string(),
+        tenant: "capped".to_string(),
+        digest: 9,
+        bytes: 1 << 20,
+        mem_mb: 256,
+        duration_ms: 100,
+    };
+    assert!(p.invoke(&mut s, &quotas, &blocked).is_err());
+    for i in 0..24u64 {
+        let k = i % 3;
+        let spec = FnInvokeSpec {
+            fname: format!("f{k}"),
+            tenant: if k == 0 { "t0" } else { "t1" }.to_string(),
+            digest: k + 1,
+            bytes: (k + 1) * (1 << 20),
+            mem_mb: 512,
+            duration_ms: 200 + 50 * k,
+        };
+        p.invoke(&mut s, &quotas, &spec).unwrap();
+        // Occasional long gaps, so keepalive evictions genuinely fire
+        // and the idle windows they bill land in the ledger.
+        s.cloud.clock.advance(if i % 8 == 7 { 5_000.0 } else { 240.0 });
+    }
+    p.drain(&mut s, &quotas);
+    p.flush(&mut s);
+    // The invoice events `ec2invoice` would emit.
+    for tenant in ["t0", "t1"] {
+        let inv = s.cloud.ledger.invoice_for(tenant);
+        s.cloud.telemetry.emit(
+            s.cloud.clock.now_s(),
+            EventKind::Invoice,
+            tenant,
+            None,
+            None,
+            Json::from_pairs(vec![(
+                "total_centi_cents",
+                Json::num(inv.total_centi_cents() as f64),
+            )]),
+        );
+    }
+    let snapshot = s.cloud.telemetry.snapshot_json().to_string_compact();
+    let trace = s.cloud.telemetry.take_memory_trace();
+    (s, p, snapshot, trace)
+}
+
+#[test]
+fn fn_tier_metrics_reconcile_with_the_invoice() {
+    let (s, p, _, trace) = run_fn_workload();
+    let t = &s.cloud.telemetry;
+
+    // Counters mirror the platform's own tallies exactly.
+    assert_eq!(t.counter("fn_invoke_total"), p.invocations_total);
+    assert_eq!(t.counter("fn_coldstart_total"), p.cold_total);
+    assert!(p.cold_total > 0, "the scenario must cold-start");
+    assert!(
+        p.cold_total < p.invocations_total,
+        "the scenario must also hit the warm pool"
+    );
+    // Every invocation recorded one latency observation.
+    assert_eq!(snap_hist_count(t, "fn_invoke_latency_s"), p.invocations_total);
+    // One pool event per provision and per eviction, no more, no less.
+    assert_eq!(
+        t.events_of(EventKind::FnPool),
+        p.provisioned_total + p.evicted_total
+    );
+    assert_eq!(t.events_of(EventKind::FnInvoke), p.invocations_total);
+    // The quota bounce surfaced as an admit-reject on the fn tier.
+    assert_eq!(p.rejected_total, 1);
+    assert_eq!(t.counter("admit_rejects_total{reason=\"quota_centihours\"}"), 1);
+
+    // After flush the pool is empty and the gauges say so.
+    assert!(p.conserved());
+    assert_eq!(p.pool.len(), 0);
+    let snap = t.snapshot_json();
+    assert_eq!(
+        snap.path(&["metrics", "gauges", "fn_pool_size"]).and_then(Json::as_f64),
+        Some(0.0)
+    );
+    assert_eq!(
+        snap.path(&["metrics", "gauges", "fn_pool_idle_mb"]).and_then(Json::as_f64),
+        Some(0.0)
+    );
+
+    // The heart of the satellite: per tenant, the billed centi-cents
+    // that rode the events reconcile centi-cent-exactly with the
+    // invoice's fn categories, and the invoice total closes against
+    // the raw ledger.
+    for tenant in ["t0", "t1"] {
+        let inv = s.cloud.ledger.invoice_for(tenant);
+        assert!(inv.fn_invoke_cc > 0, "tenant {tenant} must be billed for invocations");
+        assert!(inv.fn_pool_cc > 0, "tenant {tenant} must be billed for idle memory");
+        assert_eq!(
+            t.counter(&format!("tenant_fn_invoke_centi_cents{{tenant=\"{tenant}\"}}")),
+            inv.fn_invoke_cc,
+            "invocation billing for {tenant} must reconcile centi-cent-exactly"
+        );
+        assert_eq!(
+            t.counter(&format!("tenant_fn_pool_centi_cents{{tenant=\"{tenant}\"}}")),
+            inv.fn_pool_cc,
+            "idle-memory billing for {tenant} must reconcile centi-cent-exactly"
+        );
+        assert_eq!(inv.total_centi_cents(), s.cloud.ledger.total_centi_cents_for(tenant));
+    }
+    // Nothing was booked against the capped tenant.
+    assert_eq!(s.cloud.ledger.total_centi_cents_for("capped"), 0);
+
+    // The JSONL trace is well-formed and agrees with the bus on the
+    // new event kinds.
+    let summary = TraceSummary::from_lines(trace.iter().map(String::as_str)).unwrap();
+    assert_eq!(summary.events, t.events_emitted());
+    for kind in [EventKind::FnInvoke, EventKind::FnPool, EventKind::AdmitReject] {
+        assert_eq!(
+            summary.by_kind.get(kind.label()).copied().unwrap_or(0),
+            t.events_of(kind),
+            "trace and registry disagree on '{}'",
+            kind.label()
+        );
+    }
+}
+
+#[test]
+fn two_seeded_fn_runs_produce_bit_identical_telemetry() {
+    let (_, p_a, snap_a, trace_a) = run_fn_workload();
+    let (_, p_b, snap_b, trace_b) = run_fn_workload();
+    assert!(!trace_a.is_empty(), "the fn scenario must record events");
+    assert_eq!(snap_a, snap_b, "fn metric snapshots must be bit-identical");
+    assert_eq!(trace_a, trace_b, "fn JSONL traces must be bit-identical");
+    assert_eq!(p_a.dispatch_digest(), p_b.dispatch_digest());
 }
 
 #[test]
