@@ -1,0 +1,293 @@
+//! DAG data-aware placement bench (ISSUE 10): one seeded fan-out /
+//! fan-in workflow (prep → N parallel sweeps → aggregate, wired with
+//! `-after` edges) drained through the real
+//! [`p2rac::jobs::JobScheduler`] twice — once data-oblivious (every
+//! dependent stage re-stages its parents' result files from the
+//! Analyst site over the metered WAN: the pre-DAG world) and once
+//! data-aware (finished stages publish outputs to the S3 results
+//! bucket over the cluster LAN, digest-deduped, and dispatch prefers
+//! the cluster whose LAN already holds the inputs).
+//!
+//! Both modes run the same discrete-event simulation, so the bench
+//! asserts **determinism** first: repeat runs of each mode must agree
+//! bit-for-bit on the dispatch sequence, the bill and the result-file
+//! digests. Only then are the headline claims checked: data-aware
+//! placement must be strictly cheaper in WAN transfer centi-cents and
+//! no slower in virtual makespan (so stage throughput is no worse).
+//! Emits `BENCH_dag.json` at the repository root.
+//!
+//! Run: `cargo bench --bench dag`
+
+use std::time::Instant;
+
+use p2rac::bench_support::emit_bench_json;
+use p2rac::coordinator::{MockEngine, Session};
+use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpecBuilder, JobState};
+use p2rac::simcloud::SimParams;
+use p2rac::util::json::Json;
+
+/// Parallel sweep stages between the prep stage and the aggregate.
+const FANOUT: usize = 4;
+/// MC jobs per stage — enough result bytes that WAN re-staging is
+/// visible in both the ledger and the virtual clock.
+const N_JOBS: usize = 48;
+/// Interleaved timing rounds; every round must agree on the parity
+/// artifacts, the best round carries the wall time.
+const ROUNDS: usize = 3;
+
+/// FNV-1a over a byte string.
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0100_0000_01B3);
+    }
+    h
+}
+
+struct RunOut {
+    wall_s: f64,
+    makespan_s: f64,
+    wan_centi_cents: u64,
+    bill_centi_cents: u64,
+    dispatch_digest: u64,
+    results_digest: u64,
+    releases: u64,
+    cancels: u64,
+    dedup_skips: u64,
+    completions: usize,
+}
+
+/// Stage names in submission order: prep, the fan-out, the fan-in.
+fn stage_names() -> Vec<String> {
+    let mut names = vec!["prep".to_string()];
+    names.extend((0..FANOUT).map(|i| format!("f{i}")));
+    names.push("agg".to_string());
+    names
+}
+
+/// Drain the fan-out/fan-in workflow once, data-aware or not, and
+/// collect the parity artifacts plus cost/makespan.
+fn run(aware: bool) -> RunOut {
+    let mut s = Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)));
+    s.cloud.spot.spike_prob = 0.0;
+    s.cloud.telemetry.enable_memory_trace();
+    s.analyst.write(
+        "pipe/sweep.json",
+        format!(r#"{{"type":"mc_sweep","n_jobs":{N_JOBS},"seed":900}}"#).into_bytes(),
+    );
+    let mut js = JobScheduler::new(AutoscalerConfig {
+        min_clusters: 2,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    });
+    js.data_aware = aware;
+    let prep = js.submit(&s, JobSpecBuilder::new("prep", "pipe", "sweep.json").build());
+    let mids: Vec<_> = (0..FANOUT)
+        .map(|i| {
+            js.submit(
+                &s,
+                JobSpecBuilder::new(&format!("f{i}"), "pipe", "sweep.json")
+                    .after([prep])
+                    .build(),
+            )
+        })
+        .collect();
+    let agg = js.submit(
+        &s,
+        JobSpecBuilder::new("agg", "pipe", "sweep.json")
+            .after(mids.iter().copied())
+            .build(),
+    );
+    let t0 = Instant::now();
+    js.run_until_idle(&mut s).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let makespan_s = s.cloud.clock.now_s();
+    js.shutdown_fleet(&mut s).unwrap();
+
+    let mut completions = 0;
+    for id in std::iter::once(prep).chain(mids.iter().copied()).chain([agg]) {
+        if js.queue.get(id).unwrap().state == JobState::Completed {
+            completions += 1;
+        }
+    }
+    // The dispatch sequence — (job, cluster) per dispatch event, in
+    // event order — pins placement for the repeat-determinism check.
+    let mut dispatch_digest = 0xcbf2_9ce4_8422_2325u64;
+    for line in s.cloud.telemetry.take_memory_trace() {
+        let j = Json::parse(&line).unwrap();
+        if j.opt_str("kind").as_deref() != Some("dispatch") {
+            continue;
+        }
+        dispatch_digest = fnv1a(dispatch_digest, j.opt_str("job").unwrap_or_default().as_bytes());
+        dispatch_digest =
+            fnv1a(dispatch_digest, j.opt_str("cluster").unwrap_or_default().as_bytes());
+    }
+    let mut results: Vec<(String, Vec<u8>)> = Vec::new();
+    for name in stage_names() {
+        let dir = format!("pipe_results/{name}");
+        for rel in s.analyst.list_dir(&dir) {
+            let bytes = s.analyst.read(&format!("{dir}/{rel}")).unwrap().to_vec();
+            results.push((format!("{dir}/{rel}"), bytes));
+        }
+    }
+    results.sort();
+    RunOut {
+        wall_s,
+        makespan_s,
+        wan_centi_cents: s.cloud.ledger.total_wan_transfer_centi_cents(),
+        bill_centi_cents: s.cloud.ledger.total_centi_cents(),
+        dispatch_digest,
+        results_digest: files_digest(&results),
+        releases: js.dag_releases,
+        cancels: js.dag_cancels,
+        dedup_skips: js.dag_dedup_skips,
+        completions,
+    }
+}
+
+fn main() {
+    let stages = FANOUT + 2;
+    println!(
+        "=== DAG data-aware placement: S3 results bucket + LAN routing vs WAN re-staging ===\n\
+         prep -> {FANOUT} parallel sweeps -> aggregate ({stages} stages x {N_JOBS} MC jobs) \
+         on a 2-cluster fleet\n"
+    );
+
+    // Interleaved rounds: repeat runs of a mode must be bit-identical
+    // (the simulation is deterministic); the best wall time reports.
+    let mut oblivious = run(false);
+    let mut aware = run(true);
+    let mut oblivious_repeats = true;
+    let mut aware_repeats = true;
+    for _ in 1..ROUNDS {
+        let o = run(false);
+        let a = run(true);
+        oblivious_repeats &= o.dispatch_digest == oblivious.dispatch_digest
+            && o.results_digest == oblivious.results_digest
+            && o.bill_centi_cents == oblivious.bill_centi_cents
+            && o.wan_centi_cents == oblivious.wan_centi_cents
+            && o.makespan_s == oblivious.makespan_s;
+        aware_repeats &= a.dispatch_digest == aware.dispatch_digest
+            && a.results_digest == aware.results_digest
+            && a.bill_centi_cents == aware.bill_centi_cents
+            && a.wan_centi_cents == aware.wan_centi_cents
+            && a.makespan_s == aware.makespan_s;
+        if o.wall_s < oblivious.wall_s {
+            oblivious = o;
+        }
+        if a.wall_s < aware.wall_s {
+            aware = a;
+        }
+    }
+    assert!(oblivious_repeats, "data-oblivious runs must be bit-identical");
+    assert!(aware_repeats, "data-aware runs must be bit-identical");
+
+    // Both modes run the identical DAG control plane and finish the
+    // identical work.
+    for (label, r) in [("oblivious", &oblivious), ("aware", &aware)] {
+        assert_eq!(r.completions, stages, "{label} run must complete all stages");
+        assert_eq!(r.cancels, 0, "{label} run must cancel nothing");
+        assert_eq!(
+            r.releases,
+            (FANOUT + 1) as u64,
+            "{label} run must release each held stage exactly once"
+        );
+    }
+    assert_eq!(
+        aware.results_digest, oblivious.results_digest,
+        "placement must not change the result files"
+    );
+
+    let tput = |r: &RunOut| stages as f64 / r.makespan_s.max(1e-9);
+    for (label, r) in [("oblivious", &oblivious), ("aware", &aware)] {
+        println!(
+            "  {label:>9}: {} cc WAN transfer, {} cc total bill, makespan {:>8.1}s \
+             ({:.4} stages/virtual-s), {} dedup skip(s), wall {:.3}s",
+            r.wan_centi_cents,
+            r.bill_centi_cents,
+            r.makespan_s,
+            tput(r),
+            r.dedup_skips,
+            r.wall_s,
+        );
+    }
+    println!(
+        "\n  -> WAN {} cc -> {} cc, makespan {:.1}s -> {:.1}s",
+        oblivious.wan_centi_cents, aware.wan_centi_cents, oblivious.makespan_s, aware.makespan_s
+    );
+
+    // The headline claims: strictly cheaper over the WAN, no slower.
+    assert!(
+        aware.wan_centi_cents < oblivious.wan_centi_cents,
+        "data-aware placement must be strictly cheaper in WAN transfer ({} cc vs {} cc)",
+        aware.wan_centi_cents,
+        oblivious.wan_centi_cents
+    );
+    assert!(
+        aware.makespan_s <= oblivious.makespan_s,
+        "data-aware placement must be no slower ({:.3}s vs {:.3}s)",
+        aware.makespan_s,
+        oblivious.makespan_s
+    );
+    assert!(
+        aware.dedup_skips > 0,
+        "identical stage outputs must dedup in the results bucket"
+    );
+
+    let mode_json = |r: &RunOut| {
+        Json::from_pairs(vec![
+            ("wan_centi_cents", Json::num(r.wan_centi_cents as f64)),
+            ("bill_centi_cents", Json::num(r.bill_centi_cents as f64)),
+            ("makespan_s", Json::num(r.makespan_s)),
+            ("stages_per_virtual_s", Json::num(tput(r))),
+            ("wall_s", Json::num(r.wall_s)),
+            ("releases", Json::num(r.releases as f64)),
+            ("dedup_skips", Json::num(r.dedup_skips as f64)),
+            ("dispatch_digest", Json::str(&format!("{:016x}", r.dispatch_digest))),
+            ("results_digest", Json::str(&format!("{:016x}", r.results_digest))),
+        ])
+    };
+    let report = Json::from_pairs(vec![
+        (
+            "workload",
+            Json::from_pairs(vec![
+                ("fanout", Json::num(FANOUT as f64)),
+                ("stages", Json::num(stages as f64)),
+                ("n_jobs", Json::num(N_JOBS as f64)),
+                ("rounds", Json::num(ROUNDS as f64)),
+            ]),
+        ),
+        ("oblivious", mode_json(&oblivious)),
+        ("aware", mode_json(&aware)),
+        (
+            "parity",
+            Json::from_pairs(vec![
+                ("oblivious_repeats", Json::Bool(oblivious_repeats)),
+                ("aware_repeats", Json::Bool(aware_repeats)),
+                (
+                    "results_match",
+                    Json::Bool(aware.results_digest == oblivious.results_digest),
+                ),
+            ]),
+        ),
+        (
+            "savings",
+            Json::from_pairs(vec![
+                (
+                    "wan_centi_cents_saved",
+                    Json::num((oblivious.wan_centi_cents - aware.wan_centi_cents) as f64),
+                ),
+                (
+                    "makespan_ratio",
+                    Json::num(aware.makespan_s / oblivious.makespan_s.max(1e-9)),
+                ),
+            ]),
+        ),
+    ]);
+    match emit_bench_json("dag", &report) {
+        Ok(path) => println!("  wrote {}", path.display()),
+        Err(e) => eprintln!("  could not write BENCH_dag.json: {e}"),
+    }
+    println!("\ndag bench complete.");
+}

@@ -20,9 +20,9 @@ use std::time::Instant;
 
 use p2rac::analytics::script::RUST_SWEEP_TILE;
 use p2rac::bench_support::emit_bench_json;
-use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::coordinator::{MockEngine, Session};
 use p2rac::jobs::genload::{generate, GenJob, GenLoadConfig};
-use p2rac::jobs::{AutoscalerConfig, JobScheduler, JobSpec};
+use p2rac::jobs::{AutoscalerConfig, JobScheduler, JobSpecBuilder};
 use p2rac::simcloud::SimParams;
 use p2rac::telemetry::{EventKind, TelemetryLevel};
 use p2rac::util::json::Json;
@@ -87,14 +87,14 @@ fn run_once(level: TelemetryLevel, arrivals: &[GenJob], seed: u64) -> RunOut {
     let (mut submitted, mut rejected) = (0u64, 0u64);
     for (i, g) in arrivals.iter().enumerate() {
         let units = g.units.min(UNIT_CAP);
-        let spec = JobSpec {
-            name: format!("gen-{seed}-{i}"),
-            projectdir: format!("genload/u{units}"),
-            rscript: "sweep.json".to_string(),
-            priority: g.priority,
-            placement: Placement::ByNode,
-            deadline_s: g.deadline_s.map(|d| now + (d - g.arrival_s)),
-        };
+        let spec = JobSpecBuilder::new(
+            &format!("gen-{seed}-{i}"),
+            &format!("genload/u{units}"),
+            "sweep.json",
+        )
+        .priority(g.priority)
+        .deadline(g.deadline_s.map(|d| now + (d - g.arrival_s)))
+        .build();
         match js.admit(&s, spec, false, &g.tenant) {
             Ok(_) => submitted += 1,
             Err(_) => rejected += 1,

@@ -38,10 +38,9 @@ use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::time::Instant;
 
 use p2rac::bench_support::emit_bench_json;
-use p2rac::coordinator::Placement;
 use p2rac::jobs::genload::{generate, GenJob, GenLoadConfig};
 use p2rac::jobs::spot::SpotDirectory;
-use p2rac::jobs::{JobId, JobQueue, JobSpec, JobState, Priority};
+use p2rac::jobs::{JobId, JobQueue, JobSpecBuilder, JobState, Priority};
 use p2rac::simcloud::SpotMarket;
 use p2rac::util::json::Json;
 
@@ -396,14 +395,10 @@ fn run(
                 let g = &arrivals[ai];
                 ai += 1;
                 let id = queue.submit(
-                    JobSpec {
-                        name: format!("s{ai}"),
-                        projectdir: "bench".to_string(),
-                        rscript: "sweep.json".to_string(),
-                        priority: g.priority,
-                        placement: Placement::ByNode,
-                        deadline_s: g.deadline_s,
-                    },
+                    JobSpecBuilder::new(&format!("s{ai}"), "bench", "sweep.json")
+                        .priority(g.priority)
+                        .deadline(g.deadline_s)
+                        .build(),
                     g.arrival_s,
                 );
                 let j = queue.get_mut(id).expect("submitted job exists");

@@ -21,8 +21,8 @@
 use std::time::Instant;
 
 use p2rac::bench_support::emit_bench_json;
-use p2rac::coordinator::{MockEngine, Placement, Session};
-use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority};
+use p2rac::coordinator::{MockEngine, Session};
+use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpecBuilder, JobState};
 use p2rac::simcloud::SimParams;
 use p2rac::util::json::Json;
 
@@ -87,14 +87,8 @@ fn run(fast: bool) -> RunOut {
         .map(|i| {
             js.submit(
                 &s,
-                JobSpec {
-                    name: format!("r{i}"),
-                    projectdir: format!("sweep{i}"),
-                    rscript: "sweep.json".into(),
-                    priority: Priority::Normal,
-                    placement: Placement::ByNode,
-                    deadline_s: None,
-                },
+                JobSpecBuilder::new(&format!("r{i}"), &format!("sweep{i}"), "sweep.json")
+                    .build(),
             )
         })
         .collect();

@@ -12,12 +12,17 @@ without a build, for doc-only PRs.)
 Run from the repository root: python3 ci/check_manual.py
 """
 
+import glob
 import re
 import sys
 
 
 def main():
-    src = open("rust/src/cli/commands.rs").read()
+    # The registry is split across per-domain modules (cli/resources.rs,
+    # cli/data.rs, cli/jobs.rs, cli/functions.rs, cli/obs.rs) plus the
+    # dispatcher itself — glob them all so a new domain file is covered
+    # automatically.
+    src = "".join(open(p).read() for p in sorted(glob.glob("rust/src/cli/*.rs")))
     cmds = sorted(set(re.findall(r'CommandSpec::new\(\s*"(ec2[a-z0-9]+)"', src)))
     # Guard against the regex rotting (e.g. a rustfmt wrap): the
     # registry has had >= 19 paper commands since PR 0.

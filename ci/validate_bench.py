@@ -414,7 +414,68 @@ def validate_functions(report):
         require(kind in kinds, f"trace_sample must record '{kind}' events")
 
 
+def validate_dag(report):
+    """BENCH_dag.json: data-aware DAG placement vs WAN re-staging.
+
+    The same seeded fan-out/fan-in workflow drains twice — data-aware
+    (stage outputs published to the S3 results bucket, dependents
+    routed to the LAN that holds their inputs) and data-oblivious
+    (every dependent re-stages over the metered WAN). Repeat runs of
+    each mode must be bit-identical, the result files must not depend
+    on placement, and data-aware must be strictly cheaper in WAN
+    centi-cents while no slower in virtual makespan.
+    """
+    workload = report.get("workload")
+    require(isinstance(workload, dict), "'workload' must be an object")
+    require(workload["fanout"] >= 2, "workload must genuinely fan out")
+    require(
+        workload["stages"] == workload["fanout"] + 2,
+        "stage count must be prep + fanout + aggregate",
+    )
+    require(workload["rounds"] >= 2, "determinism needs at least two rounds")
+
+    parity = report.get("parity")
+    require(isinstance(parity, dict), "'parity' must be an object")
+    for key in ("oblivious_repeats", "aware_repeats", "results_match"):
+        require(parity.get(key) is True, f"parity check '{key}' did not hold")
+
+    for label in ("oblivious", "aware"):
+        r = report.get(label)
+        require(isinstance(r, dict), f"'{label}' must be an object")
+        require(
+            r["makespan_s"] > 0 and r["stages_per_virtual_s"] > 0 and r["wall_s"] > 0,
+            f"{label}: empty run",
+        )
+        require(
+            r["releases"] == workload["fanout"] + 1,
+            f"{label}: every held stage must release exactly once",
+        )
+    oblivious, aware = report["oblivious"], report["aware"]
+    require(
+        aware["results_digest"] == oblivious["results_digest"],
+        "placement must not change the result files",
+    )
+    require(
+        aware["wan_centi_cents"] < oblivious["wan_centi_cents"],
+        f"data-aware placement must be strictly cheaper over the WAN "
+        f"({aware['wan_centi_cents']} vs {oblivious['wan_centi_cents']} cc)",
+    )
+    require(
+        aware["makespan_s"] <= oblivious["makespan_s"],
+        f"data-aware placement must be no slower "
+        f"({aware['makespan_s']} vs {oblivious['makespan_s']} virtual s)",
+    )
+    require(aware["dedup_skips"] > 0, "identical stage outputs must dedup in the bucket")
+    require(oblivious["dedup_skips"] == 0, "the oblivious run must never publish")
+
+    savings = report.get("savings")
+    require(isinstance(savings, dict), "'savings' must be an object")
+    require(savings["wan_centi_cents_saved"] > 0, "WAN savings must be positive")
+    require(0 < savings["makespan_ratio"] <= 1.0, "makespan ratio must be in (0, 1]")
+
+
 SCHEMAS = {
+    "BENCH_dag.json": validate_dag,
     "BENCH_functions.json": validate_functions,
     "BENCH_micro.json": validate_micro,
     "BENCH_obs.json": validate_obs,

@@ -15,8 +15,8 @@ use crate::coordinator::{
     ResourceView, ResultScope, Session,
 };
 use crate::jobs::{
-    AutoscalerConfig, BidStrategy, JobScheduler, JobSpec, JobState, Priority, QueueOrdering,
-    ScalePolicy,
+    AutoscalerConfig, BidStrategy, JobScheduler, JobSpec, JobSpecBuilder, JobState, Priority,
+    QueueOrdering, ScalePolicy,
 };
 use crate::simcloud::{NetworkModel, SimParams, SpanCategory};
 use crate::util::json::Json;
@@ -453,14 +453,9 @@ pub fn run_queue_scenario(
         };
         js.submit(
             &s,
-            JobSpec {
-                name: format!("run{i}"),
-                projectdir: dir.into(),
-                rscript: script.into(),
-                priority: prios[i % prios.len()],
-                placement: Placement::ByNode,
-                deadline_s: None,
-            },
+            JobSpecBuilder::new(&format!("run{i}"), dir, script)
+                .priority(prios[i % prios.len()])
+                .build(),
         );
     }
     js.run_until_idle(&mut s)?;
@@ -611,14 +606,9 @@ fn deadline_specs(deadlines: Option<&[f64]>) -> Vec<JobSpec> {
             } else {
                 ("dcat", "catopt.json")
             };
-            JobSpec {
-                name: format!("slo{i}"),
-                projectdir: dir.into(),
-                rscript: script.into(),
-                priority: Priority::Normal,
-                placement: Placement::ByNode,
-                deadline_s: deadlines.map(|d| d[i]),
-            }
+            JobSpecBuilder::new(&format!("slo{i}"), dir, script)
+                .deadline(deadlines.map(|d| d[i]))
+                .build()
         })
         .collect()
 }
@@ -747,14 +737,9 @@ pub fn run_ordering_scenario(
         let name = format!("edf{i}");
         js.submit(
             &s,
-            JobSpec {
-                name: name.clone(),
-                projectdir: "edf".into(),
-                rscript: "sweep.json".into(),
-                priority: Priority::Normal,
-                placement: Placement::ByNode,
-                deadline_s: deadlines.map(|d| d[i]),
-            },
+            JobSpecBuilder::new(&name, "edf", "sweep.json")
+                .deadline(deadlines.map(|d| d[i]))
+                .build(),
         );
         names.push(name);
     }
@@ -885,14 +870,7 @@ pub fn run_storage_scenario(
     let t0 = s.cloud.clock.now_s();
     let id = js.submit_opts(
         &s,
-        JobSpec {
-            name: "resume".into(),
-            projectdir: "stor".into(),
-            rscript: "catopt.json".into(),
-            priority: Priority::Normal,
-            placement: Placement::ByNode,
-            deadline_s: None,
-        },
+        JobSpecBuilder::new("resume", "stor", "catopt.json").build(),
         resident,
         "bench",
     );

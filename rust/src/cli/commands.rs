@@ -1,222 +1,94 @@
-//! Implementations of the 19 paper commands plus three quality-of-life
-//! extras (`mkproject`, `batch`, `report`) needed because the Analyst
-//! "workstation" is itself part of the simulation.
+//! Command registry and dispatcher for the P2RAC CLI.
+//!
+//! The 19 paper commands plus three quality-of-life extras
+//! (`mkproject`, `batch`, `report`) are implemented by five per-domain
+//! modules — [`super::resources`], [`super::data`], [`super::jobs`],
+//! [`super::functions`] and [`super::obs`] — each exposing one
+//! [`Command`] implementation. This module owns the shared contract
+//! every domain follows:
+//!
+//! - **Registry**: [`registry`] is the concatenation of every domain's
+//!   [`Command::specs`]; `-h`/`-v`, exclusive-flag groups and required
+//!   args are enforced uniformly by the arg parser before any domain
+//!   code runs.
+//! - **Exit codes** (see [`super::main_entry`]): `0` command ran and
+//!   printed its output; `1` the command failed (parse error, unknown
+//!   command, or a domain error — the message lands on stderr
+//!   prefixed `p2rac:`); `2` no command was given (the global help is
+//!   printed).
+//! - **`-json` envelope**: machine-readable output from the
+//!   queue-inspection commands is wrapped by [`json_envelope`] as
+//!   `{"command": <name>, "ok": true, "data": {…}}` so scripts can
+//!   key on stable top-level fields. (Pre-envelope emitters such as
+//!   `ec2invoice`/`ec2metrics` keep their historical top-level shape.)
+//! - **State routing**: [`run_command`] decides which persisted state
+//!   loads (session only, session+jobs, or session+functions) and the
+//!   domains receive it through [`CmdCtx`], with absent planes as
+//!   `None`.
 
 use super::{load_jobs, load_session, make_engine, save_jobs, save_session};
 use crate::analytics::CatBondData;
-use crate::coordinator::{
-    table1_desktops, CreateClusterOpts, CreateInstanceOpts, Placement, ResultScope, Session,
-};
-use crate::jobs::{
-    parse_deadline, BidStrategy, JobId, JobScheduler, JobSpec, Priority, ScalePolicy,
-};
+use crate::coordinator::Session;
+use crate::jobs::JobScheduler;
 use crate::simcloud::SpanCategory;
-use crate::telemetry::{trace, EventKind, TelemetryLevel};
 use crate::util::argparse::{CommandSpec, ParsedArgs};
 use crate::util::humanfmt;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Result};
 
+/// One CLI command domain: a named group of command specs plus the
+/// execution logic for every command it owns.
+pub trait Command {
+    /// Short domain name (for diagnostics and docs).
+    fn domain(&self) -> &'static str;
+    /// The command specs this domain registers.
+    fn specs(&self) -> Vec<CommandSpec>;
+    /// Whether this domain implements `cmd`.
+    fn owns(&self, cmd: &str) -> bool {
+        self.specs().iter().any(|c| c.name == cmd)
+    }
+    /// Execute one already-parsed command; returns its stdout text.
+    fn run(&self, ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String>;
+}
+
+/// Everything a command may operate on. The session is always loaded;
+/// the job scheduler and the serverless planes are `None` unless the
+/// dispatcher loaded them for this command (see [`run_command`]).
+pub struct CmdCtx<'a> {
+    /// The simulated cloud + Analyst site session.
+    pub s: &'a mut Session,
+    /// The persisted job queue / autoscaler / quota state, when loaded.
+    pub js: Option<&'a mut JobScheduler>,
+    /// Read-only tenant quota book for the serverless admit gate.
+    pub quotas: Option<&'a crate::jobs::QuotaBook>,
+    /// The persisted serverless function platform, when loaded.
+    pub fns: Option<&'a mut crate::jobs::FnPlatform>,
+}
+
+/// The five command domains, in registry (help) order.
+pub fn domains() -> Vec<Box<dyn Command>> {
+    vec![
+        Box::new(super::resources::Resources),
+        Box::new(super::data::Data),
+        Box::new(super::jobs::Jobs),
+        Box::new(super::functions::Functions),
+        Box::new(super::obs::Obs),
+    ]
+}
+
 /// All commands with their specs, paper-accurate syntax.
 pub fn registry() -> Vec<CommandSpec> {
-    vec![
-        CommandSpec::new("ec2configurep2rac", "initialise a fresh P2RAC session and configuration files"),
-        CommandSpec::new("ec2createinstance", "configure an instance on the cloud")
-            .value_arg("iname", "name of the instance")
-            .value_arg("ebsvol", "EBS volume ID to attach")
-            .value_arg("snap", "EBS snapshot ID to materialise a volume from")
-            .value_arg("type", "EC2 instance type (e.g. m2.4xlarge)")
-            .value_arg("desc", "description of the instance")
-            .value_arg("analyst", "tenant id to tag the instance and its charges with")
-            .switch_arg("spot", "request spot-market capacity (bid = on-demand rate)")
-            .exclusive(&["ebsvol", "snap"]),
-        CommandSpec::new("ec2terminateinstance", "safely release an instance")
-            .value_arg("iname", "name of the instance to terminate")
-            .switch_arg("deletevol", "also delete the attached EBS volume"),
-        CommandSpec::new("ec2senddatatoinstance", "synchronise a project directory onto an instance")
-            .value_arg("iname", "target instance")
-            .value_arg("projectdir", "source project directory at the Analyst site"),
-        CommandSpec::new("ec2getresultsfrominstance", "fetch results of a run from an instance")
-            .value_arg("iname", "source instance")
-            .value_arg("projectdir", "project directory at the Analyst site")
-            .required_arg("runname", "name of the run whose results to gather"),
-        CommandSpec::new("ec2runoninstance", "execute a script on an instance (locks it)")
-            .value_arg("iname", "target instance")
-            .value_arg("projectdir", "project directory")
-            .value_arg("rscript", "script to execute from the project directory")
-            .value_arg("threads", "real worker threads for the engine (default: all cores)")
-            .required_arg("runname", "name for this run"),
-        CommandSpec::new("ec2createcluster", "gather and configure a pool of instances as a cluster")
-            .value_arg("cname", "name of the cluster")
-            .value_arg("csize", "cluster size (1 master + workers)")
-            .value_arg("ebsvol", "EBS volume ID to attach to the master")
-            .value_arg("snap", "EBS snapshot ID to materialise a volume from")
-            .value_arg("type", "EC2 instance type")
-            .value_arg("desc", "description of the cluster")
-            .value_arg("analyst", "tenant id to tag the cluster and its charges with")
-            .switch_arg("spot", "request spot-market capacity for every node")
-            .exclusive(&["ebsvol", "snap"]),
-        CommandSpec::new("ec2terminatecluster", "safely release a cluster")
-            .value_arg("cname", "name of the cluster")
-            .switch_arg("deletevol", "also delete the shared EBS volume"),
-        CommandSpec::new("ec2terminateall", "terminate everything on the cloud")
-            .switch_arg("instances", "terminate all instances")
-            .switch_arg("clusters", "terminate all clusters")
-            .switch_arg("ebsvolumes", "delete all EBS volumes")
-            .switch_arg("snapshots", "delete all snapshots"),
-        CommandSpec::new("ec2senddatatoclusternodes", "synchronise a project onto every node of a cluster")
-            .value_arg("cname", "target cluster")
-            .value_arg("projectdir", "source project directory"),
-        CommandSpec::new("ec2senddatatomaster", "synchronise a project onto the master instance only")
-            .value_arg("cname", "target cluster")
-            .value_arg("projectdir", "source project directory"),
-        CommandSpec::new("ec2getresults", "gather results from a cluster")
-            .value_arg("cname", "source cluster")
-            .value_arg("projectdir", "project directory")
-            .required_arg("runname", "run whose results to gather")
-            .switch_arg("frommaster", "scenario 1: results aggregated on the master")
-            .switch_arg("fromworkers", "scenario 2: results on the workers")
-            .switch_arg("fromall", "scenario 3: results on master and workers")
-            .exclusive(&["frommaster", "fromworkers", "fromall"]),
-        CommandSpec::new("ec2runoncluster", "execute a script on a cluster (locks it)")
-            .value_arg("cname", "target cluster")
-            .value_arg("projectdir", "project directory")
-            .value_arg("rscript", "script to execute")
-            .value_arg("threads", "real worker threads for the engine (default: all cores)")
-            .required_arg("runname", "name for this run")
-            .switch_arg("bynode", "round-robin slave placement (default)")
-            .switch_arg("byslot", "fill each node's cores before the next")
-            .exclusive(&["bynode", "byslot"]),
-        CommandSpec::new("ec2listinstances", "list instances created by the Analyst")
-            .switch_arg("names", "names only"),
-        CommandSpec::new("ec2listclusters", "list clusters created by the Analyst")
-            .switch_arg("names", "names only"),
-        CommandSpec::new("ec2listallresources", "list raw cloud resources")
-            .switch_arg("instances", "list instances")
-            .switch_arg("ebsvols", "list EBS volumes")
-            .switch_arg("snapshots", "list snapshots")
-            .switch_arg("amis", "list machine images"),
-        CommandSpec::new("ec2logintoinstance", "open a (simulated) SSH session to an instance")
-            .value_arg("iname", "instance to log in to"),
-        CommandSpec::new("ec2logintocluster", "open a (simulated) SSH session to a cluster master")
-            .value_arg("cname", "cluster whose master to log in to"),
-        CommandSpec::new("ec2resourcelock", "lock or unlock an instance or cluster")
-            .value_arg("iname", "instance name")
-            .value_arg("cname", "cluster name")
-            .switch_arg("free", "unlock the resource")
-            .switch_arg("inuse", "lock the resource")
-            .exclusive(&["iname", "cname"])
-            .exclusive(&["free", "inuse"]),
-        CommandSpec::new("ec2resizecluster", "grow or shrink a running cluster (dynamic scaling)")
-            .value_arg("cname", "cluster to resize")
-            .required_arg("csize", "new cluster size (1 master + workers)"),
-        CommandSpec::new("ec2submitjob", "queue an analytics job for the elastic fleet")
-            .value_arg("projectdir", "project directory at the Analyst site")
-            .value_arg("rscript", "script to execute from the project directory")
-            .value_arg("priority", "low | normal | high (default normal)")
-            .value_arg("analyst", "tenant id the job's charges are attributed to")
-            .value_arg(
-                "deadline",
-                "complete-by time: seconds from now, or RFC 3339 (virtual t=0 is 2012-01-01T00:00:00Z)",
-            )
-            .required_arg("runname", "name for this job's results")
-            .switch_arg("bynode", "round-robin slave placement (default)")
-            .switch_arg("byslot", "fill each node's cores before the next")
-            .switch_arg(
-                "resident",
-                "keep checkpoints cluster-side (EBS+S3+snapshot); resume pays LAN, not WAN",
-            )
-            .value_arg("trace", "append JSONL telemetry events to this file (raises level to trace)")
-            .exclusive(&["bynode", "byslot"]),
-        CommandSpec::new("ec2snapshot", "point-in-time EBS snapshot of a resource's volume")
-            .value_arg("iname", "instance whose volume to snapshot")
-            .value_arg("cname", "cluster whose shared volume to snapshot")
-            .value_arg("desc", "description of the snapshot")
-            .exclusive(&["iname", "cname"]),
-        CommandSpec::new("ec2lsobjects", "list the storage plane's objects with content digests")
-            .value_arg("bucket", "bucket to list (default: all buckets)"),
-        CommandSpec::new("ec2jobstatus", "show one job (or every job) in the queue")
-            .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)")
-            .switch_arg("json", "emit machine-readable JSON instead of text"),
-        CommandSpec::new("ec2quota", "set, show or clear per-tenant governance quotas")
-            .value_arg("analyst", "tenant id the quota applies to (omit to list all quotas)")
-            .value_arg(
-                "maxclusters",
-                "max clusters per pool: concurrent fleet clusters, and owned created clusters",
-            )
-            .value_arg("maxcentihour", "compute budget in centihours (1/100 instance-hour)")
-            .value_arg("maxqueued", "max jobs the tenant may have queued at once")
-            .switch_arg("clear", "remove the tenant's quota (back to unlimited)"),
-        CommandSpec::new("ec2invoice", "itemised per-tenant bill from the usage ledger")
-            .value_arg("analyst", "tenant id to invoice (as tagged on jobs/resources)")
-            .switch_arg("json", "emit the invoice as JSON instead of text"),
-        CommandSpec::new("ec2invoke", "invoke a function on the serverless warm-container tier")
-            .required_arg("fname", "function name (unique per tenant)")
-            .value_arg("analyst", "tenant id the invocation bills and counts quota against")
-            .value_arg("projectdir", "project directory whose content digest keys the warm pool")
-            .value_arg("mem", "container memory in MB (default 512)")
-            .value_arg("ms", "execution time in milliseconds (default 200)")
-            .value_arg("repeat", "invoke this many times back to back (default 1)")
-            .value_arg("gap", "virtual seconds between repeated invocations (default 60)")
-            .switch_arg("json", "emit the outcome(s) as JSON instead of text"),
-        CommandSpec::new("ec2fnpool", "inspect or configure the serverless container pool")
-            .value_arg("policy", "keepalive policy: fixed | hybrid (adaptive per-function histogram)")
-            .value_arg("keepalive", "base keepalive window in seconds (fixed value / hybrid fallback)")
-            .value_arg("maxidlemb", "autoscaler idle-memory budget in MB (0 keeps nothing idle)")
-            .switch_arg("drain", "advance the clock until every running invocation completes")
-            .switch_arg("flush", "evict every idle container now (bills their idle memory)")
-            .switch_arg("json", "emit pool status as JSON instead of text"),
-        CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
-            .switch_arg("drain", "run the scheduler until every job completes")
-            .switch_arg("shutdown", "terminate the fleet and bill its usage")
-            .switch_arg("json", "emit queue depth and per-tenant load as JSON")
-            .switch_arg("profile", "show wall-clock per scheduler phase for this invocation")
-            .switch_arg("nofastpath", "disable the slice fast path (work cache + delta checkpoints)")
-            .value_arg("ckptfull", "ship a full checkpoint every N slices, deltas between (default 8)"),
-        CommandSpec::new("ec2genload", "submit a synthetic multi-tenant workload to the queue")
-            .value_arg("jobs", "number of jobs to generate (default 200)")
-            .value_arg("tenants", "number of distinct tenants (default 8)")
-            .value_arg("seed", "workload seed (default 7)")
-            .value_arg("trace", "append JSONL telemetry events to this file (raises level to trace)")
-            .switch_arg("json", "emit a summary of the generated workload as JSON"),
-        CommandSpec::new("ec2autoscale", "configure the elastic fleet autoscaler")
-            .value_arg("min", "minimum fleet clusters")
-            .value_arg("max", "maximum fleet clusters")
-            .value_arg("csize", "nodes per fleet cluster")
-            .value_arg("maxcsize", "node cap for the elastic policy")
-            .value_arg("type", "EC2 instance type for fleet clusters")
-            .value_arg("policy", "depth | elastic | work")
-            .value_arg("bid", "spot bid strategy: ondemand | forecast+margin | capped")
-            .value_arg(
-                "target",
-                "work policy: drain the estimated backlog within this many seconds (default 3600)",
-            )
-            .switch_arg("spot", "buy fleet capacity on the spot market")
-            .switch_arg("ondemand", "buy fleet capacity on demand")
-            .exclusive(&["spot", "ondemand"]),
-        CommandSpec::new("ec2metrics", "deterministic metrics snapshot from the telemetry bus")
-            .value_arg("level", "set the recording level first: off | metrics | trace")
-            .switch_arg("json", "emit the snapshot as JSON instead of text")
-            .switch_arg("prom", "emit Prometheus-style exposition text")
-            .exclusive(&["json", "prom"]),
-        CommandSpec::new("ec2trace", "summarise or export a recorded JSONL telemetry trace")
-            .value_arg("file", "trace file to read (default: the session's -trace sink)")
-            .value_arg("chrome", "also write a Chrome trace-event JSON file to this path")
-            .switch_arg("json", "emit the summary as JSON instead of text"),
-        CommandSpec::new("mkproject", "create an example analytics project at the Analyst site")
-            .value_arg("projectdir", "project directory to create")
-            .value_arg("kind", "catopt | sweep")
-            .value_arg("seed", "dataset seed (default 7)"),
-        CommandSpec::new("batch", "run a file of p2rac commands (batch-mode execution)")
-            .value_arg("file", "command file, one command per line"),
-        CommandSpec::new("report", "show virtual-time, billing and workflow-span report"),
-        CommandSpec::new("desktoprun", "run a script locally on a Table-I desktop (comparison)")
-            .value_arg("desktop", "A | B")
-            .value_arg("projectdir", "project directory")
-            .value_arg("rscript", "script to execute")
-            .value_arg("threads", "real worker threads for the engine (default: all cores)")
-            .required_arg("runname", "name for this run"),
-    ]
+    domains().into_iter().flat_map(|d| d.specs()).collect()
+}
+
+/// The shared machine-readable output envelope:
+/// `{"command": <name>, "ok": true, "data": {…}}`.
+pub fn json_envelope(command: &str, data: Json) -> Json {
+    Json::from_pairs(vec![
+        ("command", Json::str(command)),
+        ("ok", Json::Bool(true)),
+        ("data", data),
+    ])
 }
 
 pub fn global_help() -> String {
@@ -365,672 +237,30 @@ fn run_batch(file: &str) -> Result<String> {
     Ok(out)
 }
 
+/// Route an already-parsed command to the domain that owns it.
+fn route(ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String> {
+    let Some(d) = domains().into_iter().find(|d| d.owns(cmd)) else {
+        bail!("unhandled command '{cmd}'");
+    };
+    d.run(ctx, cmd, p)
+}
+
 /// Execute one already-parsed command against a session.
 pub fn apply(s: &mut Session, cmd: &str, p: &ParsedArgs) -> Result<String> {
-    match cmd {
-        "ec2createinstance" => {
-            let name = s.create_instance(&CreateInstanceOpts {
-                iname: p.value("iname").map(str::to_string),
-                ebsvol: p.value("ebsvol").map(str::to_string),
-                snap: p.value("snap").map(str::to_string),
-                itype: p.value("type").map(str::to_string),
-                desc: p.value("desc").map(str::to_string),
-                spot: p.switch("spot"),
-                analyst: p.value("analyst").map(str::to_string),
-            })?;
-            let e = s.instances_cfg.get(&name).unwrap();
-            Ok(format!(
-                "created instance '{name}' ({}{}) dns={} volume={}",
-                e.instance_type,
-                if p.switch("spot") { ", spot" } else { "" },
-                e.public_dns,
-                e.volume_id.as_deref().unwrap_or("-")
-            ))
-        }
-        "ec2terminateinstance" => {
-            s.terminate_instance(p.value("iname"), p.switch("deletevol"))?;
-            Ok("instance terminated".into())
-        }
-        "ec2senddatatoinstance" => {
-            let rep = s.send_data_to_instance(p.value("iname"), project_dir(p))?;
-            Ok(format!(
-                "synchronised {} files ({} on the wire) in {}",
-                rep.files_examined,
-                humanfmt::bytes(rep.wire_bytes()),
-                humanfmt::secs(rep.elapsed_s)
-            ))
-        }
-        "ec2getresultsfrominstance" => {
-            let rep = s.get_results_from_instance(
-                p.value("iname"),
-                project_dir(p),
-                p.value("runname").unwrap(),
-            )?;
-            Ok(format!(
-                "fetched {} result files ({}) in {}",
-                rep.files_sent + rep.files_unchanged,
-                humanfmt::bytes(rep.wire_bytes()),
-                humanfmt::secs(rep.elapsed_s)
-            ))
-        }
-        "ec2runoninstance" => {
-            let rscript = pick_script(s, p)?;
-            s.threads = p.usize_value("threads")?;
-            let out = s.run_on_instance(
-                p.value("iname"),
-                project_dir(p),
-                &rscript,
-                p.value("runname").unwrap(),
-            )?;
-            Ok(format!(
-                "run complete in {} (virtual)\nsummary: {}",
-                humanfmt::secs(out.compute_s),
-                out.summary
-            ))
-        }
-        "ec2createcluster" => {
-            let name = s.create_cluster(&CreateClusterOpts {
-                cname: p.value("cname").map(str::to_string),
-                csize: p.usize_value("csize")?,
-                ebsvol: p.value("ebsvol").map(str::to_string),
-                snap: p.value("snap").map(str::to_string),
-                itype: p.value("type").map(str::to_string),
-                desc: p.value("desc").map(str::to_string),
-                spot: p.switch("spot"),
-                bid_centi_cents_hour: None,
-                analyst: p.value("analyst").map(str::to_string),
-            })?;
-            let e = s.clusters_cfg.get(&name).unwrap();
-            Ok(format!(
-                "created cluster '{name}': {} x {}{} (1 master + {} workers), volume={}",
-                e.size,
-                e.instance_type,
-                if p.switch("spot") { " spot" } else { "" },
-                e.worker_ids.len(),
-                e.volume_id.as_deref().unwrap_or("-")
-            ))
-        }
-        "ec2terminatecluster" => {
-            s.terminate_cluster(p.value("cname"), p.switch("deletevol"))?;
-            Ok("cluster terminated".into())
-        }
-        "ec2terminateall" => {
-            let none = !(p.switch("instances")
-                || p.switch("clusters")
-                || p.switch("ebsvolumes")
-                || p.switch("snapshots"));
-            let log = s.terminate_all(
-                p.switch("instances") || none,
-                p.switch("clusters") || none,
-                p.switch("ebsvolumes") || none,
-                p.switch("snapshots") || none,
-            )?;
-            Ok(log.join("\n"))
-        }
-        "ec2senddatatoclusternodes" => {
-            let reps = s.send_data_to_cluster_nodes(p.value("cname"), project_dir(p))?;
-            Ok(format!(
-                "synchronised project to {} nodes ({} each)",
-                reps.len(),
-                humanfmt::bytes(reps[0].wire_bytes())
-            ))
-        }
-        "ec2senddatatomaster" => {
-            let rep = s.send_data_to_master(p.value("cname"), project_dir(p))?;
-            Ok(format!(
-                "synchronised {} files to master ({}) in {}",
-                rep.files_examined,
-                humanfmt::bytes(rep.wire_bytes()),
-                humanfmt::secs(rep.elapsed_s)
-            ))
-        }
-        "ec2getresults" => {
-            let scope = if p.switch("fromworkers") {
-                ResultScope::FromWorkers
-            } else if p.switch("fromall") {
-                ResultScope::FromAll
-            } else {
-                ResultScope::FromMaster // default: scenario 1
-            };
-            let rep = s.get_results(
-                p.value("cname"),
-                project_dir(p),
-                p.value("runname").unwrap(),
-                scope,
-            )?;
-            Ok(format!(
-                "gathered {} result files ({}) in {}",
-                rep.files_sent + rep.files_unchanged,
-                humanfmt::bytes(rep.wire_bytes()),
-                humanfmt::secs(rep.elapsed_s)
-            ))
-        }
-        "ec2runoncluster" => {
-            let rscript = pick_script(s, p)?;
-            let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
-            s.threads = p.usize_value("threads")?;
-            let out = s.run_on_cluster(
-                p.value("cname"),
-                project_dir(p),
-                &rscript,
-                p.value("runname").unwrap(),
-                placement,
-            )?;
-            Ok(format!(
-                "run complete in {} (virtual, {placement:?})\nsummary: {}",
-                humanfmt::secs(out.compute_s),
-                out.summary
-            ))
-        }
-        "ec2resizecluster" => {
-            let size = p
-                .usize_value("csize")?
-                .ok_or_else(|| anyhow!("-csize is required"))?;
-            s.resize_cluster(p.value("cname"), size)?;
-            Ok(format!("cluster resized to {size} nodes"))
-        }
-        "ec2listinstances" => Ok(s.list_instances(p.switch("names")).join("\n")),
-        "ec2listclusters" => Ok(s.list_clusters(p.switch("names")).join("\n")),
-        "ec2listallresources" => {
-            let none = !(p.switch("instances")
-                || p.switch("ebsvols")
-                || p.switch("snapshots")
-                || p.switch("amis"));
-            Ok(s
-                .list_all_resources(
-                    p.switch("instances") || none,
-                    p.switch("ebsvols") || none,
-                    p.switch("snapshots") || none,
-                    p.switch("amis") || none,
-                )
-                .join("\n"))
-        }
-        "ec2snapshot" => {
-            let snap = s.snapshot_resource_volume(
-                p.value("iname"),
-                p.value("cname"),
-                p.value_or("desc", "manual snapshot"),
-            )?;
-            Ok(format!("created snapshot {snap}"))
-        }
-        "ec2lsobjects" => {
-            let lines = s.list_storage_objects(p.value("bucket"));
-            if lines.is_empty() {
-                Ok("no objects in the storage plane".into())
-            } else {
-                Ok(lines.join("\n"))
-            }
-        }
-        "ec2logintoinstance" => s.login_banner(p.value("iname"), None),
-        "ec2logintocluster" => {
-            let cname = p
-                .value("cname")
-                .map(str::to_string)
-                .or(s.platform.default_cluster.clone())
-                .ok_or_else(|| anyhow!("no -cname and no default cluster"))?;
-            s.login_banner(None, Some(&cname))
-        }
-        "ec2resourcelock" => {
-            let in_use = if p.switch("inuse") {
-                true
-            } else if p.switch("free") {
-                false
-            } else {
-                bail!("specify -free or -inuse");
-            };
-            if let Some(c) = p.value("cname") {
-                s.set_cluster_lock(c, in_use)?;
-            } else if let Some(i) = p.value("iname") {
-                s.set_instance_lock(i, in_use)?;
-            } else {
-                bail!("specify -iname or -cname");
-            }
-            Ok(format!("resource marked {}", if in_use { "inuse" } else { "free" }))
-        }
-        "mkproject" => {
-            let dir = project_dir(p).to_string();
-            let kind = p.value_or("kind", "sweep");
-            let seed = p
-                .value("seed")
-                .map(|v| v.parse::<u64>())
-                .transpose()
-                .map_err(|_| anyhow!("-seed must be an integer"))?
-                .unwrap_or(7);
-            mkproject(s, &dir, kind, seed)
-        }
-        "desktoprun" => {
-            let which = p.value_or("desktop", "A");
-            let desktops = table1_desktops();
-            let d = desktops
-                .iter()
-                .find(|d| d.name.ends_with(which))
-                .ok_or_else(|| anyhow!("desktop must be A or B"))?;
-            let rscript = pick_script(s, p)?;
-            s.threads = p.usize_value("threads")?;
-            let out = s.run_local(d, project_dir(p), &rscript, p.value("runname").unwrap())?;
-            Ok(format!(
-                "run complete on {} in {} (virtual)\nsummary: {}",
-                d.name,
-                humanfmt::secs(out.compute_s),
-                out.summary
-            ))
-        }
-        "ec2invoice" => {
-            let analyst = p.value("analyst").ok_or_else(|| {
-                anyhow!("-analyst is required (run `report` to see tenants with charges)")
-            })?;
-            let inv = s.cloud.ledger.invoice_for(analyst);
-            if s.cloud.telemetry.on() {
-                s.cloud.telemetry.emit(
-                    s.cloud.clock.now_s(),
-                    EventKind::Invoice,
-                    analyst,
-                    None,
-                    None,
-                    Json::from_pairs(vec![
-                        ("total_centi_cents", Json::num(inv.total_centi_cents() as f64)),
-                        ("lines", Json::num(inv.lines().len() as f64)),
-                    ]),
-                );
-            }
-            if p.switch("json") {
-                Ok(inv.to_json().to_string_pretty())
-            } else {
-                Ok(inv.lines().join("\n"))
-            }
-        }
-        "ec2metrics" => {
-            if let Some(lvl) = p.value("level") {
-                let level = match lvl {
-                    "off" => TelemetryLevel::Off,
-                    "metrics" => TelemetryLevel::Metrics,
-                    "trace" => TelemetryLevel::Trace,
-                    other => bail!("unknown telemetry level '{other}' (off | metrics | trace)"),
-                };
-                s.cloud.telemetry.set_level(level);
-            }
-            if p.switch("json") {
-                Ok(s.cloud.telemetry.snapshot_json().to_string_pretty())
-            } else if p.switch("prom") {
-                Ok(s.cloud.telemetry.prometheus_text())
-            } else {
-                Ok(s.cloud.telemetry.text_lines().join("\n"))
-            }
-        }
-        "ec2trace" => {
-            let path = match p.value("file") {
-                Some(f) => f.to_string(),
-                None => s.cloud.telemetry.trace_path().ok_or_else(|| {
-                    anyhow!(
-                        "-file is required (this session has no -trace sink; \
-                         record one with ec2genload -trace <path>)"
-                    )
-                })?,
-            };
-            let text = std::fs::read_to_string(&path)
-                .map_err(|e| anyhow!("cannot read trace '{path}': {e}"))?;
-            let summary = trace::TraceSummary::from_lines(text.lines())?;
-            if let Some(out) = p.value("chrome") {
-                let doc = trace::chrome_from_lines(text.lines())?;
-                std::fs::write(out, doc.to_string_pretty())
-                    .map_err(|e| anyhow!("cannot write '{out}': {e}"))?;
-                return Ok(format!(
-                    "wrote Chrome trace ({} events) to {out}\nopen it in chrome://tracing or Perfetto",
-                    summary.events
-                ));
-            }
-            if p.switch("json") {
-                Ok(summary.to_json().to_string_pretty())
-            } else {
-                Ok(summary.lines().join("\n"))
-            }
-        }
-        "report" => Ok(report(s)),
-        other => bail!("unhandled command '{other}'"),
-    }
+    route(CmdCtx { s, js: None, quotas: None, fns: None }, cmd, p)
 }
 
 /// Execute one command against a session and the persisted job
 /// scheduler: the queue/autoscaler/governance commands live here
 /// (plus the quota gate on `ec2createcluster` and the SLO rollup on
-/// `report`); everything else falls through to [`apply`].
+/// `report`); everything else behaves as under [`apply`].
 pub fn apply_with_jobs(
     s: &mut Session,
     js: &mut JobScheduler,
     cmd: &str,
     p: &ParsedArgs,
 ) -> Result<String> {
-    match cmd {
-        "ec2submitjob" => {
-            if let Some(path) = p.value("trace") {
-                s.cloud.telemetry.set_trace_file(path);
-            }
-            let rscript = pick_script(s, p)?;
-            let priority = Priority::parse(p.value_or("priority", "normal"))?;
-            let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
-            let resident = p.switch("resident");
-            let deadline_s = match p.value("deadline") {
-                Some(v) => Some(parse_deadline(v, s.cloud.clock.now_s())?),
-                None => None,
-            };
-            let id = js.admit(
-                s,
-                JobSpec {
-                    name: p.value("runname").unwrap().to_string(),
-                    projectdir: project_dir(p).to_string(),
-                    rscript,
-                    priority,
-                    placement,
-                    deadline_s,
-                },
-                resident,
-                p.value_or("analyst", ""),
-            )?;
-            Ok(format!(
-                "submitted {id} (priority {}{}{}, {} pending)",
-                priority.label(),
-                if resident { ", resident" } else { "" },
-                deadline_s
-                    .map(|d| format!(", deadline t={d:.0}s"))
-                    .unwrap_or_default(),
-                js.queue.pending()
-            ))
-        }
-        "ec2quota" => {
-            let Some(analyst) = p.value("analyst") else {
-                let lines = js.quotas.lines();
-                return Ok(if lines.is_empty() {
-                    "no tenant quotas set (every tenant is unlimited)".into()
-                } else {
-                    lines.join("\n")
-                });
-            };
-            if p.switch("clear") {
-                return Ok(match js.quotas.remove(analyst) {
-                    Some(_) => format!("cleared quota for tenant '{analyst}'"),
-                    None => format!("tenant '{analyst}' had no quota set"),
-                });
-            }
-            let mut q = js.quotas.get(analyst).cloned().unwrap_or_default();
-            if let Some(v) = p.usize_value("maxclusters")? {
-                q.max_clusters = Some(v);
-            }
-            if let Some(v) = p.value("maxcentihour") {
-                q.max_centihours = Some(v.parse::<u64>().map_err(|_| {
-                    anyhow!("-maxcentihour expects a whole number of centihours, got '{v}'")
-                })?);
-            }
-            if let Some(v) = p.usize_value("maxqueued")? {
-                q.max_queued = Some(v);
-            }
-            let summary = q.summary();
-            js.quotas.set(analyst, q);
-            Ok(format!("quota for tenant '{analyst}': {summary}"))
-        }
-        "ec2createcluster" => {
-            // Governance gate on the create path: a tenant at its
-            // cluster quota is refused before anything is launched
-            // (the fleet and the cloud stay untouched).
-            if let Some(analyst) = p.value("analyst") {
-                if let Some(limit) = js.quotas.get(analyst).and_then(|q| q.max_clusters) {
-                    let owned = s.clusters_owned_by(analyst).len();
-                    if owned >= limit {
-                        bail!(
-                            "tenant '{analyst}': cluster quota reached (limit {limit}, \
-                             currently owns {owned} cluster(s)); terminate one or raise \
-                             the limit with ec2quota -analyst {analyst} -maxclusters N"
-                        );
-                    }
-                }
-            }
-            apply(s, cmd, p)
-        }
-        "report" => {
-            let mut out = report(s);
-            let slo = js.slo_lines(s);
-            if !slo.is_empty() {
-                out.push_str(&slo.join("\n"));
-                out.push('\n');
-            }
-            Ok(out)
-        }
-        "ec2jobstatus" => match p.value("jobid") {
-            Some(v) => {
-                let n: u64 = v
-                    .trim_start_matches("job-")
-                    .parse()
-                    .map_err(|_| anyhow!("-jobid expects a number or job-N, got '{v}'"))?;
-                let j = js
-                    .queue
-                    .get(JobId(n))
-                    .ok_or_else(|| anyhow!("no such job 'job-{n}'"))?;
-                if p.switch("json") {
-                    let mut o = js.queue.job_json(JobId(n)).unwrap();
-                    if let Some(line) = js.deadline_status(s, j) {
-                        o.set("deadline_status", Json::str(line));
-                    }
-                    return Ok(o.to_string_pretty());
-                }
-                let deadline = js
-                    .deadline_status(s, j)
-                    .map(|line| format!("\n{line}"))
-                    .unwrap_or_default();
-                Ok(format!(
-                    "{} {}  progress={:.0}%  interruptions={}  retries={}  compute={}{}\nsummary: {}",
-                    j.id,
-                    j.state.label(),
-                    j.progress * 100.0,
-                    j.interruptions,
-                    j.retries,
-                    humanfmt::secs(j.compute_s),
-                    deadline,
-                    j.summary
-                ))
-            }
-            None => {
-                if p.switch("json") {
-                    let mut o = Json::obj();
-                    o.set(
-                        "jobs",
-                        Json::Arr(
-                            js.queue
-                                .jobs()
-                                .filter_map(|j| js.queue.job_json(j.id))
-                                .collect(),
-                        ),
-                    );
-                    o.set("pending", Json::num(js.queue.pending() as f64));
-                    o.set("running", Json::num(js.queue.running() as f64));
-                    return Ok(o.to_string_pretty());
-                }
-                let mut out = js.status();
-                out.extend(js.slo_lines(s));
-                Ok(out.join("\n"))
-            }
-        },
-        "ec2jobqueue" => {
-            let mut out = Vec::new();
-            let mut released: Vec<String> = Vec::new();
-            if p.switch("nofastpath") {
-                js.fast_path = false;
-                out.push("slice fast path disabled".to_string());
-            }
-            if let Some(n) = p.usize_value("ckptfull")? {
-                js.ckpt_full_every = n.max(1);
-                out.push(format!("full checkpoint every {} slice(s)", js.ckpt_full_every));
-            }
-            if p.switch("drain") {
-                js.run_until_idle(s)?;
-                out.push("queue drained".to_string());
-            }
-            if p.switch("shutdown") {
-                released = js.shutdown_fleet(s)?;
-                out.push(format!("fleet released: [{}]", released.join(", ")));
-            }
-            if p.switch("json") {
-                let mut o = Json::obj();
-                o.set("pending", Json::num(js.queue.pending() as f64));
-                o.set("running", Json::num(js.queue.running() as f64));
-                o.set("all_done", Json::Bool(js.queue.all_done()));
-                o.set("ordering", Json::str(js.queue.ordering.label()));
-                o.set("fleet_clusters", Json::num(js.fleet.len() as f64));
-                o.set("drained", Json::Bool(p.switch("drain")));
-                o.set("released", Json::arr_str(released));
-                let tenants: Vec<Json> = js
-                    .queue
-                    .tenant_loads()
-                    .into_iter()
-                    .map(|(analyst, load)| {
-                        Json::from_pairs(vec![
-                            ("analyst", Json::str(analyst)),
-                            ("waiting", Json::num(load.waiting as f64)),
-                            ("running", Json::num(load.running as f64)),
-                            ("jobs", Json::num(load.jobs as f64)),
-                        ])
-                    })
-                    .collect();
-                o.set("tenants", Json::Arr(tenants));
-                if p.switch("profile") {
-                    o.set("profile", js.profiler.to_json());
-                }
-                return Ok(o.to_string_pretty());
-            }
-            out.extend(js.status());
-            if p.switch("profile") {
-                let lines = js.profiler.lines();
-                if lines.is_empty() {
-                    out.push("no scheduler phases profiled this invocation".to_string());
-                } else {
-                    out.extend(lines);
-                }
-            }
-            Ok(out.join("\n"))
-        }
-        "ec2genload" => {
-            if let Some(path) = p.value("trace") {
-                s.cloud.telemetry.set_trace_file(path);
-            }
-            let cfg = crate::jobs::genload::GenLoadConfig {
-                jobs: p.usize_value("jobs")?.unwrap_or(200),
-                tenants: p.usize_value("tenants")?.unwrap_or(8).max(1),
-                seed: match p.value("seed") {
-                    Some(v) => v
-                        .parse::<u64>()
-                        .map_err(|_| anyhow!("-seed expects a number, got '{v}'"))?,
-                    None => 7,
-                },
-                ..Default::default()
-            };
-            let generated = crate::jobs::genload::generate(&cfg);
-            let now = s.cloud.clock.now_s();
-            let mut projects: std::collections::BTreeSet<u64> = std::collections::BTreeSet::new();
-            let (mut submitted, mut rejected) = (0usize, 0usize);
-            for (i, g) in generated.iter().enumerate() {
-                // The engine derives a job's work units from its sweep
-                // config: n_jobs = units * tile. Cap per-job units so a
-                // heavy-tailed outlier cannot stall an interactive CLI
-                // session (the scale bench runs uncapped workloads).
-                let units = g.units.min(64);
-                let dir = format!("genload/u{units}");
-                if projects.insert(units) {
-                    let n_jobs = units as usize * crate::analytics::script::RUST_SWEEP_TILE;
-                    s.analyst.write(
-                        &format!("{dir}/sweep.json"),
-                        format!(
-                            r#"{{"type":"mc_sweep","n_jobs":{n_jobs},"seed":{}}}"#,
-                            cfg.seed
-                        )
-                        .into_bytes(),
-                    );
-                }
-                let spec = JobSpec {
-                    name: format!("gen-{}-{i}", cfg.seed),
-                    projectdir: dir,
-                    rscript: "sweep.json".to_string(),
-                    priority: g.priority,
-                    placement: Placement::ByNode,
-                    // Arrivals collapse to "now"; deadlines keep their
-                    // slack relative to the generated arrival.
-                    deadline_s: g.deadline_s.map(|d| now + (d - g.arrival_s)),
-                };
-                match js.admit(s, spec, false, &g.tenant) {
-                    Ok(_) => submitted += 1,
-                    Err(_) => rejected += 1,
-                }
-            }
-            if p.switch("json") {
-                let mut o = Json::obj();
-                o.set("generated", Json::num(generated.len() as f64));
-                o.set("submitted", Json::num(submitted as f64));
-                o.set("rejected", Json::num(rejected as f64));
-                o.set("tenants", Json::num(cfg.tenants as f64));
-                o.set("seed", Json::num(cfg.seed as f64));
-                o.set("pending", Json::num(js.queue.pending() as f64));
-                return Ok(o.to_string_pretty());
-            }
-            Ok(format!(
-                "generated {} jobs across {} tenants (seed {}): {} submitted, {} rejected \
-                 by quota, {} pending",
-                generated.len(),
-                cfg.tenants,
-                cfg.seed,
-                submitted,
-                rejected,
-                js.queue.pending()
-            ))
-        }
-        "ec2autoscale" => {
-            let cfg = &mut js.autoscaler.cfg;
-            if let Some(v) = p.usize_value("min")? {
-                cfg.min_clusters = v;
-            }
-            if let Some(v) = p.usize_value("max")? {
-                cfg.max_clusters = v;
-            }
-            if let Some(v) = p.usize_value("csize")? {
-                cfg.nodes_per_cluster = v.max(2);
-            }
-            if let Some(v) = p.usize_value("maxcsize")? {
-                cfg.max_nodes_per_cluster = v.max(2);
-            }
-            if let Some(t) = p.value("type") {
-                cfg.itype = t.to_string();
-            }
-            if let Some(pol) = p.value("policy") {
-                cfg.policy = ScalePolicy::parse(pol)?;
-            }
-            if let Some(b) = p.value("bid") {
-                cfg.bid = BidStrategy::parse(b)?;
-            }
-            if let Some(t) = p.value("target") {
-                cfg.work_target_s = t
-                    .parse::<f64>()
-                    .ok()
-                    .filter(|v| v.is_finite() && *v >= 1.0)
-                    .ok_or_else(|| anyhow!("-target expects seconds >= 1, got '{t}'"))?;
-            }
-            if p.switch("spot") {
-                cfg.spot = true;
-            }
-            if p.switch("ondemand") {
-                cfg.spot = false;
-            }
-            Ok(format!(
-                "autoscaler: clusters [{}..{}] x {} nodes (elastic cap {}), type {}, {}, \
-                 policy {} (target {:.0}s), bid {}",
-                cfg.min_clusters,
-                cfg.max_clusters,
-                cfg.nodes_per_cluster,
-                cfg.max_nodes_per_cluster,
-                cfg.itype,
-                if cfg.spot { "spot" } else { "on-demand" },
-                cfg.policy.label(),
-                cfg.work_target_s,
-                cfg.bid.label()
-            ))
-        }
-        other => apply(s, other, p),
-    }
+    route(CmdCtx { s, js: Some(js), quotas: None, fns: None }, cmd, p)
 }
 
 /// Execute one serverless-tier command (`ec2invoke` / `ec2fnpool`)
@@ -1043,113 +273,13 @@ pub fn apply_with_fns(
     cmd: &str,
     p: &ParsedArgs,
 ) -> Result<String> {
-    use crate::jobs::{FnInvokeSpec, KeepalivePolicy};
-    match cmd {
-        "ec2invoke" => {
-            let fname = p.value("fname").unwrap();
-            let tenant = p.value_or("analyst", "");
-            let dir = project_dir(p);
-            let (digest, bytes) = crate::jobs::functions::project_fingerprint(s, dir)
-                .ok_or_else(|| {
-                    anyhow!("no files under project directory '{dir}' — create one with mkproject")
-                })?;
-            let mem_mb = p.usize_value("mem")?.unwrap_or(512).max(1) as u64;
-            let duration_ms = p.usize_value("ms")?.unwrap_or(200).max(1) as u64;
-            let repeat = p.usize_value("repeat")?.unwrap_or(1).max(1);
-            let gap_s: f64 = p
-                .value_or("gap", "60")
-                .parse()
-                .map_err(|_| anyhow!("-gap expects seconds, got '{}'", p.value_or("gap", "60")))?;
-            if gap_s < 0.0 {
-                bail!("-gap must be non-negative");
-            }
-            let spec = FnInvokeSpec {
-                fname: fname.to_string(),
-                tenant: tenant.to_string(),
-                digest,
-                bytes,
-                mem_mb,
-                duration_ms,
-            };
-            let mut outs = Vec::new();
-            for i in 0..repeat {
-                if i > 0 {
-                    s.cloud.clock.advance(gap_s);
-                }
-                outs.push(fns.invoke(s, quotas, &spec)?);
-            }
-            if p.switch("json") {
-                let arr: Vec<Json> = outs
-                    .iter()
-                    .map(|o| {
-                        Json::from_pairs(vec![
-                            ("container", Json::str(&format!("c-{}", o.container))),
-                            ("cold", Json::Bool(o.cold)),
-                            ("latency_s", Json::num(o.latency_s)),
-                            ("billed_cc", Json::num(o.billed_cc as f64)),
-                        ])
-                    })
-                    .collect();
-                let mut o = fns.status_json();
-                o.set("outcomes", Json::Arr(arr));
-                return Ok(o.to_string_pretty());
-            }
-            let mut lines: Vec<String> = outs
-                .iter()
-                .map(|o| {
-                    format!(
-                        "invoked '{fname}' on c-{} ({}, {:.2}s latency, {} cc)",
-                        o.container,
-                        if o.cold { "cold" } else { "warm" },
-                        o.latency_s,
-                        o.billed_cc,
-                    )
-                })
-                .collect();
-            lines.push(format!(
-                "pool: {} container(s) ({} warm / {} busy), lifetime cold fraction {:.1}%",
-                fns.pool.len(),
-                fns.warm_count(),
-                fns.busy_count(),
-                fns.cold_fraction() * 100.0,
-            ));
-            Ok(lines.join("\n"))
-        }
-        "ec2fnpool" => {
-            if p.value("policy").is_some() || p.value("keepalive").is_some() {
-                let kind = p.value_or("policy", fns.policy.label()).to_string();
-                let base: f64 = match p.value("keepalive") {
-                    Some(v) => v
-                        .parse()
-                        .map_err(|_| anyhow!("-keepalive expects seconds, got '{v}'"))?,
-                    None => fns.policy.base_s(),
-                };
-                if base <= 0.0 {
-                    bail!("-keepalive must be positive");
-                }
-                fns.policy = KeepalivePolicy::parse(&kind, base)?;
-            }
-            if let Some(mb) = p.usize_value("maxidlemb")? {
-                fns.autoscaler.max_idle_mb = mb as u64;
-            }
-            if p.switch("drain") {
-                fns.drain(s, quotas);
-            } else {
-                fns.settle(s, quotas);
-            }
-            if p.switch("flush") {
-                fns.flush(s);
-            }
-            if p.switch("json") {
-                return Ok(fns.status_json().to_string_pretty());
-            }
-            Ok(fns.status_lines().join("\n"))
-        }
-        other => bail!("'{other}' is not a serverless-tier command"),
+    if !is_fn_command(cmd) {
+        bail!("'{cmd}' is not a serverless-tier command");
     }
+    route(CmdCtx { s, js: None, quotas: Some(quotas), fns: Some(fns) }, cmd, p)
 }
 
-fn project_dir<'a>(p: &'a ParsedArgs) -> &'a str {
+pub(super) fn project_dir<'a>(p: &'a ParsedArgs) -> &'a str {
     // Paper: "should the project directory not be specified then the
     // current working directory at the Analyst site is used".
     p.value_or("projectdir", "current_project")
@@ -1157,7 +287,7 @@ fn project_dir<'a>(p: &'a ParsedArgs) -> &'a str {
 
 /// When `-rscript` is omitted the Analyst is shown the candidates
 /// (paper: "the user is prompted to select from a list").
-fn pick_script(s: &Session, p: &ParsedArgs) -> Result<String> {
+pub(super) fn pick_script(s: &Session, p: &ParsedArgs) -> Result<String> {
     if let Some(r) = p.value("rscript") {
         return Ok(r.to_string());
     }
@@ -1261,6 +391,7 @@ mod tests {
     use super::*;
     use crate::coordinator::MockEngine;
     use crate::simcloud::SimParams;
+    use crate::telemetry::EventKind;
 
     fn session() -> Session {
         Session::new(SimParams::default(), Box::new(MockEngine::new(100.0)))
@@ -1378,6 +509,18 @@ mod tests {
             "ec2fnpool",
         ] {
             assert!(h.contains(c), "help missing {c}");
+        }
+    }
+
+    #[test]
+    fn every_command_is_owned_by_exactly_one_domain() {
+        for c in registry() {
+            let owners: Vec<&'static str> = domains()
+                .into_iter()
+                .filter(|d| d.owns(c.name))
+                .map(|d| d.domain())
+                .collect();
+            assert_eq!(owners.len(), 1, "'{}' owned by {owners:?}", c.name);
         }
     }
 
@@ -1596,6 +739,42 @@ mod tests {
         let out = run_jobs(&mut s, &mut js, "ec2jobqueue", &["-shutdown"]).unwrap();
         assert!(out.contains("fleet released"), "{out}");
         assert!(s.cloud.live_instances().is_empty());
+    }
+
+    #[test]
+    fn jobstatus_and_jobqueue_json_use_the_envelope() {
+        let mut s = session();
+        run(&mut s, "mkproject", &["-projectdir", "proj", "-kind", "sweep"]).unwrap();
+        let mut js = JobScheduler::new(crate::jobs::AutoscalerConfig::default());
+        run_jobs(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &["-projectdir", "proj", "-rscript", "sweep.json", "-runname", "r1"],
+        )
+        .unwrap();
+        // Stable envelope keys: command, ok, data.
+        let out = run_jobs(&mut s, &mut js, "ec2jobstatus", &["-json"]).unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.opt_str("command").as_deref(), Some("ec2jobstatus"));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.path(&["data", "pending"]).and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            j.path(&["data", "jobs"]).and_then(Json::as_arr).map(|a| a.len()),
+            Some(1)
+        );
+        let out = run_jobs(&mut s, &mut js, "ec2jobstatus", &["-jobid", "1", "-json"]).unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.opt_str("command").as_deref(), Some("ec2jobstatus"));
+        assert_eq!(j.path(&["data", "id"]).and_then(Json::as_u64), Some(1));
+        let out = run_jobs(&mut s, &mut js, "ec2jobqueue", &["-json"]).unwrap();
+        let j = Json::parse(&out).unwrap();
+        assert_eq!(j.opt_str("command").as_deref(), Some("ec2jobqueue"));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.path(&["data", "pending"]).and_then(Json::as_u64), Some(1));
+        assert_eq!(j.path(&["data", "data_aware"]).and_then(Json::as_bool), Some(true));
+        assert_eq!(j.path(&["data", "dag", "releases"]).and_then(Json::as_u64), Some(0));
+        assert_eq!(j.path(&["data", "dag", "dedup_skips"]).and_then(Json::as_u64), Some(0));
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Data-plane domain: move projects and results between the Analyst
+//! site, cloud resources and the storage plane (paper §3.2.1), and
+//! seed example projects. `ec2getresults -froms3` is the DAG data
+//! plane's Analyst-facing exit: stage outputs published to the
+//! results bucket are fetched over the metered WAN.
+
+use super::commands::{mkproject, project_dir, CmdCtx, Command};
+use crate::coordinator::ResultScope;
+use crate::jobs::{local_results_dir, RESULTS_BUCKET};
+use crate::simcloud::Link;
+use crate::util::argparse::{CommandSpec, ParsedArgs};
+use crate::util::humanfmt;
+use anyhow::{anyhow, bail, Result};
+
+/// The data-plane command domain.
+pub struct Data;
+
+impl Command for Data {
+    fn domain(&self) -> &'static str {
+        "data"
+    }
+
+    fn specs(&self) -> Vec<CommandSpec> {
+        vec![
+            CommandSpec::new("ec2senddatatoinstance", "synchronise a project directory onto an instance")
+                .value_arg("iname", "target instance")
+                .value_arg("projectdir", "source project directory at the Analyst site"),
+            CommandSpec::new("ec2getresultsfrominstance", "fetch results of a run from an instance")
+                .value_arg("iname", "source instance")
+                .value_arg("projectdir", "project directory at the Analyst site")
+                .required_arg("runname", "name of the run whose results to gather"),
+            CommandSpec::new("ec2senddatatoclusternodes", "synchronise a project onto every node of a cluster")
+                .value_arg("cname", "target cluster")
+                .value_arg("projectdir", "source project directory"),
+            CommandSpec::new("ec2senddatatomaster", "synchronise a project onto the master instance only")
+                .value_arg("cname", "target cluster")
+                .value_arg("projectdir", "source project directory"),
+            CommandSpec::new("ec2getresults", "gather results from a cluster or the S3 results bucket")
+                .value_arg("cname", "source cluster")
+                .value_arg("projectdir", "project directory")
+                .value_arg("jobid", "with -froms3: job whose published outputs to fetch (e.g. 3 or job-3)")
+                .required_arg("runname", "run whose results to gather")
+                .switch_arg("frommaster", "scenario 1: results aggregated on the master")
+                .switch_arg("fromworkers", "scenario 2: results on the workers")
+                .switch_arg("fromall", "scenario 3: results on master and workers")
+                .switch_arg("froms3", "fetch a DAG stage's outputs from the S3 results bucket")
+                .exclusive(&["frommaster", "fromworkers", "fromall", "froms3"]),
+            CommandSpec::new("ec2lsobjects", "list the storage plane's objects with content digests")
+                .value_arg("bucket", "bucket to list (default: all buckets)"),
+            CommandSpec::new("mkproject", "create an example analytics project at the Analyst site")
+                .value_arg("projectdir", "project directory to create")
+                .value_arg("kind", "catopt | sweep")
+                .value_arg("seed", "dataset seed (default 7)"),
+        ]
+    }
+
+    fn run(&self, ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String> {
+        let CmdCtx { s, .. } = ctx;
+        match cmd {
+            "ec2senddatatoinstance" => {
+                let rep = s.send_data_to_instance(p.value("iname"), project_dir(p))?;
+                Ok(format!(
+                    "synchronised {} files ({} on the wire) in {}",
+                    rep.files_examined,
+                    humanfmt::bytes(rep.wire_bytes()),
+                    humanfmt::secs(rep.elapsed_s)
+                ))
+            }
+            "ec2getresultsfrominstance" => {
+                let rep = s.get_results_from_instance(
+                    p.value("iname"),
+                    project_dir(p),
+                    p.value("runname").unwrap(),
+                )?;
+                Ok(format!(
+                    "fetched {} result files ({}) in {}",
+                    rep.files_sent + rep.files_unchanged,
+                    humanfmt::bytes(rep.wire_bytes()),
+                    humanfmt::secs(rep.elapsed_s)
+                ))
+            }
+            "ec2senddatatoclusternodes" => {
+                let reps = s.send_data_to_cluster_nodes(p.value("cname"), project_dir(p))?;
+                Ok(format!(
+                    "synchronised project to {} nodes ({} each)",
+                    reps.len(),
+                    humanfmt::bytes(reps[0].wire_bytes())
+                ))
+            }
+            "ec2senddatatomaster" => {
+                let rep = s.send_data_to_master(p.value("cname"), project_dir(p))?;
+                Ok(format!(
+                    "synchronised {} files to master ({}) in {}",
+                    rep.files_examined,
+                    humanfmt::bytes(rep.wire_bytes()),
+                    humanfmt::secs(rep.elapsed_s)
+                ))
+            }
+            "ec2getresults" => {
+                if p.switch("froms3") {
+                    return results_from_s3(s, p);
+                }
+                let scope = if p.switch("fromworkers") {
+                    ResultScope::FromWorkers
+                } else if p.switch("fromall") {
+                    ResultScope::FromAll
+                } else {
+                    ResultScope::FromMaster // default: scenario 1
+                };
+                let rep = s.get_results(
+                    p.value("cname"),
+                    project_dir(p),
+                    p.value("runname").unwrap(),
+                    scope,
+                )?;
+                Ok(format!(
+                    "gathered {} result files ({}) in {}",
+                    rep.files_sent + rep.files_unchanged,
+                    humanfmt::bytes(rep.wire_bytes()),
+                    humanfmt::secs(rep.elapsed_s)
+                ))
+            }
+            "ec2lsobjects" => {
+                let lines = s.list_storage_objects(p.value("bucket"));
+                if lines.is_empty() {
+                    Ok("no objects in the storage plane".into())
+                } else {
+                    Ok(lines.join("\n"))
+                }
+            }
+            "mkproject" => {
+                let dir = project_dir(p).to_string();
+                let kind = p.value_or("kind", "sweep");
+                let seed = p
+                    .value("seed")
+                    .map(|v| v.parse::<u64>())
+                    .transpose()
+                    .map_err(|_| anyhow!("-seed must be an integer"))?
+                    .unwrap_or(7);
+                mkproject(s, &dir, kind, seed)
+            }
+            other => bail!("unhandled command '{other}'"),
+        }
+    }
+}
+
+/// `ec2getresults -froms3 -jobid N`: fetch a completed DAG stage's
+/// published outputs from the first-class results bucket to
+/// `<projectdir>_results/<runname>/` at the Analyst site. The fetch is
+/// a real WAN transfer (per-object GET + metered bytes) — dependent
+/// *stages* consume the same objects over the producing cluster's LAN,
+/// which is exactly the asymmetry the data-aware bench measures.
+fn results_from_s3(s: &mut crate::coordinator::Session, p: &ParsedArgs) -> Result<String> {
+    let v = p.value("jobid").ok_or_else(|| {
+        anyhow!("-froms3 needs -jobid (stage outputs are keyed job-N/<file> in the results bucket)")
+    })?;
+    let n: u64 = v
+        .trim_start_matches("job-")
+        .parse()
+        .map_err(|_| anyhow!("-jobid expects a number or job-N, got '{v}'"))?;
+    let prefix = format!("job-{n}/");
+    let keys = s.cloud.s3.list(RESULTS_BUCKET, &prefix);
+    if keys.is_empty() {
+        bail!(
+            "no objects under s3://{RESULTS_BUCKET}/{prefix} — the stage may not have \
+             completed yet, have no dependents (only stages with dependents publish), \
+             or data-aware placement is off (ec2jobqueue -nodataaware)"
+        );
+    }
+    let local = format!(
+        "{}/{}",
+        local_results_dir(project_dir(p)),
+        p.value("runname").unwrap()
+    );
+    let t0 = s.cloud.clock.now_s();
+    let mut total: u64 = 0;
+    for key in &keys {
+        let data = s
+            .cloud
+            .s3_get(RESULTS_BUCKET, key, Link::Wan)
+            .map_err(|e| anyhow!("{e}"))?;
+        total += data.len() as u64;
+        let rel = key.strip_prefix(&prefix).unwrap_or(key);
+        s.analyst.write(&format!("{local}/{rel}"), data);
+    }
+    Ok(format!(
+        "fetched {} result file(s) ({}) from s3://{RESULTS_BUCKET}/{prefix} in {}",
+        keys.len(),
+        humanfmt::bytes(total),
+        humanfmt::secs(s.cloud.clock.now_s() - t0)
+    ))
+}

@@ -1,0 +1,152 @@
+//! Serverless-tier domain: function invocation on the warm-container
+//! pool and pool inspection/configuration. These commands run against
+//! the persisted function platform plus a read-only view of the
+//! tenant quota book (the fn tier enforces but never edits quotas).
+
+use super::commands::{project_dir, CmdCtx, Command};
+use crate::jobs::{FnInvokeSpec, KeepalivePolicy};
+use crate::util::argparse::{CommandSpec, ParsedArgs};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// The serverless function-tier command domain.
+pub struct Functions;
+
+impl Command for Functions {
+    fn domain(&self) -> &'static str {
+        "functions"
+    }
+
+    fn specs(&self) -> Vec<CommandSpec> {
+        vec![
+            CommandSpec::new("ec2invoke", "invoke a function on the serverless warm-container tier")
+                .required_arg("fname", "function name (unique per tenant)")
+                .value_arg("analyst", "tenant id the invocation bills and counts quota against")
+                .value_arg("projectdir", "project directory whose content digest keys the warm pool")
+                .value_arg("mem", "container memory in MB (default 512)")
+                .value_arg("ms", "execution time in milliseconds (default 200)")
+                .value_arg("repeat", "invoke this many times back to back (default 1)")
+                .value_arg("gap", "virtual seconds between repeated invocations (default 60)")
+                .switch_arg("json", "emit the outcome(s) as JSON instead of text"),
+            CommandSpec::new("ec2fnpool", "inspect or configure the serverless container pool")
+                .value_arg("policy", "keepalive policy: fixed | hybrid (adaptive per-function histogram)")
+                .value_arg("keepalive", "base keepalive window in seconds (fixed value / hybrid fallback)")
+                .value_arg("maxidlemb", "autoscaler idle-memory budget in MB (0 keeps nothing idle)")
+                .switch_arg("drain", "advance the clock until every running invocation completes")
+                .switch_arg("flush", "evict every idle container now (bills their idle memory)")
+                .switch_arg("json", "emit pool status as JSON instead of text"),
+        ]
+    }
+
+    fn run(&self, ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String> {
+        let CmdCtx { s, quotas, fns, .. } = ctx;
+        // Without the loaded platform (plain `apply`) these commands
+        // are unavailable, exactly as before the split.
+        let (Some(quotas), Some(fns)) = (quotas, fns) else {
+            bail!("unhandled command '{cmd}'");
+        };
+        match cmd {
+            "ec2invoke" => {
+                let fname = p.value("fname").unwrap();
+                let tenant = p.value_or("analyst", "");
+                let dir = project_dir(p);
+                let (digest, bytes) = crate::jobs::functions::project_fingerprint(s, dir)
+                    .ok_or_else(|| {
+                        anyhow!("no files under project directory '{dir}' — create one with mkproject")
+                    })?;
+                let mem_mb = p.usize_value("mem")?.unwrap_or(512).max(1) as u64;
+                let duration_ms = p.usize_value("ms")?.unwrap_or(200).max(1) as u64;
+                let repeat = p.usize_value("repeat")?.unwrap_or(1).max(1);
+                let gap_s: f64 = p
+                    .value_or("gap", "60")
+                    .parse()
+                    .map_err(|_| anyhow!("-gap expects seconds, got '{}'", p.value_or("gap", "60")))?;
+                if gap_s < 0.0 {
+                    bail!("-gap must be non-negative");
+                }
+                let spec = FnInvokeSpec {
+                    fname: fname.to_string(),
+                    tenant: tenant.to_string(),
+                    digest,
+                    bytes,
+                    mem_mb,
+                    duration_ms,
+                };
+                let mut outs = Vec::new();
+                for i in 0..repeat {
+                    if i > 0 {
+                        s.cloud.clock.advance(gap_s);
+                    }
+                    outs.push(fns.invoke(s, quotas, &spec)?);
+                }
+                if p.switch("json") {
+                    let arr: Vec<Json> = outs
+                        .iter()
+                        .map(|o| {
+                            Json::from_pairs(vec![
+                                ("container", Json::str(&format!("c-{}", o.container))),
+                                ("cold", Json::Bool(o.cold)),
+                                ("latency_s", Json::num(o.latency_s)),
+                                ("billed_cc", Json::num(o.billed_cc as f64)),
+                            ])
+                        })
+                        .collect();
+                    let mut o = fns.status_json();
+                    o.set("outcomes", Json::Arr(arr));
+                    return Ok(o.to_string_pretty());
+                }
+                let mut lines: Vec<String> = outs
+                    .iter()
+                    .map(|o| {
+                        format!(
+                            "invoked '{fname}' on c-{} ({}, {:.2}s latency, {} cc)",
+                            o.container,
+                            if o.cold { "cold" } else { "warm" },
+                            o.latency_s,
+                            o.billed_cc,
+                        )
+                    })
+                    .collect();
+                lines.push(format!(
+                    "pool: {} container(s) ({} warm / {} busy), lifetime cold fraction {:.1}%",
+                    fns.pool.len(),
+                    fns.warm_count(),
+                    fns.busy_count(),
+                    fns.cold_fraction() * 100.0,
+                ));
+                Ok(lines.join("\n"))
+            }
+            "ec2fnpool" => {
+                if p.value("policy").is_some() || p.value("keepalive").is_some() {
+                    let kind = p.value_or("policy", fns.policy.label()).to_string();
+                    let base: f64 = match p.value("keepalive") {
+                        Some(v) => v
+                            .parse()
+                            .map_err(|_| anyhow!("-keepalive expects seconds, got '{v}'"))?,
+                        None => fns.policy.base_s(),
+                    };
+                    if base <= 0.0 {
+                        bail!("-keepalive must be positive");
+                    }
+                    fns.policy = KeepalivePolicy::parse(&kind, base)?;
+                }
+                if let Some(mb) = p.usize_value("maxidlemb")? {
+                    fns.autoscaler.max_idle_mb = mb as u64;
+                }
+                if p.switch("drain") {
+                    fns.drain(s, quotas);
+                } else {
+                    fns.settle(s, quotas);
+                }
+                if p.switch("flush") {
+                    fns.flush(s);
+                }
+                if p.switch("json") {
+                    return Ok(fns.status_json().to_string_pretty());
+                }
+                Ok(fns.status_lines().join("\n"))
+            }
+            other => bail!("unhandled command '{other}'"),
+        }
+    }
+}

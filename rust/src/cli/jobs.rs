@@ -1,0 +1,645 @@
+//! Jobs domain: script execution, the elastic job queue, DAG
+//! workflows, the autoscaler and per-tenant governance. The legacy
+//! `ec2submitjob` flags are a thin parse layer over
+//! [`crate::jobs::JobSpecBuilder`]; `-after` and `-specfile` grow the
+//! same command into the DAG workflow surface (stages admitted Held
+//! until their parents complete — see `jobs::dag`).
+
+use std::collections::BTreeMap;
+
+use super::commands::{json_envelope, pick_script, project_dir, report, CmdCtx, Command};
+use crate::coordinator::{table1_desktops, Placement, Session};
+use crate::jobs::{
+    parse_deadline, BidStrategy, JobId, JobScheduler, JobSpecBuilder, JobState, Priority,
+    ScalePolicy, WorkflowSpec,
+};
+use crate::util::argparse::{CommandSpec, ParsedArgs};
+use crate::util::humanfmt;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// The jobs / execution command domain.
+pub struct Jobs;
+
+impl Command for Jobs {
+    fn domain(&self) -> &'static str {
+        "jobs"
+    }
+
+    fn specs(&self) -> Vec<CommandSpec> {
+        vec![
+            CommandSpec::new("ec2runoninstance", "execute a script on an instance (locks it)")
+                .value_arg("iname", "target instance")
+                .value_arg("projectdir", "project directory")
+                .value_arg("rscript", "script to execute from the project directory")
+                .value_arg("threads", "real worker threads for the engine (default: all cores)")
+                .required_arg("runname", "name for this run"),
+            CommandSpec::new("ec2runoncluster", "execute a script on a cluster (locks it)")
+                .value_arg("cname", "target cluster")
+                .value_arg("projectdir", "project directory")
+                .value_arg("rscript", "script to execute")
+                .value_arg("threads", "real worker threads for the engine (default: all cores)")
+                .required_arg("runname", "name for this run")
+                .switch_arg("bynode", "round-robin slave placement (default)")
+                .switch_arg("byslot", "fill each node's cores before the next")
+                .exclusive(&["bynode", "byslot"]),
+            CommandSpec::new("ec2submitjob", "queue an analytics job (or a workflow DAG) for the elastic fleet")
+                .value_arg("projectdir", "project directory at the Analyst site")
+                .value_arg("rscript", "script to execute from the project directory")
+                .value_arg("priority", "low | normal | high (default normal)")
+                .value_arg("analyst", "tenant id the job's charges are attributed to")
+                .value_arg(
+                    "deadline",
+                    "complete-by time: seconds from now, or RFC 3339 (virtual t=0 is 2012-01-01T00:00:00Z)",
+                )
+                .value_arg("runname", "name for this job's results (required without -specfile)")
+                .value_arg(
+                    "after",
+                    "parent job ids this job depends on (e.g. 2,5 or job-2,job-5); held until they complete",
+                )
+                .value_arg("specfile", "workflow JSON describing a whole stage graph to submit")
+                .switch_arg("bynode", "round-robin slave placement (default)")
+                .switch_arg("byslot", "fill each node's cores before the next")
+                .switch_arg(
+                    "resident",
+                    "keep checkpoints cluster-side (EBS+S3+snapshot); resume pays LAN, not WAN",
+                )
+                .value_arg("trace", "append JSONL telemetry events to this file (raises level to trace)")
+                .exclusive(&["bynode", "byslot"])
+                .exclusive(&["after", "specfile"])
+                .exclusive(&["runname", "specfile"]),
+            CommandSpec::new("ec2jobstatus", "show one job (or every job) in the queue")
+                .value_arg("jobid", "job id (e.g. 3 or job-3; omit for all)")
+                .switch_arg("json", "emit machine-readable JSON instead of text"),
+            CommandSpec::new("ec2jobqueue", "inspect or drain the job queue")
+                .switch_arg("drain", "run the scheduler until every job completes")
+                .switch_arg("shutdown", "terminate the fleet and bill its usage")
+                .switch_arg("json", "emit queue depth and per-tenant load as JSON")
+                .switch_arg("profile", "show wall-clock per scheduler phase for this invocation")
+                .switch_arg("nofastpath", "disable the slice fast path (work cache + delta checkpoints)")
+                .switch_arg("nodataaware", "disable data-aware DAG placement (dependents re-stage over the WAN)")
+                .value_arg("ckptfull", "ship a full checkpoint every N slices, deltas between (default 8)"),
+            CommandSpec::new("ec2genload", "submit a synthetic multi-tenant workload to the queue")
+                .value_arg("jobs", "number of jobs to generate (default 200)")
+                .value_arg("tenants", "number of distinct tenants (default 8)")
+                .value_arg("seed", "workload seed (default 7)")
+                .value_arg("trace", "append JSONL telemetry events to this file (raises level to trace)")
+                .switch_arg("json", "emit a summary of the generated workload as JSON"),
+            CommandSpec::new("ec2autoscale", "configure the elastic fleet autoscaler")
+                .value_arg("min", "minimum fleet clusters")
+                .value_arg("max", "maximum fleet clusters")
+                .value_arg("csize", "nodes per fleet cluster")
+                .value_arg("maxcsize", "node cap for the elastic policy")
+                .value_arg("type", "EC2 instance type for fleet clusters")
+                .value_arg("policy", "depth | elastic | work")
+                .value_arg("bid", "spot bid strategy: ondemand | forecast+margin | capped")
+                .value_arg(
+                    "target",
+                    "work policy: drain the estimated backlog within this many seconds (default 3600)",
+                )
+                .switch_arg("spot", "buy fleet capacity on the spot market")
+                .switch_arg("ondemand", "buy fleet capacity on demand")
+                .exclusive(&["spot", "ondemand"]),
+            CommandSpec::new("ec2quota", "set, show or clear per-tenant governance quotas")
+                .value_arg("analyst", "tenant id the quota applies to (omit to list all quotas)")
+                .value_arg(
+                    "maxclusters",
+                    "max clusters per pool: concurrent fleet clusters, and owned created clusters",
+                )
+                .value_arg("maxcentihour", "compute budget in centihours (1/100 instance-hour)")
+                .value_arg("maxqueued", "max jobs the tenant may have queued at once")
+                .switch_arg("clear", "remove the tenant's quota (back to unlimited)"),
+            CommandSpec::new("report", "show virtual-time, billing and workflow-span report"),
+            CommandSpec::new("desktoprun", "run a script locally on a Table-I desktop (comparison)")
+                .value_arg("desktop", "A | B")
+                .value_arg("projectdir", "project directory")
+                .value_arg("rscript", "script to execute")
+                .value_arg("threads", "real worker threads for the engine (default: all cores)")
+                .required_arg("runname", "name for this run"),
+        ]
+    }
+
+    fn run(&self, ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String> {
+        let CmdCtx { s, js, .. } = ctx;
+        // The direct-execution commands run against the session alone.
+        match cmd {
+            "ec2runoninstance" => {
+                let rscript = pick_script(s, p)?;
+                s.threads = p.usize_value("threads")?;
+                let out = s.run_on_instance(
+                    p.value("iname"),
+                    project_dir(p),
+                    &rscript,
+                    p.value("runname").unwrap(),
+                )?;
+                return Ok(format!(
+                    "run complete in {} (virtual)\nsummary: {}",
+                    humanfmt::secs(out.compute_s),
+                    out.summary
+                ));
+            }
+            "ec2runoncluster" => {
+                let rscript = pick_script(s, p)?;
+                let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
+                s.threads = p.usize_value("threads")?;
+                let out = s.run_on_cluster(
+                    p.value("cname"),
+                    project_dir(p),
+                    &rscript,
+                    p.value("runname").unwrap(),
+                    placement,
+                )?;
+                return Ok(format!(
+                    "run complete in {} (virtual, {placement:?})\nsummary: {}",
+                    humanfmt::secs(out.compute_s),
+                    out.summary
+                ));
+            }
+            "desktoprun" => {
+                let which = p.value_or("desktop", "A");
+                let desktops = table1_desktops();
+                let d = desktops
+                    .iter()
+                    .find(|d| d.name.ends_with(which))
+                    .ok_or_else(|| anyhow!("desktop must be A or B"))?;
+                let rscript = pick_script(s, p)?;
+                s.threads = p.usize_value("threads")?;
+                let out = s.run_local(d, project_dir(p), &rscript, p.value("runname").unwrap())?;
+                return Ok(format!(
+                    "run complete on {} in {} (virtual)\nsummary: {}",
+                    d.name,
+                    humanfmt::secs(out.compute_s),
+                    out.summary
+                ));
+            }
+            // `report` renders with or without the persisted queue
+            // state; the SLO rollup rides along only when the
+            // scheduler was loaded.
+            "report" => {
+                let mut out = report(s);
+                if let Some(js) = js {
+                    let slo = js.slo_lines(s);
+                    if !slo.is_empty() {
+                        out.push_str(&slo.join("\n"));
+                        out.push('\n');
+                    }
+                }
+                return Ok(out);
+            }
+            _ => {}
+        }
+        // Everything below operates on the persisted queue state.
+        let Some(js) = js else {
+            bail!("unhandled command '{cmd}'");
+        };
+        match cmd {
+            "ec2submitjob" => {
+                if let Some(path) = p.value("trace") {
+                    s.cloud.telemetry.set_trace_file(path);
+                }
+                if let Some(file) = p.value("specfile") {
+                    return submit_workflow(s, js, p, file);
+                }
+                let runname = p
+                    .value("runname")
+                    .ok_or_else(|| anyhow!("-runname is required (or submit a graph with -specfile)"))?;
+                let rscript = pick_script(s, p)?;
+                let priority = Priority::parse(p.value_or("priority", "normal"))?;
+                let placement = Placement::parse(p.switch("bynode"), p.switch("byslot"))?;
+                let resident = p.switch("resident");
+                let deadline_s = match p.value("deadline") {
+                    Some(v) => Some(parse_deadline(v, s.cloud.clock.now_s())?),
+                    None => None,
+                };
+                let deps = match p.value("after") {
+                    Some(v) => parse_after(v)?,
+                    None => Vec::new(),
+                };
+                let id = js.admit(
+                    s,
+                    JobSpecBuilder::new(runname, project_dir(p), &rscript)
+                        .priority(priority)
+                        .placement(placement)
+                        .deadline(deadline_s)
+                        .after(deps.iter().copied())
+                        .build(),
+                    resident,
+                    p.value_or("analyst", ""),
+                )?;
+                let held = js
+                    .queue
+                    .get(id)
+                    .is_some_and(|j| j.state == JobState::Held);
+                Ok(format!(
+                    "submitted {id} (priority {}{}{}{}, {} pending){}",
+                    priority.label(),
+                    if resident { ", resident" } else { "" },
+                    deadline_s
+                        .map(|d| format!(", deadline t={d:.0}s"))
+                        .unwrap_or_default(),
+                    if deps.is_empty() {
+                        String::new()
+                    } else {
+                        format!(", after [{}]", id_list(&deps))
+                    },
+                    js.queue.pending(),
+                    if held { " (held until parents complete)" } else { "" },
+                ))
+            }
+            "ec2quota" => {
+                let Some(analyst) = p.value("analyst") else {
+                    let lines = js.quotas.lines();
+                    return Ok(if lines.is_empty() {
+                        "no tenant quotas set (every tenant is unlimited)".into()
+                    } else {
+                        lines.join("\n")
+                    });
+                };
+                if p.switch("clear") {
+                    return Ok(match js.quotas.remove(analyst) {
+                        Some(_) => format!("cleared quota for tenant '{analyst}'"),
+                        None => format!("tenant '{analyst}' had no quota set"),
+                    });
+                }
+                let mut q = js.quotas.get(analyst).cloned().unwrap_or_default();
+                if let Some(v) = p.usize_value("maxclusters")? {
+                    q.max_clusters = Some(v);
+                }
+                if let Some(v) = p.value("maxcentihour") {
+                    q.max_centihours = Some(v.parse::<u64>().map_err(|_| {
+                        anyhow!("-maxcentihour expects a whole number of centihours, got '{v}'")
+                    })?);
+                }
+                if let Some(v) = p.usize_value("maxqueued")? {
+                    q.max_queued = Some(v);
+                }
+                let summary = q.summary();
+                js.quotas.set(analyst, q);
+                Ok(format!("quota for tenant '{analyst}': {summary}"))
+            }
+            "ec2jobstatus" => match p.value("jobid") {
+                Some(v) => {
+                    let n: u64 = v
+                        .trim_start_matches("job-")
+                        .parse()
+                        .map_err(|_| anyhow!("-jobid expects a number or job-N, got '{v}'"))?;
+                    let j = js
+                        .queue
+                        .get(JobId(n))
+                        .ok_or_else(|| anyhow!("no such job 'job-{n}'"))?;
+                    if p.switch("json") {
+                        let mut o = js.queue.job_json(JobId(n)).unwrap();
+                        if let Some(line) = js.deadline_status(s, j) {
+                            o.set("deadline_status", Json::str(line));
+                        }
+                        return Ok(json_envelope("ec2jobstatus", o).to_string_pretty());
+                    }
+                    let deadline = js
+                        .deadline_status(s, j)
+                        .map(|line| format!("\n{line}"))
+                        .unwrap_or_default();
+                    Ok(format!(
+                        "{} {}  progress={:.0}%  interruptions={}  retries={}  compute={}{}\nsummary: {}",
+                        j.id,
+                        j.state.label(),
+                        j.progress * 100.0,
+                        j.interruptions,
+                        j.retries,
+                        humanfmt::secs(j.compute_s),
+                        deadline,
+                        j.summary
+                    ))
+                }
+                None => {
+                    if p.switch("json") {
+                        let mut o = Json::obj();
+                        o.set(
+                            "jobs",
+                            Json::Arr(
+                                js.queue
+                                    .jobs()
+                                    .filter_map(|j| js.queue.job_json(j.id))
+                                    .collect(),
+                            ),
+                        );
+                        o.set("pending", Json::num(js.queue.pending() as f64));
+                        o.set("running", Json::num(js.queue.running() as f64));
+                        return Ok(json_envelope("ec2jobstatus", o).to_string_pretty());
+                    }
+                    let mut out = js.status();
+                    out.extend(js.slo_lines(s));
+                    Ok(out.join("\n"))
+                }
+            },
+            "ec2jobqueue" => {
+                let mut out = Vec::new();
+                let mut released: Vec<String> = Vec::new();
+                if p.switch("nofastpath") {
+                    js.fast_path = false;
+                    out.push("slice fast path disabled".to_string());
+                }
+                if p.switch("nodataaware") {
+                    js.data_aware = false;
+                    out.push("data-aware placement disabled".to_string());
+                }
+                if let Some(n) = p.usize_value("ckptfull")? {
+                    js.ckpt_full_every = n.max(1);
+                    out.push(format!("full checkpoint every {} slice(s)", js.ckpt_full_every));
+                }
+                if p.switch("drain") {
+                    js.run_until_idle(s)?;
+                    out.push("queue drained".to_string());
+                }
+                if p.switch("shutdown") {
+                    released = js.shutdown_fleet(s)?;
+                    out.push(format!("fleet released: [{}]", released.join(", ")));
+                }
+                if p.switch("json") {
+                    let mut o = Json::obj();
+                    o.set("pending", Json::num(js.queue.pending() as f64));
+                    o.set("running", Json::num(js.queue.running() as f64));
+                    o.set("all_done", Json::Bool(js.queue.all_done()));
+                    o.set("ordering", Json::str(js.queue.ordering.label()));
+                    o.set("fleet_clusters", Json::num(js.fleet.len() as f64));
+                    o.set("drained", Json::Bool(p.switch("drain")));
+                    o.set("released", Json::arr_str(released));
+                    let tenants: Vec<Json> = js
+                        .queue
+                        .tenant_loads()
+                        .into_iter()
+                        .map(|(analyst, load)| {
+                            Json::from_pairs(vec![
+                                ("analyst", Json::str(analyst)),
+                                ("waiting", Json::num(load.waiting as f64)),
+                                ("running", Json::num(load.running as f64)),
+                                ("jobs", Json::num(load.jobs as f64)),
+                            ])
+                        })
+                        .collect();
+                    o.set("tenants", Json::Arr(tenants));
+                    o.set("data_aware", Json::Bool(js.data_aware));
+                    o.set(
+                        "dag",
+                        Json::from_pairs(vec![
+                            ("releases", Json::num(js.dag_releases as f64)),
+                            ("cancels", Json::num(js.dag_cancels as f64)),
+                            ("dedup_skips", Json::num(js.dag_dedup_skips as f64)),
+                        ]),
+                    );
+                    if p.switch("profile") {
+                        o.set("profile", js.profiler.to_json());
+                    }
+                    return Ok(json_envelope("ec2jobqueue", o).to_string_pretty());
+                }
+                out.extend(js.status());
+                if p.switch("profile") {
+                    let lines = js.profiler.lines();
+                    if lines.is_empty() {
+                        out.push("no scheduler phases profiled this invocation".to_string());
+                    } else {
+                        out.extend(lines);
+                    }
+                }
+                Ok(out.join("\n"))
+            }
+            "ec2genload" => {
+                if let Some(path) = p.value("trace") {
+                    s.cloud.telemetry.set_trace_file(path);
+                }
+                let cfg = crate::jobs::genload::GenLoadConfig {
+                    jobs: p.usize_value("jobs")?.unwrap_or(200),
+                    tenants: p.usize_value("tenants")?.unwrap_or(8).max(1),
+                    seed: match p.value("seed") {
+                        Some(v) => v
+                            .parse::<u64>()
+                            .map_err(|_| anyhow!("-seed expects a number, got '{v}'"))?,
+                        None => 7,
+                    },
+                    ..Default::default()
+                };
+                let generated = crate::jobs::genload::generate(&cfg);
+                let now = s.cloud.clock.now_s();
+                let mut projects: std::collections::BTreeSet<u64> =
+                    std::collections::BTreeSet::new();
+                let (mut submitted, mut rejected) = (0usize, 0usize);
+                for (i, g) in generated.iter().enumerate() {
+                    // The engine derives a job's work units from its sweep
+                    // config: n_jobs = units * tile. Cap per-job units so a
+                    // heavy-tailed outlier cannot stall an interactive CLI
+                    // session (the scale bench runs uncapped workloads).
+                    let units = g.units.min(64);
+                    let dir = format!("genload/u{units}");
+                    if projects.insert(units) {
+                        let n_jobs = units as usize * crate::analytics::script::RUST_SWEEP_TILE;
+                        s.analyst.write(
+                            &format!("{dir}/sweep.json"),
+                            format!(
+                                r#"{{"type":"mc_sweep","n_jobs":{n_jobs},"seed":{}}}"#,
+                                cfg.seed
+                            )
+                            .into_bytes(),
+                        );
+                    }
+                    let spec = JobSpecBuilder::new(&format!("gen-{}-{i}", cfg.seed), &dir, "sweep.json")
+                        .priority(g.priority)
+                        // Arrivals collapse to "now"; deadlines keep their
+                        // slack relative to the generated arrival.
+                        .deadline(g.deadline_s.map(|d| now + (d - g.arrival_s)))
+                        .build();
+                    match js.admit(s, spec, false, &g.tenant) {
+                        Ok(_) => submitted += 1,
+                        Err(_) => rejected += 1,
+                    }
+                }
+                if p.switch("json") {
+                    let mut o = Json::obj();
+                    o.set("generated", Json::num(generated.len() as f64));
+                    o.set("submitted", Json::num(submitted as f64));
+                    o.set("rejected", Json::num(rejected as f64));
+                    o.set("tenants", Json::num(cfg.tenants as f64));
+                    o.set("seed", Json::num(cfg.seed as f64));
+                    o.set("pending", Json::num(js.queue.pending() as f64));
+                    return Ok(o.to_string_pretty());
+                }
+                Ok(format!(
+                    "generated {} jobs across {} tenants (seed {}): {} submitted, {} rejected \
+                     by quota, {} pending",
+                    generated.len(),
+                    cfg.tenants,
+                    cfg.seed,
+                    submitted,
+                    rejected,
+                    js.queue.pending()
+                ))
+            }
+            "ec2autoscale" => {
+                let cfg = &mut js.autoscaler.cfg;
+                if let Some(v) = p.usize_value("min")? {
+                    cfg.min_clusters = v;
+                }
+                if let Some(v) = p.usize_value("max")? {
+                    cfg.max_clusters = v;
+                }
+                if let Some(v) = p.usize_value("csize")? {
+                    cfg.nodes_per_cluster = v.max(2);
+                }
+                if let Some(v) = p.usize_value("maxcsize")? {
+                    cfg.max_nodes_per_cluster = v.max(2);
+                }
+                if let Some(t) = p.value("type") {
+                    cfg.itype = t.to_string();
+                }
+                if let Some(pol) = p.value("policy") {
+                    cfg.policy = ScalePolicy::parse(pol)?;
+                }
+                if let Some(b) = p.value("bid") {
+                    cfg.bid = BidStrategy::parse(b)?;
+                }
+                if let Some(t) = p.value("target") {
+                    cfg.work_target_s = t
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|v| v.is_finite() && *v >= 1.0)
+                        .ok_or_else(|| anyhow!("-target expects seconds >= 1, got '{t}'"))?;
+                }
+                if p.switch("spot") {
+                    cfg.spot = true;
+                }
+                if p.switch("ondemand") {
+                    cfg.spot = false;
+                }
+                Ok(format!(
+                    "autoscaler: clusters [{}..{}] x {} nodes (elastic cap {}), type {}, {}, \
+                     policy {} (target {:.0}s), bid {}",
+                    cfg.min_clusters,
+                    cfg.max_clusters,
+                    cfg.nodes_per_cluster,
+                    cfg.max_nodes_per_cluster,
+                    cfg.itype,
+                    if cfg.spot { "spot" } else { "on-demand" },
+                    cfg.policy.label(),
+                    cfg.work_target_s,
+                    cfg.bid.label()
+                ))
+            }
+            other => bail!("unhandled command '{other}'"),
+        }
+    }
+}
+
+/// `-after` parse: a comma list of job ids, `2,5` or `job-2,job-5`.
+fn parse_after(v: &str) -> Result<Vec<JobId>> {
+    let mut deps = Vec::new();
+    for part in v.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let n: u64 = part.trim_start_matches("job-").parse().map_err(|_| {
+            anyhow!("-after expects job ids like 2,5 or job-2,job-5, got '{part}'")
+        })?;
+        deps.push(JobId(n));
+    }
+    if deps.is_empty() {
+        bail!("-after lists no job ids");
+    }
+    Ok(deps)
+}
+
+fn id_list(deps: &[JobId]) -> String {
+    deps.iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// `ec2submitjob -specfile workflow.json`: admit a whole stage graph.
+///
+/// The spec is parsed and checked for acyclicity, unknown `after`
+/// references and bad per-stage priorities/deadlines **before any
+/// stage is admitted** — a cyclic or malformed workflow is rejected
+/// with the queue untouched. Stages are then admitted in topological
+/// order (parents first), resolving stage names to the job ids they
+/// were assigned; dependent stages sit Held until their parents
+/// complete.
+fn submit_workflow(
+    s: &mut Session,
+    js: &mut JobScheduler,
+    p: &ParsedArgs,
+    file: &str,
+) -> Result<String> {
+    let text = std::fs::read_to_string(file)
+        .map_err(|e| anyhow!("cannot read workflow spec '{file}': {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("workflow spec '{file}': {e}"))?;
+    let wf = WorkflowSpec::parse(&doc)?;
+    let order = wf.topo_order()?;
+    let now = s.cloud.clock.now_s();
+    let resident = p.switch("resident");
+    let analyst = p.value_or("analyst", "");
+    // Resolve and validate every stage up front: a bad deadline in
+    // stage 4 must not leave stages 1-3 admitted.
+    let mut prepared: Vec<(String, Priority, Option<f64>)> = Vec::with_capacity(wf.stages.len());
+    for st in &wf.stages {
+        let dir = st
+            .projectdir
+            .as_deref()
+            .or(wf.projectdir.as_deref())
+            .or(p.value("projectdir"))
+            .unwrap_or("current_project")
+            .to_string();
+        let priority = Priority::parse(st.priority.as_deref().unwrap_or("normal"))
+            .map_err(|e| e.context(format!("workflow stage '{}'", st.name)))?;
+        let deadline_s = match st.deadline.as_deref() {
+            Some(v) => Some(
+                parse_deadline(v, now)
+                    .map_err(|e| e.context(format!("workflow stage '{}'", st.name)))?,
+            ),
+            None => None,
+        };
+        prepared.push((dir, priority, deadline_s));
+    }
+    let mut ids: BTreeMap<&str, JobId> = BTreeMap::new();
+    let mut lines = Vec::new();
+    for idx in order {
+        let st = &wf.stages[idx];
+        let (dir, priority, deadline_s) = prepared[idx].clone();
+        let deps: Vec<JobId> = st
+            .after
+            .iter()
+            .map(|n| *ids.get(n.as_str()).expect("topo order admits parents first"))
+            .collect();
+        let id = js
+            .admit(
+                s,
+                JobSpecBuilder::new(&st.name, &dir, &st.rscript)
+                    .priority(priority)
+                    .deadline(deadline_s)
+                    .after(deps.iter().copied())
+                    .build(),
+                resident,
+                analyst,
+            )
+            .map_err(|e| e.context(format!("workflow stage '{}'", st.name)))?;
+        ids.insert(st.name.as_str(), id);
+        let held = js
+            .queue
+            .get(id)
+            .is_some_and(|j| j.state == JobState::Held);
+        lines.push(format!(
+            "submitted {id} '{}'{}{}",
+            st.name,
+            if deps.is_empty() {
+                String::new()
+            } else {
+                format!(" after [{}]", id_list(&deps))
+            },
+            if held { " (held)" } else { "" },
+        ));
+    }
+    lines.push(format!(
+        "workflow '{file}': {} stage(s) admitted, {} pending",
+        wf.stages.len(),
+        js.queue.pending()
+    ));
+    Ok(lines.join("\n"))
+}

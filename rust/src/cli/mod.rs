@@ -17,6 +17,11 @@
 //! ```
 
 pub mod commands;
+pub mod data;
+pub mod functions;
+pub mod jobs;
+pub mod obs;
+pub mod resources;
 
 use crate::analytics::P2racEngine;
 use crate::coordinator::{ScriptEngine, Session};

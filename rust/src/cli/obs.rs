@@ -1,0 +1,117 @@
+//! Observability domain: per-tenant invoices from the usage ledger,
+//! the telemetry bus's metrics snapshot, recorded-trace summaries and
+//! export, and the batch runner's spec (its execution is intercepted
+//! by the dispatcher before any state loads).
+
+use super::commands::{CmdCtx, Command};
+use crate::telemetry::{trace, EventKind, TelemetryLevel};
+use crate::util::argparse::{CommandSpec, ParsedArgs};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// The observability / billing command domain.
+pub struct Obs;
+
+impl Command for Obs {
+    fn domain(&self) -> &'static str {
+        "obs"
+    }
+
+    fn specs(&self) -> Vec<CommandSpec> {
+        vec![
+            CommandSpec::new("ec2invoice", "itemised per-tenant bill from the usage ledger")
+                .value_arg("analyst", "tenant id to invoice (as tagged on jobs/resources)")
+                .switch_arg("json", "emit the invoice as JSON instead of text"),
+            CommandSpec::new("ec2metrics", "deterministic metrics snapshot from the telemetry bus")
+                .value_arg("level", "set the recording level first: off | metrics | trace")
+                .switch_arg("json", "emit the snapshot as JSON instead of text")
+                .switch_arg("prom", "emit Prometheus-style exposition text")
+                .exclusive(&["json", "prom"]),
+            CommandSpec::new("ec2trace", "summarise or export a recorded JSONL telemetry trace")
+                .value_arg("file", "trace file to read (default: the session's -trace sink)")
+                .value_arg("chrome", "also write a Chrome trace-event JSON file to this path")
+                .switch_arg("json", "emit the summary as JSON instead of text"),
+            CommandSpec::new("batch", "run a file of p2rac commands (batch-mode execution)")
+                .value_arg("file", "command file, one command per line"),
+        ]
+    }
+
+    fn run(&self, ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String> {
+        let CmdCtx { s, .. } = ctx;
+        match cmd {
+            "ec2invoice" => {
+                let analyst = p.value("analyst").ok_or_else(|| {
+                    anyhow!("-analyst is required (run `report` to see tenants with charges)")
+                })?;
+                let inv = s.cloud.ledger.invoice_for(analyst);
+                if s.cloud.telemetry.on() {
+                    s.cloud.telemetry.emit(
+                        s.cloud.clock.now_s(),
+                        EventKind::Invoice,
+                        analyst,
+                        None,
+                        None,
+                        Json::from_pairs(vec![
+                            ("total_centi_cents", Json::num(inv.total_centi_cents() as f64)),
+                            ("lines", Json::num(inv.lines().len() as f64)),
+                        ]),
+                    );
+                }
+                if p.switch("json") {
+                    Ok(inv.to_json().to_string_pretty())
+                } else {
+                    Ok(inv.lines().join("\n"))
+                }
+            }
+            "ec2metrics" => {
+                if let Some(lvl) = p.value("level") {
+                    let level = match lvl {
+                        "off" => TelemetryLevel::Off,
+                        "metrics" => TelemetryLevel::Metrics,
+                        "trace" => TelemetryLevel::Trace,
+                        other => bail!("unknown telemetry level '{other}' (off | metrics | trace)"),
+                    };
+                    s.cloud.telemetry.set_level(level);
+                }
+                if p.switch("json") {
+                    Ok(s.cloud.telemetry.snapshot_json().to_string_pretty())
+                } else if p.switch("prom") {
+                    Ok(s.cloud.telemetry.prometheus_text())
+                } else {
+                    Ok(s.cloud.telemetry.text_lines().join("\n"))
+                }
+            }
+            "ec2trace" => {
+                let path = match p.value("file") {
+                    Some(f) => f.to_string(),
+                    None => s.cloud.telemetry.trace_path().ok_or_else(|| {
+                        anyhow!(
+                            "-file is required (this session has no -trace sink; \
+                             record one with ec2genload -trace <path>)"
+                        )
+                    })?,
+                };
+                let text = std::fs::read_to_string(&path)
+                    .map_err(|e| anyhow!("cannot read trace '{path}': {e}"))?;
+                let summary = trace::TraceSummary::from_lines(text.lines())?;
+                if let Some(out) = p.value("chrome") {
+                    let doc = trace::chrome_from_lines(text.lines())?;
+                    std::fs::write(out, doc.to_string_pretty())
+                        .map_err(|e| anyhow!("cannot write '{out}': {e}"))?;
+                    return Ok(format!(
+                        "wrote Chrome trace ({} events) to {out}\nopen it in chrome://tracing or Perfetto",
+                        summary.events
+                    ));
+                }
+                if p.switch("json") {
+                    Ok(summary.to_json().to_string_pretty())
+                } else {
+                    Ok(summary.lines().join("\n"))
+                }
+            }
+            // `batch` executes before any state loads, so the
+            // dispatcher intercepts it ahead of this routing layer.
+            other => bail!("unhandled command '{other}'"),
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Resource-lifecycle domain: create/terminate/resize/list/lock the
+//! cloud resources an Analyst works with (paper §3.1's provisioning
+//! commands), plus session bootstrap and EBS snapshots.
+
+use super::commands::{CmdCtx, Command};
+use crate::coordinator::{CreateClusterOpts, CreateInstanceOpts};
+use crate::util::argparse::{CommandSpec, ParsedArgs};
+use anyhow::{anyhow, bail, Result};
+
+/// The resource-lifecycle command domain.
+pub struct Resources;
+
+impl Command for Resources {
+    fn domain(&self) -> &'static str {
+        "resources"
+    }
+
+    fn specs(&self) -> Vec<CommandSpec> {
+        vec![
+            CommandSpec::new("ec2configurep2rac", "initialise a fresh P2RAC session and configuration files"),
+            CommandSpec::new("ec2createinstance", "configure an instance on the cloud")
+                .value_arg("iname", "name of the instance")
+                .value_arg("ebsvol", "EBS volume ID to attach")
+                .value_arg("snap", "EBS snapshot ID to materialise a volume from")
+                .value_arg("type", "EC2 instance type (e.g. m2.4xlarge)")
+                .value_arg("desc", "description of the instance")
+                .value_arg("analyst", "tenant id to tag the instance and its charges with")
+                .switch_arg("spot", "request spot-market capacity (bid = on-demand rate)")
+                .exclusive(&["ebsvol", "snap"]),
+            CommandSpec::new("ec2terminateinstance", "safely release an instance")
+                .value_arg("iname", "name of the instance to terminate")
+                .switch_arg("deletevol", "also delete the attached EBS volume"),
+            CommandSpec::new("ec2createcluster", "gather and configure a pool of instances as a cluster")
+                .value_arg("cname", "name of the cluster")
+                .value_arg("csize", "cluster size (1 master + workers)")
+                .value_arg("ebsvol", "EBS volume ID to attach to the master")
+                .value_arg("snap", "EBS snapshot ID to materialise a volume from")
+                .value_arg("type", "EC2 instance type")
+                .value_arg("desc", "description of the cluster")
+                .value_arg("analyst", "tenant id to tag the cluster and its charges with")
+                .switch_arg("spot", "request spot-market capacity for every node")
+                .exclusive(&["ebsvol", "snap"]),
+            CommandSpec::new("ec2terminatecluster", "safely release a cluster")
+                .value_arg("cname", "name of the cluster")
+                .switch_arg("deletevol", "also delete the shared EBS volume"),
+            CommandSpec::new("ec2terminateall", "terminate everything on the cloud")
+                .switch_arg("instances", "terminate all instances")
+                .switch_arg("clusters", "terminate all clusters")
+                .switch_arg("ebsvolumes", "delete all EBS volumes")
+                .switch_arg("snapshots", "delete all snapshots"),
+            CommandSpec::new("ec2resizecluster", "grow or shrink a running cluster (dynamic scaling)")
+                .value_arg("cname", "cluster to resize")
+                .required_arg("csize", "new cluster size (1 master + workers)"),
+            CommandSpec::new("ec2listinstances", "list instances created by the Analyst")
+                .switch_arg("names", "names only"),
+            CommandSpec::new("ec2listclusters", "list clusters created by the Analyst")
+                .switch_arg("names", "names only"),
+            CommandSpec::new("ec2listallresources", "list raw cloud resources")
+                .switch_arg("instances", "list instances")
+                .switch_arg("ebsvols", "list EBS volumes")
+                .switch_arg("snapshots", "list snapshots")
+                .switch_arg("amis", "list machine images"),
+            CommandSpec::new("ec2logintoinstance", "open a (simulated) SSH session to an instance")
+                .value_arg("iname", "instance to log in to"),
+            CommandSpec::new("ec2logintocluster", "open a (simulated) SSH session to a cluster master")
+                .value_arg("cname", "cluster whose master to log in to"),
+            CommandSpec::new("ec2resourcelock", "lock or unlock an instance or cluster")
+                .value_arg("iname", "instance name")
+                .value_arg("cname", "cluster name")
+                .switch_arg("free", "unlock the resource")
+                .switch_arg("inuse", "lock the resource")
+                .exclusive(&["iname", "cname"])
+                .exclusive(&["free", "inuse"]),
+            CommandSpec::new("ec2snapshot", "point-in-time EBS snapshot of a resource's volume")
+                .value_arg("iname", "instance whose volume to snapshot")
+                .value_arg("cname", "cluster whose shared volume to snapshot")
+                .value_arg("desc", "description of the snapshot")
+                .exclusive(&["iname", "cname"]),
+        ]
+    }
+
+    fn run(&self, ctx: CmdCtx<'_>, cmd: &str, p: &ParsedArgs) -> Result<String> {
+        let CmdCtx { s, js, .. } = ctx;
+        match cmd {
+            "ec2createinstance" => {
+                let name = s.create_instance(&CreateInstanceOpts {
+                    iname: p.value("iname").map(str::to_string),
+                    ebsvol: p.value("ebsvol").map(str::to_string),
+                    snap: p.value("snap").map(str::to_string),
+                    itype: p.value("type").map(str::to_string),
+                    desc: p.value("desc").map(str::to_string),
+                    spot: p.switch("spot"),
+                    analyst: p.value("analyst").map(str::to_string),
+                })?;
+                let e = s.instances_cfg.get(&name).unwrap();
+                Ok(format!(
+                    "created instance '{name}' ({}{}) dns={} volume={}",
+                    e.instance_type,
+                    if p.switch("spot") { ", spot" } else { "" },
+                    e.public_dns,
+                    e.volume_id.as_deref().unwrap_or("-")
+                ))
+            }
+            "ec2terminateinstance" => {
+                s.terminate_instance(p.value("iname"), p.switch("deletevol"))?;
+                Ok("instance terminated".into())
+            }
+            "ec2createcluster" => {
+                // Governance gate on the create path (active whenever
+                // the quota book is loaded, i.e. through the jobs-aware
+                // entry point): a tenant at its cluster quota is
+                // refused before anything is launched — the fleet and
+                // the cloud stay untouched.
+                if let Some(analyst) = p.value("analyst") {
+                    if let Some(limit) = js
+                        .as_ref()
+                        .and_then(|js| js.quotas.get(analyst))
+                        .and_then(|q| q.max_clusters)
+                    {
+                        let owned = s.clusters_owned_by(analyst).len();
+                        if owned >= limit {
+                            bail!(
+                                "tenant '{analyst}': cluster quota reached (limit {limit}, \
+                                 currently owns {owned} cluster(s)); terminate one or raise \
+                                 the limit with ec2quota -analyst {analyst} -maxclusters N"
+                            );
+                        }
+                    }
+                }
+                let name = s.create_cluster(&CreateClusterOpts {
+                    cname: p.value("cname").map(str::to_string),
+                    csize: p.usize_value("csize")?,
+                    ebsvol: p.value("ebsvol").map(str::to_string),
+                    snap: p.value("snap").map(str::to_string),
+                    itype: p.value("type").map(str::to_string),
+                    desc: p.value("desc").map(str::to_string),
+                    spot: p.switch("spot"),
+                    bid_centi_cents_hour: None,
+                    analyst: p.value("analyst").map(str::to_string),
+                })?;
+                let e = s.clusters_cfg.get(&name).unwrap();
+                Ok(format!(
+                    "created cluster '{name}': {} x {}{} (1 master + {} workers), volume={}",
+                    e.size,
+                    e.instance_type,
+                    if p.switch("spot") { " spot" } else { "" },
+                    e.worker_ids.len(),
+                    e.volume_id.as_deref().unwrap_or("-")
+                ))
+            }
+            "ec2terminatecluster" => {
+                s.terminate_cluster(p.value("cname"), p.switch("deletevol"))?;
+                Ok("cluster terminated".into())
+            }
+            "ec2terminateall" => {
+                let none = !(p.switch("instances")
+                    || p.switch("clusters")
+                    || p.switch("ebsvolumes")
+                    || p.switch("snapshots"));
+                let log = s.terminate_all(
+                    p.switch("instances") || none,
+                    p.switch("clusters") || none,
+                    p.switch("ebsvolumes") || none,
+                    p.switch("snapshots") || none,
+                )?;
+                Ok(log.join("\n"))
+            }
+            "ec2resizecluster" => {
+                let size = p
+                    .usize_value("csize")?
+                    .ok_or_else(|| anyhow!("-csize is required"))?;
+                s.resize_cluster(p.value("cname"), size)?;
+                Ok(format!("cluster resized to {size} nodes"))
+            }
+            "ec2listinstances" => Ok(s.list_instances(p.switch("names")).join("\n")),
+            "ec2listclusters" => Ok(s.list_clusters(p.switch("names")).join("\n")),
+            "ec2listallresources" => {
+                let none = !(p.switch("instances")
+                    || p.switch("ebsvols")
+                    || p.switch("snapshots")
+                    || p.switch("amis"));
+                Ok(s
+                    .list_all_resources(
+                        p.switch("instances") || none,
+                        p.switch("ebsvols") || none,
+                        p.switch("snapshots") || none,
+                        p.switch("amis") || none,
+                    )
+                    .join("\n"))
+            }
+            "ec2logintoinstance" => s.login_banner(p.value("iname"), None),
+            "ec2logintocluster" => {
+                let cname = p
+                    .value("cname")
+                    .map(str::to_string)
+                    .or(s.platform.default_cluster.clone())
+                    .ok_or_else(|| anyhow!("no -cname and no default cluster"))?;
+                s.login_banner(None, Some(&cname))
+            }
+            "ec2resourcelock" => {
+                let in_use = if p.switch("inuse") {
+                    true
+                } else if p.switch("free") {
+                    false
+                } else {
+                    bail!("specify -free or -inuse");
+                };
+                if let Some(c) = p.value("cname") {
+                    s.set_cluster_lock(c, in_use)?;
+                } else if let Some(i) = p.value("iname") {
+                    s.set_instance_lock(i, in_use)?;
+                } else {
+                    bail!("specify -iname or -cname");
+                }
+                Ok(format!("resource marked {}", if in_use { "inuse" } else { "free" }))
+            }
+            "ec2snapshot" => {
+                let snap = s.snapshot_resource_volume(
+                    p.value("iname"),
+                    p.value("cname"),
+                    p.value_or("desc", "manual snapshot"),
+                )?;
+                Ok(format!("created snapshot {snap}"))
+            }
+            // `ec2configurep2rac` bootstraps a fresh session before any
+            // state is loaded, so the dispatcher intercepts it ahead of
+            // this routing layer.
+            other => bail!("unhandled command '{other}'"),
+        }
+    }
+}

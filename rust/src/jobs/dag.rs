@@ -1,0 +1,520 @@
+//! DAG workflows over the job queue (ISSUE 10).
+//!
+//! Real analytical work is a pipeline — prep → parameter sweep →
+//! aggregate → report — so `ec2submitjob -after <jobid,...>` (and
+//! `-specfile workflow.json` for a whole graph) creates jobs with
+//! dependency edges. This module owns everything graph-shaped:
+//!
+//! - **Acyclicity at admit**: a `-specfile` graph is validated with
+//!   Kahn's algorithm *before* any job is submitted, so a cyclic
+//!   workflow is rejected with nothing mutated. A lone `-after` list
+//!   can never create a cycle (existing jobs cannot depend on a job
+//!   that does not exist yet), so per-job admit only validates that
+//!   every parent exists and has not already failed.
+//! - **Hold/release**: a job with unfinished parents is admitted
+//!   [`JobState::Held`] — out of the ReadyIndex — and released to
+//!   Queued by the scheduler the moment its last parent completes.
+//! - **Failure propagation**: when a job fails terminally, every
+//!   (necessarily still-Held) descendant is cancelled. A child only
+//!   ever runs after *all* parents completed, and completed parents
+//!   cannot later fail, so cancelled stages never ran a slice and the
+//!   tenant is billed only for work actually done.
+//! - **Deadline back-propagation**: a stage's effective deadline is
+//!   tightened to `min(own, child_eff − child_est)` along every edge,
+//!   i.e. `sink deadline − downstream critical path`, so
+//!   EDF-within-class ordering and the per-slice spot-vs-on-demand
+//!   placement see per-stage deadlines, not just the sink's.
+//!
+//! Data-aware placement rides on the graph: stage outputs land in the
+//! first-class S3 results bucket ([`RESULTS_BUCKET`], digest-deduped
+//! so shared inputs upload once), and dispatch prefers clusters where
+//! a stage's inputs are already LAN-resident (see
+//! `JobScheduler::dispatch_ready` / `start_slice` in `jobs`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::queue::{Job, JobId, JobQueue, JobState};
+use crate::util::json::Json;
+
+/// S3 bucket holding published stage outputs (`job-<id>/<relpath>`),
+/// fetched cluster-side over LAN by dependent stages and by
+/// `ec2getresults -froms3` at the Analyst site.
+pub const RESULTS_BUCKET: &str = "p2rac-results";
+
+/// The dependency index: parent → children edges plus the data-aware
+/// placement signal (which fleet cluster holds each completed stage's
+/// outputs). Parent edges live on [`super::JobSpec::deps`]; this index
+/// is derived state, rebuilt from the queue on load and never
+/// persisted.
+#[derive(Debug, Default)]
+pub struct DagIndex {
+    /// parent → dependents waiting on it (insertion order).
+    children: BTreeMap<JobId, Vec<JobId>>,
+    /// Fleet cluster where a completed stage's outputs were produced
+    /// (set at publish time; empty after a restart — staging then
+    /// falls back to the S3 fetch or the WAN path).
+    output_on: BTreeMap<JobId, String>,
+}
+
+impl DagIndex {
+    /// Record `child`'s dependency edges (called once at admit).
+    pub fn note_edges(&mut self, child: JobId, deps: &[JobId]) {
+        for d in deps {
+            self.children.entry(*d).or_default().push(child);
+        }
+    }
+
+    /// Rebuild the child index from the queue's specs (session load).
+    pub fn rebuild(queue: &JobQueue) -> Self {
+        let mut dag = DagIndex::default();
+        for j in queue.jobs() {
+            dag.note_edges(j.id, &j.spec.deps);
+        }
+        dag
+    }
+
+    /// Jobs that depend on `parent`.
+    pub fn children_of(&self, parent: JobId) -> &[JobId] {
+        self.children.get(&parent).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Does any job depend on `parent`? (Publish gate: only stages
+    /// with dependents pay the S3 results upload.)
+    pub fn has_children(&self, parent: JobId) -> bool {
+        !self.children_of(parent).is_empty()
+    }
+
+    /// Record where a completed stage's outputs live.
+    pub fn set_output_on(&mut self, id: JobId, cluster: &str) {
+        self.output_on.insert(id, cluster.to_string());
+    }
+
+    /// Fleet cluster holding `id`'s outputs, if known this session.
+    pub fn output_on(&self, id: JobId) -> Option<&str> {
+        self.output_on.get(&id).map(String::as_str)
+    }
+
+    /// Forget placement knowledge for a reclaimed cluster (its local
+    /// state is gone; the S3 copy survives).
+    pub fn evict_cluster(&mut self, cluster: &str) {
+        self.output_on.retain(|_, c| c != cluster);
+    }
+
+    /// Held children of `parent` whose every dependency is now
+    /// complete — the set the scheduler releases to Queued.
+    pub fn releasable(&self, queue: &JobQueue, parent: JobId) -> Vec<JobId> {
+        self.children_of(parent)
+            .iter()
+            .filter(|c| {
+                queue.get(**c).is_some_and(|j| j.state == JobState::Held)
+                    && deps_completed(queue, **c)
+            })
+            .copied()
+            .collect()
+    }
+
+    /// Every not-yet-terminal descendant of `root`, breadth-first —
+    /// the subtree cancelled when `root` fails.
+    pub fn live_descendants(&self, queue: &JobQueue, root: JobId) -> Vec<JobId> {
+        let mut seen = BTreeSet::new();
+        let mut out = Vec::new();
+        let mut frontier = vec![root];
+        while let Some(id) = frontier.pop() {
+            for c in self.children_of(id) {
+                if !seen.insert(*c) {
+                    continue;
+                }
+                frontier.push(*c);
+                if queue
+                    .get(*c)
+                    .is_some_and(|j| !matches!(j.state, JobState::Completed | JobState::Failed))
+                {
+                    out.push(*c);
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    /// Longest estimated compute path strictly below `id` (virtual
+    /// seconds): the downstream critical path the deadline
+    /// back-propagation subtracts and the `dag-release` telemetry
+    /// reports. `est` supplies one job's remaining-compute estimate.
+    pub fn critical_path_below_s(
+        &self,
+        queue: &JobQueue,
+        id: JobId,
+        est: &dyn Fn(&Job) -> f64,
+    ) -> f64 {
+        let mut memo: BTreeMap<JobId, f64> = BTreeMap::new();
+        self.cp_rec(queue, id, est, &mut memo)
+    }
+
+    fn cp_rec(
+        &self,
+        queue: &JobQueue,
+        id: JobId,
+        est: &dyn Fn(&Job) -> f64,
+        memo: &mut BTreeMap<JobId, f64>,
+    ) -> f64 {
+        if let Some(v) = memo.get(&id) {
+            return *v;
+        }
+        let mut best = 0.0f64;
+        for c in self.children_of(id) {
+            let Some(j) = queue.get(*c) else { continue };
+            let below = self.cp_rec(queue, *c, est, memo);
+            best = best.max(est(j) + below);
+        }
+        memo.insert(id, best);
+        best
+    }
+}
+
+/// Are all of `id`'s parents complete?
+pub fn deps_completed(queue: &JobQueue, id: JobId) -> bool {
+    queue.get(id).is_some_and(|j| {
+        j.spec
+            .deps
+            .iter()
+            .all(|d| queue.get(*d).is_some_and(|p| p.state == JobState::Completed))
+    })
+}
+
+/// Admission gate for one job's `-after` list: every parent must
+/// exist and must not have failed (depending on a completed parent is
+/// fine — the dependency is already satisfied). Pure validation, no
+/// mutation; the caller rejects via its telemetry path on `Err`.
+pub fn validate_deps(queue: &JobQueue, deps: &[JobId]) -> Result<()> {
+    for d in deps {
+        match queue.get(*d) {
+            None => bail!("depends on unknown {d}"),
+            Some(p) if p.state == JobState::Failed => {
+                bail!("depends on failed {d}")
+            }
+            Some(_) => {}
+        }
+    }
+    Ok(())
+}
+
+/// Tighten ancestor deadlines walking up from `leaf`: for every edge
+/// `child → parent`, `parent_eff = min(parent_eff, child_eff −
+/// child_est)`. Deadlines only ever tighten, so pushing constraints
+/// up from each newly admitted leaf is equivalent to a full
+/// reverse-topological pass and costs O(ancestor edges). Returns how
+/// many deadlines tightened.
+pub fn backpropagate_deadlines(
+    queue: &mut JobQueue,
+    leaf: JobId,
+    est: &dyn Fn(&Job) -> f64,
+) -> usize {
+    let mut tightened = 0;
+    let mut frontier = vec![leaf];
+    while let Some(id) = frontier.pop() {
+        let Some(j) = queue.get(id) else { continue };
+        let Some(eff) = j.spec.deadline_s else {
+            continue; // no deadline, no constraint to push
+        };
+        let cand = eff - est(j);
+        for d in j.spec.deps.clone() {
+            let looser = queue
+                .get(d)
+                .is_some_and(|p| {
+                    !matches!(p.state, JobState::Completed | JobState::Failed)
+                        && p.spec.deadline_s.map_or(true, |pd| cand < pd)
+                });
+            if looser {
+                if let Some(p) = queue.get_mut(d) {
+                    p.spec.deadline_s = Some(cand);
+                    tightened += 1;
+                    frontier.push(d);
+                }
+            }
+        }
+    }
+    tightened
+}
+
+/// Session-load reconciliation: release Held jobs whose parents all
+/// completed before the restart, and cancel Held jobs below a parent
+/// that failed. Returns `(released, cancelled)` ids.
+pub fn reconcile(queue: &mut JobQueue, dag: &DagIndex) -> (Vec<JobId>, Vec<JobId>) {
+    let held: Vec<JobId> = queue
+        .jobs()
+        .filter(|j| j.state == JobState::Held)
+        .map(|j| j.id)
+        .collect();
+    let mut released = Vec::new();
+    let mut cancelled = Vec::new();
+    // Failure first: a job below a failed ancestor must never release.
+    let failed: Vec<JobId> = queue
+        .jobs()
+        .filter(|j| j.state == JobState::Failed)
+        .map(|j| j.id)
+        .collect();
+    let mut doomed = BTreeSet::new();
+    for f in failed {
+        doomed.extend(dag.live_descendants(queue, f));
+    }
+    for id in held {
+        if doomed.contains(&id) {
+            if let Some(j) = queue.get_mut(id) {
+                j.state = JobState::Failed;
+                j.summary = Json::str("cancelled: ancestor failed before restart");
+            }
+            cancelled.push(id);
+        } else if deps_completed(queue, id) {
+            if let Some(j) = queue.get_mut(id) {
+                j.state = JobState::Queued;
+            }
+            released.push(id);
+        }
+    }
+    (released, cancelled)
+}
+
+// ------------------------------------------------------------------
+// Workflow spec files (`ec2submitjob -specfile workflow.json`)
+
+/// One stage of a workflow spec file.
+#[derive(Clone, Debug)]
+pub struct WorkflowStage {
+    /// Stage (run) name — unique within the workflow; results land in
+    /// `<projectdir>_results/<name>/`.
+    pub name: String,
+    /// Task descriptor inside the stage's project directory.
+    pub rscript: String,
+    /// Project directory override (falls back to the workflow's).
+    pub projectdir: Option<String>,
+    /// Names of stages this one depends on.
+    pub after: Vec<String>,
+    /// Priority label override (`high`/`normal`/`low`).
+    pub priority: Option<String>,
+    /// Deadline in the CLI's `-deadline` syntax (seconds-from-now or
+    /// RFC 3339), parsed by the submitter.
+    pub deadline: Option<String>,
+}
+
+/// A parsed, validated workflow: unique stage names, known `after`
+/// references, acyclic. Parsing performs the *whole-graph* acyclicity
+/// check, so a cyclic spec file is rejected before any submission.
+#[derive(Clone, Debug)]
+pub struct WorkflowSpec {
+    /// Workflow-level project directory (stage override wins).
+    pub projectdir: Option<String>,
+    /// Stages in spec-file order.
+    pub stages: Vec<WorkflowStage>,
+}
+
+impl WorkflowSpec {
+    /// Parse and validate a workflow document:
+    ///
+    /// ```json
+    /// {"projectdir": "pipe", "stages": [
+    ///   {"name": "prep",  "rscript": "prep.json"},
+    ///   {"name": "sweep", "rscript": "sweep.json", "after": ["prep"]},
+    ///   {"name": "agg",   "rscript": "agg.json",
+    ///    "after": ["sweep"], "deadline": "86400"}]}
+    /// ```
+    pub fn parse(j: &Json) -> Result<Self> {
+        let stages_json = j
+            .get("stages")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("workflow spec needs a 'stages' array"))?;
+        if stages_json.is_empty() {
+            bail!("workflow spec has no stages");
+        }
+        let mut stages = Vec::with_capacity(stages_json.len());
+        let mut names = BTreeSet::new();
+        for (i, s) in stages_json.iter().enumerate() {
+            let name = s
+                .opt_str("name")
+                .ok_or_else(|| anyhow!("stage {i} has no 'name'"))?;
+            if !names.insert(name.clone()) {
+                bail!("duplicate stage name '{name}'");
+            }
+            let rscript = s
+                .opt_str("rscript")
+                .ok_or_else(|| anyhow!("stage '{name}' has no 'rscript'"))?;
+            let after = s
+                .get("after")
+                .and_then(Json::as_arr)
+                .map(|arr| arr.iter().filter_map(Json::as_str).map(String::from).collect())
+                .unwrap_or_default();
+            stages.push(WorkflowStage {
+                name,
+                rscript,
+                projectdir: s.opt_str("projectdir"),
+                after,
+                priority: s.opt_str("priority"),
+                deadline: s.opt_str("deadline"),
+            });
+        }
+        for st in &stages {
+            for a in &st.after {
+                if !names.contains(a) {
+                    bail!("stage '{}' depends on unknown stage '{a}'", st.name);
+                }
+            }
+        }
+        let spec = WorkflowSpec {
+            projectdir: j.opt_str("projectdir"),
+            stages,
+        };
+        spec.topo_order()?; // acyclicity — the whole-graph admit gate
+        Ok(spec)
+    }
+
+    /// Stage indices in dependency order (Kahn's algorithm), or an
+    /// error naming a stage on a cycle. Parents always precede
+    /// children, so submitting in this order means every `-after`
+    /// target already has a job id.
+    pub fn topo_order(&self) -> Result<Vec<usize>> {
+        let idx: BTreeMap<&str, usize> = self
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), i))
+            .collect();
+        let mut indeg = vec![0usize; self.stages.len()];
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); self.stages.len()];
+        for (i, s) in self.stages.iter().enumerate() {
+            for a in &s.after {
+                let p = idx[a.as_str()];
+                indeg[i] += 1;
+                children[p].push(i);
+            }
+        }
+        let mut ready: Vec<usize> = (0..self.stages.len()).filter(|i| indeg[*i] == 0).collect();
+        ready.reverse(); // pop() takes the lowest index first
+        let mut order = Vec::with_capacity(self.stages.len());
+        while let Some(i) = ready.pop() {
+            order.push(i);
+            for &c in &children[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.push(c);
+                }
+            }
+        }
+        if order.len() != self.stages.len() {
+            let stuck = (0..self.stages.len())
+                .find(|i| indeg[*i] > 0)
+                .map(|i| self.stages[i].name.clone())
+                .unwrap_or_default();
+            bail!("workflow is cyclic (stage '{stuck}' is on a dependency cycle)");
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::JobSpecBuilder;
+
+    fn held(queue: &mut JobQueue, name: &str, deps: Vec<JobId>) -> JobId {
+        let id = queue.submit(JobSpecBuilder::new(name, "p", "s.json").after(deps).build(), 0.0);
+        if !queue.get(id).unwrap().spec.deps.is_empty() {
+            queue.get_mut(id).unwrap().state = JobState::Held;
+        }
+        id
+    }
+
+    #[test]
+    fn release_waits_for_every_parent() {
+        let mut q = JobQueue::new();
+        let a = held(&mut q, "a", vec![]);
+        let b = held(&mut q, "b", vec![]);
+        let c = held(&mut q, "c", vec![a, b]);
+        let mut dag = DagIndex::default();
+        dag.note_edges(c, &[a, b]);
+        q.get_mut(a).unwrap().state = JobState::Completed;
+        assert!(dag.releasable(&q, a).is_empty(), "one parent is not enough");
+        q.get_mut(b).unwrap().state = JobState::Completed;
+        assert_eq!(dag.releasable(&q, b), vec![c]);
+    }
+
+    #[test]
+    fn descendants_cover_the_whole_subtree_once() {
+        let mut q = JobQueue::new();
+        let a = held(&mut q, "a", vec![]);
+        let b = held(&mut q, "b", vec![a]);
+        let c = held(&mut q, "c", vec![a]);
+        let d = held(&mut q, "d", vec![b, c]);
+        let mut dag = DagIndex::default();
+        dag.note_edges(b, &[a]);
+        dag.note_edges(c, &[a]);
+        dag.note_edges(d, &[b, c]);
+        assert_eq!(dag.live_descendants(&q, a), vec![b, c, d]);
+    }
+
+    #[test]
+    fn cyclic_specfile_is_rejected_with_the_stage_named() {
+        let doc = Json::parse(
+            r#"{"stages":[
+                {"name":"x","rscript":"a.json","after":["z"]},
+                {"name":"z","rscript":"b.json","after":["x"]}]}"#,
+        )
+        .unwrap();
+        let err = WorkflowSpec::parse(&doc).unwrap_err().to_string();
+        assert!(err.contains("cyclic"), "{err}");
+    }
+
+    #[test]
+    fn topo_order_puts_parents_first() {
+        let doc = Json::parse(
+            r#"{"stages":[
+                {"name":"agg","rscript":"c.json","after":["s1","s2"]},
+                {"name":"s1","rscript":"b.json","after":["prep"]},
+                {"name":"s2","rscript":"b.json","after":["prep"]},
+                {"name":"prep","rscript":"a.json"}]}"#,
+        )
+        .unwrap();
+        let wf = WorkflowSpec::parse(&doc).unwrap();
+        let order = wf.topo_order().unwrap();
+        let pos: BTreeMap<&str, usize> = order
+            .iter()
+            .enumerate()
+            .map(|(rank, i)| (wf.stages[*i].name.as_str(), rank))
+            .collect();
+        assert!(pos["prep"] < pos["s1"] && pos["prep"] < pos["s2"]);
+        assert!(pos["s1"] < pos["agg"] && pos["s2"] < pos["agg"]);
+    }
+
+    #[test]
+    fn unknown_and_duplicate_stage_names_are_errors() {
+        let dup = Json::parse(
+            r#"{"stages":[{"name":"a","rscript":"x"},{"name":"a","rscript":"y"}]}"#,
+        )
+        .unwrap();
+        assert!(WorkflowSpec::parse(&dup).unwrap_err().to_string().contains("duplicate"));
+        let unknown =
+            Json::parse(r#"{"stages":[{"name":"a","rscript":"x","after":["ghost"]}]}"#).unwrap();
+        assert!(WorkflowSpec::parse(&unknown)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown stage"));
+    }
+
+    #[test]
+    fn backprop_tightens_to_sink_minus_critical_path() {
+        let mut q = JobQueue::new();
+        let est = |j: &Job| if j.spec.name == "slow" { 100.0 } else { 10.0 };
+        let prep = held(&mut q, "prep", vec![]);
+        let slow = held(&mut q, "slow", vec![prep]);
+        let fast = held(&mut q, "fast", vec![prep]);
+        let sink = held(&mut q, "sink", vec![slow, fast]);
+        q.get_mut(sink).unwrap().spec.deadline_s = Some(1000.0);
+        backpropagate_deadlines(&mut q, sink, &est);
+        // sink est = 10 (name "sink" ≠ "slow").
+        assert_eq!(q.get(slow).unwrap().spec.deadline_s, Some(990.0));
+        assert_eq!(q.get(fast).unwrap().spec.deadline_s, Some(990.0));
+        // prep inherits the *tighter* branch: 990 − 100 via slow.
+        assert_eq!(q.get(prep).unwrap().spec.deadline_s, Some(890.0));
+    }
+}

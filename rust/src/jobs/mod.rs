@@ -46,6 +46,7 @@
 
 pub mod autoscaler;
 pub mod checkpoint;
+pub mod dag;
 pub mod functions;
 pub mod genload;
 pub mod persist;
@@ -60,6 +61,7 @@ pub use checkpoint::{
     commit_resident_checkpoint, restore_resident_checkpoint, script_units, JobWork, StepOutcome,
     CHECKPOINT_BUCKET,
 };
+pub use dag::{DagIndex, WorkflowSpec, WorkflowStage, RESULTS_BUCKET};
 pub use functions::{
     FnAutoscalerConfig, FnFunction, FnInvokeSpec, FnOutcome, FnPlatform, IatHistogram,
     KeepalivePolicy,
@@ -72,7 +74,7 @@ use crate::analytics::pool::WorkerPool;
 use crate::analytics::script::{ga_config_from, sweep_config_from, RUST_SWEEP_TILE};
 use crate::coordinator::engine::ResourceView;
 use crate::coordinator::scheduler::{self, NodeSpec};
-use crate::coordinator::Session;
+use crate::coordinator::{Placement, Session};
 use crate::datasync::{sync_dir, Protocol, DEFAULT_BLOCK_LEN};
 use crate::simcloud::s3::{content_digest, digest_update, DIGEST_SEED};
 use crate::simcloud::{instance_type, Link, SpanCategory, SpotMarket};
@@ -133,6 +135,76 @@ impl DeadlineVerdict {
 impl fmt::Display for DeadlineVerdict {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.write_str(self.label())
+    }
+}
+
+/// Typed construction of a [`JobSpec`] — the one way the CLI,
+/// `ec2genload` and the tests build submissions, so a new spec field
+/// gets a default here once instead of rippling through every literal.
+/// The legacy `ec2submitjob` flags are a thin parse layer into this
+/// builder.
+///
+/// ```
+/// use p2rac::jobs::{JobId, JobSpecBuilder, Priority};
+/// let spec = JobSpecBuilder::new("sweep1", "proj", "sweep.json")
+///     .priority(Priority::High)
+///     .deadline(Some(7200.0))
+///     .after([JobId(1), JobId(2)])
+///     .build();
+/// assert_eq!(spec.deps.len(), 2);
+/// ```
+#[derive(Clone, Debug)]
+pub struct JobSpecBuilder {
+    spec: JobSpec,
+}
+
+impl JobSpecBuilder {
+    /// Start from the three fields every job needs: run name, project
+    /// directory at the Analyst site, and the task descriptor inside
+    /// it. Defaults: [`Priority::Normal`], [`Placement::ByNode`], no
+    /// deadline, no dependencies.
+    pub fn new(name: &str, projectdir: &str, rscript: &str) -> Self {
+        Self {
+            spec: JobSpec {
+                name: name.to_string(),
+                projectdir: projectdir.to_string(),
+                rscript: rscript.to_string(),
+                priority: Priority::Normal,
+                placement: Placement::ByNode,
+                deadline_s: None,
+                deps: Vec::new(),
+            },
+        }
+    }
+
+    /// Priority class (strict priority, FIFO within a class).
+    pub fn priority(mut self, p: Priority) -> Self {
+        self.spec.priority = p;
+        self
+    }
+
+    /// Slave placement for the job's slices (§3.2.2).
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.spec.placement = p;
+        self
+    }
+
+    /// Absolute virtual-time deadline (`None` = no SLO).
+    pub fn deadline(mut self, deadline_s: Option<f64>) -> Self {
+        self.spec.deadline_s = deadline_s;
+        self
+    }
+
+    /// Parent jobs this one depends on (`ec2submitjob -after`):
+    /// appended, so a workflow loader can accumulate edges.
+    pub fn after(mut self, deps: impl IntoIterator<Item = JobId>) -> Self {
+        self.spec.deps.extend(deps);
+        self
+    }
+
+    /// The finished spec.
+    pub fn build(self) -> JobSpec {
+        self.spec
     }
 }
 
@@ -297,7 +369,7 @@ fn remote_project_dir(projectdir: &str) -> String {
     format!("root/{}", project_name(projectdir))
 }
 
-fn local_results_dir(projectdir: &str) -> String {
+pub(crate) fn local_results_dir(projectdir: &str) -> String {
     let base = projectdir.trim_end_matches('/');
     match base.rsplit_once('/') {
         Some((parent, name)) => format!("{parent}/{name}_results"),
@@ -459,6 +531,28 @@ pub struct JobScheduler {
     /// (never grow the fleet for work a capped tenant cannot run).
     /// Persisted beside `jobs.json` by the CLI, not with the queue.
     pub quotas: QuotaBook,
+    /// DAG dependency index (`jobs::dag`): parent → children edges
+    /// plus the data-aware placement signal. Derived state — rebuilt
+    /// from the queue's specs on load, never persisted itself.
+    pub dag: DagIndex,
+    /// Data-aware DAG placement (default on): completed stage outputs
+    /// are published to the S3 results bucket over LAN (digest-deduped
+    /// so shared inputs upload once) and dispatch prefers clusters
+    /// where a stage's inputs are already LAN-resident. Off = every
+    /// dependent stage re-stages its inputs from the Analyst site over
+    /// the metered WAN (`benches/dag.rs` compares the two).
+    pub data_aware: bool,
+    /// Cluster each DAG stage's inputs were last staged onto
+    /// (in-memory; a migration or restart re-stages).
+    inputs_on: BTreeMap<JobId, String>,
+    /// Stage-output uploads skipped because an identical object (same
+    /// content digest) already sat in the results bucket.
+    pub dag_dedup_skips: u64,
+    /// Held stages released to the ready set after their last parent
+    /// completed.
+    pub dag_releases: u64,
+    /// Stages cancelled because an ancestor failed.
+    pub dag_cancels: u64,
     /// Human-readable scheduling decisions, in order.
     pub log: Vec<String>,
     /// Wall-clock self-profile of the drain loop's phases (dispatch,
@@ -502,6 +596,12 @@ impl JobScheduler {
             interruptions_delivered: 0,
             unit_s_prior: None,
             quotas: QuotaBook::new(),
+            dag: DagIndex::default(),
+            data_aware: true,
+            inputs_on: BTreeMap::new(),
+            dag_dedup_skips: 0,
+            dag_releases: 0,
+            dag_cancels: 0,
             log: Vec::new(),
             profiler: PhaseProfiler::default(),
         }
@@ -529,6 +629,21 @@ impl JobScheduler {
         let job = self.queue.get_mut(id).expect("just submitted");
         job.units_total = units_total;
         job.est_unit_s_hint = hint;
+        let deps = job.spec.deps.clone();
+        if !deps.is_empty() {
+            // Wire the DAG: record edges, hold the job out of the
+            // ready set until every parent completes, and tighten
+            // ancestor deadlines so EDF and the spot-vs-on-demand
+            // placement see per-stage deadlines (`jobs::dag`).
+            self.dag.note_edges(id, &deps);
+            if !dag::deps_completed(&self.queue, id) {
+                self.queue.get_mut(id).expect("just submitted").state = JobState::Held;
+            }
+            let prior = self.unit_s_prior;
+            dag::backpropagate_deadlines(&mut self.queue, id, &|j| {
+                j.estimate_remaining_s(prior).unwrap_or(0.0)
+            });
+        }
         id
     }
 
@@ -606,6 +721,13 @@ impl JobScheduler {
         resident: bool,
         analyst: &str,
     ) -> Result<JobId> {
+        // Dependency gate first: every `-after` target must exist and
+        // must not have already failed. Rejected before anything is
+        // queued, so a bad graph mutates nothing.
+        if let Err(e) = dag::validate_deps(&self.queue, &spec.deps) {
+            self.note_rejected(s, analyst, "dependency");
+            return Err(e.context(format!("cannot admit '{}'", spec.name)));
+        }
         if let Some(q) = self.quotas.get(analyst) {
             // A zero-cluster quota means the job could never dispatch:
             // reject it here (like a deadline that can only miss)
@@ -905,6 +1027,36 @@ impl JobScheduler {
             (None, Some(b)) => Some(b),
             (None, None) => None,
         }
+    }
+
+    /// [`Self::first_idle_of_kind`] with data-aware placement: an idle
+    /// slot of the right kind whose cluster already holds one of the
+    /// job's inputs on its LAN (a parent stage ran there) wins over
+    /// mere slot order; with no preferred cluster idle the legacy
+    /// first-slot order decides.
+    fn first_idle_of_kind_pref(&self, spot: bool, prefer: &BTreeSet<String>) -> Option<usize> {
+        let set = if spot { &self.idle_spot } else { &self.idle_od };
+        if !prefer.is_empty() {
+            if let Some(&i) = set.iter().find(|&&i| prefer.contains(&self.fleet[i].name)) {
+                return Some(i);
+            }
+        }
+        set.iter().next().copied()
+    }
+
+    /// [`Self::first_idle_slot`] with the same data-aware preference.
+    fn first_idle_slot_pref(&self, prefer: &BTreeSet<String>) -> Option<usize> {
+        if !prefer.is_empty() {
+            if let Some(&i) = self
+                .idle_spot
+                .iter()
+                .chain(self.idle_od.iter())
+                .find(|&&i| prefer.contains(&self.fleet[i].name))
+            {
+                return Some(i);
+            }
+        }
+        self.first_idle_slot()
     }
 
     /// Would [`Autoscaler::reconcile_demand`] provably do nothing for
@@ -1442,9 +1594,23 @@ impl JobScheduler {
             let Some(jid) = self.queue.next_ready_excluding(after, &excluded) else {
                 break; // everyone ready is waiting for on-demand capacity
             };
-            let (needs_od, analyst) = {
+            let (needs_od, analyst, prefer) = {
                 let j = self.queue.get(jid).expect("ready job exists");
-                (self.needs_ondemand(s, j), j.analyst.clone())
+                // Data-aware placement: clusters whose LAN already
+                // holds one of this stage's inputs (a parent's
+                // published outputs, `jobs::dag`). Empty for
+                // independent jobs and under `-dataaware off`, so the
+                // legacy slot order decides.
+                let prefer: BTreeSet<String> = if self.data_aware {
+                    j.spec
+                        .deps
+                        .iter()
+                        .filter_map(|p| self.dag.output_on(*p).map(str::to_string))
+                        .collect()
+                } else {
+                    BTreeSet::new()
+                };
+                (self.needs_ondemand(s, j), j.analyst.clone(), prefer)
             };
             if self.tenant_at_cluster_cap(&analyst) {
                 excluded.insert(analyst);
@@ -1452,14 +1618,14 @@ impl JobScheduler {
                 continue;
             }
             let slot = if needs_od {
-                self.first_idle_of_kind(false).or_else(|| {
+                self.first_idle_of_kind_pref(false, &prefer).or_else(|| {
                     // No idle on-demand cluster and no way for the
                     // autoscaler to produce one: take what exists
                     // rather than stall the queue.
                     if self.ondemand_may_appear() {
                         None
                     } else {
-                        self.first_idle_slot()
+                        self.first_idle_slot_pref(&prefer)
                     }
                 })
             } else {
@@ -1478,11 +1644,11 @@ impl JobScheduler {
                         v
                     }
                 };
-                self.first_idle_of_kind(true).or_else(|| {
+                self.first_idle_of_kind_pref(true, &prefer).or_else(|| {
                     if at_risk {
                         None
                     } else {
-                        self.first_idle_slot()
+                        self.first_idle_slot_pref(&prefer)
                     }
                 })
             };
@@ -1567,8 +1733,93 @@ impl JobScheduler {
             self.ckpt_chains.remove(&jid);
             crate::log_warn!("{jid} failed to start: {e:#}");
             self.log.push(format!("{jid} failed to start: {e:#}"));
+            // A terminal failure dooms the whole subtree: every held
+            // descendant is cancelled before it ever runs.
+            self.inputs_on.remove(&jid);
+            self.cancel_dependents(s, jid);
         }
         Ok(())
+    }
+
+    /// Propagate a terminal failure of `root` down the DAG: every held
+    /// descendant is cancelled (marked Failed with a summary naming
+    /// the failed ancestor) before it ever dispatches, so a doomed
+    /// subtree is billed only for work actually done. Descendants are
+    /// necessarily still Held — a child is only released once *all*
+    /// its parents completed, which a failed ancestor precludes.
+    fn cancel_dependents(&mut self, s: &mut Session, root: JobId) {
+        let now = s.cloud.clock.now_s();
+        for d in self.dag.live_descendants(&self.queue, root) {
+            let Some(job) = self.queue.get_mut(d) else {
+                continue;
+            };
+            if job.state != JobState::Held {
+                continue;
+            }
+            job.state = JobState::Failed;
+            job.summary = Json::str(format!("cancelled: ancestor {root} failed"));
+            let analyst = job.analyst.clone();
+            self.inputs_on.remove(&d);
+            self.dag_cancels += 1;
+            if s.cloud.telemetry.on() {
+                s.cloud.telemetry.emit(
+                    now,
+                    EventKind::DagCancel,
+                    &analyst,
+                    Some(&d.to_string()),
+                    None,
+                    Json::from_pairs(vec![("ancestor", Json::str(root.to_string()))]),
+                );
+            }
+            crate::log_warn!("{d} cancelled: ancestor {root} failed");
+            self.log.push(format!("{d} cancelled: ancestor {root} failed"));
+        }
+    }
+
+    /// A parent stage completed: release every held child whose last
+    /// outstanding dependency this was into the ready set, stamping
+    /// its queue-wait clock and emitting the `dag-release` telemetry
+    /// (stage wait + remaining critical path) that feeds the DAG
+    /// metrics.
+    fn release_dependents(&mut self, s: &mut Session, parent: JobId) {
+        let now = s.cloud.clock.now_s();
+        let prior = self.unit_s_prior;
+        for child in self.dag.releasable(&self.queue, parent) {
+            let (analyst, held_s, parents) = {
+                let job = self.queue.get_mut(child).expect("releasable child exists");
+                job.state = JobState::Queued;
+                job.ready_since_s = now;
+                (
+                    job.analyst.clone(),
+                    (now - job.submitted_at_s).max(0.0),
+                    job.spec.deps.len(),
+                )
+            };
+            self.dag_releases += 1;
+            if s.cloud.telemetry.on() {
+                let cp = self.dag.critical_path_below_s(&self.queue, child, &|j| {
+                    j.estimate_remaining_s(prior).unwrap_or(0.0)
+                });
+                let mut detail = Json::from_pairs(vec![
+                    ("held_s", Json::num(held_s)),
+                    ("parents", Json::num(parents as f64)),
+                ]);
+                if cp > 0.0 {
+                    detail.set("critical_path_s", Json::num(cp));
+                }
+                s.cloud.telemetry.emit(
+                    now,
+                    EventKind::DagRelease,
+                    &analyst,
+                    Some(&child.to_string()),
+                    None,
+                    detail,
+                );
+            }
+            crate::log_debug!("{child} released: all parents completed");
+            self.log
+                .push(format!("{child} released: all parents completed"));
+        }
     }
 
     /// Dispatch one slice of `jid` onto fleet slot `slot`: land the
@@ -1654,6 +1905,75 @@ impl JobScheduler {
             s.cloud
                 .account_transfer(&format!("{key} project sync"), rep.wire_bytes(), Link::Wan);
             duration += rep.elapsed_s;
+        }
+
+        // DAG input staging: a dependent stage consumes its parents'
+        // outputs. Data-aware, they are LAN-resident — free when the
+        // parent ran on this very cluster, otherwise an S3 fetch from
+        // the results bucket over the LAN. Data-oblivious, every
+        // dependent re-stages its inputs from the Analyst site over
+        // the metered WAN. The bookkeeping is in-memory only: a
+        // restart or migration simply re-stages.
+        if !spec.deps.is_empty()
+            && self.inputs_on.get(&jid).map(String::as_str) != Some(cname.as_str())
+        {
+            for parent in &spec.deps {
+                let staged: Vec<(String, u64)> = if self.data_aware {
+                    if self.dag.output_on(*parent) == Some(cname.as_str()) {
+                        continue; // produced here: already on this LAN
+                    }
+                    s.cloud
+                        .s3
+                        .objects(RESULTS_BUCKET, &format!("{parent}/"))
+                        .into_iter()
+                        .map(|(k, o)| (k, o.data.len() as u64))
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                if !staged.is_empty() {
+                    let bytes: u64 = staged.iter().map(|(_, b)| *b).sum();
+                    duration += s.cloud.net.transfer_s(bytes, staged.len(), Link::Lan);
+                    for (k, _) in &staged {
+                        s.cloud
+                            .ledger
+                            .bill_s3_request(&format!("s3://{RESULTS_BUCKET}/{k}"), "GET");
+                    }
+                    s.cloud.account_transfer(
+                        &format!("{key} input stage {parent}"),
+                        bytes,
+                        Link::Lan,
+                    );
+                } else {
+                    // No LAN copy to pull (data-oblivious mode, or a
+                    // pre-DAG parent that never published): re-stage
+                    // the parent's result files from the Analyst site.
+                    let (pname, pproj) = match self.queue.get(*parent) {
+                        Some(p) => (p.spec.name.clone(), p.spec.projectdir.clone()),
+                        None => continue,
+                    };
+                    let dir = format!("{}/{}", local_results_dir(&pproj), pname);
+                    let files = s.analyst.list_dir(&dir);
+                    if files.is_empty() {
+                        continue; // the parent produced no files
+                    }
+                    let bytes: u64 = files
+                        .iter()
+                        .map(|rel| {
+                            s.analyst
+                                .read(&format!("{dir}/{rel}"))
+                                .map_or(0, |b| b.len() as u64)
+                        })
+                        .sum();
+                    duration += s.cloud.net.transfer_s(bytes, files.len(), Link::Wan);
+                    s.cloud.account_transfer(
+                        &format!("{key} input stage {parent}"),
+                        bytes,
+                        Link::Wan,
+                    );
+                }
+            }
+            self.inputs_on.insert(jid, cname.clone());
         }
 
         // Resource view: the same bynode/byslot construction as
@@ -2109,6 +2429,26 @@ impl JobScheduler {
                 }
             }
         };
+        // DAG data plane: a finished stage with dependents publishes
+        // its outputs to the S3 results bucket over the cluster's LAN
+        // (digest-deduped: an identical object already in the bucket
+        // is copied server-side, never re-uploaded), and the index
+        // remembers which cluster's LAN holds them so dispatch can
+        // route dependent stages there.
+        if ev.finished && !ev.failed && self.data_aware && self.dag.has_children(ev.job) {
+            for (rel, bytes) in &ev.files {
+                let (_, deduped) = s.cloud.s3_put_dedup(
+                    RESULTS_BUCKET,
+                    &format!("{key}/{rel}"),
+                    bytes.clone(),
+                    Link::Lan,
+                );
+                if deduped {
+                    self.dag_dedup_skips += 1;
+                }
+            }
+            self.dag.set_output_on(ev.job, &ev.cluster);
+        }
         s.cloud.ledger.set_analyst("");
         if ev.finished && !ev.failed {
             self.ckpt_chains.remove(&ev.job);
@@ -2213,6 +2553,10 @@ impl JobScheduler {
             crate::log_info!("{} completed on {}", ev.job, ev.cluster);
             self.log
                 .push(format!("{} completed on {}", ev.job, ev.cluster));
+            // This completion may be some held child's last
+            // outstanding dependency.
+            self.inputs_on.remove(&ev.job);
+            self.release_dependents(s, ev.job);
         }
         Ok(())
     }
@@ -2230,6 +2574,11 @@ impl JobScheduler {
         // (the in-flight slice's warm payload travels in the event and
         // is dropped with it).
         let mut cache_evicted = self.evict_cluster_state(cname);
+        // Placement knowledge pinned to the reclaimed cluster is gone
+        // with its nodes (the S3 copies survive, so dependents fall
+        // back to the bucket fetch).
+        self.dag.evict_cluster(cname);
+        self.inputs_on.retain(|_, c| c != cname);
         if let Some(mut ev) = self.take_slice_of_cluster(cname) {
             if ev.cache.take().is_some() {
                 self.work_cache_evictions += 1;
@@ -2341,6 +2690,7 @@ impl JobScheduler {
         );
         root.set("fast_path", Json::Bool(self.fast_path));
         root.set("ckpt_full_every", Json::num(self.ckpt_full_every as f64));
+        root.set("data_aware", Json::Bool(self.data_aware));
         root
     }
 
@@ -2412,6 +2762,15 @@ impl JobScheduler {
         sched.interruptions_delivered =
             j.get("interruptions_delivered").and_then(Json::as_usize).unwrap_or(0);
         sched.fast_path = j.opt_bool("fast_path", true);
+        sched.data_aware = j.opt_bool("data_aware", true);
+        // The DAG index is derived state: rebuild the child edges from
+        // the restored specs, then reconcile holds that resolved while
+        // the session was down (all parents completed → release;
+        // an ancestor failed → cancel).
+        sched.dag = DagIndex::rebuild(&sched.queue);
+        let (released, cancelled) = dag::reconcile(&mut sched.queue, &sched.dag);
+        sched.dag_releases += released.len() as u64;
+        sched.dag_cancels += cancelled.len() as u64;
         sched.ckpt_full_every = j
             .get("ckpt_full_every")
             .and_then(Json::as_usize)
@@ -2586,14 +2945,7 @@ mod tests {
     }
 
     fn spec(name: &str, dir: &str, script: &str, prio: Priority) -> JobSpec {
-        JobSpec {
-            name: name.into(),
-            projectdir: dir.into(),
-            rscript: script.into(),
-            priority: prio,
-            placement: Placement::ByNode,
-            deadline_s: None,
-        }
+        JobSpecBuilder::new(name, dir, script).priority(prio).build()
     }
 
     #[test]

@@ -108,6 +108,10 @@ pub enum JobState {
     /// Spot capacity was reclaimed mid-slice; will resume from the
     /// last checkpoint on replacement capacity.
     Interrupted,
+    /// Admitted with unfinished dependencies (`ec2submitjob -after`):
+    /// kept out of the ready set until every parent completes, then
+    /// released to Queued (see `jobs::dag`).
+    Held,
     /// All work units done, results landed at the Analyst site.
     Completed,
     /// Could not start or run (bad script, sync error); terminal.
@@ -121,6 +125,7 @@ impl JobState {
             JobState::Queued => "queued",
             JobState::Running => "running",
             JobState::Interrupted => "interrupted",
+            JobState::Held => "held",
             JobState::Completed => "completed",
             JobState::Failed => "failed",
         }
@@ -131,6 +136,7 @@ impl JobState {
             "queued" => JobState::Queued,
             "running" => JobState::Running,
             "interrupted" => JobState::Interrupted,
+            "held" => JobState::Held,
             "completed" => JobState::Completed,
             "failed" => JobState::Failed,
             other => bail!("unknown job state '{other}'"),
@@ -155,8 +161,13 @@ pub struct JobSpec {
     /// `None` = no SLO: the job is scheduled purely by priority and
     /// cost. With a deadline the scheduler picks spot vs on-demand
     /// capacity per slice from the forecast's cost/risk curve (see
-    /// `jobs::JobScheduler`).
+    /// `jobs::JobScheduler`). DAG back-propagation may tighten this
+    /// to an effective per-stage deadline (`jobs::dag`).
     pub deadline_s: Option<f64>,
+    /// Jobs this one depends on (`ec2submitjob -after`): the job is
+    /// admitted Held and released to Queued only once every listed
+    /// parent has completed (see `jobs::dag`).
+    pub deps: Vec<JobId>,
 }
 
 /// Committed slices the remaining-work estimator looks back over: old
@@ -365,7 +376,8 @@ struct JobAcct {
     key: Option<ReadyKey>,
     /// Tenant the job's load was booked under.
     analyst: String,
-    /// 0 = ready, 1 = running, 2 = terminal.
+    /// 0 = ready, 1 = running, 2 = terminal, 3 = held (dependency
+    /// gate: alive but not dispatchable).
     state_group: u8,
     /// Demand-estimate category at accounting time.
     est: EstCat,
@@ -453,6 +465,9 @@ impl ReadyIndex {
             JobState::Queued | JobState::Interrupted => 0u8,
             JobState::Running => 1,
             JobState::Completed | JobState::Failed => 2,
+            // Held jobs are alive (they count toward `all_done` and
+            // tenant demand) but never ready: the DAG releases them.
+            JobState::Held => 3,
         };
         let key = if state_group == 0 {
             Some(ready_key(j, ordering))
@@ -872,6 +887,10 @@ impl JobQueue {
                 "deadline_s",
                 j.spec.deadline_s.map(Json::num).unwrap_or(Json::Null),
             );
+            o.set(
+                "deps",
+                Json::Arr(j.spec.deps.iter().map(|d| Json::num(d.0 as f64)).collect()),
+            );
             o.set("resident", Json::Bool(j.resident));
             o.set("analyst", Json::str(&j.analyst));
             o.set("progress", Json::num(j.progress));
@@ -966,6 +985,17 @@ impl JobQueue {
                             _ => Placement::ByNode,
                         },
                         deadline_s: o.get("deadline_s").and_then(Json::as_f64),
+                        // Absent in pre-DAG files: independent job.
+                        deps: o
+                            .get("deps")
+                            .and_then(Json::as_arr)
+                            .map(|arr| {
+                                arr.iter()
+                                    .filter_map(Json::as_u64)
+                                    .map(JobId)
+                                    .collect()
+                            })
+                            .unwrap_or_default(),
                     },
                     state,
                     resident: o.opt_bool("resident", false),
@@ -1018,14 +1048,9 @@ mod tests {
     use super::*;
 
     fn spec(name: &str, prio: Priority) -> JobSpec {
-        JobSpec {
-            name: name.into(),
-            projectdir: "p".into(),
-            rscript: "sweep.json".into(),
-            priority: prio,
-            placement: Placement::ByNode,
-            deadline_s: None,
-        }
+        crate::jobs::JobSpecBuilder::new(name, "p", "sweep.json")
+            .priority(prio)
+            .build()
     }
 
     #[test]

@@ -231,6 +231,29 @@ impl SimCloud {
         self.s3.put_at(bucket, key, data, self.clock.now_s())
     }
 
+    /// [`SimCloud::s3_put`] with content-digest dedup: when an object
+    /// with identical bytes already sits in `bucket`, the wire crossing
+    /// is skipped entirely — only the PUT request is billed and the
+    /// object is stored server-side (an S3 `CopyObject` of the
+    /// duplicate). Returns `(digest, deduped)`, so callers can count
+    /// skipped uploads.
+    pub fn s3_put_dedup(
+        &mut self,
+        bucket: &str,
+        key: &str,
+        data: Vec<u8>,
+        link: Link,
+    ) -> (u64, bool) {
+        let digest = crate::simcloud::s3::content_digest(&data);
+        if self.s3.object(bucket, key).is_none() && self.s3.find_by_digest(bucket, digest).is_some()
+        {
+            let id = format!("s3://{bucket}/{key}");
+            self.ledger.bill_s3_request(&id, "PUT");
+            return (self.s3.put_at(bucket, key, data, self.clock.now_s()), true);
+        }
+        (self.s3_put(bucket, key, data, link), false)
+    }
+
     /// Fetch an object over `link` (wire time + GET request billed).
     pub fn s3_get(&mut self, bucket: &str, key: &str, link: Link) -> Result<Vec<u8>, CloudError> {
         let id = format!("s3://{bucket}/{key}");

@@ -111,6 +111,17 @@ impl S3 {
             .collect()
     }
 
+    /// First key in `bucket` whose object has this content digest
+    /// (lexicographic order, so the answer is deterministic). The
+    /// dedup probe behind [`crate::simcloud::SimCloud::s3_put_dedup`].
+    pub fn find_by_digest(&self, bucket: &str, digest: u64) -> Option<&str> {
+        self.buckets.get(bucket).and_then(|b| {
+            b.iter()
+                .find(|(_, o)| o.digest == digest)
+                .map(|(k, _)| k.as_str())
+        })
+    }
+
     /// `(key, object)` pairs of a bucket under a prefix.
     pub fn objects(&self, bucket: &str, prefix: &str) -> Vec<(String, &S3Object)> {
         self.buckets

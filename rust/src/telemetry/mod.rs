@@ -106,6 +106,13 @@ pub enum EventKind {
     /// provision/keepalive/pressure/flush, `pool`, `idle_mb`,
     /// optional `idle_cc` billed at eviction).
     FnPool,
+    /// A held DAG stage was released to the ready set — every parent
+    /// completed (detail `held_s` stage wait, `parents`, optional
+    /// `critical_path_s` left below the released stage).
+    DagRelease,
+    /// A DAG subtree was cancelled after an ancestor failed (detail
+    /// `ancestor`, `cancelled` count).
+    DagCancel,
 }
 
 impl EventKind {
@@ -123,6 +130,8 @@ impl EventKind {
             EventKind::Invoice => "invoice",
             EventKind::FnInvoke => "fn-invoke",
             EventKind::FnPool => "fn-pool",
+            EventKind::DagRelease => "dag-release",
+            EventKind::DagCancel => "dag-cancel",
         }
     }
 }
@@ -496,6 +505,21 @@ fn apply_to_registry(r: &mut MetricsRegistry, kind: EventKind, tenant: &str, det
                     r.inc(&format!("tenant_fn_pool_centi_cents{{tenant=\"{tenant}\"}}"), cc);
                 }
             }
+        }
+        EventKind::DagRelease => {
+            r.inc("dag_releases_total", 1);
+            if let Some(w) = detail.get("held_s").and_then(Json::as_f64) {
+                // Stage wait: how long the stage sat Held behind its
+                // parents — the DAG analogue of queue_wait_s.
+                r.observe("dag_stage_wait_s", WAIT_BOUNDS, w);
+            }
+            if let Some(cp) = detail.get("critical_path_s").and_then(Json::as_f64) {
+                r.set_gauge("dag_critical_path_s", cp);
+            }
+        }
+        EventKind::DagCancel => {
+            let n = detail.get("cancelled").and_then(Json::as_u64).unwrap_or(1);
+            r.inc("dag_cancels_total", n);
         }
     }
 }

@@ -1,0 +1,346 @@
+//! DAG workflow edge tests (ISSUE 10): cyclic spec files are rejected
+//! at admit with nothing mutated, a diamond's sink is released exactly
+//! once, a failed parent cancels its whole subtree (billed only for
+//! work actually done), the deadline back-propagation invariant holds
+//! on random graphs, and `ec2getresults -froms3` fetches a stage's
+//! published outputs from the results bucket.
+
+use p2rac::cli::commands::{apply, apply_with_jobs, registry};
+use p2rac::coordinator::{MockEngine, Session};
+use p2rac::jobs::{
+    AutoscalerConfig, JobId, JobScheduler, JobSpecBuilder, JobState, RESULTS_BUCKET,
+};
+use p2rac::simcloud::SimParams;
+use p2rac::util::quickprop;
+
+fn session() -> Session {
+    let mut s = Session::new(SimParams::default(), Box::new(MockEngine::new(10.0)));
+    s.cloud.spot.spike_prob = 0.0;
+    s
+}
+
+fn sweep_project(s: &mut Session, dir: &str, n_jobs: usize, seed: u64) {
+    s.analyst.write(
+        &format!("{dir}/sweep.json"),
+        format!(r#"{{"type":"mc_sweep","n_jobs":{n_jobs},"seed":{seed}}}"#).into_bytes(),
+    );
+}
+
+fn sched() -> JobScheduler {
+    JobScheduler::new(AutoscalerConfig {
+        min_clusters: 1,
+        max_clusters: 2,
+        nodes_per_cluster: 2,
+        spot: false,
+        ..Default::default()
+    })
+}
+
+fn run_cli(
+    s: &mut Session,
+    js: &mut JobScheduler,
+    cmd: &str,
+    args: &[&str],
+) -> anyhow::Result<String> {
+    let spec = registry().into_iter().find(|c| c.name == cmd).unwrap();
+    let p = spec.parse(args.iter().map(|a| a.to_string())).unwrap();
+    apply_with_jobs(s, js, cmd, &p)
+}
+
+#[test]
+fn cyclic_specfile_is_rejected_with_nothing_mutated() {
+    let dir = std::env::temp_dir().join(format!("p2rac-dag-cycle-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cycle.json");
+    std::fs::write(
+        &path,
+        r#"{"projectdir":"proj","stages":[
+            {"name":"a","rscript":"sweep.json","after":["c"]},
+            {"name":"b","rscript":"sweep.json","after":["a"]},
+            {"name":"c","rscript":"sweep.json","after":["b"]}]}"#,
+    )
+    .unwrap();
+    let mut s = session();
+    sweep_project(&mut s, "proj", 24, 7);
+    let mut js = sched();
+    let t0 = s.cloud.clock.now_s();
+    let err = format!(
+        "{:#}",
+        run_cli(
+            &mut s,
+            &mut js,
+            "ec2submitjob",
+            &["-specfile", path.to_str().unwrap()],
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("cyclic"), "{err}");
+    // Whole-graph validation happens before any submission: nothing
+    // was queued, held, counted or billed.
+    assert_eq!(js.queue.jobs().count(), 0, "a cyclic graph must not queue");
+    assert_eq!(js.dag_releases + js.dag_cancels, 0);
+    assert_eq!(s.cloud.clock.now_s(), t0, "the clock must not advance");
+    assert!(js.fleet.is_empty(), "no fleet may be provisioned");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn after_flag_holds_children_and_rejects_unknown_parents() {
+    let mut s = session();
+    sweep_project(&mut s, "proj", 24, 7);
+    let mut js = sched();
+    let out = run_cli(
+        &mut s,
+        &mut js,
+        "ec2submitjob",
+        &["-projectdir", "proj", "-rscript", "sweep.json", "-runname", "parent"],
+    )
+    .unwrap();
+    assert!(out.contains("submitted job-1"), "{out}");
+    let out = run_cli(
+        &mut s,
+        &mut js,
+        "ec2submitjob",
+        &[
+            "-projectdir", "proj", "-rscript", "sweep.json", "-runname", "child",
+            "-after", "1",
+        ],
+    )
+    .unwrap();
+    assert!(out.contains("after [job-1]"), "{out}");
+    assert!(out.contains("held"), "{out}");
+    assert_eq!(js.queue.get(JobId(2)).unwrap().state, JobState::Held);
+    // An unknown parent is rejected before anything is queued.
+    let err = run_cli(
+        &mut s,
+        &mut js,
+        "ec2submitjob",
+        &[
+            "-projectdir", "proj", "-rscript", "sweep.json", "-runname", "orphan",
+            "-after", "99",
+        ],
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown"), "{err:#}");
+    assert_eq!(js.queue.jobs().count(), 2);
+    // -after and -specfile are mutually exclusive at the parser.
+    let spec = registry().into_iter().find(|c| c.name == "ec2submitjob").unwrap();
+    let err = spec
+        .parse(["-after", "1", "-specfile", "wf.json"].map(String::from))
+        .unwrap_err();
+    assert!(matches!(err, p2rac::util::argparse::ArgError::Exclusive(_)));
+}
+
+#[test]
+fn diamond_releases_the_sink_exactly_once() {
+    let mut s = session();
+    for (d, seed) in [("pa", 11u64), ("pb", 12), ("pc", 13), ("pd", 14)] {
+        sweep_project(&mut s, d, 24, seed);
+    }
+    let mut js = sched();
+    let a = js
+        .admit(&s, JobSpecBuilder::new("a", "pa", "sweep.json").build(), false, "")
+        .unwrap();
+    let b = js
+        .admit(
+            &s,
+            JobSpecBuilder::new("b", "pb", "sweep.json").after([a]).build(),
+            false,
+            "",
+        )
+        .unwrap();
+    let c = js
+        .admit(
+            &s,
+            JobSpecBuilder::new("c", "pc", "sweep.json").after([a]).build(),
+            false,
+            "",
+        )
+        .unwrap();
+    let d = js
+        .admit(
+            &s,
+            JobSpecBuilder::new("d", "pd", "sweep.json").after([b, c]).build(),
+            false,
+            "",
+        )
+        .unwrap();
+    for id in [b, c, d] {
+        assert_eq!(js.queue.get(id).unwrap().state, JobState::Held);
+    }
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+    for id in [a, b, c, d] {
+        assert_eq!(
+            js.queue.get(id).unwrap().state,
+            JobState::Completed,
+            "{id} must complete"
+        );
+    }
+    // b, c and d each released exactly once — the diamond's sink is
+    // not double-released when its second parent completes.
+    assert_eq!(js.dag_releases, 3, "exactly one release per held stage");
+    assert_eq!(js.dag_cancels, 0);
+    assert!(s.analyst.exists("pd_results/d/summary.json"));
+}
+
+#[test]
+fn failed_parent_cancels_the_subtree_and_bills_only_work_done() {
+    let mut s = session();
+    sweep_project(&mut s, "ok", 24, 21);
+    // The parent's script does not exist: it fails at first dispatch.
+    let mut js = sched();
+    let bad = js
+        .admit(&s, JobSpecBuilder::new("bad", "nope", "missing.json").build(), false, "t1")
+        .unwrap();
+    let child = js
+        .admit(
+            &s,
+            JobSpecBuilder::new("child", "ok", "sweep.json").after([bad]).build(),
+            false,
+            "t1",
+        )
+        .unwrap();
+    let grandchild = js
+        .admit(
+            &s,
+            JobSpecBuilder::new("grandchild", "ok", "sweep.json").after([child]).build(),
+            false,
+            "t1",
+        )
+        .unwrap();
+    let solo = js
+        .admit(&s, JobSpecBuilder::new("solo", "ok", "sweep.json").build(), false, "t2")
+        .unwrap();
+    js.run_until_idle(&mut s).unwrap();
+    js.shutdown_fleet(&mut s).unwrap();
+    assert_eq!(js.queue.get(bad).unwrap().state, JobState::Failed);
+    for id in [child, grandchild] {
+        let j = js.queue.get(id).unwrap();
+        assert_eq!(j.state, JobState::Failed, "{id} must be cancelled");
+        assert!(
+            j.summary.to_string_compact().contains("ancestor job-1 failed"),
+            "{id} summary must name the failed ancestor: {}",
+            j.summary.to_string_compact()
+        );
+        assert_eq!(j.compute_s, 0.0, "{id} never ran, so no compute may be billed");
+        assert_eq!(j.progress, 0.0);
+    }
+    assert_eq!(js.dag_cancels, 2);
+    assert_eq!(js.dag_releases, 0, "nothing downstream of a failure is released");
+    // The unrelated job is untouched and actually did the work.
+    let j = js.queue.get(solo).unwrap();
+    assert_eq!(j.state, JobState::Completed);
+    assert!(j.compute_s > 0.0);
+}
+
+#[test]
+fn property_deadline_backprop_never_leaves_a_parent_looser_than_its_child() {
+    quickprop::check("dag deadline back-propagation", 40, |g| {
+        let mut s = session();
+        sweep_project(&mut s, "p", 24, 7);
+        let mut js = sched();
+        let n = g.u64(3..9) as usize;
+        let mut ids: Vec<JobId> = Vec::new();
+        for i in 0..n {
+            let mut deps: Vec<JobId> = Vec::new();
+            for &prev in &ids {
+                if g.u64(0..3) == 0 {
+                    deps.push(prev);
+                }
+            }
+            // The sink carries the only explicit deadline; everything
+            // upstream must inherit one at least as tight.
+            let deadline = if i == n - 1 {
+                Some(1.0e7 + g.u64(0..1000) as f64)
+            } else {
+                None
+            };
+            let id = js
+                .admit(
+                    &s,
+                    JobSpecBuilder::new(&format!("j{i}"), "p", "sweep.json")
+                        .after(deps.iter().copied())
+                        .deadline(deadline)
+                        .build(),
+                    false,
+                    "",
+                )
+                .unwrap();
+            ids.push(id);
+        }
+        // Invariant: a live parent's effective deadline is never later
+        // than any deadlined child's.
+        let jobs: Vec<_> = js.queue.jobs().collect();
+        for j in &jobs {
+            let Some(d) = j.spec.deadline_s else { continue };
+            for p in &j.spec.deps {
+                let parent = js.queue.get(*p).unwrap();
+                if matches!(parent.state, JobState::Completed | JobState::Failed) {
+                    continue;
+                }
+                let pd = parent
+                    .spec
+                    .deadline_s
+                    .unwrap_or_else(|| panic!("parent {p} of deadlined {} has none", j.id));
+                assert!(
+                    pd <= d,
+                    "parent {p} deadline {pd} is looser than child {} deadline {d}",
+                    j.id
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn specfile_pipeline_runs_and_results_fetch_from_s3() {
+    let dir = std::env::temp_dir().join(format!("p2rac-dag-wf-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("wf.json");
+    std::fs::write(
+        &path,
+        r#"{"projectdir":"pipe","stages":[
+            {"name":"prep","rscript":"sweep.json"},
+            {"name":"s1","rscript":"sweep.json","after":["prep"]},
+            {"name":"s2","rscript":"sweep.json","after":["prep"]},
+            {"name":"agg","rscript":"sweep.json","after":["s1","s2"],"deadline":"10000000"}]}"#,
+    )
+    .unwrap();
+    let mut s = session();
+    sweep_project(&mut s, "pipe", 24, 7);
+    let mut js = sched();
+    let out = run_cli(
+        &mut s,
+        &mut js,
+        "ec2submitjob",
+        &["-specfile", path.to_str().unwrap()],
+    )
+    .unwrap();
+    assert!(out.contains("4 stage(s) admitted"), "{out}");
+    run_cli(&mut s, &mut js, "ec2jobqueue", &["-drain"]).unwrap();
+    assert!(js.queue.all_done());
+    assert!(js.dag_dedup_skips + js.dag_releases > 0);
+    // prep has dependents, so its outputs were published to the
+    // results bucket under job-1/…
+    assert!(!s.cloud.s3.list(RESULTS_BUCKET, "job-1/").is_empty());
+    // …and the Analyst can pull them over the WAN.
+    let spec = registry().into_iter().find(|c| c.name == "ec2getresults").unwrap();
+    let p = spec
+        .parse(
+            ["-froms3", "-jobid", "1", "-projectdir", "pipe", "-runname", "fetched"]
+                .map(String::from),
+        )
+        .unwrap();
+    let out = apply(&mut s, "ec2getresults", &p).unwrap();
+    assert!(out.contains("fetched"), "{out}");
+    assert!(out.contains(RESULTS_BUCKET), "{out}");
+    assert!(s.analyst.exists("pipe_results/fetched/summary.json"));
+    // A fetch for a stage with no published outputs is a clean error.
+    let p = spec
+        .parse(["-froms3", "-jobid", "4", "-runname", "x"].map(String::from))
+        .unwrap();
+    let err = apply(&mut s, "ec2getresults", &p).unwrap_err().to_string();
+    assert!(err.contains("no objects"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -6,7 +6,7 @@
 use p2rac::analytics::CatBondData;
 use p2rac::coordinator::{CreateInstanceOpts, MockEngine, Placement, Session};
 use p2rac::jobs::{
-    files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority,
+    files_digest, AutoscalerConfig, JobScheduler, JobSpecBuilder, JobState, Priority,
 };
 use p2rac::simcloud::SimParams;
 
@@ -119,25 +119,14 @@ fn run_jobs_with_exec_failures(failures: usize) -> (u64, usize) {
     js.slice_units = 1;
     let a = js.submit(
         &s,
-        JobSpec {
-            name: "a".into(),
-            projectdir: "proj".into(),
-            rscript: "catopt.json".into(),
-            priority: Priority::Normal,
-            placement: Placement::ByNode,
-            deadline_s: None,
-        },
+        JobSpecBuilder::new("a", "proj", "catopt.json").build(),
     );
     let b = js.submit(
         &s,
-        JobSpec {
-            name: "b".into(),
-            projectdir: "proj".into(),
-            rscript: "catopt.json".into(),
-            priority: Priority::High,
-            placement: Placement::BySlot,
-            deadline_s: None,
-        },
+        JobSpecBuilder::new("b", "proj", "catopt.json")
+            .priority(Priority::High)
+            .placement(Placement::BySlot)
+            .build(),
     );
     s.cloud.faults.exec_failures = failures;
     js.run_until_idle(&mut s).unwrap();

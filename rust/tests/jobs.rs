@@ -6,10 +6,10 @@
 //! workload on demand.
 
 use p2rac::analytics::CatBondData;
-use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::coordinator::{MockEngine, Session};
 use p2rac::jobs::{
     files_digest, AutoscalerConfig, FnInvokeSpec, FnPlatform, JobQueue, JobScheduler, JobSpec,
-    JobState, KeepalivePolicy, Priority, QuotaBook, TenantQuota,
+    JobSpecBuilder, JobState, KeepalivePolicy, Priority, QuotaBook, TenantQuota,
 };
 use p2rac::simcloud::{PriceForecast, SimParams, SpotMarket};
 use p2rac::util::quickprop;
@@ -64,14 +64,9 @@ fn job_specs() -> Vec<JobSpec> {
             } else {
                 (format!("sweep{}", i / 2), "sweep.json".to_string())
             };
-            JobSpec {
-                name: format!("run{i}"),
-                projectdir: dir,
-                rscript: script,
-                priority: prios[i],
-                placement: Placement::ByNode,
-                deadline_s: None,
-            }
+            JobSpecBuilder::new(&format!("run{i}"), &dir, &script)
+                .priority(prios[i])
+                .build()
         })
         .collect()
 }
@@ -241,14 +236,7 @@ fn write_heavy_sweep(s: &mut Session, dir: &str) {
 }
 
 fn heavy_spec(deadline_s: Option<f64>) -> JobSpec {
-    JobSpec {
-        name: "slo".into(),
-        projectdir: "heavy".into(),
-        rscript: "sweep.json".into(),
-        priority: Priority::Normal,
-        placement: Placement::ByNode,
-        deadline_s,
-    }
+    JobSpecBuilder::new("slo", "heavy", "sweep.json").deadline(deadline_s).build()
 }
 
 /// The tentpole guarantee: a feasible deadline is never missed when
@@ -604,14 +592,10 @@ fn property_edf_ordering_is_stable_with_ties_by_submit_order() {
                 Some(*g.pick(&[100.0, 200.0, 300.0]))
             };
             q.submit(
-                JobSpec {
-                    name: format!("j{i}"),
-                    projectdir: "p".into(),
-                    rscript: "sweep.json".into(),
-                    priority,
-                    placement: Placement::ByNode,
-                    deadline_s,
-                },
+                JobSpecBuilder::new(&format!("j{i}"), "p", "sweep.json")
+                    .priority(priority)
+                    .deadline(deadline_s)
+                    .build(),
                 i as f64,
             );
         }
@@ -831,14 +815,7 @@ fn interrupted_jobs_record_their_interruptions() {
     s.cloud.faults.spot_interruptions = 1;
     let id = js.submit(
         &s,
-        JobSpec {
-            name: "r".into(),
-            projectdir: "cat0".into(),
-            rscript: "catopt.json".into(),
-            priority: Priority::Normal,
-            placement: Placement::ByNode,
-            deadline_s: None,
-        },
+        JobSpecBuilder::new("r", "cat0", "catopt.json").build(),
     );
     js.run_until_idle(&mut s).unwrap();
     let j = js.queue.get(id).unwrap();

@@ -8,9 +8,10 @@
 //! through `jobs::persist::load` and their `to_json` documents
 //! compared as compact strings.
 
-use p2rac::coordinator::Placement;
 use p2rac::jobs::persist::{self, log_path, snapshot_path, LOG_COMPACT_RECORDS};
-use p2rac::jobs::{AutoscalerConfig, JobId, JobScheduler, JobSpec, JobState, Priority};
+use p2rac::jobs::{
+    AutoscalerConfig, JobId, JobScheduler, JobSpec, JobSpecBuilder, JobState, Priority,
+};
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -23,18 +24,14 @@ fn scratch(name: &str) -> PathBuf {
 }
 
 fn spec(i: usize, deadline_s: Option<f64>) -> JobSpec {
-    JobSpec {
-        name: format!("run{i}"),
-        projectdir: format!("proj{}", i % 3),
-        rscript: "sweep.json".to_string(),
-        priority: match i % 3 {
+    JobSpecBuilder::new(&format!("run{i}"), &format!("proj{}", i % 3), "sweep.json")
+        .priority(match i % 3 {
             0 => Priority::High,
             1 => Priority::Normal,
             _ => Priority::Low,
-        },
-        placement: Placement::ByNode,
-        deadline_s,
-    }
+        })
+        .deadline(deadline_s)
+        .build()
 }
 
 /// A scheduler with a mixed backlog: queued, interrupted and completed

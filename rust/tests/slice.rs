@@ -6,8 +6,8 @@
 //! finishing slice ships no checkpoint at all (its result files land
 //! in the same slice and carry the whole state).
 
-use p2rac::coordinator::{MockEngine, Placement, Session};
-use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobState, Priority};
+use p2rac::coordinator::{MockEngine, Session};
+use p2rac::jobs::{files_digest, AutoscalerConfig, JobScheduler, JobSpec, JobSpecBuilder, JobState};
 use p2rac::simcloud::SimParams;
 
 fn session() -> Session {
@@ -27,14 +27,7 @@ fn write_long_sweep(s: &mut Session, dir: &str, seed: u64) {
 }
 
 fn spec(name: &str, dir: &str) -> JobSpec {
-    JobSpec {
-        name: name.into(),
-        projectdir: dir.into(),
-        rscript: "sweep.json".into(),
-        priority: Priority::Normal,
-        placement: Placement::ByNode,
-        deadline_s: None,
-    }
+    JobSpecBuilder::new(name, dir, "sweep.json").build()
 }
 
 fn results_of(s: &Session, dir: &str) -> Vec<(String, Vec<u8>)> {

@@ -9,10 +9,10 @@
 
 use p2rac::analytics::pool::WorkerPool;
 use p2rac::analytics::CatBondData;
-use p2rac::coordinator::{CreateClusterOpts, MockEngine, Placement, Session};
+use p2rac::coordinator::{CreateClusterOpts, MockEngine, Session};
 use p2rac::jobs::{
-    files_digest, AutoscalerConfig, FleetCluster, JobScheduler, JobSpec, JobState, JobWork,
-    Priority,
+    files_digest, AutoscalerConfig, FleetCluster, JobScheduler, JobSpec, JobSpecBuilder, JobState,
+    JobWork,
 };
 use p2rac::simcloud::{SimParams, Vfs};
 
@@ -39,14 +39,7 @@ fn write_long_catopt(s: &mut Session, dir: &str, seed: u64) {
 }
 
 fn spec(name: &str, dir: &str, script: &str) -> JobSpec {
-    JobSpec {
-        name: name.into(),
-        projectdir: dir.into(),
-        rscript: script.into(),
-        priority: Priority::Normal,
-        placement: Placement::ByNode,
-        deadline_s: None,
-    }
+    JobSpecBuilder::new(name, dir, script).build()
 }
 
 fn results_of(s: &Session, dir: &str) -> Vec<(String, Vec<u8>)> {

@@ -4,10 +4,10 @@
 //! billing ledger and the scheduler's own counters, and the telemetry
 //! state survives the session persistence roundtrip.
 
-use p2rac::coordinator::{MockEngine, Placement, Session};
+use p2rac::coordinator::{MockEngine, Session};
 use p2rac::jobs::{
-    AutoscalerConfig, FnInvokeSpec, FnPlatform, JobScheduler, JobSpec, JobState, KeepalivePolicy,
-    Priority, QuotaBook, TenantQuota,
+    AutoscalerConfig, FnInvokeSpec, FnPlatform, JobScheduler, JobSpec, JobSpecBuilder, JobState,
+    KeepalivePolicy, Priority, QuotaBook, TenantQuota,
 };
 use p2rac::simcloud::SimParams;
 use p2rac::telemetry::{trace::TraceSummary, EventKind, Phase};
@@ -48,14 +48,12 @@ fn specs(now_s: f64) -> Vec<JobSpec> {
         Priority::Normal,
     ];
     (0..6)
-        .map(|i| JobSpec {
-            name: format!("run{i}"),
-            projectdir: format!("sweep{i}"),
-            rscript: "sweep.json".to_string(),
-            priority: prios[i],
-            // One generous deadline so the margin histogram records.
-            deadline_s: if i == 0 { Some(now_s + 10_000_000.0) } else { None },
-            placement: Placement::ByNode,
+        .map(|i| {
+            JobSpecBuilder::new(&format!("run{i}"), &format!("sweep{i}"), "sweep.json")
+                .priority(prios[i])
+                // One generous deadline so the margin histogram records.
+                .deadline(if i == 0 { Some(now_s + 10_000_000.0) } else { None })
+                .build()
         })
         .collect()
 }
